@@ -1,0 +1,113 @@
+"""AOT lowering: JAX/Pallas computations -> HLO *text* artifacts + manifest.
+
+Run once at build time (`make artifacts`); the Rust runtime
+(`rust/src/runtime`) loads the text with `HloModuleProto::from_text_file`,
+compiles it on the PJRT CPU client, and executes it on the request path.
+
+HLO **text** is the interchange format, not `.serialize()`: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids (see /opt/xla-example/README.md and aot_recipe).
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import attention_pallas, gemm_pallas, moe_pallas
+
+# End-to-end TP-MLP training dimensions (examples/e2e_tp_training.rs).
+# Substitution note (DESIGN.md): ~1.4M params rather than 100M — one CPU
+# core must run hundreds of steps x 8 simulated devices.
+E2E_DEVICES = 8
+E2E_T = 128          # tokens per step (replicated after AG)
+E2E_D = 256          # model dim
+E2E_F = 1024         # FFN dim (shard = F / devices = 128)
+E2E_LR = 1.0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation (tupled results) -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def artifact_list():
+    """(name, fn, input_specs, kernel_tag) for every artifact."""
+    f_shard = E2E_F // E2E_DEVICES
+    arts = [
+        # --- plain GEMM tiles (quickstart + integration tests)
+        ("gemm_64x64x64", lambda x, y: (gemm_pallas.matmul(x, y),),
+         [spec(64, 64), spec(64, 64)], "pallas:gemm"),
+        ("gemm_128x128x128", lambda x, y: (gemm_pallas.matmul(x, y),),
+         [spec(128, 128), spec(128, 128)], "pallas:gemm"),
+        # --- attention block (ring-attention example per-step compute)
+        ("attn_block_s64_kv64_d32",
+         lambda q, k, v: (attention_pallas.attention(q, k, v, bq=32, bkv=32),),
+         [spec(64, 32), spec(64, 32), spec(64, 32)], "pallas:attention"),
+        # --- expert MLP (moe example)
+        ("expert_mlp_e4_cap32_h64_he32",
+         lambda x, w: (moe_pallas.expert_mlp(x, w),),
+         [spec(4, 32, 64), spec(4, 64, 32)], "pallas:grouped_gemm"),
+        # --- e2e TP-MLP training stages
+        ("tp_mlp_fwd",
+         lambda x, w1, w2: (model.tp_mlp_fwd(x, w1, w2),),
+         [spec(E2E_T, E2E_D), spec(E2E_D, f_shard), spec(f_shard, E2E_D)],
+         "pallas:gemm"),
+        ("tp_mlp_bwd",
+         lambda x, w1, w2, y, tgt: model.tp_mlp_bwd(x, w1, w2, y, tgt, E2E_LR),
+         [spec(E2E_T, E2E_D), spec(E2E_D, f_shard), spec(f_shard, E2E_D),
+          spec(E2E_T, E2E_D), spec(E2E_T, E2E_D)],
+         "pallas:gemm"),
+    ]
+    return arts
+
+
+def shapes_of(lowered_out):
+    """Output shapes from a lowered computation's out_info pytree."""
+    leaves = jax.tree_util.tree_leaves(lowered_out)
+    return [list(l.shape) for l in leaves]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"artifacts": []}
+    for name, fn, in_specs, kernel in artifact_list():
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        out_shapes = shapes_of(lowered.out_info)
+        manifest["artifacts"].append({
+            "name": name,
+            "file": fname,
+            "inputs": [list(s.shape) for s in in_specs],
+            "outputs": out_shapes,
+            "kernel": kernel,
+        })
+        print(f"wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

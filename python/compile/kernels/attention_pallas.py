@@ -1,0 +1,87 @@
+"""L1 Pallas blockwise (FlashAttention-style) attention kernel.
+
+One grid cell per (head, q-block); the KV loop runs inside the kernel as a
+`fori_loop` carrying the online-softmax state (running max, exp-sum,
+unnormalised accumulator) — exactly the per-step update Ring Attention
+performs against each arriving KV shard (the Rust functional executor's
+`OnlineSoftmaxState` mirrors this math and the two are tested against the
+same oracle).
+
+Hardware adaptation (DESIGN.md): the CUDA warp-specialised SMEM staging of
+K/V blocks becomes BlockSpec-fed VMEM blocks; the softmax rescale runs on
+the VPU, the two matmuls on the MXU with f32 accumulation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bkv: int):
+    """q_ref: (bq, d); k_ref/v_ref: (s_kv, d); o_ref: (bq, d)."""
+    q = q_ref[...]
+    s_kv, d = k_ref.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    n_blocks = s_kv // bkv
+
+    def body(i, carry):
+        m_i, l_i, acc = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(k_ref[...], i * bkv, bkv, axis=0)
+        v_blk = jax.lax.dynamic_slice_in_dim(v_ref[...], i * bkv, bkv, axis=0)
+        scores = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32) * scale
+        blk_max = jnp.max(scores, axis=-1)
+        new_max = jnp.maximum(m_i, blk_max)
+        correction = jnp.exp(m_i - new_max)
+        p = jnp.exp(scores - new_max[:, None])
+        l_new = l_i * correction + jnp.sum(p, axis=-1)
+        acc_new = acc * correction[:, None] + jnp.dot(
+            p, v_blk, preferred_element_type=jnp.float32
+        )
+        return new_max, l_new, acc_new
+
+    bq = q.shape[0]
+    init = (
+        jnp.full((bq,), NEG_INF, dtype=jnp.float32),
+        jnp.zeros((bq,), dtype=jnp.float32),
+        jnp.zeros((bq, d), dtype=jnp.float32),
+    )
+    m_i, l_i, acc = jax.lax.fori_loop(0, n_blocks, body, init)
+    o_ref[...] = (acc / l_i[:, None]).astype(o_ref.dtype)
+
+
+def _pick_block(dim, preferred):
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b //= 2
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bkv"))
+def attention(q, k, v, bq=128, bkv=128):
+    """Single-head attention `(s_q, d) × (s_kv, d) -> (s_q, d)`."""
+    s_q, d = q.shape
+    s_kv, d2 = k.shape
+    assert d == d2 and v.shape == k.shape
+    bq = _pick_block(s_q, bq)
+    bkv = _pick_block(s_kv, bkv)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, bkv=bkv),
+        grid=(s_q // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((s_kv, d), lambda i: (0, 0)),
+            pl.BlockSpec((s_kv, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_q, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def mha(q, k, v, **kw):
+    """Multi-head wrapper: (h, s, d) tensors, vmapped over heads."""
+    return jax.vmap(lambda qq, kk, vv: attention(qq, kk, vv, **kw))(q, k, v)

@@ -1,0 +1,75 @@
+"""L1 Pallas tiled GEMM kernel.
+
+The consumer-pipeline GEMM every fused PK kernel embeds, re-thought for
+the TPU/Pallas model per DESIGN.md §Hardware-Adaptation: the paper's CUDA
+`m×n×k` threadblock tile with a K loop through SMEM becomes a Pallas grid
+over `(M/bm, N/bn, K/bk)` with the K axis innermost, accumulating into
+the output block (VMEM-resident across the K steps) on the MXU with f32
+accumulation.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same function is
+AOT-exportable for the Rust runtime (see aot.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output block; grid axis 2 walks the K blocks."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pick_block(dim, preferred):
+    """Largest power-of-two block <= preferred that divides dim."""
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b //= 2
+    assert b >= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, bm=128, bn=128, bk=128):
+    """`x @ y` via the Pallas kernel. Blocks auto-shrink to divide shapes.
+
+    x: (m, k), y: (k, n) -> (m, n) in f32.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def matmul_nt(x, y, **kw):
+    """`x @ y.T` (weight-transpose convenience used by the backward pass)."""
+    return matmul(x, y.T, **kw)
+
+
+def matmul_tn(x, y, **kw):
+    """`x.T @ y` (gradient-of-weights convenience)."""
+    return matmul(x.T, y, **kw)

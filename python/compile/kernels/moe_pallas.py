@@ -1,0 +1,47 @@
+"""L1 Pallas grouped (expert) GEMM kernel.
+
+The first expert-MLP GEMM of the MoE layer (Figure 12): tokens are
+pre-gathered into fixed-capacity per-expert slots (the dispatch is the
+Rust coordinator's job); each grid step computes one expert's
+`(cap, H) @ (H, He)` product on the MXU. Padding rows beyond an expert's
+real token count multiply garbage-free zeros — the dispatcher zero-fills
+slots — so no masking is needed in-kernel (documented contract).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _grouped_kernel(x_ref, w_ref, o_ref):
+    """x_ref: (1, cap, h); w_ref: (1, h, he); o_ref: (1, cap, he)."""
+    o_ref[0, ...] = jnp.dot(
+        x_ref[0, ...], w_ref[0, ...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@jax.jit
+def grouped_matmul(x, w):
+    """Per-expert batched matmul `(E, cap, H) @ (E, H, He) -> (E, cap, He)`."""
+    e, cap, h = x.shape
+    e2, h2, he = w.shape
+    assert e == e2 and h == h2
+    return pl.pallas_call(
+        _grouped_kernel,
+        grid=(e,),
+        in_specs=[
+            pl.BlockSpec((1, cap, h), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h, he), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cap, he), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, cap, he), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def expert_mlp(x, w1):
+    """Expert forward used by the AOT artifact: grouped GEMM + GeLU."""
+    return jax.nn.gelu(grouped_matmul(x, w1), approximate=True)

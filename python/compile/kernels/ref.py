@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match its oracle to float tolerance under pytest (the paper's kernels
+are validated the same way against cuBLAS/FlashAttention outputs).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Plain jnp matmul with f32 accumulation (tensor-core contract)."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def gelu_ref(x):
+    """tanh-approximate GeLU (matches jax.nn.gelu approximate=True)."""
+    return jax.nn.gelu(x, approximate=True)
+
+
+def attention_ref(q, k, v):
+    """Full softmax attention for a single head: (s_q, d) x (s_kv, d)."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=jnp.float32))
+    scores = jnp.matmul(q, k.T, preferred_element_type=jnp.float32) * scale
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.matmul(probs, v, preferred_element_type=jnp.float32)
+
+
+def grouped_matmul_ref(x, w):
+    """Per-expert batched matmul: (E, cap, H) @ (E, H, He) -> (E, cap, He)."""
+    return jnp.einsum("ech,ehf->ecf", x, w, preferred_element_type=jnp.float32)
+
+
+def tp_mlp_fwd_ref(x, w1, w2):
+    """One tensor-parallel MLP shard forward: partial output before AR."""
+    h = gelu_ref(matmul_ref(x, w1))
+    return matmul_ref(h, w2)
+
+
+def mse_loss_ref(y, target):
+    return jnp.mean((y - target) ** 2)
+
+
+def tp_mlp_grads_ref(x, w1, w2, y_sum, target):
+    """Reference gradients of the TP MLP shard given the post-all-reduce
+    output ``y_sum`` (dY flows back identically into every shard)."""
+    dy = 2.0 * (y_sum - target) / y_sum.size
+    a = matmul_ref(x, w1)
+    h = gelu_ref(a)
+    dw2 = matmul_ref(h.T, dy)
+    dh = matmul_ref(dy, w2.T)
+    da = dh * jax.vmap(jax.vmap(jax.grad(lambda t: gelu_ref(t))))(a)
+    dw1 = matmul_ref(x.T, da)
+    return dw1, dw2

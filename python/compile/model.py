@@ -1,0 +1,81 @@
+"""L2 JAX model: the per-shard compute stages of a tensor-parallel MLP
+(the §4.1 pattern: AG → column-shard GEMM → GeLU → row-shard GEMM → AR),
+plus the attention block and expert MLP used by the other examples.
+
+Every matmul routes through the L1 Pallas kernel (gemm_pallas.matmul), so
+the AOT artifacts exercise the full three-layer composition. Collectives
+are **not** in these functions — they live in the Rust coordinator (PK's
+simulated fabric); each stage is exactly the computation one device runs
+between collectives.
+
+The backward stage is written with explicit gradient formulas (Pallas
+calls are not auto-differentiable), verified against `jax.grad` oracles in
+the tests.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention_pallas, gemm_pallas, moe_pallas
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def gelu_grad(a):
+    """d/da gelu(a), tanh approximation, elementwise."""
+    c = 0.7978845608028654  # sqrt(2/pi)
+    a3 = a * a * a
+    t = jnp.tanh(c * (a + 0.044715 * a3))
+    dt = (1.0 - t * t) * c * (1.0 + 3 * 0.044715 * a * a)
+    return 0.5 * (1.0 + t) + 0.5 * a * dt
+
+
+def tp_mlp_fwd(x, w1, w2):
+    """One TP shard's forward: ``y_partial = gelu(x @ w1) @ w2``.
+
+    x: (T, D) replicated activations (post all-gather);
+    w1: (D, F/n) column shard; w2: (F/n, D) row shard.
+    Returns the partial output the coordinator all-reduces.
+    """
+    a = gemm_pallas.matmul(x, w1)
+    h = gelu(a)
+    return gemm_pallas.matmul(h, w2)
+
+
+def tp_mlp_loss(y_sum, target):
+    """MSE loss on the post-all-reduce output (replicated)."""
+    return jnp.mean((y_sum - target) ** 2)
+
+
+def tp_mlp_bwd(x, w1, w2, y_sum, target, lr):
+    """One TP shard's backward + SGD step.
+
+    Recomputes the shard activations (rematerialisation — cheaper than
+    shipping them through the coordinator), forms the gradients with
+    explicit formulas through the Pallas GEMM kernel, and applies SGD.
+
+    Returns ``(w1_new, w2_new, loss)``; loss is replicated (computed from
+    the already-all-reduced ``y_sum``).
+    """
+    t_count = jnp.asarray(y_sum.size, dtype=jnp.float32)
+    dy = 2.0 * (y_sum - target) / t_count
+    a = gemm_pallas.matmul(x, w1)
+    h = gelu(a)
+    dw2 = gemm_pallas.matmul(h.T, dy)
+    dh = gemm_pallas.matmul(dy, w2.T)
+    da = dh * gelu_grad(a)
+    dw1 = gemm_pallas.matmul(x.T, da)
+    loss = tp_mlp_loss(y_sum, target)
+    return w1 - lr * dw1, w2 - lr * dw2, loss
+
+
+def attention_block(q, k, v):
+    """Single-head attention block (the ring-attention per-step compute)."""
+    return attention_pallas.attention(q, k, v)
+
+
+def expert_mlp(x, w1):
+    """Per-expert first MLP GEMM + GeLU over capacity-padded token slots."""
+    return moe_pallas.expert_mlp(x, w1)

@@ -1,0 +1,66 @@
+"""L1 attention Pallas kernel vs the full-softmax oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention_pallas, ref
+
+seq = st.sampled_from([16, 32, 64, 128])
+dim = st.sampled_from([8, 16, 32, 64])
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(s_q=seq, s_kv=seq, d=dim, seed=st.integers(0, 2**31 - 1))
+def test_attention_matches_ref(s_q, s_kv, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = rand(rng, s_q, d), rand(rng, s_kv, d), rand(rng, s_kv, d)
+    got = attention_pallas.attention(q, k, v, bq=16, bkv=16)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(bq=st.sampled_from([8, 16, 32, 64]), bkv=st.sampled_from([8, 16, 32, 64]))
+def test_block_size_invariance(bq, bkv):
+    # the online-softmax result must not depend on block decomposition
+    rng = np.random.default_rng(42)
+    q, k, v = rand(rng, 64, 16), rand(rng, 64, 16), rand(rng, 64, 16)
+    got = attention_pallas.attention(q, k, v, bq=bq, bkv=bkv)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_rows_are_convex_combinations():
+    # softmax weights sum to 1: with constant V the output is constant
+    rng = np.random.default_rng(7)
+    q, k = rand(rng, 32, 8), rand(rng, 48, 8)
+    v = jnp.ones((48, 8), jnp.float32) * 3.0
+    got = attention_pallas.attention(q, k, v, bq=16, bkv=16)
+    np.testing.assert_allclose(got, jnp.full((32, 8), 3.0), rtol=1e-5, atol=1e-5)
+
+
+def test_extreme_logits_stable():
+    # large-magnitude queries stress the running-max rescaling
+    rng = np.random.default_rng(8)
+    q = rand(rng, 16, 8) * 100.0
+    k = rand(rng, 32, 8) * 100.0
+    v = rand(rng, 32, 8)
+    got = attention_pallas.attention(q, k, v, bq=8, bkv=8)
+    want = ref.attention_ref(q, k, v)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_mha_vmap_wrapper():
+    rng = np.random.default_rng(9)
+    q, k, v = rand(rng, 4, 32, 16), rand(rng, 4, 32, 16), rand(rng, 4, 32, 16)
+    got = attention_pallas.mha(q, k, v, bq=16, bkv=16)
+    for h in range(4):
+        np.testing.assert_allclose(
+            got[h], ref.attention_ref(q[h], k[h], v[h]), rtol=1e-4, atol=1e-4
+        )

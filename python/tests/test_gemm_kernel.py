@@ -1,0 +1,74 @@
+"""L1 GEMM Pallas kernel vs the pure-jnp oracle (hypothesis sweeps)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm_pallas, ref
+
+dims = st.sampled_from([8, 16, 24, 32, 48, 64, 96, 128])
+
+
+def rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, k=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_f32(m, n, k, seed):
+    rng = np.random.default_rng(seed)
+    x, y = rand(rng, m, k), rand(rng, k, n)
+    got = gemm_pallas.matmul(x, y)
+    want = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=dims, n=dims, k=dims)
+def test_matmul_bf16_inputs(m, n, k):
+    rng = np.random.default_rng(m * 1000 + n * 10 + k)
+    x = rand(rng, m, k, dtype=jnp.bfloat16)
+    y = rand(rng, k, n, dtype=jnp.bfloat16)
+    got = gemm_pallas.matmul(x.astype(jnp.float32), y.astype(jnp.float32))
+    want = ref.matmul_ref(x.astype(jnp.float32), y.astype(jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_block_shrinking_handles_odd_ratios():
+    # 40 is not divisible by 128/64/32/16; the kernel must fall back to 8.
+    rng = np.random.default_rng(3)
+    x, y = rand(rng, 40, 24), rand(rng, 24, 40)
+    np.testing.assert_allclose(
+        gemm_pallas.matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_explicit_blocks_respected():
+    rng = np.random.default_rng(4)
+    x, y = rand(rng, 64, 64), rand(rng, 64, 64)
+    for b in (16, 32, 64):
+        np.testing.assert_allclose(
+            gemm_pallas.matmul(x, y, bm=b, bn=b, bk=b),
+            ref.matmul_ref(x, y),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+
+def test_transpose_helpers():
+    rng = np.random.default_rng(5)
+    x, y = rand(rng, 32, 16), rand(rng, 32, 24)
+    np.testing.assert_allclose(
+        gemm_pallas.matmul_tn(x, y), ref.matmul_ref(x.T, y), rtol=1e-4, atol=1e-4
+    )
+    z = rand(rng, 24, 16)
+    np.testing.assert_allclose(
+        gemm_pallas.matmul_nt(x, z), ref.matmul_ref(x, z.T), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_inner_dim_mismatch_rejected():
+    rng = np.random.default_rng(6)
+    with pytest.raises(AssertionError):
+        gemm_pallas.matmul(rand(rng, 8, 16), rand(rng, 8, 16))

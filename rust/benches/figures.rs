@@ -1,0 +1,32 @@
+//! `cargo bench --bench figures` — regenerates every table and figure of
+//! the paper (the full experiment harness; DESIGN.md §4 maps exhibits to
+//! modules). Prints each exhibit as markdown with its generation time and
+//! writes CSVs to `bench_results/`.
+//!
+//! Pass `--fast` (after `--`) to trim the sweeps.
+
+use std::time::Instant;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let fast = args.iter().any(|a| a == "--fast");
+    let out_dir = "bench_results";
+    std::fs::create_dir_all(out_dir).ok();
+    let mut total = 0.0;
+    println!("# ParallelKittens — paper exhibit reproduction\n");
+    for e in pk::report::all_exhibits() {
+        let t0 = Instant::now();
+        let table = (e.run)(fast);
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        println!("{}", table.to_markdown());
+        println!("_generated in {dt:.2}s_\n");
+        std::fs::write(format!("{out_dir}/{}.csv", e.id), table.to_csv()).expect("write csv");
+    }
+    println!("## Design-choice ablations (DESIGN.md calls these out)\n");
+    for (id, table) in pk::report::ablations::all_ablations() {
+        println!("{}", table.to_markdown());
+        std::fs::write(format!("{out_dir}/{id}.csv"), table.to_csv()).expect("write csv");
+    }
+    println!("---\nall exhibits + ablations regenerated in {total:.1}s (CSVs in {out_dir}/)");
+}

@@ -1,0 +1,65 @@
+//! Comet (Zhang et al., MLSys'25): the paper's expert-parallel baseline —
+//! the state-of-the-art hand-tuned fine-grained MoE overlap.
+//!
+//! Comet also overlaps token dispatch with expert GEMMs, so the two
+//! systems are close (PK reports 0.92–1.22×). Differences modelled:
+//! * Comet's thread-block-level pipeline is tuned per shape — its grouped
+//!   GEMM sustains slightly higher tensor-core utilization at large token
+//!   counts (where PK's untuned 0.92× cases live);
+//! * its runtime carries heavier setup (stream/event plumbing and a fixed
+//!   scheduler warm-up) and coarser-grained expert signalling, which costs
+//!   it at small token counts (PK's 1.22× cases).
+
+use crate::exec::TimedExec;
+use crate::kernels::moe::{self, MoeCfg, MoeSchedule, Routing};
+
+/// Comet's tuned grouped-GEMM utilization advantage.
+pub const COMET_GEMM_EFF: f64 = 1.06;
+
+/// Fixed runtime setup (streams, events, scheduler warm-up).
+pub const COMET_SETUP: f64 = 20e-6;
+
+/// Per-expert signalling coarseness vs PK's per-token counters.
+pub const COMET_EXPERT_SYNC: f64 = 0.5e-6;
+
+/// Total time of the Comet-style dispatch + expert GEMM.
+pub fn moe(cfg: &MoeCfg, routing: &Routing) -> f64 {
+    let t_pk = TimedExec::new(cfg.node.clone())
+        .run(&moe::build(cfg, routing, MoeSchedule::Overlapped, None))
+        .total_time;
+    // decompose: the GEMM share speeds up by Comet's tuning; overheads add.
+    let gemm_share = cfg.gemm_flops_per_device()
+        / cfg.node.gpu.tc_flops_for_sms(cfg.node.gpu.num_sms - cfg.comm_sms);
+    let comm_share = (t_pk - gemm_share).max(0.0);
+    COMET_SETUP
+        + gemm_share / COMET_GEMM_EFF
+        + comm_share
+        + cfg.experts_local() as f64 * COMET_EXPERT_SYNC
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::spec::NodeSpec;
+
+    #[test]
+    fn figure12_band_pk_vs_comet() {
+        // PK 0.92–1.22× of Comet across token counts.
+        let node = NodeSpec::hgx_h100();
+        let mut ratios = vec![];
+        for tokens in [2048usize, 8192, 32768] {
+            let cfg = MoeCfg::paper(node.clone(), tokens);
+            let routing = Routing::uniform(&cfg, 5);
+            let t_comet = moe(&cfg, &routing);
+            let t_pk = TimedExec::new(node.clone())
+                .run(&moe::build(&cfg, &routing, MoeSchedule::Overlapped, None))
+                .total_time;
+            ratios.push((tokens, t_comet / t_pk));
+        }
+        for (tokens, r) in &ratios {
+            assert!(*r > 0.80 && *r < 1.45, "tokens={tokens}: PK/Comet ratio out of band: {r}");
+        }
+        // small token counts favour PK (overheads), large favour Comet
+        assert!(ratios[0].1 > ratios[2].1, "gap should shrink with scale: {ratios:?}");
+    }
+}

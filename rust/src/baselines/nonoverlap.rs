@@ -1,0 +1,63 @@
+//! The non-overlapped baseline: cuBLAS GEMM + NCCL collective as separate
+//! kernels (§4.1's "non-overlapped baseline"). Communication is fully
+//! exposed: `T = T_collective + T_gemm + launch gaps`.
+
+use super::{launch_gap, time_plan};
+use crate::comm::nccl;
+use crate::kernels::{gemm, GemmKernelCfg};
+
+/// AG + GEMM: NCCL all-gather of the row-sharded input, then the GEMM.
+pub fn ag_gemm(cfg: &GemmKernelCfg) -> f64 {
+    let node = &cfg.node;
+    // all-gather the m×k input (each device holds m/n rows)
+    let t_ag = nccl::allgather_time(node, cfg.m, cfg.k);
+    let t_gemm = time_plan(node, &gemm::build(cfg, None));
+    t_ag + launch_gap(node) + t_gemm
+}
+
+/// GEMM + RS: the GEMM, then an NCCL reduce-scatter of the m×n output.
+pub fn gemm_rs(cfg: &GemmKernelCfg) -> f64 {
+    let node = &cfg.node;
+    let t_gemm = time_plan(node, &gemm::build(cfg, None));
+    t_gemm + launch_gap(node) + nccl::reducescatter_time(node, cfg.m, cfg.n)
+}
+
+/// GEMM + AR: the GEMM, then an NCCL all-reduce of the m×n output.
+pub fn gemm_ar(cfg: &GemmKernelCfg) -> f64 {
+    let node = &cfg.node;
+    let t_gemm = time_plan(node, &gemm::build(cfg, None));
+    t_gemm + launch_gap(node) + nccl::allreduce_time(node, cfg.m, cfg.n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::TimedExec;
+    use crate::hw::spec::NodeSpec;
+    use crate::kernels::gemm_rs::Schedule;
+
+    #[test]
+    fn pk_beats_nonoverlap_on_all_three(){
+        let node = NodeSpec::hgx_h100();
+        let n = 16384;
+        // GEMM+RS (local N×N×N/8)
+        let cfg = GemmKernelCfg::new(node.clone(), n, n, n / 8);
+        let t_base = gemm_rs(&cfg);
+        let t_pk = TimedExec::new(node.clone())
+            .run(&crate::kernels::gemm_rs::build(&cfg, Schedule::IntraSm, None))
+            .total_time;
+        let speedup = t_base / t_pk;
+        assert!(speedup > 1.05 && speedup < 2.5, "PK 1.06-1.68x over non-overlap (paper), got {speedup}");
+        // AG+GEMM (local N×N/8×N)
+        let cfg_ag = GemmKernelCfg::new(node.clone(), n, n / 8, n);
+        let t_base = ag_gemm(&cfg_ag);
+        let t_pk = TimedExec::new(node.clone()).run(&crate::kernels::ag_gemm::build(&cfg_ag, None)).total_time;
+        assert!(t_base / t_pk > 1.02, "AG+GEMM: {t_base} vs {t_pk}");
+        // GEMM+AR
+        let t_base = gemm_ar(&cfg);
+        let t_pk = TimedExec::new(node.clone())
+            .run(&crate::kernels::gemm_ar::build(&cfg, Schedule::InterSm, None))
+            .total_time;
+        assert!(t_base / t_pk > 1.1, "GEMM+AR: {t_base} vs {t_pk}");
+    }
+}

@@ -1,0 +1,65 @@
+//! YunChang (Fang & Zhao, 2024): the paper's DeepSpeed-Ulysses baseline.
+//!
+//! NCCL has no all-to-all along inner dimensions, so the baseline
+//! reshapes (packs) the `(B, S, H, D)` tensor into contiguous partitions
+//! before each exchange and unpacks after (§4.2, Appendix B): two full
+//! HBM passes around every NCCL all-to-all, plus the collective's own
+//! rendezvous and staging. Attention itself is identical to PK's.
+
+use super::phantom_replicas;
+use crate::comm::nccl::{self, NcclModel, RingCtx};
+use crate::exec::TimedExec;
+use crate::hw::spec::NodeSpec;
+use crate::kernels::ulysses::UlyssesCfg;
+use crate::plan::Plan;
+
+/// One reshape (pack or unpack) pass over the exchange buffer.
+fn reshape_time(node: &NodeSpec, bytes: f64) -> f64 {
+    // read + write over HBM plus a kernel launch
+    2.0 * bytes / node.gpu.hbm_bw + node.gpu.kernel_launch
+}
+
+/// NCCL all-to-all of the (contiguous, post-reshape) exchange buffer.
+fn nccl_a2a_time(node: &NodeSpec, cfg: &UlyssesCfg) -> f64 {
+    let rows = cfg.node.num_devices * 8; // row blocks = destinations (×8 chunking)
+    let cols = (cfg.a2a_bytes() / 2.0 / rows as f64).max(1.0) as usize;
+    let mut plan = Plan::new();
+    let views = phantom_replicas(node.num_devices, rows, cols);
+    nccl::all_to_all(
+        &mut plan,
+        &RingCtx { node, model: NcclModel::default(), replicas: views.clone() },
+        &views,
+    );
+    TimedExec::new(node.clone()).run(&plan).total_time
+}
+
+/// Total time of the YunChang-style Ulysses attention layer:
+/// 3×(reshape + a2a + reshape) in, attention, (reshape + a2a + reshape) out.
+pub fn ulysses(cfg: &UlyssesCfg) -> f64 {
+    let node = &cfg.node;
+    let a2a = nccl_a2a_time(node, cfg);
+    let pack = reshape_time(node, cfg.a2a_bytes());
+    let attn = cfg.attn_flops() / (node.gpu.tc_flops_for_sms(node.gpu.num_sms) * cfg.flash_util);
+    // q, k, v exchanges run back-to-back (grouped NCCL), o afterwards
+    4.0 * (2.0 * pack + a2a) + attn + node.gpu.kernel_launch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::ulysses;
+
+    #[test]
+    fn figure11_speedup_band() {
+        // PK 1.01–1.39× over YunChang across sequence lengths.
+        let node = NodeSpec::hgx_h100();
+        for s in [8192usize, 32768, 131072] {
+            let cfg = UlyssesCfg::paper(node.clone(), s);
+            let t_yc = ulysses(&cfg);
+            let t_pk = TimedExec::new(node.clone()).run(&ulysses::build(&cfg, None)).total_time;
+            let speedup = t_yc / t_pk;
+            assert!(speedup > 1.0, "S={s}: PK should win, got {speedup}");
+            assert!(speedup < 1.8, "S={s}: modest gap per paper, got {speedup}");
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Communication-library baselines (§3.1.4 "design overheads").
+//!
+//! PK's analysis attributes concrete costs to the design choices of the
+//! standard libraries; this module models those choices faithfully so the
+//! paper's comparisons (Figure 6, Figures 15–17, the NVSHMEM latency
+//! claims) arise from the same causes:
+//!
+//! * [`nccl`] — ring collectives with **two-way rendezvous** before every
+//!   operation, **staged channel buffers** (extra HBM passes), chunked
+//!   register-op transfers, and a **contiguity requirement** that forces
+//!   reshape copies for tensor-dimension collectives (Appendix B).
+//! * [`nvshmem`] — one-sided register-op transfers where every remote
+//!   access pays a `__ldg` peer-address load plus a group sync, costing
+//!   4.5× element-wise latency and ~20 GB/s of bandwidth (§3.1.4).
+
+pub mod nccl;
+pub mod nvshmem;
+
+pub use nccl::NcclModel;

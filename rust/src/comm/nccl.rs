@@ -1,0 +1,593 @@
+//! NCCL-style ring collectives with the library's design overheads.
+//!
+//! Modelled behaviours (each traced to the paper):
+//! * **two-way synchronization** (§3.1.4): sender and receiver rendezvous
+//!   before data moves — a fixed setup delay per collective on every rank
+//!   plus per-step handshakes;
+//! * **intermediate buffering** (§3.1.4): data staged through preallocated
+//!   channel buffers — an extra HBM pass on each side of every hop;
+//! * **chunked SM-driven copies**: transfers move in `chunk_bytes` slots
+//!   via register ops across `n_sms` channel SMs;
+//! * **contiguity requirement** (Appendix B): collectives operate on
+//!   contiguous partitions only, so tensor-dimension (last-dim) collectives
+//!   pay full reshape passes before and after.
+//!
+//! The ring algorithms themselves are the textbook NCCL rings, and their
+//! *functional* semantics are exact (the tests verify all-reduce = sum
+//! etc.), so these builders double as a correctness oracle for PK's own
+//! collectives.
+
+use crate::hw::spec::NodeSpec;
+use crate::hw::DeviceId;
+use crate::mem::pgl::ReduceOp;
+use crate::mem::ELEM_BYTES;
+use crate::plan::{Effect, MatView, Op, Plan, Role, Route, SyncScope, TransferSpec};
+use crate::xfer::Mechanism;
+
+/// Tunable constants of the NCCL behavioural model.
+#[derive(Clone, Copy, Debug)]
+pub struct NcclModel {
+    /// Two-way rendezvous cost per collective per rank (launch + handshake).
+    pub rendezvous: f64,
+    /// Channel slot size (bytes) — transfer granularity.
+    pub chunk_bytes: f64,
+    /// SMs driving the channels.
+    pub n_sms: f64,
+    /// Stage through intermediate buffers (HBM pass on both sides).
+    pub staged: bool,
+}
+
+impl Default for NcclModel {
+    fn default() -> Self {
+        // n_sms calibrates the channel-SM parallelism so ring collectives
+        // land at NCCL's measured intra-node busbw (~280 GB/s per hop on
+        // HGX H100); the paper's Figure 6 gap then comes from the ring's
+        // 2(N-1)/N traffic + rendezvous + staging, not from handicapping
+        // NCCL's own transfer rate.
+        NcclModel { rendezvous: 10e-6, chunk_bytes: 512.0 * 1024.0, n_sms: 64.0, staged: true }
+    }
+}
+
+impl NcclModel {
+    /// Point-to-point configuration: send/recv uses fewer channel SMs
+    /// (what a stream-overlapped P2P steals from a concurrent kernel).
+    pub fn p2p() -> Self {
+        NcclModel { n_sms: 16.0, ..Default::default() }
+    }
+}
+
+/// Whole-buffer replica set for a collective: `replicas[d]` is device `d`'s
+/// buffer view (same shape everywhere), chunked by row blocks.
+pub struct RingCtx<'a> {
+    pub node: &'a NodeSpec,
+    pub model: NcclModel,
+    pub replicas: Vec<MatView>,
+}
+
+impl<'a> RingCtx<'a> {
+    fn n(&self) -> usize {
+        self.replicas.len()
+    }
+
+    fn chunk_rows(&self) -> usize {
+        let rows = self.replicas[0].rows;
+        assert_eq!(rows % self.n(), 0, "rows must divide by device count");
+        rows / self.n()
+    }
+
+    fn chunk_view(&self, dev: usize, chunk: usize) -> MatView {
+        let cr = self.chunk_rows();
+        self.replicas[dev].sub(chunk * cr, 0, cr, self.replicas[dev].cols)
+    }
+
+    fn chunk_bytes_total(&self) -> f64 {
+        (self.chunk_rows() * self.replicas[0].cols) as f64 * ELEM_BYTES as f64
+    }
+
+    /// Emit the staging HBM pass of one hop (channel buffer copy).
+    fn stage_pass(&self, plan: &mut Plan, w: usize, dev: usize, bytes: f64) {
+        if self.model.staged {
+            plan.push(
+                w,
+                Op::Transfer {
+                    spec: TransferSpec {
+                        mech: Mechanism::RegOp,
+                        route: Route::LocalHbm { dev: DeviceId(dev) },
+                        bytes,
+                        msg_bytes: self.model.chunk_bytes,
+                        n_sms: self.model.n_sms,
+                    },
+                    blocking: true,
+                    done_sem: None,
+                    done_scope: SyncScope::IntraSm,
+                    label: "nccl_stage",
+                    effect: None, // staging copy is value-neutral
+                },
+            );
+        }
+    }
+}
+
+/// One ring hop: device `d` sends `chunk` to `d+1`, optionally reducing at
+/// the destination; signals `done` (the receiver's step semaphore).
+#[allow(clippy::too_many_arguments)]
+fn ring_hop(
+    ctx: &RingCtx,
+    plan: &mut Plan,
+    w: usize,
+    d: usize,
+    chunk: usize,
+    reduce: Option<ReduceOp>,
+    done: crate::plan::SemId,
+) {
+    let n = ctx.n();
+    let next = (d + 1) % n;
+    ctx.stage_pass(plan, w, d, ctx.chunk_bytes_total());
+    plan.push(
+        w,
+        Op::Transfer {
+            spec: TransferSpec {
+                mech: Mechanism::RegOp,
+                route: Route::P2p { src: DeviceId(d), dst: DeviceId(next) },
+                bytes: ctx.chunk_bytes_total(),
+                msg_bytes: ctx.model.chunk_bytes,
+                n_sms: ctx.model.n_sms,
+            },
+            blocking: true,
+            done_sem: Some(done),
+            done_scope: SyncScope::InterDevice,
+            label: "nccl_ring_hop",
+            effect: Some(Effect::CopyMat {
+                src: ctx.chunk_view(d, chunk),
+                dst: ctx.chunk_view(next, chunk),
+                reduce,
+            }),
+        },
+    );
+    ctx.stage_pass(plan, w, next, ctx.chunk_bytes_total());
+}
+
+/// Ring all-reduce: reduce-scatter phase then all-gather phase
+/// (`2(N-1)/N × S` per-device link traffic — the classic ring cost).
+/// Appends one worker per device to `plan`.
+pub fn ring_all_reduce(plan: &mut Plan, ctx: &RingCtx) {
+    let n = ctx.n();
+    assert!(n >= 2);
+    // recv_done[d][k]: device d has received its step-k chunk.
+    let steps = 2 * (n - 1);
+    let recv_done: Vec<Vec<_>> =
+        (0..n).map(|_| (0..steps).map(|_| plan.add_sem(0)).collect()).collect();
+    for d in 0..n {
+        let w = plan.add_worker(DeviceId(d), Role::CommSm, format!("nccl_ar/d{d}"));
+        plan.push(w, Op::Delay { dur: ctx.model.rendezvous, label: "nccl_rendezvous" });
+        // --- reduce-scatter phase: send chunk (d - k), reduce-add at next.
+        for k in 0..n - 1 {
+            if k > 0 {
+                plan.push(w, Op::Wait { sem: recv_done[d][k - 1], value: 1 });
+            }
+            let chunk = (d + n - k) % n;
+            ring_hop(ctx, plan, w, d, chunk, Some(ReduceOp::Add), recv_done[(d + 1) % n][k]);
+        }
+        // after RS, device d owns complete chunk (d + 1) % n.
+        // --- all-gather phase: circulate complete chunks (overwrite).
+        for k in 0..n - 1 {
+            plan.push(w, Op::Wait { sem: recv_done[d][n - 2 + k], value: 1 });
+            let chunk = (d + 1 + n - k) % n;
+            ring_hop(ctx, plan, w, d, chunk, None, recv_done[(d + 1) % n][n - 1 + k]);
+        }
+        // drain: wait for the final incoming chunk.
+        plan.push(w, Op::Wait { sem: recv_done[d][steps - 1], value: 1 });
+    }
+}
+
+/// Ring all-gather: `replicas[d]` initially holds shard `d` in chunk-row
+/// block `d`; afterwards every device holds all shards.
+pub fn ring_all_gather(plan: &mut Plan, ctx: &RingCtx) {
+    let n = ctx.n();
+    assert!(n >= 2);
+    let recv_done: Vec<Vec<_>> =
+        (0..n).map(|_| (0..n - 1).map(|_| plan.add_sem(0)).collect()).collect();
+    for d in 0..n {
+        let w = plan.add_worker(DeviceId(d), Role::CommSm, format!("nccl_ag/d{d}"));
+        plan.push(w, Op::Delay { dur: ctx.model.rendezvous, label: "nccl_rendezvous" });
+        for k in 0..n - 1 {
+            if k > 0 {
+                plan.push(w, Op::Wait { sem: recv_done[d][k - 1], value: 1 });
+            }
+            let chunk = (d + n - k) % n;
+            ring_hop(ctx, plan, w, d, chunk, None, recv_done[(d + 1) % n][k]);
+        }
+        plan.push(w, Op::Wait { sem: recv_done[d][n - 2], value: 1 });
+    }
+}
+
+/// Ring reduce-scatter: afterwards device `d`'s chunk-row block `d` holds
+/// the elementwise sum of all replicas' block `d`.
+pub fn ring_reduce_scatter(plan: &mut Plan, ctx: &RingCtx) {
+    let n = ctx.n();
+    assert!(n >= 2);
+    let recv_done: Vec<Vec<_>> =
+        (0..n).map(|_| (0..n - 1).map(|_| plan.add_sem(0)).collect()).collect();
+    for d in 0..n {
+        let w = plan.add_worker(DeviceId(d), Role::CommSm, format!("nccl_rs/d{d}"));
+        plan.push(w, Op::Delay { dur: ctx.model.rendezvous, label: "nccl_rendezvous" });
+        for k in 0..n - 1 {
+            if k > 0 {
+                plan.push(w, Op::Wait { sem: recv_done[d][k - 1], value: 1 });
+            }
+            // offset -1 so device d ends with complete chunk d
+            let chunk = (d + 2 * n - k - 1) % n;
+            ring_hop(ctx, plan, w, d, chunk, Some(ReduceOp::Add), recv_done[(d + 1) % n][k]);
+        }
+        plan.push(w, Op::Wait { sem: recv_done[d][n - 2], value: 1 });
+    }
+}
+
+/// Pairwise all-to-all on contiguous row blocks: device `d` sends its row
+/// block `j` to `dsts[j]`'s row block `d`. NCCL executes these as P2P
+/// sends with the same rendezvous + staging overheads. `dsts` must be a
+/// *separate* buffer set — an in-place exchange would race senders
+/// against receivers (which is precisely why NCCL stages through channel
+/// buffers). Pass `dsts = ctx.replicas` views over distinct buffers for
+/// the functional path, or phantom views for timing-only runs.
+pub fn all_to_all(plan: &mut Plan, ctx: &RingCtx, dsts: &[MatView]) {
+    let n = ctx.n();
+    assert_eq!(dsts.len(), n);
+    let cr = ctx.chunk_rows();
+    let dst_chunk = |dev: usize, chunk: usize| dsts[dev].sub(chunk * cr, 0, cr, dsts[dev].cols);
+    for d in 0..n {
+        let w = plan.add_worker(DeviceId(d), Role::CommSm, format!("nccl_a2a/d{d}"));
+        plan.push(w, Op::Delay { dur: ctx.model.rendezvous, label: "nccl_rendezvous" });
+        for j in 0..n {
+            if j == d {
+                plan.push(
+                    w,
+                    Op::Compute {
+                        dur: 0.0,
+                        label: "nccl_a2a_local",
+                        effect: Some(Effect::CopyMat {
+                            src: ctx.chunk_view(d, j),
+                            dst: dst_chunk(j, d),
+                            reduce: None,
+                        }),
+                    },
+                );
+                continue;
+            }
+            ctx.stage_pass(plan, w, d, ctx.chunk_bytes_total());
+            plan.push(
+                w,
+                Op::Transfer {
+                    spec: TransferSpec {
+                        mech: Mechanism::RegOp,
+                        route: Route::P2p { src: DeviceId(d), dst: DeviceId(j) },
+                        bytes: ctx.chunk_bytes_total(),
+                        msg_bytes: ctx.model.chunk_bytes,
+                        n_sms: ctx.model.n_sms / (n - 1) as f64,
+                    },
+                    blocking: false,
+                    done_sem: None,
+                    done_scope: SyncScope::InterDevice,
+                    label: "nccl_a2a_send",
+                    effect: Some(Effect::CopyMat {
+                        src: ctx.chunk_view(d, j),
+                        dst: dst_chunk(j, d),
+                        reduce: None,
+                    }),
+                },
+            );
+        }
+        // NCCL's grouped p2p completes when all sends/recvs land; model as
+        // a trailing synchronization on the slowest link via blocking noop.
+        plan.push(w, Op::Delay { dur: 0.0, label: "nccl_a2a_tail" });
+    }
+}
+
+/// NVLS (NVSwitch multimem) collective paths. On Hopper+ NVSwitch, NCCL
+/// implements all-reduce / reduce-scatter / all-gather through the same
+/// in-network hardware PK uses (it is why the paper's Figure 6 gap tops
+/// out at ~1.79x rather than the ring's 4x): the remaining difference is
+/// NCCL's rendezvous, channel staging, and a less aggressive multimem
+/// kernel. These builders emit that path; [`allreduce_time`] & friends
+/// pick the faster of ring and NVLS like the library's tuner does.
+const NVLS_EFF: f64 = 1.15; // extra bytes-equivalent of NCCL's NVLS kernel
+
+fn nvls_worker(plan: &mut Plan, ctx: &RingCtx, d: usize, passes: &[(Route, f64)]) {
+    let w = plan.add_worker(DeviceId(d), Role::CommSm, format!("nccl_nvls/d{d}"));
+    plan.push(w, Op::Delay { dur: ctx.model.rendezvous, label: "nccl_rendezvous" });
+    ctx.stage_pass(plan, w, d, ctx.chunk_bytes_total());
+    for (route, bytes) in passes {
+        plan.push(
+            w,
+            Op::Transfer {
+                spec: TransferSpec {
+                    mech: Mechanism::Multimem,
+                    route: *route,
+                    bytes: *bytes,
+                    msg_bytes: ctx.model.chunk_bytes,
+                    n_sms: ctx.model.n_sms,
+                },
+                blocking: true,
+                done_sem: None,
+                done_scope: SyncScope::IntraSm,
+                label: "nccl_nvls",
+                effect: None,
+            },
+        );
+    }
+}
+
+/// Timing-only NVLS all-reduce: ld_reduce own shard + multicast it back.
+pub fn nvls_all_reduce(plan: &mut Plan, ctx: &RingCtx) {
+    let shard = ctx.chunk_bytes_total() * NVLS_EFF;
+    for d in 0..ctx.n() {
+        nvls_worker(plan, ctx, d, &[
+            (Route::LdReduce { reader: DeviceId(d) }, shard),
+            (Route::Multicast { src: DeviceId(d) }, shard),
+        ]);
+    }
+}
+
+/// Timing-only NVLS reduce-scatter: one ld_reduce pass per device.
+pub fn nvls_reduce_scatter(plan: &mut Plan, ctx: &RingCtx) {
+    let shard = ctx.chunk_bytes_total() * NVLS_EFF;
+    for d in 0..ctx.n() {
+        nvls_worker(plan, ctx, d, &[(Route::LdReduce { reader: DeviceId(d) }, shard)]);
+    }
+}
+
+/// Timing-only NVLS all-gather: one multicast pass per device.
+pub fn nvls_all_gather(plan: &mut Plan, ctx: &RingCtx) {
+    let shard = ctx.chunk_bytes_total() * NVLS_EFF;
+    for d in 0..ctx.n() {
+        nvls_worker(plan, ctx, d, &[(Route::Multicast { src: DeviceId(d) }, shard)]);
+    }
+}
+
+/// NCCL collective wall time: the faster of the ring and NVLS algorithms
+/// (the library's internal tuner choice) for phantom `rows x cols` BF16
+/// replicas.
+fn coll_time(
+    node: &NodeSpec,
+    rows: usize,
+    cols: usize,
+    ring: fn(&mut Plan, &RingCtx),
+    nvls: fn(&mut Plan, &RingCtx),
+) -> f64 {
+    use crate::exec::TimedExec;
+    let mk_views = || {
+        (0..node.num_devices)
+            .map(|_| MatView {
+                buf: crate::mem::BufId(0),
+                b: 0,
+                d: 0,
+                row0: 0,
+                col0: 0,
+                rows,
+                cols,
+            })
+            .collect::<Vec<_>>()
+    };
+    let mut t = f64::INFINITY;
+    for f in [ring, nvls] {
+        let ctx = RingCtx { node, model: NcclModel::default(), replicas: mk_views() };
+        let mut plan = Plan::new();
+        f(&mut plan, &ctx);
+        // strip effects: timing only
+        for w in &mut plan.workers {
+            for op in &mut w.ops {
+                if let Op::Transfer { effect, .. } = op {
+                    *effect = None;
+                }
+            }
+        }
+        t = t.min(TimedExec::new(node.clone()).run(&plan).total_time);
+    }
+    t
+}
+
+/// NCCL all-reduce time (ring vs NVLS, whichever wins).
+pub fn allreduce_time(node: &NodeSpec, rows: usize, cols: usize) -> f64 {
+    coll_time(node, rows, cols, ring_all_reduce, nvls_all_reduce)
+}
+
+/// NCCL reduce-scatter time.
+pub fn reducescatter_time(node: &NodeSpec, rows: usize, cols: usize) -> f64 {
+    coll_time(node, rows, cols, ring_reduce_scatter, nvls_reduce_scatter)
+}
+
+/// NCCL all-gather time.
+pub fn allgather_time(node: &NodeSpec, rows: usize, cols: usize) -> f64 {
+    coll_time(node, rows, cols, ring_all_gather, nvls_all_gather)
+}
+
+/// Emit the reshape (pack or unpack) pass NCCL needs before/after a
+/// collective whose logical partition is along the *tensor* (last)
+/// dimension (Appendix B): a full read+write pass over the local buffer.
+pub fn reshape_pass(plan: &mut Plan, node: &NodeSpec, model: &NcclModel, w: usize, dev: usize, bytes: f64) {
+    let _ = node;
+    plan.push(
+        w,
+        Op::Transfer {
+            spec: TransferSpec {
+                mech: Mechanism::RegOp,
+                route: Route::LocalHbm { dev: DeviceId(dev) },
+                bytes,
+                msg_bytes: model.chunk_bytes,
+                n_sms: model.n_sms,
+            },
+            blocking: true,
+            done_sem: None,
+            done_scope: SyncScope::IntraSm,
+            label: "nccl_reshape",
+            effect: None,
+        },
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::mem::tile::Shape4;
+    use crate::mem::MemPool;
+    use crate::util::seeded_vec;
+
+    fn setup(n: usize, rows: usize, cols: usize) -> (MemPool, Vec<crate::mem::BufId>, Vec<Vec<f32>>) {
+        let mut pool = MemPool::new();
+        let mut bufs = vec![];
+        let mut inits = vec![];
+        for d in 0..n {
+            let data = seeded_vec(d as u64 + 10, rows * cols);
+            inits.push(data.clone());
+            bufs.push(pool.alloc_init(DeviceId(d), Shape4::mat(rows, cols), data));
+        }
+        (pool, bufs, inits)
+    }
+
+    fn elementwise_sum(inits: &[Vec<f32>]) -> Vec<f32> {
+        let mut sum = vec![0.0; inits[0].len()];
+        for v in inits {
+            for (s, x) in sum.iter_mut().zip(v) {
+                *s += x;
+            }
+        }
+        sum
+    }
+
+    #[test]
+    fn ring_all_reduce_is_sum_everywhere() {
+        for n in [2, 4, 8] {
+            let (rows, cols) = (n * 4, 6);
+            let (mut pool, bufs, inits) = setup(n, rows, cols);
+            let node = NodeSpec::test_node(n);
+            let ctx = RingCtx {
+                node: &node,
+                model: NcclModel::default(),
+                replicas: bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect(),
+            };
+            let mut plan = Plan::new();
+            ring_all_reduce(&mut plan, &ctx);
+            FunctionalExec::new(&mut pool).run(&plan).unwrap();
+            let want = elementwise_sum(&inits);
+            for &b in &bufs {
+                crate::util::assert_allclose(&pool.get(b).data, &want, 1e-5, 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_all_gather_distributes_shards() {
+        let n = 4;
+        let (rows, cols) = (n * 2, 3);
+        let mut pool = MemPool::new();
+        let node = NodeSpec::test_node(n);
+        // each device starts with only its shard filled
+        let mut bufs = vec![];
+        let mut shards = vec![];
+        for d in 0..n {
+            let mut data = vec![0.0; rows * cols];
+            let shard = seeded_vec(d as u64 + 50, 2 * cols);
+            data[d * 2 * cols..(d + 1) * 2 * cols].copy_from_slice(&shard);
+            shards.push(shard);
+            bufs.push(pool.alloc_init(DeviceId(d), Shape4::mat(rows, cols), data));
+        }
+        let ctx = RingCtx {
+            node: &node,
+            model: NcclModel::default(),
+            replicas: bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect(),
+        };
+        let mut plan = Plan::new();
+        ring_all_gather(&mut plan, &ctx);
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        for &b in &bufs {
+            for (d, shard) in shards.iter().enumerate() {
+                assert_eq!(&pool.get(b).data[d * 2 * cols..(d + 1) * 2 * cols], &shard[..], "shard {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_reduce_scatter_owns_chunk_d() {
+        let n = 4;
+        let (rows, cols) = (n * 2, 5);
+        let (mut pool, bufs, inits) = setup(n, rows, cols);
+        let node = NodeSpec::test_node(n);
+        let ctx = RingCtx {
+            node: &node,
+            model: NcclModel::default(),
+            replicas: bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect(),
+        };
+        let mut plan = Plan::new();
+        ring_reduce_scatter(&mut plan, &ctx);
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        let want = elementwise_sum(&inits);
+        for (d, &b) in bufs.iter().enumerate() {
+            let got = &pool.get(b).data[d * 2 * cols..(d + 1) * 2 * cols];
+            crate::util::assert_allclose(got, &want[d * 2 * cols..(d + 1) * 2 * cols], 1e-5, 1e-6);
+        }
+    }
+
+    #[test]
+    fn all_to_all_transposes_blocks() {
+        let n = 4;
+        let (rows, cols) = (n * 2, 3);
+        let (mut pool, bufs, inits) = setup(n, rows, cols);
+        let outs: Vec<_> = (0..n)
+            .map(|d| pool.alloc(DeviceId(d), crate::mem::tile::Shape4::mat(rows, cols)))
+            .collect();
+        let node = NodeSpec::test_node(n);
+        let ctx = RingCtx {
+            node: &node,
+            model: NcclModel::default(),
+            replicas: bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect(),
+        };
+        let mut plan = Plan::new();
+        let dst_views: Vec<MatView> = outs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect();
+        all_to_all(&mut plan, &ctx, &dst_views);
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        let blk = 2 * cols;
+        for d in 0..n {
+            for j in 0..n {
+                // out[j]'s block d == device d's original block j
+                let got = &pool.get(outs[j]).data[d * blk..(d + 1) * blk];
+                let want = &inits[d][j * blk..(j + 1) * blk];
+                assert_eq!(got, want, "block {d}->{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn nccl_ar_time_scales_with_ring_traffic() {
+        // Per-device link traffic for ring AR is 2S(N-1)/N; at 64 MB and
+        // reg-op rate the transfer term alone is ~0.33 ms on H100s.
+        let n = 8;
+        let rows = 8 * 1024;
+        let cols = 4096; // S = 64 Mi elements... keep it moderate: views are metadata-only for timing
+        let node = NodeSpec::test_node(n);
+        let mut pool = MemPool::new();
+        let bufs: Vec<_> = (0..n).map(|d| pool.alloc(DeviceId(d), Shape4::mat(1, 1))).collect();
+        // timing-only plan: views describe shapes, no effects needed
+        let replicas: Vec<MatView> = bufs
+            .iter()
+            .map(|&b| MatView { buf: b, b: 0, d: 0, row0: 0, col0: 0, rows, cols })
+            .collect();
+        let ctx = RingCtx { node: &node, model: NcclModel { staged: true, ..Default::default() }, replicas };
+        let mut plan = Plan::new();
+        // strip effects: rebuild with effect-free hops by zeroing functional use
+        ring_all_reduce(&mut plan, &ctx);
+        for w in &mut plan.workers {
+            for op in &mut w.ops {
+                if let Op::Transfer { effect, .. } = op {
+                    *effect = None;
+                }
+            }
+        }
+        let r = TimedExec::new(node.clone()).run(&plan);
+        let s_bytes = (rows * cols) as f64 * 2.0;
+        let ring_bytes = 2.0 * s_bytes * (n - 1) as f64 / n as f64;
+        let floor = ring_bytes / (node.gpu.nvlink_bw * node.gpu.reg_peak_frac);
+        assert!(r.total_time > floor, "must exceed pure ring traffic time");
+        assert!(r.total_time < 4.0 * floor, "but not pathologically slow: {} vs {floor}", r.total_time);
+    }
+}

@@ -1,0 +1,79 @@
+//! NVSHMEM-style one-sided access model (§3.1.4 "peer-memory access and
+//! synchronization").
+//!
+//! NVSHMEM's public API performs, on every remote access, a global-memory
+//! load (`__ldg`) to fetch the peer address and a group synchronization
+//! (`__syncthreads`). PK keeps peer addresses in registers and drops the
+//! unnecessary syncs, which the paper measures as **4.5× lower
+//! element-wise NVLink access latency and ~20 GB/s higher bandwidth
+//! utilization**. This module encodes both costs so the µ2 exhibit can be
+//! regenerated and so an NVSHMEM-flavoured transfer can be used as a
+//! baseline inside kernels.
+
+use crate::hw::spec::GpuSpec;
+use crate::xfer::curves;
+
+/// Library flavor for peer access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeerApi {
+    /// NVSHMEM public API: `__ldg` address fetch + group sync per access.
+    Nvshmem,
+    /// PK: peer address pinned in registers, no extra synchronization.
+    Pk,
+}
+
+/// The latency-multiplier the `__ldg` + `__syncthreads` pair adds to an
+/// element-wise remote access (paper: 4.5×).
+pub const NVSHMEM_LATENCY_FACTOR: f64 = 4.5;
+
+/// Bandwidth lost to per-access overheads (paper: ~20 GB/s).
+pub const NVSHMEM_BW_PENALTY: f64 = 20e9;
+
+/// Element-wise remote access latency (seconds) through each API.
+/// The base access is one NVLink round trip.
+pub fn elementwise_latency(spec: &GpuSpec, api: PeerApi) -> f64 {
+    let base = spec.nvlink_latency;
+    match api {
+        PeerApi::Pk => base,
+        PeerApi::Nvshmem => base * NVSHMEM_LATENCY_FACTOR,
+    }
+}
+
+/// Achievable register-op bandwidth through each API (bytes/s), for
+/// `msg_bytes` messages issued from `n_sms` SMs.
+pub fn reg_bandwidth(spec: &GpuSpec, api: PeerApi, msg_bytes: f64, n_sms: f64) -> f64 {
+    let pk = curves::reg_rate(spec, msg_bytes, n_sms);
+    match api {
+        PeerApi::Pk => pk,
+        PeerApi::Nvshmem => (pk - NVSHMEM_BW_PENALTY).max(pk * 0.25),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_factor_matches_paper() {
+        let g = GpuSpec::h100();
+        let pk = elementwise_latency(&g, PeerApi::Pk);
+        let nv = elementwise_latency(&g, PeerApi::Nvshmem);
+        assert!((nv / pk - 4.5).abs() < 1e-12, "paper: 4.5x lower latency with PK");
+    }
+
+    #[test]
+    fn bandwidth_penalty_about_20gbps() {
+        let g = GpuSpec::h100();
+        let pk = reg_bandwidth(&g, PeerApi::Pk, 1e6, 132.0);
+        let nv = reg_bandwidth(&g, PeerApi::Nvshmem, 1e6, 132.0);
+        assert!((pk - nv - 20e9).abs() < 1e6, "~20 GB/s gap, got {}", (pk - nv) / 1e9);
+    }
+
+    #[test]
+    fn penalty_never_negative() {
+        let g = GpuSpec::h100();
+        // tiny message, single SM: pk rate is small but nvshmem stays positive
+        let nv = reg_bandwidth(&g, PeerApi::Nvshmem, 64.0, 1.0);
+        assert!(nv > 0.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Leader/worker coordinator: drives multi-device functional runs with one
+//! OS thread per simulated device (the torchrun-style multi-process model
+//! of Appendix E, collapsed into threads sharing a memory pool the way
+//! CUDA IPC shares device memory).
+
+pub mod node;
+
+pub use node::{Node, NodeMetrics};

@@ -1,0 +1,318 @@
+//! The threaded node executor: one OS thread per plan worker, shared
+//! memory pool, condvar-backed semaphores.
+//!
+//! This is the "leader + workers" runtime the examples and the end-to-end
+//! driver run on: the leader (caller) owns allocation, plan construction,
+//! and the PJRT runtime; worker threads execute their op streams
+//! concurrently and synchronize exactly through the plan's semaphores —
+//! the same protocol the simulator times and the functional executor
+//! verifies, now actually racing. PJRT clients are not `Send`, so
+//! `RunArtifact` effects are proxied over a channel to a service loop on
+//! the leader thread (the paper's host process owning the CUDA context,
+//! Appendix E).
+
+use crate::exec::functional::apply_effect;
+use crate::mem::MemPool;
+use crate::plan::{Op, Plan};
+use crate::runtime::{ArtifactRunner, Runtime};
+use crate::util::linalg::OnlineSoftmaxState;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Execution statistics of one node run.
+#[derive(Clone, Debug, Default)]
+pub struct NodeMetrics {
+    /// Wall-clock of the threaded run.
+    pub wall: Duration,
+    /// Ops executed per worker.
+    pub ops_per_worker: Vec<usize>,
+    /// PJRT artifact invocations (name -> calls).
+    pub artifact_calls: HashMap<String, u64>,
+}
+
+struct Shared {
+    pool: Mutex<MemPool>,
+    sems: Mutex<Vec<u64>>,
+    cv: Condvar,
+    failed: Mutex<Option<String>>,
+}
+
+/// A request to the leader-side PJRT service loop.
+struct RtReq {
+    name: String,
+    inputs: Vec<(Vec<f32>, Vec<usize>)>,
+    reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+}
+
+/// Channel-backed [`ArtifactRunner`] used inside worker threads.
+struct RtProxy {
+    tx: mpsc::Sender<RtReq>,
+}
+
+impl ArtifactRunner for RtProxy {
+    fn run_artifact(&mut self, name: &str, inputs: &[(Vec<f32>, Vec<usize>)]) -> Result<Vec<Vec<f32>>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(RtReq { name: name.to_string(), inputs: inputs.to_vec(), reply: reply_tx })
+            .map_err(|_| anyhow!("runtime service loop gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
+    }
+}
+
+/// A multi-device node executing plans with real thread-per-worker
+/// parallelism.
+pub struct Node {
+    pub spec: crate::hw::spec::NodeSpec,
+    shared: Arc<Shared>,
+    runtime: Option<Runtime>,
+}
+
+/// Maximum time a worker may block on one semaphore before the run is
+/// declared wedged (protects tests against malformed plans).
+const WAIT_TIMEOUT: Duration = Duration::from_secs(30);
+
+impl Node {
+    pub fn new(spec: crate::hw::spec::NodeSpec, pool: MemPool) -> Self {
+        Node {
+            spec,
+            shared: Arc::new(Shared {
+                pool: Mutex::new(pool),
+                sems: Mutex::new(vec![]),
+                cv: Condvar::new(),
+                failed: Mutex::new(None),
+            }),
+            runtime: None,
+        }
+    }
+
+    /// Attach a PJRT runtime (enables `Effect::RunArtifact`).
+    pub fn with_runtime(spec: crate::hw::spec::NodeSpec, pool: MemPool, runtime: Runtime) -> Self {
+        let mut n = Node::new(spec, pool);
+        n.runtime = Some(runtime);
+        n
+    }
+
+    /// Access the pool (leader-side setup/inspection).
+    pub fn pool(&self) -> std::sync::MutexGuard<'_, MemPool> {
+        self.shared.pool.lock().unwrap()
+    }
+
+    /// Execute a plan with one thread per worker. The leader thread serves
+    /// PJRT requests while workers run.
+    pub fn run_plan(&mut self, plan: &Plan) -> Result<NodeMetrics> {
+        {
+            let mut sems = self.shared.sems.lock().unwrap();
+            *sems = plan.sems.clone();
+            *self.shared.failed.lock().unwrap() = None;
+        }
+        let start = Instant::now();
+        let n_workers = plan.workers.len();
+        let mut ops_per_worker = vec![0usize; n_workers];
+        let (rt_tx, rt_rx) = mpsc::channel::<RtReq>();
+        let has_rt = self.runtime.is_some();
+        let runtime = &mut self.runtime;
+        let shared = &self.shared;
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = vec![];
+            for wp in plan.workers.iter() {
+                let shared = Arc::clone(shared);
+                let rt_tx = rt_tx.clone();
+                handles.push(scope.spawn(move || -> Result<usize> {
+                    let mut proxy = has_rt.then(|| RtProxy { tx: rt_tx });
+                    run_worker(&shared, wp, &mut proxy)
+                }));
+            }
+            drop(rt_tx); // service loop ends when all workers finish
+            if let Some(rt) = runtime.as_mut() {
+                for req in rt_rx.iter() {
+                    let res = rt.execute(&req.name, &req.inputs);
+                    let _ = req.reply.send(res);
+                }
+            }
+            for (wi, h) in handles.into_iter().enumerate() {
+                match h.join() {
+                    Ok(Ok(n)) => ops_per_worker[wi] = n,
+                    Ok(Err(e)) => return Err(e),
+                    Err(_) => bail!("worker {wi} panicked"),
+                }
+            }
+            Ok(())
+        })?;
+        if let Some(msg) = self.shared.failed.lock().unwrap().clone() {
+            bail!("node run failed: {msg}");
+        }
+        let artifact_calls =
+            self.runtime.as_ref().map(|rt| rt.call_counts.clone()).unwrap_or_default();
+        Ok(NodeMetrics { wall: start.elapsed(), ops_per_worker, artifact_calls })
+    }
+}
+
+fn run_worker(shared: &Shared, wp: &crate::plan::WorkerPlan, proxy: &mut Option<RtProxy>) -> Result<usize> {
+    let mut executed = 0usize;
+    let mut local_states: Vec<OnlineSoftmaxState> = vec![];
+    for (oi, op) in wp.ops.iter().enumerate() {
+        if shared.failed.lock().unwrap().is_some() {
+            return Ok(executed);
+        }
+        match op {
+            Op::Compute { effect, .. } | Op::Transfer { effect, .. } => {
+                if let Some(e) = effect {
+                    let mut pool = shared.pool.lock().unwrap();
+                    let res = apply_effect(
+                        &mut pool,
+                        proxy.as_mut().map(|p| p as &mut dyn ArtifactRunner),
+                        &mut local_states,
+                        e,
+                    );
+                    drop(pool);
+                    if let Err(err) = res {
+                        let msg = format!("{}@op{}: {err:#}", wp.label, oi);
+                        *shared.failed.lock().unwrap() = Some(msg.clone());
+                        shared.cv.notify_all();
+                        return Err(anyhow!(msg));
+                    }
+                }
+                if let Op::Transfer { done_sem: Some(s), .. } = op {
+                    let mut sems = shared.sems.lock().unwrap();
+                    sems[s.0] += 1;
+                    shared.cv.notify_all();
+                }
+                executed += 1;
+            }
+            Op::Wait { sem, value } => {
+                let mut sems = shared.sems.lock().unwrap();
+                let deadline = Instant::now() + WAIT_TIMEOUT;
+                while sems[sem.0] < *value {
+                    if shared.failed.lock().unwrap().is_some() {
+                        return Ok(executed);
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        let msg = format!("{}: wedged waiting sem{} >= {value}", wp.label, sem.0);
+                        *shared.failed.lock().unwrap() = Some(msg.clone());
+                        shared.cv.notify_all();
+                        return Err(anyhow!(msg));
+                    }
+                    let (guard, _) = shared.cv.wait_timeout(sems, deadline - now).unwrap();
+                    sems = guard;
+                }
+                executed += 1;
+            }
+            Op::Signal { sem, value, .. } => {
+                let mut sems = shared.sems.lock().unwrap();
+                sems[sem.0] += value;
+                shared.cv.notify_all();
+                executed += 1;
+            }
+            Op::Delay { .. } => {
+                executed += 1;
+            }
+        }
+    }
+    Ok(executed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::spec::NodeSpec;
+    use crate::hw::DeviceId;
+    use crate::mem::tile::Shape4;
+    use crate::plan::{Effect, MatView, Role, SyncScope};
+    use crate::util::seeded_vec;
+
+    #[test]
+    fn threaded_run_matches_functional() {
+        // NCCL ring all-reduce under real thread interleaving must still
+        // produce the elementwise sum.
+        let n = 4;
+        let (rows, cols) = (n * 2, 5);
+        let mut pool = MemPool::new();
+        let mut bufs = vec![];
+        let mut inits = vec![];
+        for d in 0..n {
+            let data = seeded_vec(d as u64 + 3, rows * cols);
+            inits.push(data.clone());
+            bufs.push(pool.alloc_init(DeviceId(d), Shape4::mat(rows, cols), data));
+        }
+        let node_spec = NodeSpec::test_node(n);
+        let ctx = crate::comm::nccl::RingCtx {
+            node: &node_spec,
+            model: crate::comm::nccl::NcclModel::default(),
+            replicas: bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect(),
+        };
+        let mut plan = Plan::new();
+        crate::comm::nccl::ring_all_reduce(&mut plan, &ctx);
+        let mut node = Node::new(node_spec, pool);
+        let metrics = node.run_plan(&plan).unwrap();
+        assert_eq!(metrics.ops_per_worker.len(), plan.workers.len());
+        let mut want = vec![0.0f32; rows * cols];
+        for v in &inits {
+            for (w, x) in want.iter_mut().zip(v) {
+                *w += x;
+            }
+        }
+        let pool = node.pool();
+        for &b in &bufs {
+            crate::util::assert_allclose(&pool.get(b).data, &want, 1e-5, 1e-6);
+        }
+    }
+
+    #[test]
+    fn threaded_signal_wait_ordering() {
+        let mut pool = MemPool::new();
+        let a = pool.alloc(DeviceId(0), Shape4::mat(1, 1));
+        let b = pool.alloc(DeviceId(1), Shape4::mat(1, 1));
+        pool.get_mut(a).data[0] = 7.0;
+        let mut plan = Plan::new();
+        let s = plan.add_sem(0);
+        let w0 = plan.add_worker(DeviceId(0), Role::ComputeSm, "producer");
+        let w1 = plan.add_worker(DeviceId(1), Role::ComputeSm, "consumer");
+        plan.push(w0, Op::Signal { sem: s, value: 1, scope: SyncScope::InterDevice });
+        plan.push(w1, Op::Wait { sem: s, value: 1 });
+        plan.push(
+            w1,
+            Op::Compute {
+                dur: 0.0,
+                label: "copy",
+                effect: Some(Effect::CopyMat {
+                    src: MatView::full2d(a, 1, 1),
+                    dst: MatView::full2d(b, 1, 1),
+                    reduce: None,
+                }),
+            },
+        );
+        let mut node = Node::new(NodeSpec::test_node(2), pool);
+        node.run_plan(&plan).unwrap();
+        assert_eq!(node.pool().get(b).data[0], 7.0);
+    }
+
+    #[test]
+    fn artifact_without_runtime_errors() {
+        let mut pool = MemPool::new();
+        let a = pool.alloc(DeviceId(0), Shape4::mat(2, 2));
+        let mut plan = Plan::new();
+        let w = plan.add_worker(DeviceId(0), Role::ComputeSm, "bad");
+        plan.push(
+            w,
+            Op::Compute {
+                dur: 0.0,
+                label: "bad_artifact",
+                effect: Some(Effect::RunArtifact {
+                    name: "missing".into(),
+                    inputs: vec![MatView::full2d(a, 2, 2)],
+                    outputs: vec![MatView::full2d(a, 2, 2)],
+                }),
+            },
+        );
+        let mut node = Node::new(NodeSpec::test_node(1), pool);
+        let err = match node.run_plan(&plan) {
+            Ok(_) => panic!("should fail"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("runtime") || err.to_string().contains("artifact"), "{err}");
+    }
+}

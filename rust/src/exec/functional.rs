@@ -1,0 +1,465 @@
+//! Functional (numerics) executor.
+//!
+//! Cooperatively schedules the plan's workers, applying each op's
+//! [`Effect`] to the [`MemPool`]. Semaphores have exact counting semantics
+//! with zero latency; transfers complete at issue. The executor therefore
+//! checks two things at once: the kernel's *data* semantics, and that its
+//! synchronization protocol admits a deadlock-free execution.
+//!
+//! Worker interleaving is deterministic round-robin by default; property
+//! tests use [`FunctionalExec::with_rotation`] to explore different
+//! interleavings (plans must be correct under all of them).
+
+use crate::mem::pgl::ReduceOp;
+use crate::mem::MemPool;
+use crate::plan::{Effect, MatView, Op, Plan};
+use crate::runtime::{ArtifactRunner, Runtime};
+use crate::util::linalg::{self, OnlineSoftmaxState};
+use anyhow::{bail, Context, Result};
+
+/// Executes plans functionally against a memory pool.
+pub struct FunctionalExec<'a> {
+    pool: &'a mut MemPool,
+    runtime: Option<&'a mut dyn ArtifactRunner>,
+    /// Rotate worker stepping order by this much each round (interleaving
+    /// exploration for tests).
+    rotation: usize,
+}
+
+/// Read a view into a dense rows×cols vector.
+pub fn read_view(pool: &MemPool, v: &MatView) -> Vec<f32> {
+    let buf = pool.get(v.buf);
+    let shape = buf.shape;
+    assert!(v.row0 + v.rows <= shape.r, "view rows out of bounds: {v:?} in {shape:?}");
+    assert!(v.col0 + v.cols <= shape.c, "view cols out of bounds: {v:?} in {shape:?}");
+    let mut out = Vec::with_capacity(v.rows * v.cols);
+    for r in 0..v.rows {
+        let start = shape.offset(v.b, v.d, v.row0 + r, v.col0);
+        out.extend_from_slice(&buf.data[start..start + v.cols]);
+    }
+    out
+}
+
+/// Write a dense rows×cols vector into a view, optionally reducing.
+pub fn write_view(pool: &mut MemPool, v: &MatView, data: &[f32], reduce: Option<ReduceOp>) {
+    assert_eq!(data.len(), v.rows * v.cols, "view write size mismatch");
+    let buf = pool.get_mut(v.buf);
+    let shape = buf.shape;
+    assert!(v.row0 + v.rows <= shape.r && v.col0 + v.cols <= shape.c, "view out of bounds");
+    for r in 0..v.rows {
+        let start = shape.offset(v.b, v.d, v.row0 + r, v.col0);
+        let dst = &mut buf.data[start..start + v.cols];
+        let src = &data[r * v.cols..(r + 1) * v.cols];
+        match reduce {
+            None => dst.copy_from_slice(src),
+            Some(ReduceOp::Add) => dst.iter_mut().zip(src).for_each(|(d, s)| *d += s),
+            Some(ReduceOp::Max) => dst.iter_mut().zip(src).for_each(|(d, s)| *d = d.max(*s)),
+            Some(ReduceOp::Min) => dst.iter_mut().zip(src).for_each(|(d, s)| *d = d.min(*s)),
+        }
+    }
+}
+
+impl<'a> FunctionalExec<'a> {
+    pub fn new(pool: &'a mut MemPool) -> Self {
+        FunctionalExec { pool, runtime: None, rotation: 0 }
+    }
+
+    /// Attach the PJRT runtime so `Effect::RunArtifact` ops can execute.
+    pub fn with_runtime(pool: &'a mut MemPool, runtime: &'a mut Runtime) -> Self {
+        FunctionalExec { pool, runtime: Some(runtime as &mut dyn ArtifactRunner), rotation: 0 }
+    }
+
+    /// Rotate the round-robin stepping order (interleaving exploration).
+    pub fn with_rotation(mut self, rotation: usize) -> Self {
+        self.rotation = rotation;
+        self
+    }
+
+    /// Run the plan to completion. Errors on deadlock or on an effect that
+    /// cannot be applied.
+    pub fn run(&mut self, plan: &Plan) -> Result<()> {
+        let n = plan.workers.len();
+        let mut pc = vec![0usize; n];
+        let mut sems: Vec<u64> = plan.sems.clone();
+        let mut states: Vec<OnlineSoftmaxState> = Vec::new();
+        let mut done = 0usize;
+        let mut round = 0usize;
+        while done < n {
+            let mut progressed = false;
+            for i in 0..n {
+                let w = (i + self.rotation * round) % n;
+                let ops = &plan.workers[w].ops;
+                // Step this worker as far as it can go this round.
+                while pc[w] < ops.len() {
+                    match &ops[pc[w]] {
+                        Op::Compute { effect, .. } | Op::Transfer { effect, .. } => {
+                            if let Some(e) = effect.as_ref() {
+                                self.apply(e, &mut states, plan)
+                                    .with_context(|| format!("worker {} ({}) op {}", w, plan.workers[w].label, pc[w]))?;
+                            }
+                            // Transfers also signal their completion sem.
+                            if let Op::Transfer { done_sem: Some(s), .. } = &ops[pc[w]] {
+                                sems[s.0] += 1;
+                            }
+                            pc[w] += 1;
+                            progressed = true;
+                        }
+                        Op::Wait { sem, value } => {
+                            if sems[sem.0] >= *value {
+                                pc[w] += 1;
+                                progressed = true;
+                            } else {
+                                break; // blocked; try next worker
+                            }
+                        }
+                        Op::Signal { sem, value, .. } => {
+                            sems[sem.0] += value;
+                            pc[w] += 1;
+                            progressed = true;
+                        }
+                        Op::Delay { .. } => {
+                            pc[w] += 1;
+                            progressed = true;
+                        }
+                    }
+                }
+                if pc[w] == ops.len() {
+                    // finished this round; count once
+                }
+            }
+            done = (0..n).filter(|&w| pc[w] == plan.workers[w].ops.len()).count();
+            if !progressed && done < n {
+                let stuck: Vec<String> = (0..n)
+                    .filter(|&w| pc[w] < plan.workers[w].ops.len())
+                    .map(|w| format!("{}@op{}: {:?}", plan.workers[w].label, pc[w], plan.workers[w].ops[pc[w]]))
+                    .collect();
+                bail!("plan deadlock; stuck workers: {stuck:#?}");
+            }
+            round += 1;
+        }
+        Ok(())
+    }
+
+    fn apply(&mut self, e: &Effect, states: &mut Vec<OnlineSoftmaxState>, _plan: &Plan) -> Result<()> {
+        apply_effect(self.pool, self.runtime.as_deref_mut().map(|r| r as &mut dyn ArtifactRunner), states, e)
+    }
+}
+
+/// Apply one effect to the pool (shared by [`FunctionalExec`] and the
+/// threaded [`crate::coordinator::Node`] executor).
+pub fn apply_effect(
+    pool: &mut MemPool,
+    mut runtime: Option<&mut dyn ArtifactRunner>,
+    states: &mut Vec<OnlineSoftmaxState>,
+    e: &Effect,
+) -> Result<()> {
+    {
+        match e {
+            Effect::CopyMat { src, dst, reduce } => {
+                let data = read_view(pool, src);
+                write_view(pool, dst, &data, *reduce);
+            }
+            Effect::MulticastMat { src, dsts, reduce } => {
+                let data = read_view(pool, src);
+                for d in dsts {
+                    write_view(pool, d, &data, *reduce);
+                }
+            }
+            Effect::LdReduceMat { srcs, dst, op } => {
+                let mut acc = read_view(pool, &srcs[0]);
+                for s in &srcs[1..] {
+                    let t = read_view(pool, s);
+                    for (a, v) in acc.iter_mut().zip(t) {
+                        match op {
+                            ReduceOp::Add => *a += v,
+                            ReduceOp::Max => *a = a.max(v),
+                            ReduceOp::Min => *a = a.min(v),
+                        }
+                    }
+                }
+                write_view(pool, dst, &acc, None);
+            }
+            Effect::Gemm { a, b, c, accumulate } => {
+                assert_eq!(a.cols, b.rows, "gemm inner dim");
+                assert_eq!(c.rows, a.rows, "gemm m");
+                assert_eq!(c.cols, b.cols, "gemm n");
+                let av = read_view(pool, a);
+                let bv = read_view(pool, b);
+                let out = linalg::matmul(&av, &bv, a.rows, b.cols, a.cols);
+                write_view(pool, c, &out, accumulate.then_some(ReduceOp::Add));
+            }
+            Effect::Gelu { x } => {
+                let mut data = read_view(pool, x);
+                linalg::gelu_inplace(&mut data);
+                write_view(pool, x, &data, None);
+            }
+            Effect::AttnBlock { q, k, v, state } => {
+                while states.len() <= state.0 {
+                    states.push(OnlineSoftmaxState::new(q.rows, q.cols));
+                }
+                let st = &mut states[state.0];
+                assert_eq!(st.s_q, q.rows);
+                assert_eq!(st.d, q.cols);
+                let qv = read_view(pool, q);
+                let kv = read_view(pool, k);
+                let vv = read_view(pool, v);
+                st.update(&qv, &kv, &vv, k.rows);
+            }
+            Effect::AttnFinalize { state, out } => {
+                let st = states
+                    .get(state.0)
+                    .context("attention state finalized before any block update")?;
+                write_view(pool, out, &st.finalize(), None);
+            }
+            Effect::GatherRows { src, rows, dst } => {
+                assert_eq!(rows.len(), dst.rows, "gather row count");
+                for (i, &r) in rows.iter().enumerate() {
+                    let row = read_view(pool, &src.sub(r, 0, 1, src.cols));
+                    write_view(pool, &dst.sub(i, 0, 1, dst.cols), &row, None);
+                }
+            }
+            Effect::ScatterRows { src, dst, rows, reduce } => {
+                assert_eq!(rows.len(), src.rows, "scatter row count");
+                for (i, &r) in rows.iter().enumerate() {
+                    let row = read_view(pool, &src.sub(i, 0, 1, src.cols));
+                    write_view(pool, &dst.sub(r, 0, 1, dst.cols), &row, *reduce);
+                }
+            }
+            Effect::RunArtifact { name, inputs, outputs } => {
+                let rt = runtime
+                    .as_deref_mut()
+                    .context("plan uses RunArtifact but no runtime attached")?;
+                let ins: Vec<(Vec<f32>, Vec<usize>)> = inputs
+                    .iter()
+                    .map(|v| (read_view(pool, v), vec![v.rows, v.cols]))
+                    .collect();
+                let outs = rt.run_artifact(name, &ins)?;
+                if outs.len() != outputs.len() {
+                    bail!("artifact {name}: expected {} outputs, got {}", outputs.len(), outs.len());
+                }
+                for (view, data) in outputs.iter().zip(outs) {
+                    if data.len() != view.rows * view.cols {
+                        bail!("artifact {name}: output size {} != view {}x{}", data.len(), view.rows, view.cols);
+                    }
+                    write_view(pool, view, &data, None);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::DeviceId;
+    use crate::mem::tile::Shape4;
+    use crate::plan::{Role, SyncScope};
+    use crate::util::seeded_vec;
+
+    fn mk_pool() -> MemPool {
+        MemPool::new()
+    }
+
+    #[test]
+    fn view_read_write_roundtrip() {
+        let mut pool = mk_pool();
+        let b = pool.alloc(DeviceId(0), Shape4::mat(8, 8));
+        let v = MatView::full2d(b, 8, 8).sub(2, 2, 4, 4);
+        let data: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        write_view(&mut pool, &v, &data, None);
+        assert_eq!(read_view(&pool, &v), data);
+        // reduce add
+        write_view(&mut pool, &v, &vec![1.0; 16], Some(ReduceOp::Add));
+        assert_eq!(read_view(&pool, &v)[0], 1.0);
+        assert_eq!(read_view(&pool, &v)[15], 16.0);
+    }
+
+    #[test]
+    fn copy_between_devices() {
+        let mut pool = mk_pool();
+        let a = pool.alloc_init(DeviceId(0), Shape4::mat(4, 4), seeded_vec(1, 16));
+        let b = pool.alloc(DeviceId(1), Shape4::mat(4, 4));
+        let mut plan = Plan::new();
+        let w = plan.add_worker(DeviceId(0), Role::ComputeSm, "w0");
+        plan.push(
+            w,
+            Op::Compute {
+                dur: 0.0,
+                label: "copy",
+                effect: Some(Effect::CopyMat {
+                    src: MatView::full2d(a, 4, 4),
+                    dst: MatView::full2d(b, 4, 4),
+                    reduce: None,
+                }),
+            },
+        );
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        assert_eq!(pool.get(a).data, pool.get(b).data);
+    }
+
+    #[test]
+    fn semaphores_order_cross_worker_ops() {
+        // w1 waits for w0's signal before copying; under any rotation the
+        // result must be the post-increment value.
+        for rot in 0..3 {
+            let mut pool = mk_pool();
+            let a = pool.alloc(DeviceId(0), Shape4::mat(1, 1));
+            let b = pool.alloc(DeviceId(1), Shape4::mat(1, 1));
+            let mut plan = Plan::new();
+            let s = plan.add_sem(0);
+            let w0 = plan.add_worker(DeviceId(0), Role::ComputeSm, "w0");
+            let w1 = plan.add_worker(DeviceId(1), Role::ComputeSm, "w1");
+            // w0: write 42 into a, then signal
+            plan.push(
+                w0,
+                Op::Compute {
+                    dur: 0.0,
+                    label: "init",
+                    effect: Some(Effect::CopyMat {
+                        src: MatView::full2d(a, 1, 1), // will be overwritten below
+                        dst: MatView::full2d(a, 1, 1),
+                        reduce: None,
+                    }),
+                },
+            );
+            pool.get_mut(a).data[0] = 42.0;
+            plan.push(w0, Op::Signal { sem: s, value: 1, scope: SyncScope::InterDevice });
+            // w1: wait then copy a -> b
+            plan.push(w1, Op::Wait { sem: s, value: 1 });
+            plan.push(
+                w1,
+                Op::Compute {
+                    dur: 0.0,
+                    label: "copy",
+                    effect: Some(Effect::CopyMat {
+                        src: MatView::full2d(a, 1, 1),
+                        dst: MatView::full2d(b, 1, 1),
+                        reduce: None,
+                    }),
+                },
+            );
+            FunctionalExec::new(&mut pool).with_rotation(rot).run(&plan).unwrap();
+            assert_eq!(pool.get(b).data[0], 42.0);
+        }
+    }
+
+    #[test]
+    fn deadlock_is_detected() {
+        let mut pool = mk_pool();
+        let mut plan = Plan::new();
+        let s = plan.add_sem(0);
+        let w = plan.add_worker(DeviceId(0), Role::ComputeSm, "w0");
+        plan.push(w, Op::Wait { sem: s, value: 1 }); // never signalled
+        let err = FunctionalExec::new(&mut pool).run(&plan).unwrap_err();
+        assert!(err.to_string().contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn gemm_effect_matches_linalg() {
+        let mut pool = mk_pool();
+        let (m, n, k) = (8, 12, 16);
+        let a = pool.alloc_init(DeviceId(0), Shape4::mat(m, k), seeded_vec(1, m * k));
+        let b = pool.alloc_init(DeviceId(0), Shape4::mat(k, n), seeded_vec(2, k * n));
+        let c = pool.alloc(DeviceId(0), Shape4::mat(m, n));
+        let mut plan = Plan::new();
+        let w = plan.add_worker(DeviceId(0), Role::ComputeSm, "mm");
+        plan.push(
+            w,
+            Op::Compute {
+                dur: 0.0,
+                label: "mma",
+                effect: Some(Effect::Gemm {
+                    a: MatView::full2d(a, m, k),
+                    b: MatView::full2d(b, k, n),
+                    c: MatView::full2d(c, m, n),
+                    accumulate: false,
+                }),
+            },
+        );
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        let want = linalg::matmul(&pool.get(a).data, &pool.get(b).data, m, n, k);
+        crate::util::assert_allclose(&pool.get(c).data, &want, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn attention_effects_match_reference() {
+        let mut pool = mk_pool();
+        let (s_q, s_kv, d) = (8, 24, 16);
+        let q = pool.alloc_init(DeviceId(0), Shape4::mat(s_q, d), seeded_vec(3, s_q * d));
+        let k = pool.alloc_init(DeviceId(0), Shape4::mat(s_kv, d), seeded_vec(4, s_kv * d));
+        let v = pool.alloc_init(DeviceId(0), Shape4::mat(s_kv, d), seeded_vec(5, s_kv * d));
+        let o = pool.alloc(DeviceId(0), Shape4::mat(s_q, d));
+        let mut plan = Plan::new();
+        let st = plan.add_state();
+        let w = plan.add_worker(DeviceId(0), Role::ComputeSm, "attn");
+        for blk in 0..3 {
+            plan.push(
+                w,
+                Op::Compute {
+                    dur: 0.0,
+                    label: "attn_blk",
+                    effect: Some(Effect::AttnBlock {
+                        q: MatView::full2d(q, s_q, d),
+                        k: MatView::full2d(k, s_kv, d).sub(blk * 8, 0, 8, d),
+                        v: MatView::full2d(v, s_kv, d).sub(blk * 8, 0, 8, d),
+                        state: st,
+                    }),
+                },
+            );
+        }
+        plan.push(
+            w,
+            Op::Compute {
+                dur: 0.0,
+                label: "attn_fin",
+                effect: Some(Effect::AttnFinalize { state: st, out: MatView::full2d(o, s_q, d) }),
+            },
+        );
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        let want = linalg::attention_ref(&pool.get(q).data, &pool.get(k).data, &pool.get(v).data, s_q, s_kv, d);
+        crate::util::assert_allclose(&pool.get(o).data, &want, 1e-5, 1e-6);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut pool = mk_pool();
+        let src = pool.alloc_init(DeviceId(0), Shape4::mat(6, 4), seeded_vec(6, 24));
+        let mid = pool.alloc(DeviceId(1), Shape4::mat(3, 4));
+        let dst = pool.alloc(DeviceId(0), Shape4::mat(6, 4));
+        let rows = vec![4usize, 0, 2];
+        let mut plan = Plan::new();
+        let w = plan.add_worker(DeviceId(0), Role::ComputeSm, "gs");
+        plan.push(
+            w,
+            Op::Compute {
+                dur: 0.0,
+                label: "gather",
+                effect: Some(Effect::GatherRows {
+                    src: MatView::full2d(src, 6, 4),
+                    rows: rows.clone(),
+                    dst: MatView::full2d(mid, 3, 4),
+                }),
+            },
+        );
+        plan.push(
+            w,
+            Op::Compute {
+                dur: 0.0,
+                label: "scatter",
+                effect: Some(Effect::ScatterRows {
+                    src: MatView::full2d(mid, 3, 4),
+                    dst: MatView::full2d(dst, 6, 4),
+                    rows: rows.clone(),
+                    reduce: None,
+                }),
+            },
+        );
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        for &r in &rows {
+            let a = read_view(&pool, &MatView::full2d(src, 6, 4).sub(r, 0, 1, 4));
+            let b = read_view(&pool, &MatView::full2d(dst, 6, 4).sub(r, 0, 1, 4));
+            assert_eq!(a, b);
+        }
+    }
+}

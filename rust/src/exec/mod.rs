@@ -1,0 +1,15 @@
+//! Plan executors.
+//!
+//! * [`functional`] — applies every op's [`crate::plan::Effect`] to real
+//!   buffers, cooperatively scheduling workers through the plan's
+//!   semaphores. It is the *numerical* semantics of a kernel (and also
+//!   validates that the plan's synchronization is deadlock-free).
+//! * [`timed`] — the discrete-event timing semantics: compute durations,
+//!   max-min fair bandwidth sharing over NVLink ports, copy engines, HBM,
+//!   and the sync latencies of §3.1.3.
+
+pub mod functional;
+pub mod timed;
+
+pub use functional::FunctionalExec;
+pub use timed::{TimedExec, TimedResult};

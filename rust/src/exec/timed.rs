@@ -1,0 +1,513 @@
+//! Timed (discrete-event) executor.
+//!
+//! Implements the paper's cost model (§3.1.1) operationally:
+//! `T_kernel = T_launch + max(T_comp, T_mem, T_comm) + T_non-overlap + T_sync`
+//! emerges from simulating workers, flows, and synchronization rather than
+//! being asserted — overlap happens when the plan issues transfers
+//! asynchronously, and serialization/backpressure happen through semaphores
+//! and port contention.
+
+use crate::hw::spec::NodeSpec;
+use crate::hw::topology::{Port, Topology};
+use crate::plan::{Op, Plan, Route, SyncScope, TransferSpec};
+use crate::sim::flownet::{FlowId, FlowNet};
+use crate::sim::trace::{SpanKind, Trace};
+use crate::sim::EventQueue;
+use crate::xfer::curves;
+use std::collections::HashMap;
+
+/// Result of a timed run.
+#[derive(Debug)]
+pub struct TimedResult {
+    /// Total wall-clock time of the kernel (T_kernel).
+    pub total_time: f64,
+    /// Total compute-busy time across workers (Σ per-worker T_comp).
+    pub compute_busy: f64,
+    /// Total bytes that crossed each port.
+    pub port_bytes: HashMap<Port, f64>,
+    /// Optional execution trace.
+    pub trace: Trace,
+    /// Number of simulation events processed (perf instrumentation).
+    pub events: u64,
+}
+
+impl TimedResult {
+    /// Bytes that left device `d` over NVLink.
+    pub fn egress_bytes(&self, d: usize) -> f64 {
+        self.port_bytes
+            .get(&Port::Egress(crate::hw::DeviceId(d)))
+            .copied()
+            .unwrap_or(0.0)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum WState {
+    Ready,
+    Running,     // compute/delay in flight
+    BlockedSem,  // waiting on a semaphore
+    BlockedFlow, // blocking transfer in flight
+    Done,
+}
+
+enum Ev {
+    WorkerDone(usize),
+    SemBump { sem: usize, value: u64 },
+    FlowStart { ctx: usize },
+}
+
+struct FlowCtx {
+    spec: TransferSpec,
+    done_sem: Option<usize>,
+    done_scope: SyncScope,
+    blocking_worker: Option<usize>,
+    issuer: usize,
+    issue_time: f64,
+    label: &'static str,
+    started: Option<FlowId>,
+}
+
+/// The timed executor.
+pub struct TimedExec {
+    pub node: NodeSpec,
+    pub trace_enabled: bool,
+}
+
+impl TimedExec {
+    pub fn new(node: NodeSpec) -> Self {
+        TimedExec { node, trace_enabled: false }
+    }
+
+    pub fn with_trace(mut self) -> Self {
+        self.trace_enabled = true;
+        self
+    }
+
+    fn scope_latency(&self, s: SyncScope) -> f64 {
+        let g = &self.node.gpu;
+        match s {
+            SyncScope::IntraSm => g.mbarrier_sync,
+            SyncScope::InterSm => g.hbm_sync,
+            SyncScope::InterDevice => g.nvlink_signal,
+        }
+    }
+
+    fn flow_ports(&self, topo: &Topology, route: Route) -> Vec<Port> {
+        match route {
+            Route::P2p { src, dst } => topo.p2p_ports(src, dst),
+            Route::Multicast { src } => topo.multicast_ports(src),
+            Route::LdReduce { reader } => topo.ld_reduce_ports(reader),
+            Route::LocalHbm { dev } => vec![Port::Hbm(dev)],
+            Route::CopyEngineP2p { src, dst } => {
+                let mut p = vec![Port::CopyEngine(src)];
+                p.extend(topo.p2p_ports(src, dst));
+                p
+            }
+        }
+    }
+
+    fn flow_cap(&self, spec: &TransferSpec) -> f64 {
+        match spec.route {
+            // Staging/reshape passes are HBM-bound: one read + one write.
+            Route::LocalHbm { .. } => self.node.gpu.hbm_bw / 2.0,
+            _ => curves::rate(&self.node.gpu, spec.mech, spec.msg_bytes, spec.n_sms),
+        }
+    }
+
+    /// Run the plan and return timing + accounting.
+    pub fn run(&self, plan: &Plan) -> TimedResult {
+        let g = &self.node.gpu;
+        let topo = Topology::new(self.node.num_devices, self.node.nvswitch);
+        let mut net = FlowNet::new();
+        for d in topo.devices() {
+            net.set_capacity(Port::Egress(d), g.nvlink_bw);
+            net.set_capacity(Port::Ingress(d), g.nvlink_bw);
+            net.set_capacity(Port::Pcie(d), g.pcie_bw);
+            net.set_capacity(Port::Hbm(d), g.hbm_bw);
+            net.set_capacity(Port::CopyEngine(d), g.nvlink_bw * g.ce_peak_frac);
+            net.set_capacity(Port::SwitchReduce(d), g.nvlink_bw);
+        }
+
+        let n = plan.workers.len();
+        let mut pc = vec![0usize; n];
+        let mut wstate = vec![WState::Ready; n];
+        let mut sems: Vec<u64> = plan.sems.clone();
+        // sem -> waiting (worker, threshold)
+        let mut waiters: Vec<Vec<(usize, u64)>> = vec![vec![]; plan.sems.len()];
+        let mut queue: EventQueue<Ev> = EventQueue::new();
+        let mut flow_ctxs: Vec<FlowCtx> = vec![];
+        let mut active_flows: HashMap<FlowId, usize> = HashMap::new();
+        let mut trace = Trace::new(self.trace_enabled);
+        let mut now = plan.launch_overhead.max(0.0);
+        let mut events: u64 = 0;
+        let mut compute_busy = 0.0;
+
+        // Ready queue avoids recursion when semaphore bumps cascade.
+        let mut ready: std::collections::VecDeque<usize> = (0..n).collect();
+
+        macro_rules! step_worker {
+            ($w:expr) => {{
+                let w: usize = $w;
+                loop {
+                    if pc[w] >= plan.workers[w].ops.len() {
+                        wstate[w] = WState::Done;
+                        break;
+                    }
+                    match &plan.workers[w].ops[pc[w]] {
+                        Op::Compute { dur, label, .. } => {
+                            compute_busy += dur;
+                            trace.record(w, SpanKind::Compute, label, now, now + dur);
+                            wstate[w] = WState::Running;
+                            queue.push(now + dur, Ev::WorkerDone(w));
+                            break;
+                        }
+                        Op::Delay { dur, label } => {
+                            trace.record(w, SpanKind::Launch, label, now, now + dur);
+                            wstate[w] = WState::Running;
+                            queue.push(now + dur, Ev::WorkerDone(w));
+                            break;
+                        }
+                        Op::Transfer { spec, blocking, done_sem, done_scope, label, .. } => {
+                            let lat = curves::flow_latency(g, spec.mech);
+                            let ctx = FlowCtx {
+                                spec: spec.clone(),
+                                done_sem: done_sem.map(|s| s.0),
+                                done_scope: *done_scope,
+                                blocking_worker: blocking.then_some(w),
+                                issuer: w,
+                                issue_time: now,
+                                label,
+                                started: None,
+                            };
+                            flow_ctxs.push(ctx);
+                            queue.push(now + lat, Ev::FlowStart { ctx: flow_ctxs.len() - 1 });
+                            if *blocking {
+                                wstate[w] = WState::BlockedFlow;
+                                break;
+                            } else {
+                                pc[w] += 1;
+                            }
+                        }
+                        Op::Wait { sem, value } => {
+                            if sems[sem.0] >= *value {
+                                pc[w] += 1;
+                            } else {
+                                waiters[sem.0].push((w, *value));
+                                wstate[w] = WState::BlockedSem;
+                                break;
+                            }
+                        }
+                        Op::Signal { sem, value, scope } => {
+                            let lat = self.scope_latency(*scope);
+                            queue.push(now + lat, Ev::SemBump { sem: sem.0, value: *value });
+                            pc[w] += 1;
+                        }
+                    }
+                }
+            }};
+        }
+
+        loop {
+            // Drain the ready queue at the current time.
+            while let Some(w) = ready.pop_front() {
+                if wstate[w] == WState::Ready {
+                    step_worker!(w);
+                }
+            }
+            // The kernel is finished only when every worker has retired
+            // *and* all in-flight asynchronous transfers have drained
+            // (async stores issued without a completion wait still take
+            // wall-clock time — the pipeline drain of §3.1.1's T_launch
+            // teardown).
+            if (0..n).all(|w| wstate[w] == WState::Done)
+                && net.n_active() == 0
+                && queue.is_empty()
+            {
+                break;
+            }
+            // Find the next moment something happens. Work in *deltas*:
+            // round-tripping completion times through absolute `now`
+            // loses sub-ulp residues and can livelock the loop.
+            let dt_timer = queue.peek_time().map(|t| (t - now).max(0.0));
+            let dt_flow = net.next_completion();
+            let dt = match (dt_timer, dt_flow) {
+                (Some(a), Some(b)) => a.min(b),
+                (Some(a), None) => a,
+                (None, Some(b)) => b,
+                (None, None) => {
+                    let stuck: Vec<&str> = (0..n)
+                        .filter(|&w| wstate[w] != WState::Done)
+                        .map(|w| plan.workers[w].label.as_str())
+                        .collect();
+                    panic!("timed deadlock at t={now}: stuck workers {stuck:?}");
+                }
+            };
+            // Advance flows by exactly dt (flows whose completion falls in
+            // the window complete even if fp leaves a residue).
+            let completed = net.advance(dt);
+            now += dt;
+            events += 1;
+            for fid in completed {
+                let ci = active_flows.remove(&fid).expect("unknown flow");
+                let ctx = &flow_ctxs[ci];
+                trace.record(ctx.issuer, SpanKind::Comm, ctx.label, ctx.issue_time, now);
+                if let Some(s) = ctx.done_sem {
+                    queue.push(now + self.scope_latency(ctx.done_scope), Ev::SemBump { sem: s, value: 1 });
+                }
+                if let Some(w) = ctx.blocking_worker {
+                    pc[w] += 1;
+                    wstate[w] = WState::Ready;
+                    ready.push_back(w);
+                }
+            }
+            // Process all timer events scheduled at exactly t_next.
+            while queue.peek_time().map(|t| t <= now + 1e-15).unwrap_or(false) {
+                let (_, ev) = queue.pop().unwrap();
+                events += 1;
+                match ev {
+                    Ev::WorkerDone(w) => {
+                        pc[w] += 1;
+                        wstate[w] = WState::Ready;
+                        ready.push_back(w);
+                    }
+                    Ev::SemBump { sem, value } => {
+                        sems[sem] += value;
+                        let mut still = vec![];
+                        for (w, thresh) in waiters[sem].drain(..) {
+                            if sems[sem] >= thresh {
+                                pc[w] += 1;
+                                wstate[w] = WState::Ready;
+                                ready.push_back(w);
+                            } else {
+                                still.push((w, thresh));
+                            }
+                        }
+                        waiters[sem] = still;
+                    }
+                    Ev::FlowStart { ctx } => {
+                        let c = &flow_ctxs[ctx];
+                        let ports = self.flow_ports(&topo, c.spec.route);
+                        if ports.is_empty() || c.spec.bytes <= 0.0 {
+                            // Device-local zero-cost move: complete instantly.
+                            if let Some(s) = c.done_sem {
+                                let lat = self.scope_latency(c.done_scope);
+                                queue.push(now + lat, Ev::SemBump { sem: s, value: 1 });
+                            }
+                            if let Some(w) = c.blocking_worker {
+                                pc[w] += 1;
+                                wstate[w] = WState::Ready;
+                                ready.push_back(w);
+                            }
+                        } else {
+                            let cap = self.flow_cap(&c.spec);
+                            let id = net.start(c.spec.bytes, ports, cap);
+                            active_flows.insert(id, ctx);
+                            flow_ctxs[ctx].started = Some(id);
+                        }
+                    }
+                }
+            }
+        }
+
+        TimedResult {
+            total_time: now,
+            compute_busy,
+            port_bytes: net.port_bytes.clone(),
+            trace,
+            events,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::DeviceId;
+    use crate::plan::{Role, SemId, TransferSpec};
+    use crate::xfer::Mechanism;
+
+    fn node() -> NodeSpec {
+        NodeSpec::hgx_h100()
+    }
+
+    fn p2p_spec(bytes: f64, src: usize, dst: usize) -> TransferSpec {
+        TransferSpec {
+            mech: Mechanism::Tma,
+            route: Route::P2p { src: DeviceId(src), dst: DeviceId(dst) },
+            bytes,
+            msg_bytes: 128.0 * 1024.0,
+            n_sms: 132.0,
+        }
+    }
+
+    #[test]
+    fn compute_only_duration() {
+        let mut plan = Plan::new();
+        let w = plan.add_worker(DeviceId(0), Role::ComputeSm, "c");
+        plan.push(w, Op::Compute { dur: 1e-3, label: "mma", effect: None });
+        let r = TimedExec::new(node()).run(&plan);
+        assert!((r.total_time - 1e-3).abs() < 1e-12);
+        assert!((r.compute_busy - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn launch_overhead_added() {
+        let mut plan = Plan::new();
+        plan.launch_overhead = 3.5e-6;
+        let w = plan.add_worker(DeviceId(0), Role::ComputeSm, "c");
+        plan.push(w, Op::Compute { dur: 1e-3, label: "mma", effect: None });
+        let r = TimedExec::new(node()).run(&plan);
+        assert!((r.total_time - (1e-3 + 3.5e-6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn blocking_transfer_time_matches_curve() {
+        // 1 GB TMA transfer with all SMs: Table 1 says ~350 GB/s.
+        let mut plan = Plan::new();
+        let w = plan.add_worker(DeviceId(0), Role::CommSm, "t");
+        plan.push(
+            w,
+            Op::Transfer {
+                spec: p2p_spec(1e9, 0, 1),
+                blocking: true,
+                done_sem: None,
+                done_scope: SyncScope::IntraSm,
+                label: "p2p",
+                effect: None,
+            },
+        );
+        let r = TimedExec::new(node()).run(&plan);
+        let expect = 1e9 / 350.01e9;
+        assert!((r.total_time - expect).abs() / expect < 0.02, "{}", r.total_time);
+        assert!((r.egress_bytes(0) - 1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn async_transfer_overlaps_compute() {
+        // compute 1 ms while a transfer of ~1 ms runs: total ≈ max, not sum.
+        let g = node().gpu.clone();
+        let bytes = 350.01e9 * 1e-3; // ~1 ms at TMA rate
+        let mut plan = Plan::new();
+        let s = plan.add_sem(0);
+        let w = plan.add_worker(DeviceId(0), Role::ComputeSm, "c");
+        plan.push(
+            w,
+            Op::Transfer {
+                spec: p2p_spec(bytes, 0, 1),
+                blocking: false,
+                done_sem: Some(s),
+                done_scope: SyncScope::IntraSm,
+                label: "store",
+                effect: None,
+            },
+        );
+        plan.push(w, Op::Compute { dur: 1e-3, label: "mma", effect: None });
+        plan.push(w, Op::Wait { sem: s, value: 1 });
+        let r = TimedExec::new(node()).run(&plan);
+        assert!(r.total_time < 1.1e-3, "should overlap: {}", r.total_time);
+        assert!(r.total_time > 0.99e-3);
+        let _ = g;
+    }
+
+    #[test]
+    fn two_flows_share_ingress() {
+        // Two devices write 100 MB each into device 0 concurrently:
+        // ingress port serialises them (the §3.1.3 intra-SM AR effect).
+        let mut plan = Plan::new();
+        for src in 1..=2 {
+            let w = plan.add_worker(DeviceId(src), Role::CommSm, format!("w{src}"));
+            plan.push(
+                w,
+                Op::Transfer {
+                    spec: p2p_spec(100e6, src, 0),
+                    blocking: true,
+                    done_sem: None,
+                    done_scope: SyncScope::IntraSm,
+                    label: "p2p",
+                    effect: None,
+                },
+            );
+        }
+        let r = TimedExec::new(node()).run(&plan);
+        // each flow capped by its own TMA rate (350), but sharing 450 GB/s
+        // ingress -> 225 each -> 100e6/225e9 ≈ 0.44 ms
+        let expect = 100e6 / 225e9;
+        assert!((r.total_time - expect).abs() / expect < 0.05, "{}", r.total_time);
+    }
+
+    #[test]
+    fn signal_wait_latency_interdevice() {
+        let g = node().gpu.clone();
+        let mut plan = Plan::new();
+        let s = plan.add_sem(0);
+        let w0 = plan.add_worker(DeviceId(0), Role::ComputeSm, "sig");
+        let w1 = plan.add_worker(DeviceId(1), Role::ComputeSm, "wait");
+        plan.push(w0, Op::Signal { sem: s, value: 1, scope: SyncScope::InterDevice });
+        plan.push(w1, Op::Wait { sem: s, value: 1 });
+        plan.push(w1, Op::Compute { dur: 1e-6, label: "c", effect: None });
+        let r = TimedExec::new(node()).run(&plan);
+        assert!((r.total_time - (g.nvlink_signal + 1e-6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn copy_engine_flow_uses_ce_port() {
+        let mut plan = Plan::new();
+        let w = plan.add_worker(DeviceId(0), Role::Host, "host");
+        plan.push(
+            w,
+            Op::Transfer {
+                spec: TransferSpec {
+                    mech: Mechanism::CopyEngine,
+                    route: Route::CopyEngineP2p { src: DeviceId(0), dst: DeviceId(1) },
+                    bytes: 1e9,
+                    msg_bytes: 1e9,
+                    n_sms: 0.0,
+                },
+                blocking: true,
+                done_sem: None,
+                done_scope: SyncScope::InterDevice,
+                label: "ce",
+                effect: None,
+            },
+        );
+        let r = TimedExec::new(node()).run(&plan);
+        let expect = 1e9 / 368.82e9;
+        assert!((r.total_time - expect).abs() / expect < 0.03, "{}", r.total_time);
+        assert!(r.port_bytes.contains_key(&Port::CopyEngine(DeviceId(0))));
+    }
+
+    #[test]
+    fn pipelined_stores_backpressure() {
+        // A worker produces 8 tiles; pipeline depth 2 (in-flight sem).
+        // If comm is much slower than compute, total ≈ comm time (fill
+        // hidden) — the Table 3 regime boundary.
+        let tile_bytes = 128.0 * 256.0 * 2.0;
+        let comm_t = tile_bytes / 350.01e9; // per-tile store time
+        let comp_t = comm_t / 4.0; // compute faster than comm
+        let mut plan = Plan::new();
+        let slots = plan.add_sem(2); // 2 in-flight slots
+        let w = plan.add_worker(DeviceId(0), Role::ComputeSm, "sm");
+        let mut acquired = 0u64;
+        for _ in 0..8 {
+            acquired += 1;
+            plan.push(w, Op::Wait { sem: slots, value: acquired }); // acquire slot
+            plan.push(w, Op::Compute { dur: comp_t, label: "mma", effect: None });
+            plan.push(
+                w,
+                Op::Transfer {
+                    spec: p2p_spec(tile_bytes, 0, 1),
+                    blocking: false,
+                    done_sem: Some(slots),
+                    done_scope: SyncScope::IntraSm,
+                    label: "store",
+                    effect: None,
+                },
+            );
+        }
+        let r = TimedExec::new(node()).run(&plan);
+        // bounded below by total comm, above by comm + one compute + sync.
+        let comm_total = 8.0 * comm_t;
+        assert!(r.total_time >= comm_total * 0.95, "{} vs {}", r.total_time, comm_total);
+        assert!(r.total_time <= comm_total + comp_t + 8.0 * 2e-6, "{}", r.total_time);
+    }
+}

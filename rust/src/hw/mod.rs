@@ -1,0 +1,12 @@
+//! Hardware model: per-GPU specifications and node topology.
+//!
+//! Every number here is taken from the paper (§1, §2.1, §3.1, Table 1,
+//! Figures 2–3) or the vendor datasheets the paper cites; the simulator and
+//! the analytical cost model both read *only* from these structs, so the
+//! calibration has a single source of truth.
+
+pub mod spec;
+pub mod topology;
+
+pub use spec::{Arch, GpuSpec, NodeSpec};
+pub use topology::{DeviceId, Topology};

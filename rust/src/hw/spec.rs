@@ -1,0 +1,260 @@
+//! GPU and node hardware specifications.
+//!
+//! The two presets, [`GpuSpec::h100`] and [`GpuSpec::b200`], carry the
+//! paper's measured constants (Table 1, Figures 2–3, §2.1, §3.1.3). The
+//! transfer-mechanism bandwidth *curves* derived from these constants live
+//! in [`crate::xfer::curves`].
+
+
+/// GPU architecture generation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Arch {
+    /// H100 (SXM, HGX node, NVLink 4 / NVSwitch 3).
+    Hopper,
+    /// B200 (NVLink 5 / NVSwitch 4).
+    Blackwell,
+}
+
+impl std::fmt::Display for Arch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Arch::Hopper => write!(f, "H100"),
+            Arch::Blackwell => write!(f, "B200"),
+        }
+    }
+}
+
+/// Per-GPU hardware constants. All bandwidths in bytes/s, times in seconds.
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub arch: Arch,
+    /// Streaming multiprocessors per GPU.
+    pub num_sms: u32,
+    /// Dense BF16 tensor-core throughput, FLOP/s (paper §3.1.3: 989e12 for H100).
+    pub tc_flops: f64,
+    /// CUDA-core (elementwise f32) throughput, FLOP/s.
+    pub cuda_core_flops: f64,
+    /// HBM capacity in bytes.
+    pub hbm_bytes: u64,
+    /// HBM bandwidth (paper §2.1: ~3 TB/s on H100).
+    pub hbm_bw: f64,
+    /// L2 capacity (50 MB on H100) and bandwidth (~12 TB/s).
+    pub l2_bytes: u64,
+    pub l2_bw: f64,
+    /// Shared memory per SM (227 KB usable on H100) and aggregate bandwidth.
+    pub smem_per_sm: u64,
+    pub smem_bw: f64,
+    /// NVLink unidirectional bandwidth per GPU (450 GB/s H100, 900 GB/s B200).
+    pub nvlink_bw: f64,
+    /// PCIe bandwidth (host link, 64 GB/s gen5).
+    pub pcie_bw: f64,
+
+    // ---- transfer-mechanism calibration (Table 1, Figures 2-3) ----
+    /// Peak achievable fraction of `nvlink_bw` per mechanism for large
+    /// messages with enough SMs (Table 1).
+    pub ce_peak_frac: f64,
+    pub tma_peak_frac: f64,
+    pub reg_peak_frac: f64,
+    /// Message size at which each mechanism reaches half of its own peak
+    /// (drives the Figure 2 ramp; see `xfer::curves` for the model).
+    pub ce_half_msg: f64,
+    pub tma_half_msg: f64,
+    pub reg_half_msg: f64,
+    /// SMs required to saturate NVLink with device-initiated transfers
+    /// (Figure 3: ~15 for TMA, ~76 for register ops on H100).
+    pub tma_sat_sms: f64,
+    pub reg_sat_sms: f64,
+    /// Maximum single TMA message (bounded by SMEM: 227 KB, Figure 2 note).
+    pub tma_max_msg: u64,
+
+    // ---- synchronization + launch (§3.1.1, §3.1.3) ----
+    /// Intra-SM mbarrier synchronization latency (64 ns).
+    pub mbarrier_sync: f64,
+    /// Inter-SM synchronization through HBM (832 ns).
+    pub hbm_sync: f64,
+    /// Inter-device signal latency over NVLink (one-way flag write).
+    pub nvlink_signal: f64,
+    /// Kernel launch overhead, host side + setup/teardown.
+    pub kernel_launch: f64,
+    /// Per-flow NVLink base latency (first-byte).
+    pub nvlink_latency: f64,
+    /// Extra per-message destination-side cost of an *atomic* reduction
+    /// (red/atom op) relative to a plain store; serialises at the
+    /// destination port (§3.1.3 Table 3 discussion: residual comm near
+    /// K=2048 "arises from atomic additions").
+    pub atomic_overhead_frac: f64,
+}
+
+impl GpuSpec {
+    /// Nvidia H100 80 GB SXM (HGX), the paper's primary platform.
+    pub fn h100() -> Self {
+        GpuSpec {
+            arch: Arch::Hopper,
+            num_sms: 132,
+            tc_flops: 989e12,       // §3.1.3 (dense BF16)
+            cuda_core_flops: 67e12, // FP32 CUDA cores
+            hbm_bytes: 80 * (1 << 30),
+            hbm_bw: 3.35e12, // §2.1 says ~3 TB/s; datasheet 3.35
+            l2_bytes: 50 * (1 << 20),
+            l2_bw: 12e12,
+            smem_per_sm: 227 * 1024,
+            smem_bw: 33e12,
+            nvlink_bw: 450e9, // unidirectional, §2.1
+            pcie_bw: 64e9,
+            // Table 1 (H100 column): 368.82 / 350.01 / 342.68 GB/s observed
+            ce_peak_frac: 0.82,
+            tma_peak_frac: 0.78,
+            reg_peak_frac: 0.76,
+            // Figure 2: CE needs >=256 MB for >80% util -> half-size ~6.4 MB;
+            // TMA near-peak at 2 KB -> half ~256 B; reg efficient at 128 B.
+            ce_half_msg: 6.4e6,
+            tma_half_msg: 96.0,
+            reg_half_msg: 32.0,
+            // Figure 3: TMA ~15 SMs, register ops ~76 SMs to saturate.
+            tma_sat_sms: 15.0,
+            reg_sat_sms: 76.0,
+            tma_max_msg: 227 * 1024,
+            // §3.1.3 microbenchmarks
+            mbarrier_sync: 64e-9,
+            hbm_sync: 832e-9,
+            nvlink_signal: 1.2e-6,
+            kernel_launch: 3.5e-6,
+            nvlink_latency: 1.0e-6,
+            atomic_overhead_frac: 0.15,
+        }
+    }
+
+    /// Nvidia B200 (Appendix A platform).
+    pub fn b200() -> Self {
+        GpuSpec {
+            arch: Arch::Blackwell,
+            num_sms: 148,
+            tc_flops: 2250e12, // dense BF16 (§1: 7.2x A100's 312)
+            cuda_core_flops: 80e12,
+            hbm_bytes: 192 * (1 << 30),
+            hbm_bw: 8e12,
+            l2_bytes: 126 * (1 << 20),
+            l2_bw: 20e12,
+            smem_per_sm: 227 * 1024,
+            smem_bw: 40e12,
+            nvlink_bw: 900e9, // NVLink 5, Appendix A
+            pcie_bw: 64e9,
+            // Table 1 (B200 column): 726.13 / 669.12 / 628.35 GB/s observed
+            ce_peak_frac: 0.81,
+            tma_peak_frac: 0.74,
+            reg_peak_frac: 0.70,
+            ce_half_msg: 12.8e6, // 2x link speed -> same time constant
+            tma_half_msg: 192.0,
+            reg_half_msg: 64.0,
+            // Figure 3 scaling: per-SM issue rate grows less than link speed.
+            tma_sat_sms: 18.0,
+            reg_sat_sms: 92.0,
+            tma_max_msg: 227 * 1024,
+            mbarrier_sync: 64e-9,
+            hbm_sync: 832e-9,
+            nvlink_signal: 1.2e-6,
+            kernel_launch: 3.5e-6,
+            nvlink_latency: 1.0e-6,
+            atomic_overhead_frac: 0.15,
+        }
+    }
+
+    /// Sustained tensor-core throughput for a well-pipelined GEMM
+    /// (fraction of peak actually achieved by a tuned kernel; the paper's
+    /// own GEMM numbers in Table 3 imply ~0.85 of peak at large K).
+    pub fn sustained_tc_flops(&self) -> f64 {
+        0.85 * self.tc_flops
+    }
+
+    /// Per-SM share of the sustained tensor-core throughput when `n` of the
+    /// `num_sms` SMs run compute. Compute scales linearly with SM count
+    /// (§3.1.3 intra-SM discussion point 1).
+    pub fn tc_flops_for_sms(&self, n: u32) -> f64 {
+        self.sustained_tc_flops() * (n.min(self.num_sms) as f64) / (self.num_sms as f64)
+    }
+}
+
+/// A multi-GPU node: `num_devices` identical GPUs on a non-blocking
+/// NVSwitch fabric (the paper's HGX 8-GPU baseboard).
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    pub gpu: GpuSpec,
+    pub num_devices: usize,
+    /// NVSwitch present (non-blocking any-to-any; always true on HGX).
+    pub nvswitch: bool,
+    /// NVSwitch SHARP-style in-network multicast/reduction available
+    /// (requires the multicast-object setup of Appendix F).
+    pub multimem: bool,
+}
+
+impl NodeSpec {
+    /// The paper's primary testbed: 8×H100 SXM with NVSwitch + multimem.
+    pub fn hgx_h100() -> Self {
+        NodeSpec { gpu: GpuSpec::h100(), num_devices: 8, nvswitch: true, multimem: true }
+    }
+
+    /// Appendix A testbed: 8×B200.
+    pub fn hgx_b200() -> Self {
+        NodeSpec { gpu: GpuSpec::b200(), num_devices: 8, nvswitch: true, multimem: true }
+    }
+
+    /// A smaller node for functional tests.
+    pub fn test_node(num_devices: usize) -> Self {
+        NodeSpec { gpu: GpuSpec::h100(), num_devices, nvswitch: true, multimem: true }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h100_matches_paper_constants() {
+        let g = GpuSpec::h100();
+        assert_eq!(g.num_sms, 132);
+        assert_eq!(g.tc_flops, 989e12);
+        assert_eq!(g.nvlink_bw, 450e9);
+        // Table 1 observed bandwidths reproduce within 1%:
+        assert!((g.ce_peak_frac * 450.0 - 368.82 / 1.0).abs() < 5.0);
+        assert!((g.tma_peak_frac * 450.0 - 350.01).abs() < 5.0);
+        assert!((g.reg_peak_frac * 450.0 - 342.68).abs() < 5.0);
+        // §3.1.3 sync constants
+        assert_eq!(g.mbarrier_sync, 64e-9);
+        assert_eq!(g.hbm_sync, 832e-9);
+    }
+
+    #[test]
+    fn b200_matches_paper_constants() {
+        let g = GpuSpec::b200();
+        assert_eq!(g.nvlink_bw, 900e9);
+        assert!((g.ce_peak_frac * 900.0 - 726.13).abs() < 5.0);
+        assert!((g.tma_peak_frac * 900.0 - 669.12).abs() < 5.0);
+        assert!((g.reg_peak_frac * 900.0 - 628.35).abs() < 5.0);
+    }
+
+    #[test]
+    fn compute_scales_linearly_with_sms() {
+        let g = GpuSpec::h100();
+        let full = g.tc_flops_for_sms(132);
+        let half = g.tc_flops_for_sms(66);
+        assert!((half * 2.0 - full).abs() / full < 1e-12);
+        // clamped at num_sms
+        assert_eq!(g.tc_flops_for_sms(200), full);
+    }
+
+    #[test]
+    fn hidden_k_threshold_from_cost_model() {
+        // §3.1.3: K >= sR/2B with s=2, R=989e12, B=450e9 -> K >= ~2197.
+        let g = GpuSpec::h100();
+        let k = 2.0 * g.tc_flops / (2.0 * g.nvlink_bw);
+        assert!((k - 2197.0).abs() < 1.0, "got {k}");
+    }
+
+    #[test]
+    fn node_presets() {
+        let n = NodeSpec::hgx_h100();
+        assert_eq!(n.num_devices, 8);
+        assert!(n.nvswitch && n.multimem);
+        assert_eq!(NodeSpec::hgx_b200().gpu.arch, Arch::Blackwell);
+    }
+}

@@ -1,0 +1,151 @@
+//! Node topology: device identities, NVLink ports, and NVSwitch routing.
+//!
+//! On an HGX baseboard every GPU has one NVLink bundle into the NVSwitch
+//! fabric, which is non-blocking (§2.1): any permutation of point-to-point
+//! transfers proceeds at full per-port bandwidth; contention happens only at
+//! the per-device *egress* and *ingress* ports, which is exactly what the
+//! simulator's resource model charges.
+
+
+/// Identifies one GPU within a node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeviceId(pub usize);
+
+impl std::fmt::Display for DeviceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "gpu{}", self.0)
+    }
+}
+
+/// A directed NVLink port: each device has one egress and one ingress port
+/// into the NVSwitch fabric, each at `nvlink_bw` (unidirectional figure).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Port {
+    Egress(DeviceId),
+    Ingress(DeviceId),
+    /// The per-device host-side PCIe link (copy-engine staging, launches).
+    Pcie(DeviceId),
+    /// The NVSwitch multimem reduction unit serving one destination device.
+    /// In-fabric reductions consume switch-side bandwidth proportional to
+    /// the reduced output, charged per reading device.
+    SwitchReduce(DeviceId),
+    /// Device HBM bandwidth (charged by staging copies and local
+    /// reshape/pack passes — the §3.1.4 "intermediate buffering" overhead).
+    Hbm(DeviceId),
+    /// The per-device DMA copy engine (host-initiated transfers run
+    /// through it serially; §3.1.2).
+    CopyEngine(DeviceId),
+}
+
+/// Static topology of a node.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub num_devices: usize,
+    pub nvswitch: bool,
+}
+
+impl Topology {
+    pub fn new(num_devices: usize, nvswitch: bool) -> Self {
+        assert!(num_devices >= 1);
+        Self { num_devices, nvswitch }
+    }
+
+    /// All devices in the node.
+    pub fn devices(&self) -> impl Iterator<Item = DeviceId> + '_ {
+        (0..self.num_devices).map(DeviceId)
+    }
+
+    /// Ring neighbour (used by NCCL-style ring collectives and Ring
+    /// Attention): the next device in a fixed ring order.
+    pub fn ring_next(&self, d: DeviceId) -> DeviceId {
+        DeviceId((d.0 + 1) % self.num_devices)
+    }
+
+    /// Ring neighbour in the other direction.
+    pub fn ring_prev(&self, d: DeviceId) -> DeviceId {
+        DeviceId((d.0 + self.num_devices - 1) % self.num_devices)
+    }
+
+    /// The ports a point-to-point transfer occupies. With NVSwitch the
+    /// fabric is non-blocking, so only the endpoint ports are charged;
+    /// without it (direct-attached mesh) the same model holds for a single
+    /// hop. A local (src == dst) copy occupies no interconnect ports.
+    pub fn p2p_ports(&self, src: DeviceId, dst: DeviceId) -> Vec<Port> {
+        if src == dst {
+            vec![]
+        } else {
+            vec![Port::Egress(src), Port::Ingress(dst)]
+        }
+    }
+
+    /// Ports occupied by an in-fabric multicast write from `src` to every
+    /// device: the source sends one copy to the switch, which replicates it
+    /// to every destination's ingress port (NVSwitch broadcast, §2.1 /
+    /// Appendix F).
+    pub fn multicast_ports(&self, src: DeviceId) -> Vec<Port> {
+        let mut ports = vec![Port::Egress(src)];
+        for d in self.devices() {
+            ports.push(Port::Ingress(d));
+        }
+        ports
+    }
+
+    /// Ports occupied by an in-fabric `ld_reduce` performed by `reader`:
+    /// to deliver S reduced bytes, the switch pulls S bytes from *every*
+    /// device's egress, reduces in-fabric, and the result enters the
+    /// reader's ingress port (multimem semantics, Appendix F). Charging
+    /// all egresses makes concurrent readers contend there, which is what
+    /// bounds in-network all-reduce at ~S bytes per port instead of N·S
+    /// (§3.1.3 in-network acceleration).
+    pub fn ld_reduce_ports(&self, reader: DeviceId) -> Vec<Port> {
+        let mut ports = vec![Port::SwitchReduce(reader), Port::Ingress(reader)];
+        for d in self.devices() {
+            ports.push(Port::Egress(d));
+        }
+        ports
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraps() {
+        let t = Topology::new(8, true);
+        assert_eq!(t.ring_next(DeviceId(7)), DeviceId(0));
+        assert_eq!(t.ring_prev(DeviceId(0)), DeviceId(7));
+        assert_eq!(t.ring_next(DeviceId(3)), DeviceId(4));
+    }
+
+    #[test]
+    fn ring_next_prev_inverse() {
+        let t = Topology::new(5, true);
+        for d in t.devices() {
+            assert_eq!(t.ring_prev(t.ring_next(d)), d);
+        }
+    }
+
+    #[test]
+    fn p2p_ports_endpoints_only() {
+        let t = Topology::new(8, true);
+        let ports = t.p2p_ports(DeviceId(1), DeviceId(5));
+        assert_eq!(ports, vec![Port::Egress(DeviceId(1)), Port::Ingress(DeviceId(5))]);
+        assert!(t.p2p_ports(DeviceId(2), DeviceId(2)).is_empty());
+    }
+
+    #[test]
+    fn multicast_hits_all_ingress() {
+        let t = Topology::new(4, true);
+        let ports = t.multicast_ports(DeviceId(0));
+        assert_eq!(ports.len(), 5); // 1 egress + 4 ingress
+        assert!(ports.contains(&Port::Ingress(DeviceId(3))));
+    }
+
+    #[test]
+    fn devices_enumerates_all() {
+        let t = Topology::new(3, true);
+        let ds: Vec<_> = t.devices().collect();
+        assert_eq!(ds, vec![DeviceId(0), DeviceId(1), DeviceId(2)]);
+    }
+}

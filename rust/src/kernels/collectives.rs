@@ -1,0 +1,491 @@
+//! PK pure-communication collectives (Figure 6, Figures 15–17).
+//!
+//! Built directly on the primitives: **no rendezvous** (one-way signals
+//! into pre-allocated destination buffers), **no staging** (transfers go
+//! HBM→HBM), and **tile-granular addressing**, so collectives along the
+//! tensor (last) dimension run directly on the original layout — the
+//! Appendix B comparisons where NCCL pays reshape passes.
+//!
+//! Layout convention: a collective operates on per-device *replica* views.
+//! Sharding can be along rows (contiguous, NCCL's happy path) or columns
+//! (the tensor dimension, NCCL's unhappy path — for PK they cost the
+//! same, which is the point).
+
+use crate::hw::spec::NodeSpec;
+use crate::hw::DeviceId;
+use crate::mem::pgl::ReduceOp;
+use crate::mem::ELEM_BYTES;
+use crate::plan::{Effect, MatView, Op, Plan, Role, Route, SyncScope, TransferSpec};
+use crate::xfer::Mechanism;
+
+/// Sharding axis of a collective.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Axis {
+    /// Leading (batch) dimension — contiguous chunks.
+    Row,
+    /// Tensor (last) dimension — strided chunks (Appendix B).
+    Col,
+}
+
+/// Context for the PK collectives.
+pub struct PkCollCtx<'a> {
+    pub node: &'a NodeSpec,
+    /// `replicas[d]`: device d's full-size buffer view.
+    pub replicas: Vec<MatView>,
+    /// SMs each device dedicates to the collective.
+    pub n_sms: f64,
+    /// Message granularity (one shared-tile store).
+    pub msg_bytes: f64,
+}
+
+impl<'a> PkCollCtx<'a> {
+    pub fn new(node: &'a NodeSpec, replicas: Vec<MatView>) -> Self {
+        PkCollCtx { node, replicas, n_sms: 16.0, msg_bytes: 128.0 * 256.0 * ELEM_BYTES as f64 }
+    }
+
+    fn n(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Device `dev`'s shard view within `view` along `axis`.
+    fn shard(&self, view: &MatView, dev: usize, axis: Axis) -> MatView {
+        let n = self.n();
+        match axis {
+            Axis::Row => {
+                assert_eq!(view.rows % n, 0);
+                let cr = view.rows / n;
+                view.sub(dev * cr, 0, cr, view.cols)
+            }
+            Axis::Col => {
+                assert_eq!(view.cols % n, 0);
+                let cc = view.cols / n;
+                view.sub(0, dev * cc, view.rows, cc)
+            }
+        }
+    }
+
+    fn shard_bytes(&self) -> f64 {
+        let v = &self.replicas[0];
+        (v.rows * v.cols) as f64 * ELEM_BYTES as f64 / self.n() as f64
+    }
+}
+
+/// PK all-reduce (Figure 6): shard ownership round-robin; each device
+/// in-network-reduces its shard and multicasts the result back. Per-port
+/// traffic ≈ S instead of the ring's 2S(N−1)/N plus staging.
+pub fn pk_all_reduce(plan: &mut Plan, ctx: &PkCollCtx) {
+    let n = ctx.n();
+    plan.launch_overhead = ctx.node.gpu.kernel_launch;
+    // arrival barrier: all devices ready (one-way signals, no rendezvous)
+    let ready: Vec<_> = (0..n).map(|_| plan.add_sem(0)).collect();
+    for d in 0..n {
+        let w = plan.add_worker(DeviceId(d), Role::CommSm, format!("pk_ar/d{d}"));
+        for r in &ready {
+            plan.push(w, Op::Signal { sem: *r, value: 1, scope: SyncScope::InterDevice });
+        }
+        plan.push(w, Op::Wait { sem: ready[d], value: n as u64 });
+        let mine = ctx.shard(&ctx.replicas[d], d, Axis::Row);
+        let srcs: Vec<MatView> = (0..n).map(|o| ctx.shard(&ctx.replicas[o], d, Axis::Row)).collect();
+        // in-fabric reduce of my shard
+        plan.push(
+            w,
+            Op::Transfer {
+                spec: TransferSpec {
+                    mech: Mechanism::Multimem,
+                    route: Route::LdReduce { reader: DeviceId(d) },
+                    bytes: ctx.shard_bytes(),
+                    msg_bytes: 1024.0,
+                    n_sms: ctx.n_sms,
+                },
+                blocking: true,
+                done_sem: None,
+                done_scope: SyncScope::IntraSm,
+                label: "pk_ar_ldreduce",
+                effect: Some(Effect::LdReduceMat { srcs: srcs.clone(), dst: mine, op: ReduceOp::Add }),
+            },
+        );
+        // multicast the reduced shard back to all replicas
+        let others: Vec<MatView> =
+            (0..n).filter(|&o| o != d).map(|o| ctx.shard(&ctx.replicas[o], d, Axis::Row)).collect();
+        plan.push(
+            w,
+            Op::Transfer {
+                spec: TransferSpec {
+                    mech: Mechanism::Multimem,
+                    route: Route::Multicast { src: DeviceId(d) },
+                    bytes: ctx.shard_bytes(),
+                    msg_bytes: 1024.0,
+                    n_sms: ctx.n_sms,
+                },
+                blocking: true,
+                done_sem: None,
+                done_scope: SyncScope::IntraSm,
+                label: "pk_ar_mc",
+                effect: Some(Effect::MulticastMat { src: mine, dsts: others, reduce: None }),
+            },
+        );
+    }
+}
+
+/// PK all-gather (Figure 15 when `axis == Col`): each device multicasts its
+/// shard tiles straight from the source layout — identical cost on either
+/// axis.
+pub fn pk_all_gather(plan: &mut Plan, ctx: &PkCollCtx, axis: Axis) {
+    let n = ctx.n();
+    plan.launch_overhead = ctx.node.gpu.kernel_launch;
+    for d in 0..n {
+        let w = plan.add_worker(DeviceId(d), Role::CommSm, format!("pk_ag/d{d}"));
+        let src = ctx.shard(&ctx.replicas[d], d, axis);
+        let dsts: Vec<MatView> =
+            (0..n).filter(|&o| o != d).map(|o| ctx.shard(&ctx.replicas[o], d, axis)).collect();
+        plan.push(
+            w,
+            Op::Transfer {
+                spec: TransferSpec {
+                    mech: Mechanism::Tma,
+                    route: Route::Multicast { src: DeviceId(d) },
+                    bytes: ctx.shard_bytes(),
+                    msg_bytes: ctx.msg_bytes,
+                    n_sms: ctx.n_sms,
+                },
+                blocking: true,
+                done_sem: None,
+                done_scope: SyncScope::IntraSm,
+                label: "pk_ag_mc",
+                effect: Some(Effect::MulticastMat { src, dsts, reduce: None }),
+            },
+        );
+    }
+}
+
+/// PK reduce-scatter (Figure 16 when `axis == Col`): each device
+/// in-network-reduces its own shard from all replicas.
+pub fn pk_reduce_scatter(plan: &mut Plan, ctx: &PkCollCtx, axis: Axis) {
+    let n = ctx.n();
+    plan.launch_overhead = ctx.node.gpu.kernel_launch;
+    for d in 0..n {
+        let w = plan.add_worker(DeviceId(d), Role::CommSm, format!("pk_rs/d{d}"));
+        let mine = ctx.shard(&ctx.replicas[d], d, axis);
+        let srcs: Vec<MatView> = (0..n).map(|o| ctx.shard(&ctx.replicas[o], d, axis)).collect();
+        plan.push(
+            w,
+            Op::Transfer {
+                spec: TransferSpec {
+                    mech: Mechanism::Multimem,
+                    route: Route::LdReduce { reader: DeviceId(d) },
+                    bytes: ctx.shard_bytes(),
+                    msg_bytes: 1024.0,
+                    n_sms: ctx.n_sms,
+                },
+                blocking: true,
+                done_sem: None,
+                done_scope: SyncScope::IntraSm,
+                label: "pk_rs_ldreduce",
+                effect: Some(Effect::LdReduceMat { srcs, dst: mine, op: ReduceOp::Add }),
+            },
+        );
+    }
+}
+
+/// PK fine-grained all-to-all on a 4-D `(B, S, H, D)` layout (Figures 11 &
+/// 17): the sequence dimension is gathered while heads scatter. Device `d`
+/// holds `(B, S/n, H, D)`; afterwards device `j` holds `(B, S, H/n, D)`
+/// (its head block, all sequence positions). Transfers address the
+/// original layout tile-by-tile — no reshape.
+///
+/// `srcs[d]` / `dsts[d]` are the per-device 4-D buffers; `b_dim`, `s_local`,
+/// `h`, `dd` give the logical dims of the source side.
+pub struct A2aCfg {
+    pub b_dim: usize,
+    pub s_local: usize,
+    pub h: usize,
+    pub d_head: usize,
+}
+
+pub fn pk_all_to_all_4d(
+    plan: &mut Plan,
+    node: &NodeSpec,
+    cfg: &A2aCfg,
+    srcs: Option<&[crate::mem::BufId]>,
+    dsts: Option<&[crate::mem::BufId]>,
+    n_sms: f64,
+) {
+    let n = node.num_devices;
+    assert_eq!(cfg.h % n, 0, "heads must divide across devices");
+    let h_blk = cfg.h / n;
+    let tile_bytes = (h_blk * cfg.d_head) as f64 * ELEM_BYTES as f64;
+    plan.launch_overhead = node.gpu.kernel_launch;
+    for d in 0..n {
+        let w = plan.add_worker(DeviceId(d), Role::CommSm, format!("pk_a2a/d{d}"));
+        let drain = plan.add_sem(0);
+        let mut in_flight: u64 = 0;
+        for j in 0..n {
+            match (srcs, dsts) {
+                (Some(sb), Some(db)) => {
+                    // per-(b, s) tile effects — functional mode (small shapes)
+                    for bi in 0..cfg.b_dim {
+                        for si in 0..cfg.s_local {
+                            let src = MatView {
+                                buf: sb[d],
+                                b: bi,
+                                d: si,
+                                row0: j * h_blk,
+                                col0: 0,
+                                rows: h_blk,
+                                cols: cfg.d_head,
+                            };
+                            let dst = MatView {
+                                buf: db[j],
+                                b: bi,
+                                d: d * cfg.s_local + si,
+                                row0: 0,
+                                col0: 0,
+                                rows: h_blk,
+                                cols: cfg.d_head,
+                            };
+                            if j == d {
+                                plan.push(
+                                    w,
+                                    Op::Compute {
+                                        dur: 0.0,
+                                        label: "a2a_local",
+                                        effect: Some(Effect::CopyMat { src, dst, reduce: None }),
+                                    },
+                                );
+                            } else {
+                                in_flight += 1;
+                                plan.push(
+                                    w,
+                                    Op::Transfer {
+                                        spec: TransferSpec {
+                                            mech: Mechanism::Tma,
+                                            route: Route::P2p { src: DeviceId(d), dst: DeviceId(j) },
+                                            bytes: tile_bytes,
+                                            msg_bytes: tile_bytes,
+                                            n_sms: n_sms / (n - 1) as f64,
+                                        },
+                                        blocking: false,
+                                        done_sem: Some(drain),
+                                        done_scope: SyncScope::IntraSm,
+                                        label: "pk_a2a_tile",
+                                        effect: Some(Effect::CopyMat { src, dst, reduce: None }),
+                                    },
+                                );
+                            }
+                        }
+                    }
+                }
+                _ if j != d => {
+                    // timing mode: one aggregated flow per destination,
+                    // message granularity = one (h_blk x d_head) tile
+                    let bytes = (cfg.b_dim * cfg.s_local) as f64 * tile_bytes;
+                    in_flight += 1;
+                    plan.push(
+                        w,
+                        Op::Transfer {
+                            spec: TransferSpec {
+                                mech: Mechanism::Tma,
+                                route: Route::P2p { src: DeviceId(d), dst: DeviceId(j) },
+                                bytes,
+                                msg_bytes: tile_bytes,
+                                n_sms: n_sms / (n - 1) as f64,
+                            },
+                            blocking: false,
+                            done_sem: Some(drain),
+                            done_scope: SyncScope::IntraSm,
+                            label: "pk_a2a_bulk",
+                            effect: None,
+                        },
+                    );
+                }
+                _ => {}
+            }
+        }
+        // drain: the exchange is complete only when every send landed
+        plan.push(w, Op::Wait { sem: drain, value: in_flight });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::mem::tile::Shape4;
+    use crate::mem::MemPool;
+    use crate::util::{assert_allclose, seeded_vec};
+
+    fn replicas(pool: &mut MemPool, n: usize, rows: usize, cols: usize, seed: u64) -> (Vec<crate::mem::BufId>, Vec<Vec<f32>>) {
+        let mut bufs = vec![];
+        let mut inits = vec![];
+        for d in 0..n {
+            let data = seeded_vec(seed + d as u64, rows * cols);
+            inits.push(data.clone());
+            bufs.push(pool.alloc_init(DeviceId(d), Shape4::mat(rows, cols), data));
+        }
+        (bufs, inits)
+    }
+
+    #[test]
+    fn pk_all_reduce_is_sum_everywhere() {
+        let n = 8;
+        let (rows, cols) = (n * 2, 4);
+        let node = NodeSpec::test_node(n);
+        let mut pool = MemPool::new();
+        let (bufs, inits) = replicas(&mut pool, n, rows, cols, 70);
+        let ctx = PkCollCtx::new(&node, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
+        let mut plan = Plan::new();
+        pk_all_reduce(&mut plan, &ctx);
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        let mut want = vec![0.0f32; rows * cols];
+        for v in &inits {
+            for (w, x) in want.iter_mut().zip(v) {
+                *w += x;
+            }
+        }
+        for &b in &bufs {
+            assert_allclose(&pool.get(b).data, &want, 1e-5, 1e-6);
+        }
+    }
+
+    #[test]
+    fn pk_all_gather_col_axis() {
+        // tensor-dimension all-gather: device d owns column block d
+        let n = 4;
+        let (rows, cols) = (4, n * 3);
+        let node = NodeSpec::test_node(n);
+        let mut pool = MemPool::new();
+        // start: each device has only its column shard of the global matrix
+        let global = seeded_vec(500, rows * cols);
+        let mut bufs = vec![];
+        for d in 0..n {
+            let mut data = vec![0.0; rows * cols];
+            for r in 0..rows {
+                for c in d * 3..(d + 1) * 3 {
+                    data[r * cols + c] = global[r * cols + c];
+                }
+            }
+            bufs.push(pool.alloc_init(DeviceId(d), Shape4::mat(rows, cols), data));
+        }
+        let ctx = PkCollCtx::new(&node, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
+        let mut plan = Plan::new();
+        pk_all_gather(&mut plan, &ctx, Axis::Col);
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        for &b in &bufs {
+            assert_allclose(&pool.get(b).data, &global, 1e-6, 1e-7);
+        }
+    }
+
+    #[test]
+    fn pk_reduce_scatter_col_axis() {
+        let n = 4;
+        let (rows, cols) = (4, n * 2);
+        let node = NodeSpec::test_node(n);
+        let mut pool = MemPool::new();
+        let (bufs, inits) = replicas(&mut pool, n, rows, cols, 900);
+        let ctx = PkCollCtx::new(&node, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
+        let mut plan = Plan::new();
+        pk_reduce_scatter(&mut plan, &ctx, Axis::Col);
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        let mut want = vec![0.0f32; rows * cols];
+        for v in &inits {
+            for (w, x) in want.iter_mut().zip(v) {
+                *w += x;
+            }
+        }
+        for (d, &b) in bufs.iter().enumerate() {
+            // device d's column block d is the reduced shard
+            for r in 0..rows {
+                for c in d * 2..(d + 1) * 2 {
+                    let got = pool.get(b).data[r * cols + c];
+                    assert!((got - want[r * cols + c]).abs() < 1e-4, "r{r} c{c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pk_a2a_4d_permutes_heads_and_sequence() {
+        let n = 4;
+        let cfg = A2aCfg { b_dim: 2, s_local: 3, h: 8, d_head: 4 };
+        let node = NodeSpec::test_node(n);
+        let mut pool = MemPool::new();
+        // src[d]: (B, S/n, H, D); dst[d]: (B, S, H/n, D)
+        let mut srcs = vec![];
+        let mut dsts = vec![];
+        for d in 0..n {
+            srcs.push(pool.alloc_init(
+                DeviceId(d),
+                Shape4 { b: cfg.b_dim, d: cfg.s_local, r: cfg.h, c: cfg.d_head },
+                seeded_vec(1000 + d as u64, cfg.b_dim * cfg.s_local * cfg.h * cfg.d_head),
+            ));
+            dsts.push(pool.alloc(
+                DeviceId(d),
+                Shape4 { b: cfg.b_dim, d: cfg.s_local * n, r: cfg.h / n, c: cfg.d_head },
+            ));
+        }
+        let mut plan = Plan::new();
+        pk_all_to_all_4d(&mut plan, &node, &cfg, Some(&srcs), Some(&dsts), 8.0);
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        // check: dst[j] at (b, s_global=d*s_local+si, h_in_blk, :) ==
+        //        src[d] at (b, si, j*h_blk + h_in_blk, :)
+        let h_blk = cfg.h / n;
+        for d in 0..n {
+            for j in 0..n {
+                for bi in 0..cfg.b_dim {
+                    for si in 0..cfg.s_local {
+                        for hh in 0..h_blk {
+                            let src_buf = pool.get(srcs[d]);
+                            let dst_buf = pool.get(dsts[j]);
+                            for x in 0..cfg.d_head {
+                                let sv = src_buf.data
+                                    [src_buf.shape.offset(bi, si, j * h_blk + hh, x)];
+                                let dv = dst_buf.data
+                                    [dst_buf.shape.offset(bi, d * cfg.s_local + si, hh, x)];
+                                assert_eq!(sv, dv, "d{d} j{j} b{bi} s{si} h{hh} x{x}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn figure6_pk_ar_beats_nccl() {
+        // Figure 6: PK all-reduce up to ~1.79× over NCCL (BF16).
+        let n = 8;
+        let node = NodeSpec::hgx_h100();
+        let rows = 16384;
+        let cols = 4096; // 128 Mi elements = 256 MB bf16
+        let mut pool = MemPool::new();
+        let bufs: Vec<_> = (0..n).map(|d| pool.alloc(DeviceId(d), Shape4::mat(1, 1))).collect();
+        let views: Vec<MatView> = bufs
+            .iter()
+            .map(|&b| MatView { buf: b, b: 0, d: 0, row0: 0, col0: 0, rows, cols })
+            .collect();
+        // PK
+        let ctx = PkCollCtx { node: &node, replicas: views.clone(), n_sms: 76.0, msg_bytes: 64.0 * 1024.0 };
+        let mut pk_plan = Plan::new();
+        pk_all_reduce(&mut pk_plan, &ctx);
+        strip_effects(&mut pk_plan);
+        let t_pk = TimedExec::new(node.clone()).run(&pk_plan).total_time;
+        // NCCL (library tuner picks ring vs NVLS)
+        let _ = views;
+        let t_nccl = crate::comm::nccl::allreduce_time(&node, rows, cols);
+        let speedup = t_nccl / t_pk;
+        assert!(speedup > 1.1 && speedup < 2.2, "PK AR up to ~1.79x NCCL, got {speedup}");
+    }
+
+    fn strip_effects(plan: &mut Plan) {
+        for w in &mut plan.workers {
+            for op in &mut w.ops {
+                if let Op::Transfer { effect, .. } = op {
+                    *effect = None;
+                }
+                if let Op::Compute { effect, .. } = op {
+                    *effect = None;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Fused GEMM + all-reduce — the Appendix D example kernel (Figure 4
+//! right, Figure 9).
+//!
+//! Every device computes the full `m×n` output over its local `k` shard;
+//! the outputs must be **summed and left everywhere**. Two schedules:
+//!
+//! * **Inter-SM (PK's choice)**: the storer writes each finished tile into
+//!   the *local* replica of the output PGL and signals the tile's barrier
+//!   on the tile's assigned reducer device (`task_id % NUM_DEVICES`, as in
+//!   the Appendix D listing). The reducer's communicator SMs wait for all
+//!   `N` arrivals and issue one in-network `all_reduce` (multimem
+//!   ld_reduce + multicast write-back): each tile crosses each port ~twice
+//!   instead of `N` times — the 3.62× win of §3.1.3.
+//! * **Intra-SM (ablation)**: the storer `store_add_async`es every tile to
+//!   all `N` replicas directly; the `N` concurrent peer writes serialize
+//!   at each destination's ingress port.
+
+use super::gemm::GemmBufs;
+use super::GemmKernelCfg;
+use crate::hw::DeviceId;
+use crate::mem::pgl::ReduceOp;
+use crate::mem::{BufId, MemPool};
+use crate::pk::primitives::{all_reduce, store_add_async, store_async, TileRef};
+use crate::pk::template::Lcsc;
+use crate::plan::{Effect, MatView, Op, Plan, SyncScope};
+
+pub use super::gemm_rs::Schedule;
+
+/// Buffers: GEMM operands plus the output PGL (one m×n replica per
+/// device). For the inter-SM path `c` holds local partials that the
+/// in-network all-reduce overwrites in place. The intra-SM path needs a
+/// *separate* accumulation target `out` — atomically adding into the same
+/// buffers the senders read from would double-count contributions (real
+/// kernels use a distinct destination PGL for exactly this reason).
+#[derive(Clone, Debug)]
+pub struct GemmArBufs {
+    pub gemm: GemmBufs,
+    /// Intra-SM accumulation replicas (zero-initialised).
+    pub out: Vec<crate::mem::BufId>,
+}
+
+impl GemmArBufs {
+    pub fn alloc(pool: &mut MemPool, cfg: &GemmKernelCfg) -> Self {
+        let n_dev = cfg.node.num_devices;
+        GemmArBufs {
+            gemm: GemmBufs::alloc(pool, cfg),
+            out: (0..n_dev)
+                .map(|d| pool.alloc(DeviceId(d), crate::mem::tile::Shape4::mat(cfg.m, cfg.n)))
+                .collect(),
+        }
+    }
+
+    fn replica_views(&self, cfg: &GemmKernelCfg, row: usize) -> Vec<MatView> {
+        self.gemm
+            .c
+            .iter()
+            .map(|&b| MatView::full2d(b, cfg.m, cfg.n).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.n))
+            .collect()
+    }
+}
+
+/// Build the fused GEMM+AR kernel.
+pub fn build(cfg: &GemmKernelCfg, schedule: Schedule, bufs: Option<&GemmArBufs>) -> Plan {
+    match schedule {
+        Schedule::InterSm => build_inter(cfg, bufs),
+        Schedule::IntraSm => build_intra(cfg, bufs),
+    }
+}
+
+/// PK's inter-SM + in-network reduction schedule (the Appendix D kernel).
+fn build_inter(cfg: &GemmKernelCfg, bufs: Option<&GemmArBufs>) -> Plan {
+    let n_dev = cfg.node.num_devices;
+    assert!(cfg.node.multimem, "in-network AR needs multimem (Appendix F)");
+    let grid_m = cfg.grid_m();
+    let mut opts = cfg.opts;
+    if opts.num_comm_sms == 0 {
+        opts.num_comm_sms = 16;
+    }
+    let mut l = Lcsc::new(cfg.node.clone(), opts);
+    let dur = l.tile_gemm_time(cfg.tile_m, cfg.n, cfg.k);
+    let comm_sms = l.comm_sms_per_worker();
+    // arrival barrier per tile-row: reaches n_dev when every device stored.
+    let arrivals: Vec<_> = (0..grid_m).map(|_| l.plan.add_sem(0)).collect();
+
+    for dev in 0..n_dev {
+        // compute + local store + signal the reducer device
+        for (w, rows) in l.split_tasks(dev, grid_m) {
+            for row in rows {
+                let effect = bufs.map(|b| Effect::Gemm {
+                    a: MatView::full2d(b.gemm.a[dev], cfg.m, cfg.k).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.k),
+                    b: MatView::full2d(b.gemm.b[dev], cfg.k, cfg.n),
+                    // accumulate into the local replica (partial sums live
+                    // in HBM until the in-network reduce)
+                    c: MatView::full2d(b.gemm.c[dev], cfg.m, cfg.n).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.n),
+                    accumulate: false,
+                });
+                l.plan.push(w, Op::Compute { dur, label: "gemm_tile_row", effect });
+                // storer: local HBM write (no link traffic) + barrier signal
+                l.plan.push(w, Op::Signal { sem: arrivals[row], value: 1, scope: SyncScope::InterDevice });
+            }
+        }
+        // communicator: all_reduce the tile-rows this device is assigned
+        // (round-robin, task_id % NUM_DEVICES as in Appendix D)
+        let comm_ws = l.comm[dev].clone();
+        for (i, &cw) in comm_ws.iter().enumerate() {
+            for row in (0..grid_m).filter(|r| r % n_dev == dev) {
+                if row / n_dev % comm_ws.len() != i {
+                    continue;
+                }
+                l.plan.push(cw, Op::Wait { sem: arrivals[row], value: n_dev as u64 });
+                match bufs {
+                    Some(b) => {
+                        let replicas = b.replica_views(cfg, row);
+                        all_reduce(&mut l.plan, &cfg.node.gpu, cw, replicas, DeviceId(dev), ReduceOp::Add, comm_sms);
+                    }
+                    None => {
+                        // timing-only: same two multimem flows, no effects
+                        let ph = MatView { buf: BufId(0), b: 0, d: 0, row0: 0, col0: 0, rows: cfg.tile_m, cols: cfg.n };
+                        all_reduce(&mut l.plan, &cfg.node.gpu, cw, vec![ph; n_dev], DeviceId(dev), ReduceOp::Add, comm_sms);
+                        strip_last_effects(&mut l.plan, cw, 2);
+                    }
+                }
+            }
+        }
+    }
+    l.finish()
+}
+
+/// Intra-SM ablation: direct atomic stores to all replicas.
+fn build_intra(cfg: &GemmKernelCfg, bufs: Option<&GemmArBufs>) -> Plan {
+    let n_dev = cfg.node.num_devices;
+    let grid_m = cfg.grid_m();
+    let mut opts = cfg.opts;
+    opts.num_comm_sms = 0;
+    let mut l = Lcsc::new(cfg.node.clone(), opts);
+    let dur = l.tile_gemm_time(cfg.tile_m, cfg.n, cfg.k);
+    let store_sms = cfg.sms_per_compute_worker();
+    for dev in 0..n_dev {
+        for (w, rows) in l.split_tasks(dev, grid_m) {
+            let slots = l.plan.add_sem(l.opts.pipeline_stages * n_dev as u64);
+            let mut acquired = 0;
+            for row in rows {
+                let effect = bufs.map(|b| Effect::Gemm {
+                    a: MatView::full2d(b.gemm.a[dev], cfg.m, cfg.k).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.k),
+                    b: MatView::full2d(b.gemm.b[dev], cfg.k, cfg.n),
+                    c: MatView::full2d(b.gemm.c[dev], cfg.m, cfg.n).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.n),
+                    accumulate: false,
+                });
+                acquired += n_dev as u64;
+                l.plan.push(w, Op::Wait { sem: slots, value: acquired });
+                l.plan.push(w, Op::Compute { dur, label: "gemm_tile_row", effect });
+                // N atomic writes into the destination replicas (the local
+                // one is free on the interconnect but still an HBM add).
+                for dst in 0..n_dev {
+                    let (src, dstv) = match bufs {
+                        Some(b) => (
+                            MatView::full2d(b.gemm.c[dev], cfg.m, cfg.n).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.n),
+                            MatView::full2d(b.out[dst], cfg.m, cfg.n).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.n),
+                        ),
+                        None => {
+                            let ph = MatView { buf: BufId(0), b: 0, d: 0, row0: 0, col0: 0, rows: cfg.tile_m, cols: cfg.n };
+                            (ph, ph)
+                        }
+                    };
+                    store_add_async(&mut l.plan, &cfg.node.gpu, w, TileRef::new(src, DeviceId(dev)), TileRef::new(dstv, DeviceId(dst)), Some(slots));
+                    if let Some(Op::Transfer { spec, effect, .. }) = l.plan.workers[w].ops.last_mut() {
+                        spec.n_sms = store_sms;
+                        if bufs.is_none() {
+                            *effect = None;
+                        }
+                    }
+                }
+            }
+            l.plan.push(w, Op::Wait { sem: slots, value: acquired + l.opts.pipeline_stages * n_dev as u64 });
+        }
+    }
+    let _ = store_async; // (siblings use plain stores; AR uses atomics)
+    l.finish()
+}
+
+fn strip_last_effects(plan: &mut Plan, w: usize, count: usize) {
+    let len = plan.workers[w].ops.len();
+    for op in plan.workers[w].ops[len - count..].iter_mut() {
+        if let Op::Transfer { effect, .. } = op {
+            *effect = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::hw::spec::NodeSpec;
+    use crate::util::{assert_allclose, linalg, seeded_vec};
+
+    fn reference_ar(pool: &MemPool, bufs: &GemmArBufs, cfg: &GemmKernelCfg) -> Vec<f32> {
+        let n_dev = cfg.node.num_devices;
+        let mut full = vec![0.0f32; cfg.m * cfg.n];
+        for d in 0..n_dev {
+            let prod = linalg::matmul(&pool.get(bufs.gemm.a[d]).data, &pool.get(bufs.gemm.b[d]).data, cfg.m, cfg.n, cfg.k);
+            for (f, p) in full.iter_mut().zip(prod) {
+                *f += p;
+            }
+        }
+        full
+    }
+
+    fn run_functional(schedule: Schedule) {
+        let n_dev = 4;
+        let node = NodeSpec::test_node(n_dev);
+        let mut cfg = GemmKernelCfg::functional(node, 64, 32, 16);
+        cfg.opts.num_comm_sms = if schedule == Schedule::InterSm { 8 } else { 0 };
+        let mut pool = MemPool::new();
+        let bufs = GemmArBufs::alloc(&mut pool, &cfg);
+        for d in 0..n_dev {
+            pool.get_mut(bufs.gemm.a[d]).data = seeded_vec(d as u64 + 1, 64 * 16);
+            pool.get_mut(bufs.gemm.b[d]).data = seeded_vec(d as u64 + 31, 16 * 32);
+        }
+        let want = reference_ar(&pool, &bufs, &cfg);
+        let plan = build(&cfg, schedule, Some(&bufs));
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        for d in 0..n_dev {
+            let result = match schedule {
+                Schedule::InterSm => &pool.get(bufs.gemm.c[d]).data,
+                Schedule::IntraSm => &pool.get(bufs.out[d]).data,
+            };
+            assert_allclose(result, &want, 1e-4, 1e-5);
+        }
+    }
+
+    #[test]
+    fn functional_inter_sm_all_reduce_correct_everywhere() {
+        run_functional(Schedule::InterSm);
+    }
+
+    #[test]
+    fn functional_intra_sm_all_reduce_correct_everywhere() {
+        run_functional(Schedule::IntraSm);
+    }
+
+    #[test]
+    fn figure4_inter_sm_multimem_wins_big() {
+        // Figure 4 (right): in-network AR ≈ 3.62× over intra-SM for
+        // N=32768, local K = N/8.
+        let node = NodeSpec::hgx_h100();
+        let cfg = GemmKernelCfg::new(node.clone(), 32768, 32768, 4096);
+        let inter = TimedExec::new(node.clone()).run(&build(&cfg, Schedule::InterSm, None)).total_time;
+        let intra = TimedExec::new(node.clone()).run(&build(&cfg, Schedule::IntraSm, None)).total_time;
+        let speedup = intra / inter;
+        assert!(speedup > 2.0 && speedup < 6.0, "multimem AR should win ~3.6x, got {speedup}");
+    }
+}

@@ -1,0 +1,120 @@
+//! The paper's evaluated kernels (§4), built on the PK primitives and the
+//! LCSC template.
+//!
+//! Every kernel is a *plan builder*: given a configuration (and, for
+//! functional runs, the buffers), it emits a [`crate::plan::Plan`] that the
+//! functional executor verifies numerically and the timed executor
+//! measures. Paper-scale shapes run timed-only (buffers omitted — effects
+//! skipped); small shapes run both.
+//!
+//! * [`gemm`] — the local tiled GEMM (consumer pipeline); every fused
+//!   kernel embeds it.
+//! * [`collectives`] — PK pure collectives (Figure 6, Figures 15–17):
+//!   direct tile-granular all-reduce / all-gather / reduce-scatter /
+//!   all-to-all with no rendezvous and no staging.
+//! * [`gemm_rs`] — fused GEMM + reduce-scatter (Figure 4 left, Table 3,
+//!   Figure 8): intra-SM overlap via `store_add_async`.
+//! * [`gemm_ar`] — fused GEMM + all-reduce (Figure 4 right, Figure 9):
+//!   inter-SM overlap with in-network (multimem) reduction — the
+//!   Appendix D example kernel.
+//! * [`ag_gemm`] — fused all-gather + GEMM (Figures 5, 7): inter-SM
+//!   overlap with in-fabric broadcast.
+//! * [`ring_attention`] — fused blockwise attention + KV ring (Figure 10)
+//!   with communicator-driven bulk KV prefetch (remote cache reuse,
+//!   §3.1.3).
+//! * [`ulysses`] — DeepSpeed-Ulysses attention with a fine-grained
+//!   all-to-all that needs no reshape (Figure 11, Figure 17).
+//! * [`moe`] — expert-parallel token dispatch overlapped with the expert's
+//!   grouped GEMM (Figure 12).
+
+pub mod ag_gemm;
+pub mod collectives;
+pub mod gemm;
+pub mod gemm_ar;
+pub mod gemm_rs;
+pub mod moe;
+pub mod ring_attention;
+pub mod ulysses;
+
+use crate::hw::spec::NodeSpec;
+use crate::pk::template::LcscOpts;
+
+/// Shared configuration for the GEMM-family kernels. `m × n × k` is the
+/// **local, per-device** GEMM (the paper's figures give local shapes).
+#[derive(Clone, Debug)]
+pub struct GemmKernelCfg {
+    pub node: NodeSpec,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Hardware output tile (CTA tile): defaults 128×256 BF16.
+    pub tile_m: usize,
+    pub tile_n: usize,
+    pub opts: LcscOpts,
+}
+
+impl GemmKernelCfg {
+    pub fn new(node: NodeSpec, m: usize, n: usize, k: usize) -> Self {
+        GemmKernelCfg { node, m, n, k, tile_m: 128, tile_n: 256, opts: LcscOpts::default() }
+    }
+
+    /// Small-shape config for functional tests: tiny tiles, few workers,
+    /// so every code path is exercised with real numerics.
+    pub fn functional(node: NodeSpec, m: usize, n: usize, k: usize) -> Self {
+        GemmKernelCfg {
+            node,
+            m,
+            n,
+            k,
+            tile_m: 16,
+            tile_n: 16,
+            opts: LcscOpts {
+                num_comm_sms: 0,
+                workers_per_device: 2,
+                comm_workers_per_device: 1,
+                pipeline_stages: 2,
+            },
+        }
+    }
+
+    pub fn grid_m(&self) -> usize {
+        assert_eq!(self.m % self.tile_m, 0, "m {} % tile_m {}", self.m, self.tile_m);
+        self.m / self.tile_m
+    }
+
+    pub fn grid_n(&self) -> usize {
+        assert_eq!(self.n % self.tile_n, 0, "n {} % tile_n {}", self.n, self.tile_n);
+        self.n / self.tile_n
+    }
+
+    /// Local GEMM FLOPs per device.
+    pub fn local_flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// One TMA message per hardware tile (bytes).
+    pub fn tile_msg_bytes(&self) -> f64 {
+        (self.tile_m * self.tile_n) as f64 * crate::mem::ELEM_BYTES as f64
+    }
+
+    /// SMs represented by one compute worker (drives store rate caps).
+    pub fn sms_per_compute_worker(&self) -> f64 {
+        (self.node.gpu.num_sms - self.opts.num_comm_sms) as f64 / self.opts.workers_per_device as f64
+    }
+}
+
+/// Measured output of one kernel run (what the paper's figures plot).
+#[derive(Clone, Copy, Debug)]
+pub struct KernelRun {
+    /// Wall-clock kernel time (seconds).
+    pub time: f64,
+    /// Useful FLOPs executed per device.
+    pub flops: f64,
+}
+
+impl KernelRun {
+    /// Observed average compute throughput (the paper's y-axis).
+    pub fn tflops(&self) -> f64 {
+        self.flops / self.time / 1e12
+    }
+}

@@ -1,0 +1,476 @@
+//! Expert-parallel token dispatch + grouped GEMM (Figure 12).
+//!
+//! Experts are sharded across devices; each device routes its local tokens
+//! to the owning devices of their top-K experts (a fine-grained
+//! all-to-all), and each expert runs its first MLP GEMM over the tokens it
+//! received. PK overlaps the dispatch with the expert GEMMs: an expert
+//! starts computing as soon as *its* tokens have landed, rather than after
+//! the full exchange — the same fine-grained overlap Comet hand-tunes
+//! (the Comet baseline model is in [`crate::baselines::comet`]).
+//!
+//! Routing is an input to the kernel (the router runs upstream); the plan
+//! builder receives the assignment table, mirroring how real MoE kernels
+//! receive routing metadata.
+
+use crate::hw::spec::NodeSpec;
+use crate::hw::DeviceId;
+use crate::mem::tile::Shape4;
+use crate::mem::{BufId, MemPool, ELEM_BYTES};
+use crate::plan::{Effect, MatView, Op, Plan, Role, Route, SyncScope, TransferSpec};
+use crate::xfer::Mechanism;
+
+/// MoE configuration. Tokens are the global count (Figure 12 x-axis),
+/// initially partitioned evenly across devices.
+#[derive(Clone, Debug)]
+pub struct MoeCfg {
+    pub node: NodeSpec,
+    /// Total tokens across all devices.
+    pub tokens: usize,
+    /// Model (hidden) dimension — paper: 7168.
+    pub hidden: usize,
+    /// Expert FFN dimension — paper: 2048.
+    pub h_expert: usize,
+    /// Total experts — paper: 256.
+    pub n_experts: usize,
+    /// Experts chosen per token — paper: 8.
+    pub top_k: usize,
+    /// SMs per device left free for communication by the grouped GEMM.
+    pub comm_sms: u32,
+}
+
+impl MoeCfg {
+    /// Paper configuration (TopK=8, E=256, H=7168, He=2048).
+    pub fn paper(node: NodeSpec, tokens: usize) -> Self {
+        MoeCfg { node, tokens, hidden: 7168, h_expert: 2048, n_experts: 256, top_k: 8, comm_sms: 16 }
+    }
+
+    pub fn tokens_local(&self) -> usize {
+        assert_eq!(self.tokens % self.node.num_devices, 0);
+        self.tokens / self.node.num_devices
+    }
+
+    pub fn experts_local(&self) -> usize {
+        assert_eq!(self.n_experts % self.node.num_devices, 0);
+        self.n_experts / self.node.num_devices
+    }
+
+    /// Owning device of an expert.
+    pub fn expert_device(&self, e: usize) -> usize {
+        e / self.experts_local()
+    }
+
+    /// Grouped-GEMM FLOPs per device (expected, uniform routing).
+    pub fn gemm_flops_per_device(&self) -> f64 {
+        let routed = self.tokens as f64 * self.top_k as f64 / self.node.num_devices as f64;
+        2.0 * routed * self.hidden as f64 * self.h_expert as f64
+    }
+
+    /// One token row's bytes.
+    pub fn token_bytes(&self) -> f64 {
+        self.hidden as f64 * ELEM_BYTES as f64
+    }
+}
+
+/// Routing table: `experts[t]` = the top-K experts of global token `t`
+/// (tokens `d*tokens_local ..` live on device `d`).
+#[derive(Clone, Debug)]
+pub struct Routing {
+    pub experts: Vec<Vec<usize>>,
+}
+
+impl Routing {
+    /// Deterministic pseudo-random uniform routing.
+    pub fn uniform(cfg: &MoeCfg, seed: u64) -> Self {
+        let mut experts = Vec::with_capacity(cfg.tokens);
+        let mut state = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            state = state.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = state;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            (z ^ (z >> 31)) as usize
+        };
+        for _ in 0..cfg.tokens {
+            let mut chosen = Vec::with_capacity(cfg.top_k);
+            while chosen.len() < cfg.top_k {
+                let e = next() % cfg.n_experts;
+                if !chosen.contains(&e) {
+                    chosen.push(e);
+                }
+            }
+            experts.push(chosen);
+        }
+        Routing { experts }
+    }
+
+    /// Tokens routed to expert `e`, in deterministic (token-id) order.
+    pub fn tokens_for(&self, e: usize) -> Vec<usize> {
+        (0..self.experts.len()).filter(|&t| self.experts[t].contains(&e)).collect()
+    }
+
+    /// Token count per expert, computed in one pass (the hot-path form of
+    /// `tokens_for(e).len()` — O(T·K) instead of O(E·T·K)).
+    pub fn counts(&self, n_experts: usize) -> Vec<u64> {
+        let mut c = vec![0u64; n_experts];
+        for ex in &self.experts {
+            for &e in ex {
+                c[e] += 1;
+            }
+        }
+        c
+    }
+}
+
+/// Functional buffers.
+#[derive(Clone, Debug)]
+pub struct MoeBufs {
+    /// `tokens[d]`: (tokens_local × hidden) activations on device d.
+    pub tokens: Vec<BufId>,
+    /// `expert_in[d]`: per-expert segmented input (capacity × hidden);
+    /// shape (E_local, 1, cap, hidden) — slot layout fixed by `Routing`.
+    pub expert_in: Vec<BufId>,
+    /// `w1[d]`: per-expert weights (E_local, 1, hidden, h_expert).
+    pub w1: Vec<BufId>,
+    /// `expert_out[d]`: (E_local, 1, cap, h_expert).
+    pub expert_out: Vec<BufId>,
+    /// capacity (max tokens per expert) used for the slot layout.
+    pub cap: usize,
+}
+
+impl MoeBufs {
+    pub fn alloc(pool: &mut MemPool, cfg: &MoeCfg, routing: &Routing) -> Self {
+        let n = cfg.node.num_devices;
+        let el = cfg.experts_local();
+        let cap = routing.counts(cfg.n_experts).into_iter().max().unwrap_or(1).max(1) as usize;
+        MoeBufs {
+            tokens: (0..n).map(|d| pool.alloc(DeviceId(d), Shape4::mat(cfg.tokens_local(), cfg.hidden))).collect(),
+            expert_in: (0..n)
+                .map(|d| pool.alloc(DeviceId(d), Shape4 { b: el, d: 1, r: cap, c: cfg.hidden }))
+                .collect(),
+            w1: (0..n)
+                .map(|d| pool.alloc(DeviceId(d), Shape4 { b: el, d: 1, r: cfg.hidden, c: cfg.h_expert }))
+                .collect(),
+            expert_out: (0..n)
+                .map(|d| pool.alloc(DeviceId(d), Shape4 { b: el, d: 1, r: cap, c: cfg.h_expert }))
+                .collect(),
+            cap,
+        }
+    }
+}
+
+/// Overlap style for ablations/baselines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MoeSchedule {
+    /// PK: experts start computing as soon as their tokens land.
+    Overlapped,
+    /// Dispatch fully completes before any expert GEMM (the non-overlapped
+    /// baseline's structure).
+    Sequential,
+}
+
+/// Timing-mode dispatch waves: tokens move in this many pipelined chunks,
+/// and each expert's GEMM is split the same way, so wave `i`'s compute
+/// overlaps wave `i+1`'s dispatch (the fine-grained overlap PK and Comet
+/// both implement).
+pub const DISPATCH_WAVES: usize = 4;
+
+/// Build the fused dispatch + grouped-GEMM kernel.
+pub fn build(cfg: &MoeCfg, routing: &Routing, schedule: MoeSchedule, bufs: Option<&MoeBufs>) -> Plan {
+    let n = cfg.node.num_devices;
+    let tl = cfg.tokens_local();
+    let el = cfg.experts_local();
+    let mut plan = Plan::new();
+    plan.launch_overhead = cfg.node.gpu.kernel_launch;
+
+    // per-expert arrival counters
+    let arrived: Vec<_> = (0..cfg.n_experts).map(|_| plan.add_sem(0)).collect();
+    // expected arrivals per expert
+    let expected: Vec<u64> = routing.counts(cfg.n_experts);
+    // contrib[d][e]: tokens device d routes to expert e (timing-mode wave
+    // accounting; exact so per-wave waits never starve on rounding)
+    let contrib: Vec<Vec<u64>> = (0..n)
+        .map(|d| {
+            let mut c = vec![0u64; cfg.n_experts];
+            for lt in 0..tl {
+                for &e in &routing.experts[d * tl + lt] {
+                    c[e] += 1;
+                }
+            }
+            c
+        })
+        .collect();
+    let wave_share = |total: u64, wave: usize| -> u64 {
+        let base = total / DISPATCH_WAVES as u64;
+        if wave == DISPATCH_WAVES - 1 { total - base * (DISPATCH_WAVES as u64 - 1) } else { base }
+    };
+    // cumulative credits per expert after each wave (all sources landed)
+    let cum_credit: Vec<Vec<u64>> = (0..cfg.n_experts)
+        .map(|e| {
+            let mut acc = 0u64;
+            (0..DISPATCH_WAVES)
+                .map(|w| {
+                    for d in 0..n {
+                        acc += wave_share(contrib[d][e], w);
+                    }
+                    acc
+                })
+                .collect()
+        })
+        .collect();
+    // expert slot of each (expert, token): position in tokens_for order
+    let slot_of = |e: usize, t: usize| routing.tokens_for(e).iter().position(|&x| x == t).unwrap();
+
+    // ---- dispatch workers (one per source device)
+    for d in 0..n {
+        let w = plan.add_worker(DeviceId(d), Role::CommSm, format!("moe_dispatch/d{d}"));
+        match bufs {
+            Some(b) => {
+                // per-token-copy sends (functional, small shapes)
+                for lt in 0..tl {
+                    let t = d * tl + lt;
+                    for &e in &routing.experts[t] {
+                        let dst_dev = cfg.expert_device(e);
+                        let src = MatView::full2d(b.tokens[d], tl, cfg.hidden).sub(lt, 0, 1, cfg.hidden);
+                        let dst = MatView {
+                            buf: b.expert_in[dst_dev],
+                            b: e % el,
+                            d: 0,
+                            row0: slot_of(e, t),
+                            col0: 0,
+                            rows: 1,
+                            cols: cfg.hidden,
+                        };
+                        plan.push(
+                            w,
+                            Op::Transfer {
+                                spec: TransferSpec {
+                                    mech: Mechanism::Tma,
+                                    route: Route::P2p { src: DeviceId(d), dst: DeviceId(dst_dev) },
+                                    bytes: cfg.token_bytes(),
+                                    msg_bytes: cfg.token_bytes(),
+                                    n_sms: cfg.comm_sms as f64,
+                                },
+                                blocking: false,
+                                done_sem: Some(arrived[e]),
+                                done_scope: SyncScope::InterDevice,
+                                label: "moe_token_send",
+                                effect: Some(Effect::CopyMat { src, dst, reduce: None }),
+                            },
+                        );
+                    }
+                }
+            }
+            None => {
+                // timing: DISPATCH_WAVES pipelined rounds per destination
+                // with token-row message granularity. Waves are issued
+                // *sequentially* (wave w+1 starts when wave w lands), so
+                // experts begin wave-w GEMM chunks while later waves are
+                // still in flight — the fine-grained overlap itself.
+                for wave in 0..DISPATCH_WAVES {
+                    let mut pending: Vec<(crate::plan::SemId, Vec<(usize, u64)>)> = vec![];
+                    for dst_dev in 0..n {
+                        let tokens_to_dst: u64 =
+                            (0..el).map(|le| contrib[d][dst_dev * el + le]).sum();
+                        // this wave's share (last wave takes the remainder)
+                        let share: u64 = (0..el).map(|le| wave_share(contrib[d][dst_dev * el + le], wave)).sum();
+                        let _ = tokens_to_dst;
+                        if share == 0 {
+                            continue;
+                        }
+                        let bytes = share as f64 * cfg.token_bytes();
+                        let drain = plan.add_sem(0);
+                        plan.push(
+                            w,
+                            Op::Transfer {
+                                spec: TransferSpec {
+                                    mech: Mechanism::Tma,
+                                    route: Route::P2p { src: DeviceId(d), dst: DeviceId(dst_dev) },
+                                    bytes,
+                                    msg_bytes: cfg.token_bytes(),
+                                    n_sms: cfg.comm_sms as f64 / n as f64,
+                                },
+                                blocking: false,
+                                done_sem: Some(drain),
+                                done_scope: SyncScope::InterDevice,
+                                label: "moe_dispatch_wave",
+                                effect: None,
+                            },
+                        );
+                        // credit each destination expert with its share of
+                        // this wave (approximately uniform within the wave)
+                        let mut credits = vec![];
+                        for le in 0..el {
+                            let e = dst_dev * el + le;
+                            let c = wave_share(contrib[d][e], wave);
+                            if c > 0 {
+                                credits.push((e, c));
+                            }
+                        }
+                        pending.push((drain, credits));
+                    }
+                    // wave barrier: wait for this wave's flows, then credit
+                    for (drain, credits) in pending {
+                        plan.push(w, Op::Wait { sem: drain, value: 1 });
+                        for (e, contrib) in credits {
+                            plan.push(w, Op::Signal { sem: arrived[e], value: contrib, scope: SyncScope::InterDevice });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- expert GEMM workers (one per device; experts processed in
+    // arrival-friendly order)
+    let comp_sms = cfg.node.gpu.num_sms - cfg.comm_sms;
+    let comp_flops = cfg.node.gpu.tc_flops_for_sms(comp_sms);
+    for dev in 0..n {
+        let w = plan.add_worker(DeviceId(dev), Role::ComputeSm, format!("moe_gemm/d{dev}"));
+        if schedule == MoeSchedule::Sequential {
+            // wait for the entire exchange first
+            for le in 0..el {
+                let e = dev * el + le;
+                plan.push(w, Op::Wait { sem: arrived[e], value: expected[e] });
+            }
+        }
+        match bufs {
+            Some(b) => {
+                for le in 0..el {
+                    let e = dev * el + le;
+                    if expected[e] == 0 {
+                        continue;
+                    }
+                    if schedule == MoeSchedule::Overlapped {
+                        plan.push(w, Op::Wait { sem: arrived[e], value: expected[e] });
+                    }
+                    let flops = 2.0 * expected[e] as f64 * cfg.hidden as f64 * cfg.h_expert as f64;
+                    let effect = Some(Effect::Gemm {
+                        a: MatView { buf: b.expert_in[dev], b: le, d: 0, row0: 0, col0: 0, rows: expected[e] as usize, cols: cfg.hidden },
+                        b: MatView { buf: b.w1[dev], b: le, d: 0, row0: 0, col0: 0, rows: cfg.hidden, cols: cfg.h_expert },
+                        c: MatView { buf: b.expert_out[dev], b: le, d: 0, row0: 0, col0: 0, rows: expected[e] as usize, cols: cfg.h_expert },
+                        accumulate: false,
+                    });
+                    plan.push(w, Op::Compute { dur: flops / comp_flops, label: "expert_gemm", effect });
+                }
+            }
+            None => {
+                // timing: wave-major — every expert's wave-w chunk runs
+                // before any expert's wave-w+1, so compute tracks the
+                // dispatch pipeline instead of head-of-line blocking on
+                // the first expert's last wave.
+                for wave in 0..DISPATCH_WAVES {
+                    for le in 0..el {
+                        let e = dev * el + le;
+                        if expected[e] == 0 {
+                            continue;
+                        }
+                        let prev = if wave == 0 { 0 } else { cum_credit[e][wave - 1] };
+                        let share = cum_credit[e][wave] - prev;
+                        if share == 0 {
+                            continue;
+                        }
+                        if schedule == MoeSchedule::Overlapped {
+                            plan.push(w, Op::Wait { sem: arrived[e], value: cum_credit[e][wave].max(1) });
+                        }
+                        let flops = 2.0 * share as f64 * cfg.hidden as f64 * cfg.h_expert as f64;
+                        plan.push(w, Op::Compute { dur: flops / comp_flops, label: "expert_gemm_wave", effect: None });
+                    }
+                }
+            }
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::util::{assert_allclose, linalg, seeded_vec};
+
+    fn small_cfg(n_dev: usize) -> MoeCfg {
+        MoeCfg {
+            node: NodeSpec::test_node(n_dev),
+            tokens: n_dev * 6,
+            hidden: 8,
+            h_expert: 4,
+            n_experts: n_dev * 2,
+            top_k: 2,
+            comm_sms: 8,
+        }
+    }
+
+    #[test]
+    fn routing_uniform_properties() {
+        let cfg = small_cfg(4);
+        let r = Routing::uniform(&cfg, 42);
+        assert_eq!(r.experts.len(), cfg.tokens);
+        for ex in &r.experts {
+            assert_eq!(ex.len(), cfg.top_k);
+            // distinct experts per token
+            let mut s = ex.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), cfg.top_k);
+            assert!(ex.iter().all(|&e| e < cfg.n_experts));
+        }
+        // token conservation: sum over experts of tokens_for == tokens * top_k
+        let total: usize = (0..cfg.n_experts).map(|e| r.tokens_for(e).len()).sum();
+        assert_eq!(total, cfg.tokens * cfg.top_k);
+    }
+
+    #[test]
+    fn functional_moe_dispatch_and_gemm() {
+        let cfg = small_cfg(4);
+        let routing = Routing::uniform(&cfg, 7);
+        let mut pool = MemPool::new();
+        let bufs = MoeBufs::alloc(&mut pool, &cfg, &routing);
+        let tl = cfg.tokens_local();
+        for d in 0..4 {
+            pool.get_mut(bufs.tokens[d]).data = seeded_vec(d as u64 + 1, tl * cfg.hidden);
+            let el = cfg.experts_local();
+            pool.get_mut(bufs.w1[d]).data = seeded_vec(d as u64 + 99, el * cfg.hidden * cfg.h_expert);
+        }
+        let plan = build(&cfg, &routing, MoeSchedule::Overlapped, Some(&bufs));
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        // reference: for each expert, gather its tokens and multiply
+        let el = cfg.experts_local();
+        for e in 0..cfg.n_experts {
+            let toks = routing.tokens_for(e);
+            if toks.is_empty() {
+                continue;
+            }
+            let dev = cfg.expert_device(e);
+            let le = e % el;
+            // gather token rows from source devices
+            let mut x = vec![0.0f32; toks.len() * cfg.hidden];
+            for (i, &t) in toks.iter().enumerate() {
+                let src_dev = t / tl;
+                let lt = t % tl;
+                let row = &pool.get(bufs.tokens[src_dev]).data[lt * cfg.hidden..(lt + 1) * cfg.hidden];
+                x[i * cfg.hidden..(i + 1) * cfg.hidden].copy_from_slice(row);
+            }
+            let wbuf = pool.get(bufs.w1[dev]);
+            let woff = wbuf.shape.offset(le, 0, 0, 0);
+            let wmat = &wbuf.data[woff..woff + cfg.hidden * cfg.h_expert];
+            let want = linalg::matmul(&x, wmat, toks.len(), cfg.h_expert, cfg.hidden);
+            let obuf = pool.get(bufs.expert_out[dev]);
+            let ooff = obuf.shape.offset(le, 0, 0, 0);
+            assert_allclose(&obuf.data[ooff..ooff + toks.len() * cfg.h_expert], &want, 1e-4, 1e-5);
+        }
+    }
+
+    #[test]
+    fn overlapped_beats_sequential() {
+        let node = NodeSpec::hgx_h100();
+        let cfg = MoeCfg::paper(node.clone(), 8192);
+        let routing = Routing::uniform(&cfg, 3);
+        let t_ov = TimedExec::new(node.clone())
+            .run(&build(&cfg, &routing, MoeSchedule::Overlapped, None))
+            .total_time;
+        let t_seq = TimedExec::new(node.clone())
+            .run(&build(&cfg, &routing, MoeSchedule::Sequential, None))
+            .total_time;
+        assert!(t_ov < t_seq, "overlap must help: {t_ov} vs {t_seq}");
+    }
+}

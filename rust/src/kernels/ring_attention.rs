@@ -1,0 +1,304 @@
+//! Fused Ring Attention (Figure 10; §3.1.3 "remote cache reuse").
+//!
+//! Q, K, V are sequence-sharded. Over `N` steps each device computes
+//! blockwise (online-softmax) attention of its local Q against the
+//! currently-resident KV shard while its communicator SMs bulk-transfer
+//! that shard to the ring neighbour's HBM. Staging KV through *local* HBM
+//! (instead of letting every thread block read peer memory) is the
+//! paper's remote-cache-reuse argument: peer reads are never cached on
+//! the requester, so per-block remote loads would re-cross NVLink for
+//! every Q block.
+//!
+//! PK fuses the whole ring into one kernel: one launch, one-way signals
+//! between steps. The xDiT baseline (separate NCCL P2P + FlashAttention
+//! launches per step) is in [`crate::baselines::xdit`].
+
+use crate::hw::spec::NodeSpec;
+use crate::hw::DeviceId;
+use crate::mem::tile::Shape4;
+use crate::mem::{BufId, MemPool, ELEM_BYTES};
+use crate::pk::template::{Lcsc, LcscOpts};
+use crate::plan::{Effect, MatView, Op, Plan, Route, SyncScope, TransferSpec};
+use crate::xfer::Mechanism;
+
+/// Ring-attention configuration. `s` is the **total** sequence length,
+/// partitioned evenly across devices (the paper's Figure 10 x-axis).
+#[derive(Clone, Debug)]
+pub struct RingAttnCfg {
+    pub node: NodeSpec,
+    pub b: usize,
+    pub h: usize,
+    pub s: usize,
+    pub d: usize,
+    pub opts: LcscOpts,
+    /// Attention kernels sustain a lower fraction of peak than GEMM
+    /// (softmax + rescaling on CUDA cores).
+    pub flash_util: f64,
+}
+
+impl RingAttnCfg {
+    /// Paper configuration: B=16, H=16, D=128.
+    pub fn paper(node: NodeSpec, s: usize) -> Self {
+        RingAttnCfg { node, b: 16, h: 16, s, d: 128, opts: LcscOpts::default(), flash_util: 0.75 }
+    }
+
+    pub fn s_local(&self) -> usize {
+        assert_eq!(self.s % self.node.num_devices, 0);
+        self.s / self.node.num_devices
+    }
+
+    /// Per-device FLOPs of one ring step (QK^T + PV over one KV shard).
+    pub fn step_flops(&self) -> f64 {
+        4.0 * (self.b * self.h) as f64 * (self.s_local() as f64).powi(2) * self.d as f64
+    }
+
+    /// KV shard bytes (K and V).
+    pub fn kv_shard_bytes(&self) -> f64 {
+        2.0 * (self.b * self.h * self.s_local() * self.d) as f64 * ELEM_BYTES as f64
+    }
+
+    /// Total attention FLOPs per device (what Figure 10's TFLOP/s divides).
+    pub fn total_flops(&self) -> f64 {
+        self.step_flops() * self.node.num_devices as f64
+    }
+}
+
+/// Functional buffers. K/V are full-sequence buffers per device whose
+/// shard slots fill as the ring rotates (the local-HBM staging).
+#[derive(Clone, Debug)]
+pub struct RingAttnBufs {
+    /// `q[d]`: (B, H, S_local, D) local queries.
+    pub q: Vec<BufId>,
+    /// `k[d]`, `v[d]`: (B, H, S, D); shard `d` resident initially.
+    pub k: Vec<BufId>,
+    pub v: Vec<BufId>,
+    /// `o[d]`: (B, H, S_local, D) outputs.
+    pub o: Vec<BufId>,
+}
+
+impl RingAttnBufs {
+    pub fn alloc(pool: &mut MemPool, cfg: &RingAttnCfg) -> Self {
+        let n = cfg.node.num_devices;
+        let sl = cfg.s_local();
+        let q_shape = Shape4 { b: cfg.b, d: cfg.h, r: sl, c: cfg.d };
+        let kv_shape = Shape4 { b: cfg.b, d: cfg.h, r: cfg.s, c: cfg.d };
+        RingAttnBufs {
+            q: (0..n).map(|d| pool.alloc(DeviceId(d), q_shape)).collect(),
+            k: (0..n).map(|d| pool.alloc(DeviceId(d), kv_shape)).collect(),
+            v: (0..n).map(|d| pool.alloc(DeviceId(d), kv_shape)).collect(),
+            o: (0..n).map(|d| pool.alloc(DeviceId(d), q_shape)).collect(),
+        }
+    }
+}
+
+/// Build the fused PK ring-attention kernel.
+pub fn build(cfg: &RingAttnCfg, bufs: Option<&RingAttnBufs>) -> Plan {
+    let n = cfg.node.num_devices;
+    let sl = cfg.s_local();
+    let mut opts = cfg.opts;
+    if opts.num_comm_sms == 0 {
+        // auto-partition (the template's tuning): just enough communicator
+        // SMs that the KV forward keeps up with the attention step, capped
+        // at the TMA saturation point — at long sequences compute
+        // dominates and 2 SMs suffice, at short sequences comm is the
+        // bottleneck and we saturate the link.
+        let g = &cfg.node.gpu;
+        let comp_est = cfg.step_flops() / (g.tc_flops_for_sms(g.num_sms - 8) * cfg.flash_util);
+        let required_rate = cfg.kv_shard_bytes() / (0.9 * comp_est);
+        let tma_full = g.nvlink_bw * g.tma_peak_frac;
+        let sms = (g.tma_sat_sms * required_rate / tma_full).ceil() as u32;
+        opts.num_comm_sms = sms.clamp(2, 16);
+    }
+    let mut l = Lcsc::new(cfg.node.clone(), opts);
+    // a single communicator worker drives the whole partition's SMs (the
+    // KV forward is one bulk transfer, not split across workers)
+    let comm_sms = opts.num_comm_sms as f64;
+    // attention step time on the compute partition
+    let comp_flops = cfg.node.gpu.tc_flops_for_sms(l.compute_sms()) * cfg.flash_util;
+    // tasks: (b, h) pairs, split across compute workers; duration scales
+    // by the worker's share.
+    let bh = cfg.b * cfg.h;
+
+    // arrived[dev][step]: shard for step `step+1` landed on `dev`.
+    let arrived: Vec<Vec<_>> = (0..n).map(|_| (0..n).map(|_| l.plan.add_sem(0)).collect()).collect();
+    // consumed[dev][step]: device finished computing with the shard it
+    // forwards at `step` (send can't outpace compute reads — in practice
+    // double-buffering decouples these; sending the *resident* shard is
+    // safe immediately, so the communicator only waits for arrival).
+    for dev in 0..n {
+        // --- communicator: forward the rotating shard each step.
+        let cw = l.comm[dev][0];
+        for step in 0..n - 1 {
+            let shard = (dev + n - step) % n; // shard resident at this step
+            if step > 0 {
+                l.plan.push(cw, Op::Wait { sem: arrived[dev][step - 1], value: 1 });
+            }
+            let next = (dev + 1) % n;
+            // functional: copy every (b, h) plane of K and V
+            if let Some(b) = bufs {
+                for bi in 0..cfg.b {
+                    for hi in 0..cfg.h {
+                        for (src_buf, dst_buf) in [(b.k[dev], b.k[next]), (b.v[dev], b.v[next])] {
+                            l.plan.push(
+                                cw,
+                                Op::Compute {
+                                    dur: 0.0,
+                                    label: "kv_fwd_copy",
+                                    effect: Some(Effect::CopyMat {
+                                        src: MatView { buf: src_buf, b: bi, d: hi, row0: shard * sl, col0: 0, rows: sl, cols: cfg.d },
+                                        dst: MatView { buf: dst_buf, b: bi, d: hi, row0: shard * sl, col0: 0, rows: sl, cols: cfg.d },
+                                        reduce: None,
+                                    }),
+                                },
+                            );
+                        }
+                    }
+                }
+            }
+            // the timed bulk transfer (one flow for the whole shard)
+            l.plan.push(
+                cw,
+                Op::Transfer {
+                    spec: TransferSpec {
+                        mech: Mechanism::Tma,
+                        route: Route::P2p { src: DeviceId(dev), dst: DeviceId(next) },
+                        bytes: cfg.kv_shard_bytes(),
+                        msg_bytes: (sl * cfg.d) as f64 * ELEM_BYTES as f64,
+                        n_sms: comm_sms,
+                    },
+                    blocking: true,
+                    done_sem: Some(arrived[next][step]),
+                    done_scope: SyncScope::InterDevice,
+                    label: "kv_ring_fwd",
+                    effect: None,
+                },
+            );
+        }
+        // --- compute: blockwise attention over the resident shard.
+        let tasks = l.split_tasks(dev, bh);
+        for (w, items) in &tasks {
+            // per-worker state per (b,h) it owns
+            let states: Vec<_> = items.iter().map(|_| l.plan.add_state()).collect();
+            // this worker's share of the step's FLOPs, at this worker's
+            // share of the compute partition's throughput
+            let per_worker = items.len().max(1) as f64 / bh as f64;
+            let worker_flops = comp_flops / l.opts.workers_per_device as f64;
+            let dur = cfg.step_flops() * per_worker / worker_flops;
+            for step in 0..n {
+                let shard = (dev + n - step) % n;
+                if step > 0 {
+                    l.plan.push(*w, Op::Wait { sem: arrived[dev][step - 1], value: 1 });
+                }
+                for (ti, &bh_idx) in items.iter().enumerate() {
+                    let (bi, hi) = (bh_idx / cfg.h, bh_idx % cfg.h);
+                    let effect = bufs.map(|b| Effect::AttnBlock {
+                        q: MatView { buf: b.q[dev], b: bi, d: hi, row0: 0, col0: 0, rows: sl, cols: cfg.d },
+                        k: MatView { buf: b.k[dev], b: bi, d: hi, row0: shard * sl, col0: 0, rows: sl, cols: cfg.d },
+                        v: MatView { buf: b.v[dev], b: bi, d: hi, row0: shard * sl, col0: 0, rows: sl, cols: cfg.d },
+                        state: states[ti],
+                    });
+                    let d_each = dur / items.len().max(1) as f64;
+                    l.plan.push(*w, Op::Compute { dur: d_each, label: "attn_block", effect });
+                }
+            }
+            for (ti, &bh_idx) in items.iter().enumerate() {
+                let (bi, hi) = (bh_idx / cfg.h, bh_idx % cfg.h);
+                let effect = bufs.map(|b| Effect::AttnFinalize {
+                    state: states[ti],
+                    out: MatView { buf: b.o[dev], b: bi, d: hi, row0: 0, col0: 0, rows: sl, cols: cfg.d },
+                });
+                l.plan.push(*w, Op::Compute { dur: 0.0, label: "attn_finalize", effect });
+            }
+        }
+    }
+    l.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::util::{assert_allclose, linalg, seeded_vec};
+
+    #[test]
+    fn functional_ring_attention_matches_full_attention() {
+        let n = 4;
+        let node = NodeSpec::test_node(n);
+        let cfg = RingAttnCfg {
+            node,
+            b: 2,
+            h: 2,
+            s: 32,
+            d: 8,
+            opts: LcscOpts { num_comm_sms: 4, workers_per_device: 2, comm_workers_per_device: 1, pipeline_stages: 2 },
+            flash_util: 0.75,
+        };
+        let sl = cfg.s_local();
+        let mut pool = MemPool::new();
+        let bufs = RingAttnBufs::alloc(&mut pool, &cfg);
+        // fill Q everywhere; K/V shards on their home devices only
+        let mut k_global = vec![vec![vec![0.0f32; 0]; cfg.h]; cfg.b];
+        let mut v_global = vec![vec![vec![0.0f32; 0]; cfg.h]; cfg.b];
+        for bi in 0..cfg.b {
+            for hi in 0..cfg.h {
+                k_global[bi][hi] = seeded_vec((bi * 7 + hi) as u64 + 1, cfg.s * cfg.d);
+                v_global[bi][hi] = seeded_vec((bi * 7 + hi) as u64 + 100, cfg.s * cfg.d);
+            }
+        }
+        for dev in 0..n {
+            for bi in 0..cfg.b {
+                for hi in 0..cfg.h {
+                    let q = seeded_vec((dev * 31 + bi * 7 + hi) as u64 + 500, sl * cfg.d);
+                    let qb = pool.get_mut(bufs.q[dev]);
+                    let off = qb.shape.offset(bi, hi, 0, 0);
+                    qb.data[off..off + sl * cfg.d].copy_from_slice(&q);
+                    // home shard of K/V
+                    let kb = pool.get_mut(bufs.k[dev]);
+                    let koff = kb.shape.offset(bi, hi, dev * sl, 0);
+                    kb.data[koff..koff + sl * cfg.d]
+                        .copy_from_slice(&k_global[bi][hi][dev * sl * cfg.d..(dev + 1) * sl * cfg.d]);
+                    let vb = pool.get_mut(bufs.v[dev]);
+                    let voff = vb.shape.offset(bi, hi, dev * sl, 0);
+                    vb.data[voff..voff + sl * cfg.d]
+                        .copy_from_slice(&v_global[bi][hi][dev * sl * cfg.d..(dev + 1) * sl * cfg.d]);
+                }
+            }
+        }
+        let plan = build(&cfg, Some(&bufs));
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        // each device's output == attention(Q_local, K_full, V_full)
+        for dev in 0..n {
+            for bi in 0..cfg.b {
+                for hi in 0..cfg.h {
+                    let qb = pool.get(bufs.q[dev]);
+                    let off = qb.shape.offset(bi, hi, 0, 0);
+                    let q = &qb.data[off..off + sl * cfg.d];
+                    let want = linalg::attention_ref(q, &k_global[bi][hi], &v_global[bi][hi], sl, cfg.s, cfg.d);
+                    let ob = pool.get(bufs.o[dev]);
+                    let ooff = ob.shape.offset(bi, hi, 0, 0);
+                    assert_allclose(&ob.data[ooff..ooff + sl * cfg.d], &want, 1e-4, 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn timed_large_s_is_compute_bound() {
+        let node = NodeSpec::hgx_h100();
+        let cfg = RingAttnCfg::paper(node.clone(), 98304); // 12288 * 8
+        let plan = build(&cfg, None);
+        let r = TimedExec::new(node.clone()).run(&plan);
+        let pure_comp = cfg.total_flops() / (node.gpu.tc_flops_for_sms(132 - 12) * cfg.flash_util);
+        let ratio = (r.total_time - pure_comp) / r.total_time;
+        assert!(ratio < 0.15, "long-S non-overlapped fraction ≤ ~9% (paper): {ratio}");
+    }
+
+    #[test]
+    fn timed_small_s_is_comm_dominated() {
+        let node = NodeSpec::hgx_h100();
+        let small = RingAttnCfg::paper(node.clone(), 6144);
+        let r = TimedExec::new(node.clone()).run(&build(&small, None));
+        let pure_comp = small.total_flops() / (node.gpu.tc_flops_for_sms(120) * small.flash_util);
+        assert!(r.total_time > 1.5 * pure_comp, "short-S should be comm/sync bound");
+    }
+}

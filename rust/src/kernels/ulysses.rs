@@ -1,0 +1,354 @@
+//! DeepSpeed-Ulysses attention layer (Figure 11; all-to-all of Figure 17).
+//!
+//! Sequence-sharded activations are exchanged head-sharded around
+//! self-attention: an all-to-all before (gather sequence, scatter heads)
+//! and after (the inverse). The bottleneck is the *fine-grained*
+//! all-to-all along inner dimensions: NCCL needs contiguous partitions, so
+//! the baseline reshapes before and after each exchange (Appendix B);
+//! PK's tile-granular all-to-all runs directly on the `(B, S, H, D)`
+//! layout. The YunChang baseline is in [`crate::baselines::yunchang`].
+
+use super::collectives::{pk_all_to_all_4d, A2aCfg};
+use crate::hw::spec::NodeSpec;
+use crate::hw::DeviceId;
+use crate::mem::tile::Shape4;
+use crate::mem::{BufId, MemPool, ELEM_BYTES};
+use crate::plan::{Effect, MatView, Op, Plan, Role, SyncScope};
+
+/// Ulysses configuration; `s` is the total sequence length (Figure 11
+/// x-axis), `h` the total head count (head-sharded inside attention).
+#[derive(Clone, Debug)]
+pub struct UlyssesCfg {
+    pub node: NodeSpec,
+    pub b: usize,
+    pub h: usize,
+    pub s: usize,
+    pub d: usize,
+    pub flash_util: f64,
+}
+
+impl UlyssesCfg {
+    /// Paper configuration: B=16, H=128, D=128.
+    pub fn paper(node: NodeSpec, s: usize) -> Self {
+        UlyssesCfg { node, b: 16, h: 128, s, d: 128, flash_util: 0.75 }
+    }
+
+    pub fn s_local(&self) -> usize {
+        assert_eq!(self.s % self.node.num_devices, 0);
+        self.s / self.node.num_devices
+    }
+
+    pub fn h_local(&self) -> usize {
+        assert_eq!(self.h % self.node.num_devices, 0);
+        self.h / self.node.num_devices
+    }
+
+    /// Attention FLOPs per device: local heads, full sequence.
+    pub fn attn_flops(&self) -> f64 {
+        4.0 * (self.b * self.h_local()) as f64 * (self.s as f64).powi(2) * self.d as f64
+    }
+
+    /// Bytes each device exchanges in one all-to-all direction.
+    pub fn a2a_bytes(&self) -> f64 {
+        (self.b * self.s_local() * self.h * self.d) as f64 * ELEM_BYTES as f64
+    }
+}
+
+/// Functional buffers for the full layer.
+pub struct UlyssesBufs {
+    /// Sequence-sharded inputs `(B, S_local, H, D)` per device.
+    pub q_in: Vec<BufId>,
+    pub k_in: Vec<BufId>,
+    pub v_in: Vec<BufId>,
+    /// Head-sharded exchange targets `(B, S, H_local, D)`.
+    pub q_h: Vec<BufId>,
+    pub k_h: Vec<BufId>,
+    pub v_h: Vec<BufId>,
+    /// Transposed attention scratch `(B, H_local, S, D)`.
+    pub q_t: Vec<BufId>,
+    pub k_t: Vec<BufId>,
+    pub v_t: Vec<BufId>,
+    pub o_t: Vec<BufId>,
+    /// Head-sharded output, then scattered back sequence-sharded.
+    pub o_h: Vec<BufId>,
+    pub o_out: Vec<BufId>,
+}
+
+impl UlyssesBufs {
+    pub fn alloc(pool: &mut MemPool, cfg: &UlyssesCfg) -> Self {
+        let n = cfg.node.num_devices;
+        let seq_sharded = Shape4 { b: cfg.b, d: cfg.s_local(), r: cfg.h, c: cfg.d };
+        let head_sharded = Shape4 { b: cfg.b, d: cfg.s, r: cfg.h_local(), c: cfg.d };
+        let transposed = Shape4 { b: cfg.b, d: cfg.h_local(), r: cfg.s, c: cfg.d };
+        let mk = |pool: &mut MemPool, shape| (0..n).map(|d| pool.alloc(DeviceId(d), shape)).collect::<Vec<_>>();
+        UlyssesBufs {
+            q_in: mk(pool, seq_sharded),
+            k_in: mk(pool, seq_sharded),
+            v_in: mk(pool, seq_sharded),
+            q_h: mk(pool, head_sharded),
+            k_h: mk(pool, head_sharded),
+            v_h: mk(pool, head_sharded),
+            q_t: mk(pool, transposed),
+            k_t: mk(pool, transposed),
+            v_t: mk(pool, transposed),
+            o_t: mk(pool, transposed),
+            o_h: mk(pool, head_sharded),
+            o_out: mk(pool, seq_sharded),
+        }
+    }
+}
+
+/// Build the PK Ulysses attention layer: a2a(q,k,v) → head-sharded
+/// attention → a2a(o).
+pub fn build(cfg: &UlyssesCfg, bufs: Option<&UlyssesBufs>) -> Plan {
+    let n = cfg.node.num_devices;
+    let mut plan = Plan::new();
+    plan.launch_overhead = cfg.node.gpu.kernel_launch;
+    let a2a = A2aCfg { b_dim: cfg.b, s_local: cfg.s_local(), h: cfg.h, d_head: cfg.d };
+    // ---- forward all-to-all for q, k, v
+    for tensor in 0..3 {
+        let (srcs, dsts) = match bufs {
+            Some(b) => (
+                Some(match tensor {
+                    0 => &b.q_in[..],
+                    1 => &b.k_in[..],
+                    _ => &b.v_in[..],
+                }),
+                Some(match tensor {
+                    0 => &b.q_h[..],
+                    1 => &b.k_h[..],
+                    _ => &b.v_h[..],
+                }),
+            ),
+            None => (None, None),
+        };
+        pk_all_to_all_4d(&mut plan, &cfg.node, &a2a, srcs, dsts, 16.0);
+    }
+    // readiness barrier: attention waits for all three exchanges.
+    let ready: Vec<_> = (0..n).map(|_| plan.add_sem(0)).collect();
+    for wi in 0..plan.workers.len() {
+        if plan.workers[wi].label.starts_with("pk_a2a") {
+            for r in ready.iter().take(n) {
+                plan.push(wi, Op::Signal { sem: *r, value: 1, scope: SyncScope::InterDevice });
+            }
+        }
+    }
+    let comp_flops = cfg.node.gpu.tc_flops_for_sms(cfg.node.gpu.num_sms) * cfg.flash_util;
+    let out_ready: Vec<_> = (0..n).map(|_| plan.add_sem(0)).collect();
+    for dev in 0..n {
+        let w = plan.add_worker(DeviceId(dev), Role::ComputeSm, format!("ulysses_attn/d{dev}"));
+        plan.push(w, Op::Wait { sem: ready[dev], value: 3 * n as u64 });
+        match bufs {
+            Some(b) => {
+                // transpose (B, S, H_local, D) -> (B, H_local, S, D) one
+                // sequence-row at a time (the SMEM load of a real kernel)
+                for bi in 0..cfg.b {
+                    for hi in 0..cfg.h_local() {
+                        for si in 0..cfg.s {
+                            for (src, dst) in [(&b.q_h, &b.q_t), (&b.k_h, &b.k_t), (&b.v_h, &b.v_t)] {
+                                plan.push(
+                                    w,
+                                    Op::Compute {
+                                        dur: 0.0,
+                                        label: "attn_transpose",
+                                        effect: Some(Effect::CopyMat {
+                                            src: MatView { buf: src[dev], b: bi, d: si, row0: hi, col0: 0, rows: 1, cols: cfg.d },
+                                            dst: MatView { buf: dst[dev], b: bi, d: hi, row0: si, col0: 0, rows: 1, cols: cfg.d },
+                                            reduce: None,
+                                        }),
+                                    },
+                                );
+                            }
+                        }
+                        // full-sequence attention for this (b, head)
+                        let st = plan.add_state();
+                        plan.push(
+                            w,
+                            Op::Compute {
+                                dur: 0.0,
+                                label: "attn_full",
+                                effect: Some(Effect::AttnBlock {
+                                    q: MatView { buf: b.q_t[dev], b: bi, d: hi, row0: 0, col0: 0, rows: cfg.s, cols: cfg.d },
+                                    k: MatView { buf: b.k_t[dev], b: bi, d: hi, row0: 0, col0: 0, rows: cfg.s, cols: cfg.d },
+                                    v: MatView { buf: b.v_t[dev], b: bi, d: hi, row0: 0, col0: 0, rows: cfg.s, cols: cfg.d },
+                                    state: st,
+                                }),
+                            },
+                        );
+                        plan.push(
+                            w,
+                            Op::Compute {
+                                dur: 0.0,
+                                label: "attn_finalize",
+                                effect: Some(Effect::AttnFinalize {
+                                    state: st,
+                                    out: MatView { buf: b.o_t[dev], b: bi, d: hi, row0: 0, col0: 0, rows: cfg.s, cols: cfg.d },
+                                }),
+                            },
+                        );
+                        // transpose back into the head-sharded layout
+                        for si in 0..cfg.s {
+                            plan.push(
+                                w,
+                                Op::Compute {
+                                    dur: 0.0,
+                                    label: "attn_transpose_back",
+                                    effect: Some(Effect::CopyMat {
+                                        src: MatView { buf: b.o_t[dev], b: bi, d: hi, row0: si, col0: 0, rows: 1, cols: cfg.d },
+                                        dst: MatView { buf: b.o_h[dev], b: bi, d: si, row0: hi, col0: 0, rows: 1, cols: cfg.d },
+                                        reduce: None,
+                                    }),
+                                },
+                            );
+                        }
+                    }
+                }
+                plan.push(w, Op::Compute { dur: cfg.attn_flops() / comp_flops, label: "ulysses_attn", effect: None });
+            }
+            None => {
+                plan.push(w, Op::Compute { dur: cfg.attn_flops() / comp_flops, label: "ulysses_attn", effect: None });
+            }
+        }
+        plan.push(w, Op::Signal { sem: out_ready[dev], value: 1, scope: SyncScope::InterSm });
+    }
+    // ---- backward all-to-all for o: (B, S, H_local, D) -> (B, S_local, H, D).
+    // The exchange volume and granularity are symmetric to the forward
+    // direction; functionally it is the inverse permutation.
+    let nw0 = plan.workers.len();
+    match bufs {
+        Some(b) => {
+            build_reverse_a2a(&mut plan, cfg, &b.o_h, &b.o_out);
+        }
+        None => {
+            pk_all_to_all_4d(&mut plan, &cfg.node, &a2a, None, None, 16.0);
+        }
+    }
+    // reverse-exchange workers wait for local attention output
+    for wi in nw0..plan.workers.len() {
+        let dev = plan.workers[wi].device;
+        let mut ops = vec![Op::Wait { sem: out_ready[dev.0], value: 1 }];
+        ops.append(&mut plan.workers[wi].ops);
+        plan.workers[wi].ops = ops;
+    }
+    plan
+}
+
+/// Inverse exchange: device `j` holds `(B, S, H_local, D)`; send each
+/// `(b, s ∈ shard_d, head-block j)` tile back to device `d`'s
+/// `(B, S_local, H, D)` layout.
+fn build_reverse_a2a(plan: &mut Plan, cfg: &UlyssesCfg, srcs: &[BufId], dsts: &[BufId]) {
+    let n = cfg.node.num_devices;
+    let h_blk = cfg.h_local();
+    let tile_bytes = (h_blk * cfg.d) as f64 * ELEM_BYTES as f64;
+    for j in 0..n {
+        let w = plan.add_worker(DeviceId(j), Role::CommSm, format!("pk_a2a_rev/d{j}"));
+        for d in 0..n {
+            for bi in 0..cfg.b {
+                for si in 0..cfg.s_local() {
+                    let src = MatView { buf: srcs[j], b: bi, d: d * cfg.s_local() + si, row0: 0, col0: 0, rows: h_blk, cols: cfg.d };
+                    let dst = MatView { buf: dsts[d], b: bi, d: si, row0: j * h_blk, col0: 0, rows: h_blk, cols: cfg.d };
+                    if j == d {
+                        plan.push(w, Op::Compute { dur: 0.0, label: "a2a_rev_local", effect: Some(Effect::CopyMat { src, dst, reduce: None }) });
+                    } else {
+                        plan.push(
+                            w,
+                            Op::Transfer {
+                                spec: crate::plan::TransferSpec {
+                                    mech: crate::xfer::Mechanism::Tma,
+                                    route: crate::plan::Route::P2p { src: DeviceId(j), dst: DeviceId(d) },
+                                    bytes: tile_bytes,
+                                    msg_bytes: tile_bytes,
+                                    n_sms: 16.0 / (n - 1) as f64,
+                                },
+                                blocking: false,
+                                done_sem: None,
+                                done_scope: SyncScope::IntraSm,
+                                label: "pk_a2a_rev_tile",
+                                effect: Some(Effect::CopyMat { src, dst, reduce: None }),
+                            },
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::util::{assert_allclose, linalg, seeded_vec};
+
+    #[test]
+    fn functional_ulysses_matches_single_device_attention() {
+        let n = 2;
+        let node = NodeSpec::test_node(n);
+        let cfg = UlyssesCfg { node, b: 2, h: 4, s: 8, d: 4, flash_util: 0.75 };
+        let mut pool = MemPool::new();
+        let bufs = UlyssesBufs::alloc(&mut pool, &cfg);
+        // global tensors (B, S, H, D) — fill the sequence-sharded inputs
+        let numel_g = cfg.b * cfg.s * cfg.h * cfg.d;
+        let qg = seeded_vec(1, numel_g);
+        let kg = seeded_vec(2, numel_g);
+        let vg = seeded_vec(3, numel_g);
+        let idx = |bi: usize, si: usize, hi: usize, di: usize| ((bi * cfg.s + si) * cfg.h + hi) * cfg.d + di;
+        for dev in 0..n {
+            for bi in 0..cfg.b {
+                for sl in 0..cfg.s_local() {
+                    let si = dev * cfg.s_local() + sl;
+                    for hi in 0..cfg.h {
+                        for di in 0..cfg.d {
+                            for (buf, g) in [(&bufs.q_in, &qg), (&bufs.k_in, &kg), (&bufs.v_in, &vg)] {
+                                let bb = pool.get_mut(buf[dev]);
+                                let off = bb.shape.offset(bi, sl, hi, di);
+                                bb.data[off] = g[idx(bi, si, hi, di)];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let plan = build(&cfg, Some(&bufs));
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        // reference: per (b, h) full attention over the global sequence
+        for bi in 0..cfg.b {
+            for hi in 0..cfg.h {
+                let mut q = vec![0.0; cfg.s * cfg.d];
+                let mut k = vec![0.0; cfg.s * cfg.d];
+                let mut v = vec![0.0; cfg.s * cfg.d];
+                for si in 0..cfg.s {
+                    for di in 0..cfg.d {
+                        q[si * cfg.d + di] = qg[idx(bi, si, hi, di)];
+                        k[si * cfg.d + di] = kg[idx(bi, si, hi, di)];
+                        v[si * cfg.d + di] = vg[idx(bi, si, hi, di)];
+                    }
+                }
+                let want = linalg::attention_ref(&q, &k, &v, cfg.s, cfg.s, cfg.d);
+                // outputs are sequence-sharded on o_out
+                for si in 0..cfg.s {
+                    let dev = si / cfg.s_local();
+                    let sl = si % cfg.s_local();
+                    let ob = pool.get(bufs.o_out[dev]);
+                    let off = ob.shape.offset(bi, sl, hi, 0);
+                    assert_allclose(&ob.data[off..off + cfg.d], &want[si * cfg.d..(si + 1) * cfg.d], 1e-4, 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn timed_ulysses_scales_with_sequence() {
+        let node = NodeSpec::hgx_h100();
+        let t1 = TimedExec::new(node.clone()).run(&build(&UlyssesCfg::paper(node.clone(), 8192), None)).total_time;
+        let t2 = TimedExec::new(node.clone()).run(&build(&UlyssesCfg::paper(node.clone(), 16384), None)).total_time;
+        assert!(t2 / t1 > 2.0, "quadratic scaling: {t1} -> {t2}");
+    }
+
+    #[test]
+    fn a2a_bytes_accounting() {
+        let node = NodeSpec::hgx_h100();
+        let cfg = UlyssesCfg::paper(node, 8192);
+        assert_eq!(cfg.a2a_bytes(), 16.0 * 1024.0 * 128.0 * 128.0 * 2.0);
+    }
+}

@@ -1,0 +1,55 @@
+//! # ParallelKittens (PK) — reproduction library
+//!
+//! A full reproduction of *"ParallelKittens: Systematic and Practical
+//! Simplification of Multi-GPU AI Kernels"* (Sul, Arora, Spector, Ré; 2025)
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper's substrate — an 8×H100 / 8×B200 NVLink+NVSwitch node — is not
+//! available here, so the library is built around a *calibrated simulator*
+//! of that node (see `DESIGN.md` §1 for the substitution argument):
+//!
+//! * [`hw`] — hardware specifications (H100 / B200 numbers from the paper).
+//! * [`mem`] — functional device memory: buffers, tiles, and the paper's
+//!   **Parallel Global Layout (PGL)**.
+//! * [`sim`] — discrete-event simulation core: event queue and a max-min
+//!   fair bandwidth-shared flow network (NVLink ports, NVSwitch fabric,
+//!   copy engines, HBM).
+//! * [`xfer`] — the three transfer mechanisms (copy engine, TMA, register
+//!   ops) plus NVSwitch multimem, with the bandwidth curves of
+//!   Table 1 / Figures 2–3.
+//! * [`plan`] — the tile-granularity Plan IR shared by both executors.
+//! * [`exec`] — `FunctionalExec` (moves real data, computes real numerics)
+//!   and `TimedExec` (discrete-event timing) over the same plans.
+//! * [`pk`] — the paper's contribution: the eight primitives, `barrier_t`
+//!   synchronization, the LCSC program template, and the SM-partition
+//!   auto-tuner.
+//! * [`comm`] — library-design baselines: NCCL-style ring collectives with
+//!   two-way rendezvous + channel staging, NVSHMEM-style register transfers.
+//! * [`kernels`] — the paper's evaluated kernels: fused AG+GEMM, GEMM+RS,
+//!   GEMM+AR, Ring Attention, DeepSpeed-Ulysses all-to-all attention, and
+//!   MoE token dispatch + grouped GEMM.
+//! * [`baselines`] — behavioural models of the paper's comparators
+//!   (non-overlapped cuBLAS+NCCL, Flux, Triton-Distributed, CUTLASS
+//!   distributed GEMM, xDiT, YunChang, Comet).
+//! * [`runtime`] — PJRT runtime: loads the AOT HLO-text artifacts produced
+//!   by `python/compile/aot.py` and executes them on the request path.
+//! * [`coordinator`] — tokio leader/worker node driving multi-device runs.
+//! * [`report`] — regenerates every table and figure of the paper.
+
+pub mod baselines;
+pub mod comm;
+pub mod coordinator;
+pub mod exec;
+pub mod hw;
+pub mod kernels;
+pub mod mem;
+pub mod pk;
+pub mod plan;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod xfer;
+
+pub use hw::spec::{Arch, GpuSpec, NodeSpec};
+pub use mem::pgl::Pgl;

@@ -1,0 +1,195 @@
+//! `pk` — the ParallelKittens coordinator CLI.
+//!
+//! ```text
+//! pk figures [--only <id>] [--fast] [--out <dir>]   regenerate paper exhibits
+//! pk run <kernel> [--n <size>] [--schedule intra|inter]
+//! pk tune <kernel> --n <size>                       SM-partition auto-tuner
+//! pk validate                                       functional + PJRT checks
+//! pk info                                           hardware model summary
+//! ```
+
+use pk::exec::TimedExec;
+use pk::hw::spec::NodeSpec;
+use pk::kernels::gemm_rs::Schedule;
+use pk::kernels::GemmKernelCfg;
+use pk::report::all_exhibits;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flag = |name: &str| args.iter().any(|a| a == name);
+    let opt = |name: &str| {
+        args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.to_string())
+    };
+    match cmd {
+        "figures" => {
+            let fast = flag("--fast");
+            let out = opt("--out");
+            if let Some(dir) = &out {
+                std::fs::create_dir_all(dir).expect("create out dir");
+            }
+            let only = opt("--only");
+            for e in all_exhibits() {
+                if let Some(id) = &only {
+                    if e.id != id {
+                        continue;
+                    }
+                }
+                eprintln!("running {} ...", e.id);
+                let t = (e.run)(fast);
+                println!("{}", t.to_markdown());
+                if let Some(dir) = &out {
+                    std::fs::write(format!("{dir}/{}.csv", e.id), t.to_csv()).expect("write csv");
+                }
+            }
+        }
+        "run" => {
+            let kernel = args.get(1).map(|s| s.as_str()).unwrap_or("gemm_rs");
+            let n: usize = opt("--n").and_then(|s| s.parse().ok()).unwrap_or(16384);
+            let node = if flag("--b200") { NodeSpec::hgx_b200() } else { NodeSpec::hgx_h100() };
+            let schedule = match opt("--schedule").as_deref() {
+                Some("inter") => Schedule::InterSm,
+                _ => Schedule::IntraSm,
+            };
+            let (time, flops) = match kernel {
+                "gemm" => {
+                    let cfg = GemmKernelCfg::new(node.clone(), n, n, n / 8);
+                    (TimedExec::new(node).run(&pk::kernels::gemm::build(&cfg, None)).total_time, cfg.local_flops())
+                }
+                "gemm_rs" => {
+                    let cfg = GemmKernelCfg::new(node.clone(), n, n, n / 8);
+                    (
+                        TimedExec::new(node).run(&pk::kernels::gemm_rs::build(&cfg, schedule, None)).total_time,
+                        cfg.local_flops(),
+                    )
+                }
+                "gemm_ar" => {
+                    let cfg = GemmKernelCfg::new(node.clone(), n, n, n / 8);
+                    let sched = if opt("--schedule").is_none() { Schedule::InterSm } else { schedule };
+                    (
+                        TimedExec::new(node).run(&pk::kernels::gemm_ar::build(&cfg, sched, None)).total_time,
+                        cfg.local_flops(),
+                    )
+                }
+                "ag_gemm" => {
+                    let cfg = GemmKernelCfg::new(node.clone(), n, n / 8, n);
+                    (TimedExec::new(node).run(&pk::kernels::ag_gemm::build(&cfg, None)).total_time, cfg.local_flops())
+                }
+                "ring_attention" => {
+                    let cfg = pk::kernels::ring_attention::RingAttnCfg::paper(node.clone(), n);
+                    (
+                        TimedExec::new(node).run(&pk::kernels::ring_attention::build(&cfg, None)).total_time,
+                        cfg.total_flops(),
+                    )
+                }
+                other => {
+                    eprintln!("unknown kernel '{other}' (gemm|gemm_rs|gemm_ar|ag_gemm|ring_attention)");
+                    std::process::exit(2);
+                }
+            };
+            println!(
+                "{kernel} n={n}: {} ({})",
+                pk::util::fmt_time(time),
+                pk::util::fmt_tflops(flops / time)
+            );
+        }
+        "tune" => {
+            let n: usize = opt("--n").and_then(|s| s.parse().ok()).unwrap_or(16384);
+            let node = NodeSpec::hgx_h100();
+            let result = pk::pk::tuner::tune_comm_sms(&node, &[4, 8, 12, 16, 24, 32, 48, 64], |c| {
+                let mut cfg = GemmKernelCfg::new(node.clone(), n, n / 8, n);
+                cfg.opts.num_comm_sms = c;
+                pk::kernels::ag_gemm::build(&cfg, None)
+            });
+            println!(
+                "AG+GEMM N={n}: best num_comm_sms={} ({})",
+                result.best_comm_sms,
+                pk::util::fmt_time(result.best_time)
+            );
+            for (c, t) in result.sweep {
+                println!("  comm_sms={c:>3}  {}", pk::util::fmt_time(t));
+            }
+        }
+        "validate" => {
+            print!("functional gemm+rs ... ");
+            validate_gemm_rs();
+            println!("ok");
+            print!("functional all-reduce (multimem) ... ");
+            validate_collectives();
+            println!("ok");
+            print!("pjrt artifact roundtrip ... ");
+            match validate_pjrt() {
+                Ok(()) => println!("ok"),
+                Err(e) => println!("skipped ({e})"),
+            }
+            println!("validate: all good");
+        }
+        "info" => {
+            for node in [NodeSpec::hgx_h100(), NodeSpec::hgx_b200()] {
+                let g = &node.gpu;
+                println!(
+                    "{}x{} | {} SMs | BF16 {:.0} TFLOP/s | HBM {:.1} TB/s | NVLink {:.0} GB/s | multimem={}",
+                    node.num_devices,
+                    g.arch,
+                    g.num_sms,
+                    g.tc_flops / 1e12,
+                    g.hbm_bw / 1e12,
+                    g.nvlink_bw / 1e9,
+                    node.multimem
+                );
+            }
+        }
+        _ => {
+            eprintln!("usage: pk <figures|run|tune|validate|info> [options]");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn validate_gemm_rs() {
+    use pk::exec::FunctionalExec;
+    use pk::kernels::gemm_rs::{build, GemmRsBufs};
+    use pk::mem::MemPool;
+    let node = NodeSpec::test_node(4);
+    let cfg = GemmKernelCfg::functional(node, 64, 32, 16);
+    let mut pool = MemPool::new();
+    let bufs = GemmRsBufs::alloc(&mut pool, &cfg);
+    for d in 0..4 {
+        pool.get_mut(bufs.gemm.a[d]).data = pk::util::seeded_vec(d as u64, 64 * 16);
+        pool.get_mut(bufs.gemm.b[d]).data = pk::util::seeded_vec(d as u64 + 9, 16 * 32);
+    }
+    let plan = build(&cfg, Schedule::IntraSm, Some(&bufs));
+    FunctionalExec::new(&mut pool).run(&plan).expect("gemm_rs functional");
+}
+
+fn validate_collectives() {
+    use pk::exec::FunctionalExec;
+    use pk::hw::DeviceId;
+    use pk::kernels::collectives::{pk_all_reduce, PkCollCtx};
+    use pk::mem::tile::Shape4;
+    use pk::mem::MemPool;
+    use pk::plan::{MatView, Plan};
+    let node = NodeSpec::test_node(8);
+    let mut pool = MemPool::new();
+    let bufs: Vec<_> = (0..8)
+        .map(|d| pool.alloc_init(DeviceId(d), Shape4::mat(16, 4), vec![(d + 1) as f32; 64]))
+        .collect();
+    let ctx = PkCollCtx::new(&node, bufs.iter().map(|&b| MatView::full2d(b, 16, 4)).collect());
+    let mut plan = Plan::new();
+    pk_all_reduce(&mut plan, &ctx);
+    FunctionalExec::new(&mut pool).run(&plan).expect("pk all-reduce");
+    for &b in &bufs {
+        assert!(pool.get(b).data.iter().all(|v| *v == 36.0));
+    }
+}
+
+fn validate_pjrt() -> anyhow::Result<()> {
+    use pk::runtime::Runtime;
+    let mut rt = Runtime::open(Runtime::default_dir())?;
+    let x = pk::util::seeded_vec(1, 64 * 64);
+    let y = pk::util::seeded_vec(2, 64 * 64);
+    let out = rt.execute("gemm_64x64x64", &[(x.clone(), vec![64, 64]), (y.clone(), vec![64, 64])])?;
+    let want = pk::util::linalg::matmul(&x, &y, 64, 64, 64);
+    pk::util::assert_allclose(&out[0], &want, 1e-4, 1e-4);
+    Ok(())
+}

@@ -1,0 +1,144 @@
+//! Per-device buffers: the functional model of HBM allocations.
+
+use super::tile::{Shape4, TileCoord, TileShape};
+use crate::hw::DeviceId;
+
+/// Handle to a buffer registered in a [`super::MemPool`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BufId(pub usize);
+
+/// A device-resident tensor with a 4-D layout. The functional executor
+/// reads and writes tiles of it; the timed executor only uses its metadata.
+#[derive(Clone, Debug)]
+pub struct DeviceBuffer {
+    pub dev: DeviceId,
+    pub shape: Shape4,
+    pub data: Vec<f32>,
+}
+
+impl DeviceBuffer {
+    pub fn zeros(dev: DeviceId, shape: Shape4) -> Self {
+        DeviceBuffer { dev, shape, data: vec![0.0; shape.numel()] }
+    }
+
+    pub fn from_vec(dev: DeviceId, shape: Shape4, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), shape.numel(), "data/shape mismatch");
+        DeviceBuffer { dev, shape, data }
+    }
+
+    /// Copy a tile out into a dense row-major `rows×cols` vector.
+    pub fn read_tile(&self, coord: TileCoord, ts: TileShape) -> Vec<f32> {
+        let base = coord.elem_offset(&self.shape, ts);
+        let mut out = Vec::with_capacity(ts.numel());
+        for r in 0..ts.rows {
+            let start = base + r * self.shape.c;
+            out.extend_from_slice(&self.data[start..start + ts.cols]);
+        }
+        out
+    }
+
+    /// Write a dense `rows×cols` tile at `coord`.
+    pub fn write_tile(&mut self, coord: TileCoord, ts: TileShape, tile: &[f32]) {
+        assert_eq!(tile.len(), ts.numel());
+        let base = coord.elem_offset(&self.shape, ts);
+        for r in 0..ts.rows {
+            let start = base + r * self.shape.c;
+            self.data[start..start + ts.cols].copy_from_slice(&tile[r * ts.cols..(r + 1) * ts.cols]);
+        }
+    }
+
+    /// Atomically-add semantics of `store_add_async`/`multimem.red`:
+    /// `self[coord] += tile`.
+    pub fn add_tile(&mut self, coord: TileCoord, ts: TileShape, tile: &[f32]) {
+        assert_eq!(tile.len(), ts.numel());
+        let base = coord.elem_offset(&self.shape, ts);
+        for r in 0..ts.rows {
+            let start = base + r * self.shape.c;
+            for c in 0..ts.cols {
+                self.data[start + c] += tile[r * ts.cols + c];
+            }
+        }
+    }
+
+    /// Elementwise max-reduce a tile in (multimem `max` op).
+    pub fn max_tile(&mut self, coord: TileCoord, ts: TileShape, tile: &[f32]) {
+        assert_eq!(tile.len(), ts.numel());
+        let base = coord.elem_offset(&self.shape, ts);
+        for r in 0..ts.rows {
+            let start = base + r * self.shape.c;
+            for c in 0..ts.cols {
+                let v = &mut self.data[start + c];
+                *v = v.max(tile[r * ts.cols + c]);
+            }
+        }
+    }
+
+    /// Contiguous range read (copy-engine semantics: flat regions).
+    pub fn read_range(&self, start: usize, len: usize) -> &[f32] {
+        &self.data[start..start + len]
+    }
+
+    /// Contiguous range write.
+    pub fn write_range(&mut self, start: usize, src: &[f32]) {
+        self.data[start..start + src.len()].copy_from_slice(src);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buf_4x4() -> DeviceBuffer {
+        let data: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        DeviceBuffer::from_vec(DeviceId(0), Shape4::mat(4, 4), data)
+    }
+
+    #[test]
+    fn read_write_tile_roundtrip() {
+        let mut b = DeviceBuffer::zeros(DeviceId(0), Shape4::mat(32, 32));
+        let ts = TileShape::new(16, 16);
+        let tile: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        b.write_tile(TileCoord::rc(1, 1), ts, &tile);
+        assert_eq!(b.read_tile(TileCoord::rc(1, 1), ts), tile);
+        // other tiles untouched
+        assert!(b.read_tile(TileCoord::rc(0, 0), ts).iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn read_tile_strided() {
+        let b = buf_4x4();
+        let ts = TileShape::new(2, 2);
+        // tile (1,1) of a 4x4 = elements [10,11,14,15]
+        assert_eq!(b.read_tile(TileCoord::rc(1, 1), ts), vec![10.0, 11.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn add_tile_accumulates() {
+        let mut b = buf_4x4();
+        let ts = TileShape::new(2, 2);
+        b.add_tile(TileCoord::rc(0, 0), ts, &[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(b.read_tile(TileCoord::rc(0, 0), ts), vec![1.0, 2.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn max_tile_takes_max() {
+        let mut b = buf_4x4();
+        let ts = TileShape::new(2, 2);
+        b.max_tile(TileCoord::rc(0, 0), ts, &[100.0, -1.0, -1.0, 100.0]);
+        assert_eq!(b.read_tile(TileCoord::rc(0, 0), ts), vec![100.0, 1.0, 4.0, 100.0]);
+    }
+
+    #[test]
+    fn range_ops() {
+        let mut b = buf_4x4();
+        assert_eq!(b.read_range(4, 4), &[4.0, 5.0, 6.0, 7.0]);
+        b.write_range(0, &[9.0, 9.0]);
+        assert_eq!(b.read_range(0, 2), &[9.0, 9.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_rejects_bad_len() {
+        let _ = DeviceBuffer::from_vec(DeviceId(0), Shape4::mat(2, 2), vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,20 @@
+//! Functional device memory: shapes, tiles, per-device buffers, and the
+//! paper's **Parallel Global Layout (PGL)** (§3.2.1).
+//!
+//! The functional executor moves *real* `f32` data through these structures
+//! so every kernel plan can be verified numerically; the timed executor
+//! reads only sizes. BF16 is emulated by using BF16 element *sizes* in the
+//! cost model while keeping f32 numerics (see DESIGN.md substitutions).
+
+pub mod buffer;
+pub mod pgl;
+pub mod pool;
+pub mod tile;
+
+pub use buffer::BufId;
+pub use pgl::{Pgl, PglId};
+pub use pool::MemPool;
+pub use tile::{Shape4, TileCoord, TileShape};
+
+/// Element size in bytes used by the cost model (BF16, `s = 2` in §3.1.3).
+pub const ELEM_BYTES: u64 = 2;

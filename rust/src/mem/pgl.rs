@@ -1,0 +1,161 @@
+//! The **Parallel Global Layout (PGL)** — the paper's central multi-GPU
+//! data structure (§3.2.1): identically shaped and sized memory regions
+//! allocated across all devices, addressable as one logical tensor with a
+//! multicast address.
+//!
+//! Functionally a PGL is one [`BufId`] per device; writing through the
+//! multicast view broadcasts to every device, and `ld_reduce` reads the
+//! elementwise reduction across devices (NVSwitch multimem semantics,
+//! Appendix F).
+
+use super::buffer::BufId;
+use super::pool::MemPool;
+use super::tile::{Shape4, TileCoord, TileShape};
+use crate::hw::DeviceId;
+
+/// Handle identifying a PGL within a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PglId(pub usize);
+
+/// Reduction op supported by multimem / `store_add_async` (§3.2.2 / App. C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReduceOp {
+    Add,
+    Max,
+    Min,
+}
+
+/// A parallel global layout: one same-shaped buffer per device.
+#[derive(Clone, Debug)]
+pub struct Pgl {
+    pub id: PglId,
+    pub shape: Shape4,
+    /// `bufs[d]` is the replica on device `d`.
+    pub bufs: Vec<BufId>,
+}
+
+impl Pgl {
+    /// Allocate a PGL across `num_devices` devices.
+    pub fn alloc(pool: &mut MemPool, id: PglId, shape: Shape4, num_devices: usize) -> Self {
+        let bufs = (0..num_devices).map(|d| pool.alloc(DeviceId(d), shape)).collect();
+        Pgl { id, shape, bufs }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// Buffer on a specific device.
+    pub fn on(&self, dev: DeviceId) -> BufId {
+        self.bufs[dev.0]
+    }
+
+    /// Functional multicast store: write `tile` at `coord` on **every**
+    /// device replica (in-fabric broadcast). With `Some(op)`, performs the
+    /// reduction against existing contents instead (multimem `.red`).
+    pub fn multicast_store(
+        &self,
+        pool: &mut MemPool,
+        coord: TileCoord,
+        ts: TileShape,
+        tile: &[f32],
+        reduce: Option<ReduceOp>,
+    ) {
+        for &b in &self.bufs {
+            let buf = pool.get_mut(b);
+            match reduce {
+                None => buf.write_tile(coord, ts, tile),
+                Some(ReduceOp::Add) => buf.add_tile(coord, ts, tile),
+                Some(ReduceOp::Max) => buf.max_tile(coord, ts, tile),
+                Some(ReduceOp::Min) => {
+                    // min via negated max to keep buffer API small
+                    let base = coord.elem_offset(&buf.shape, ts);
+                    for r in 0..ts.rows {
+                        let start = base + r * buf.shape.c;
+                        for c in 0..ts.cols {
+                            let v = &mut buf.data[start + c];
+                            *v = v.min(tile[r * ts.cols + c]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Functional `multimem.ld_reduce`: elementwise reduction of the tile
+    /// at `coord` across all device replicas.
+    pub fn ld_reduce(&self, pool: &MemPool, coord: TileCoord, ts: TileShape, op: ReduceOp) -> Vec<f32> {
+        let mut acc = pool.get(self.bufs[0]).read_tile(coord, ts);
+        for &b in &self.bufs[1..] {
+            let t = pool.get(b).read_tile(coord, ts);
+            for (a, v) in acc.iter_mut().zip(t) {
+                match op {
+                    ReduceOp::Add => *a += v,
+                    ReduceOp::Max => *a = a.max(v),
+                    ReduceOp::Min => *a = a.min(v),
+                }
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (MemPool, Pgl) {
+        let mut pool = MemPool::new();
+        let pgl = Pgl::alloc(&mut pool, PglId(0), Shape4::mat(32, 32), 4);
+        (pool, pgl)
+    }
+
+    #[test]
+    fn alloc_per_device() {
+        let (pool, pgl) = setup();
+        assert_eq!(pgl.num_devices(), 4);
+        for (d, &b) in pgl.bufs.iter().enumerate() {
+            assert_eq!(pool.get(b).dev, DeviceId(d));
+            assert_eq!(pool.get(b).shape, Shape4::mat(32, 32));
+        }
+    }
+
+    #[test]
+    fn multicast_store_reaches_all() {
+        let (mut pool, pgl) = setup();
+        let ts = TileShape::new(16, 16);
+        let tile = vec![3.0; 256];
+        pgl.multicast_store(&mut pool, TileCoord::rc(1, 0), ts, &tile, None);
+        for d in 0..4 {
+            assert_eq!(pool.get(pgl.on(DeviceId(d))).read_tile(TileCoord::rc(1, 0), ts), tile);
+        }
+    }
+
+    #[test]
+    fn multicast_red_add_accumulates() {
+        let (mut pool, pgl) = setup();
+        let ts = TileShape::new(16, 16);
+        pgl.multicast_store(&mut pool, TileCoord::rc(0, 0), ts, &vec![1.0; 256], Some(ReduceOp::Add));
+        pgl.multicast_store(&mut pool, TileCoord::rc(0, 0), ts, &vec![2.0; 256], Some(ReduceOp::Add));
+        for d in 0..4 {
+            let t = pool.get(pgl.on(DeviceId(d))).read_tile(TileCoord::rc(0, 0), ts);
+            assert!(t.iter().all(|v| *v == 3.0));
+        }
+    }
+
+    #[test]
+    fn ld_reduce_sums_across_devices() {
+        let (mut pool, pgl) = setup();
+        let ts = TileShape::new(16, 16);
+        for d in 0..4 {
+            let b = pgl.on(DeviceId(d));
+            pool.get_mut(b).write_tile(TileCoord::rc(0, 1), ts, &vec![(d + 1) as f32; 256]);
+        }
+        let sum = pgl.ld_reduce(&pool, TileCoord::rc(0, 1), ts, ReduceOp::Add);
+        assert!(sum.iter().all(|v| *v == 10.0)); // 1+2+3+4
+        let mx = pgl.ld_reduce(&pool, TileCoord::rc(0, 1), ts, ReduceOp::Max);
+        assert!(mx.iter().all(|v| *v == 4.0));
+        let mn = pgl.ld_reduce(&pool, TileCoord::rc(0, 1), ts, ReduceOp::Min);
+        assert!(mn.iter().all(|v| *v == 1.0));
+    }
+}

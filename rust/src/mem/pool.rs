@@ -1,0 +1,113 @@
+//! The memory pool: owns all functional buffers of a run, addressed by
+//! [`BufId`]. This is the functional stand-in for the VMM-allocated,
+//! IPC-shared device memory of Appendix E — allocation happens up front
+//! (PK's "pre-allocated destination buffers", §3.1.4), after which kernels
+//! only reference handles.
+
+use super::buffer::{BufId, DeviceBuffer};
+use super::tile::Shape4;
+use crate::hw::DeviceId;
+
+/// Owns every buffer in a simulated node.
+#[derive(Default, Debug)]
+pub struct MemPool {
+    bufs: Vec<DeviceBuffer>,
+}
+
+impl MemPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate a zero-filled buffer on `dev`.
+    pub fn alloc(&mut self, dev: DeviceId, shape: Shape4) -> BufId {
+        self.bufs.push(DeviceBuffer::zeros(dev, shape));
+        BufId(self.bufs.len() - 1)
+    }
+
+    /// Allocate a buffer with initial contents.
+    pub fn alloc_init(&mut self, dev: DeviceId, shape: Shape4, data: Vec<f32>) -> BufId {
+        self.bufs.push(DeviceBuffer::from_vec(dev, shape, data));
+        BufId(self.bufs.len() - 1)
+    }
+
+    pub fn get(&self, id: BufId) -> &DeviceBuffer {
+        &self.bufs[id.0]
+    }
+
+    pub fn get_mut(&mut self, id: BufId) -> &mut DeviceBuffer {
+        &mut self.bufs[id.0]
+    }
+
+    /// Two distinct buffers mutably (for copy ops). Panics if `a == b`.
+    pub fn get_pair_mut(&mut self, a: BufId, b: BufId) -> (&mut DeviceBuffer, &mut DeviceBuffer) {
+        assert_ne!(a, b, "aliasing buffers");
+        if a.0 < b.0 {
+            let (lo, hi) = self.bufs.split_at_mut(b.0);
+            (&mut lo[a.0], &mut hi[0])
+        } else {
+            let (lo, hi) = self.bufs.split_at_mut(a.0);
+            (&mut hi[0], &mut lo[b.0])
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+
+    /// Total functional bytes held (f32 storage).
+    pub fn total_bytes(&self) -> usize {
+        self.bufs.iter().map(|b| b.data.len() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_and_access() {
+        let mut p = MemPool::new();
+        let a = p.alloc(DeviceId(0), Shape4::mat(2, 2));
+        let b = p.alloc_init(DeviceId(1), Shape4::mat(1, 3), vec![1.0, 2.0, 3.0]);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.get(a).data, vec![0.0; 4]);
+        assert_eq!(p.get(b).dev, DeviceId(1));
+        p.get_mut(a).data[0] = 5.0;
+        assert_eq!(p.get(a).data[0], 5.0);
+    }
+
+    #[test]
+    fn pair_mut_both_orders() {
+        let mut p = MemPool::new();
+        let a = p.alloc(DeviceId(0), Shape4::mat(1, 1));
+        let b = p.alloc(DeviceId(0), Shape4::mat(1, 1));
+        {
+            let (x, y) = p.get_pair_mut(a, b);
+            x.data[0] = 1.0;
+            y.data[0] = 2.0;
+        }
+        let (y2, x2) = p.get_pair_mut(b, a);
+        assert_eq!(y2.data[0], 2.0);
+        assert_eq!(x2.data[0], 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "aliasing")]
+    fn pair_mut_rejects_alias() {
+        let mut p = MemPool::new();
+        let a = p.alloc(DeviceId(0), Shape4::mat(1, 1));
+        let _ = p.get_pair_mut(a, a);
+    }
+
+    #[test]
+    fn total_bytes_counts() {
+        let mut p = MemPool::new();
+        p.alloc(DeviceId(0), Shape4::mat(4, 4));
+        assert_eq!(p.total_bytes(), 64);
+    }
+}

@@ -1,0 +1,151 @@
+//! Tile coordinates and 4-D layouts.
+//!
+//! PK operations are tile-granular: coordinates are `int4` values
+//! `(b, d, r, c)` indexing tiles inside a 4-D global layout (§3.2.2).
+//! The minimum tile is 16×16 (register tile); shared tiles go up to the
+//! SMEM limit (~256×256, §3.2.2).
+
+
+/// 4-D logical shape `(b, d, r, c)` in *elements*, row-major, matching the
+/// paper's (batch, depth, row, col) global layout convention.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Shape4 {
+    pub b: usize,
+    pub d: usize,
+    pub r: usize,
+    pub c: usize,
+}
+
+impl Shape4 {
+    /// A 2-D matrix layout `(1, 1, rows, cols)`.
+    pub fn mat(rows: usize, cols: usize) -> Self {
+        Shape4 { b: 1, d: 1, r: rows, c: cols }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.b * self.d * self.r * self.c
+    }
+
+    /// Flat element offset of `(b, d, r, c)`.
+    pub fn offset(&self, b: usize, d: usize, r: usize, c: usize) -> usize {
+        debug_assert!(b < self.b && d < self.d && r < self.r && c < self.c);
+        ((b * self.d + d) * self.r + r) * self.c + c
+    }
+}
+
+/// Tile dimensions in elements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TileShape {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl TileShape {
+    pub const fn new(rows: usize, cols: usize) -> Self {
+        TileShape { rows, cols }
+    }
+
+    /// The paper's minimum (register) tile.
+    pub const MIN: TileShape = TileShape::new(16, 16);
+
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Size in bytes at the cost model's element size.
+    pub fn bytes(&self) -> u64 {
+        (self.numel() as u64) * super::ELEM_BYTES
+    }
+
+    /// Whether a tile of this shape fits in shared memory (limits the
+    /// largest single TMA message, Figure 2's 227 KB note).
+    pub fn fits_smem(&self, smem_bytes: u64) -> bool {
+        self.bytes() <= smem_bytes
+    }
+}
+
+/// Tile index `(b, d, r, c)` — the paper's `coord` int4 (§3.2.2). `r`/`c`
+/// count tiles, not elements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TileCoord {
+    pub b: usize,
+    pub d: usize,
+    pub r: usize,
+    pub c: usize,
+}
+
+impl TileCoord {
+    pub fn rc(r: usize, c: usize) -> Self {
+        TileCoord { b: 0, d: 0, r, c }
+    }
+
+    /// Element offset of this tile's top-left corner in `layout`, for tiles
+    /// of shape `ts`.
+    pub fn elem_offset(&self, layout: &Shape4, ts: TileShape) -> usize {
+        layout.offset(self.b, self.d, self.r * ts.rows, self.c * ts.cols)
+    }
+}
+
+/// Iterate all tile coords covering a layout with tile shape `ts`
+/// (the last two dims must divide evenly — PK enforces tile alignment).
+pub fn tile_grid(layout: &Shape4, ts: TileShape) -> impl Iterator<Item = TileCoord> {
+    assert_eq!(layout.r % ts.rows, 0, "rows {} not divisible by tile {}", layout.r, ts.rows);
+    assert_eq!(layout.c % ts.cols, 0, "cols {} not divisible by tile {}", layout.c, ts.cols);
+    let (nb, nd) = (layout.b, layout.d);
+    let (nr, nc) = (layout.r / ts.rows, layout.c / ts.cols);
+    (0..nb).flat_map(move |b| {
+        (0..nd).flat_map(move |d| {
+            (0..nr).flat_map(move |r| (0..nc).map(move |c| TileCoord { b, d, r, c }))
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_row_major() {
+        let s = Shape4::mat(4, 8);
+        assert_eq!(s.offset(0, 0, 0, 0), 0);
+        assert_eq!(s.offset(0, 0, 1, 0), 8);
+        assert_eq!(s.offset(0, 0, 3, 7), 31);
+        let s4 = Shape4 { b: 2, d: 3, r: 4, c: 5 };
+        assert_eq!(s4.offset(1, 2, 3, 4), ((1 * 3 + 2) * 4 + 3) * 5 + 4);
+    }
+
+    #[test]
+    fn tile_bytes_bf16() {
+        assert_eq!(TileShape::MIN.bytes(), 16 * 16 * 2);
+        let big = TileShape::new(256, 256);
+        assert_eq!(big.bytes(), 256 * 256 * 2);
+        // 256x256 bf16 = 128 KB fits in 227 KB SMEM; 512x512 does not.
+        assert!(big.fits_smem(227 * 1024));
+        assert!(!TileShape::new(512, 512).fits_smem(227 * 1024));
+    }
+
+    #[test]
+    fn tile_grid_covers_layout() {
+        let layout = Shape4::mat(64, 128);
+        let ts = TileShape::new(16, 16);
+        let tiles: Vec<_> = tile_grid(&layout, ts).collect();
+        assert_eq!(tiles.len(), 4 * 8);
+        assert_eq!(tiles[0], TileCoord::rc(0, 0));
+        assert_eq!(*tiles.last().unwrap(), TileCoord::rc(3, 7));
+    }
+
+    #[test]
+    fn tile_elem_offset() {
+        let layout = Shape4::mat(64, 64);
+        let ts = TileShape::new(16, 16);
+        let t = TileCoord::rc(2, 1);
+        assert_eq!(t.elem_offset(&layout, ts), 32 * 64 + 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn tile_grid_rejects_misaligned() {
+        let layout = Shape4::mat(60, 64);
+        let _ = tile_grid(&layout, TileShape::new(16, 16)).count();
+    }
+}

@@ -1,0 +1,33 @@
+//! **The ParallelKittens programming layer** — the paper's contribution
+//! (§3.2): eight multi-GPU primitives, `barrier_t` synchronization, the
+//! LCSC program template, and the runtime SM-partition auto-tuner.
+//!
+//! The paper's primitives (§3.2.2 / Appendix C) and their homes here:
+//!
+//! | paper                       | here                                   |
+//! |-----------------------------|----------------------------------------|
+//! | `store_async`               | [`primitives::store_async`]            |
+//! | `store_add_async`           | [`primitives::store_add_async`]        |
+//! | `reduce`                    | [`primitives::reduce`]                 |
+//! | `all_reduce`                | [`primitives::all_reduce`]             |
+//! | `signal`                    | [`sync::signal`]                       |
+//! | `signal_all`                | [`sync::signal_all`]                   |
+//! | `wait`                      | [`sync::wait`]                         |
+//! | `barrier`                   | [`sync::barrier`]                      |
+//!
+//! Primitives emit [`crate::plan::Op`]s into a worker's program, so one
+//! kernel description serves both the functional (numerics) and timed
+//! (performance) executors. By design they encode the paper's mechanism
+//! choices: point-wise communication uses **TMA** (async, single-thread,
+//! tile granularity), in-network acceleration uses **multimem register
+//! ops**, and nothing uses the copy engine on the device path (§3.1.2).
+
+pub mod primitives;
+pub mod sync;
+pub mod template;
+pub mod tuner;
+
+pub use primitives::{all_reduce, multicast_store_async, reduce, store_add_async, store_async, TileRef};
+pub use sync::{barrier, signal, signal_all, wait, Barrier};
+pub use template::{Lcsc, LcscOpts};
+pub use tuner::tune_comm_sms;

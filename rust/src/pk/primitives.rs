@@ -1,0 +1,368 @@
+//! The P2P and network-accelerated communication primitives (§3.2.2).
+//!
+//! All are tile-granular and device-initiated. P2P primitives are
+//! *asynchronous and single-threaded* (TMA): the issuing worker proceeds
+//! immediately and an optional semaphore fires at completion — this is what
+//! makes intra-SM overlap possible. Network-accelerated primitives
+//! (multimem) require warp participation and are *blocking* on the issuing
+//! (communicator) worker, matching the paper's API.
+
+use crate::hw::spec::GpuSpec;
+use crate::hw::DeviceId;
+use crate::mem::pgl::ReduceOp;
+use crate::mem::ELEM_BYTES;
+use crate::plan::{Effect, MatView, Op, Plan, Route, SemId, SyncScope, TransferSpec};
+use crate::xfer::Mechanism;
+
+/// A tile view plus the device that owns the underlying buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct TileRef {
+    pub view: MatView,
+    pub dev: DeviceId,
+}
+
+impl TileRef {
+    pub fn new(view: MatView, dev: DeviceId) -> Self {
+        TileRef { view, dev }
+    }
+
+    fn bytes(&self) -> f64 {
+        (self.view.rows * self.view.cols) as f64 * ELEM_BYTES as f64
+    }
+}
+
+/// TMA message size for a tile: one message per tile, clamped to the SMEM
+/// bound (larger tiles are chopped into max-size messages by hardware).
+fn tma_msg(spec: &GpuSpec, bytes: f64) -> f64 {
+    bytes.min(spec.tma_max_msg as f64)
+}
+
+/// `store_async(dst, src, coord)` — asynchronously store a shared tile to
+/// (possibly peer) memory via TMA. Single-thread launch; `done` (if given)
+/// is signalled on completion with intra-SM (mbarrier) latency.
+pub fn store_async(
+    plan: &mut Plan,
+    spec: &GpuSpec,
+    w: usize,
+    src: TileRef,
+    dst: TileRef,
+    done: Option<SemId>,
+) {
+    let bytes = src.bytes();
+    plan.push(
+        w,
+        Op::Transfer {
+            spec: TransferSpec {
+                mech: Mechanism::Tma,
+                route: Route::P2p { src: src.dev, dst: dst.dev },
+                bytes,
+                msg_bytes: tma_msg(spec, bytes),
+                n_sms: 1.0, // single SM issues; rate cap is per-SM TMA
+            },
+            blocking: false,
+            done_sem: done,
+            done_scope: SyncScope::IntraSm,
+            label: "store_async",
+            effect: Some(Effect::CopyMat { src: src.view, dst: dst.view, reduce: None }),
+        },
+    );
+}
+
+/// `store_add_async(dst, src, coord)` — asynchronous TMA store with atomic
+/// add at the destination. The atomic pays extra destination-side cost
+/// (§3.1.3: the residual communication near the K threshold in Table 3
+/// comes from these), modelled by inflating the transferred bytes.
+pub fn store_add_async(
+    plan: &mut Plan,
+    spec: &GpuSpec,
+    w: usize,
+    src: TileRef,
+    dst: TileRef,
+    done: Option<SemId>,
+) {
+    let bytes = src.bytes() * (1.0 + spec.atomic_overhead_frac);
+    plan.push(
+        w,
+        Op::Transfer {
+            spec: TransferSpec {
+                mech: Mechanism::Tma,
+                route: Route::P2p { src: src.dev, dst: dst.dev },
+                bytes,
+                msg_bytes: tma_msg(spec, src.bytes()),
+                n_sms: 1.0,
+            },
+            blocking: false,
+            done_sem: done,
+            done_scope: SyncScope::IntraSm,
+            label: "store_add_async",
+            effect: Some(Effect::CopyMat { src: src.view, dst: dst.view, reduce: Some(ReduceOp::Add) }),
+        },
+    );
+}
+
+/// Asynchronous in-fabric multicast store: writes `src` to the same region
+/// of every replica in `dsts` with one egress-side message (NVSwitch
+/// broadcast; §3.2.1 "multicast to multiple devices").
+pub fn multicast_store_async(
+    plan: &mut Plan,
+    spec: &GpuSpec,
+    w: usize,
+    src: TileRef,
+    dsts: Vec<MatView>,
+    reduce: Option<ReduceOp>,
+    done: Option<SemId>,
+) {
+    let bytes = src.bytes() * if reduce.is_some() { 1.0 + spec.atomic_overhead_frac } else { 1.0 };
+    plan.push(
+        w,
+        Op::Transfer {
+            spec: TransferSpec {
+                mech: Mechanism::Tma,
+                route: Route::Multicast { src: src.dev },
+                bytes,
+                msg_bytes: tma_msg(spec, src.bytes()),
+                n_sms: 1.0,
+            },
+            blocking: false,
+            done_sem: done,
+            done_scope: SyncScope::IntraSm,
+            label: "multicast_store",
+            effect: Some(Effect::MulticastMat { src: src.view, dsts, reduce }),
+        },
+    );
+}
+
+/// `reduce(dst, dst_coord, src, src_coord)` — in-fabric reduction from
+/// multicast memory (`srcs`: the per-device replicas of a PGL region) into
+/// local HBM. Collectively launched by `n_sms` worth of warps on the
+/// calling worker; blocking (register-level multimem.ld_reduce).
+pub fn reduce(
+    plan: &mut Plan,
+    _spec: &GpuSpec,
+    w: usize,
+    srcs: Vec<MatView>,
+    dst: TileRef,
+    op: ReduceOp,
+    n_sms: f64,
+) {
+    let bytes = dst.bytes();
+    plan.push(
+        w,
+        Op::Transfer {
+            spec: TransferSpec {
+                mech: Mechanism::Multimem,
+                route: Route::LdReduce { reader: dst.dev },
+                bytes,
+                msg_bytes: 128.0 * 8.0, // multimem.ld_reduce vector width per warp access
+                n_sms,
+            },
+            blocking: true,
+            done_sem: None,
+            done_scope: SyncScope::IntraSm,
+            label: "reduce",
+            effect: Some(Effect::LdReduceMat { srcs, dst: dst.view, op }),
+        },
+    );
+}
+
+/// `all_reduce(dst_and_src, coord)` — in-fabric all-reduce of a PGL tile:
+/// `ld_reduce` the replicas, then multicast the reduced tile back, leaving
+/// every device with the sum. Blocking, warp-collective (§3.2.2).
+///
+/// `replicas[d]` must be the view of the tile on device `d`; `me` is the
+/// executing device (the reader/writer).
+pub fn all_reduce(
+    plan: &mut Plan,
+    spec: &GpuSpec,
+    w: usize,
+    replicas: Vec<MatView>,
+    me: DeviceId,
+    op: ReduceOp,
+    n_sms: f64,
+) {
+    let mine = replicas[me.0];
+    let bytes = (mine.rows * mine.cols) as f64 * ELEM_BYTES as f64;
+    // Phase 1: in-fabric reduce into the local replica.
+    plan.push(
+        w,
+        Op::Transfer {
+            spec: TransferSpec {
+                mech: Mechanism::Multimem,
+                route: Route::LdReduce { reader: me },
+                bytes,
+                msg_bytes: 128.0 * 8.0,
+                n_sms,
+            },
+            blocking: true,
+            done_sem: None,
+            done_scope: SyncScope::IntraSm,
+            label: "all_reduce/ld",
+            effect: Some(Effect::LdReduceMat { srcs: replicas.clone(), dst: mine, op }),
+        },
+    );
+    // Phase 2: multicast the reduced tile back to every replica.
+    let others: Vec<MatView> = replicas
+        .iter()
+        .enumerate()
+        .filter(|(d, _)| *d != me.0)
+        .map(|(_, v)| *v)
+        .collect();
+    plan.push(
+        w,
+        Op::Transfer {
+            spec: TransferSpec {
+                mech: Mechanism::Multimem,
+                route: Route::Multicast { src: me },
+                bytes,
+                msg_bytes: 128.0 * 8.0,
+                n_sms,
+            },
+            blocking: true,
+            done_sem: None,
+            done_scope: SyncScope::IntraSm,
+            label: "all_reduce/mc",
+            effect: Some(Effect::MulticastMat { src: mine, dsts: others, reduce: None }),
+        },
+    );
+    let _ = spec;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::hw::spec::NodeSpec;
+    use crate::mem::tile::Shape4;
+    use crate::mem::MemPool;
+    use crate::plan::Role;
+    use crate::util::seeded_vec;
+
+    #[test]
+    fn store_async_moves_tile_and_signals() {
+        let mut pool = MemPool::new();
+        let a = pool.alloc_init(DeviceId(0), Shape4::mat(16, 16), seeded_vec(1, 256));
+        let b = pool.alloc(DeviceId(1), Shape4::mat(16, 16));
+        let node = NodeSpec::test_node(2);
+        let mut plan = Plan::new();
+        let done = plan.add_sem(0);
+        let w = plan.add_worker(DeviceId(0), Role::ComputeSm, "sm");
+        store_async(
+            &mut plan,
+            &node.gpu,
+            w,
+            TileRef::new(MatView::full2d(a, 16, 16), DeviceId(0)),
+            TileRef::new(MatView::full2d(b, 16, 16), DeviceId(1)),
+            Some(done),
+        );
+        plan.push(w, Op::Wait { sem: done, value: 1 });
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        assert_eq!(pool.get(a).data, pool.get(b).data);
+        // timed run completes and moves the right bytes
+        let r = TimedExec::new(node).run(&plan);
+        assert!((r.egress_bytes(0) - 512.0).abs() < 1.0); // 16*16*2 bytes
+    }
+
+    #[test]
+    fn store_add_async_accumulates_and_inflates_bytes() {
+        let mut pool = MemPool::new();
+        let a = pool.alloc_init(DeviceId(0), Shape4::mat(16, 16), vec![1.0; 256]);
+        let b = pool.alloc_init(DeviceId(1), Shape4::mat(16, 16), vec![2.0; 256]);
+        let node = NodeSpec::test_node(2);
+        let mut plan = Plan::new();
+        let done = plan.add_sem(0);
+        let w = plan.add_worker(DeviceId(0), Role::ComputeSm, "sm");
+        store_add_async(
+            &mut plan,
+            &node.gpu,
+            w,
+            TileRef::new(MatView::full2d(a, 16, 16), DeviceId(0)),
+            TileRef::new(MatView::full2d(b, 16, 16), DeviceId(1)),
+            Some(done),
+        );
+        plan.push(w, Op::Wait { sem: done, value: 1 });
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        assert!(pool.get(b).data.iter().all(|v| *v == 3.0));
+        let r = TimedExec::new(node).run(&plan);
+        let expect = 512.0 * 1.15; // atomic inflation
+        assert!((r.egress_bytes(0) - expect).abs() < 1.0, "{}", r.egress_bytes(0));
+    }
+
+    #[test]
+    fn multicast_store_reaches_all_devices() {
+        let mut pool = MemPool::new();
+        let n_dev = 4;
+        let src = pool.alloc_init(DeviceId(0), Shape4::mat(16, 16), seeded_vec(2, 256));
+        let dsts: Vec<_> = (0..n_dev).map(|d| pool.alloc(DeviceId(d), Shape4::mat(16, 16))).collect();
+        let node = NodeSpec::test_node(n_dev);
+        let mut plan = Plan::new();
+        let done = plan.add_sem(0);
+        let w = plan.add_worker(DeviceId(0), Role::CommSm, "comm");
+        multicast_store_async(
+            &mut plan,
+            &node.gpu,
+            w,
+            TileRef::new(MatView::full2d(src, 16, 16), DeviceId(0)),
+            dsts.iter().map(|&b| MatView::full2d(b, 16, 16)).collect(),
+            None,
+            Some(done),
+        );
+        plan.push(w, Op::Wait { sem: done, value: 1 });
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        for &b in &dsts {
+            assert_eq!(pool.get(b).data, pool.get(src).data);
+        }
+        // one egress message, N ingress deliveries
+        let r = TimedExec::new(node).run(&plan);
+        assert!((r.egress_bytes(0) - 512.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn all_reduce_sums_replicas_everywhere() {
+        let mut pool = MemPool::new();
+        let n_dev = 8;
+        let bufs: Vec<_> = (0..n_dev)
+            .map(|d| pool.alloc_init(DeviceId(d), Shape4::mat(16, 16), vec![(d + 1) as f32; 256]))
+            .collect();
+        let node = NodeSpec::test_node(n_dev);
+        let mut plan = Plan::new();
+        let w = plan.add_worker(DeviceId(3), Role::CommSm, "comm");
+        all_reduce(
+            &mut plan,
+            &node.gpu,
+            w,
+            bufs.iter().map(|&b| MatView::full2d(b, 16, 16)).collect(),
+            DeviceId(3),
+            ReduceOp::Add,
+            2.0,
+        );
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        let want = (1..=n_dev).sum::<usize>() as f32; // 36
+        for &b in &bufs {
+            assert!(pool.get(b).data.iter().all(|v| *v == want), "device missing reduced value");
+        }
+    }
+
+    #[test]
+    fn reduce_into_local_hbm() {
+        let mut pool = MemPool::new();
+        let n_dev = 4;
+        let bufs: Vec<_> = (0..n_dev)
+            .map(|d| pool.alloc_init(DeviceId(d), Shape4::mat(16, 16), vec![2.0 * (d + 1) as f32; 256]))
+            .collect();
+        let out = pool.alloc(DeviceId(1), Shape4::mat(16, 16));
+        let node = NodeSpec::test_node(n_dev);
+        let mut plan = Plan::new();
+        let w = plan.add_worker(DeviceId(1), Role::CommSm, "comm");
+        reduce(
+            &mut plan,
+            &node.gpu,
+            w,
+            bufs.iter().map(|&b| MatView::full2d(b, 16, 16)).collect(),
+            TileRef::new(MatView::full2d(out, 16, 16), DeviceId(1)),
+            ReduceOp::Max,
+            2.0,
+        );
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        assert!(pool.get(out).data.iter().all(|v| *v == 8.0));
+    }
+}

@@ -1,0 +1,142 @@
+//! Inter-device and inter-SM synchronization primitives (§3.2.2).
+//!
+//! The paper's `barrier_t` is a PGL of integer counters indexed by an
+//! element-wise coordinate; a signal is an atomic add on a specific
+//! device's counter (optionally multicast to all devices), and a wait is a
+//! spin on the local counter. In plan form each `(coord, device)` counter
+//! is one semaphore; signals pay the §3.1.3 latencies (64 ns mbarrier
+//! intra-SM, 832 ns HBM inter-SM, ~µs NVLink inter-device).
+//!
+//! PK deliberately avoids NCCL's two-way rendezvous: a signal is a one-way
+//! flag write into a *pre-allocated* destination barrier (§3.1.4), so
+//! transfers never wait for a receiver handshake.
+
+use crate::hw::DeviceId;
+use crate::plan::{Op, Plan, SemId, SyncScope};
+
+/// A barrier object: one counter per device for one coordinate.
+/// Allocate one `Barrier` per tile-coordinate you synchronize on
+/// (the paper indexes `barrier_t` by `coord`).
+#[derive(Clone, Debug)]
+pub struct Barrier {
+    pub sems: Vec<SemId>,
+}
+
+impl Barrier {
+    /// Allocate the per-device counters (initial value 0).
+    pub fn alloc(plan: &mut Plan, num_devices: usize) -> Self {
+        Barrier { sems: (0..num_devices).map(|_| plan.add_sem(0)).collect() }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.sems.len()
+    }
+}
+
+/// `signal(bar, coord, dev_idx, val)` — atomically add `val` to device
+/// `dst`'s counter. One-way; visible after an inter-device flag write.
+pub fn signal(plan: &mut Plan, w: usize, bar: &Barrier, dst: DeviceId, val: u64) {
+    plan.push(w, Op::Signal { sem: bar.sems[dst.0], value: val, scope: SyncScope::InterDevice });
+}
+
+/// Local-scope signal (same device, different SM): pays the HBM sync
+/// latency instead of NVLink (§3.1.3: 832 ns).
+pub fn signal_local(plan: &mut Plan, w: usize, bar: &Barrier, dev: DeviceId, val: u64) {
+    plan.push(w, Op::Signal { sem: bar.sems[dev.0], value: val, scope: SyncScope::InterSm });
+}
+
+/// `signal_all(bar, coord, val)` — multicast atomic add to every device's
+/// counter: a single multimem operation in hardware (§3.2.2), modelled as
+/// simultaneous signals each paying one inter-device latency.
+pub fn signal_all(plan: &mut Plan, w: usize, bar: &Barrier, val: u64) {
+    for &s in &bar.sems {
+        plan.push(w, Op::Signal { sem: s, value: val, scope: SyncScope::InterDevice });
+    }
+}
+
+/// `wait(bar, coord, dev_idx, expected)` — spin until device `dev`'s
+/// counter reaches `expected`.
+pub fn wait(plan: &mut Plan, w: usize, bar: &Barrier, dev: DeviceId, expected: u64) {
+    plan.push(w, Op::Wait { sem: bar.sems[dev.0], value: expected });
+}
+
+/// `barrier(bar, coord, dev_idx)` — full barrier across all devices:
+/// every participant signals everyone (multimem) and waits until its own
+/// counter shows all arrivals. `generation` lets the same barrier be
+/// reused (expected value = generation × num_devices).
+pub fn barrier(plan: &mut Plan, w: usize, bar: &Barrier, me: DeviceId, generation: u64) {
+    signal_all(plan, w, bar, 1);
+    wait(plan, w, bar, me, generation * bar.num_devices() as u64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::hw::spec::NodeSpec;
+    use crate::mem::MemPool;
+    use crate::plan::Role;
+
+    #[test]
+    fn signal_then_wait_releases() {
+        let mut plan = Plan::new();
+        let bar = Barrier::alloc(&mut plan, 2);
+        let w0 = plan.add_worker(DeviceId(0), Role::ComputeSm, "w0");
+        let w1 = plan.add_worker(DeviceId(1), Role::ComputeSm, "w1");
+        signal(&mut plan, w0, &bar, DeviceId(1), 5);
+        wait(&mut plan, w1, &bar, DeviceId(1), 5);
+        let mut pool = MemPool::new();
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        let r = TimedExec::new(NodeSpec::test_node(2)).run(&plan);
+        // one inter-device signal latency
+        assert!((r.total_time - NodeSpec::test_node(2).gpu.nvlink_signal).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_barrier_releases_all_devices() {
+        let n = 8;
+        let mut plan = Plan::new();
+        let bar = Barrier::alloc(&mut plan, n);
+        for d in 0..n {
+            let w = plan.add_worker(DeviceId(d), Role::ComputeSm, format!("w{d}"));
+            barrier(&mut plan, w, &bar, DeviceId(d), 1);
+        }
+        let mut pool = MemPool::new();
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        let r = TimedExec::new(NodeSpec::test_node(n)).run(&plan);
+        // all signals issued at t=0, visible after one NVLink latency.
+        assert!(r.total_time < 2.0 * NodeSpec::test_node(n).gpu.nvlink_signal);
+    }
+
+    #[test]
+    fn barrier_reuse_with_generations() {
+        let n = 3;
+        let mut plan = Plan::new();
+        let bar = Barrier::alloc(&mut plan, n);
+        for d in 0..n {
+            let w = plan.add_worker(DeviceId(d), Role::ComputeSm, format!("w{d}"));
+            barrier(&mut plan, w, &bar, DeviceId(d), 1);
+            barrier(&mut plan, w, &bar, DeviceId(d), 2);
+        }
+        let mut pool = MemPool::new();
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+    }
+
+    #[test]
+    fn intra_vs_inter_sm_latency_microbench() {
+        // §3.1.3: mbarrier 64 ns, HBM 832 ns — the µ1 exhibit.
+        let node = NodeSpec::test_node(1);
+        for (scope, expect) in
+            [(SyncScope::IntraSm, node.gpu.mbarrier_sync), (SyncScope::InterSm, node.gpu.hbm_sync)]
+        {
+            let mut plan = Plan::new();
+            let s = plan.add_sem(0);
+            let w0 = plan.add_worker(DeviceId(0), Role::ComputeSm, "sig");
+            let w1 = plan.add_worker(DeviceId(0), Role::ComputeSm, "wait");
+            plan.push(w0, Op::Signal { sem: s, value: 1, scope });
+            plan.push(w1, Op::Wait { sem: s, value: 1 });
+            let r = TimedExec::new(node.clone()).run(&plan);
+            assert!((r.total_time - expect).abs() < 1e-15, "{scope:?}: {}", r.total_time);
+        }
+    }
+}

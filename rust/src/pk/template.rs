@@ -1,0 +1,202 @@
+//! The LCSC (loader–consumer–storer–communicator) program template
+//! (§3.2.3, Appendix D).
+//!
+//! The template owns the structural decisions every PK kernel shares:
+//!
+//! * **SM partitioning** — `num_comm_sms` SMs per device run dedicated
+//!   *communicator* workers (inter-SM overlap); the rest are *compute* SMs
+//!   whose loader/storer warps issue async transfers around the consumer's
+//!   tensor-core work (intra-SM overlap).
+//! * **worker granularity** — a fidelity knob: each plan worker models a
+//!   group of SMs (`workers_per_device`); durations and rate caps are
+//!   scaled by the group size, so paper-scale problems stay tractable
+//!   while small functional runs can be SM-exact.
+//! * **pipelining** — `pipeline_stages` in-flight async stores per compute
+//!   worker (the semaphore ring of the Appendix D listing).
+//! * **launch cost** — the cost model's `T_launch`.
+//!
+//! Kernels built on the template only write per-tile compute and
+//! communication logic — the "<50 lines of device code" the paper claims.
+
+use crate::hw::spec::NodeSpec;
+use crate::hw::DeviceId;
+use crate::plan::{Plan, Role};
+
+/// Template configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct LcscOpts {
+    /// SMs per device dedicated to the communicator (0 = pure intra-SM).
+    pub num_comm_sms: u32,
+    /// Plan workers modelling the compute SMs of one device.
+    pub workers_per_device: u32,
+    /// Plan workers modelling the communicator SMs of one device.
+    pub comm_workers_per_device: u32,
+    /// In-flight async stores per compute worker.
+    pub pipeline_stages: u64,
+}
+
+impl Default for LcscOpts {
+    fn default() -> Self {
+        LcscOpts { num_comm_sms: 0, workers_per_device: 8, comm_workers_per_device: 2, pipeline_stages: 4 }
+    }
+}
+
+impl LcscOpts {
+    /// SM-exact worker granularity for small functional runs.
+    pub fn exact(node: &NodeSpec, num_comm_sms: u32) -> Self {
+        LcscOpts {
+            num_comm_sms,
+            workers_per_device: node.gpu.num_sms - num_comm_sms,
+            comm_workers_per_device: num_comm_sms.max(1),
+            pipeline_stages: 4,
+        }
+    }
+}
+
+/// An instantiated template: the plan plus the worker topology.
+pub struct Lcsc {
+    pub node: NodeSpec,
+    pub opts: LcscOpts,
+    pub plan: Plan,
+    /// `compute[dev][i]` — compute workers of device `dev`.
+    pub compute: Vec<Vec<usize>>,
+    /// `comm[dev][i]` — communicator workers of device `dev`.
+    pub comm: Vec<Vec<usize>>,
+}
+
+impl Lcsc {
+    /// Create workers for every device per the SM partition.
+    pub fn new(node: NodeSpec, opts: LcscOpts) -> Self {
+        assert!(opts.num_comm_sms < node.gpu.num_sms, "must leave compute SMs");
+        assert!(opts.workers_per_device >= 1);
+        let mut plan = Plan::new();
+        plan.launch_overhead = node.gpu.kernel_launch;
+        let mut compute = vec![];
+        let mut comm = vec![];
+        for d in 0..node.num_devices {
+            let dev = DeviceId(d);
+            let c: Vec<usize> = (0..opts.workers_per_device)
+                .map(|i| plan.add_worker(dev, Role::ComputeSm, format!("d{d}/sm{i}")))
+                .collect();
+            let m: Vec<usize> = if opts.num_comm_sms > 0 {
+                (0..opts.comm_workers_per_device)
+                    .map(|i| plan.add_worker(dev, Role::CommSm, format!("d{d}/comm{i}")))
+                    .collect()
+            } else {
+                vec![]
+            };
+            compute.push(c);
+            comm.push(m);
+        }
+        Lcsc { node, opts, plan, compute, comm }
+    }
+
+    /// Compute SMs per device under this partition.
+    pub fn compute_sms(&self) -> u32 {
+        self.node.gpu.num_sms - self.opts.num_comm_sms
+    }
+
+    /// Tensor-core throughput of **one compute worker** (its SM group).
+    pub fn worker_flops(&self) -> f64 {
+        self.node.gpu.tc_flops_for_sms(self.compute_sms()) / self.opts.workers_per_device as f64
+    }
+
+    /// Time for one worker to compute a `m×n×k` output-tile GEMM chain.
+    pub fn tile_gemm_time(&self, m: usize, n: usize, k: usize) -> f64 {
+        2.0 * (m as f64) * (n as f64) * (k as f64) / self.worker_flops()
+    }
+
+    /// SMs represented by one communicator worker (drives multimem/TMA
+    /// rate caps for communicator-issued transfers).
+    pub fn comm_sms_per_worker(&self) -> f64 {
+        if self.opts.num_comm_sms == 0 {
+            0.0
+        } else {
+            self.opts.num_comm_sms as f64 / self.opts.comm_workers_per_device as f64
+        }
+    }
+
+    /// Round-robin assignment of `n_tasks` to this device's compute
+    /// workers: returns, for worker `i`, the task indices it owns.
+    pub fn split_tasks(&self, dev: usize, n_tasks: usize) -> Vec<(usize, Vec<usize>)> {
+        let ws = &self.compute[dev];
+        let mut out: Vec<(usize, Vec<usize>)> = ws.iter().map(|&w| (w, vec![])).collect();
+        for t in 0..n_tasks {
+            out[t % ws.len()].1.push(t);
+        }
+        out
+    }
+
+    pub fn finish(self) -> Plan {
+        self.plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_creates_workers() {
+        let node = NodeSpec::test_node(4);
+        let l = Lcsc::new(
+            node,
+            LcscOpts { num_comm_sms: 16, workers_per_device: 4, comm_workers_per_device: 2, pipeline_stages: 4 },
+        );
+        assert_eq!(l.compute.len(), 4);
+        assert_eq!(l.compute[0].len(), 4);
+        assert_eq!(l.comm[0].len(), 2);
+        assert_eq!(l.plan.workers.len(), 4 * 6);
+        assert_eq!(l.compute_sms(), 132 - 16);
+        assert!(l.comm_sms_per_worker() == 8.0);
+    }
+
+    #[test]
+    fn zero_comm_sms_means_no_comm_workers() {
+        let l = Lcsc::new(NodeSpec::test_node(2), LcscOpts::default());
+        assert!(l.comm[0].is_empty());
+        assert_eq!(l.compute_sms(), 132);
+    }
+
+    #[test]
+    fn worker_flops_scale_with_partition() {
+        let node = NodeSpec::test_node(1);
+        let full = Lcsc::new(node.clone(), LcscOpts::default());
+        let half = Lcsc::new(
+            node,
+            LcscOpts { num_comm_sms: 66, workers_per_device: 8, comm_workers_per_device: 2, pipeline_stages: 4 },
+        );
+        assert!((full.worker_flops() / 2.0 - half.worker_flops()).abs() / full.worker_flops() < 1e-9);
+    }
+
+    #[test]
+    fn split_tasks_covers_all() {
+        let l = Lcsc::new(NodeSpec::test_node(1), LcscOpts::default());
+        let split = l.split_tasks(0, 19);
+        let total: usize = split.iter().map(|(_, t)| t.len()).sum();
+        assert_eq!(total, 19);
+        // balanced within 1
+        let (mn, mx) = split
+            .iter()
+            .map(|(_, t)| t.len())
+            .fold((usize::MAX, 0), |(a, b), l| (a.min(l), b.max(l)));
+        assert!(mx - mn <= 1);
+    }
+
+    #[test]
+    fn tile_gemm_time_scales() {
+        let l = Lcsc::new(NodeSpec::test_node(1), LcscOpts::default());
+        let t1 = l.tile_gemm_time(128, 128, 1024);
+        let t2 = l.tile_gemm_time(128, 128, 2048);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "compute SMs")]
+    fn rejects_all_comm_partition() {
+        let _ = Lcsc::new(
+            NodeSpec::test_node(1),
+            LcscOpts { num_comm_sms: 132, workers_per_device: 1, comm_workers_per_device: 1, pipeline_stages: 1 },
+        );
+    }
+}

@@ -1,0 +1,69 @@
+//! Runtime SM-partition auto-tuner (§3.1.3 "SM partitioning", Figure 5).
+//!
+//! Inter-SM overlap trades compute SMs for communication SMs; the optimum
+//! depends on problem size (larger workloads favour more compute SMs). PK
+//! "allows users to automatically search for the optimal SM allocation at
+//! runtime through a unified program template" — this module is that
+//! search: it times candidate partitions with the timed executor and picks
+//! the fastest.
+
+use crate::exec::TimedExec;
+use crate::hw::spec::NodeSpec;
+use crate::plan::Plan;
+
+/// Result of a partition sweep.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    /// Best number of communicator SMs.
+    pub best_comm_sms: u32,
+    /// Kernel time at the best partition.
+    pub best_time: f64,
+    /// Full sweep: `(num_comm_sms, time)`.
+    pub sweep: Vec<(u32, f64)>,
+}
+
+/// Sweep `candidates` communicator-SM counts, building the kernel plan for
+/// each with `build`, and return the fastest partition.
+pub fn tune_comm_sms(
+    node: &NodeSpec,
+    candidates: &[u32],
+    mut build: impl FnMut(u32) -> Plan,
+) -> TuneResult {
+    assert!(!candidates.is_empty());
+    let exec = TimedExec::new(node.clone());
+    let mut sweep = Vec::with_capacity(candidates.len());
+    for &c in candidates {
+        let plan = build(c);
+        let t = exec.run(&plan).total_time;
+        sweep.push((c, t));
+    }
+    let (best_comm_sms, best_time) =
+        sweep.iter().copied().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+    TuneResult { best_comm_sms, best_time, sweep }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::DeviceId;
+    use crate::plan::{Op, Role};
+
+    #[test]
+    fn tuner_picks_minimum() {
+        // Synthetic kernel: time = compute(1/(132-c)) + comm(1/c) —
+        // a convex trade-off with an interior optimum.
+        let node = NodeSpec::test_node(8);
+        let r = tune_comm_sms(&node, &[4, 8, 16, 32, 64], |c| {
+            let mut plan = Plan::new();
+            let w = plan.add_worker(DeviceId(0), Role::ComputeSm, "w");
+            let comp = 1.0 / (132 - c) as f64;
+            let comm = 1.0 / c as f64;
+            plan.push(w, Op::Compute { dur: comp + comm, label: "synthetic", effect: None });
+            plan
+        });
+        // d/dc [1/(132-c) + 1/c] = 0 at c = 66; among candidates, 64.
+        assert_eq!(r.best_comm_sms, 64);
+        assert_eq!(r.sweep.len(), 5);
+        assert!(r.sweep.iter().all(|(_, t)| *t >= r.best_time));
+    }
+}

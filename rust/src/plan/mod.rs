@@ -1,0 +1,272 @@
+//! The Plan IR: a tile-granularity description of a multi-GPU kernel.
+//!
+//! A [`Plan`] is a set of *workers* (SMs or SM-groups, plus host threads
+//! and copy engines), each executing a straight-line list of [`Op`]s that
+//! synchronize through monotonically increasing *semaphores* — exactly the
+//! signal/wait/barrier model of the paper's primitives (§3.2.2) and its
+//! LCSC template (§3.2.3, Appendix D).
+//!
+//! The same plan is consumed by two executors:
+//! * [`crate::exec::functional`] applies each op's [`Effect`] to real
+//!   buffers in a [`crate::mem::MemPool`] — numerics are verified against
+//!   references;
+//! * [`crate::exec::timed`] runs the discrete-event timing model — compute
+//!   durations, flow bandwidth sharing, and synchronization latencies.
+//!
+//! Builders may *coarsen* timed-only plans (group `G` tiles into one op,
+//! keeping per-message granularity for the bandwidth curves) to keep event
+//! counts tractable at paper-scale problem sizes; functional plans are
+//! always tile-exact.
+
+use crate::hw::DeviceId;
+use crate::mem::buffer::BufId;
+use crate::mem::pgl::ReduceOp;
+use crate::xfer::Mechanism;
+
+/// Semaphore handle within a plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SemId(pub usize);
+
+/// Online-softmax (attention) state handle within a plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StateId(pub usize);
+
+/// Which latency a signal pays before becoming visible (§3.1.3: 64 ns for
+/// an intra-SM mbarrier, 832 ns through HBM, ~µs over NVLink).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncScope {
+    IntraSm,
+    InterSm,
+    InterDevice,
+}
+
+/// The route a transfer takes, determining which ports it occupies.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Route {
+    /// Point-to-point over NVLink (or within a device if src == dst).
+    P2p { src: DeviceId, dst: DeviceId },
+    /// In-fabric broadcast from `src` to every device.
+    Multicast { src: DeviceId },
+    /// In-fabric reduction read by `reader` (multimem.ld_reduce).
+    LdReduce { reader: DeviceId },
+    /// Local HBM pass on `dev` (staging copies, reshapes — §3.1.4 costs).
+    LocalHbm { dev: DeviceId },
+    /// Host-initiated copy-engine transfer (occupies the CE serially).
+    CopyEngineP2p { src: DeviceId, dst: DeviceId },
+}
+
+/// A data transfer: `bytes` total moved in `msg_bytes` messages by `n_sms`
+/// issuing SMs via `mech`.
+#[derive(Clone, Debug)]
+pub struct TransferSpec {
+    pub mech: Mechanism,
+    pub route: Route,
+    pub bytes: f64,
+    pub msg_bytes: f64,
+    pub n_sms: f64,
+}
+
+/// A 2-D view into a buffer's `(r, c)` plane at batch/depth `(b, d)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MatView {
+    pub buf: BufId,
+    pub b: usize,
+    pub d: usize,
+    pub row0: usize,
+    pub col0: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl MatView {
+    /// Whole `(r, c)` plane of a 2-D buffer.
+    pub fn full2d(buf: BufId, rows: usize, cols: usize) -> Self {
+        MatView { buf, b: 0, d: 0, row0: 0, col0: 0, rows, cols }
+    }
+
+    /// Sub-view offset by rows/cols.
+    pub fn sub(&self, row0: usize, col0: usize, rows: usize, cols: usize) -> Self {
+        debug_assert!(row0 + rows <= self.rows && col0 + cols <= self.cols);
+        MatView { row0: self.row0 + row0, col0: self.col0 + col0, rows, cols, ..*self }
+    }
+}
+
+/// Functional semantics of an op (ignored by the timed executor).
+#[derive(Clone, Debug)]
+pub enum Effect {
+    /// `dst = src` (or `dst op= src` with a reduction) between two views of
+    /// identical shape, possibly on different devices.
+    CopyMat { src: MatView, dst: MatView, reduce: Option<ReduceOp> },
+    /// Broadcast `src` into the same region of every buffer in `dsts`
+    /// (functional multicast; with `reduce`, multimem.red semantics).
+    MulticastMat { src: MatView, dsts: Vec<MatView>, reduce: Option<ReduceOp> },
+    /// `dst = reduce(srcs)` elementwise (functional multimem.ld_reduce).
+    LdReduceMat { srcs: Vec<MatView>, dst: MatView, op: ReduceOp },
+    /// `c (+)= a @ b`.
+    Gemm { a: MatView, b: MatView, c: MatView, accumulate: bool },
+    /// In-place tanh-GeLU.
+    Gelu { x: MatView },
+    /// Fold one KV block into a blockwise-attention state:
+    /// `state.update(q, k, v)`.
+    AttnBlock { q: MatView, k: MatView, v: MatView, state: StateId },
+    /// Normalise an attention state into `out`.
+    AttnFinalize { state: StateId, out: MatView },
+    /// Copy selected rows of `src` to consecutive rows of `dst` starting at
+    /// `dst.row0` (MoE token gather/scatter). `rows` are src row indices.
+    GatherRows { src: MatView, rows: Vec<usize>, dst: MatView },
+    /// Scatter consecutive rows of `src` to the listed row indices of `dst`.
+    ScatterRows { src: MatView, dst: MatView, rows: Vec<usize>, reduce: Option<ReduceOp> },
+    /// Execute an AOT-compiled artifact via the PJRT runtime:
+    /// `outputs = artifact(inputs)` (views flattened row-major).
+    RunArtifact { name: String, inputs: Vec<MatView>, outputs: Vec<MatView> },
+}
+
+/// One instruction of a worker program.
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// Local compute taking `dur` seconds (timed) with optional numerics.
+    Compute { dur: f64, label: &'static str, effect: Option<Effect> },
+    /// A data transfer. If `blocking`, the worker waits for completion
+    /// (register-op semantics); otherwise it proceeds immediately
+    /// (TMA/CE async issue) and `done_sem` (if any) is signalled at
+    /// completion + `done_scope` latency.
+    Transfer {
+        spec: TransferSpec,
+        blocking: bool,
+        done_sem: Option<SemId>,
+        done_scope: SyncScope,
+        label: &'static str,
+        effect: Option<Effect>,
+    },
+    /// Block until `sem >= value`.
+    Wait { sem: SemId, value: u64 },
+    /// `sem += value`, visible after the scope's latency.
+    Signal { sem: SemId, value: u64, scope: SyncScope },
+    /// Fixed delay (library overheads, launch gaps).
+    Delay { dur: f64, label: &'static str },
+}
+
+/// The execution role of a worker (reporting/trace categories follow the
+/// LCSC template's specializations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// A compute SM (consumer + its loader/storer warps).
+    ComputeSm,
+    /// A dedicated communication SM (the template's communicator).
+    CommSm,
+    /// Host thread (launches, copy-engine programming).
+    Host,
+}
+
+/// One worker's straight-line program.
+#[derive(Clone, Debug)]
+pub struct WorkerPlan {
+    pub device: DeviceId,
+    pub role: Role,
+    pub label: String,
+    pub ops: Vec<Op>,
+}
+
+/// A complete kernel plan.
+#[derive(Clone, Debug, Default)]
+pub struct Plan {
+    /// Initial values of each semaphore.
+    pub sems: Vec<u64>,
+    /// Number of attention states used by `AttnBlock`/`AttnFinalize`.
+    pub num_states: usize,
+    pub workers: Vec<WorkerPlan>,
+    /// One-time kernel launch overhead added before t=0 work (T_launch).
+    pub launch_overhead: f64,
+}
+
+impl Plan {
+    pub fn new() -> Self {
+        Plan::default()
+    }
+
+    pub fn add_sem(&mut self, initial: u64) -> SemId {
+        self.sems.push(initial);
+        SemId(self.sems.len() - 1)
+    }
+
+    pub fn add_state(&mut self) -> StateId {
+        self.num_states += 1;
+        StateId(self.num_states - 1)
+    }
+
+    pub fn add_worker(&mut self, device: DeviceId, role: Role, label: impl Into<String>) -> usize {
+        self.workers.push(WorkerPlan { device, role, label: label.into(), ops: vec![] });
+        self.workers.len() - 1
+    }
+
+    pub fn push(&mut self, worker: usize, op: Op) {
+        self.workers[worker].ops.push(op);
+    }
+
+    pub fn total_ops(&self) -> usize {
+        self.workers.iter().map(|w| w.ops.len()).sum()
+    }
+}
+
+/// Convenience builder that carries the plan plus common context.
+pub struct PlanBuilder {
+    pub plan: Plan,
+}
+
+impl Default for PlanBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlanBuilder {
+    pub fn new() -> Self {
+        PlanBuilder { plan: Plan::new() }
+    }
+
+    pub fn finish(self) -> Plan {
+        self.plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_accumulates_workers_and_sems() {
+        let mut p = Plan::new();
+        let s = p.add_sem(0);
+        assert_eq!(s, SemId(0));
+        let w = p.add_worker(DeviceId(0), Role::ComputeSm, "sm0");
+        p.push(w, Op::Wait { sem: s, value: 1 });
+        p.push(w, Op::Signal { sem: s, value: 1, scope: SyncScope::IntraSm });
+        assert_eq!(p.total_ops(), 2);
+        assert_eq!(p.workers[w].role, Role::ComputeSm);
+    }
+
+    #[test]
+    fn matview_sub() {
+        let v = MatView::full2d(BufId(0), 64, 64);
+        let s = v.sub(16, 32, 16, 16);
+        assert_eq!((s.row0, s.col0, s.rows, s.cols), (16, 32, 16, 16));
+        let s2 = s.sub(1, 1, 4, 4);
+        assert_eq!((s2.row0, s2.col0), (17, 33));
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn matview_sub_bounds_checked() {
+        let v = MatView::full2d(BufId(0), 16, 16);
+        let _ = v.sub(8, 8, 16, 16);
+    }
+
+    #[test]
+    fn state_alloc() {
+        let mut p = Plan::new();
+        assert_eq!(p.add_state(), StateId(0));
+        assert_eq!(p.add_state(), StateId(1));
+        assert_eq!(p.num_states, 2);
+    }
+}

@@ -1,0 +1,569 @@
+//! One function per paper exhibit. Sweep points follow the paper's axes;
+//! `fast` mode trims sweeps for CI.
+
+use super::table::{ms, pct, Table};
+use crate::baselines::{self, phantom_replicas};
+use crate::comm::nccl::{self, NcclModel, RingCtx};
+use crate::comm::nvshmem::{self, PeerApi};
+use crate::exec::TimedExec;
+use crate::hw::spec::{GpuSpec, NodeSpec};
+use crate::kernels::collectives::{self, Axis, PkCollCtx};
+use crate::kernels::gemm_rs::Schedule;
+use crate::kernels::moe::{MoeCfg, MoeSchedule, Routing};
+use crate::kernels::ring_attention::RingAttnCfg;
+use crate::kernels::ulysses::UlyssesCfg;
+use crate::kernels::{ag_gemm, gemm, gemm_ar, gemm_rs, moe, ring_attention, ulysses, GemmKernelCfg};
+use crate::plan::Plan;
+use crate::xfer::{curves, Functionality, Mechanism};
+
+/// An exhibit of the paper: id, caption, generator.
+pub struct Exhibit {
+    pub id: &'static str,
+    pub caption: &'static str,
+    pub run: fn(fast: bool) -> Table,
+}
+
+/// The full registry, in paper order.
+pub fn all_exhibits() -> Vec<Exhibit> {
+    vec![
+        Exhibit { id: "tab1", caption: "Table 1: NVLink bandwidth utilization by mechanism", run: tab1 },
+        Exhibit { id: "fig2", caption: "Figure 2: bandwidth vs message size (1 GB P2P)", run: fig2 },
+        Exhibit { id: "fig3", caption: "Figure 3: SMs required to saturate NVLink", run: fig3 },
+        Exhibit { id: "tab2", caption: "Table 2: mechanism functionality matrix", run: tab2 },
+        Exhibit { id: "fig4", caption: "Figure 4: GEMM+RS / GEMM+AR across overlap schedules", run: fig4 },
+        Exhibit { id: "tab3", caption: "Table 3: GEMM vs GEMM+RS vs K (comm hiding)", run: tab3 },
+        Exhibit { id: "fig5", caption: "Figure 5: AG+GEMM communicator-SM partition sweep", run: fig5 },
+        Exhibit { id: "fig6", caption: "Figure 6: all-reduce PK vs NCCL (BF16)", run: fig6 },
+        Exhibit { id: "fig7", caption: "Figure 7: AG+GEMM vs baselines", run: fig7 },
+        Exhibit { id: "fig8", caption: "Figure 8: GEMM+RS vs baselines", run: fig8 },
+        Exhibit { id: "fig9", caption: "Figure 9: GEMM+AR vs baselines", run: fig9 },
+        Exhibit { id: "fig10", caption: "Figure 10: Ring Attention vs xDiT", run: fig10 },
+        Exhibit { id: "fig11", caption: "Figure 11: DeepSpeed-Ulysses vs YunChang", run: fig11 },
+        Exhibit { id: "fig12", caption: "Figure 12: MoE dispatch+GEMM vs Comet", run: fig12 },
+        Exhibit { id: "fig13", caption: "Figure 13: GEMM+RS on B200", run: fig13 },
+        Exhibit { id: "fig14", caption: "Figure 14: Ulysses on B200", run: fig14 },
+        Exhibit { id: "fig15", caption: "Figure 15: tensor-dim all-gather vs NCCL", run: fig15 },
+        Exhibit { id: "fig16", caption: "Figure 16: tensor-dim reduce-scatter vs NCCL", run: fig16 },
+        Exhibit { id: "fig17", caption: "Figure 17: 4-D (B,S,H,D) all-to-all vs NCCL", run: fig17 },
+        Exhibit { id: "mu1", caption: "§3.1.3 sync microbenchmark (mbarrier vs HBM)", run: mu1 },
+        Exhibit { id: "mu2", caption: "§3.1.4 NVSHMEM peer-access overheads", run: mu2 },
+    ]
+}
+
+/// Run one exhibit by id.
+pub fn run_exhibit(id: &str, fast: bool) -> Option<Table> {
+    all_exhibits().iter().find(|e| e.id == id).map(|e| (e.run)(fast))
+}
+
+fn time_of(node: &NodeSpec, plan: &Plan) -> f64 {
+    TimedExec::new(node.clone()).run(plan).total_time
+}
+
+// ---------------------------------------------------------------- Table 1
+fn tab1(_fast: bool) -> Table {
+    let mut t = Table::new(
+        "Table 1: observed NVLink bandwidth (GB/s) for a 1 GB transfer, all SMs",
+        &["method", "H100 GB/s", "H100 ratio", "B200 GB/s", "B200 ratio"],
+    );
+    let h = GpuSpec::h100();
+    let b = GpuSpec::b200();
+    let gb = 1e9;
+    for (name, mech) in [("copy engine", Mechanism::CopyEngine), ("TMA op", Mechanism::Tma), ("register op", Mechanism::RegOp)] {
+        let rh = curves::rate(&h, mech, gb, h.num_sms as f64);
+        let rb = curves::rate(&b, mech, gb, b.num_sms as f64);
+        t.row(vec![
+            name.into(),
+            format!("{:.2}", rh / 1e9),
+            pct(rh / h.nvlink_bw),
+            format!("{:.2}", rb / 1e9),
+            pct(rb / b.nvlink_bw),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------- Figure 2
+fn fig2(fast: bool) -> Table {
+    let mut t = Table::new(
+        "Figure 2: bandwidth utilization vs message size (H100, fraction of 450 GB/s)",
+        &["msg_bytes", "copy_engine", "tma", "reg"],
+    );
+    let g = GpuSpec::h100();
+    let sizes: Vec<f64> = if fast {
+        vec![128.0, 2048.0, 65536.0, 1e6, 256e6, 1e9]
+    } else {
+        (7..31).map(|p| (1u64 << p) as f64).collect()
+    };
+    for msg in sizes {
+        t.row(vec![
+            format!("{msg:.0}"),
+            format!("{:.4}", curves::ce_rate(&g, msg) / g.nvlink_bw),
+            format!("{:.4}", curves::tma_rate(&g, msg, g.num_sms as f64) / g.nvlink_bw),
+            format!("{:.4}", curves::reg_rate(&g, msg, g.num_sms as f64) / g.nvlink_bw),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------- Figure 3
+fn fig3(fast: bool) -> Table {
+    let mut t = Table::new(
+        "Figure 3: NVLink utilization vs issuing SMs (H100, 1 MB messages)",
+        &["sms", "tma", "reg"],
+    );
+    let g = GpuSpec::h100();
+    let points: Vec<u32> =
+        if fast { vec![1, 8, 15, 32, 76, 132] } else { (1..=132).collect() };
+    for n in points {
+        t.row(vec![
+            n.to_string(),
+            format!("{:.4}", curves::tma_rate(&g, 1e6, n as f64) / g.nvlink_bw),
+            format!("{:.4}", curves::reg_rate(&g, 1e6, n as f64) / g.nvlink_bw),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------- Table 2
+fn tab2(_fast: bool) -> Table {
+    let mut t = Table::new(
+        "Table 2: functionality by mechanism",
+        &["functionality", "CE", "TMA", "Reg"],
+    );
+    use Functionality::*;
+    for (name, f) in [
+        ("P2P transfer", P2pTransfer),
+        ("in-fabric broadcast", InFabricBroadcast),
+        ("P2P reduction", P2pReduction),
+        ("in-fabric reduction", InFabricReduction),
+        ("elementwise transfer", ElementwiseTransfer),
+    ] {
+        let mark = |m: Mechanism| if m.supports(f) { "yes" } else { "no" }.to_string();
+        t.row(vec![name.into(), mark(Mechanism::CopyEngine), mark(Mechanism::Tma), mark(Mechanism::RegOp)]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------- Figure 4
+fn fig4(_fast: bool) -> Table {
+    let node = NodeSpec::hgx_h100();
+    let n = 32768;
+    let cfg = GemmKernelCfg::new(node.clone(), n, n, n / 8);
+    let mut t = Table::new(
+        "Figure 4: overlap schedules, local GEMM N×N×N/8, N=32768 (TFLOP/s)",
+        &["kernel", "schedule", "time_ms", "tflops"],
+    );
+    for (kname, intra, inter) in [
+        (
+            "GEMM+RS",
+            time_of(&node, &gemm_rs::build(&cfg, Schedule::IntraSm, None)),
+            time_of(&node, &gemm_rs::build(&cfg, Schedule::InterSm, None)),
+        ),
+        (
+            "GEMM+AR",
+            time_of(&node, &gemm_ar::build(&cfg, Schedule::IntraSm, None)),
+            time_of(&node, &gemm_ar::build(&cfg, Schedule::InterSm, None)),
+        ),
+    ] {
+        t.row(vec![kname.into(), "intra-SM".into(), ms(intra), super::table::tflops(cfg.local_flops(), intra)]);
+        t.row(vec![kname.into(), "inter-SM".into(), ms(inter), super::table::tflops(cfg.local_flops(), inter)]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------- Table 3
+fn tab3(fast: bool) -> Table {
+    let node = NodeSpec::hgx_h100();
+    let mut t = Table::new(
+        "Table 3: measured BF16 GEMM and GEMM+RS (ms), M=N=32768",
+        &["K", "GEMM_ms", "GEMM+RS_ms", "comm_ratio"],
+    );
+    let ks: &[usize] = if fast { &[512, 2048, 8192] } else { &[512, 1024, 2048, 4096, 8192] };
+    for &k in ks {
+        let cfg = GemmKernelCfg::new(node.clone(), 32768, 32768, k);
+        let t_gemm = time_of(&node, &gemm::build(&cfg, None));
+        let t_fused = time_of(&node, &gemm_rs::build(&cfg, Schedule::IntraSm, None));
+        t.row(vec![k.to_string(), ms(t_gemm), ms(t_fused), pct((t_fused - t_gemm) / t_fused)]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------- Figure 5
+fn fig5(fast: bool) -> Table {
+    let node = NodeSpec::hgx_h100();
+    let mut t = Table::new(
+        "Figure 5: AG+GEMM time vs communicator SMs (local N×N/8×N)",
+        &["N", "comm_sms", "time_ms", "tflops"],
+    );
+    let ns: &[usize] = if fast { &[8192, 32768] } else { &[8192, 16384, 32768] };
+    let sms: &[u32] = if fast { &[8, 32] } else { &[4, 8, 16, 32, 48, 64] };
+    for &n in ns {
+        for &c in sms {
+            let mut cfg = GemmKernelCfg::new(node.clone(), n, n / 8, n);
+            cfg.opts.num_comm_sms = c;
+            let time = time_of(&node, &ag_gemm::build(&cfg, None));
+            t.row(vec![n.to_string(), c.to_string(), ms(time), super::table::tflops(cfg.local_flops(), time)]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------- Figure 6
+fn fig6(fast: bool) -> Table {
+    let node = NodeSpec::hgx_h100();
+    let mut t = Table::new(
+        "Figure 6: all-reduce (BF16) PK vs NCCL — algorithm bandwidth GB/s",
+        &["bytes", "pk_ms", "nccl_ms", "speedup"],
+    );
+    let sizes: &[usize] = if fast { &[1 << 24, 1 << 28] } else { &[1 << 22, 1 << 24, 1 << 26, 1 << 28, 1 << 30] };
+    for &bytes in sizes {
+        // rows*cols*2 = bytes; rows divisible by 8
+        let rows = 1024;
+        let cols = bytes / 2 / rows;
+        let views = phantom_replicas(node.num_devices, rows, cols);
+        let mut pk_plan = Plan::new();
+        collectives::pk_all_reduce(&mut pk_plan, &PkCollCtx { node: &node, replicas: views.clone(), n_sms: 76.0, msg_bytes: 65536.0 });
+        let t_pk = time_of(&node, &pk_plan);
+        let t_nccl = nccl::allreduce_time(&node, rows, cols);
+        let _ = views;
+        t.row(vec![bytes.to_string(), ms(t_pk), ms(t_nccl), format!("{:.2}", t_nccl / t_pk)]);
+    }
+    t
+}
+
+// ------------------------------------------------------- Figures 7, 8, 9
+fn gemm_sweep(node: &NodeSpec, fast: bool) -> Vec<usize> {
+    if fast {
+        vec![4096, 32768]
+    } else {
+        let _ = node;
+        vec![4096, 8192, 16384, 24576, 32768]
+    }
+}
+
+fn fig7(fast: bool) -> Table {
+    let node = NodeSpec::hgx_h100();
+    let mut t = Table::new(
+        "Figure 7: AG+GEMM throughput (TFLOP/s), local N×N/8×N",
+        &["N", "pk", "nonoverlap", "flux", "triton_dist", "cutlass"],
+    );
+    for n in gemm_sweep(&node, fast) {
+        let cfg = GemmKernelCfg::new(node.clone(), n, n / 8, n);
+        let fl = cfg.local_flops();
+        let tf = |time: f64| format!("{:.1}", fl / time / 1e12);
+        // PK auto-tunes its communicator partition at runtime (§3.1.3)
+        let tuned = crate::pk::tuner::tune_comm_sms(&node, &[2, 4, 8, 16, 32], |c| {
+            let mut cfg = cfg.clone();
+            cfg.opts.num_comm_sms = c;
+            ag_gemm::build(&cfg, None)
+        });
+        t.row(vec![
+            n.to_string(),
+            tf(tuned.best_time),
+            tf(baselines::nonoverlap::ag_gemm(&cfg)),
+            tf(baselines::flux::ag_gemm(&cfg)),
+            tf(baselines::triton_dist::ag_gemm(&cfg)),
+            tf(baselines::cutlass_dist::ag_gemm(&cfg)),
+        ]);
+    }
+    t
+}
+
+fn fig8(fast: bool) -> Table {
+    let node = NodeSpec::hgx_h100();
+    let mut t = Table::new(
+        "Figure 8: GEMM+RS throughput (TFLOP/s), local N×N×N/8",
+        &["N", "pk", "nonoverlap", "flux", "triton_dist", "cutlass"],
+    );
+    for n in gemm_sweep(&node, fast) {
+        let cfg = GemmKernelCfg::new(node.clone(), n, n, n / 8);
+        let fl = cfg.local_flops();
+        let tf = |time: f64| format!("{:.1}", fl / time / 1e12);
+        t.row(vec![
+            n.to_string(),
+            tf(time_of(&node, &gemm_rs::build(&cfg, Schedule::IntraSm, None))),
+            tf(baselines::nonoverlap::gemm_rs(&cfg)),
+            tf(baselines::flux::gemm_rs(&cfg)),
+            tf(baselines::triton_dist::gemm_rs(&cfg)),
+            tf(baselines::cutlass_dist::gemm_rs(&cfg)),
+        ]);
+    }
+    t
+}
+
+fn fig9(fast: bool) -> Table {
+    let node = NodeSpec::hgx_h100();
+    let mut t = Table::new(
+        "Figure 9: GEMM+AR throughput (TFLOP/s), local N×N×N/8 — Flux/CUTLASS provide no AR kernels",
+        &["N", "pk", "nonoverlap", "triton_dist"],
+    );
+    for n in gemm_sweep(&node, fast) {
+        let cfg = GemmKernelCfg::new(node.clone(), n, n, n / 8);
+        let fl = cfg.local_flops();
+        let tf = |time: f64| format!("{:.1}", fl / time / 1e12);
+        t.row(vec![
+            n.to_string(),
+            tf(time_of(&node, &gemm_ar::build(&cfg, Schedule::InterSm, None))),
+            tf(baselines::nonoverlap::gemm_ar(&cfg)),
+            tf(baselines::triton_dist::gemm_ar(&cfg)),
+        ]);
+    }
+    t
+}
+
+// --------------------------------------------------------------- Figure 10
+fn fig10(fast: bool) -> Table {
+    let node = NodeSpec::hgx_h100();
+    let mut t = Table::new(
+        "Figure 10: Ring Attention (B=16, H=16, D=128) — TFLOP/s",
+        &["S_total", "pk", "xdit", "speedup"],
+    );
+    let seqs: &[usize] = if fast { &[6144, 49152] } else { &[6144, 12288, 24576, 49152, 98304] };
+    for &s in seqs {
+        let cfg = RingAttnCfg::paper(node.clone(), s);
+        let t_pk = time_of(&node, &ring_attention::build(&cfg, None));
+        let t_x = baselines::xdit::ring_attention(&cfg);
+        let fl = cfg.total_flops();
+        t.row(vec![
+            s.to_string(),
+            format!("{:.1}", fl / t_pk / 1e12),
+            format!("{:.1}", fl / t_x / 1e12),
+            format!("{:.2}", t_x / t_pk),
+        ]);
+    }
+    t
+}
+
+// --------------------------------------------------------------- Figure 11
+fn fig11(fast: bool) -> Table {
+    ulysses_table(NodeSpec::hgx_h100(), "Figure 11: Ulysses attention (B=16, H=128, D=128) — TFLOP/s", fast)
+}
+
+fn ulysses_table(node: NodeSpec, title: &str, fast: bool) -> Table {
+    let mut t = Table::new(title, &["S_total", "pk", "yunchang", "speedup"]);
+    let seqs: &[usize] = if fast { &[8192, 65536] } else { &[8192, 16384, 32768, 65536, 131072] };
+    for &s in seqs {
+        let cfg = UlyssesCfg::paper(node.clone(), s);
+        let t_pk = time_of(&node, &ulysses::build(&cfg, None));
+        let t_yc = baselines::yunchang::ulysses(&cfg);
+        let fl = cfg.attn_flops();
+        t.row(vec![
+            s.to_string(),
+            format!("{:.1}", fl / t_pk / 1e12),
+            format!("{:.1}", fl / t_yc / 1e12),
+            format!("{:.2}", t_yc / t_pk),
+        ]);
+    }
+    t
+}
+
+// --------------------------------------------------------------- Figure 12
+fn fig12(fast: bool) -> Table {
+    let node = NodeSpec::hgx_h100();
+    let mut t = Table::new(
+        "Figure 12: MoE dispatch+GEMM (TopK=8, E=256, H=7168, He=2048) — TFLOP/s",
+        &["tokens", "pk", "comet", "nonoverlap", "pk_vs_comet"],
+    );
+    let toks: &[usize] = if fast { &[4096, 32768] } else { &[4096, 8192, 16384, 32768, 65536] };
+    for &tok in toks {
+        let cfg = MoeCfg::paper(node.clone(), tok);
+        let routing = Routing::uniform(&cfg, 11);
+        let t_pk = time_of(&node, &moe::build(&cfg, &routing, MoeSchedule::Overlapped, None));
+        let t_comet = baselines::comet::moe(&cfg, &routing);
+        let t_seq = time_of(&node, &moe::build(&cfg, &routing, MoeSchedule::Sequential, None));
+        let fl = cfg.gemm_flops_per_device();
+        t.row(vec![
+            tok.to_string(),
+            format!("{:.1}", fl / t_pk / 1e12),
+            format!("{:.1}", fl / t_comet / 1e12),
+            format!("{:.1}", fl / t_seq / 1e12),
+            format!("{:.2}", t_comet / t_pk),
+        ]);
+    }
+    t
+}
+
+// --------------------------------------------------------------- Figure 13
+fn fig13(fast: bool) -> Table {
+    let node = NodeSpec::hgx_b200();
+    let mut t = Table::new(
+        "Figure 13: GEMM+RS on B200 (TFLOP/s), local N×N×N/8",
+        &["N", "pk", "nonoverlap", "triton_dist"],
+    );
+    for n in gemm_sweep(&node, fast) {
+        let cfg = GemmKernelCfg::new(node.clone(), n, n, n / 8);
+        let fl = cfg.local_flops();
+        let tf = |time: f64| format!("{:.1}", fl / time / 1e12);
+        t.row(vec![
+            n.to_string(),
+            tf(time_of(&node, &gemm_rs::build(&cfg, Schedule::IntraSm, None))),
+            tf(baselines::nonoverlap::gemm_rs(&cfg)),
+            tf(baselines::triton_dist::gemm_rs(&cfg)),
+        ]);
+    }
+    t
+}
+
+// --------------------------------------------------------------- Figure 14
+fn fig14(fast: bool) -> Table {
+    ulysses_table(NodeSpec::hgx_b200(), "Figure 14: Ulysses attention on B200 (B=16, H=128, D=128) — TFLOP/s", fast)
+}
+
+// ------------------------------------------------------- Figures 15, 16
+/// Time of an NCCL collective along the tensor dimension: pack + ring +
+/// unpack on every device (Appendix B).
+fn nccl_tensor_dim(node: &NodeSpec, rows: usize, cols: usize, rs: bool) -> f64 {
+    let t_coll = if rs {
+        nccl::reducescatter_time(node, rows, cols)
+    } else {
+        nccl::allgather_time(node, rows, cols)
+    };
+    let bytes = (rows * cols * 2) as f64;
+    let reshape = 2.0 * bytes / node.gpu.hbm_bw + node.gpu.kernel_launch;
+    reshape + t_coll + reshape
+}
+
+fn fig15(fast: bool) -> Table {
+    let node = NodeSpec::hgx_h100();
+    let mut t = Table::new(
+        "Figure 15: tensor-dimension all-gather (BF16), gathered N×N",
+        &["N", "pk_ms", "nccl_ms", "speedup"],
+    );
+    let ns: &[usize] = if fast { &[2048, 16384] } else { &[2048, 4096, 8192, 16384, 32768] };
+    for &n in ns {
+        let views = phantom_replicas(node.num_devices, n, n);
+        let mut plan = Plan::new();
+        collectives::pk_all_gather(&mut plan, &PkCollCtx::new(&node, views), Axis::Col);
+        let t_pk = time_of(&node, &plan);
+        let t_nccl = nccl_tensor_dim(&node, n, n, false);
+        t.row(vec![n.to_string(), ms(t_pk), ms(t_nccl), format!("{:.2}", t_nccl / t_pk)]);
+    }
+    t
+}
+
+fn fig16(fast: bool) -> Table {
+    let node = NodeSpec::hgx_h100();
+    let mut t = Table::new(
+        "Figure 16: tensor-dimension reduce-scatter (BF16), scattered N×N/8",
+        &["N", "pk_ms", "nccl_ms", "speedup"],
+    );
+    let ns: &[usize] = if fast { &[2048, 16384] } else { &[2048, 4096, 8192, 16384, 32768] };
+    for &n in ns {
+        let views = phantom_replicas(node.num_devices, n, n);
+        let mut plan = Plan::new();
+        collectives::pk_reduce_scatter(&mut plan, &PkCollCtx::new(&node, views), Axis::Col);
+        let t_pk = time_of(&node, &plan);
+        let t_nccl = nccl_tensor_dim(&node, n, n, true);
+        t.row(vec![n.to_string(), ms(t_pk), ms(t_nccl), format!("{:.2}", t_nccl / t_pk)]);
+    }
+    t
+}
+
+// --------------------------------------------------------------- Figure 17
+fn fig17(fast: bool) -> Table {
+    let node = NodeSpec::hgx_h100();
+    let mut t = Table::new(
+        "Figure 17: 4-D (B=1, S, H=128, D=128) all-to-all (BF16): S gathered, H scattered",
+        &["S", "pk_ms", "nccl_ms", "speedup"],
+    );
+    let seqs: &[usize] = if fast { &[8192, 65536] } else { &[8192, 16384, 32768, 65536, 131072] };
+    for &s in seqs {
+        let a2a = collectives::A2aCfg { b_dim: 1, s_local: s / node.num_devices, h: 128, d_head: 128 };
+        let mut plan = Plan::new();
+        collectives::pk_all_to_all_4d(&mut plan, &node, &a2a, None, None, 16.0);
+        let t_pk = time_of(&node, &plan);
+        // NCCL path: pack + contiguous a2a + unpack
+        let bytes = (a2a.s_local * a2a.h * a2a.d_head * 2) as f64;
+        let rows = node.num_devices * 8;
+        let cols = (bytes / 2.0 / rows as f64) as usize;
+        let mut nccl_plan = Plan::new();
+        let a2a_views = phantom_replicas(node.num_devices, rows, cols);
+        nccl::all_to_all(&mut nccl_plan, &RingCtx { node: &node, model: NcclModel::default(), replicas: a2a_views.clone() }, &a2a_views);
+        let reshape = 2.0 * bytes / node.gpu.hbm_bw + node.gpu.kernel_launch;
+        let t_nccl = reshape + time_of(&node, &nccl_plan) + reshape;
+        t.row(vec![s.to_string(), ms(t_pk), ms(t_nccl), format!("{:.2}", t_nccl / t_pk)]);
+    }
+    t
+}
+
+// --------------------------------------------------------------- µ1, µ2
+fn mu1(_fast: bool) -> Table {
+    let g = GpuSpec::h100();
+    let mut t = Table::new("§3.1.3 synchronization microbenchmark", &["mechanism", "latency_ns"]);
+    t.row(vec!["intra-SM mbarrier".into(), format!("{:.0}", g.mbarrier_sync * 1e9)]);
+    t.row(vec!["inter-SM via HBM".into(), format!("{:.0}", g.hbm_sync * 1e9)]);
+    t.row(vec!["inter-device NVLink flag".into(), format!("{:.0}", g.nvlink_signal * 1e9)]);
+    t
+}
+
+fn mu2(_fast: bool) -> Table {
+    let g = GpuSpec::h100();
+    let mut t = Table::new(
+        "§3.1.4 NVSHMEM vs PK peer access",
+        &["api", "elementwise_latency_us", "bandwidth_GBps"],
+    );
+    for api in [PeerApi::Nvshmem, PeerApi::Pk] {
+        t.row(vec![
+            format!("{api:?}"),
+            format!("{:.2}", nvshmem::elementwise_latency(&g, api) * 1e6),
+            format!("{:.1}", nvshmem::reg_bandwidth(&g, api, 1e6, 132.0) / 1e9),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_complete_and_runnable_fast() {
+        let ex = all_exhibits();
+        assert_eq!(ex.len(), 21, "17 figures/tables + 2 micro + tab1/tab2 included");
+        for e in &ex {
+            let t = (e.run)(true);
+            assert!(!t.rows.is_empty(), "{} produced no rows", e.id);
+        }
+    }
+
+    #[test]
+    fn run_exhibit_by_id() {
+        assert!(run_exhibit("tab1", true).is_some());
+        assert!(run_exhibit("nope", true).is_none());
+    }
+
+    #[test]
+    fn fig7_pk_wins_and_crossovers_match_paper() {
+        let t = fig7(true);
+        let pk = t.col_f64("pk");
+        let nonov = t.col_f64("nonoverlap");
+        let flux = t.col_f64("flux");
+        let td = t.col_f64("triton_dist");
+        // PK above non-overlap everywhere (1.06-1.68x)
+        for (p, n) in pk.iter().zip(&nonov) {
+            assert!(p > n, "PK must beat non-overlap: {pk:?} vs {nonov:?}");
+        }
+        // small N: CE-based baselines below non-overlap (the paper's crossover)
+        assert!(flux[0] < nonov[0], "Flux below baseline at N=4096: {flux:?} vs {nonov:?}");
+        assert!(td[0] < nonov[0], "TD below baseline at N=4096");
+        // large N: flux competitive with PK (within 20%)
+        let last = pk.len() - 1;
+        assert!(flux[last] > 0.8 * pk[last], "Flux competitive at large N");
+    }
+
+    #[test]
+    fn fig10_speedup_shrinks_with_s() {
+        let t = fig10(true);
+        let sp = t.col_f64("speedup");
+        assert!(sp[0] > sp[sp.len() - 1], "gap shrinks with sequence length: {sp:?}");
+        assert!(sp.iter().all(|s| *s >= 1.0), "PK never loses: {sp:?}");
+    }
+
+    #[test]
+    fn fig15_pk_beats_nccl_tensor_dim() {
+        let t = fig15(true);
+        for s in t.col_f64("speedup") {
+            assert!(s > 1.0, "PK wins tensor-dim AG: {s}");
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Regenerates every table and figure of the paper (see DESIGN.md §4 for
+//! the experiment index). Each `fig*`/`tab*` function returns a
+//! [`Table`] whose rows mirror the paper's exhibit; the `pk figures` CLI
+//! and `cargo bench --bench figures` print them.
+
+pub mod ablations;
+pub mod exhibits;
+pub mod table;
+
+pub use exhibits::{all_exhibits, run_exhibit, Exhibit};
+pub use table::Table;

@@ -1,0 +1,162 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the Rust hot path.
+//!
+//! Interchange is **HLO text** (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see `/opt/xla-example/README.md`). Each artifact is
+//! lowered with `return_tuple=True`, so execution results are tuples.
+//!
+//! Python runs once at `make artifacts`; after that this module is the only
+//! consumer of the files and no Python is on the request path.
+
+pub mod registry;
+
+pub use registry::{ArtifactMeta, Manifest};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Lazily-compiled PJRT executables keyed by artifact name.
+pub struct Runtime {
+    dir: PathBuf,
+    manifest: Manifest,
+    client: Option<xla::PjRtClient>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Execution counters (name -> calls), used by the coordinator metrics.
+    pub call_counts: HashMap<String, u64>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (reads `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        Ok(Runtime { dir, manifest, client: None, executables: HashMap::new(), call_counts: HashMap::new() })
+    }
+
+    /// The default artifacts directory: `$PK_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PK_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn client(&mut self) -> Result<&xla::PjRtClient> {
+        if self.client.is_none() {
+            self.client = Some(xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?);
+        }
+        Ok(self.client.as_ref().unwrap())
+    }
+
+    /// Compile (once) and return the executable for `name`.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let meta = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (run `make artifacts`)"))?
+                .clone();
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client()?
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling artifact {name}: {e:?}"))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Execute artifact `name` on row-major f32 inputs with the given dims.
+    /// Returns one flat vector per output.
+    pub fn execute(&mut self, name: &str, inputs: &[(Vec<f32>, Vec<usize>)]) -> Result<Vec<Vec<f32>>> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        if meta.inputs.len() != inputs.len() {
+            bail!("artifact {name}: expected {} inputs, got {}", meta.inputs.len(), inputs.len());
+        }
+        for (i, ((data, dims), want)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            let n: usize = dims.iter().product();
+            if data.len() != n {
+                bail!("artifact {name} input {i}: data len {} != dims {:?}", data.len(), dims);
+            }
+            let wn: usize = want.iter().product();
+            if n != wn {
+                bail!("artifact {name} input {i}: got shape {:?}, manifest says {:?}", dims, want);
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims_i64)
+                    .map_err(|e| anyhow!("reshape input: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        *self.call_counts.entry(name.to_string()).or_insert(0) += 1;
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("untupling result of {name}: {e:?}"))?;
+        if parts.len() != meta.outputs.len() {
+            bail!("artifact {name}: manifest says {} outputs, got {}", meta.outputs.len(), parts.len());
+        }
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("output to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// True when every artifact the caller needs is present.
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.get(name).is_some()
+    }
+}
+
+/// Anything that can execute an AOT artifact. `Runtime` implements it
+/// directly; the coordinator's worker threads implement it as a channel
+/// proxy to the leader thread (PJRT clients are not `Send`).
+pub trait ArtifactRunner {
+    fn run_artifact(&mut self, name: &str, inputs: &[(Vec<f32>, Vec<usize>)]) -> Result<Vec<Vec<f32>>>;
+}
+
+impl ArtifactRunner for Runtime {
+    fn run_artifact(&mut self, name: &str, inputs: &[(Vec<f32>, Vec<usize>)]) -> Result<Vec<Vec<f32>>> {
+        self.execute(name, inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_dir_env_override() {
+        // No env set in tests normally; default is ./artifacts
+        if std::env::var("PK_ARTIFACTS").is_err() {
+            assert_eq!(Runtime::default_dir(), PathBuf::from("artifacts"));
+        }
+    }
+
+    #[test]
+    fn open_missing_dir_fails() {
+        let err = match Runtime::open("/nonexistent/dir") {
+            Ok(_) => panic!("should fail"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("manifest"));
+    }
+}

@@ -1,0 +1,125 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json`) and the Rust runtime.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// One AOT-compiled artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    /// Lookup key, e.g. `gemm_128x128x128`.
+    pub name: String,
+    /// HLO text file, relative to the artifacts directory.
+    pub file: String,
+    /// Input shapes (row-major dims), in call order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes, in tuple order.
+    pub outputs: Vec<Vec<usize>>,
+    /// Which L1 kernel (if any) the computation routes through —
+    /// documentation only (e.g. `pallas:gemm`).
+    pub kernel: String,
+}
+
+/// The artifact index.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn shapes(j: &Json, key: &str) -> Result<Vec<Vec<usize>>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing '{key}' array"))?
+        .iter()
+        .map(|dims| {
+            dims.as_arr()
+                .ok_or_else(|| anyhow!("shape must be an array"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("dim must be a number")))
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let artifacts = arts
+            .iter()
+            .map(|a| {
+                Ok(ArtifactMeta {
+                    name: a
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("artifact missing name"))?
+                        .to_string(),
+                    file: a
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("artifact missing file"))?
+                        .to_string(),
+                    inputs: shapes(a, "inputs")?,
+                    outputs: shapes(a, "outputs")?,
+                    kernel: a.get("kernel").and_then(Json::as_str).unwrap_or("").to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {"name": "gemm_8x8x8", "file": "gemm_8x8x8.hlo.txt",
+         "inputs": [[8, 8], [8, 8]], "outputs": [[8, 8]], "kernel": "pallas:gemm"}
+      ]
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.get("gemm_8x8x8").unwrap();
+        assert_eq!(a.file, "gemm_8x8x8.hlo.txt");
+        assert_eq!(a.inputs, vec![vec![8, 8], vec![8, 8]]);
+        assert_eq!(a.outputs, vec![vec![8, 8]]);
+        assert_eq!(a.kernel, "pallas:gemm");
+        assert!(m.get("nope").is_none());
+        assert_eq!(m.names(), vec!["gemm_8x8x8"]);
+    }
+
+    #[test]
+    fn manifest_tolerates_missing_kernel_field() {
+        let json = r#"{"artifacts":[{"name":"a","file":"a.hlo.txt","inputs":[[2,2]],"outputs":[[2,2]]}]}"#;
+        let m = Manifest::parse(json).unwrap();
+        assert_eq!(m.get("a").unwrap().kernel, "");
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts":[{"file":"x"}]}"#).is_err());
+    }
+}

@@ -1,0 +1,431 @@
+//! Bandwidth-shared flow network with max-min fair rate allocation.
+//!
+//! Each active flow moves `remaining` bytes across a set of [`Port`]
+//! resources (its route) and has an intrinsic rate cap — the
+//! mechanism-derived limit from [`crate::xfer::curves`] (message-size
+//! efficiency × issuing-SM throughput). Concurrent flows sharing a port
+//! split its capacity max-min fairly, which is how concurrent peer writes
+//! "serialize at the destination" in the paper's intra-SM all-reduce
+//! analysis (§3.1.3): N incoming flows each get 1/N of the ingress port.
+
+use crate::hw::topology::Port;
+use std::collections::HashMap;
+
+/// Handle to an active flow.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FlowId(pub usize);
+
+#[derive(Clone, Debug)]
+struct Flow {
+    remaining: f64,
+    /// Original size; completion uses a *relative* epsilon because
+    /// `now + dt` rounds in f64 — a flow can otherwise be left with a
+    /// sub-resolution residue whose completion time rounds to `now`,
+    /// livelocking the event loop.
+    total: f64,
+    ports: Vec<Port>,
+    cap: f64,
+    rate: f64,
+    alive: bool,
+}
+
+impl Flow {
+    #[inline]
+    fn eps(&self) -> f64 {
+        // 1e-6 relative residue: ~microsecond-relative timing slack on a
+        // full-size flow, far below the model's fidelity, comfortably
+        // above f64 rounding from (now + dt) round-trips.
+        self.total * 1e-6 + 1e-12
+    }
+}
+
+/// The set of active flows plus port capacities.
+#[derive(Debug, Default)]
+pub struct FlowNet {
+    capacity: HashMap<Port, f64>,
+    flows: Vec<Flow>,
+    free: Vec<usize>,
+    n_active: usize,
+    rates_dirty: bool,
+    /// Cumulative bytes completed per port (conservation accounting,
+    /// verified by property tests and used by the report layer).
+    pub port_bytes: HashMap<Port, f64>,
+}
+
+impl FlowNet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare a port's capacity in bytes/s. Ports default to infinite
+    /// capacity if never declared (useful for tests).
+    pub fn set_capacity(&mut self, port: Port, bytes_per_s: f64) {
+        assert!(bytes_per_s > 0.0);
+        self.capacity.insert(port, bytes_per_s);
+    }
+
+    /// Start a flow of `bytes` over `ports` with intrinsic rate cap `cap`.
+    pub fn start(&mut self, bytes: f64, ports: Vec<Port>, cap: f64) -> FlowId {
+        assert!(bytes > 0.0, "zero-byte flow");
+        assert!(cap > 0.0, "flow needs positive cap");
+        for &p in &ports {
+            *self.port_bytes.entry(p).or_insert(0.0) += bytes;
+        }
+        let flow = Flow { remaining: bytes, total: bytes, ports, cap, rate: 0.0, alive: true };
+        self.n_active += 1;
+        self.rates_dirty = true;
+        if let Some(idx) = self.free.pop() {
+            self.flows[idx] = flow;
+            FlowId(idx)
+        } else {
+            self.flows.push(flow);
+            FlowId(self.flows.len() - 1)
+        }
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.n_active
+    }
+
+    /// Advance all flows by `dt` seconds at current rates; returns flows
+    /// that completed (remaining hit zero). Rates must be current
+    /// (`recompute_rates` is called lazily by `next_completion`).
+    pub fn advance(&mut self, dt: f64) -> Vec<FlowId> {
+        if self.n_active == 0 {
+            return vec![];
+        }
+        self.ensure_rates();
+        let mut done = vec![];
+        for (i, f) in self.flows.iter_mut().enumerate() {
+            if !f.alive {
+                continue;
+            }
+            let finishes_now = f.rate > 0.0 && f.remaining <= f.rate * dt * (1.0 + 1e-12);
+            if dt > 0.0 {
+                f.remaining -= f.rate * dt;
+            }
+            // complete when the finish time fell inside the window or the
+            // residue is within the relative epsilon (fp-rounding guards)
+            if finishes_now || (f.remaining <= f.eps() && f.rate > 0.0) {
+                f.alive = false;
+                f.remaining = 0.0;
+                done.push(FlowId(i));
+            }
+        }
+        if !done.is_empty() {
+            self.n_active -= done.len();
+            for &id in &done {
+                self.free.push(id.0);
+            }
+            self.rates_dirty = true;
+        }
+        done
+    }
+
+    /// Earliest time-from-now at which some active flow completes.
+    pub fn next_completion(&mut self) -> Option<f64> {
+        if self.n_active == 0 {
+            return None;
+        }
+        self.ensure_rates();
+        let mut best = f64::INFINITY;
+        for f in &self.flows {
+            if f.alive && f.rate > 0.0 {
+                // aim half an epsilon *past* the completion threshold so
+                // the subsequent advance() robustly crosses it
+                best = best.min(((f.remaining - 0.5 * f.eps()).max(0.0)) / f.rate);
+            }
+        }
+        (best.is_finite()).then_some(best)
+    }
+
+    fn ensure_rates(&mut self) {
+        if self.rates_dirty {
+            let rates = compute_rates(
+                &self
+                    .flows
+                    .iter()
+                    .map(|f| FlowSpec {
+                        active: f.alive,
+                        ports: f.ports.clone(),
+                        cap: f.cap,
+                    })
+                    .collect::<Vec<_>>(),
+                &self.capacity,
+            );
+            for (f, r) in self.flows.iter_mut().zip(rates) {
+                f.rate = r;
+            }
+            self.rates_dirty = false;
+        }
+    }
+
+    /// Current rate of a flow (test/inspection hook).
+    pub fn rate(&mut self, id: FlowId) -> f64 {
+        self.ensure_rates();
+        self.flows[id.0].rate
+    }
+}
+
+/// Input to the fair-share solver (kept standalone for property testing).
+#[derive(Clone, Debug)]
+pub struct FlowSpec {
+    pub active: bool,
+    pub ports: Vec<Port>,
+    pub cap: f64,
+}
+
+/// Max-min fair ("water-filling") rate allocation with per-flow caps.
+///
+/// Flows with identical `(ports, cap)` signatures are collapsed into a
+/// single *class* before solving: symmetric kernels create thousands of
+/// identical concurrent flows (e.g. every tile store of a GEMM+RS), and
+/// max-min fairness gives equal rates to identical flows, so the solve is
+/// exact on classes while dropping the cost from O(F^2 P) to O(C^2 P) with
+/// C = distinct routes (this took the Table-3 sweep from hours to
+/// seconds; see EXPERIMENTS.md Perf).
+///
+/// Invariants (checked by property tests):
+/// * feasibility: per-port sum of rates <= capacity (within fp tolerance);
+/// * cap respected: rate <= cap for every flow;
+/// * Pareto/bottleneck: every flow is limited either by its cap or by a
+///   saturated port it crosses.
+pub fn compute_rates(flows: &[FlowSpec], capacity: &HashMap<Port, f64>) -> Vec<f64> {
+    let n = flows.len();
+    let mut rate = vec![0.0f64; n];
+    // ---- group active flows into classes by (sorted ports, cap bits)
+    #[derive(PartialEq, Eq, Hash)]
+    struct ClassKey(Vec<Port>, u64);
+    struct Class {
+        ports: Vec<Port>,
+        cap: f64,
+        members: Vec<usize>,
+    }
+    let mut class_of: HashMap<ClassKey, usize> = HashMap::new();
+    let mut classes: Vec<Class> = vec![];
+    for (i, f) in flows.iter().enumerate() {
+        if !f.active {
+            continue;
+        }
+        let mut ports = f.ports.clone();
+        ports.sort_unstable_by(port_order);
+        let key = ClassKey(ports.clone(), f.cap.to_bits());
+        let ci = *class_of.entry(key).or_insert_with(|| {
+            classes.push(Class { ports, cap: f.cap, members: vec![] });
+            classes.len() - 1
+        });
+        classes[ci].members.push(i);
+    }
+    if classes.is_empty() {
+        return rate;
+    }
+    // ---- dense port indexing over the ports actually in use
+    let mut port_idx: HashMap<Port, usize> = HashMap::new();
+    let mut port_cap: Vec<f64> = vec![];
+    for c in &classes {
+        for &p in &c.ports {
+            port_idx.entry(p).or_insert_with(|| {
+                port_cap.push(capacity.get(&p).copied().unwrap_or(f64::INFINITY));
+                port_cap.len() - 1
+            });
+        }
+    }
+    let class_ports: Vec<Vec<usize>> =
+        classes.iter().map(|c| c.ports.iter().map(|p| port_idx[p]).collect()).collect();
+    // ---- water-fill over classes
+    let nc = classes.len();
+    let mut fixed = vec![false; nc];
+    let mut class_rate = vec![0.0f64; nc]; // per-member rate
+    loop {
+        // headroom and unfixed member count per port
+        let mut headroom = port_cap.clone();
+        let mut unfixed_on = vec![0usize; port_cap.len()];
+        for (ci, c) in classes.iter().enumerate() {
+            for &pi in &class_ports[ci] {
+                if fixed[ci] {
+                    headroom[pi] -= class_rate[ci] * c.members.len() as f64;
+                } else {
+                    unfixed_on[pi] += c.members.len();
+                }
+            }
+        }
+        // per-class achievable level
+        let mut any_unfixed = false;
+        let mut min_level = f64::INFINITY;
+        let mut level = vec![0.0f64; nc];
+        for (ci, c) in classes.iter().enumerate() {
+            if fixed[ci] {
+                continue;
+            }
+            any_unfixed = true;
+            let mut l = c.cap;
+            for &pi in &class_ports[ci] {
+                l = l.min(headroom[pi].max(0.0) / unfixed_on[pi] as f64);
+            }
+            level[ci] = l;
+            min_level = min_level.min(l);
+        }
+        if !any_unfixed {
+            break;
+        }
+        let mut progressed = false;
+        for ci in 0..nc {
+            if !fixed[ci] && level[ci] <= min_level * (1.0 + 1e-12) {
+                class_rate[ci] = min_level.max(0.0);
+                fixed[ci] = true;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            for ci in 0..nc {
+                if !fixed[ci] {
+                    class_rate[ci] = min_level.max(0.0);
+                    fixed[ci] = true;
+                }
+            }
+            break;
+        }
+    }
+    for (ci, c) in classes.iter().enumerate() {
+        for &i in &c.members {
+            rate[i] = class_rate[ci];
+        }
+    }
+    rate
+}
+
+/// A cheap total order on ports (for class canonicalisation).
+fn port_order(a: &Port, b: &Port) -> std::cmp::Ordering {
+    fn key(p: &Port) -> (u8, usize) {
+        match p {
+            Port::Egress(d) => (0, d.0),
+            Port::Ingress(d) => (1, d.0),
+            Port::Pcie(d) => (2, d.0),
+            Port::SwitchReduce(d) => (3, d.0),
+            Port::Hbm(d) => (4, d.0),
+            Port::CopyEngine(d) => (5, d.0),
+        }
+    }
+    key(a).cmp(&key(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::DeviceId;
+
+    fn egress(d: usize) -> Port {
+        Port::Egress(DeviceId(d))
+    }
+    fn ingress(d: usize) -> Port {
+        Port::Ingress(DeviceId(d))
+    }
+
+    #[test]
+    fn single_flow_takes_min_of_cap_and_port() {
+        let mut caps = HashMap::new();
+        caps.insert(egress(0), 100.0);
+        let flows = vec![FlowSpec { active: true, ports: vec![egress(0)], cap: 40.0 }];
+        assert_eq!(compute_rates(&flows, &caps), vec![40.0]);
+        let flows = vec![FlowSpec { active: true, ports: vec![egress(0)], cap: 400.0 }];
+        assert_eq!(compute_rates(&flows, &caps), vec![100.0]);
+    }
+
+    #[test]
+    fn two_flows_share_port_equally() {
+        let mut caps = HashMap::new();
+        caps.insert(ingress(1), 100.0);
+        let flows = vec![
+            FlowSpec { active: true, ports: vec![ingress(1)], cap: 1e9 },
+            FlowSpec { active: true, ports: vec![ingress(1)], cap: 1e9 },
+        ];
+        assert_eq!(compute_rates(&flows, &caps), vec![50.0, 50.0]);
+    }
+
+    #[test]
+    fn capped_flow_releases_share_to_other() {
+        let mut caps = HashMap::new();
+        caps.insert(ingress(1), 100.0);
+        let flows = vec![
+            FlowSpec { active: true, ports: vec![ingress(1)], cap: 20.0 },
+            FlowSpec { active: true, ports: vec![ingress(1)], cap: 1e9 },
+        ];
+        let r = compute_rates(&flows, &caps);
+        assert_eq!(r[0], 20.0);
+        assert!((r[1] - 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn n_to_one_ingress_serialises() {
+        // The §3.1.3 intra-SM AR effect: N writers into one ingress port
+        // each get 1/N of it.
+        let mut caps = HashMap::new();
+        caps.insert(ingress(0), 450.0);
+        for d in 1..8 {
+            caps.insert(egress(d), 450.0);
+        }
+        let flows: Vec<_> = (1..8)
+            .map(|d| FlowSpec { active: true, ports: vec![egress(d), ingress(0)], cap: 1e9 })
+            .collect();
+        let r = compute_rates(&flows, &caps);
+        for v in &r {
+            assert!((v - 450.0 / 7.0).abs() < 1e-9, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn multi_bottleneck() {
+        // f0 crosses A(100) only; f1 crosses A and B(30).
+        let mut caps = HashMap::new();
+        caps.insert(egress(0), 100.0);
+        caps.insert(ingress(1), 30.0);
+        let flows = vec![
+            FlowSpec { active: true, ports: vec![egress(0)], cap: 1e9 },
+            FlowSpec { active: true, ports: vec![egress(0), ingress(1)], cap: 1e9 },
+        ];
+        let r = compute_rates(&flows, &caps);
+        assert!((r[1] - 30.0).abs() < 1e-9);
+        assert!((r[0] - 70.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flownet_advance_and_complete() {
+        let mut net = FlowNet::new();
+        net.set_capacity(egress(0), 100.0);
+        let a = net.start(50.0, vec![egress(0)], 1e9);
+        let b = net.start(100.0, vec![egress(0)], 1e9);
+        // both run at 50 B/s
+        assert!((net.rate(a) - 50.0).abs() < 1e-9);
+        let dt = net.next_completion().unwrap();
+        assert!((dt - 1.0).abs() < 1e-4, "a finishes at t=1 (within eps slack): {dt}");
+        let done = net.advance(dt);
+        assert_eq!(done, vec![a]);
+        // b now gets the whole port: 50 bytes left at 100 B/s
+        let dt2 = net.next_completion().unwrap();
+        assert!((dt2 - 0.5).abs() < 1e-4, "{dt2}");
+        assert_eq!(net.advance(dt2), vec![b]);
+        assert_eq!(net.n_active(), 0);
+        assert_eq!(net.next_completion(), None);
+    }
+
+    #[test]
+    fn flownet_reuses_slots() {
+        let mut net = FlowNet::new();
+        net.set_capacity(egress(0), 10.0);
+        let a = net.start(10.0, vec![egress(0)], 1e9);
+        let dt = net.next_completion().unwrap();
+        net.advance(dt);
+        let b = net.start(10.0, vec![egress(0)], 1e9);
+        assert_eq!(a.0, b.0, "slot reused");
+    }
+
+    #[test]
+    fn port_bytes_accounting() {
+        let mut net = FlowNet::new();
+        net.set_capacity(egress(0), 10.0);
+        net.start(10.0, vec![egress(0), ingress(1)], 1e9);
+        net.start(5.0, vec![egress(0)], 1e9);
+        assert_eq!(net.port_bytes[&egress(0)], 15.0);
+        assert_eq!(net.port_bytes[&ingress(1)], 10.0);
+    }
+}

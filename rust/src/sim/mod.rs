@@ -1,0 +1,142 @@
+//! Discrete-event simulation core.
+//!
+//! The timed executor is a fluid-flow discrete-event simulation: *flows*
+//! (data transfers) share *resources* (NVLink ports, copy engines, HBM,
+//! the NVSwitch reduce units) under max-min fair bandwidth allocation,
+//! while *timers* model compute durations and synchronization latencies.
+//!
+//! This module provides the reusable pieces:
+//! * [`OrdF64`] — totally ordered simulation time,
+//! * [`EventQueue`] — timer events,
+//! * [`flownet::FlowNet`] — bandwidth-shared flows with max-min fairness,
+//! * [`trace`] — optional execution traces (the profiling substrate for
+//!   the §Perf pass and for debugging schedules).
+
+pub mod flownet;
+pub mod trace;
+
+pub use flownet::{FlowId, FlowNet};
+pub use trace::{Span, Trace};
+
+/// Simulation time in seconds with a total order (panics on NaN, which the
+/// simulator never produces).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OrdF64(pub f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN simulation time")
+    }
+}
+
+/// A timer event queue: `(time, seq)`-ordered min-heap. The sequence number
+/// makes event ordering deterministic under equal timestamps.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<(OrdF64, u64, EventSlot<E>)>>,
+    seq: u64,
+}
+
+/// Wrapper so the payload doesn't need Ord; ordering is (time, seq) only.
+#[derive(Debug)]
+struct EventSlot<E>(E);
+
+impl<E> PartialEq for EventSlot<E> {
+    fn eq(&self, _: &Self) -> bool {
+        true
+    }
+}
+impl<E> Eq for EventSlot<E> {}
+impl<E> PartialOrd for EventSlot<E> {
+    fn partial_cmp(&self, _: &Self) -> Option<std::cmp::Ordering> {
+        Some(std::cmp::Ordering::Equal)
+    }
+}
+impl<E> Ord for EventSlot<E> {
+    fn cmp(&self, _: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: std::collections::BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule `event` at absolute time `t`.
+    pub fn push(&mut self, t: f64, event: E) {
+        debug_assert!(t.is_finite() && t >= 0.0, "bad event time {t}");
+        self.seq += 1;
+        self.heap.push(std::cmp::Reverse((OrdF64(t), self.seq, EventSlot(event))));
+    }
+
+    /// Time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|std::cmp::Reverse((t, _, _))| t.0)
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|std::cmp::Reverse((t, _, EventSlot(e)))| (t.0, e))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordf64_total_order() {
+        assert!(OrdF64(1.0) < OrdF64(2.0));
+        assert_eq!(OrdF64(3.0), OrdF64(3.0));
+        let mut v = vec![OrdF64(3.0), OrdF64(1.0), OrdF64(2.0)];
+        v.sort();
+        assert_eq!(v, vec![OrdF64(1.0), OrdF64(2.0), OrdF64(3.0)]);
+    }
+
+    #[test]
+    fn event_queue_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        assert_eq!(q.peek_time(), Some(1.0));
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn event_queue_fifo_on_ties() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 1);
+        q.push(1.0, 2);
+        q.push(1.0, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+}

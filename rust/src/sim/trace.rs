@@ -1,0 +1,92 @@
+//! Execution traces: per-worker timelines of what the simulator did.
+//!
+//! The trace is the profiling substrate for the performance pass (§Perf in
+//! EXPERIMENTS.md): it reports per-category busy time (compute / comm /
+//! sync / idle), which is how we attribute `T_comp`, `T_comm`,
+//! `T_non-overlap`, and `T_sync` from the paper's cost model (§3.1.1) to a
+//! simulated kernel run.
+
+use std::collections::HashMap;
+
+/// Category of a span, mirroring the cost-model decomposition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    Compute,
+    Comm,
+    Sync,
+    Launch,
+}
+
+/// One closed interval of activity on a worker.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub worker: usize,
+    pub kind: SpanKind,
+    pub label: &'static str,
+    pub t0: f64,
+    pub t1: f64,
+}
+
+/// A collection of spans for one simulated kernel run.
+#[derive(Debug, Default)]
+pub struct Trace {
+    pub enabled: bool,
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    pub fn new(enabled: bool) -> Self {
+        Trace { enabled, spans: vec![] }
+    }
+
+    pub fn record(&mut self, worker: usize, kind: SpanKind, label: &'static str, t0: f64, t1: f64) {
+        if self.enabled {
+            debug_assert!(t1 >= t0, "span ends before it starts");
+            self.spans.push(Span { worker, kind, label, t0, t1 });
+        }
+    }
+
+    /// Total busy time per kind across all workers.
+    pub fn busy_by_kind(&self) -> HashMap<SpanKind, f64> {
+        let mut m = HashMap::new();
+        for s in &self.spans {
+            *m.entry(s.kind).or_insert(0.0) += s.t1 - s.t0;
+        }
+        m
+    }
+
+    /// Busy time of one worker.
+    pub fn worker_busy(&self, worker: usize) -> f64 {
+        self.spans.iter().filter(|s| s.worker == worker).map(|s| s.t1 - s.t0).sum()
+    }
+
+    /// Makespan covered by the trace.
+    pub fn makespan(&self) -> f64 {
+        self.spans.iter().map(|s| s.t1).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::new(false);
+        t.record(0, SpanKind::Compute, "mma", 0.0, 1.0);
+        assert!(t.spans.is_empty());
+    }
+
+    #[test]
+    fn busy_accounting() {
+        let mut t = Trace::new(true);
+        t.record(0, SpanKind::Compute, "mma", 0.0, 2.0);
+        t.record(0, SpanKind::Comm, "store", 2.0, 3.0);
+        t.record(1, SpanKind::Comm, "store", 0.0, 4.0);
+        let by = t.busy_by_kind();
+        assert_eq!(by[&SpanKind::Compute], 2.0);
+        assert_eq!(by[&SpanKind::Comm], 5.0);
+        assert_eq!(t.worker_busy(0), 3.0);
+        assert_eq!(t.makespan(), 4.0);
+    }
+}

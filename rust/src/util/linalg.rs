@@ -1,0 +1,259 @@
+//! Native tile math for the functional executor.
+//!
+//! These are the CPU reference implementations of the per-tile compute that
+//! the paper's consumer workers issue to tensor/CUDA cores. They are used to
+//! *verify* kernel plans at small sizes; the PJRT runtime (`crate::runtime`)
+//! executes the AOT-lowered Pallas/XLA versions of the same math on the
+//! example / end-to-end paths.
+
+/// `c += a @ b` where `a` is `m×k`, `b` is `k×n`, `c` is `m×n`, row-major.
+pub fn matmul_accum(c: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * k, "a shape");
+    assert_eq!(b.len(), k * n, "b shape");
+    assert_eq!(c.len(), m * n, "c shape");
+    for i in 0..m {
+        for l in 0..k {
+            let av = a[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[l * n..(l + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// `c = a @ b` (zero-initialising convenience wrapper).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut c = vec![0.0; m * n];
+    matmul_accum(&mut c, a, b, m, n, k);
+    c
+}
+
+/// tanh-approximation GeLU, matching `jax.nn.gelu` (approximate=True),
+/// which is what the L2 model uses.
+pub fn gelu(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// In-place GeLU over a slice.
+pub fn gelu_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = gelu(*v);
+    }
+}
+
+/// Numerically stable softmax over the last dimension of an `m×n` row-major
+/// matrix, in place.
+pub fn softmax_rows(x: &mut [f32], m: usize, n: usize) {
+    assert_eq!(x.len(), m * n);
+    for i in 0..m {
+        let row = &mut x[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Full (non-causal) single-head attention reference:
+/// `out = softmax(q k^T / sqrt(d)) v` with `q: s_q×d`, `k,v: s_kv×d`.
+pub fn attention_ref(q: &[f32], k: &[f32], v: &[f32], s_q: usize, s_kv: usize, d: usize) -> Vec<f32> {
+    let scale = 1.0 / (d as f32).sqrt();
+    // scores = q @ k^T
+    let mut scores = vec![0.0f32; s_q * s_kv];
+    for i in 0..s_q {
+        for j in 0..s_kv {
+            let mut acc = 0.0;
+            for l in 0..d {
+                acc += q[i * d + l] * k[j * d + l];
+            }
+            scores[i * s_kv + j] = acc * scale;
+        }
+    }
+    softmax_rows(&mut scores, s_q, s_kv);
+    matmul(&scores, v, s_q, d, s_kv)
+}
+
+/// State for blockwise (FlashAttention-style) online-softmax accumulation.
+/// One instance per query block; KV blocks are folded in one at a time.
+/// This mirrors exactly what the L1 Pallas attention kernel does per grid
+/// step, and is the functional semantics of the Ring Attention plan's
+/// per-block consumer op.
+#[derive(Clone, Debug)]
+pub struct OnlineSoftmaxState {
+    pub s_q: usize,
+    pub d: usize,
+    /// Running row maxima `m_i`.
+    pub row_max: Vec<f32>,
+    /// Running row exp-sums `l_i`.
+    pub row_sum: Vec<f32>,
+    /// Un-normalised output accumulator `s_q×d`.
+    pub acc: Vec<f32>,
+}
+
+impl OnlineSoftmaxState {
+    pub fn new(s_q: usize, d: usize) -> Self {
+        Self {
+            s_q,
+            d,
+            row_max: vec![f32::NEG_INFINITY; s_q],
+            row_sum: vec![0.0; s_q],
+            acc: vec![0.0; s_q * d],
+        }
+    }
+
+    /// Fold one KV block (`k,v: s_kv×d`) into the running state.
+    pub fn update(&mut self, q: &[f32], k: &[f32], v: &[f32], s_kv: usize) {
+        let (s_q, d) = (self.s_q, self.d);
+        let scale = 1.0 / (d as f32).sqrt();
+        for i in 0..s_q {
+            // scores for row i against this block
+            let mut scores = vec![0.0f32; s_kv];
+            let mut blk_max = f32::NEG_INFINITY;
+            for j in 0..s_kv {
+                let mut acc = 0.0;
+                for l in 0..d {
+                    acc += q[i * d + l] * k[j * d + l];
+                }
+                let s = acc * scale;
+                scores[j] = s;
+                blk_max = blk_max.max(s);
+            }
+            let new_max = self.row_max[i].max(blk_max);
+            let correction = if self.row_max[i] == f32::NEG_INFINITY {
+                0.0
+            } else {
+                (self.row_max[i] - new_max).exp()
+            };
+            // rescale previous accumulator and sum
+            self.row_sum[i] *= correction;
+            for l in 0..d {
+                self.acc[i * d + l] *= correction;
+            }
+            // fold in this block
+            for j in 0..s_kv {
+                let p = (scores[j] - new_max).exp();
+                self.row_sum[i] += p;
+                for l in 0..d {
+                    self.acc[i * d + l] += p * v[j * d + l];
+                }
+            }
+            self.row_max[i] = new_max;
+        }
+    }
+
+    /// Normalise and return the attention output.
+    pub fn finalize(&self) -> Vec<f32> {
+        let mut out = self.acc.clone();
+        for i in 0..self.s_q {
+            let inv = 1.0 / self.row_sum[i];
+            for l in 0..self.d {
+                out[i * self.d + l] *= inv;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{assert_allclose, seeded_vec};
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &eye, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![1.0; 4];
+        assert_eq!(matmul(&a, &b, 2, 2, 2), vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        // 1x3 @ 3x2
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        assert_eq!(matmul(&a, &b, 1, 2, 3), vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn matmul_accum_accumulates() {
+        let mut c = vec![10.0; 4];
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        matmul_accum(&mut c, &a, &b, 2, 2, 2);
+        assert_eq!(c, vec![11.0, 12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        // gelu(0) = 0, gelu(large) ≈ large, gelu(-large) ≈ 0
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu(-10.0).abs() < 1e-4);
+        // tanh-approx value at 1.0 (matches jax.nn.gelu approximate=True)
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut x = seeded_vec(3, 4 * 7);
+        softmax_rows(&mut x, 4, 7);
+        for i in 0..4 {
+            let s: f32 = x[i * 7..(i + 1) * 7].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn online_softmax_matches_full_attention() {
+        let (s_q, s_kv, d) = (8, 32, 16);
+        let q = seeded_vec(1, s_q * d);
+        let k = seeded_vec(2, s_kv * d);
+        let v = seeded_vec(3, s_kv * d);
+        let want = attention_ref(&q, &k, &v, s_q, s_kv, d);
+
+        // fold KV in 4 blocks of 8
+        let mut st = OnlineSoftmaxState::new(s_q, d);
+        for blk in 0..4 {
+            let kb = &k[blk * 8 * d..(blk + 1) * 8 * d];
+            let vb = &v[blk * 8 * d..(blk + 1) * 8 * d];
+            st.update(&q, kb, vb, 8);
+        }
+        assert_allclose(&st.finalize(), &want, 1e-5, 1e-6);
+    }
+
+    #[test]
+    fn online_softmax_block_order_invariant() {
+        let (s_q, s_kv, d) = (4, 16, 8);
+        let q = seeded_vec(4, s_q * d);
+        let k = seeded_vec(5, s_kv * d);
+        let v = seeded_vec(6, s_kv * d);
+        let mut fwd = OnlineSoftmaxState::new(s_q, d);
+        let mut rev = OnlineSoftmaxState::new(s_q, d);
+        for blk in 0..2 {
+            fwd.update(&q, &k[blk * 8 * d..(blk + 1) * 8 * d], &v[blk * 8 * d..(blk + 1) * 8 * d], 8);
+        }
+        for blk in (0..2).rev() {
+            rev.update(&q, &k[blk * 8 * d..(blk + 1) * 8 * d], &v[blk * 8 * d..(blk + 1) * 8 * d], 8);
+        }
+        assert_allclose(&fwd.finalize(), &rev.finalize(), 1e-5, 1e-6);
+    }
+}

@@ -1,0 +1,127 @@
+//! Small shared utilities: approximate comparison, formatting, statistics,
+//! and native tile math used by the functional executor's fallback path
+//! (the PJRT runtime is used where an AOT artifact exists).
+
+pub mod json;
+pub mod linalg;
+pub mod prop;
+pub mod stats;
+
+/// Relative-tolerance float comparison used throughout the test suite.
+pub fn approx_eq(a: f64, b: f64, rtol: f64) -> bool {
+    let denom = a.abs().max(b.abs()).max(1e-30);
+    (a - b).abs() / denom <= rtol
+}
+
+/// Assert two f32 slices match within `rtol` relative tolerance plus a tiny
+/// absolute floor (mirrors `numpy.testing.assert_allclose`).
+pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "mismatch at {i}: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+/// Maximum absolute elementwise error.
+pub fn max_abs_err(got: &[f32], want: &[f32]) -> f32 {
+    got.iter()
+        .zip(want.iter())
+        .map(|(g, w)| (g - w).abs())
+        .fold(0.0, f32::max)
+}
+
+/// Pretty-print a byte count (e.g. `256 MB`, `2 KB`).
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let bf = b as f64;
+    if bf >= K * K * K {
+        format!("{:.0} GB", bf / (K * K * K))
+    } else if bf >= K * K {
+        format!("{:.0} MB", bf / (K * K))
+    } else if bf >= K {
+        format!("{:.0} KB", bf / K)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Pretty-print seconds as a human unit (ns/µs/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.0} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+/// Pretty-print FLOP/s as TFLOP/s.
+pub fn fmt_tflops(flops_per_s: f64) -> String {
+    format!("{:.1} TFLOP/s", flops_per_s / 1e12)
+}
+
+/// Deterministic pseudo-random f32 vector in [-1, 1) from a seed
+/// (splitmix64, no external dependency needed on hot init paths).
+pub fn seeded_vec(seed: u64, n: usize) -> Vec<f32> {
+    let mut state = seed.wrapping_add(0x9E3779B97F4A7C15);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        state = state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^= z >> 31;
+        // 24 high bits -> [0,1) -> [-1,1)
+        out.push(((z >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_basics() {
+        assert!(approx_eq(1.0, 1.0 + 1e-9, 1e-6));
+        assert!(!approx_eq(1.0, 1.1, 1e-6));
+        assert!(approx_eq(0.0, 0.0, 1e-12));
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2 KB");
+        assert_eq!(fmt_bytes(256 * 1024 * 1024), "256 MB");
+        assert_eq!(fmt_bytes(1 << 30), "1 GB");
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(64e-9), "64 ns");
+        assert_eq!(fmt_time(832e-9), "832 ns");
+        assert!(fmt_time(1.5e-3).ends_with("ms"));
+    }
+
+    #[test]
+    fn seeded_vec_deterministic_and_bounded() {
+        let a = seeded_vec(7, 1000);
+        let b = seeded_vec(7, 1000);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| *v >= -1.0 && *v < 1.0));
+        // not constant
+        assert!(a.iter().any(|v| (*v - a[0]).abs() > 1e-3));
+    }
+
+    #[test]
+    fn seeded_vec_different_seeds_differ() {
+        assert_ne!(seeded_vec(1, 16), seeded_vec(2, 16));
+    }
+}

@@ -1,0 +1,97 @@
+//! Miniature property-testing harness (the vendored environment has no
+//! proptest): deterministic splitmix64 case generation with seed reporting
+//! on failure, so any failing case is reproducible from the panic message.
+
+/// Deterministic RNG for property cases.
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + (self.next_u64() as usize) % (hi - lo)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in `[-1, 1)`.
+    pub fn f32_pm1(&mut self) -> f32 {
+        (self.f64() * 2.0 - 1.0) as f32
+    }
+
+    /// Pick one element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len())]
+    }
+
+    /// Random f32 vector in [-1, 1).
+    pub fn vec_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.f32_pm1()).collect()
+    }
+}
+
+/// Run `cases` deterministic property cases; the case seed is passed so a
+/// failure can be replayed (`case(Rng::new(seed))`).
+pub fn run_prop(name: &str, cases: u64, mut case: impl FnMut(&mut Rng) -> Result<(), String>) {
+    for i in 0..cases {
+        let seed = 0xC0FFEE ^ (i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = case(&mut rng) {
+            panic!("property '{name}' failed on case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        for _ in 0..10 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut r = Rng::new(2);
+        for _ in 0..1000 {
+            let v = r.usize_in(3, 17);
+            assert!((3..17).contains(&v));
+            let f = r.f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'demo' failed")]
+    fn failures_report_seed() {
+        run_prop("demo", 10, |rng| {
+            if rng.usize_in(0, 4) == 3 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

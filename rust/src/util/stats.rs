@@ -1,0 +1,84 @@
+//! Tiny statistics helpers for the benchmark harness and tuner.
+
+/// Summary statistics of a sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub std: f64,
+}
+
+/// Compute [`Summary`] over a non-empty sample.
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "empty sample");
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+    Summary { n, mean, min, max, std: var.sqrt() }
+}
+
+/// Geometric mean of positive values (used for speedup aggregation,
+/// matching how the paper reports speedup ranges).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let log_sum: f64 = xs
+        .iter()
+        .map(|x| {
+            assert!(*x > 0.0, "geomean needs positive values");
+            x.ln()
+        })
+        .sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Argmin over `(key, value)` pairs; returns the key of the smallest value.
+pub fn argmin_by<K: Copy>(items: impl IntoIterator<Item = (K, f64)>) -> Option<K> {
+    let mut best: Option<(K, f64)> = None;
+    for (k, v) in items {
+        match best {
+            Some((_, bv)) if v >= bv => {}
+            _ => best = Some((k, v)),
+        }
+    }
+    best.map(|(k, _)| k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant() {
+        let s = summarize(&[2.0, 2.0, 2.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 2.0);
+    }
+
+    #[test]
+    fn summary_mixed() {
+        let s = summarize(&[1.0, 3.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.std - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_powers() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[8.0]) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmin_picks_smallest() {
+        let r = argmin_by([(1usize, 5.0), (2, 3.0), (3, 4.0)]);
+        assert_eq!(r, Some(2));
+        assert_eq!(argmin_by(Vec::<(usize, f64)>::new()), None);
+    }
+}

@@ -1,0 +1,182 @@
+//! Calibrated bandwidth curves for each transfer mechanism.
+//!
+//! The model: each mechanism has a peak fraction of NVLink bandwidth
+//! (Table 1), a message-size ramp (Figure 2) modelled as
+//! `eff(msg) = msg / (msg + half)`, and — for device-initiated mechanisms —
+//! an SM-count ramp (Figure 3) modelled as `min(1, n_sms / sat_sms)`.
+//! A flow's intrinsic rate cap is the product of the three; port contention
+//! on top of this is handled by [`crate::sim::FlowNet`].
+
+use crate::hw::spec::GpuSpec;
+use crate::xfer::Mechanism;
+
+/// Message-size efficiency in `[0, 1)`: half of peak at `half` bytes.
+#[inline]
+pub fn msg_eff(half: f64, msg_bytes: f64) -> f64 {
+    debug_assert!(msg_bytes > 0.0);
+    msg_bytes / (msg_bytes + half)
+}
+
+/// SM-count ramp: linear until saturation (Figure 3's shape).
+#[inline]
+pub fn sm_frac(n_sms: f64, sat_sms: f64) -> f64 {
+    (n_sms / sat_sms).min(1.0)
+}
+
+/// Copy-engine rate (bytes/s) for a transfer chopped into `msg_bytes`
+/// pieces. Host-initiated: independent of SMs. Fine-grained CE transfers
+/// pay per-invocation overhead, which is what makes it unusable for
+/// all-to-all style patterns (§3.1.2).
+pub fn ce_rate(spec: &GpuSpec, msg_bytes: f64) -> f64 {
+    spec.nvlink_bw * spec.ce_peak_frac * msg_eff(spec.ce_half_msg, msg_bytes)
+}
+
+/// TMA rate (bytes/s) with `n_sms` SMs issuing messages of `msg_bytes`
+/// (clamped to the 227 KB SMEM-bounded maximum, Figure 2).
+pub fn tma_rate(spec: &GpuSpec, msg_bytes: f64, n_sms: f64) -> f64 {
+    let msg = msg_bytes.min(spec.tma_max_msg as f64);
+    spec.nvlink_bw * spec.tma_peak_frac * msg_eff(spec.tma_half_msg, msg) * sm_frac(n_sms, spec.tma_sat_sms)
+}
+
+/// Register-op rate (bytes/s) with `n_sms` SMs issuing.
+pub fn reg_rate(spec: &GpuSpec, msg_bytes: f64, n_sms: f64) -> f64 {
+    spec.nvlink_bw * spec.reg_peak_frac * msg_eff(spec.reg_half_msg, msg_bytes) * sm_frac(n_sms, spec.reg_sat_sms)
+}
+
+/// Multimem (in-fabric multicast / reduce) rate: a register-op instruction
+/// path, so it shares the register-op ramps; warp-level participation is
+/// required for throughput (§3.2.2).
+pub fn multimem_rate(spec: &GpuSpec, msg_bytes: f64, n_sms: f64) -> f64 {
+    reg_rate(spec, msg_bytes, n_sms)
+}
+
+/// Dispatch by mechanism.
+pub fn rate(spec: &GpuSpec, mech: Mechanism, msg_bytes: f64, n_sms: f64) -> f64 {
+    match mech {
+        Mechanism::CopyEngine => ce_rate(spec, msg_bytes),
+        Mechanism::Tma => tma_rate(spec, msg_bytes, n_sms),
+        Mechanism::RegOp => reg_rate(spec, msg_bytes, n_sms),
+        Mechanism::Multimem => multimem_rate(spec, msg_bytes, n_sms),
+    }
+}
+
+/// Per-flow first-byte latency of a mechanism: host launch for the copy
+/// engine, a TMA issue + NVLink propagation otherwise.
+pub fn flow_latency(spec: &GpuSpec, mech: Mechanism) -> f64 {
+    match mech {
+        Mechanism::CopyEngine => spec.kernel_launch + spec.nvlink_latency,
+        Mechanism::Tma => spec.nvlink_latency,
+        Mechanism::RegOp | Mechanism::Multimem => spec.nvlink_latency,
+    }
+}
+
+/// Time for a tuned local GEMM of `flops` FLOPs on `n_sms` compute SMs
+/// (compute throughput scales linearly with SMs, §3.1.3).
+pub fn gemm_time(spec: &GpuSpec, flops: f64, n_sms: u32) -> f64 {
+    flops / spec.tc_flops_for_sms(n_sms)
+}
+
+/// Smallest number of SMs at which a device-initiated mechanism reaches
+/// `frac` of its large-message rate — the Figure 3 "SMs to saturate" metric.
+pub fn sms_to_saturate(spec: &GpuSpec, mech: Mechanism, frac: f64) -> u32 {
+    let target = rate(spec, mech, (1 << 20) as f64, spec.num_sms as f64) * frac;
+    for n in 1..=spec.num_sms {
+        if rate(spec, mech, (1 << 20) as f64, n as f64) >= target {
+            return n;
+        }
+    }
+    spec.num_sms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    #[test]
+    fn table1_bandwidths_reproduce() {
+        // 1 GB transfer with all SMs (Table 1). TMA messages are capped at
+        // 227 KB, matching the paper's measurement method.
+        let g = GpuSpec::h100();
+        let gb = 1e9;
+        assert!(approx_eq(ce_rate(&g, gb), 368.82e9, 0.02), "{}", ce_rate(&g, gb));
+        assert!(approx_eq(tma_rate(&g, gb, 132.0), 350.01e9, 0.02));
+        assert!(approx_eq(reg_rate(&g, gb, 132.0), 342.68e9, 0.02));
+        let b = GpuSpec::b200();
+        assert!(approx_eq(ce_rate(&b, gb), 726.13e9, 0.02));
+        assert!(approx_eq(tma_rate(&b, gb, 148.0), 669.12e9, 0.02));
+        assert!(approx_eq(reg_rate(&b, gb, 148.0), 628.35e9, 0.02));
+    }
+
+    #[test]
+    fn figure2_ce_needs_256mb() {
+        // >=80% of theoretical max requires >=256 MB messages for the CE...
+        let g = GpuSpec::h100();
+        assert!(ce_rate(&g, 256e6) >= 0.80 * g.nvlink_bw);
+        // ...but smaller messages fall below it.
+        assert!(ce_rate(&g, 64e6) < 0.80 * g.nvlink_bw);
+        // and fine-grained CE traffic collapses entirely:
+        assert!(ce_rate(&g, 64e3) < 0.01 * g.nvlink_bw);
+    }
+
+    #[test]
+    fn figure2_tma_near_peak_at_2kb() {
+        let g = GpuSpec::h100();
+        let full = tma_rate(&g, 227.0 * 1024.0, 132.0);
+        assert!(tma_rate(&g, 2048.0, 132.0) >= 0.94 * full);
+        // message sizes beyond 227 KB are clamped (held constant in Fig 2)
+        assert_eq!(tma_rate(&g, 1e9, 132.0), tma_rate(&g, 227.0 * 1024.0, 132.0));
+    }
+
+    #[test]
+    fn figure2_reg_efficient_at_128b() {
+        let g = GpuSpec::h100();
+        let full = reg_rate(&g, 1e6, 132.0);
+        assert!(reg_rate(&g, 128.0, 132.0) >= 0.79 * full);
+    }
+
+    #[test]
+    fn figure3_sms_to_saturate() {
+        let g = GpuSpec::h100();
+        let tma = sms_to_saturate(&g, Mechanism::Tma, 0.999);
+        let reg = sms_to_saturate(&g, Mechanism::RegOp, 0.999);
+        assert_eq!(tma, 15, "TMA saturates at ~15 SMs (Fig 3)");
+        assert_eq!(reg, 76, "reg ops saturate at ~76 SMs (Fig 3)");
+        // ratio 3.2-5.1x (paper §3.1.2)
+        let ratio = reg as f64 / tma as f64;
+        assert!((3.2..=5.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn rates_monotonic_in_msg_and_sms() {
+        let g = GpuSpec::h100();
+        let mut last = 0.0;
+        for msg in [128.0, 1024.0, 8192.0, 65536.0] {
+            let r = tma_rate(&g, msg, 8.0);
+            assert!(r >= last);
+            last = r;
+        }
+        let mut last = 0.0;
+        for n in [1.0, 4.0, 16.0, 64.0, 132.0] {
+            let r = reg_rate(&g, 4096.0, n);
+            assert!(r >= last);
+            last = r;
+        }
+    }
+
+    #[test]
+    fn gemm_time_matches_table3_scale() {
+        // Table 3: 32768x32768x8192 BF16 GEMM measured at 23.285 ms.
+        // flops = 2*M*N*K = 1.76e13 -> at 0.85*989e12 -> 20.9 ms. Within 15%.
+        let g = GpuSpec::h100();
+        let flops = 2.0 * 32768.0 * 32768.0 * 8192.0;
+        let t = gemm_time(&g, flops, 132);
+        assert!((t - 23.285e-3).abs() / 23.285e-3 < 0.15, "{t}");
+    }
+
+    #[test]
+    fn flow_latency_ce_pays_launch() {
+        let g = GpuSpec::h100();
+        assert!(flow_latency(&g, Mechanism::CopyEngine) > flow_latency(&g, Mechanism::Tma));
+    }
+}

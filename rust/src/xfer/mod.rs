@@ -1,0 +1,109 @@
+//! The three inter-GPU transfer mechanisms (§3.1.2) plus NVSwitch multimem.
+//!
+//! * **Copy engine** — host-initiated DMA; highest peak efficiency (82 %)
+//!   but needs ≥256 MB messages to saturate and supports only contiguous
+//!   transfers (Table 1 / Figure 2).
+//! * **TMA** — device-initiated bulk async transfers; near-peak at ~2 KB
+//!   messages, saturates NVLink with ~15 SMs, single-thread launch
+//!   (the intra-SM overlap enabler).
+//! * **Register ops** — `ld`/`st`/`multimem.*`; lowest peak (76 %), needs
+//!   ~76 SMs, but the *only* mechanism with in-fabric reduction and
+//!   elementwise access (Table 2).
+//!
+//! [`curves`] holds the calibrated bandwidth models; [`Mechanism`] the
+//! functionality matrix.
+
+pub mod curves;
+
+
+/// A data-transfer mechanism (paper Table 2 rows are [`Functionality`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Mechanism {
+    /// Host-initiated per-GPU DMA engine.
+    CopyEngine,
+    /// Tensor Memory Accelerator bulk async transfers (device-initiated).
+    Tma,
+    /// Plain register-level `ld`/`st` instructions.
+    RegOp,
+    /// Register-level `multimem.*` through the NVSwitch reduction/multicast
+    /// units (a register-op subtype; split out because its routing and
+    /// rate differ).
+    Multimem,
+}
+
+/// Functionality rows of Table 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Functionality {
+    P2pTransfer,
+    InFabricBroadcast,
+    P2pReduction,
+    InFabricReduction,
+    ElementwiseTransfer,
+}
+
+impl Mechanism {
+    /// The Table 2 functionality matrix.
+    pub fn supports(&self, f: Functionality) -> bool {
+        use Functionality::*;
+        use Mechanism::*;
+        match (self, f) {
+            (CopyEngine, P2pTransfer) | (CopyEngine, InFabricBroadcast) => true,
+            (CopyEngine, _) => false,
+            (Tma, P2pTransfer) | (Tma, InFabricBroadcast) | (Tma, P2pReduction) => true,
+            (Tma, _) => false,
+            // RegOp and Multimem are both register-level instruction paths.
+            (RegOp, _) | (Multimem, _) => true,
+        }
+    }
+
+    /// Whether transfers can be issued asynchronously by a single thread
+    /// (TMA's key property for intra-SM overlap, §3.1.2).
+    pub fn single_thread_async(&self) -> bool {
+        matches!(self, Mechanism::Tma | Mechanism::CopyEngine)
+    }
+
+    /// Whether the mechanism is driven by SMs (vs the host).
+    pub fn device_initiated(&self) -> bool {
+        !matches!(self, Mechanism::CopyEngine)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Functionality::*;
+    use super::Mechanism::*;
+    use super::*;
+
+    #[test]
+    fn table2_matrix() {
+        // Row 1: P2P transfer — all three.
+        for m in [CopyEngine, Tma, RegOp] {
+            assert!(m.supports(P2pTransfer));
+        }
+        // Row 2: in-fabric broadcast — all three.
+        for m in [CopyEngine, Tma, RegOp] {
+            assert!(m.supports(InFabricBroadcast));
+        }
+        // Row 3: P2P reduction — TMA and Reg only.
+        assert!(!CopyEngine.supports(P2pReduction));
+        assert!(Tma.supports(P2pReduction));
+        assert!(RegOp.supports(P2pReduction));
+        // Row 4: in-fabric reduction — Reg only.
+        assert!(!CopyEngine.supports(InFabricReduction));
+        assert!(!Tma.supports(InFabricReduction));
+        assert!(RegOp.supports(InFabricReduction));
+        // Row 5: elementwise — Reg only.
+        assert!(!CopyEngine.supports(ElementwiseTransfer));
+        assert!(!Tma.supports(ElementwiseTransfer));
+        assert!(RegOp.supports(ElementwiseTransfer));
+    }
+
+    #[test]
+    fn async_and_initiation_properties() {
+        assert!(Tma.single_thread_async());
+        assert!(!RegOp.single_thread_async());
+        assert!(!CopyEngine.device_initiated());
+        assert!(Tma.device_initiated());
+        assert!(Multimem.device_initiated());
+    }
+}

@@ -1,0 +1,191 @@
+//! Integration tests asserting the paper's headline *claims* hold in the
+//! reproduction — the qualitative shape of every major result (DESIGN.md
+//! §4's "expected shape" column). These run the same harness as
+//! `cargo bench --bench figures`, in fast mode.
+
+use pk::report::run_exhibit;
+
+fn col(t: &pk::report::Table, name: &str) -> Vec<f64> {
+    t.col_f64(name)
+}
+
+#[test]
+fn claim_table1_ordering_ce_tma_reg() {
+    let t = run_exhibit("tab1", true).unwrap();
+    let h100: Vec<f64> = col(&t, "H100 GB/s");
+    assert!(h100[0] > h100[1] && h100[1] > h100[2], "CE > TMA > Reg: {h100:?}");
+    // Table 1 values within 2%
+    for (got, want) in h100.iter().zip([368.82, 350.01, 342.68]) {
+        assert!((got - want).abs() / want < 0.02, "{got} vs {want}");
+    }
+}
+
+#[test]
+fn claim_fig2_ce_needs_large_messages() {
+    let t = run_exhibit("fig2", true).unwrap();
+    let msgs = col(&t, "msg_bytes");
+    let ce = col(&t, "copy_engine");
+    let tma = col(&t, "tma");
+    for i in 0..msgs.len() {
+        if msgs[i] <= 65536.0 {
+            assert!(tma[i] > ce[i] * 2.0, "device-initiated wins small messages");
+        }
+        if msgs[i] >= 256e6 {
+            assert!(ce[i] >= 0.80, "CE >= 80% at >= 256MB");
+        }
+    }
+}
+
+#[test]
+fn claim_fig3_saturation_points() {
+    let t = run_exhibit("fig3", true).unwrap();
+    let sms = col(&t, "sms");
+    let tma = col(&t, "tma");
+    let reg = col(&t, "reg");
+    for i in 0..sms.len() {
+        if sms[i] as u32 == 15 {
+            assert!(tma[i] >= 0.77, "TMA saturated by 15 SMs: {}", tma[i]);
+        }
+        if sms[i] as u32 == 76 {
+            assert!(reg[i] >= 0.75, "reg saturated by 76 SMs: {}", reg[i]);
+        }
+        if sms[i] as u32 == 15 {
+            assert!(reg[i] < 0.2, "reg far from saturation at 15 SMs");
+        }
+    }
+}
+
+#[test]
+fn claim_fig4_schedule_tradeoffs() {
+    let t = run_exhibit("fig4", true).unwrap();
+    // rows: RS-intra, RS-inter, AR-intra, AR-inter
+    let tf = col(&t, "tflops");
+    let rs_ratio = tf[0] / tf[1];
+    assert!(rs_ratio > 1.05 && rs_ratio < 1.5, "RS: intra ~1.2x inter, got {rs_ratio}");
+    let ar_ratio = tf[3] / tf[2];
+    assert!(ar_ratio > 2.5 && ar_ratio < 5.0, "AR: inter ~3.62x intra, got {ar_ratio}");
+}
+
+#[test]
+fn claim_tab3_comm_hidden_past_k_threshold() {
+    let t = run_exhibit("tab3", true).unwrap();
+    let ks = col(&t, "K");
+    let ratios: Vec<f64> = t
+        .rows
+        .iter()
+        .map(|r| r[3].trim_end_matches('%').parse::<f64>().unwrap())
+        .collect();
+    for (k, ratio) in ks.iter().zip(&ratios) {
+        if *k <= 1024.0 {
+            assert!(*ratio > 40.0, "K={k}: comm dominates, got {ratio}%");
+        }
+        if *k >= 4096.0 {
+            assert!(*ratio < 10.0, "K={k}: comm hidden past sR/2B ~ 2197, got {ratio}%");
+        }
+    }
+}
+
+#[test]
+fn claim_fig6_pk_ar_up_to_1_79x_nccl() {
+    let t = run_exhibit("fig6", true).unwrap();
+    let sp = col(&t, "speedup");
+    assert!(sp.iter().all(|s| *s > 1.0), "PK always wins: {sp:?}");
+    assert!(sp.iter().any(|s| *s > 1.2), "meaningful gap somewhere: {sp:?}");
+    assert!(sp.iter().all(|s| *s < 2.2), "bounded (paper: up to 1.79x): {sp:?}");
+}
+
+#[test]
+fn claim_fig8_pk_geq_flux_and_nonoverlap() {
+    let t = run_exhibit("fig8", true).unwrap();
+    let pk = col(&t, "pk");
+    let nonov = col(&t, "nonoverlap");
+    let flux = col(&t, "flux");
+    for i in 0..pk.len() {
+        assert!(pk[i] > nonov[i], "PK beats non-overlap");
+        assert!(pk[i] >= flux[i] * 0.95, "PK >= ~Flux (0.97-2.33x band)");
+    }
+}
+
+#[test]
+fn claim_fig9_pk_dominates_gemm_ar() {
+    let t = run_exhibit("fig9", true).unwrap();
+    let pk = col(&t, "pk");
+    let nonov = col(&t, "nonoverlap");
+    let td = col(&t, "triton_dist");
+    for i in 0..pk.len() {
+        assert!(pk[i] > nonov[i] && pk[i] > td[i], "PK wins GEMM+AR everywhere");
+    }
+}
+
+#[test]
+fn claim_fig11_modest_ulysses_gap() {
+    let t = run_exhibit("fig11", true).unwrap();
+    let sp = col(&t, "speedup");
+    for s in &sp {
+        assert!(*s >= 1.0 && *s <= 1.8, "PK 1.01-1.39x band-ish: {sp:?}");
+    }
+}
+
+#[test]
+fn claim_fig12_pk_comet_parity() {
+    let t = run_exhibit("fig12", true).unwrap();
+    let r = col(&t, "pk_vs_comet");
+    for v in &r {
+        assert!(*v > 0.8 && *v < 1.45, "PK 0.92-1.22x of Comet band-ish: {r:?}");
+    }
+}
+
+#[test]
+fn claim_fig13_b200_same_ordering() {
+    let t = run_exhibit("fig13", true).unwrap();
+    let pk = col(&t, "pk");
+    let nonov = col(&t, "nonoverlap");
+    for i in 0..pk.len() {
+        assert!(pk[i] > nonov[i], "B200 preserves the ordering");
+    }
+    // B200 absolute throughput exceeds H100's fig8 at the same N
+    let h = run_exhibit("fig8", true).unwrap();
+    assert!(pk[pk.len() - 1] > col(&h, "pk")[h.rows.len() - 1]);
+}
+
+#[test]
+fn claim_fig15_16_17_tensor_dim_wins() {
+    for id in ["fig15", "fig16", "fig17"] {
+        let t = run_exhibit(id, true).unwrap();
+        let sp = col(&t, "speedup");
+        for s in &sp {
+            assert!(*s > 1.0, "{id}: PK beats NCCL+reshape: {sp:?}");
+        }
+    }
+}
+
+#[test]
+fn claim_mu1_sync_costs() {
+    let t = run_exhibit("mu1", true).unwrap();
+    let lat = col(&t, "latency_ns");
+    assert_eq!(lat[0], 64.0, "mbarrier 64 ns");
+    assert_eq!(lat[1], 832.0, "HBM sync 832 ns");
+}
+
+#[test]
+fn claim_mu2_nvshmem_tax() {
+    let t = run_exhibit("mu2", true).unwrap();
+    let lat = col(&t, "elementwise_latency_us");
+    assert!((lat[0] / lat[1] - 4.5).abs() < 1e-6, "4.5x latency tax");
+    let bw = col(&t, "bandwidth_GBps");
+    assert!((bw[1] - bw[0] - 20.0).abs() < 0.5, "~20 GB/s bandwidth tax");
+}
+
+#[test]
+fn claim_fig5_partition_matters() {
+    let t = run_exhibit("fig5", true).unwrap();
+    // for the large problem, too many comm SMs must hurt
+    let rows: Vec<(f64, f64, f64)> = t
+        .rows
+        .iter()
+        .map(|r| (r[0].parse().unwrap(), r[1].parse().unwrap(), r[2].parse().unwrap()))
+        .collect();
+    let big_small_sms = rows.iter().find(|(n, c, _)| *n == 32768.0 && *c == 8.0).unwrap().2;
+    let big_many_sms = rows.iter().find(|(n, c, _)| *n == 32768.0 && *c == 32.0).unwrap().2;
+    assert!(big_many_sms >= big_small_sms, "more comm SMs slow the large problem");
+}

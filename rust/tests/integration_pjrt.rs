@@ -1,0 +1,167 @@
+//! Integration over the PJRT runtime: the three-layer composition
+//! (Pallas kernel → JAX stage → AOT HLO text → Rust load/compile/execute)
+//! with numerics checked against the native references.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise).
+
+use pk::coordinator::Node;
+use pk::exec::FunctionalExec;
+use pk::hw::spec::NodeSpec;
+use pk::hw::DeviceId;
+use pk::mem::tile::Shape4;
+use pk::mem::MemPool;
+use pk::plan::{Effect, MatView, Op, Plan, Role};
+use pk::runtime::Runtime;
+use pk::util::{assert_allclose, linalg, seeded_vec};
+
+fn runtime() -> Option<Runtime> {
+    Runtime::open(Runtime::default_dir()).ok()
+}
+
+#[test]
+fn gemm_artifacts_match_native_matmul() {
+    let Some(mut rt) = runtime() else {
+        eprintln!("skipped: artifacts not built");
+        return;
+    };
+    for (name, n) in [("gemm_64x64x64", 64usize), ("gemm_128x128x128", 128)] {
+        let x = seeded_vec(1, n * n);
+        let y = seeded_vec(2, n * n);
+        let out = rt.execute(name, &[(x.clone(), vec![n, n]), (y.clone(), vec![n, n])]).unwrap();
+        let want = linalg::matmul(&x, &y, n, n, n);
+        assert_allclose(&out[0], &want, 1e-3, 1e-3);
+    }
+}
+
+#[test]
+fn attention_artifact_matches_reference() {
+    let Some(mut rt) = runtime() else {
+        eprintln!("skipped: artifacts not built");
+        return;
+    };
+    let (s, d) = (64, 32);
+    let q = seeded_vec(3, s * d);
+    let k = seeded_vec(4, s * d);
+    let v = seeded_vec(5, s * d);
+    let out = rt
+        .execute("attn_block_s64_kv64_d32", &[(q.clone(), vec![s, d]), (k.clone(), vec![s, d]), (v.clone(), vec![s, d])])
+        .unwrap();
+    let want = linalg::attention_ref(&q, &k, &v, s, s, d);
+    assert_allclose(&out[0], &want, 1e-3, 1e-4);
+}
+
+#[test]
+fn tp_mlp_fwd_artifact_matches_native_composition() {
+    let Some(mut rt) = runtime() else {
+        eprintln!("skipped: artifacts not built");
+        return;
+    };
+    let (t, d, f) = (128, 256, 128);
+    let x = seeded_vec(6, t * d);
+    let w1 = seeded_vec(7, d * f);
+    let w2 = seeded_vec(8, f * d);
+    let out = rt
+        .execute("tp_mlp_fwd", &[(x.clone(), vec![t, d]), (w1.clone(), vec![d, f]), (w2.clone(), vec![f, d])])
+        .unwrap();
+    let mut h = linalg::matmul(&x, &w1, t, f, d);
+    linalg::gelu_inplace(&mut h);
+    let want = linalg::matmul(&h, &w2, t, d, f);
+    assert_allclose(&out[0], &want, 1e-2, 1e-3);
+}
+
+#[test]
+fn run_artifact_effect_through_functional_exec() {
+    let Some(mut rt) = runtime() else {
+        eprintln!("skipped: artifacts not built");
+        return;
+    };
+    let mut pool = MemPool::new();
+    let n = 64;
+    let a = pool.alloc_init(DeviceId(0), Shape4::mat(n, n), seeded_vec(10, n * n));
+    let b = pool.alloc_init(DeviceId(0), Shape4::mat(n, n), seeded_vec(11, n * n));
+    let c = pool.alloc(DeviceId(0), Shape4::mat(n, n));
+    let mut plan = Plan::new();
+    let w = plan.add_worker(DeviceId(0), Role::ComputeSm, "pjrt");
+    plan.push(
+        w,
+        Op::Compute {
+            dur: 0.0,
+            label: "artifact_gemm",
+            effect: Some(Effect::RunArtifact {
+                name: "gemm_64x64x64".into(),
+                inputs: vec![MatView::full2d(a, n, n), MatView::full2d(b, n, n)],
+                outputs: vec![MatView::full2d(c, n, n)],
+            }),
+        },
+    );
+    FunctionalExec::with_runtime(&mut pool, &mut rt).run(&plan).unwrap();
+    let want = linalg::matmul(&pool.get(a).data, &pool.get(b).data, n, n, n);
+    assert_allclose(&pool.get(c).data, &want, 1e-3, 1e-3);
+}
+
+#[test]
+fn threaded_node_runs_artifacts_from_multiple_workers() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipped: artifacts not built");
+        return;
+    };
+    let n_dev = 4;
+    let n = 64;
+    let mut pool = MemPool::new();
+    let mut abufs = vec![];
+    let mut cbufs = vec![];
+    for d in 0..n_dev {
+        abufs.push(pool.alloc_init(DeviceId(d), Shape4::mat(n, n), seeded_vec(20 + d as u64, n * n)));
+        cbufs.push(pool.alloc(DeviceId(d), Shape4::mat(n, n)));
+    }
+    let eye = {
+        let mut e = vec![0.0f32; n * n];
+        for i in 0..n {
+            e[i * n + i] = 1.0;
+        }
+        e
+    };
+    let id_buf = pool.alloc_init(DeviceId(0), Shape4::mat(n, n), eye);
+    let mut plan = Plan::new();
+    for d in 0..n_dev {
+        let w = plan.add_worker(DeviceId(d), Role::ComputeSm, format!("d{d}"));
+        plan.push(
+            w,
+            Op::Compute {
+                dur: 0.0,
+                label: "artifact_gemm",
+                effect: Some(Effect::RunArtifact {
+                    name: "gemm_64x64x64".into(),
+                    inputs: vec![MatView::full2d(abufs[d], n, n), MatView::full2d(id_buf, n, n)],
+                    outputs: vec![MatView::full2d(cbufs[d], n, n)],
+                }),
+            },
+        );
+    }
+    let mut node = Node::with_runtime(NodeSpec::test_node(n_dev), pool, rt);
+    let metrics = node.run_plan(&plan).unwrap();
+    assert_eq!(metrics.artifact_calls["gemm_64x64x64"], n_dev as u64);
+    let pool = node.pool();
+    for d in 0..n_dev {
+        // X @ I == X
+        assert_allclose(&pool.get(cbufs[d]).data, &pool.get(abufs[d]).data, 1e-4, 1e-4);
+    }
+}
+
+#[test]
+fn manifest_covers_required_artifacts() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipped: artifacts not built");
+        return;
+    };
+    for name in [
+        "gemm_64x64x64",
+        "gemm_128x128x128",
+        "attn_block_s64_kv64_d32",
+        "expert_mlp_e4_cap32_h64_he32",
+        "tp_mlp_fwd",
+        "tp_mlp_bwd",
+    ] {
+        assert!(rt.has(name), "missing artifact {name}");
+    }
+}

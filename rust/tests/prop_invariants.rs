@@ -1,0 +1,361 @@
+//! Property-based invariants across the simulator and the kernels
+//! (DESIGN.md §6): fair-share feasibility, collective semantics over random
+//! shapes and device counts, token conservation, interleaving robustness,
+//! and byte conservation in the timed executor.
+
+use pk::exec::{FunctionalExec, TimedExec};
+use pk::hw::spec::NodeSpec;
+use pk::hw::topology::Port;
+use pk::hw::DeviceId;
+use pk::kernels::collectives::{pk_all_gather, pk_all_reduce, pk_reduce_scatter, Axis, PkCollCtx};
+use pk::kernels::moe::{MoeCfg, Routing};
+use pk::mem::tile::Shape4;
+use pk::mem::MemPool;
+use pk::plan::{MatView, Op, Plan, Role, SyncScope, TransferSpec};
+use pk::sim::flownet::{compute_rates, FlowSpec};
+use pk::util::prop::{run_prop, Rng};
+use pk::xfer::Mechanism;
+use std::collections::HashMap;
+
+/// Max-min fair allocation: feasibility, cap-respect, and the bottleneck
+/// property (every flow is limited by its cap or by a saturated port).
+#[test]
+fn prop_fair_share_feasible_and_pareto() {
+    run_prop("fair_share", 200, |rng| {
+        let n_dev = rng.usize_in(2, 9);
+        let n_flows = rng.usize_in(1, 40);
+        let mut caps = HashMap::new();
+        for d in 0..n_dev {
+            caps.insert(Port::Egress(DeviceId(d)), 100.0 + 400.0 * rng.f64());
+            caps.insert(Port::Ingress(DeviceId(d)), 100.0 + 400.0 * rng.f64());
+        }
+        let flows: Vec<FlowSpec> = (0..n_flows)
+            .map(|_| {
+                let src = rng.usize_in(0, n_dev);
+                let mut dst = rng.usize_in(0, n_dev);
+                if dst == src {
+                    dst = (dst + 1) % n_dev;
+                }
+                FlowSpec {
+                    active: rng.f64() > 0.1,
+                    ports: vec![Port::Egress(DeviceId(src)), Port::Ingress(DeviceId(dst))],
+                    cap: 10.0 + 500.0 * rng.f64(),
+                }
+            })
+            .collect();
+        let rates = compute_rates(&flows, &caps);
+        // feasibility per port
+        let mut port_load: HashMap<Port, f64> = HashMap::new();
+        for (f, r) in flows.iter().zip(&rates) {
+            if !f.active {
+                if *r != 0.0 {
+                    return Err("inactive flow got rate".into());
+                }
+                continue;
+            }
+            if *r > f.cap * (1.0 + 1e-9) {
+                return Err(format!("rate {r} exceeds cap {}", f.cap));
+            }
+            if *r < 0.0 {
+                return Err("negative rate".into());
+            }
+            for &p in &f.ports {
+                *port_load.entry(p).or_insert(0.0) += r;
+            }
+        }
+        for (p, load) in &port_load {
+            let cap = caps[p];
+            if *load > cap * (1.0 + 1e-6) {
+                return Err(format!("port {p:?} overloaded: {load} > {cap}"));
+            }
+        }
+        // bottleneck property
+        for (f, r) in flows.iter().zip(&rates) {
+            if !f.active {
+                continue;
+            }
+            let capped = *r >= f.cap * (1.0 - 1e-9);
+            let saturated = f.ports.iter().any(|p| port_load[p] >= caps[p] * (1.0 - 1e-6));
+            if !capped && !saturated {
+                return Err(format!("flow neither capped nor on a saturated port (rate {r})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// PK all-reduce leaves the elementwise sum on every device, for random
+/// shapes, device counts, and axes.
+#[test]
+fn prop_pk_all_reduce_is_sum() {
+    run_prop("pk_all_reduce", 30, |rng| {
+        let n = rng.usize_in(2, 9);
+        let rows = n * rng.usize_in(1, 5);
+        let cols = rng.usize_in(1, 12);
+        let node = NodeSpec::test_node(n);
+        let mut pool = MemPool::new();
+        let mut bufs = vec![];
+        let mut want = vec![0.0f32; rows * cols];
+        for d in 0..n {
+            let data = rng.vec_f32(rows * cols);
+            for (w, v) in want.iter_mut().zip(&data) {
+                *w += v;
+            }
+            bufs.push(pool.alloc_init(DeviceId(d), Shape4::mat(rows, cols), data));
+        }
+        let ctx = PkCollCtx::new(&node, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
+        let mut plan = Plan::new();
+        pk_all_reduce(&mut plan, &ctx);
+        FunctionalExec::new(&mut pool).run(&plan).map_err(|e| e.to_string())?;
+        for &b in &bufs {
+            for (g, w) in pool.get(b).data.iter().zip(&want) {
+                if (g - w).abs() > 1e-4 {
+                    return Err(format!("sum mismatch: {g} vs {w}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// All-gather then reduce-scatter on either axis preserves shard contents.
+#[test]
+fn prop_ag_rs_round_trip_semantics() {
+    run_prop("ag_rs", 20, |rng| {
+        let n = rng.usize_in(2, 7);
+        let rows = n * rng.usize_in(1, 4);
+        let cols = n * rng.usize_in(1, 4);
+        let axis = *rng.choose(&[Axis::Row, Axis::Col]);
+        let node = NodeSpec::test_node(n);
+        let mut pool = MemPool::new();
+        let global: Vec<f32> = rng.vec_f32(rows * cols);
+        let mut bufs = vec![];
+        for d in 0..n {
+            // each device holds only its shard of the global tensor
+            let mut data = vec![0.0f32; rows * cols];
+            match axis {
+                Axis::Row => {
+                    let cr = rows / n;
+                    data[d * cr * cols..(d + 1) * cr * cols]
+                        .copy_from_slice(&global[d * cr * cols..(d + 1) * cr * cols]);
+                }
+                Axis::Col => {
+                    let cc = cols / n;
+                    for r in 0..rows {
+                        for c in d * cc..(d + 1) * cc {
+                            data[r * cols + c] = global[r * cols + c];
+                        }
+                    }
+                }
+            }
+            bufs.push(pool.alloc_init(DeviceId(d), Shape4::mat(rows, cols), data));
+        }
+        let ctx = PkCollCtx::new(&node, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
+        let mut plan = Plan::new();
+        pk_all_gather(&mut plan, &ctx, axis);
+        FunctionalExec::new(&mut pool).run(&plan).map_err(|e| e.to_string())?;
+        for &b in &bufs {
+            if pool.get(b).data != global {
+                return Err("all-gather did not reconstruct the global tensor".into());
+            }
+        }
+        // reduce-scatter over the gathered replicas: shard d = n * global shard
+        let ctx2 = PkCollCtx::new(&node, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
+        let mut plan2 = Plan::new();
+        pk_reduce_scatter(&mut plan2, &ctx2, axis);
+        FunctionalExec::new(&mut pool).run(&plan2).map_err(|e| e.to_string())?;
+        let cr = rows / n;
+        let cc = cols / n;
+        for (d, &b) in bufs.iter().enumerate() {
+            let data = &pool.get(b).data;
+            let check = |r: usize, c: usize| -> Result<(), String> {
+                let got = data[r * cols + c];
+                let wanted = global[r * cols + c] * n as f32;
+                if (got - wanted).abs() > 1e-4 {
+                    return Err(format!("rs mismatch at ({r},{c}): {got} vs {wanted}"));
+                }
+                Ok(())
+            };
+            match axis {
+                Axis::Row => {
+                    for r in d * cr..(d + 1) * cr {
+                        for c in 0..cols {
+                            check(r, c)?;
+                        }
+                    }
+                }
+                Axis::Col => {
+                    for r in 0..rows {
+                        for c in d * cc..(d + 1) * cc {
+                            check(r, c)?;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// MoE routing: every routed token lands exactly once per chosen expert
+/// (conservation), and counts() agrees with tokens_for().
+#[test]
+fn prop_moe_routing_conservation() {
+    run_prop("moe_routing", 30, |rng| {
+        let n_dev = rng.usize_in(2, 9);
+        let cfg = MoeCfg {
+            node: NodeSpec::test_node(n_dev),
+            tokens: n_dev * rng.usize_in(2, 16),
+            hidden: 8,
+            h_expert: 8,
+            n_experts: n_dev * rng.usize_in(1, 5),
+            top_k: rng.usize_in(1, 4).min(n_dev),
+            comm_sms: 8,
+        };
+        let routing = Routing::uniform(&cfg, rng.next_u64());
+        let counts = routing.counts(cfg.n_experts);
+        let total: u64 = counts.iter().sum();
+        if total != (cfg.tokens * cfg.top_k) as u64 {
+            return Err(format!("conservation: {total} != {}", cfg.tokens * cfg.top_k));
+        }
+        for e in 0..cfg.n_experts {
+            if routing.tokens_for(e).len() as u64 != counts[e] {
+                return Err("counts() disagrees with tokens_for()".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Functional execution must be interleaving-independent: the NCCL ring
+/// all-reduce gives identical results under different worker rotations.
+#[test]
+fn prop_interleaving_independence() {
+    run_prop("interleaving", 10, |rng| {
+        let n = rng.usize_in(2, 6);
+        let rows = n * 2;
+        let cols = rng.usize_in(1, 6);
+        let node = NodeSpec::test_node(n);
+        let inits: Vec<Vec<f32>> = (0..n).map(|_| rng.vec_f32(rows * cols)).collect();
+        let mut results = vec![];
+        for rotation in [0usize, 1, 3] {
+            let mut pool = MemPool::new();
+            let bufs: Vec<_> = (0..n)
+                .map(|d| pool.alloc_init(DeviceId(d), Shape4::mat(rows, cols), inits[d].clone()))
+                .collect();
+            let ctx = pk::comm::nccl::RingCtx {
+                node: &node,
+                model: pk::comm::nccl::NcclModel::default(),
+                replicas: bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect(),
+            };
+            let mut plan = Plan::new();
+            pk::comm::nccl::ring_all_reduce(&mut plan, &ctx);
+            FunctionalExec::new(&mut pool).with_rotation(rotation).run(&plan).map_err(|e| e.to_string())?;
+            results.push(pool.get(bufs[0]).data.clone());
+        }
+        if results[1] != results[0] || results[2] != results[0] {
+            return Err("results depend on worker interleaving".into());
+        }
+        Ok(())
+    });
+}
+
+/// Timed executor byte conservation: port byte counters equal the sum of
+/// the plan's transfer bytes over the route's ports.
+#[test]
+fn prop_timed_byte_conservation() {
+    run_prop("byte_conservation", 25, |rng| {
+        let n = rng.usize_in(2, 9);
+        let node = NodeSpec::test_node(n);
+        let mut plan = Plan::new();
+        let mut expect_egress = vec![0.0f64; n];
+        let mut expect_ingress = vec![0.0f64; n];
+        for d in 0..n {
+            let w = plan.add_worker(DeviceId(d), Role::CommSm, format!("w{d}"));
+            for _ in 0..rng.usize_in(1, 6) {
+                let mut dst = rng.usize_in(0, n);
+                if dst == d {
+                    dst = (dst + 1) % n;
+                }
+                let bytes = (rng.usize_in(1, 64) * 1024) as f64;
+                expect_egress[d] += bytes;
+                expect_ingress[dst] += bytes;
+                plan.push(
+                    w,
+                    Op::Transfer {
+                        spec: TransferSpec {
+                            mech: Mechanism::Tma,
+                            route: pk::plan::Route::P2p { src: DeviceId(d), dst: DeviceId(dst) },
+                            bytes,
+                            msg_bytes: 4096.0,
+                            n_sms: 4.0,
+                        },
+                        blocking: true,
+                        done_sem: None,
+                        done_scope: SyncScope::IntraSm,
+                        label: "prop_xfer",
+                        effect: None,
+                    },
+                );
+            }
+        }
+        let r = TimedExec::new(node).run(&plan);
+        for d in 0..n {
+            let got_e = r.port_bytes.get(&Port::Egress(DeviceId(d))).copied().unwrap_or(0.0);
+            let got_i = r.port_bytes.get(&Port::Ingress(DeviceId(d))).copied().unwrap_or(0.0);
+            if (got_e - expect_egress[d]).abs() > 1.0 || (got_i - expect_ingress[d]).abs() > 1.0 {
+                return Err(format!(
+                    "dev {d}: egress {got_e} vs {}, ingress {got_i} vs {}",
+                    expect_egress[d], expect_ingress[d]
+                ));
+            }
+        }
+        if !(r.total_time.is_finite() && r.total_time > 0.0) {
+            return Err("non-finite time".into());
+        }
+        Ok(())
+    });
+}
+
+/// GEMM+RS functional correctness over random shapes/device counts — both
+/// schedules agree with the dense reference and with each other.
+#[test]
+fn prop_gemm_rs_schedules_agree() {
+    use pk::kernels::gemm_rs::{build, GemmRsBufs, Schedule};
+    use pk::kernels::GemmKernelCfg;
+    run_prop("gemm_rs_schedules", 8, |rng| {
+        let n = *rng.choose(&[2usize, 4]);
+        let m = n * 16 * rng.usize_in(1, 3);
+        let cols = 16 * rng.usize_in(1, 3);
+        let k = 8 * rng.usize_in(1, 4);
+        let node = NodeSpec::test_node(n);
+        let mut results = vec![];
+        for schedule in [Schedule::IntraSm, Schedule::InterSm] {
+            let mut cfg = GemmKernelCfg::functional(node.clone(), m, cols, k);
+            if schedule == Schedule::InterSm {
+                cfg.opts.num_comm_sms = 8;
+            }
+            let mut pool = MemPool::new();
+            let bufs = GemmRsBufs::alloc(&mut pool, &cfg);
+            for d in 0..n {
+                pool.get_mut(bufs.gemm.a[d]).data =
+                    pk::util::seeded_vec(d as u64 + 1000, m * k);
+                pool.get_mut(bufs.gemm.b[d]).data =
+                    pk::util::seeded_vec(d as u64 + 2000, k * cols);
+            }
+            let plan = build(&cfg, schedule, Some(&bufs));
+            FunctionalExec::new(&mut pool).run(&plan).map_err(|e| e.to_string())?;
+            let mut out = vec![];
+            for d in 0..n {
+                out.extend_from_slice(&pool.get(bufs.out[d]).data);
+            }
+            results.push(out);
+        }
+        for (a, b) in results[0].iter().zip(&results[1]) {
+            if (a - b).abs() > 1e-3 {
+                return Err(format!("schedules disagree: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
