@@ -49,6 +49,21 @@ fn main() {
         let _ = gemm_rs::build(&cfg, Schedule::IntraSm, None);
     });
 
+    // ---- cluster DES: 4-node hierarchical all-reduce over NIC ports
+    {
+        use pk::hw::ClusterSpec;
+        use pk::kernels::collectives::{hier_all_reduce, ClusterCollCtx};
+        use pk::plan::Plan;
+        let cluster = ClusterSpec::hgx_h100_pod(4);
+        let views = pk::baselines::phantom_replicas(cluster.total_devices(), 4096, 8192);
+        let mut plan = Plan::new();
+        hier_all_reduce(&mut plan, &ClusterCollCtx::new(&cluster, views));
+        let exec = TimedExec::on_cluster(cluster);
+        bench("timed_exec: hier AR @ 4 nodes x 8 GPUs", 5, 3, || {
+            let _ = exec.run(&plan);
+        });
+    }
+
     // ---- max-min fair solver at high flow counts
     {
         use pk::hw::topology::Port;

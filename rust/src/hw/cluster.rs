@@ -1,0 +1,163 @@
+//! Multi-node cluster specification: `N` identical NVSwitch nodes joined by
+//! a rail-optimized RDMA fabric.
+//!
+//! The paper's analysis (§3.1) stops at one HGX node; this layer extends
+//! the same calibrated-resource methodology across nodes. Each GPU owns one
+//! NIC (the rail-optimized reference pod: a 400 Gb/s ConnectX-7 per H100,
+//! i.e. 50 GB/s unidirectional), and GPU `p` of node `k` reaches GPU `p`
+//! of any other node through its rail's switch plane without
+//! oversubscription — so, exactly as with NVSwitch inside the node,
+//! contention is charged only at the endpoint resources
+//! ([`Port::NicEgress`] / [`Port::NicIngress`]).
+//!
+//! Device identities are **global and node-major**: device `g` lives on
+//! node `g / node.num_devices` at local rank `g % node.num_devices`. A
+//! one-node cluster is bit-identical to the plain [`NodeSpec`] path — same
+//! topology, same ports, same curves — which the integration tests pin
+//! down as a regression guard.
+//!
+//! [`Port::NicEgress`]: crate::hw::topology::Port::NicEgress
+//! [`Port::NicIngress`]: crate::hw::topology::Port::NicIngress
+
+use crate::hw::spec::NodeSpec;
+use crate::hw::topology::Topology;
+use crate::hw::DeviceId;
+
+/// A cluster of `num_nodes` identical [`NodeSpec`] nodes plus the NIC/RDMA
+/// constants of the inter-node fabric. All bandwidths in bytes/s, times in
+/// seconds.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    /// The (identical) per-node hardware.
+    pub node: NodeSpec,
+    pub num_nodes: usize,
+    /// Per-GPU NIC unidirectional bandwidth (400 Gb/s ConnectX-7 = 50e9).
+    pub nic_bw: f64,
+    /// Peak achievable fraction of `nic_bw` for large-message GPUDirect
+    /// RDMA (IB/RoCE header + protocol overhead).
+    pub nic_peak_frac: f64,
+    /// Message size at which RDMA reaches half of its own peak (verbs
+    /// posting overhead dominates small writes; ~64 KB messages are needed
+    /// to approach line rate).
+    pub rdma_half_msg: f64,
+    /// One-way first-byte latency across the inter-node fabric (GPUDirect
+    /// write posted by the proxy, switch hops included).
+    pub nic_latency: f64,
+    /// Rail-optimized fabric: same-rank GPUs of different nodes connect
+    /// through a non-blocking per-rail switch plane, so inter-node flows
+    /// contend only at the endpoint NICs (mirrors the NVSwitch argument).
+    pub rail_optimized: bool,
+}
+
+impl ClusterSpec {
+    /// A cluster with the reference fabric constants.
+    pub fn new(node: NodeSpec, num_nodes: usize, nic_bw: f64) -> Self {
+        assert!(num_nodes >= 1);
+        assert!(nic_bw > 0.0);
+        ClusterSpec {
+            node,
+            num_nodes,
+            nic_bw,
+            nic_peak_frac: 0.92,
+            rdma_half_msg: 8.0 * 1024.0,
+            nic_latency: 3.0e-6,
+            rail_optimized: true,
+        }
+    }
+
+    /// Wrap a single node: the degenerate cluster every existing
+    /// single-node code path runs on (no NIC ports are ever charged).
+    pub fn single(node: NodeSpec) -> Self {
+        Self::new(node, 1, 50e9)
+    }
+
+    /// Reference scale-out pod: `num_nodes` × HGX H100, 50 GB/s per GPU.
+    pub fn hgx_h100_pod(num_nodes: usize) -> Self {
+        Self::new(NodeSpec::hgx_h100(), num_nodes, 50e9)
+    }
+
+    /// Small cluster for functional tests.
+    pub fn test_cluster(num_nodes: usize, devices_per_node: usize) -> Self {
+        Self::new(NodeSpec::test_node(devices_per_node), num_nodes, 50e9)
+    }
+
+    /// Override the NIC bandwidth (the scale-out sweep's second axis).
+    pub fn with_nic_bw(mut self, nic_bw: f64) -> Self {
+        assert!(nic_bw > 0.0);
+        self.nic_bw = nic_bw;
+        self
+    }
+
+    /// GPUs per node.
+    pub fn devices_per_node(&self) -> usize {
+        self.node.num_devices
+    }
+
+    /// Total GPUs in the cluster.
+    pub fn total_devices(&self) -> usize {
+        self.num_nodes * self.node.num_devices
+    }
+
+    /// Node index of a global device id.
+    pub fn node_of(&self, d: DeviceId) -> usize {
+        d.0 / self.node.num_devices
+    }
+
+    /// Local rank (rail index) of a global device id within its node.
+    pub fn local_rank(&self, d: DeviceId) -> usize {
+        d.0 % self.node.num_devices
+    }
+
+    /// Whether two devices share a node (NVLink reachability).
+    pub fn same_node(&self, a: DeviceId, b: DeviceId) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Global device id of `(node, rank)`.
+    pub fn device(&self, node: usize, rank: usize) -> DeviceId {
+        debug_assert!(node < self.num_nodes && rank < self.node.num_devices);
+        DeviceId(node * self.node.num_devices + rank)
+    }
+
+    /// The cluster's port topology.
+    pub fn topology(&self) -> Topology {
+        Topology::cluster(self.num_nodes, self.node.num_devices, self.node.nvswitch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_indexing_is_node_major() {
+        let c = ClusterSpec::test_cluster(3, 4);
+        assert_eq!(c.total_devices(), 12);
+        assert_eq!(c.device(2, 1), DeviceId(9));
+        assert_eq!(c.node_of(DeviceId(9)), 2);
+        assert_eq!(c.local_rank(DeviceId(9)), 1);
+        assert!(c.same_node(DeviceId(4), DeviceId(7)));
+        assert!(!c.same_node(DeviceId(3), DeviceId(4)));
+    }
+
+    #[test]
+    fn single_node_cluster_matches_node() {
+        let c = ClusterSpec::single(NodeSpec::hgx_h100());
+        assert_eq!(c.num_nodes, 1);
+        assert_eq!(c.total_devices(), 8);
+        for a in 0..8 {
+            for b in 0..8 {
+                assert!(c.same_node(DeviceId(a), DeviceId(b)));
+            }
+        }
+    }
+
+    #[test]
+    fn pod_preset_and_nic_override() {
+        let c = ClusterSpec::hgx_h100_pod(4).with_nic_bw(100e9);
+        assert_eq!(c.num_nodes, 4);
+        assert_eq!(c.nic_bw, 100e9);
+        assert!(c.rail_optimized);
+        assert!(c.nic_bw < c.node.gpu.nvlink_bw, "NIC is the binding constraint");
+    }
+}

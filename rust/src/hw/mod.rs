@@ -1,12 +1,17 @@
-//! Hardware model: per-GPU specifications and node topology.
+//! Hardware model: per-GPU specifications, node topology, and the
+//! multi-node cluster layer.
 //!
 //! Every number here is taken from the paper (§1, §2.1, §3.1, Table 1,
 //! Figures 2–3) or the vendor datasheets the paper cites; the simulator and
 //! the analytical cost model both read *only* from these structs, so the
-//! calibration has a single source of truth.
+//! calibration has a single source of truth. [`cluster`] extends the node
+//! model across an RDMA fabric (per-GPU NICs, rail-optimized) for the
+//! scale-out scenarios the paper leaves open.
 
+pub mod cluster;
 pub mod spec;
 pub mod topology;
 
+pub use cluster::ClusterSpec;
 pub use spec::{Arch, GpuSpec, NodeSpec};
 pub use topology::{DeviceId, Topology};

@@ -1,10 +1,19 @@
-//! Node topology: device identities, NVLink ports, and NVSwitch routing.
+//! Topology: device identities, NVLink ports, NVSwitch routing, and the
+//! inter-node NIC ports of a cluster.
 //!
 //! On an HGX baseboard every GPU has one NVLink bundle into the NVSwitch
 //! fabric, which is non-blocking (§2.1): any permutation of point-to-point
 //! transfers proceeds at full per-port bandwidth; contention happens only at
 //! the per-device *egress* and *ingress* ports, which is exactly what the
 //! simulator's resource model charges.
+//!
+//! Across nodes the same argument holds for a rail-optimized RDMA fabric
+//! (see [`crate::hw::cluster`]): every GPU owns one NIC, same-rank GPUs
+//! connect through a non-blocking per-rail switch plane, and contention is
+//! charged at the endpoint [`Port::NicEgress`] / [`Port::NicIngress`]
+//! resources. NVSwitch services (multicast, in-fabric reduction) never
+//! cross a node boundary, so their port sets are scoped to the device's
+//! node.
 
 
 /// Identifies one GPU within a node.
@@ -35,24 +44,60 @@ pub enum Port {
     /// The per-device DMA copy engine (host-initiated transfers run
     /// through it serially; §3.1.2).
     CopyEngine(DeviceId),
+    /// The device's NIC send side: every GPUDirect RDMA write leaving the
+    /// device crosses it (per-GPU NIC, rail-optimized fabric).
+    NicEgress(DeviceId),
+    /// The device's NIC receive side.
+    NicIngress(DeviceId),
 }
 
-/// Static topology of a node.
+/// Static topology of a node, or of a cluster of identical nodes
+/// (node-major global device ids; `devices_per_node == num_devices` for a
+/// single node).
 #[derive(Clone, Debug)]
 pub struct Topology {
     pub num_devices: usize,
     pub nvswitch: bool,
+    pub devices_per_node: usize,
 }
 
 impl Topology {
+    /// Single-node topology (the paper's HGX baseboard).
     pub fn new(num_devices: usize, nvswitch: bool) -> Self {
         assert!(num_devices >= 1);
-        Self { num_devices, nvswitch }
+        Self { num_devices, nvswitch, devices_per_node: num_devices }
     }
 
-    /// All devices in the node.
+    /// Cluster topology: `num_nodes` × `devices_per_node` GPUs.
+    pub fn cluster(num_nodes: usize, devices_per_node: usize, nvswitch: bool) -> Self {
+        assert!(num_nodes >= 1 && devices_per_node >= 1);
+        Self { num_devices: num_nodes * devices_per_node, nvswitch, devices_per_node }
+    }
+
+    /// All devices (across all nodes).
     pub fn devices(&self) -> impl Iterator<Item = DeviceId> + '_ {
         (0..self.num_devices).map(DeviceId)
+    }
+
+    /// Number of nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.num_devices / self.devices_per_node
+    }
+
+    /// Node index of a device.
+    pub fn node_of(&self, d: DeviceId) -> usize {
+        d.0 / self.devices_per_node
+    }
+
+    /// Whether two devices share a node (NVLink reachability).
+    pub fn same_node(&self, a: DeviceId, b: DeviceId) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// The devices of one node.
+    pub fn node_devices(&self, node: usize) -> impl Iterator<Item = DeviceId> + '_ {
+        let base = node * self.devices_per_node;
+        (base..base + self.devices_per_node).map(DeviceId)
     }
 
     /// Ring neighbour (used by NCCL-style ring collectives and Ring
@@ -66,25 +111,43 @@ impl Topology {
         DeviceId((d.0 + self.num_devices - 1) % self.num_devices)
     }
 
-    /// The ports a point-to-point transfer occupies. With NVSwitch the
-    /// fabric is non-blocking, so only the endpoint ports are charged;
+    /// The ports a point-to-point NVLink transfer occupies. With NVSwitch
+    /// the fabric is non-blocking, so only the endpoint ports are charged;
     /// without it (direct-attached mesh) the same model holds for a single
     /// hop. A local (src == dst) copy occupies no interconnect ports.
+    /// NVLink does not cross nodes — cross-node pairs must route over
+    /// [`Topology::rdma_ports`].
     pub fn p2p_ports(&self, src: DeviceId, dst: DeviceId) -> Vec<Port> {
         if src == dst {
             vec![]
         } else {
+            assert!(
+                self.same_node(src, dst),
+                "NVLink P2p {src} -> {dst} crosses a node boundary; use Route::Rdma"
+            );
             vec![Port::Egress(src), Port::Ingress(dst)]
         }
     }
 
+    /// The ports a cross-node GPUDirect RDMA transfer occupies: the source
+    /// and destination NICs. With a rail-optimized fabric the middle is
+    /// non-blocking, so — exactly like NVSwitch inside the node — only the
+    /// endpoints are charged.
+    pub fn rdma_ports(&self, src: DeviceId, dst: DeviceId) -> Vec<Port> {
+        assert!(
+            !self.same_node(src, dst),
+            "RDMA {src} -> {dst} within one node; use Route::P2p over NVLink"
+        );
+        vec![Port::NicEgress(src), Port::NicIngress(dst)]
+    }
+
     /// Ports occupied by an in-fabric multicast write from `src` to every
-    /// device: the source sends one copy to the switch, which replicates it
-    /// to every destination's ingress port (NVSwitch broadcast, §2.1 /
-    /// Appendix F).
+    /// device *of its node*: the source sends one copy to the switch, which
+    /// replicates it to every destination's ingress port (NVSwitch
+    /// broadcast, §2.1 / Appendix F). Multimem never crosses nodes.
     pub fn multicast_ports(&self, src: DeviceId) -> Vec<Port> {
         let mut ports = vec![Port::Egress(src)];
-        for d in self.devices() {
+        for d in self.node_devices(self.node_of(src)) {
             ports.push(Port::Ingress(d));
         }
         ports
@@ -92,14 +155,14 @@ impl Topology {
 
     /// Ports occupied by an in-fabric `ld_reduce` performed by `reader`:
     /// to deliver S reduced bytes, the switch pulls S bytes from *every*
-    /// device's egress, reduces in-fabric, and the result enters the
-    /// reader's ingress port (multimem semantics, Appendix F). Charging
-    /// all egresses makes concurrent readers contend there, which is what
-    /// bounds in-network all-reduce at ~S bytes per port instead of N·S
-    /// (§3.1.3 in-network acceleration).
+    /// device's egress within the reader's node, reduces in-fabric, and the
+    /// result enters the reader's ingress port (multimem semantics,
+    /// Appendix F). Charging all egresses makes concurrent readers contend
+    /// there, which is what bounds in-network all-reduce at ~S bytes per
+    /// port instead of N·S (§3.1.3 in-network acceleration).
     pub fn ld_reduce_ports(&self, reader: DeviceId) -> Vec<Port> {
         let mut ports = vec![Port::SwitchReduce(reader), Port::Ingress(reader)];
-        for d in self.devices() {
+        for d in self.node_devices(self.node_of(reader)) {
             ports.push(Port::Egress(d));
         }
         ports
@@ -147,5 +210,52 @@ mod tests {
         let t = Topology::new(3, true);
         let ds: Vec<_> = t.devices().collect();
         assert_eq!(ds, vec![DeviceId(0), DeviceId(1), DeviceId(2)]);
+    }
+
+    #[test]
+    fn cluster_node_scoping() {
+        let t = Topology::cluster(3, 4, true);
+        assert_eq!(t.num_devices, 12);
+        assert_eq!(t.num_nodes(), 3);
+        assert_eq!(t.node_of(DeviceId(7)), 1);
+        assert!(t.same_node(DeviceId(4), DeviceId(7)));
+        assert!(!t.same_node(DeviceId(3), DeviceId(4)));
+        assert_eq!(t.node_devices(2).collect::<Vec<_>>(), vec![DeviceId(8), DeviceId(9), DeviceId(10), DeviceId(11)]);
+    }
+
+    #[test]
+    fn rdma_ports_are_nic_endpoints() {
+        let t = Topology::cluster(2, 4, true);
+        let ports = t.rdma_ports(DeviceId(1), DeviceId(5));
+        assert_eq!(ports, vec![Port::NicEgress(DeviceId(1)), Port::NicIngress(DeviceId(5))]);
+    }
+
+    #[test]
+    #[should_panic(expected = "crosses a node boundary")]
+    fn p2p_rejects_cross_node() {
+        let t = Topology::cluster(2, 4, true);
+        let _ = t.p2p_ports(DeviceId(0), DeviceId(4));
+    }
+
+    #[test]
+    fn multicast_and_ld_reduce_stay_in_node() {
+        let t = Topology::cluster(2, 4, true);
+        let mc = t.multicast_ports(DeviceId(5));
+        assert_eq!(mc.len(), 5); // 1 egress + 4 node-local ingress
+        assert!(mc.contains(&Port::Ingress(DeviceId(7))));
+        assert!(!mc.contains(&Port::Ingress(DeviceId(0))));
+        let lr = t.ld_reduce_ports(DeviceId(2));
+        assert!(lr.contains(&Port::Egress(DeviceId(3))));
+        assert!(!lr.contains(&Port::Egress(DeviceId(4))));
+    }
+
+    #[test]
+    fn single_node_topology_unchanged_by_cluster_fields() {
+        // the devices_per_node default keeps every single-node port set
+        // identical to the pre-cluster model (regression guard)
+        let t = Topology::new(8, true);
+        assert_eq!(t.num_nodes(), 1);
+        assert_eq!(t.multicast_ports(DeviceId(0)).len(), 9);
+        assert_eq!(t.ld_reduce_ports(DeviceId(0)).len(), 10);
     }
 }

@@ -11,11 +11,12 @@
 //! (the tensor dimension, NCCL's unhappy path — for PK they cost the
 //! same, which is the point).
 
+use crate::hw::cluster::ClusterSpec;
 use crate::hw::spec::NodeSpec;
 use crate::hw::DeviceId;
 use crate::mem::pgl::ReduceOp;
 use crate::mem::ELEM_BYTES;
-use crate::plan::{Effect, MatView, Op, Plan, Role, Route, SyncScope, TransferSpec};
+use crate::plan::{Effect, MatView, Op, Plan, Role, Route, SemId, SyncScope, TransferSpec};
 use crate::xfer::Mechanism;
 
 /// Sharding axis of a collective.
@@ -306,6 +307,349 @@ pub fn pk_all_to_all_4d(
     }
 }
 
+// ====================================================================
+// Hierarchical (two-level) cluster collectives
+// ====================================================================
+//
+// Across nodes the NVSwitch services stop and the per-GPU NIC (25–100
+// GB/s) becomes the binding constraint, so every cluster collective is
+// two-level: **multimem inside the node** (the PK single-node path) and a
+// **bandwidth-optimal RDMA ring along each rail** (GPU `p` of every node)
+// across nodes. Rails are independent: rank `p` only ever touches the
+// rank-`p` slice of any replica, so the `P` rails run concurrently with no
+// cross-rail synchronization, and each rail's ring moves `(K-1)/K` of its
+// slice per phase — the classic ring bound, now charged to the NIC ports.
+//
+// On a one-node cluster each builder delegates to its single-node PK
+// counterpart, so `ClusterSpec::single(node)` reproduces the existing
+// exhibits exactly (regression-guarded in `integration_paper_claims`).
+
+/// Context for the two-level cluster collectives. `replicas[g]` is the
+/// full-size buffer view of global device `g` (node-major: `g = k·P + p`).
+pub struct ClusterCollCtx<'a> {
+    pub cluster: &'a ClusterSpec,
+    pub replicas: Vec<MatView>,
+    /// SMs each device dedicates to the intra-node (multimem/TMA) legs.
+    pub n_sms: f64,
+    /// Message granularity of intra-node multicast legs.
+    pub msg_bytes: f64,
+}
+
+impl<'a> ClusterCollCtx<'a> {
+    pub fn new(cluster: &'a ClusterSpec, replicas: Vec<MatView>) -> Self {
+        assert_eq!(replicas.len(), cluster.total_devices(), "one replica view per device");
+        ClusterCollCtx { cluster, replicas, n_sms: 16.0, msg_bytes: 128.0 * 256.0 * ELEM_BYTES as f64 }
+    }
+
+    fn p(&self) -> usize {
+        self.cluster.devices_per_node()
+    }
+
+    fn k(&self) -> usize {
+        self.cluster.num_nodes
+    }
+
+    fn n(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Bytes of a `1/count` slice of one replica.
+    fn slice_bytes(&self, count: usize) -> f64 {
+        let v = &self.replicas[0];
+        (v.rows * v.cols) as f64 * ELEM_BYTES as f64 / count as f64
+    }
+
+    fn pk_ctx(&self) -> PkCollCtx<'a> {
+        PkCollCtx {
+            node: &self.cluster.node,
+            replicas: self.replicas.clone(),
+            n_sms: self.n_sms,
+            msg_bytes: self.msg_bytes,
+        }
+    }
+}
+
+/// Slice `idx` of `count` equal parts of `view` along `axis`.
+fn slice_of(view: &MatView, idx: usize, count: usize, axis: Axis) -> MatView {
+    match axis {
+        Axis::Row => {
+            assert_eq!(view.rows % count, 0, "rows {} % {count}", view.rows);
+            let c = view.rows / count;
+            view.sub(idx * c, 0, c, view.cols)
+        }
+        Axis::Col => {
+            assert_eq!(view.cols % count, 0, "cols {} % {count}", view.cols);
+            let c = view.cols / count;
+            view.sub(0, idx * c, view.rows, c)
+        }
+    }
+}
+
+/// One blocking cross-node ring hop on a rail: copy (or reduce-add) a
+/// region of the sender's replica into the same region of the receiver's,
+/// over the endpoint NICs, signalling `done` with fabric latency.
+#[allow(clippy::too_many_arguments)]
+fn rail_hop(
+    plan: &mut Plan,
+    w: usize,
+    src_dev: DeviceId,
+    dst_dev: DeviceId,
+    src: MatView,
+    dst: MatView,
+    bytes: f64,
+    reduce: Option<ReduceOp>,
+    done: SemId,
+) {
+    plan.push(
+        w,
+        Op::Transfer {
+            spec: TransferSpec {
+                mech: Mechanism::Tma,
+                route: Route::Rdma { src: src_dev, dst: dst_dev },
+                bytes,
+                msg_bytes: bytes, // one RDMA write per ring chunk
+                n_sms: 1.0,
+            },
+            blocking: true,
+            done_sem: Some(done),
+            done_scope: SyncScope::InterNode,
+            label: "rail_ring_hop",
+            effect: Some(Effect::CopyMat { src, dst, reduce }),
+        },
+    );
+}
+
+/// Two-level all-reduce: intra-node multimem reduce-scatter over the `P`
+/// rank shards, a bandwidth-optimal RDMA ring all-reduce along each rail
+/// (reduce-scatter then all-gather over `K` node chunks), and an
+/// intra-node multicast all-gather. Per-NIC traffic is `2(K-1)/K · S/P`;
+/// per-NVLink-port traffic stays ≈ `2S/P` — the single-node bound.
+///
+/// Shards along rows; `rows % (P·K) == 0` required.
+pub fn hier_all_reduce(plan: &mut Plan, ctx: &ClusterCollCtx) {
+    let (p_cnt, k_cnt) = (ctx.p(), ctx.k());
+    if k_cnt == 1 {
+        return pk_all_reduce(plan, &ctx.pk_ctx());
+    }
+    plan.launch_overhead = ctx.cluster.node.gpu.kernel_launch;
+    let n = ctx.n();
+    // node-local arrival barrier (one-way signals, as in pk_all_reduce)
+    let ready: Vec<SemId> = (0..n).map(|_| plan.add_sem(0)).collect();
+    // phase-A completion flags, consumed by the cross-node ring senders
+    let phase_a: Vec<SemId> = (0..n).map(|_| plan.add_sem(0)).collect();
+    // per-device ring step flags: 2(K-1) steps (RS then AG)
+    let steps = 2 * (k_cnt - 1);
+    let step_done: Vec<Vec<SemId>> =
+        (0..n).map(|_| (0..steps).map(|_| plan.add_sem(0)).collect()).collect();
+    let shard_bytes = ctx.slice_bytes(p_cnt);
+    let chunk_bytes = ctx.slice_bytes(p_cnt * k_cnt);
+    for g in 0..n {
+        let (kk, pp) = (g / p_cnt, g % p_cnt);
+        let me = DeviceId(g);
+        let w = plan.add_worker(me, Role::CommSm, format!("hier_ar/d{g}"));
+        let node_base = kk * p_cnt;
+        for q in 0..p_cnt {
+            plan.push(w, Op::Signal { sem: ready[node_base + q], value: 1, scope: SyncScope::InterDevice });
+        }
+        plan.push(w, Op::Wait { sem: ready[g], value: p_cnt as u64 });
+        // --- phase A: in-fabric reduce of my rank shard across the node.
+        let my_shard = slice_of(&ctx.replicas[g], pp, p_cnt, Axis::Row);
+        let srcs: Vec<MatView> =
+            (0..p_cnt).map(|q| slice_of(&ctx.replicas[node_base + q], pp, p_cnt, Axis::Row)).collect();
+        plan.push(
+            w,
+            Op::Transfer {
+                spec: TransferSpec {
+                    mech: Mechanism::Multimem,
+                    route: Route::LdReduce { reader: me },
+                    bytes: shard_bytes,
+                    msg_bytes: 1024.0,
+                    n_sms: ctx.n_sms,
+                },
+                blocking: true,
+                done_sem: None,
+                done_scope: SyncScope::IntraSm,
+                label: "hier_ar_ldreduce",
+                effect: Some(Effect::LdReduceMat { srcs, dst: my_shard, op: ReduceOp::Add }),
+            },
+        );
+        plan.push(w, Op::Signal { sem: phase_a[g], value: 1, scope: SyncScope::InterNode });
+        // --- phase B: RDMA ring all-reduce along rail `pp` over K nodes,
+        // chunked by node index within my rank shard.
+        let next = ((kk + 1) % k_cnt) * p_cnt + pp;
+        let chunk_view = |dev: usize, chunk: usize| {
+            slice_of(&slice_of(&ctx.replicas[dev], pp, p_cnt, Axis::Row), chunk, k_cnt, Axis::Row)
+        };
+        // reduce-scatter half: send chunk (kk - s), reduce-add at next.
+        for s in 0..k_cnt - 1 {
+            if s == 0 {
+                plan.push(w, Op::Wait { sem: phase_a[next], value: 1 });
+            } else {
+                plan.push(w, Op::Wait { sem: step_done[g][s - 1], value: 1 });
+            }
+            let chunk = (kk + k_cnt - s) % k_cnt;
+            rail_hop(plan, w, me, DeviceId(next), chunk_view(g, chunk), chunk_view(next, chunk), chunk_bytes, Some(ReduceOp::Add), step_done[next][s]);
+        }
+        // all-gather half: circulate complete chunks (overwrite).
+        for s in 0..k_cnt - 1 {
+            plan.push(w, Op::Wait { sem: step_done[g][k_cnt - 2 + s], value: 1 });
+            let chunk = (kk + 1 + k_cnt - s) % k_cnt;
+            rail_hop(plan, w, me, DeviceId(next), chunk_view(g, chunk), chunk_view(next, chunk), chunk_bytes, None, step_done[next][k_cnt - 1 + s]);
+        }
+        plan.push(w, Op::Wait { sem: step_done[g][steps - 1], value: 1 });
+        // --- phase C: multicast the fully-reduced rank shard to node peers.
+        let others: Vec<MatView> = (0..p_cnt)
+            .filter(|&q| q != pp)
+            .map(|q| slice_of(&ctx.replicas[node_base + q], pp, p_cnt, Axis::Row))
+            .collect();
+        plan.push(
+            w,
+            Op::Transfer {
+                spec: TransferSpec {
+                    mech: Mechanism::Multimem,
+                    route: Route::Multicast { src: me },
+                    bytes: shard_bytes,
+                    msg_bytes: 1024.0,
+                    n_sms: ctx.n_sms,
+                },
+                blocking: true,
+                done_sem: None,
+                done_scope: SyncScope::IntraSm,
+                label: "hier_ar_mc",
+                effect: Some(Effect::MulticastMat { src: my_shard, dsts: others, reduce: None }),
+            },
+        );
+    }
+}
+
+/// Two-level all-gather: device `g` starts owning global shard `g` (of
+/// `N = K·P`, along `axis`); an RDMA ring along each rail circulates the
+/// rail's shards across nodes while each device multicasts every shard it
+/// holds to its node peers. NIC traffic `(K-1)/K · S/P` per device;
+/// NVLink multicast does the ×P amplification inside the node.
+pub fn hier_all_gather(plan: &mut Plan, ctx: &ClusterCollCtx, axis: Axis) {
+    let (p_cnt, k_cnt) = (ctx.p(), ctx.k());
+    if k_cnt == 1 {
+        return pk_all_gather(plan, &ctx.pk_ctx(), axis);
+    }
+    plan.launch_overhead = ctx.cluster.node.gpu.kernel_launch;
+    let n = ctx.n();
+    let shard_bytes = ctx.slice_bytes(n);
+    let step_done: Vec<Vec<SemId>> =
+        (0..n).map(|_| (0..k_cnt - 1).map(|_| plan.add_sem(0)).collect()).collect();
+    for g in 0..n {
+        let (kk, pp) = (g / p_cnt, g % p_cnt);
+        let me = DeviceId(g);
+        let w = plan.add_worker(me, Role::CommSm, format!("hier_ag/d{g}"));
+        let node_base = kk * p_cnt;
+        let shard_view = |dev: usize, shard: usize| slice_of(&ctx.replicas[dev], shard, n, axis);
+        let multicast = |plan: &mut Plan, shard: usize| {
+            let dsts: Vec<MatView> =
+                (0..p_cnt).filter(|&q| q != pp).map(|q| shard_view(node_base + q, shard)).collect();
+            plan.push(
+                w,
+                Op::Transfer {
+                    spec: TransferSpec {
+                        mech: Mechanism::Tma,
+                        route: Route::Multicast { src: me },
+                        bytes: shard_bytes,
+                        msg_bytes: ctx.msg_bytes,
+                        n_sms: ctx.n_sms,
+                    },
+                    blocking: true,
+                    done_sem: None,
+                    done_scope: SyncScope::IntraSm,
+                    label: "hier_ag_mc",
+                    effect: Some(Effect::MulticastMat { src: shard_view(g, shard), dsts, reduce: None }),
+                },
+            );
+        };
+        // my own shard goes to node peers immediately
+        multicast(&mut *plan, kk * p_cnt + pp);
+        // rail ring: circulate the rail's shards across nodes
+        let next = ((kk + 1) % k_cnt) * p_cnt + pp;
+        for s in 0..k_cnt - 1 {
+            if s > 0 {
+                plan.push(w, Op::Wait { sem: step_done[g][s - 1], value: 1 });
+            }
+            let shard = ((kk + k_cnt - s) % k_cnt) * p_cnt + pp;
+            rail_hop(plan, w, me, DeviceId(next), shard_view(g, shard), shard_view(next, shard), shard_bytes, None, step_done[next][s]);
+        }
+        // forward every received shard to node peers once the ring is
+        // done (the single communicator worker serializes these after its
+        // sends — deliberately, so the mc tail never delays downstream
+        // ring hops; overlapping the tail needs a second worker, noted as
+        // a ROADMAP follow-on)
+        for s in 0..k_cnt - 1 {
+            plan.push(w, Op::Wait { sem: step_done[g][s], value: 1 });
+            let shard = ((kk + k_cnt - 1 - s) % k_cnt) * p_cnt + pp;
+            multicast(&mut *plan, shard);
+        }
+    }
+}
+
+/// Two-level reduce-scatter: each device in-network-reduces its rail's
+/// regions across its node (phase 1), then an RDMA ring reduce-scatter
+/// along the rail leaves device `g = k·P + p` owning the fully-reduced
+/// global shard `g` (of `N`, along `axis`).
+pub fn hier_reduce_scatter(plan: &mut Plan, ctx: &ClusterCollCtx, axis: Axis) {
+    let (p_cnt, k_cnt) = (ctx.p(), ctx.k());
+    if k_cnt == 1 {
+        return pk_reduce_scatter(plan, &ctx.pk_ctx(), axis);
+    }
+    plan.launch_overhead = ctx.cluster.node.gpu.kernel_launch;
+    let n = ctx.n();
+    let shard_bytes = ctx.slice_bytes(n);
+    let phase1: Vec<SemId> = (0..n).map(|_| plan.add_sem(0)).collect();
+    let step_done: Vec<Vec<SemId>> =
+        (0..n).map(|_| (0..k_cnt - 1).map(|_| plan.add_sem(0)).collect()).collect();
+    for g in 0..n {
+        let (kk, pp) = (g / p_cnt, g % p_cnt);
+        let me = DeviceId(g);
+        let w = plan.add_worker(me, Role::CommSm, format!("hier_rs/d{g}"));
+        let node_base = kk * p_cnt;
+        let shard_view = |dev: usize, shard: usize| slice_of(&ctx.replicas[dev], shard, n, axis);
+        // --- phase 1: node-partial reduction of every rail-p region.
+        for j in 0..k_cnt {
+            let shard = j * p_cnt + pp;
+            let srcs: Vec<MatView> = (0..p_cnt).map(|q| shard_view(node_base + q, shard)).collect();
+            plan.push(
+                w,
+                Op::Transfer {
+                    spec: TransferSpec {
+                        mech: Mechanism::Multimem,
+                        route: Route::LdReduce { reader: me },
+                        bytes: shard_bytes,
+                        msg_bytes: 1024.0,
+                        n_sms: ctx.n_sms,
+                    },
+                    blocking: true,
+                    done_sem: None,
+                    done_scope: SyncScope::IntraSm,
+                    label: "hier_rs_ldreduce",
+                    effect: Some(Effect::LdReduceMat { srcs, dst: shard_view(g, shard), op: ReduceOp::Add }),
+                },
+            );
+        }
+        plan.push(w, Op::Signal { sem: phase1[g], value: 1, scope: SyncScope::InterNode });
+        // --- phase 2: rail ring reduce-scatter over node chunks; device
+        // ends owning chunk kk, i.e. global shard g (offset -1 walk, as in
+        // the NCCL ring).
+        let next = ((kk + 1) % k_cnt) * p_cnt + pp;
+        for s in 0..k_cnt - 1 {
+            if s == 0 {
+                plan.push(w, Op::Wait { sem: phase1[next], value: 1 });
+            } else {
+                plan.push(w, Op::Wait { sem: step_done[g][s - 1], value: 1 });
+            }
+            let chunk = (kk + 2 * k_cnt - s - 1) % k_cnt;
+            let shard = chunk * p_cnt + pp;
+            rail_hop(plan, w, me, DeviceId(next), shard_view(g, shard), shard_view(next, shard), shard_bytes, Some(ReduceOp::Add), step_done[next][s]);
+        }
+        plan.push(w, Op::Wait { sem: step_done[g][k_cnt - 2], value: 1 });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -448,6 +792,188 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn cluster_replicas(
+        pool: &mut MemPool,
+        n: usize,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+    ) -> (Vec<crate::mem::BufId>, Vec<Vec<f32>>) {
+        let mut bufs = vec![];
+        let mut inits = vec![];
+        for d in 0..n {
+            let data = seeded_vec(seed + d as u64, rows * cols);
+            inits.push(data.clone());
+            bufs.push(pool.alloc_init(DeviceId(d), Shape4::mat(rows, cols), data));
+        }
+        (bufs, inits)
+    }
+
+    #[test]
+    fn hier_all_reduce_matches_single_node_reference() {
+        // two-level AR numerics == the single-node pk_all_reduce reference
+        // on the same inputs (tolerance: the sum order differs).
+        for (k, p) in [(2usize, 2usize), (2, 4), (3, 2)] {
+            let n = k * p;
+            let (rows, cols) = (n * 2, 6); // rows % (P*K) == 0
+            let cluster = ClusterSpec::test_cluster(k, p);
+            let mut pool = MemPool::new();
+            let (bufs, inits) = cluster_replicas(&mut pool, n, rows, cols, 40);
+            let ctx = ClusterCollCtx::new(&cluster, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
+            let mut plan = Plan::new();
+            hier_all_reduce(&mut plan, &ctx);
+            FunctionalExec::new(&mut pool).run(&plan).unwrap();
+            // reference: single-node pk_all_reduce over the same inits
+            let node = NodeSpec::test_node(n);
+            let mut ref_pool = MemPool::new();
+            let ref_bufs: Vec<_> = (0..n)
+                .map(|d| ref_pool.alloc_init(DeviceId(d), Shape4::mat(rows, cols), inits[d].clone()))
+                .collect();
+            let ref_ctx = PkCollCtx::new(&node, ref_bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
+            let mut ref_plan = Plan::new();
+            pk_all_reduce(&mut ref_plan, &ref_ctx);
+            FunctionalExec::new(&mut ref_pool).run(&ref_plan).unwrap();
+            for (b, rb) in bufs.iter().zip(&ref_bufs) {
+                assert_allclose(&pool.get(*b).data, &ref_pool.get(*rb).data, 1e-5, 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn hier_all_reduce_exact_for_sum_order_stable_inputs() {
+        // small integers sum exactly in f32 regardless of order: the
+        // two-level result must be bit-identical to the reference sum.
+        let (k, p) = (2usize, 3usize);
+        let n = k * p;
+        let (rows, cols) = (n * 2, 4);
+        let cluster = ClusterSpec::test_cluster(k, p);
+        let mut pool = MemPool::new();
+        let bufs: Vec<_> = (0..n)
+            .map(|d| pool.alloc_init(DeviceId(d), Shape4::mat(rows, cols), vec![(d + 1) as f32; rows * cols]))
+            .collect();
+        let ctx = ClusterCollCtx::new(&cluster, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
+        let mut plan = Plan::new();
+        hier_all_reduce(&mut plan, &ctx);
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        let want = (1..=n).sum::<usize>() as f32; // 21, exactly representable
+        for &b in &bufs {
+            assert!(pool.get(b).data.iter().all(|v| *v == want), "exact sum everywhere");
+        }
+    }
+
+    #[test]
+    fn hier_all_gather_reconstructs_global_on_both_axes() {
+        for axis in [Axis::Row, Axis::Col] {
+            let (k, p) = (2usize, 2usize);
+            let n = k * p;
+            let (rows, cols) = (n * 2, n * 3);
+            let cluster = ClusterSpec::test_cluster(k, p);
+            let mut pool = MemPool::new();
+            let global = seeded_vec(777, rows * cols);
+            let mut bufs = vec![];
+            for d in 0..n {
+                // each device holds only its global shard d
+                let mut data = vec![0.0f32; rows * cols];
+                match axis {
+                    Axis::Row => {
+                        let cr = rows / n;
+                        data[d * cr * cols..(d + 1) * cr * cols]
+                            .copy_from_slice(&global[d * cr * cols..(d + 1) * cr * cols]);
+                    }
+                    Axis::Col => {
+                        let cc = cols / n;
+                        for r in 0..rows {
+                            for c in d * cc..(d + 1) * cc {
+                                data[r * cols + c] = global[r * cols + c];
+                            }
+                        }
+                    }
+                }
+                bufs.push(pool.alloc_init(DeviceId(d), Shape4::mat(rows, cols), data));
+            }
+            let ctx = ClusterCollCtx::new(&cluster, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
+            let mut plan = Plan::new();
+            hier_all_gather(&mut plan, &ctx, axis);
+            FunctionalExec::new(&mut pool).run(&plan).unwrap();
+            for &b in &bufs {
+                assert_eq!(pool.get(b).data, global, "all-gather reconstructs the global tensor ({axis:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn hier_reduce_scatter_owns_global_shard() {
+        let (k, p) = (2usize, 3usize);
+        let n = k * p;
+        let (rows, cols) = (n * 2, 5);
+        let cluster = ClusterSpec::test_cluster(k, p);
+        let mut pool = MemPool::new();
+        let (bufs, inits) = cluster_replicas(&mut pool, n, rows, cols, 880);
+        let ctx = ClusterCollCtx::new(&cluster, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
+        let mut plan = Plan::new();
+        hier_reduce_scatter(&mut plan, &ctx, Axis::Row);
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        let mut want = vec![0.0f32; rows * cols];
+        for v in &inits {
+            for (w, x) in want.iter_mut().zip(v) {
+                *w += x;
+            }
+        }
+        let cr = rows / n;
+        for (d, &b) in bufs.iter().enumerate() {
+            let got = &pool.get(b).data[d * cr * cols..(d + 1) * cr * cols];
+            let exp = &want[d * cr * cols..(d + 1) * cr * cols];
+            for (g, e) in got.iter().zip(exp) {
+                assert!((g - e).abs() < 1e-4, "device {d} owns reduced shard {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn hier_single_node_delegates_to_pk_plan() {
+        // K=1 must produce the *same plan* as the single-node builders —
+        // the 1-node-cluster regression guarantee.
+        let cluster = ClusterSpec::test_cluster(1, 4);
+        let (rows, cols) = (8, 8);
+        let views = crate::baselines::phantom_replicas(4, rows, cols);
+        let mut a = Plan::new();
+        hier_all_reduce(&mut a, &ClusterCollCtx::new(&cluster, views.clone()));
+        let mut b = Plan::new();
+        pk_all_reduce(&mut b, &PkCollCtx::new(&cluster.node, views));
+        assert_eq!(a.total_ops(), b.total_ops());
+        assert_eq!(a.workers.len(), b.workers.len());
+        assert_eq!(a.sems.len(), b.sems.len());
+    }
+
+    #[test]
+    fn hier_timed_charges_nics_not_nvlink_across_nodes() {
+        use crate::exec::TimedExec;
+        use crate::hw::topology::Port;
+        let cluster = ClusterSpec::hgx_h100_pod(2);
+        let n = cluster.total_devices();
+        let (rows, cols) = (n * 64, 256);
+        let views = crate::baselines::phantom_replicas(n, rows, cols);
+        let mut plan = Plan::new();
+        hier_all_reduce(&mut plan, &ClusterCollCtx::new(&cluster, views));
+        for w in &mut plan.workers {
+            for op in &mut w.ops {
+                if let Op::Transfer { effect, .. } = op {
+                    *effect = None;
+                }
+            }
+        }
+        let r = TimedExec::on_cluster(cluster.clone()).run(&plan);
+        // every device's NIC carried the ring traffic: 2(K-1)/K of its
+        // rank shard
+        let shard = (rows * cols) as f64 * ELEM_BYTES as f64 / cluster.devices_per_node() as f64;
+        let want_nic = shard * 2.0 * (cluster.num_nodes - 1) as f64 / cluster.num_nodes as f64;
+        for g in 0..n {
+            let got = r.port_bytes[&Port::NicEgress(DeviceId(g))];
+            assert!((got - want_nic).abs() / want_nic < 1e-6, "dev {g}: {got} vs {want_nic}");
+        }
+        assert!(r.total_time.is_finite() && r.total_time > 0.0);
     }
 
     #[test]

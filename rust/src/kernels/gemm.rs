@@ -25,7 +25,11 @@ pub struct GemmBufs {
 impl GemmBufs {
     /// Allocate zeroed operands on every device.
     pub fn alloc(pool: &mut MemPool, cfg: &GemmKernelCfg) -> Self {
-        let n_dev = cfg.node.num_devices;
+        Self::alloc_n(pool, cfg, cfg.node.num_devices)
+    }
+
+    /// Allocate for `n_dev` devices (cluster runs span multiple nodes).
+    pub fn alloc_n(pool: &mut MemPool, cfg: &GemmKernelCfg, n_dev: usize) -> Self {
         GemmBufs {
             a: (0..n_dev).map(|d| pool.alloc(DeviceId(d), Shape4::mat(cfg.m, cfg.k))).collect(),
             b: (0..n_dev).map(|d| pool.alloc(DeviceId(d), Shape4::mat(cfg.k, cfg.n))).collect(),

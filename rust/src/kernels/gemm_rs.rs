@@ -15,10 +15,11 @@
 
 use super::gemm::GemmBufs;
 use super::GemmKernelCfg;
+use crate::hw::cluster::ClusterSpec;
 use crate::hw::DeviceId;
 use crate::mem::tile::Shape4;
 use crate::mem::{BufId, MemPool};
-use crate::pk::primitives::{store_add_async, TileRef};
+use crate::pk::primitives::{store_add_async_routed, TileRef};
 use crate::pk::sync;
 use crate::pk::template::Lcsc;
 use crate::plan::{Effect, MatView, Op, Plan};
@@ -41,19 +42,48 @@ pub struct GemmRsBufs {
 
 impl GemmRsBufs {
     pub fn alloc(pool: &mut MemPool, cfg: &GemmKernelCfg) -> Self {
-        let n_dev = cfg.node.num_devices;
+        Self::alloc_n(pool, cfg, cfg.node.num_devices)
+    }
+
+    /// Buffers for a cross-node run: `n_dev` total devices.
+    pub fn alloc_cluster(pool: &mut MemPool, cfg: &GemmKernelCfg, cluster: &ClusterSpec) -> Self {
+        Self::alloc_n(pool, cfg, cluster.total_devices())
+    }
+
+    fn alloc_n(pool: &mut MemPool, cfg: &GemmKernelCfg, n_dev: usize) -> Self {
         assert_eq!(cfg.m % n_dev, 0);
         let chunk_rows = cfg.m / n_dev;
         GemmRsBufs {
-            gemm: GemmBufs::alloc(pool, cfg),
+            gemm: GemmBufs::alloc_n(pool, cfg, n_dev),
             out: (0..n_dev).map(|d| pool.alloc(DeviceId(d), Shape4::mat(chunk_rows, cfg.n))).collect(),
         }
     }
 }
 
-/// Build the fused kernel. `m` must divide by `n_dev × tile_m`.
+/// Build the fused kernel. `m` must divide by `n_dev × tile_m`. Delegates
+/// to [`build_cluster`] over a one-node cluster (same code path — the
+/// cluster refactor cannot drift from the single-node numbers).
 pub fn build(cfg: &GemmKernelCfg, schedule: Schedule, bufs: Option<&GemmRsBufs>) -> Plan {
-    let n_dev = cfg.node.num_devices;
+    build_cluster(cfg, &ClusterSpec::single(cfg.node.clone()), schedule, bufs)
+}
+
+/// Cross-node GEMM+RS: the reduction axis is sharded over **all** GPUs of
+/// the cluster, output row-chunk `o` belongs to global device `o`, and
+/// each finished tile-row is scatter-added to its owner — over NVLink when
+/// the owner shares the node, over GPUDirect RDMA otherwise (the
+/// locality-routed `store_add_async`). The tile-order swizzle spreads
+/// concurrent stores across both ingress ports and NICs.
+pub fn build_cluster(
+    cfg: &GemmKernelCfg,
+    cluster: &ClusterSpec,
+    schedule: Schedule,
+    bufs: Option<&GemmRsBufs>,
+) -> Plan {
+    // cfg carries a NodeSpec too (tiling, SM partition math reads it);
+    // it must describe the same node hardware the cluster is built from.
+    assert_eq!(cfg.node.num_devices, cluster.node.num_devices, "cfg.node must match cluster.node");
+    assert_eq!(cfg.node.gpu.arch, cluster.node.gpu.arch, "cfg.node must match cluster.node");
+    let n_dev = cluster.total_devices();
     let grid_m = cfg.grid_m();
     assert_eq!(grid_m % n_dev, 0, "tile rows must divide across devices");
     let rows_per_dev = grid_m / n_dev;
@@ -63,7 +93,7 @@ pub fn build(cfg: &GemmKernelCfg, schedule: Schedule, bufs: Option<&GemmRsBufs>)
     } else if opts.num_comm_sms == 0 {
         opts.num_comm_sms = 16; // default communicator partition
     }
-    let mut l = Lcsc::new(cfg.node.clone(), opts);
+    let mut l = Lcsc::new_cluster(cluster, opts);
     let dur = l.tile_gemm_time(cfg.tile_m, cfg.n, cfg.k);
     let store_sms = match schedule {
         Schedule::IntraSm => cfg.sms_per_compute_worker(),
@@ -109,7 +139,7 @@ pub fn build(cfg: &GemmKernelCfg, schedule: Schedule, bufs: Option<&GemmRsBufs>)
                         acquired += 1;
                         l.plan.push(*w, Op::Wait { sem: slots, value: acquired });
                         l.plan.push(*w, Op::Compute { dur, label: "gemm_tile_row", effect: effect_gemm });
-                        emit_scatter_add(&mut l, cfg, *w, dev, owner, row, rows_per_dev, store_sms, Some(slots), bufs);
+                        emit_scatter_add(&mut l, cfg, cluster, *w, dev, owner, row, rows_per_dev, store_sms, Some(slots), bufs);
                     }
                     Schedule::InterSm => {
                         // compute into local HBM, then hand off to the communicator
@@ -135,7 +165,7 @@ pub fn build(cfg: &GemmKernelCfg, schedule: Schedule, bufs: Option<&GemmRsBufs>)
                     let row = (dev + 1 + idx / rows_per_dev) % n_dev * rows_per_dev + idx % rows_per_dev;
                     let owner = row / rows_per_dev;
                     l.plan.push(cw, Op::Wait { sem: staged[row], value: 1 });
-                    emit_scatter_add(&mut l, cfg, cw, dev, owner, row, rows_per_dev, store_sms, None, bufs);
+                    emit_scatter_add(&mut l, cfg, cluster, cw, dev, owner, row, rows_per_dev, store_sms, None, bufs);
                 }
             }
         }
@@ -144,11 +174,13 @@ pub fn build(cfg: &GemmKernelCfg, schedule: Schedule, bufs: Option<&GemmRsBufs>)
     l.finish()
 }
 
-/// Add one computed tile-row into its owner's chunk.
+/// Add one computed tile-row into its owner's chunk (NVLink or RDMA by
+/// owner locality).
 #[allow(clippy::too_many_arguments)]
 fn emit_scatter_add(
     l: &mut Lcsc,
     cfg: &GemmKernelCfg,
+    cluster: &ClusterSpec,
     w: usize,
     dev: usize,
     owner: usize,
@@ -163,7 +195,7 @@ fn emit_scatter_add(
     let (src, dst) = match bufs {
         Some(b) => (
             MatView::full2d(b.gemm.c[dev], cfg.m, cfg.n).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.n),
-            MatView::full2d(b.out[owner], cfg.m / cfg.node.num_devices, cfg.n)
+            MatView::full2d(b.out[owner], cfg.m / cluster.total_devices(), cfg.n)
                 .sub((row - owner * rows_per_dev) * cfg.tile_m, 0, cfg.tile_m, cfg.n),
         ),
         None => {
@@ -171,10 +203,9 @@ fn emit_scatter_add(
             (ph, ph)
         }
     };
-    let spec = &cfg.node.gpu.clone();
     let plan_store = |plan: &mut Plan| {
         let mut sa = |src_ref: TileRef, dst_ref: TileRef| {
-            store_add_async(plan, spec, w, src_ref, dst_ref, done);
+            store_add_async_routed(plan, cluster, w, src_ref, dst_ref, done);
         };
         sa(TileRef::new(src, DeviceId(dev)), TileRef::new(dst, DeviceId(owner)));
     };
@@ -242,6 +273,54 @@ mod tests {
     #[test]
     fn functional_inter_sm_matches_reference() {
         run_functional(Schedule::InterSm);
+    }
+
+    #[test]
+    fn functional_cluster_matches_reference() {
+        // 2 nodes x 2 GPUs: scatter-adds to remote owners ride RDMA and
+        // the reduced chunks must still equal the dense reference.
+        let cluster = ClusterSpec::test_cluster(2, 2);
+        let n_dev = cluster.total_devices();
+        let cfg = GemmKernelCfg::functional(cluster.node.clone(), 64, 32, 24);
+        let mut pool = MemPool::new();
+        let bufs = GemmRsBufs::alloc_cluster(&mut pool, &cfg, &cluster);
+        for d in 0..n_dev {
+            pool.get_mut(bufs.gemm.a[d]).data = seeded_vec(d as u64 + 1, 64 * 24);
+            pool.get_mut(bufs.gemm.b[d]).data = seeded_vec(d as u64 + 21, 24 * 32);
+        }
+        // dense reference over all cluster devices
+        let mut full = vec![0.0f32; cfg.m * cfg.n];
+        for d in 0..n_dev {
+            let prod = linalg::matmul(&pool.get(bufs.gemm.a[d]).data, &pool.get(bufs.gemm.b[d]).data, cfg.m, cfg.n, cfg.k);
+            for (f, p) in full.iter_mut().zip(prod) {
+                *f += p;
+            }
+        }
+        let chunk = cfg.m / n_dev * cfg.n;
+        let plan = build_cluster(&cfg, &cluster, Schedule::IntraSm, Some(&bufs));
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        for d in 0..n_dev {
+            assert_allclose(&pool.get(bufs.out[d]).data, &full[d * chunk..(d + 1) * chunk], 1e-5, 1e-6);
+        }
+    }
+
+    #[test]
+    fn timed_cluster_charges_nics_for_remote_owners() {
+        use crate::hw::topology::Port;
+        let cluster = ClusterSpec::hgx_h100_pod(2);
+        let n_dev = cluster.total_devices();
+        let cfg = GemmKernelCfg::new(cluster.node.clone(), 32768, 4096, 4096);
+        let plan = build_cluster(&cfg, &cluster, Schedule::IntraSm, None);
+        let r = TimedExec::on_cluster(cluster.clone()).run(&plan);
+        assert!(r.total_time.is_finite() && r.total_time > 0.0);
+        // every device owns m/n_dev rows locally and scatter-adds the other
+        // node's half of its output over its NIC (atomic-inflated bytes)
+        let out_bytes = (cfg.m * cfg.n) as f64 * crate::mem::ELEM_BYTES as f64;
+        let remote_frac = 0.5; // half the owners live on the other node
+        let want = out_bytes * remote_frac * (1.0 + cluster.node.gpu.atomic_overhead_frac);
+        let got = r.port_bytes[&Port::NicEgress(crate::hw::DeviceId(0))];
+        assert!((got - want).abs() / want < 1e-6, "{got} vs {want}");
+        let _ = n_dev;
     }
 
     #[test]

@@ -26,6 +26,21 @@
 //!   all-to-all that needs no reshape (Figure 11, Figure 17).
 //! * [`moe`] — expert-parallel token dispatch overlapped with the expert's
 //!   grouped GEMM (Figure 12).
+//!
+//! ## Scale-out (cluster) variants
+//!
+//! Beyond the paper's single node, the cluster layer
+//! ([`crate::hw::ClusterSpec`]) adds hierarchical variants that treat the
+//! per-GPU NIC as the binding constraint:
+//!
+//! * [`collectives::hier_all_reduce`] / [`collectives::hier_all_gather`] /
+//!   [`collectives::hier_reduce_scatter`] — two-level collectives:
+//!   multimem inside the node, a bandwidth-optimal RDMA ring along each
+//!   rail across nodes (the "scale-out sweep" exhibit).
+//! * [`ring_attention::build_cluster`] — one node-major KV ring across all
+//!   GPUs; only the `K` node-boundary hops pay the NIC.
+//! * [`gemm_rs::build_cluster`] — cross-node GEMM+RS with locality-routed
+//!   scatter-adds (NVLink in-node, GPUDirect RDMA across).
 
 pub mod ag_gemm;
 pub mod collectives;

@@ -13,6 +13,7 @@
 //! between steps. The xDiT baseline (separate NCCL P2P + FlashAttention
 //! launches per step) is in [`crate::baselines::xdit`].
 
+use crate::hw::cluster::ClusterSpec;
 use crate::hw::spec::NodeSpec;
 use crate::hw::DeviceId;
 use crate::mem::tile::Shape4;
@@ -78,22 +79,89 @@ pub struct RingAttnBufs {
 
 impl RingAttnBufs {
     pub fn alloc(pool: &mut MemPool, cfg: &RingAttnCfg) -> Self {
-        let n = cfg.node.num_devices;
-        let sl = cfg.s_local();
-        let q_shape = Shape4 { b: cfg.b, d: cfg.h, r: sl, c: cfg.d };
-        let kv_shape = Shape4 { b: cfg.b, d: cfg.h, r: cfg.s, c: cfg.d };
+        Self::alloc_n(pool, cfg.node.num_devices, cfg.b, cfg.h, cfg.s, cfg.d)
+    }
+
+    /// Buffers for a multi-node ring (one KV ring across the cluster).
+    pub fn alloc_cluster(pool: &mut MemPool, cfg: &ClusterRingAttnCfg) -> Self {
+        Self::alloc_n(pool, cfg.cluster.total_devices(), cfg.b, cfg.h, cfg.s, cfg.d)
+    }
+
+    fn alloc_n(pool: &mut MemPool, n: usize, b: usize, h: usize, s: usize, d: usize) -> Self {
+        assert_eq!(s % n, 0, "sequence {s} must divide across {n} devices");
+        let sl = s / n;
+        let q_shape = Shape4 { b, d: h, r: sl, c: d };
+        let kv_shape = Shape4 { b, d: h, r: s, c: d };
         RingAttnBufs {
-            q: (0..n).map(|d| pool.alloc(DeviceId(d), q_shape)).collect(),
-            k: (0..n).map(|d| pool.alloc(DeviceId(d), kv_shape)).collect(),
-            v: (0..n).map(|d| pool.alloc(DeviceId(d), kv_shape)).collect(),
-            o: (0..n).map(|d| pool.alloc(DeviceId(d), q_shape)).collect(),
+            q: (0..n).map(|dev| pool.alloc(DeviceId(dev), q_shape)).collect(),
+            k: (0..n).map(|dev| pool.alloc(DeviceId(dev), kv_shape)).collect(),
+            v: (0..n).map(|dev| pool.alloc(DeviceId(dev), kv_shape)).collect(),
+            o: (0..n).map(|dev| pool.alloc(DeviceId(dev), q_shape)).collect(),
         }
     }
 }
 
-/// Build the fused PK ring-attention kernel.
+/// Multi-node ring-attention configuration: one KV ring over **all** GPUs
+/// of the cluster. The hops inside a node ride NVLink; the hop from the
+/// last GPU of node `k` to the first GPU of node `k+1` crosses the NIC —
+/// with the ring laid out node-major only `K` of the `N` hops pay the NIC,
+/// and they overlap with the other devices' compute exactly like the
+/// NVLink hops do.
+#[derive(Clone, Debug)]
+pub struct ClusterRingAttnCfg {
+    pub cluster: ClusterSpec,
+    pub b: usize,
+    pub h: usize,
+    pub s: usize,
+    pub d: usize,
+    pub opts: LcscOpts,
+    pub flash_util: f64,
+}
+
+impl ClusterRingAttnCfg {
+    /// Paper configuration (B=16, H=16, D=128) over a cluster.
+    pub fn paper(cluster: ClusterSpec, s: usize) -> Self {
+        ClusterRingAttnCfg { cluster, b: 16, h: 16, s, d: 128, opts: LcscOpts::default(), flash_util: 0.75 }
+    }
+
+    pub fn s_local(&self) -> usize {
+        assert_eq!(self.s % self.cluster.total_devices(), 0);
+        self.s / self.cluster.total_devices()
+    }
+
+    pub fn step_flops(&self) -> f64 {
+        4.0 * (self.b * self.h) as f64 * (self.s_local() as f64).powi(2) * self.d as f64
+    }
+
+    pub fn kv_shard_bytes(&self) -> f64 {
+        2.0 * (self.b * self.h * self.s_local() * self.d) as f64 * ELEM_BYTES as f64
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.step_flops() * self.cluster.total_devices() as f64
+    }
+}
+
+/// Build the fused PK ring-attention kernel (single node). Delegates to
+/// [`build_cluster`] over a one-node cluster — the same code path, so the
+/// cluster refactor cannot drift from the single-node numbers.
 pub fn build(cfg: &RingAttnCfg, bufs: Option<&RingAttnBufs>) -> Plan {
-    let n = cfg.node.num_devices;
+    let ccfg = ClusterRingAttnCfg {
+        cluster: ClusterSpec::single(cfg.node.clone()),
+        b: cfg.b,
+        h: cfg.h,
+        s: cfg.s,
+        d: cfg.d,
+        opts: cfg.opts,
+        flash_util: cfg.flash_util,
+    };
+    build_cluster(&ccfg, bufs)
+}
+
+/// Build the fused ring-attention kernel over a cluster: one node-major KV
+/// ring across all GPUs; node-boundary hops ride the NIC.
+pub fn build_cluster(cfg: &ClusterRingAttnCfg, bufs: Option<&RingAttnBufs>) -> Plan {
+    let n = cfg.cluster.total_devices();
     let sl = cfg.s_local();
     let mut opts = cfg.opts;
     if opts.num_comm_sms == 0 {
@@ -102,19 +170,19 @@ pub fn build(cfg: &RingAttnCfg, bufs: Option<&RingAttnBufs>) -> Plan {
         // at the TMA saturation point — at long sequences compute
         // dominates and 2 SMs suffice, at short sequences comm is the
         // bottleneck and we saturate the link.
-        let g = &cfg.node.gpu;
+        let g = &cfg.cluster.node.gpu;
         let comp_est = cfg.step_flops() / (g.tc_flops_for_sms(g.num_sms - 8) * cfg.flash_util);
         let required_rate = cfg.kv_shard_bytes() / (0.9 * comp_est);
         let tma_full = g.nvlink_bw * g.tma_peak_frac;
         let sms = (g.tma_sat_sms * required_rate / tma_full).ceil() as u32;
         opts.num_comm_sms = sms.clamp(2, 16);
     }
-    let mut l = Lcsc::new(cfg.node.clone(), opts);
+    let mut l = Lcsc::new_cluster(&cfg.cluster, opts);
     // a single communicator worker drives the whole partition's SMs (the
     // KV forward is one bulk transfer, not split across workers)
     let comm_sms = opts.num_comm_sms as f64;
     // attention step time on the compute partition
-    let comp_flops = cfg.node.gpu.tc_flops_for_sms(l.compute_sms()) * cfg.flash_util;
+    let comp_flops = cfg.cluster.node.gpu.tc_flops_for_sms(l.compute_sms()) * cfg.flash_util;
     // tasks: (b, h) pairs, split across compute workers; duration scales
     // by the worker's share.
     let bh = cfg.b * cfg.h;
@@ -155,20 +223,26 @@ pub fn build(cfg: &RingAttnCfg, bufs: Option<&RingAttnBufs>) -> Plan {
                     }
                 }
             }
-            // the timed bulk transfer (one flow for the whole shard)
+            // the timed bulk transfer (one flow for the whole shard); the
+            // node-boundary hop crosses the NIC instead of NVLink
+            let cross = !cfg.cluster.same_node(DeviceId(dev), DeviceId(next));
             l.plan.push(
                 cw,
                 Op::Transfer {
                     spec: TransferSpec {
                         mech: Mechanism::Tma,
-                        route: Route::P2p { src: DeviceId(dev), dst: DeviceId(next) },
+                        route: if cross {
+                            Route::Rdma { src: DeviceId(dev), dst: DeviceId(next) }
+                        } else {
+                            Route::P2p { src: DeviceId(dev), dst: DeviceId(next) }
+                        },
                         bytes: cfg.kv_shard_bytes(),
                         msg_bytes: (sl * cfg.d) as f64 * ELEM_BYTES as f64,
                         n_sms: comm_sms,
                     },
                     blocking: true,
                     done_sem: Some(arrived[next][step]),
-                    done_scope: SyncScope::InterDevice,
+                    done_scope: if cross { SyncScope::InterNode } else { SyncScope::InterDevice },
                     label: "kv_ring_fwd",
                     effect: None,
                 },
@@ -280,6 +354,88 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn functional_cluster_ring_matches_full_attention() {
+        // 2 nodes x 2 GPUs: the KV ring crosses the NIC twice per rotation
+        // and the numerics must still equal full attention.
+        let cluster = ClusterSpec::test_cluster(2, 2);
+        let n = cluster.total_devices();
+        let cfg = ClusterRingAttnCfg {
+            cluster,
+            b: 2,
+            h: 2,
+            s: 32,
+            d: 8,
+            opts: LcscOpts { num_comm_sms: 4, workers_per_device: 2, comm_workers_per_device: 1, pipeline_stages: 2 },
+            flash_util: 0.75,
+        };
+        let sl = cfg.s_local();
+        let mut pool = MemPool::new();
+        let bufs = RingAttnBufs::alloc_cluster(&mut pool, &cfg);
+        let mut k_global = vec![vec![vec![0.0f32; 0]; cfg.h]; cfg.b];
+        let mut v_global = vec![vec![vec![0.0f32; 0]; cfg.h]; cfg.b];
+        for bi in 0..cfg.b {
+            for hi in 0..cfg.h {
+                k_global[bi][hi] = seeded_vec((bi * 7 + hi) as u64 + 1, cfg.s * cfg.d);
+                v_global[bi][hi] = seeded_vec((bi * 7 + hi) as u64 + 100, cfg.s * cfg.d);
+            }
+        }
+        for dev in 0..n {
+            for bi in 0..cfg.b {
+                for hi in 0..cfg.h {
+                    let q = seeded_vec((dev * 31 + bi * 7 + hi) as u64 + 500, sl * cfg.d);
+                    let qb = pool.get_mut(bufs.q[dev]);
+                    let off = qb.shape.offset(bi, hi, 0, 0);
+                    qb.data[off..off + sl * cfg.d].copy_from_slice(&q);
+                    let kb = pool.get_mut(bufs.k[dev]);
+                    let koff = kb.shape.offset(bi, hi, dev * sl, 0);
+                    kb.data[koff..koff + sl * cfg.d]
+                        .copy_from_slice(&k_global[bi][hi][dev * sl * cfg.d..(dev + 1) * sl * cfg.d]);
+                    let vb = pool.get_mut(bufs.v[dev]);
+                    let voff = vb.shape.offset(bi, hi, dev * sl, 0);
+                    vb.data[voff..voff + sl * cfg.d]
+                        .copy_from_slice(&v_global[bi][hi][dev * sl * cfg.d..(dev + 1) * sl * cfg.d]);
+                }
+            }
+        }
+        let plan = build_cluster(&cfg, Some(&bufs));
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        for dev in 0..n {
+            for bi in 0..cfg.b {
+                for hi in 0..cfg.h {
+                    let qb = pool.get(bufs.q[dev]);
+                    let off = qb.shape.offset(bi, hi, 0, 0);
+                    let q = &qb.data[off..off + sl * cfg.d];
+                    let want = linalg::attention_ref(q, &k_global[bi][hi], &v_global[bi][hi], sl, cfg.s, cfg.d);
+                    let ob = pool.get(bufs.o[dev]);
+                    let ooff = ob.shape.offset(bi, hi, 0, 0);
+                    assert_allclose(&ob.data[ooff..ooff + sl * cfg.d], &want, 1e-4, 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn timed_cluster_ring_pays_the_nic() {
+        // the same total sequence over 2 nodes is slower per step than one
+        // node would be, because K of the hops are NIC-bound; but the ring
+        // must still complete and charge the NICs.
+        use crate::hw::topology::Port;
+        let cluster = ClusterSpec::hgx_h100_pod(2);
+        let cfg = ClusterRingAttnCfg::paper(cluster.clone(), 98304);
+        let plan = build_cluster(&cfg, None);
+        let r = crate::exec::TimedExec::on_cluster(cluster.clone()).run(&plan);
+        assert!(r.total_time.is_finite() && r.total_time > 0.0);
+        // boundary devices forwarded every rotation step over their NIC
+        let n = cluster.total_devices();
+        let boundary = DeviceId(cluster.devices_per_node() - 1); // last GPU of node 0
+        let nic = r.port_bytes[&Port::NicEgress(boundary)];
+        let want = cfg.kv_shard_bytes() * (n - 1) as f64;
+        assert!((nic - want).abs() / want < 1e-6, "{nic} vs {want}");
+        // non-boundary devices never touch their NIC
+        assert!(r.port_bytes.get(&Port::NicEgress(DeviceId(0))).is_none());
     }
 
     #[test]

@@ -21,13 +21,22 @@
 //! choices: point-wise communication uses **TMA** (async, single-thread,
 //! tile granularity), in-network acceleration uses **multimem register
 //! ops**, and nothing uses the copy engine on the device path (§3.1.2).
+//!
+//! The cluster layer adds locality-routed variants —
+//! [`primitives::store_async_routed`] / [`primitives::store_add_async_routed`]
+//! — that keep the same async tile-store API but pick NVLink P2P or
+//! GPUDirect RDMA by whether the destination shares the source's node
+//! (see [`crate::hw::ClusterSpec`]).
 
 pub mod primitives;
 pub mod sync;
 pub mod template;
 pub mod tuner;
 
-pub use primitives::{all_reduce, multicast_store_async, reduce, store_add_async, store_async, TileRef};
+pub use primitives::{
+    all_reduce, multicast_store_async, reduce, store_add_async, store_add_async_routed,
+    store_async, store_async_routed, TileRef,
+};
 pub use sync::{barrier, signal, signal_all, wait, Barrier};
 pub use template::{Lcsc, LcscOpts};
 pub use tuner::tune_comm_sms;

@@ -7,6 +7,7 @@
 //! (multimem) require warp participation and are *blocking* on the issuing
 //! (communicator) worker, matching the paper's API.
 
+use crate::hw::cluster::ClusterSpec;
 use crate::hw::spec::GpuSpec;
 use crate::hw::DeviceId;
 use crate::mem::pgl::ReduceOp;
@@ -64,6 +65,81 @@ pub fn store_async(
             done_scope: SyncScope::IntraSm,
             label: "store_async",
             effect: Some(Effect::CopyMat { src: src.view, dst: dst.view, reduce: None }),
+        },
+    );
+}
+
+/// Locality-routed `store_async`: NVLink P2P when `src` and `dst` share a
+/// node, GPUDirect RDMA across nodes. On a one-node cluster this emits
+/// exactly what [`store_async`] emits (the regression guarantee every
+/// single-node kernel relies on). RDMA keeps TMA's issue semantics — the
+/// proxy posts the write and the worker proceeds — but the completion
+/// signal pays the fabric's latency, and the rate comes from the NIC
+/// curve, not the NVLink mechanism curves.
+pub fn store_async_routed(
+    plan: &mut Plan,
+    cluster: &ClusterSpec,
+    w: usize,
+    src: TileRef,
+    dst: TileRef,
+    done: Option<SemId>,
+) {
+    if cluster.same_node(src.dev, dst.dev) {
+        store_async(plan, &cluster.node.gpu, w, src, dst, done);
+        return;
+    }
+    let bytes = src.bytes();
+    plan.push(
+        w,
+        Op::Transfer {
+            spec: TransferSpec {
+                mech: Mechanism::Tma,
+                route: Route::Rdma { src: src.dev, dst: dst.dev },
+                bytes,
+                msg_bytes: bytes, // one RDMA write per tile
+                n_sms: 1.0,
+            },
+            blocking: false,
+            done_sem: done,
+            done_scope: SyncScope::InterNode,
+            label: "store_async_rdma",
+            effect: Some(Effect::CopyMat { src: src.view, dst: dst.view, reduce: None }),
+        },
+    );
+}
+
+/// Locality-routed `store_add_async` (see [`store_async_routed`]). The
+/// cross-node path lands the payload with an RDMA write and performs the
+/// addition on the destination GPU, so it pays the same atomic
+/// destination-side inflation as the NVLink path.
+pub fn store_add_async_routed(
+    plan: &mut Plan,
+    cluster: &ClusterSpec,
+    w: usize,
+    src: TileRef,
+    dst: TileRef,
+    done: Option<SemId>,
+) {
+    if cluster.same_node(src.dev, dst.dev) {
+        store_add_async(plan, &cluster.node.gpu, w, src, dst, done);
+        return;
+    }
+    let bytes = src.bytes() * (1.0 + cluster.node.gpu.atomic_overhead_frac);
+    plan.push(
+        w,
+        Op::Transfer {
+            spec: TransferSpec {
+                mech: Mechanism::Tma,
+                route: Route::Rdma { src: src.dev, dst: dst.dev },
+                bytes,
+                msg_bytes: src.bytes(),
+                n_sms: 1.0,
+            },
+            blocking: false,
+            done_sem: done,
+            done_scope: SyncScope::InterNode,
+            label: "store_add_async_rdma",
+            effect: Some(Effect::CopyMat { src: src.view, dst: dst.view, reduce: Some(ReduceOp::Add) }),
         },
     );
 }
@@ -285,6 +361,53 @@ mod tests {
         let r = TimedExec::new(node).run(&plan);
         let expect = 512.0 * 1.15; // atomic inflation
         assert!((r.egress_bytes(0) - expect).abs() < 1.0, "{}", r.egress_bytes(0));
+    }
+
+    #[test]
+    fn routed_store_picks_nvlink_or_rdma_by_locality() {
+        use crate::hw::topology::Port;
+        let cluster = ClusterSpec::test_cluster(2, 2);
+        let mut pool = MemPool::new();
+        let a = pool.alloc_init(DeviceId(0), Shape4::mat(16, 16), seeded_vec(7, 256));
+        let local = pool.alloc(DeviceId(1), Shape4::mat(16, 16)); // same node
+        let remote = pool.alloc(DeviceId(2), Shape4::mat(16, 16)); // other node
+        let mut plan = Plan::new();
+        let done = plan.add_sem(0);
+        let w = plan.add_worker(DeviceId(0), Role::ComputeSm, "sm");
+        let src = TileRef::new(MatView::full2d(a, 16, 16), DeviceId(0));
+        store_async_routed(&mut plan, &cluster, w, src, TileRef::new(MatView::full2d(local, 16, 16), DeviceId(1)), Some(done));
+        store_async_routed(&mut plan, &cluster, w, src, TileRef::new(MatView::full2d(remote, 16, 16), DeviceId(2)), Some(done));
+        plan.push(w, Op::Wait { sem: done, value: 2 });
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        assert_eq!(pool.get(a).data, pool.get(local).data);
+        assert_eq!(pool.get(a).data, pool.get(remote).data);
+        let r = crate::exec::TimedExec::on_cluster(cluster).run(&plan);
+        // one tile over NVLink, one over the NIC
+        assert!((r.port_bytes[&Port::Egress(DeviceId(0))] - 512.0).abs() < 1.0);
+        assert!((r.port_bytes[&Port::NicEgress(DeviceId(0))] - 512.0).abs() < 1.0);
+        assert!((r.port_bytes[&Port::NicIngress(DeviceId(2))] - 512.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn routed_store_add_accumulates_across_nodes() {
+        let cluster = ClusterSpec::test_cluster(2, 2);
+        let mut pool = MemPool::new();
+        let a = pool.alloc_init(DeviceId(0), Shape4::mat(16, 16), vec![1.0; 256]);
+        let b = pool.alloc_init(DeviceId(3), Shape4::mat(16, 16), vec![2.0; 256]);
+        let mut plan = Plan::new();
+        let done = plan.add_sem(0);
+        let w = plan.add_worker(DeviceId(0), Role::ComputeSm, "sm");
+        store_add_async_routed(
+            &mut plan,
+            &cluster,
+            w,
+            TileRef::new(MatView::full2d(a, 16, 16), DeviceId(0)),
+            TileRef::new(MatView::full2d(b, 16, 16), DeviceId(3)),
+            Some(done),
+        );
+        plan.push(w, Op::Wait { sem: done, value: 1 });
+        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        assert!(pool.get(b).data.iter().all(|v| *v == 3.0));
     }
 
     #[test]

@@ -67,13 +67,24 @@ pub struct Lcsc {
 impl Lcsc {
     /// Create workers for every device per the SM partition.
     pub fn new(node: NodeSpec, opts: LcscOpts) -> Self {
+        let n_dev = node.num_devices;
+        Self::with_device_count(node, n_dev, opts)
+    }
+
+    /// Create workers for every device of a multi-node cluster (global
+    /// node-major device ids; the SM partition applies per device).
+    pub fn new_cluster(cluster: &crate::hw::ClusterSpec, opts: LcscOpts) -> Self {
+        Self::with_device_count(cluster.node.clone(), cluster.total_devices(), opts)
+    }
+
+    fn with_device_count(node: NodeSpec, n_dev: usize, opts: LcscOpts) -> Self {
         assert!(opts.num_comm_sms < node.gpu.num_sms, "must leave compute SMs");
         assert!(opts.workers_per_device >= 1);
         let mut plan = Plan::new();
         plan.launch_overhead = node.gpu.kernel_launch;
         let mut compute = vec![];
         let mut comm = vec![];
-        for d in 0..node.num_devices {
+        for d in 0..n_dev {
             let dev = DeviceId(d);
             let c: Vec<usize> = (0..opts.workers_per_device)
                 .map(|i| plan.add_worker(dev, Role::ComputeSm, format!("d{d}/sm{i}")))
@@ -181,6 +192,18 @@ mod tests {
             .map(|(_, t)| t.len())
             .fold((usize::MAX, 0), |(a, b), l| (a.min(l), b.max(l)));
         assert!(mx - mn <= 1);
+    }
+
+    #[test]
+    fn cluster_template_creates_workers_for_all_nodes() {
+        let cluster = crate::hw::ClusterSpec::test_cluster(2, 4);
+        let l = Lcsc::new_cluster(
+            &cluster,
+            LcscOpts { num_comm_sms: 8, workers_per_device: 2, comm_workers_per_device: 1, pipeline_stages: 2 },
+        );
+        assert_eq!(l.compute.len(), 8);
+        assert_eq!(l.plan.workers.len(), 8 * 3);
+        assert_eq!(l.plan.workers[3 * 7].device, DeviceId(7));
     }
 
     #[test]

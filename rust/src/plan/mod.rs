@@ -32,12 +32,15 @@ pub struct SemId(pub usize);
 pub struct StateId(pub usize);
 
 /// Which latency a signal pays before becoming visible (§3.1.3: 64 ns for
-/// an intra-SM mbarrier, 832 ns through HBM, ~µs over NVLink).
+/// an intra-SM mbarrier, 832 ns through HBM, ~µs over NVLink, a few µs
+/// across the inter-node RDMA fabric).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SyncScope {
     IntraSm,
     InterSm,
     InterDevice,
+    /// Cross-node flag write over the NIC (GPUDirect RDMA one-way).
+    InterNode,
 }
 
 /// The route a transfer takes, determining which ports it occupies.
@@ -53,6 +56,10 @@ pub enum Route {
     LocalHbm { dev: DeviceId },
     /// Host-initiated copy-engine transfer (occupies the CE serially).
     CopyEngineP2p { src: DeviceId, dst: DeviceId },
+    /// Cross-node GPUDirect RDMA write: occupies the endpoint NICs and is
+    /// rated by the NIC curve of [`crate::hw::ClusterSpec`], not by the
+    /// NVLink mechanism curves.
+    Rdma { src: DeviceId, dst: DeviceId },
 }
 
 /// A data transfer: `bytes` total moved in `msg_bytes` messages by `n_sms`

@@ -7,7 +7,8 @@ use crate::comm::nccl::{self, NcclModel, RingCtx};
 use crate::comm::nvshmem::{self, PeerApi};
 use crate::exec::TimedExec;
 use crate::hw::spec::{GpuSpec, NodeSpec};
-use crate::kernels::collectives::{self, Axis, PkCollCtx};
+use crate::hw::ClusterSpec;
+use crate::kernels::collectives::{self, Axis, ClusterCollCtx, PkCollCtx};
 use crate::kernels::gemm_rs::Schedule;
 use crate::kernels::moe::{MoeCfg, MoeSchedule, Routing};
 use crate::kernels::ring_attention::RingAttnCfg;
@@ -47,6 +48,7 @@ pub fn all_exhibits() -> Vec<Exhibit> {
         Exhibit { id: "fig17", caption: "Figure 17: 4-D (B,S,H,D) all-to-all vs NCCL", run: fig17 },
         Exhibit { id: "mu1", caption: "§3.1.3 sync microbenchmark (mbarrier vs HBM)", run: mu1 },
         Exhibit { id: "mu2", caption: "§3.1.4 NVSHMEM peer-access overheads", run: mu2 },
+        Exhibit { id: "sx1", caption: "Scale-out sweep: hierarchical collectives, 1→4 nodes, NIC 25–100 GB/s", run: sx1 },
     ]
 }
 
@@ -486,6 +488,63 @@ fn fig17(fast: bool) -> Table {
     t
 }
 
+// ------------------------------------------------------------ Scale-out
+/// The cluster-layer exhibit: two-level all-reduce / all-gather /
+/// reduce-scatter swept over node count and NIC bandwidth, at a fixed
+/// per-device payload (weak scaling). `agg_GBps` is the aggregate
+/// algorithm bandwidth `N·S / t`; `per_dev_GBps` is `S / t`. The 1-node
+/// rows run the single-node PK collectives (the NVLink-only baseline):
+/// crossing to 2 nodes drops *per-device* bandwidth — the NIC cliff —
+/// while *aggregate* bandwidth keeps growing with node count because the
+/// rail ring bounds per-NIC traffic by `2·S/P` regardless of `K`.
+fn sx1(fast: bool) -> Table {
+    let mut t = Table::new(
+        "Scale-out sweep: hierarchical collectives (BF16, 72 MiB per device)",
+        &["collective", "nodes", "nic_GBps", "time_ms", "agg_GBps", "per_dev_GBps"],
+    );
+    // rows must divide by P·K for every sweep point (P=8, K∈{1..4}):
+    // 4608 = 48·96 is divisible by lcm(8,16,24,32) = 96.
+    let (rows, cols) = (4608usize, 8192usize); // 36 Mi elem = 72 MiB bf16
+    let nodes: &[usize] = if fast { &[1, 2, 4] } else { &[1, 2, 3, 4] };
+    let nics: &[f64] = if fast { &[50e9] } else { &[25e9, 50e9, 100e9] };
+    fn run_ar(p: &mut Plan, c: &ClusterCollCtx) {
+        collectives::hier_all_reduce(p, c)
+    }
+    fn run_ag(p: &mut Plan, c: &ClusterCollCtx) {
+        collectives::hier_all_gather(p, c, Axis::Row)
+    }
+    fn run_rs(p: &mut Plan, c: &ClusterCollCtx) {
+        collectives::hier_reduce_scatter(p, c, Axis::Row)
+    }
+    type Builder = fn(&mut Plan, &ClusterCollCtx);
+    let builders: [(&str, Builder); 3] =
+        [("all_reduce", run_ar), ("all_gather", run_ag), ("reduce_scatter", run_rs)];
+    for (name, build) in builders {
+        for &k in nodes {
+            // the 1-node row is NVLink-only (NIC-independent): emit it once
+            let nic_points: &[f64] = if k == 1 { &nics[..1] } else { nics };
+            for &nic in nic_points {
+                let cluster = ClusterSpec::hgx_h100_pod(k).with_nic_bw(nic);
+                let n = cluster.total_devices();
+                let views = phantom_replicas(n, rows, cols);
+                let mut plan = Plan::new();
+                build(&mut plan, &ClusterCollCtx::new(&cluster, views));
+                let time = TimedExec::on_cluster(cluster).run(&plan).total_time;
+                let per_dev = (rows * cols * 2) as f64;
+                t.row(vec![
+                    name.into(),
+                    k.to_string(),
+                    if k == 1 { "nvlink-only".into() } else { format!("{:.0}", nic / 1e9) },
+                    ms(time),
+                    format!("{:.1}", per_dev * n as f64 / time / 1e9),
+                    format!("{:.1}", per_dev / time / 1e9),
+                ]);
+            }
+        }
+    }
+    t
+}
+
 // --------------------------------------------------------------- µ1, µ2
 fn mu1(_fast: bool) -> Table {
     let g = GpuSpec::h100();
@@ -519,10 +578,45 @@ mod tests {
     #[test]
     fn registry_complete_and_runnable_fast() {
         let ex = all_exhibits();
-        assert_eq!(ex.len(), 21, "17 figures/tables + 2 micro + tab1/tab2 included");
+        assert_eq!(ex.len(), 22, "17 figures/tables + 2 micro + tab1/tab2 + scale-out");
         for e in &ex {
             let t = (e.run)(true);
             assert!(!t.rows.is_empty(), "{} produced no rows", e.id);
+        }
+    }
+
+    #[test]
+    fn sx1_shows_the_nic_cliff_and_scaleout_recovery() {
+        // full (non-fast) mode so the checks cover every NIC level; the
+        // monotonicity claim is per NIC value, never across NIC values.
+        let t = sx1(false);
+        for name in ["all_reduce", "all_gather", "reduce_scatter"] {
+            let one = t
+                .rows
+                .iter()
+                .find(|r| r[0] == name && r[1] == "1")
+                .expect("1-node row")[5]
+                .parse::<f64>()
+                .unwrap();
+            for nic in ["25", "50", "100"] {
+                // (nodes, agg, per_dev) at this NIC level
+                let mut series: Vec<(f64, f64, f64)> = vec![];
+                for r in &t.rows {
+                    if r[0] == name && r[2] == nic {
+                        series.push((r[1].parse().unwrap(), r[4].parse().unwrap(), r[5].parse().unwrap()));
+                    }
+                }
+                assert!(series.len() >= 3, "{name}@{nic}: 2->4 nodes covered");
+                // the NIC cliff: per-device bandwidth drops when the first
+                // cross-node hop appears
+                let two = series.iter().find(|(n, _, _)| *n == 2.0).unwrap().2;
+                assert!(one > two, "{name}@{nic}: per-device cliff ({one} vs {two} GB/s)");
+                // scale-out recovery: aggregate bandwidth is monotone
+                // non-decreasing in node count at a fixed NIC bandwidth
+                for w in series.windows(2) {
+                    assert!(w[1].1 >= w[0].1 * 0.999, "{name}@{nic}: scale-out monotone: {series:?}");
+                }
+            }
         }
     }
 

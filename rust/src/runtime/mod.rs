@@ -13,15 +13,24 @@ pub mod registry;
 
 pub use registry::{ArtifactMeta, Manifest};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::anyhow;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 /// Lazily-compiled PJRT executables keyed by artifact name.
+///
+/// The `xla` bindings are vendored, not on crates.io, so the compiled
+/// backend only exists behind the `pjrt` feature; without it the manifest
+/// still loads (so availability checks work) and `execute` returns a clear
+/// error.
 pub struct Runtime {
     dir: PathBuf,
     manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     client: Option<xla::PjRtClient>,
+    #[cfg(feature = "pjrt")]
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
     /// Execution counters (name -> calls), used by the coordinator metrics.
     pub call_counts: HashMap<String, u64>,
@@ -33,7 +42,15 @@ impl Runtime {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(dir.join("manifest.json"))
             .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        Ok(Runtime { dir, manifest, client: None, executables: HashMap::new(), call_counts: HashMap::new() })
+        Ok(Runtime {
+            dir,
+            manifest,
+            #[cfg(feature = "pjrt")]
+            client: None,
+            #[cfg(feature = "pjrt")]
+            executables: HashMap::new(),
+            call_counts: HashMap::new(),
+        })
     }
 
     /// The default artifacts directory: `$PK_ARTIFACTS` or `./artifacts`.
@@ -45,6 +62,7 @@ impl Runtime {
         &self.manifest
     }
 
+    #[cfg(feature = "pjrt")]
     fn client(&mut self) -> Result<&xla::PjRtClient> {
         if self.client.is_none() {
             self.client = Some(xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?);
@@ -53,6 +71,7 @@ impl Runtime {
     }
 
     /// Compile (once) and return the executable for `name`.
+    #[cfg(feature = "pjrt")]
     fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
         if !self.executables.contains_key(name) {
             let meta = self
@@ -73,8 +92,16 @@ impl Runtime {
         Ok(&self.executables[name])
     }
 
+    /// Execute artifact `name` — built without the `pjrt` feature the
+    /// vendored xla backend is absent, so this always errors.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute(&mut self, name: &str, _inputs: &[(Vec<f32>, Vec<usize>)]) -> Result<Vec<Vec<f32>>> {
+        bail!("artifact '{name}': built without the `pjrt` feature (vendored xla-rs required)")
+    }
+
     /// Execute artifact `name` on row-major f32 inputs with the given dims.
     /// Returns one flat vector per output.
+    #[cfg(feature = "pjrt")]
     pub fn execute(&mut self, name: &str, inputs: &[(Vec<f32>, Vec<usize>)]) -> Result<Vec<Vec<f32>>> {
         let meta = self
             .manifest

@@ -304,6 +304,8 @@ fn port_order(a: &Port, b: &Port) -> std::cmp::Ordering {
             Port::SwitchReduce(d) => (3, d.0),
             Port::Hbm(d) => (4, d.0),
             Port::CopyEngine(d) => (5, d.0),
+            Port::NicEgress(d) => (6, d.0),
+            Port::NicIngress(d) => (7, d.0),
         }
     }
     key(a).cmp(&key(b))

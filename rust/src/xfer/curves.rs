@@ -50,6 +50,17 @@ pub fn multimem_rate(spec: &GpuSpec, msg_bytes: f64, n_sms: f64) -> f64 {
     reg_rate(spec, msg_bytes, n_sms)
 }
 
+/// GPUDirect RDMA rate (bytes/s) for cross-node transfers chopped into
+/// `msg_bytes` writes. Shape mirrors the intra-node curves: a peak
+/// fraction of the NIC line rate times a message-size ramp (verbs posting
+/// overhead makes small writes inefficient; ~64 KB messages approach line
+/// rate). Driven by the proxy, so — like the copy engine — it is
+/// independent of issuing-SM count; unlike the copy engine its ramp knee
+/// sits at tens of KB, not hundreds of MB.
+pub fn rdma_rate(cluster: &crate::hw::ClusterSpec, msg_bytes: f64) -> f64 {
+    cluster.nic_bw * cluster.nic_peak_frac * msg_eff(cluster.rdma_half_msg, msg_bytes)
+}
+
 /// Dispatch by mechanism.
 pub fn rate(spec: &GpuSpec, mech: Mechanism, msg_bytes: f64, n_sms: f64) -> f64 {
     match mech {
@@ -178,5 +189,30 @@ mod tests {
     fn flow_latency_ce_pays_launch() {
         let g = GpuSpec::h100();
         assert!(flow_latency(&g, Mechanism::CopyEngine) > flow_latency(&g, Mechanism::Tma));
+    }
+
+    #[test]
+    fn rdma_curve_bounded_and_monotone() {
+        let c = crate::hw::ClusterSpec::hgx_h100_pod(2);
+        let mut last = 0.0;
+        for msg in [512.0, 4096.0, 65536.0, 1e6, 64e6] {
+            let r = rdma_rate(&c, msg);
+            assert!(r > last, "monotone in message size");
+            assert!(r < c.nic_bw, "never exceeds the NIC line rate");
+            last = r;
+        }
+        // large messages approach the peak fraction of line rate
+        assert!(rdma_rate(&c, 64e6) > 0.99 * c.nic_bw * c.nic_peak_frac);
+        // fine-grained RDMA collapses like fine-grained CE traffic
+        assert!(rdma_rate(&c, 256.0) < 0.05 * c.nic_bw);
+    }
+
+    #[test]
+    fn rdma_far_below_nvlink() {
+        // the cross-node cliff the scale-out exhibit shows: even a 100 GB/s
+        // NIC delivers well under half of one NVLink port
+        let c = crate::hw::ClusterSpec::hgx_h100_pod(2).with_nic_bw(100e9);
+        let nvlink = tma_rate(&c.node.gpu, 1e6, 132.0);
+        assert!(rdma_rate(&c, 1e6) < 0.4 * nvlink);
     }
 }

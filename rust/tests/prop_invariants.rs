@@ -6,7 +6,7 @@
 use pk::exec::{FunctionalExec, TimedExec};
 use pk::hw::spec::NodeSpec;
 use pk::hw::topology::Port;
-use pk::hw::DeviceId;
+use pk::hw::{ClusterSpec, DeviceId};
 use pk::kernels::collectives::{pk_all_gather, pk_all_reduce, pk_reduce_scatter, Axis, PkCollCtx};
 use pk::kernels::moe::{MoeCfg, Routing};
 use pk::mem::tile::Shape4;
@@ -312,6 +312,180 @@ fn prop_timed_byte_conservation() {
         }
         if !(r.total_time.is_finite() && r.total_time > 0.0) {
             return Err("non-finite time".into());
+        }
+        Ok(())
+    });
+}
+
+/// NIC byte conservation: transfers routed by locality charge exactly
+/// their bytes to the endpoint NIC ports and nothing to NVLink ports (and
+/// vice versa for intra-node transfers).
+#[test]
+fn prop_nic_byte_conservation() {
+    run_prop("nic_byte_conservation", 25, |rng| {
+        let k = rng.usize_in(2, 5);
+        let p = rng.usize_in(2, 5);
+        let cluster = ClusterSpec::test_cluster(k, p);
+        let n = cluster.total_devices();
+        let mut plan = Plan::new();
+        let mut nic_egress = vec![0.0f64; n];
+        let mut nic_ingress = vec![0.0f64; n];
+        let mut nvl_egress = vec![0.0f64; n];
+        for g in 0..n {
+            let w = plan.add_worker(DeviceId(g), Role::CommSm, format!("w{g}"));
+            for _ in 0..rng.usize_in(1, 5) {
+                let mut dst = rng.usize_in(0, n);
+                if dst == g {
+                    dst = (dst + 1) % n;
+                }
+                let bytes = (rng.usize_in(1, 64) * 1024) as f64;
+                let cross = !cluster.same_node(DeviceId(g), DeviceId(dst));
+                let route = if cross {
+                    nic_egress[g] += bytes;
+                    nic_ingress[dst] += bytes;
+                    pk::plan::Route::Rdma { src: DeviceId(g), dst: DeviceId(dst) }
+                } else {
+                    nvl_egress[g] += bytes;
+                    pk::plan::Route::P2p { src: DeviceId(g), dst: DeviceId(dst) }
+                };
+                plan.push(
+                    w,
+                    Op::Transfer {
+                        spec: TransferSpec { mech: Mechanism::Tma, route, bytes, msg_bytes: 8192.0, n_sms: 4.0 },
+                        blocking: true,
+                        done_sem: None,
+                        done_scope: SyncScope::IntraSm,
+                        label: "prop_routed",
+                        effect: None,
+                    },
+                );
+            }
+        }
+        let r = TimedExec::on_cluster(cluster).run(&plan);
+        for g in 0..n {
+            let ne = r.port_bytes.get(&Port::NicEgress(DeviceId(g))).copied().unwrap_or(0.0);
+            let ni = r.port_bytes.get(&Port::NicIngress(DeviceId(g))).copied().unwrap_or(0.0);
+            let ve = r.port_bytes.get(&Port::Egress(DeviceId(g))).copied().unwrap_or(0.0);
+            if (ne - nic_egress[g]).abs() > 1.0 || (ni - nic_ingress[g]).abs() > 1.0 {
+                return Err(format!("dev {g}: NIC {ne}/{ni} vs {}/{}", nic_egress[g], nic_ingress[g]));
+            }
+            if (ve - nvl_egress[g]).abs() > 1.0 {
+                return Err(format!("dev {g}: NVLink egress {ve} vs {}", nvl_egress[g]));
+            }
+        }
+        if !(r.total_time.is_finite() && r.total_time > 0.0) {
+            return Err("non-finite time".into());
+        }
+        Ok(())
+    });
+}
+
+/// Max-min fairness extends to NIC ports: mixed NVLink + NIC flows stay
+/// feasible, cap-respecting, and bottlenecked (the new Port variants go
+/// through the solver's class canonicalisation).
+#[test]
+fn prop_nic_fair_share() {
+    run_prop("nic_fair_share", 100, |rng| {
+        let n_dev = rng.usize_in(4, 17);
+        let mut caps = HashMap::new();
+        for d in 0..n_dev {
+            caps.insert(Port::Egress(DeviceId(d)), 200.0 + 300.0 * rng.f64());
+            caps.insert(Port::Ingress(DeviceId(d)), 200.0 + 300.0 * rng.f64());
+            caps.insert(Port::NicEgress(DeviceId(d)), 20.0 + 80.0 * rng.f64());
+            caps.insert(Port::NicIngress(DeviceId(d)), 20.0 + 80.0 * rng.f64());
+        }
+        let flows: Vec<FlowSpec> = (0..rng.usize_in(2, 40))
+            .map(|_| {
+                let src = rng.usize_in(0, n_dev);
+                let mut dst = rng.usize_in(0, n_dev);
+                if dst == src {
+                    dst = (dst + 1) % n_dev;
+                }
+                let ports = if rng.f64() < 0.5 {
+                    vec![Port::NicEgress(DeviceId(src)), Port::NicIngress(DeviceId(dst))]
+                } else {
+                    vec![Port::Egress(DeviceId(src)), Port::Ingress(DeviceId(dst))]
+                };
+                FlowSpec { active: true, ports, cap: 5.0 + 500.0 * rng.f64() }
+            })
+            .collect();
+        let rates = compute_rates(&flows, &caps);
+        let mut port_load: HashMap<Port, f64> = HashMap::new();
+        for (f, r) in flows.iter().zip(&rates) {
+            if *r > f.cap * (1.0 + 1e-9) || *r < 0.0 {
+                return Err(format!("rate {r} outside [0, cap {}]", f.cap));
+            }
+            for &p in &f.ports {
+                *port_load.entry(p).or_insert(0.0) += r;
+            }
+        }
+        for (p, load) in &port_load {
+            if *load > caps[p] * (1.0 + 1e-6) {
+                return Err(format!("port {p:?} overloaded: {load} > {}", caps[p]));
+            }
+        }
+        for (f, r) in flows.iter().zip(&rates) {
+            let capped = *r >= f.cap * (1.0 - 1e-9);
+            let saturated = f.ports.iter().any(|p| port_load[p] >= caps[p] * (1.0 - 1e-6));
+            if !capped && !saturated {
+                return Err(format!("flow neither capped nor on a saturated port (rate {r})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Timed RDMA throughput never exceeds the NIC bound: any number of
+/// concurrent cross-node flows through one NIC deliver at most `nic_bw`
+/// aggregate, and a single flow at most the RDMA curve's rate.
+#[test]
+fn prop_rdma_throughput_below_nic_bound() {
+    run_prop("rdma_nic_bound", 20, |rng| {
+        let k = rng.usize_in(2, 4);
+        let p = rng.usize_in(2, 5);
+        let nic_bw = (10.0 + 90.0 * rng.f64()) * 1e9;
+        let cluster = ClusterSpec::test_cluster(k, p).with_nic_bw(nic_bw);
+        let n = cluster.total_devices();
+        // all senders target one NIC (device 0), from other nodes
+        let n_senders = rng.usize_in(1, 6);
+        let bytes = (rng.usize_in(8, 64) * 1024 * 1024) as f64;
+        let msg = (rng.usize_in(4, 512) * 1024) as f64;
+        let mut plan = Plan::new();
+        for i in 0..n_senders {
+            // any device on a node other than node 0
+            let src = p + (i % (n - p));
+            let w = plan.add_worker(DeviceId(src), Role::CommSm, format!("w{i}"));
+            plan.push(
+                w,
+                Op::Transfer {
+                    spec: TransferSpec {
+                        mech: Mechanism::Tma,
+                        route: pk::plan::Route::Rdma { src: DeviceId(src), dst: DeviceId(0) },
+                        bytes,
+                        msg_bytes: msg,
+                        n_sms: 1.0,
+                    },
+                    blocking: true,
+                    done_sem: None,
+                    done_scope: SyncScope::IntraSm,
+                    label: "rdma_flood",
+                    effect: None,
+                },
+            );
+        }
+        let r = TimedExec::on_cluster(cluster.clone()).run(&plan);
+        let delivered = r.port_bytes[&Port::NicIngress(DeviceId(0))];
+        let rate = delivered / r.total_time;
+        if rate > nic_bw * (1.0 + 1e-6) {
+            return Err(format!("aggregate {rate} exceeds NIC {nic_bw}"));
+        }
+        if n_senders == 1 {
+            let curve = pk::xfer::curves::rdma_rate(&cluster, msg);
+            // one flow can't beat its own curve (plus the flow-start latency
+            // slack, which only slows it down)
+            if rate > curve * (1.0 + 1e-6) {
+                return Err(format!("single flow {rate} exceeds curve {curve}"));
+            }
         }
         Ok(())
     });
