@@ -307,6 +307,33 @@ pub fn pk_all_to_all_4d(
     }
 }
 
+/// Cluster-safe entry point for the 4-D all-to-all. [`pk_all_to_all_4d`]
+/// emits NVLink P2P flows between every device pair, which is only valid
+/// within one NVSwitch node — handed a multi-node device set it would
+/// silently rate cross-node tiles at NVLink speed and any Ulysses cluster
+/// sweep built on it would be quietly wrong. A one-node cluster delegates
+/// to the single-node builder unchanged; a multi-node cluster fails fast
+/// with this explanation (the two-level intra-node a2a + per-rail
+/// exchange variant is a ROADMAP follow-on).
+pub fn pk_all_to_all_4d_cluster(
+    plan: &mut Plan,
+    cluster: &ClusterSpec,
+    cfg: &A2aCfg,
+    srcs: Option<&[crate::mem::BufId]>,
+    dsts: Option<&[crate::mem::BufId]>,
+    n_sms: f64,
+) {
+    assert!(
+        cluster.num_nodes == 1,
+        "pk_all_to_all_4d assumes a single NVSwitch node: a {}-node cluster would rate \
+         cross-node tiles as NVLink P2P and produce silently-wrong timings; use the \
+         hierarchical collectives, or the two-level all-to-all once it lands (ROADMAP \
+         follow-on 'Multi-node Ulysses')",
+        cluster.num_nodes
+    );
+    pk_all_to_all_4d(plan, &cluster.node, cfg, srcs, dsts, n_sms);
+}
+
 // ====================================================================
 // Hierarchical (two-level) cluster collectives
 // ====================================================================
@@ -526,8 +553,21 @@ pub fn hier_all_reduce(plan: &mut Plan, ctx: &ClusterCollCtx) {
 /// `N = K·P`, along `axis`); an RDMA ring along each rail circulates the
 /// rail's shards across nodes while each device multicasts every shard it
 /// holds to its node peers. NIC traffic `(K-1)/K · S/P` per device;
-/// NVLink multicast does the ×P amplification inside the node.
+/// NVLink multicast does the ×P amplification inside the node. The
+/// node-local re-broadcast runs on a second per-device worker so it
+/// overlaps the remaining RDMA hops (see [`hier_all_gather_opts`]).
 pub fn hier_all_gather(plan: &mut Plan, ctx: &ClusterCollCtx, axis: Axis) {
+    hier_all_gather_opts(plan, ctx, axis, true)
+}
+
+/// [`hier_all_gather`] with an explicit tail schedule. `overlap_tail ==
+/// false` reproduces the original single-worker schedule, where the
+/// node-local re-broadcast of ring-received shards queues behind the
+/// communicator's sends (kept as an ablation and for the regression test
+/// pinning that the second worker actually overlaps); `true` (the
+/// default) runs the own-shard multicast and the re-broadcast tail on a
+/// dedicated per-device worker, concurrent with the rail ring.
+pub fn hier_all_gather_opts(plan: &mut Plan, ctx: &ClusterCollCtx, axis: Axis, overlap_tail: bool) {
     let (p_cnt, k_cnt) = (ctx.p(), ctx.k());
     if k_cnt == 1 {
         return pk_all_gather(plan, &ctx.pk_ctx(), axis);
@@ -541,13 +581,19 @@ pub fn hier_all_gather(plan: &mut Plan, ctx: &ClusterCollCtx, axis: Axis) {
         let (kk, pp) = (g / p_cnt, g % p_cnt);
         let me = DeviceId(g);
         let w = plan.add_worker(me, Role::CommSm, format!("hier_ag/d{g}"));
+        // second communicator worker for the node-local fan-out
+        let w_mc = if overlap_tail {
+            plan.add_worker(me, Role::CommSm, format!("hier_ag_mc/d{g}"))
+        } else {
+            w
+        };
         let node_base = kk * p_cnt;
         let shard_view = |dev: usize, shard: usize| slice_of(&ctx.replicas[dev], shard, n, axis);
-        let multicast = |plan: &mut Plan, shard: usize| {
+        let multicast = |plan: &mut Plan, to_w: usize, shard: usize| {
             let dsts: Vec<MatView> =
                 (0..p_cnt).filter(|&q| q != pp).map(|q| shard_view(node_base + q, shard)).collect();
             plan.push(
-                w,
+                to_w,
                 Op::Transfer {
                     spec: TransferSpec {
                         mech: Mechanism::Tma,
@@ -564,8 +610,9 @@ pub fn hier_all_gather(plan: &mut Plan, ctx: &ClusterCollCtx, axis: Axis) {
                 },
             );
         };
-        // my own shard goes to node peers immediately
-        multicast(&mut *plan, kk * p_cnt + pp);
+        // my own shard goes to node peers immediately (on the fan-out
+        // worker, so the ring's first hop is not queued behind it)
+        multicast(&mut *plan, w_mc, kk * p_cnt + pp);
         // rail ring: circulate the rail's shards across nodes
         let next = ((kk + 1) % k_cnt) * p_cnt + pp;
         for s in 0..k_cnt - 1 {
@@ -575,15 +622,14 @@ pub fn hier_all_gather(plan: &mut Plan, ctx: &ClusterCollCtx, axis: Axis) {
             let shard = ((kk + k_cnt - s) % k_cnt) * p_cnt + pp;
             rail_hop(plan, w, me, DeviceId(next), shard_view(g, shard), shard_view(next, shard), shard_bytes, None, step_done[next][s]);
         }
-        // forward every received shard to node peers once the ring is
-        // done (the single communicator worker serializes these after its
-        // sends — deliberately, so the mc tail never delays downstream
-        // ring hops; overlapping the tail needs a second worker, noted as
-        // a ROADMAP follow-on)
+        // forward every received shard to node peers as it lands: on the
+        // dedicated worker this overlaps the remaining RDMA hops; on the
+        // single-worker ablation it serializes after the sends (the PR-1
+        // schedule this fix replaces)
         for s in 0..k_cnt - 1 {
-            plan.push(w, Op::Wait { sem: step_done[g][s], value: 1 });
+            plan.push(w_mc, Op::Wait { sem: step_done[g][s], value: 1 });
             let shard = ((kk + k_cnt - 1 - s) % k_cnt) * p_cnt + pp;
-            multicast(&mut *plan, shard);
+            multicast(&mut *plan, w_mc, shard);
         }
     }
 }
@@ -1013,5 +1059,84 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn hier_ag_second_worker_overlaps_multicast_tail() {
+        // regression for the serialized-tail follow-on: with the dedicated
+        // re-broadcast worker, the node-local multicasts of ring-received
+        // shards overlap the remaining RDMA hops, so the two-worker
+        // schedule must be strictly faster than the single-worker one
+        // (K >= 3 so at least one re-broadcast has hops left to hide).
+        let cluster = ClusterSpec::hgx_h100_pod(4);
+        let n = cluster.total_devices();
+        let (rows, cols) = (n * 64, 512);
+        let views = crate::baselines::phantom_replicas(n, rows, cols);
+        let mut overlap = Plan::new();
+        hier_all_gather_opts(&mut overlap, &ClusterCollCtx::new(&cluster, views.clone()), Axis::Row, true);
+        let mut serial = Plan::new();
+        hier_all_gather_opts(&mut serial, &ClusterCollCtx::new(&cluster, views), Axis::Row, false);
+        strip_effects(&mut overlap);
+        strip_effects(&mut serial);
+        let t_overlap = TimedExec::on_cluster(cluster.clone()).run(&overlap).total_time;
+        let t_serial = TimedExec::on_cluster(cluster).run(&serial).total_time;
+        assert!(
+            t_overlap < t_serial * 0.999,
+            "re-broadcast must overlap the ring: {t_overlap} vs {t_serial}"
+        );
+    }
+
+    #[test]
+    fn hier_ag_overlap_and_serial_schedules_agree_functionally() {
+        // the second worker changes the timing, never the data
+        let (k, p) = (3usize, 2usize);
+        let n = k * p;
+        let (rows, cols) = (n * 2, 4);
+        let cluster = ClusterSpec::test_cluster(k, p);
+        let global = seeded_vec(4242, rows * cols);
+        let mut results = vec![];
+        for overlap in [true, false] {
+            let mut pool = MemPool::new();
+            let mut bufs = vec![];
+            for d in 0..n {
+                let cr = rows / n;
+                let mut data = vec![0.0f32; rows * cols];
+                data[d * cr * cols..(d + 1) * cr * cols]
+                    .copy_from_slice(&global[d * cr * cols..(d + 1) * cr * cols]);
+                bufs.push(pool.alloc_init(DeviceId(d), Shape4::mat(rows, cols), data));
+            }
+            let ctx = ClusterCollCtx::new(&cluster, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
+            let mut plan = Plan::new();
+            hier_all_gather_opts(&mut plan, &ctx, Axis::Row, overlap);
+            FunctionalExec::new(&mut pool).run(&plan).unwrap();
+            for &b in &bufs {
+                assert_eq!(pool.get(b).data, global, "all-gather reconstructs (overlap={overlap})");
+            }
+            results.push(pool.get(bufs[0]).data.clone());
+        }
+        assert_eq!(results[0], results[1]);
+    }
+
+    #[test]
+    fn a2a_cluster_single_node_delegates() {
+        let cluster = ClusterSpec::test_cluster(1, 4);
+        let cfg = A2aCfg { b_dim: 1, s_local: 2, h: 8, d_head: 4 };
+        let mut a = Plan::new();
+        pk_all_to_all_4d_cluster(&mut a, &cluster, &cfg, None, None, 8.0);
+        let mut b = Plan::new();
+        pk_all_to_all_4d(&mut b, &cluster.node, &cfg, None, None, 8.0);
+        assert_eq!(a.total_ops(), b.total_ops());
+        assert_eq!(a.workers.len(), b.workers.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "single NVSwitch node")]
+    fn a2a_cluster_multi_node_fails_fast() {
+        // the silent-wrong-timings bug: before the guard, a multi-node
+        // device set would be rated entirely as NVLink P2P
+        let cluster = ClusterSpec::test_cluster(2, 2);
+        let cfg = A2aCfg { b_dim: 1, s_local: 2, h: 8, d_head: 4 };
+        let mut plan = Plan::new();
+        pk_all_to_all_4d_cluster(&mut plan, &cluster, &cfg, None, None, 8.0);
     }
 }

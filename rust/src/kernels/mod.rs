@@ -41,6 +41,16 @@
 //!   GPUs; only the `K` node-boundary hops pay the NIC.
 //! * [`gemm_rs::build_cluster`] — cross-node GEMM+RS with locality-routed
 //!   scatter-adds (NVLink in-node, GPUDirect RDMA across).
+//! * [`moe::build_cluster`] — expert-parallel dispatch across nodes with
+//!   **per-rail aggregation**: tokens for the same remote node coalesce
+//!   into one RDMA flow per (source, node) pair, a rail-peer forwarder
+//!   fans them out over NVLink, and experts still start their grouped
+//!   GEMM as soon as their tokens land. The cluster tuner
+//!   ([`crate::pk::tuner::tune_comm_sms_rdma_chunk`]) co-tunes the SM
+//!   partition with the coalesced RDMA write size.
+//! * [`collectives::pk_all_to_all_4d_cluster`] — guarded entry point: the
+//!   4-D all-to-all is single-node; multi-node clusters fail fast instead
+//!   of producing silently-NVLink-rated timings.
 
 pub mod ag_gemm;
 pub mod collectives;

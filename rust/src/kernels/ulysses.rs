@@ -7,6 +7,13 @@
 //! the baseline reshapes before and after each exchange (Appendix B);
 //! PK's tile-granular all-to-all runs directly on the `(B, S, H, D)`
 //! layout. The YunChang baseline is in [`crate::baselines::yunchang`].
+//!
+//! This layer is **single-node**: the all-to-all assumes every device pair
+//! is NVLink-reachable. Cluster callers must go through
+//! [`crate::kernels::collectives::pk_all_to_all_4d_cluster`], which
+//! delegates on one node and fails fast on several (a silently-NVLink-rated
+//! cross-node exchange would corrupt any Ulysses scale-out sweep); the
+//! two-level variant is a ROADMAP follow-on.
 
 use super::collectives::{pk_all_to_all_4d, A2aCfg};
 use crate::hw::spec::NodeSpec;

@@ -39,4 +39,7 @@ pub use primitives::{
 };
 pub use sync::{barrier, signal, signal_all, wait, Barrier};
 pub use template::{Lcsc, LcscOpts};
-pub use tuner::tune_comm_sms;
+pub use tuner::{
+    tune_comm_sms, tune_comm_sms_cluster, tune_comm_sms_rdma_chunk, tune_comm_sms_with,
+    ClusterTuneResult, TuneResult,
+};

@@ -1,4 +1,5 @@
-//! Runtime SM-partition auto-tuner (§3.1.3 "SM partitioning", Figure 5).
+//! Runtime SM-partition auto-tuner (§3.1.3 "SM partitioning", Figure 5),
+//! single-node and cluster-aware.
 //!
 //! Inter-SM overlap trades compute SMs for communication SMs; the optimum
 //! depends on problem size (larger workloads favour more compute SMs). PK
@@ -6,8 +7,20 @@
 //! runtime through a unified program template" — this module is that
 //! search: it times candidate partitions with the timed executor and picks
 //! the fastest.
+//!
+//! The sweep is generic over the executor ([`tune_comm_sms_with`]): a plan
+//! built for a multi-node cluster must be timed by
+//! [`TimedExec::on_cluster`], or its RDMA flows would be rated against the
+//! wrong fabric. [`tune_comm_sms`] (single node) and
+//! [`tune_comm_sms_cluster`] are the two entry points; when the binding
+//! resource moves from NVLink to the NIC, the SM partition alone is no
+//! longer the whole story, so [`tune_comm_sms_rdma_chunk`] co-tunes the
+//! communicator partition with the coalesced RDMA write size against
+//! [`ClusterSpec::nic_bw`] (more, smaller chunks = finer overlap waves but
+//! less efficient NIC messages).
 
 use crate::exec::TimedExec;
+use crate::hw::cluster::ClusterSpec;
 use crate::hw::spec::NodeSpec;
 use crate::plan::Plan;
 
@@ -22,15 +35,26 @@ pub struct TuneResult {
     pub sweep: Vec<(u32, f64)>,
 }
 
-/// Sweep `candidates` communicator-SM counts, building the kernel plan for
-/// each with `build`, and return the fastest partition.
-pub fn tune_comm_sms(
-    node: &NodeSpec,
+/// Result of a joint (communicator SMs × RDMA chunk) sweep.
+#[derive(Clone, Debug)]
+pub struct ClusterTuneResult {
+    pub best_comm_sms: u32,
+    pub best_rdma_chunk: f64,
+    pub best_time: f64,
+    /// Full sweep: `(num_comm_sms, rdma_chunk, time)`.
+    pub sweep: Vec<(u32, f64, f64)>,
+}
+
+/// Sweep `candidates` communicator-SM counts on an explicit executor —
+/// the generic core both entry points share. Pass
+/// [`TimedExec::on_cluster`] for cluster plans; timing them against a
+/// single-node executor silently mis-rates every RDMA flow.
+pub fn tune_comm_sms_with(
+    exec: &TimedExec,
     candidates: &[u32],
     mut build: impl FnMut(u32) -> Plan,
 ) -> TuneResult {
     assert!(!candidates.is_empty());
-    let exec = TimedExec::new(node.clone());
     let mut sweep = Vec::with_capacity(candidates.len());
     for &c in candidates {
         let plan = build(c);
@@ -42,10 +66,60 @@ pub fn tune_comm_sms(
     TuneResult { best_comm_sms, best_time, sweep }
 }
 
+/// Sweep `candidates` communicator-SM counts, building the kernel plan for
+/// each with `build`, and return the fastest partition. Single-node: the
+/// plan is timed on `node` (delegates to [`tune_comm_sms_with`]; the
+/// single-node path is unchanged by the cluster generalization).
+pub fn tune_comm_sms(
+    node: &NodeSpec,
+    candidates: &[u32],
+    build: impl FnMut(u32) -> Plan,
+) -> TuneResult {
+    tune_comm_sms_with(&TimedExec::new(node.clone()), candidates, build)
+}
+
+/// [`tune_comm_sms`] for cluster plans: candidates are timed with
+/// [`TimedExec::on_cluster`], so RDMA flows are rated against the
+/// cluster's NIC curve instead of silently against NVLink.
+pub fn tune_comm_sms_cluster(
+    cluster: &ClusterSpec,
+    candidates: &[u32],
+    build: impl FnMut(u32) -> Plan,
+) -> TuneResult {
+    tune_comm_sms_with(&TimedExec::on_cluster(cluster.clone()), candidates, build)
+}
+
+/// Cluster co-tune: sweep the (communicator SMs × coalesced RDMA chunk)
+/// grid and return the joint optimum. The chunk axis only matters when the
+/// NIC is the binding resource — which is exactly when re-tuning the SM
+/// partition alone is insufficient (resource-aware overlap).
+pub fn tune_comm_sms_rdma_chunk(
+    cluster: &ClusterSpec,
+    sm_candidates: &[u32],
+    chunk_candidates: &[f64],
+    mut build: impl FnMut(u32, f64) -> Plan,
+) -> ClusterTuneResult {
+    assert!(!sm_candidates.is_empty() && !chunk_candidates.is_empty());
+    let exec = TimedExec::on_cluster(cluster.clone());
+    let mut sweep = Vec::with_capacity(sm_candidates.len() * chunk_candidates.len());
+    for &c in sm_candidates {
+        for &chunk in chunk_candidates {
+            assert!(chunk > 0.0, "rdma chunk candidates must be positive");
+            let plan = build(c, chunk);
+            let t = exec.run(&plan).total_time;
+            sweep.push((c, chunk, t));
+        }
+    }
+    let &(best_comm_sms, best_rdma_chunk, best_time) =
+        sweep.iter().min_by(|a, b| a.2.partial_cmp(&b.2).unwrap()).unwrap();
+    ClusterTuneResult { best_comm_sms, best_rdma_chunk, best_time, sweep }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::hw::DeviceId;
+    use crate::kernels::moe::{self, MoeCfg, MoeSchedule, Routing};
     use crate::plan::{Op, Role};
 
     #[test]
@@ -65,5 +139,82 @@ mod tests {
         assert_eq!(r.best_comm_sms, 64);
         assert_eq!(r.sweep.len(), 5);
         assert!(r.sweep.iter().all(|(_, t)| *t >= r.best_time));
+    }
+
+    #[test]
+    fn single_node_and_one_node_cluster_sweeps_agree_bitwise() {
+        // the executor generalization must leave the single-node entry
+        // point exactly where it was: tune over a real kernel both ways.
+        let node = NodeSpec::hgx_h100();
+        let cluster = ClusterSpec::single(node.clone());
+        let cfg = MoeCfg::paper(node.clone(), 4096);
+        let routing = Routing::uniform(&cfg, 7);
+        let build = |c: u32| {
+            let mut cfg = cfg.clone();
+            cfg.comm_sms = c;
+            moe::build(&cfg, &routing, MoeSchedule::Overlapped, None)
+        };
+        let a = tune_comm_sms(&node, &[8, 16, 32], build);
+        let b = tune_comm_sms_cluster(&cluster, &[8, 16, 32], build);
+        assert_eq!(a.best_comm_sms, b.best_comm_sms);
+        assert_eq!(a.best_time.to_bits(), b.best_time.to_bits());
+        for ((c1, t1), (c2, t2)) in a.sweep.iter().zip(&b.sweep) {
+            assert_eq!(c1, c2);
+            assert_eq!(t1.to_bits(), t2.to_bits());
+        }
+    }
+
+    #[test]
+    fn cluster_sweep_times_against_the_cluster_executor() {
+        // a cluster MoE plan tuned through the cluster path must see NIC
+        // rates: the same plan timed by the (wrong) single-node executor
+        // at 8 devices would not even run (RDMA routes need NIC ports on a
+        // >1-node topology), so this pins that the cluster tuner wires the
+        // right executor through — and that the sweep is well-formed.
+        let cluster = ClusterSpec::test_cluster(2, 2);
+        let cfg = MoeCfg {
+            node: NodeSpec::test_node(2),
+            tokens: 4 * 64,
+            hidden: 256,
+            h_expert: 128,
+            n_experts: 8,
+            top_k: 2,
+            comm_sms: 8,
+            rdma_chunk: moe::DEFAULT_RDMA_CHUNK,
+        };
+        let routing = Routing::uniform(&cfg, 5);
+        let r = tune_comm_sms_cluster(&cluster, &[4, 8, 16], |c| {
+            let mut cfg = cfg.clone();
+            cfg.comm_sms = c;
+            moe::build_cluster(&cfg, &cluster, &routing, MoeSchedule::Overlapped, None)
+        });
+        assert_eq!(r.sweep.len(), 3);
+        assert!(r.sweep.iter().all(|(_, t)| t.is_finite() && *t > 0.0));
+        assert!(r.sweep.iter().all(|(_, t)| *t >= r.best_time));
+    }
+
+    #[test]
+    fn co_tune_explores_the_chunk_axis() {
+        // cluster MoE at paper-ish scale: the joint sweep must cover the
+        // full grid, pick its minimum, and the chunk axis must actually
+        // change the timing (different wave structure / message sizes).
+        let cluster = ClusterSpec::hgx_h100_pod(2).with_nic_bw(25e9);
+        let cfg = MoeCfg::paper(cluster.node.clone(), 1024 * cluster.total_devices());
+        let routing = Routing::uniform(&cfg, 13);
+        let chunks = [256.0 * 1024.0, 4.0 * 1024.0 * 1024.0];
+        let r = tune_comm_sms_rdma_chunk(&cluster, &[8, 16], &chunks, |c, chunk| {
+            let mut cfg = cfg.clone();
+            cfg.comm_sms = c;
+            cfg.rdma_chunk = chunk;
+            moe::build_cluster(&cfg, &cluster, &routing, MoeSchedule::Overlapped, None)
+        });
+        assert_eq!(r.sweep.len(), 4);
+        assert!(r.sweep.iter().all(|(_, _, t)| *t >= r.best_time));
+        assert!(chunks.contains(&r.best_rdma_chunk));
+        // the chunk axis is live: at a fixed partition the two chunk
+        // candidates give different times
+        let at8: Vec<f64> = r.sweep.iter().filter(|(c, _, _)| *c == 8).map(|(_, _, t)| *t).collect();
+        assert_eq!(at8.len(), 2);
+        assert!((at8[0] - at8[1]).abs() > 1e-12, "chunk size must matter: {at8:?}");
     }
 }

@@ -49,6 +49,7 @@ pub fn all_exhibits() -> Vec<Exhibit> {
         Exhibit { id: "mu1", caption: "§3.1.3 sync microbenchmark (mbarrier vs HBM)", run: mu1 },
         Exhibit { id: "mu2", caption: "§3.1.4 NVSHMEM peer-access overheads", run: mu2 },
         Exhibit { id: "sx1", caption: "Scale-out sweep: hierarchical collectives, 1→4 nodes, NIC 25–100 GB/s", run: sx1 },
+        Exhibit { id: "mx1", caption: "Cluster MoE sweep: expert-parallel dispatch over the NIC, 1→4 nodes, NIC 25–100 GB/s", run: mx1 },
     ]
 }
 
@@ -545,6 +546,54 @@ fn sx1(fast: bool) -> Table {
     t
 }
 
+// ------------------------------------------------------- Cluster MoE
+/// The cluster MoE exhibit: expert-parallel dispatch + grouped GEMM swept
+/// over node count and NIC bandwidth (weak scaling, 2048 tokens per GPU).
+/// `nic_agg_x` is the NIC-byte reduction of the per-rail aggregated
+/// dispatch versus naive per-device RDMA sends (×P in the worst case,
+/// ≈ TopK/K under uniform routing); `nic_GB_per_dev` the aggregated bytes
+/// each NIC actually carries. The 1-node row is the NVLink-only Figure-12
+/// regime the paper measures.
+fn mx1(fast: bool) -> Table {
+    let mut t = Table::new(
+        "Cluster MoE sweep: dispatch+GEMM over the NIC (TopK=8, E=256, H=7168, He=2048, 2048 tok/GPU)",
+        &["nodes", "nic_GBps", "pk_ms", "seq_ms", "comet_ms", "tok_per_s", "nic_GB_per_dev", "nic_agg_x"],
+    );
+    let nodes: &[usize] = if fast { &[1, 2] } else { &[1, 2, 3, 4] };
+    let nics: &[f64] = if fast { &[50e9] } else { &[25e9, 50e9, 100e9] };
+    for &k in nodes {
+        // the 1-node row is NVLink-only (NIC-independent): emit it once
+        let nic_points: &[f64] = if k == 1 { &nics[..1] } else { nics };
+        for &nic in nic_points {
+            let cluster = ClusterSpec::hgx_h100_pod(k).with_nic_bw(nic);
+            let n_dev = cluster.total_devices();
+            let cfg = MoeCfg::paper(cluster.node.clone(), 2048 * n_dev);
+            let routing = Routing::uniform(&cfg, 11);
+            let exec = TimedExec::on_cluster(cluster.clone());
+            let t_pk = exec
+                .run(&moe::build_cluster(&cfg, &cluster, &routing, MoeSchedule::Overlapped, None))
+                .total_time;
+            let t_seq = exec
+                .run(&moe::build_cluster(&cfg, &cluster, &routing, MoeSchedule::Sequential, None))
+                .total_time;
+            let t_comet = baselines::comet::moe_cluster(&cluster, &cfg, &routing);
+            let agg: f64 = moe::nic_dispatch_bytes(&cfg, &cluster, &routing, true).iter().sum();
+            let naive: f64 = moe::nic_dispatch_bytes(&cfg, &cluster, &routing, false).iter().sum();
+            t.row(vec![
+                k.to_string(),
+                if k == 1 { "nvlink-only".into() } else { format!("{:.0}", nic / 1e9) },
+                ms(t_pk),
+                ms(t_seq),
+                ms(t_comet),
+                format!("{:.0}", cfg.tokens as f64 / t_pk),
+                format!("{:.2}", agg / n_dev as f64 / 1e9),
+                if k == 1 { "-".into() } else { format!("{:.2}", naive / agg) },
+            ]);
+        }
+    }
+    t
+}
+
 // --------------------------------------------------------------- µ1, µ2
 fn mu1(_fast: bool) -> Table {
     let g = GpuSpec::h100();
@@ -578,7 +627,7 @@ mod tests {
     #[test]
     fn registry_complete_and_runnable_fast() {
         let ex = all_exhibits();
-        assert_eq!(ex.len(), 22, "17 figures/tables + 2 micro + tab1/tab2 + scale-out");
+        assert_eq!(ex.len(), 23, "17 figures/tables + 2 micro + tab1/tab2 + scale-out + cluster MoE");
         for e in &ex {
             let t = (e.run)(true);
             assert!(!t.rows.is_empty(), "{} produced no rows", e.id);
@@ -616,6 +665,30 @@ mod tests {
                 for w in series.windows(2) {
                     assert!(w[1].1 >= w[0].1 * 0.999, "{name}@{nic}: scale-out monotone: {series:?}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn mx1_overlap_beats_sequential_at_every_point_and_aggregation_pays() {
+        // acceptance: overlapped cluster MoE beats the sequential schedule
+        // at every (nodes, NIC bandwidth) point of the full sweep, and the
+        // per-rail aggregation strictly reduces NIC bytes on every
+        // multi-node row.
+        let t = mx1(false);
+        assert_eq!(t.rows.len(), 10, "1 nvlink-only row + 3 node counts x 3 NIC levels");
+        for r in &t.rows {
+            let pk: f64 = r[2].parse().unwrap();
+            let seq: f64 = r[3].parse().unwrap();
+            assert!(
+                pk < seq,
+                "overlap must win at nodes={} nic={}: {pk} vs {seq}",
+                r[0],
+                r[1]
+            );
+            if r[1] != "nvlink-only" {
+                let red: f64 = r[7].parse().unwrap();
+                assert!(red > 1.5, "aggregation must cut NIC bytes at {}x{}: {red}", r[0], r[1]);
             }
         }
     }

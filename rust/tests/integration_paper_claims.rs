@@ -305,6 +305,99 @@ fn claim_scaleout_runs_both_executors_end_to_end() {
 }
 
 #[test]
+fn claim_moe_per_rail_aggregation_cuts_nic_traffic_by_p() {
+    // The canonical worst-case routing: every token picks P experts, one
+    // on each device of a single remote node. Naive per-device RDMA sends
+    // cross the source NIC P times per token; the per-rail aggregated
+    // dispatch exactly once — the ×P NIC-traffic reduction, pinned both
+    // analytically and against the timed executor's port accounting.
+    use pk::exec::TimedExec;
+    use pk::hw::spec::NodeSpec;
+    use pk::hw::topology::Port;
+    use pk::hw::{ClusterSpec, DeviceId};
+    use pk::kernels::moe::{self, MoeCfg, MoeSchedule, Routing, DEFAULT_RDMA_CHUNK};
+
+    let (k, p) = (2usize, 4usize);
+    let n = k * p;
+    let cluster = ClusterSpec::test_cluster(k, p);
+    let cfg = MoeCfg {
+        node: NodeSpec::test_node(p),
+        tokens: n * 8,
+        hidden: 32,
+        h_expert: 16,
+        n_experts: n * 2,
+        top_k: p,
+        comm_sms: 8,
+        rdma_chunk: DEFAULT_RDMA_CHUNK,
+    };
+    let tl = cfg.tokens_local_of(n);
+    let el = cfg.experts_local_of(n);
+    // token t on node kn -> one expert on each device of node (kn+1) % k
+    let experts: Vec<Vec<usize>> = (0..cfg.tokens)
+        .map(|t| {
+            let src_node = t / tl / p;
+            let dst_node = (src_node + 1) % k;
+            (0..p).map(|q| (dst_node * p + q) * el + t % el).collect()
+        })
+        .collect();
+    let routing = Routing { experts };
+    let agg: f64 = moe::nic_dispatch_bytes(&cfg, &cluster, &routing, true).iter().sum();
+    let naive: f64 = moe::nic_dispatch_bytes(&cfg, &cluster, &routing, false).iter().sum();
+    assert!(agg > 0.0);
+    assert!(
+        (naive / agg - p as f64).abs() < 1e-9,
+        "per-rail aggregation must cut NIC traffic exactly xP: {}",
+        naive / agg
+    );
+    // the built plan's NIC accounting matches the aggregated figure
+    let plan = moe::build_cluster(&cfg, &cluster, &routing, MoeSchedule::Overlapped, None);
+    let r = TimedExec::on_cluster(cluster.clone()).run(&plan);
+    let nic_total: f64 = (0..n)
+        .map(|g| r.port_bytes.get(&Port::NicEgress(DeviceId(g))).copied().unwrap_or(0.0))
+        .sum();
+    assert!((nic_total - agg).abs() < 1.0, "timed NIC bytes {nic_total} vs aggregated {agg}");
+    assert!((nic_total * p as f64 - naive).abs() < 1.0, "naive would be xP the timed bytes");
+}
+
+#[test]
+fn claim_moe_one_node_cluster_bit_identical_and_mx1_overlap_wins() {
+    // (a) the cluster MoE builder on a 1-node cluster is bit-identical to
+    // the single-node path (the regression guarantee of the delegation).
+    use pk::exec::TimedExec;
+    use pk::hw::spec::NodeSpec;
+    use pk::hw::ClusterSpec;
+    use pk::kernels::moe::{self, MoeCfg, MoeSchedule, Routing};
+
+    let node = NodeSpec::hgx_h100();
+    let cfg = MoeCfg::paper(node.clone(), 8192);
+    let routing = Routing::uniform(&cfg, 11);
+    let cluster = ClusterSpec::single(node.clone());
+    let a = moe::build(&cfg, &routing, MoeSchedule::Overlapped, None);
+    let b = moe::build_cluster(&cfg, &cluster, &routing, MoeSchedule::Overlapped, None);
+    assert_eq!(a.total_ops(), b.total_ops());
+    let ta = TimedExec::new(node).run(&a).total_time;
+    let tb = TimedExec::on_cluster(cluster).run(&b).total_time;
+    assert_eq!(ta.to_bits(), tb.to_bits(), "1-node cluster MoE must not drift");
+
+    // (b) the mx1 exhibit: overlapped cluster MoE beats the sequential
+    // schedule at every (nodes, NIC bandwidth) point, and PK stays inside
+    // the Comet comparison band on the cluster rows.
+    let t = run_exhibit("mx1", true).unwrap();
+    assert_eq!(
+        t.columns,
+        vec!["nodes", "nic_GBps", "pk_ms", "seq_ms", "comet_ms", "tok_per_s", "nic_GB_per_dev", "nic_agg_x"]
+    );
+    for r in &t.rows {
+        let pk: f64 = r[2].parse().unwrap();
+        let seq: f64 = r[3].parse().unwrap();
+        let comet: f64 = r[4].parse().unwrap();
+        assert!(pk < seq, "overlap wins at nodes={} nic={}: {pk} vs {seq}", r[0], r[1]);
+        let ratio = comet / pk;
+        assert!(ratio > 0.8 && ratio < 1.6, "PK/Comet cluster band at nodes={}: {ratio}", r[0]);
+    }
+}
+
+#[test]
 fn claim_fig5_partition_matters() {
     let t = run_exhibit("fig5", true).unwrap();
     // for the large problem, too many comm SMs must hurt

@@ -211,6 +211,7 @@ fn prop_moe_routing_conservation() {
             n_experts: n_dev * rng.usize_in(1, 5),
             top_k: rng.usize_in(1, 4).min(n_dev),
             comm_sms: 8,
+            rdma_chunk: pk::kernels::moe::DEFAULT_RDMA_CHUNK,
         };
         let routing = Routing::uniform(&cfg, rng.next_u64());
         let counts = routing.counts(cfg.n_experts);
@@ -486,6 +487,155 @@ fn prop_rdma_throughput_below_nic_bound() {
             if rate > curve * (1.0 + 1e-6) {
                 return Err(format!("single flow {rate} exceeds curve {curve}"));
             }
+        }
+        Ok(())
+    });
+}
+
+/// Cluster MoE NIC byte conservation: under arbitrary routing tables the
+/// timed per-rail dispatch charges each NIC exactly the aggregated bytes —
+/// one copy of each distinct token per remote destination node on the
+/// source's egress, and the matching rail-peer ingress on the other side.
+#[test]
+fn prop_cluster_moe_nic_byte_conservation() {
+    use pk::kernels::moe::{self, MoeCfg, MoeSchedule, Routing, DEFAULT_RDMA_CHUNK};
+    run_prop("cluster_moe_nic_bytes", 12, |rng| {
+        let k = rng.usize_in(2, 4);
+        let p = rng.usize_in(2, 4);
+        let n = k * p;
+        let cluster = ClusterSpec::test_cluster(k, p);
+        let cfg = MoeCfg {
+            node: NodeSpec::test_node(p),
+            tokens: n * rng.usize_in(2, 8),
+            hidden: 16,
+            h_expert: 8,
+            n_experts: n * rng.usize_in(1, 4),
+            top_k: rng.usize_in(1, 4),
+            comm_sms: 8,
+            rdma_chunk: DEFAULT_RDMA_CHUNK,
+        };
+        let routing = Routing::uniform(&cfg, rng.next_u64());
+        let plan = moe::build_cluster(&cfg, &cluster, &routing, MoeSchedule::Overlapped, None);
+        let r = TimedExec::on_cluster(cluster.clone()).run(&plan);
+        if !(r.total_time.is_finite() && r.total_time > 0.0) {
+            return Err("non-finite time".into());
+        }
+        let want = moe::nic_dispatch_bytes(&cfg, &cluster, &routing, true);
+        for g in 0..n {
+            let got = r.port_bytes.get(&Port::NicEgress(DeviceId(g))).copied().unwrap_or(0.0);
+            if (got - want[g]).abs() > 1.0 {
+                return Err(format!("dev {g}: NIC egress {got} vs {}", want[g]));
+            }
+        }
+        // ingress: each device receives its rail peers' coalesced flows
+        let tl = cfg.tokens_local_of(n);
+        for g in 0..n {
+            let my_node = g / p;
+            let mut want_in = 0.0;
+            for kn in 0..k {
+                if kn == my_node {
+                    continue;
+                }
+                let s = kn * p + g % p;
+                let count = (0..tl)
+                    .filter(|&lt| {
+                        routing.experts[s * tl + lt]
+                            .iter()
+                            .any(|&e| cfg.expert_device_of(e, n) / p == my_node)
+                    })
+                    .count();
+                want_in += count as f64 * cfg.token_bytes();
+            }
+            let got = r.port_bytes.get(&Port::NicIngress(DeviceId(g))).copied().unwrap_or(0.0);
+            if (got - want_in).abs() > 1.0 {
+                return Err(format!("dev {g}: NIC ingress {got} vs {want_in}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Cluster MoE functional conservation: every (expert, token) pair lands in
+/// exactly its slot with the original row contents — no token is lost
+/// crossing the rail, and the injective slot layout rules out duplication.
+#[test]
+fn prop_cluster_moe_no_token_loss_or_duplication() {
+    use pk::kernels::moe::{self, MoeCfg, MoeClusterBufs, MoeSchedule, Routing, DEFAULT_RDMA_CHUNK};
+    run_prop("cluster_moe_tokens", 8, |rng| {
+        let k = rng.usize_in(2, 4);
+        let p = rng.usize_in(2, 4);
+        let n = k * p;
+        let cluster = ClusterSpec::test_cluster(k, p);
+        let cfg = MoeCfg {
+            node: NodeSpec::test_node(p),
+            tokens: n * rng.usize_in(2, 6),
+            hidden: 8,
+            h_expert: 4,
+            n_experts: n * 2,
+            top_k: rng.usize_in(1, 4),
+            comm_sms: 8,
+            rdma_chunk: DEFAULT_RDMA_CHUNK,
+        };
+        let routing = Routing::uniform(&cfg, rng.next_u64());
+        let mut pool = MemPool::new();
+        let bufs = MoeClusterBufs::alloc(&mut pool, &cfg, &cluster, &routing);
+        let tl = cfg.tokens_local_of(n);
+        let el = cfg.experts_local_of(n);
+        for d in 0..n {
+            pool.get_mut(bufs.moe.tokens[d]).data = pk::util::seeded_vec(d as u64 + 1, tl * cfg.hidden);
+        }
+        let plan = moe::build_cluster(&cfg, &cluster, &routing, MoeSchedule::Overlapped, Some(&bufs));
+        FunctionalExec::new(&mut pool).run(&plan).map_err(|e| e.to_string())?;
+        for e in 0..cfg.n_experts {
+            let dev = cfg.expert_device_of(e, n);
+            let le = e % el;
+            for (slot, &t) in routing.tokens_for(e).iter().enumerate() {
+                let src_dev = t / tl;
+                let lt = t % tl;
+                let want =
+                    &pool.get(bufs.moe.tokens[src_dev]).data[lt * cfg.hidden..(lt + 1) * cfg.hidden];
+                let ebuf = pool.get(bufs.moe.expert_in[dev]);
+                let off = ebuf.shape.offset(le, 0, slot, 0);
+                if &ebuf.data[off..off + cfg.hidden] != want {
+                    return Err(format!("expert {e} slot {slot} (token {t}) mismatch"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// On a cluster the Sequential schedule can never beat the Overlapped one:
+/// both issue the identical dispatch flows; Sequential only adds upfront
+/// waits before the expert GEMMs.
+#[test]
+fn prop_cluster_moe_sequential_geq_overlapped() {
+    use pk::kernels::moe::{self, MoeCfg, MoeSchedule, Routing, DEFAULT_RDMA_CHUNK};
+    run_prop("cluster_moe_seq_vs_ov", 6, |rng| {
+        let k = rng.usize_in(2, 4);
+        let p = 2;
+        let n = k * p;
+        let cluster = ClusterSpec::test_cluster(k, p);
+        let cfg = MoeCfg {
+            node: NodeSpec::test_node(p),
+            tokens: n * 8 * rng.usize_in(1, 4),
+            hidden: 64,
+            h_expert: 32,
+            n_experts: n * 2,
+            top_k: 2,
+            comm_sms: 8,
+            rdma_chunk: DEFAULT_RDMA_CHUNK,
+        };
+        let routing = Routing::uniform(&cfg, rng.next_u64());
+        let exec = TimedExec::on_cluster(cluster.clone());
+        let t_ov = exec
+            .run(&moe::build_cluster(&cfg, &cluster, &routing, MoeSchedule::Overlapped, None))
+            .total_time;
+        let t_seq = exec
+            .run(&moe::build_cluster(&cfg, &cluster, &routing, MoeSchedule::Sequential, None))
+            .total_time;
+        if t_seq < t_ov * (1.0 - 1e-9) {
+            return Err(format!("Sequential ({t_seq}) must be >= Overlapped ({t_ov})"));
         }
         Ok(())
     });
