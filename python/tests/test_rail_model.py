@@ -1,0 +1,220 @@
+"""Executable model of the Rust pk::rail pre-reduce protocol.
+
+The container this repo grows in has no Rust toolchain (see CHANGES.md),
+so `rust/src/pk/rail.rs` + `rust/src/kernels/gemm_rs.rs::build_cluster`
+(RailReduce path) cannot be executed here. This test mirrors the
+node-local pre-reduce protocol op-for-op in pure Python — the same worker
+programs (compute workers contributing partials, per-device rail
+aggregator workers), the same semaphores (per-(aggregator, owner-node)
+`prered` contribution counters), the same wave-split arithmetic
+(`wave_share` / `rail_waves`) — and checks the properties the Rust
+property tests assert:
+
+* the protocol is deadlock-free under arbitrary worker interleavings,
+  for any (K, P, rows-per-device, rdma-chunk) combination;
+* reduction-value conservation: every owner's chunk ends exactly at the
+  sum of all K*P device partials — the node-local pre-reduce changes the
+  summation tree, never the total (mirrors
+  `prop_gemm_rs_rail_reduce_bit_identical_to_scatter`);
+* the wave split partitions the flow exactly, so cumulative per-wave
+  waits (`P * cum_rows`) never starve nor over-wait;
+* NIC flow accounting: the rail path ships exactly (K-1) * rows_per_dev
+  rows per device versus the scatter path's (K-1) * P * rows_per_dev —
+  the xP reduction.
+
+No third-party imports: runs in any Python 3.
+"""
+
+import random
+
+MAX_WAVES = 16
+
+
+def wave_share(total, wave, waves):
+    base = total // waves
+    return total - base * (waves - 1) if wave == waves - 1 else base
+
+
+def rail_waves(flow_units, chunk_units, min_waves=1, max_waves=MAX_WAVES):
+    waves = -(-flow_units // max(1, chunk_units))  # ceil div
+    return max(min_waves, min(max_waves, waves))
+
+
+def build_rail_reduce_ops(k_cnt, p_cnt, rows_per_dev, chunk_rows, partials):
+    """Mirror of gemm_rs::build_cluster's RailReduce protocol.
+
+    `partials[d][kn]` is device d's scalar partial for the chunk owned by
+    its rail peer on node kn (one value per (device, remote chunk) — row
+    granularity is carried by the credit counts, value granularity by the
+    sums). Returns (workers, sems, stage, out, nic_rows) where each worker
+    is a list of ops interpreted by `run_interleaved`:
+      ('credit', (agg, kn), count)        -- pre-reduce store lands
+      ('addstage', (agg, kn), value)      -- its value accumulates
+      ('wait', (agg, kn), threshold)      -- aggregator wave barrier
+      ('ship', (g, kn), rows)             -- rail flow: out[owner] += stage
+    """
+    n = k_cnt * p_cnt
+    sems = {}
+    stage = {}
+    out = {}
+    nic_rows = [0] * n
+    for g in range(n):
+        for kn in range(k_cnt):
+            if kn != g // p_cnt:
+                sems[(g, kn)] = 0
+                stage[(g, kn)] = 0.0
+    for owner in range(n):
+        out[owner] = 0.0
+
+    workers = []
+    # compute workers: contribute every remote-owned row's partial to the
+    # node aggregator (row-by-row credits; the value lands with the first
+    # credit of the pair — conservative, the aggregator waits for all)
+    for d in range(n):
+        my_node = d // p_cnt
+        ops = []
+        for kn in range(k_cnt):
+            if kn == my_node:
+                continue
+            agg_rank_chunks = list(range(p_cnt))
+            random.Random(d * 31 + kn).shuffle(agg_rank_chunks)  # swizzle
+            for q in agg_rank_chunks:
+                agg = my_node * p_cnt + q
+                ops.append(("addstage", (agg, kn), partials[d][(kn, q)]))
+                for _ in range(rows_per_dev):
+                    ops.append(("credit", (agg, kn), 1))
+        workers.append(ops)
+
+    # rail aggregator workers: per remote node, wave-chunked wait + ship.
+    # Early waves are byte-only (the Rust timing mode moves no data); the
+    # final wave — whose barrier has seen every contribution — carries the
+    # pre-reduced value (the Rust functional mode's single full-wait flow).
+    for g in range(n):
+        my_node = g // p_cnt
+        ops = []
+        for kn in range(k_cnt):
+            if kn == my_node:
+                continue
+            waves = rail_waves(rows_per_dev, chunk_rows)
+            cum = 0
+            for wave in range(waves):
+                share = wave_share(rows_per_dev, wave, waves)
+                cum += share
+                if share == 0:
+                    continue
+                ops.append(("wait", (g, kn), p_cnt * cum))
+                kind = "shipfinal" if cum == rows_per_dev else "ship"
+                ops.append((kind, (g, kn), share))
+                nic_rows[g] += share
+        workers.append(ops)
+
+    return workers, sems, stage, out, nic_rows
+
+
+def run_interleaved(workers, sems, stage, out, owners, rng):
+    """Cooperative scheduler with random stepping order; returns True iff
+    every worker retires (deadlock-freedom). Only the final ('shipfinal')
+    wave of a flow moves the staged sum into the owner — its barrier has
+    waited for every contribution, so the value is complete."""
+    pc = [0] * len(workers)
+    while True:
+        progressed = False
+        order = list(range(len(workers)))
+        rng.shuffle(order)
+        for w in order:
+            ops = workers[w]
+            while pc[w] < len(ops):
+                kind, key, val = ops[pc[w]]
+                if kind == "credit":
+                    sems[key] += val
+                elif kind == "addstage":
+                    stage[key] += val
+                elif kind == "wait":
+                    if sems[key] < val:
+                        break
+                elif kind == "shipfinal":
+                    out[owners[key]] += stage[key]
+                # 'ship' (early wave): byte-only, nothing to apply
+                pc[w] += 1
+                progressed = True
+        if all(pc[w] == len(workers[w]) for w in range(len(workers))):
+            return True
+        if not progressed:
+            return False
+
+
+def make_case(rng, k, p, rows_per_dev, chunk_rows):
+    n = k * p
+    partials = []
+    for d in range(n):
+        per = {}
+        for kn in range(k):
+            if kn == d // p:
+                continue
+            for q in range(p):
+                per[(kn, q)] = float(rng.randint(-8, 8))
+        partials.append(per)
+    workers, sems, stage, out, nic = build_rail_reduce_ops(k, p, rows_per_dev, chunk_rows, partials)
+    owners = {(g, kn): kn * p + g % p for g in range(n) for kn in range(k) if kn != g // p}
+    return partials, workers, sems, stage, out, nic, owners
+
+
+def test_rail_pre_reduce_deadlock_free_and_conserves_values():
+    rng = random.Random(0xBEEF)
+    for case in range(40):
+        k = rng.randint(2, 4)
+        p = rng.randint(1, 4)
+        rows = rng.randint(1, 12)
+        chunk = rng.choice([1, 2, 5, 10**9])
+        partials, workers, sems, stage, out, nic, owners = make_case(rng, k, p, rows, chunk)
+        for trial in range(3):
+            s = dict(sems)
+            st = dict(stage)
+            o = dict(out)
+            ok = run_interleaved(workers, s, st, o, owners, random.Random(case * 97 + trial))
+            assert ok, f"deadlock: case {case} (k={k} p={p} rows={rows} chunk={chunk})"
+            # reduction-value conservation: owner receives the sum of the
+            # P node-local partials from each of the K-1 remote nodes
+            n = k * p
+            for owner in range(n):
+                o_node, o_rank = owner // p, owner % p
+                want = 0.0
+                for src_node in range(k):
+                    if src_node == o_node:
+                        continue
+                    for q in range(p):
+                        d = src_node * p + q
+                        want += partials[d][(o_node, o_rank)]
+                assert o[owner] == want, f"case {case} owner {owner}: {o[owner]} vs {want}"
+
+
+def test_wave_split_partitions_and_never_overwaits():
+    rng = random.Random(7)
+    for _ in range(300):
+        rows = rng.randint(0, 10**4)
+        chunk = rng.randint(1, 10**4)
+        waves = rail_waves(rows, chunk)
+        shares = [wave_share(rows, w, waves) for w in range(waves)]
+        assert sum(shares) == rows
+        assert all(s >= 0 for s in shares)
+        assert 1 <= waves <= MAX_WAVES
+        # cumulative thresholds never exceed the total credits available
+        p = rng.randint(1, 8)
+        cum = 0
+        for s in shares:
+            cum += s
+            assert p * cum <= p * rows
+
+
+def test_rail_ships_exactly_one_p_th_of_the_scatter_rows():
+    rng = random.Random(21)
+    for _ in range(20):
+        k = rng.randint(2, 4)
+        p = rng.randint(1, 5)
+        rows = rng.randint(1, 10)
+        _, _, _, _, _, nic, _ = make_case(rng, k, p, rows, 10**9)
+        n = k * p
+        # rail: each device aggregates (k-1) remote chunks of `rows` rows
+        assert all(nic[g] == (k - 1) * rows for g in range(n))
+        scatter = (k - 1) * p * rows  # every device ships every remote row
+        assert scatter == nic[0] * p

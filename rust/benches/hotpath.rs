@@ -89,7 +89,7 @@ fn main() {
 
     // ---- functional executor: tile movement throughput
     {
-        use pk::exec::FunctionalExec;
+        use pk::util::prop::run_functional;
         use pk::plan::{Effect, MatView, Op, Plan, Role};
         let mut pool = MemPool::new();
         let a = pool.alloc(DeviceId(0), Shape4::mat(256, 256));
@@ -112,7 +112,7 @@ fn main() {
         }
         let bytes_per_run = 64.0 * 256.0 * 256.0 * 4.0;
         let t = bench("functional exec: 64x 256x256 tile copies", 20, 3, || {
-            FunctionalExec::new(&mut pool).run(&plan).unwrap();
+            run_functional(&mut pool, &plan);
         });
         println!("{:<44} {:>9.2} GB/s", "  -> copy throughput", bytes_per_run / t / 1e9);
     }

@@ -23,7 +23,7 @@
 
 use crate::exec::TimedExec;
 use crate::hw::cluster::ClusterSpec;
-use crate::kernels::moe::{self, nic_dispatch_bytes, MoeCfg, MoeSchedule, Routing};
+use crate::kernels::moe::{self, nic_combine_bytes, nic_dispatch_bytes, MoeCfg, MoeSchedule, Routing};
 
 /// Comet's tuned grouped-GEMM utilization advantage.
 pub const COMET_GEMM_EFF: f64 = 1.06;
@@ -47,10 +47,22 @@ pub fn moe(cfg: &MoeCfg, routing: &Routing) -> f64 {
 /// Comet extrapolated across a cluster (module docs). `cluster.num_nodes
 /// == 1` reproduces the single-node model exactly.
 pub fn moe_cluster(cluster: &ClusterSpec, cfg: &MoeCfg, routing: &Routing) -> f64 {
-    let n_dev = cluster.total_devices();
     let t_pk = TimedExec::on_cluster(cluster.clone())
         .run(&moe::build_cluster(cfg, cluster, routing, MoeSchedule::Overlapped, None))
         .total_time;
+    moe_cluster_from_dispatch_time(cluster, cfg, routing, t_pk)
+}
+
+/// [`moe_cluster`] with the PK dispatch plan's timed result supplied by
+/// the caller — avoids re-building and re-simulating the paper-scale plan
+/// when the caller (e.g. [`moe_layer_cluster`]) already timed it.
+fn moe_cluster_from_dispatch_time(
+    cluster: &ClusterSpec,
+    cfg: &MoeCfg,
+    routing: &Routing,
+    t_pk: f64,
+) -> f64 {
+    let n_dev = cluster.total_devices();
     // decompose: the GEMM share speeds up by Comet's tuning; overheads add.
     let gemm_share = cfg.gemm_flops_per_device_of(n_dev)
         / cfg.node.gpu.tc_flops_for_sms(cfg.node.gpu.num_sms - cfg.comm_sms);
@@ -68,6 +80,39 @@ pub fn moe_cluster(cluster: &ClusterSpec, cfg: &MoeCfg, routing: &Routing) -> f6
         + gemm_share / COMET_GEMM_EFF
         + comm_share * (1.0 + nic_frac * (1.0 / COMET_RDMA_EFF - 1.0))
         + cfg.experts_local_of(n_dev) as f64 * COMET_EXPERT_SYNC
+}
+
+/// The full MoE layer (dispatch + expert GEMM + combine) extrapolated:
+/// Comet's return path posts per-(expert, token) RDMA writes — no
+/// device-local pre-reduce — so the NIC-bound share of PK's combine hop
+/// stretches by both the dedup factor the pre-reduce saves
+/// ([`nic_combine_bytes`] naive / aggregated) and the uncoalesced-RDMA
+/// rate ([`COMET_RDMA_EFF`]). On one node the combine is NVLink-rated and
+/// carries over unstretched, so the model reduces to [`moe_cluster`] plus
+/// PK's own combine time.
+pub fn moe_layer_cluster(cluster: &ClusterSpec, cfg: &MoeCfg, routing: &Routing) -> f64 {
+    let exec = TimedExec::on_cluster(cluster.clone());
+    let t_layer = exec
+        .run(&moe::build_cluster_layer(cfg, cluster, routing, MoeSchedule::Overlapped, None))
+        .total_time;
+    let t_dispatch = exec
+        .run(&moe::build_cluster(cfg, cluster, routing, MoeSchedule::Overlapped, None))
+        .total_time;
+    let t_combine = (t_layer - t_dispatch).max(0.0);
+    let comet_dispatch = moe_cluster_from_dispatch_time(cluster, cfg, routing, t_dispatch);
+    let stretch = if cluster.num_nodes == 1 {
+        1.0
+    } else {
+        let agg: f64 = nic_combine_bytes(cfg, cluster, routing, true).iter().sum();
+        let naive: f64 = nic_combine_bytes(cfg, cluster, routing, false).iter().sum();
+        let total = cfg.tokens as f64
+            * cfg.top_k as f64
+            * cfg.h_expert as f64
+            * crate::mem::ELEM_BYTES as f64;
+        let nic_frac = (agg / total).min(1.0);
+        1.0 + nic_frac * ((naive / agg.max(1.0)) / COMET_RDMA_EFF - 1.0)
+    };
+    comet_dispatch + t_combine * stretch
 }
 
 #[cfg(test)]
@@ -114,5 +159,30 @@ mod tests {
         let a = moe(&cfg1, &routing1);
         let b = moe_cluster(&ClusterSpec::single(node), &cfg1, &routing1);
         assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn layer_extrapolation_charges_comet_for_the_uncoalesced_combine() {
+        // the full-layer model must exceed the dispatch-only model (the
+        // combine hop costs time), and on a cluster the stretch must make
+        // Comet's combine strictly slower than PK's.
+        let cluster = ClusterSpec::hgx_h100_pod(2);
+        let cfg = MoeCfg::paper(cluster.node.clone(), 1024 * cluster.total_devices());
+        let routing = Routing::uniform(&cfg, 9);
+        let t_dispatch_comet = moe_cluster(&cluster, &cfg, &routing);
+        let t_layer_comet = moe_layer_cluster(&cluster, &cfg, &routing);
+        assert!(t_layer_comet > t_dispatch_comet, "combine takes time");
+        let exec = TimedExec::on_cluster(cluster.clone());
+        let pk_combine = exec
+            .run(&moe::build_cluster_layer(&cfg, &cluster, &routing, MoeSchedule::Overlapped, None))
+            .total_time
+            - exec
+                .run(&moe::build_cluster(&cfg, &cluster, &routing, MoeSchedule::Overlapped, None))
+                .total_time;
+        let comet_combine = t_layer_comet - t_dispatch_comet;
+        assert!(
+            comet_combine > pk_combine,
+            "per-(expert, token) writes must cost more than the pre-reduced rail: {comet_combine} vs {pk_combine}"
+        );
     }
 }

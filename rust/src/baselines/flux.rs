@@ -14,6 +14,7 @@
 
 use super::{launch_gap, time_plan};
 use crate::exec::TimedExec;
+use crate::hw::cluster::ClusterSpec;
 use crate::hw::DeviceId;
 use crate::kernels::{gemm, gemm_rs, GemmKernelCfg};
 use crate::mem::ELEM_BYTES;
@@ -88,6 +89,25 @@ pub fn gemm_rs(cfg: &GemmKernelCfg) -> f64 {
     t_pk * FLUX_RS_MARGIN
 }
 
+/// GEMM+RS extrapolated across a cluster (the `rx1` comparison band):
+/// Flux's fused epilogue predates the hierarchical rail reduce, so
+/// cross-node it issues locality-routed **per-device** RDMA store-adds —
+/// exactly the [`gemm_rs::ClusterPath::Scatter`] transport — with the same
+/// single-node tuning margin on top. A one-node cluster reduces exactly
+/// to [`gemm_rs`] (Scatter and RailReduce coincide with no remote owners).
+pub fn gemm_rs_cluster(cfg: &GemmKernelCfg, cluster: &ClusterSpec) -> f64 {
+    let t = TimedExec::on_cluster(cluster.clone())
+        .run(&gemm_rs::build_cluster_opts(
+            cfg,
+            cluster,
+            gemm_rs::Schedule::IntraSm,
+            gemm_rs::ClusterPath::Scatter,
+            None,
+        ))
+        .total_time;
+    t * FLUX_RS_MARGIN
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,6 +132,34 @@ mod tests {
         let t_pk = TimedExec::new(node.clone()).run(&crate::kernels::ag_gemm::build(&big, None)).total_time;
         let ratio = t_flux / t_pk;
         assert!(ratio < 1.35, "Flux near PK at large N, got {ratio}");
+    }
+
+    #[test]
+    fn flux_cluster_one_node_reduces_and_rail_widens_the_gap() {
+        // 1-node cluster extrapolation == the single-node model, bit for
+        // bit; on a real cluster PK's rail reduce beats Flux's per-device
+        // scatter by more than the single-node tuning margin.
+        let node = NodeSpec::hgx_h100();
+        let cfg = GemmKernelCfg::new(node.clone(), 16384, 16384, 2048);
+        let a = gemm_rs(&cfg);
+        let b = gemm_rs_cluster(&cfg, &ClusterSpec::single(node));
+        assert_eq!(a.to_bits(), b.to_bits());
+        let cluster = ClusterSpec::hgx_h100_pod(2).with_nic_bw(25e9);
+        let cfg2 = GemmKernelCfg::new(cluster.node.clone(), 32768, 8192, 1024);
+        let t_flux = gemm_rs_cluster(&cfg2, &cluster);
+        let t_pk = TimedExec::on_cluster(cluster.clone())
+            .run(&crate::kernels::gemm_rs::build_cluster(
+                &cfg2,
+                &cluster,
+                crate::kernels::gemm_rs::Schedule::IntraSm,
+                None,
+            ))
+            .total_time;
+        assert!(
+            t_flux / t_pk > FLUX_RS_MARGIN,
+            "rail reduce must widen the cluster gap: {}",
+            t_flux / t_pk
+        );
     }
 
     #[test]

@@ -9,9 +9,11 @@
 use super::phantom_replicas;
 use crate::comm::nccl::{self, NcclModel, RingCtx};
 use crate::exec::TimedExec;
+use crate::hw::cluster::ClusterSpec;
 use crate::hw::spec::NodeSpec;
 use crate::kernels::ulysses::UlyssesCfg;
 use crate::plan::Plan;
+use crate::xfer::curves;
 
 /// One reshape (pack or unpack) pass over the exchange buffer.
 fn reshape_time(node: &NodeSpec, bytes: f64) -> f64 {
@@ -44,10 +46,64 @@ pub fn ulysses(cfg: &UlyssesCfg) -> f64 {
     4.0 * (2.0 * pack + a2a) + attn + node.gpu.kernel_launch
 }
 
+/// NCCL's inter-node all-to-all chunk size (per-destination channels move
+/// 128 KiB slices; no per-rail coalescing).
+const NCCL_A2A_MSG: f64 = 128.0 * 1024.0;
+
+/// Effective NVLink fraction of the intra-node a2a share (ring staging).
+const NCCL_INTRA_EFF: f64 = 0.8;
+
+/// YunChang extrapolated across a cluster (the `rx1` comparison band):
+/// the reshape passes are unchanged (local HBM), while the exchange
+/// shards over all `K·P` devices — NCCL moves each device's `(K-1)/K`
+/// cross-node share over its NIC in per-destination channel chunks
+/// ([`NCCL_A2A_MSG`] = 128 KiB, no rail coalescing) and the intra-node
+/// share over NVLink at the ring's effective rate; the two halves
+/// serialize behind the slower one, as NCCL's grouped launch does. One
+/// node reduces exactly to [`ulysses`].
+pub fn ulysses_cluster(cfg: &UlyssesCfg, cluster: &ClusterSpec) -> f64 {
+    // same hybrid-hardware guard the cluster kernel builders enforce
+    assert_eq!(cfg.node.num_devices, cluster.node.num_devices, "cfg.node must match cluster.node");
+    assert_eq!(cfg.node.gpu.arch, cluster.node.gpu.arch, "cfg.node must match cluster.node");
+    if cluster.num_nodes == 1 {
+        return ulysses(cfg);
+    }
+    let node = &cfg.node;
+    let n = cluster.total_devices();
+    let k = cluster.num_nodes;
+    let bytes =
+        (cfg.b * cfg.s_local_of(n) * cfg.h * cfg.d) as f64 * crate::mem::ELEM_BYTES as f64;
+    let pack = reshape_time(node, bytes);
+    let nic_bytes = bytes * (k - 1) as f64 / k as f64;
+    let t_nic = nic_bytes / curves::rdma_rate(cluster, NCCL_A2A_MSG);
+    let t_intra = (bytes / k as f64) / (node.gpu.nvlink_bw * NCCL_INTRA_EFF);
+    let a2a = t_nic.max(t_intra) + node.gpu.kernel_launch;
+    let attn = cfg.attn_flops_of(n) / (node.gpu.tc_flops_for_sms(node.gpu.num_sms) * cfg.flash_util);
+    4.0 * (2.0 * pack + a2a) + attn + node.gpu.kernel_launch
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::kernels::ulysses;
+
+    #[test]
+    fn cluster_extrapolation_reduces_on_one_node_and_pk_wins_multi_node() {
+        let node = NodeSpec::hgx_h100();
+        let cfg = UlyssesCfg::paper(node.clone(), 16384);
+        let a = ulysses(&cfg);
+        let b = ulysses_cluster(&cfg, &ClusterSpec::single(node));
+        assert_eq!(a.to_bits(), b.to_bits());
+        // multi-node: PK's rail-coalesced two-level exchange beats the
+        // reshape + per-channel NCCL model
+        let cluster = ClusterSpec::hgx_h100_pod(2);
+        let cfg2 = UlyssesCfg::paper(cluster.node.clone(), 16384);
+        let t_yc = ulysses_cluster(&cfg2, &cluster);
+        let t_pk = TimedExec::on_cluster(cluster.clone())
+            .run(&ulysses::build_cluster(&cfg2, &cluster))
+            .total_time;
+        assert!(t_yc > t_pk, "PK should win across nodes: {t_yc} vs {t_pk}");
+    }
 
     #[test]
     fn figure11_speedup_band() {

@@ -428,7 +428,8 @@ pub fn reshape_pass(plan: &mut Plan, node: &NodeSpec, model: &NcclModel, w: usiz
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::exec::TimedExec;
+    use crate::util::prop::run_functional;
     use crate::mem::tile::Shape4;
     use crate::mem::MemPool;
     use crate::util::seeded_vec;
@@ -468,7 +469,7 @@ mod tests {
             };
             let mut plan = Plan::new();
             ring_all_reduce(&mut plan, &ctx);
-            FunctionalExec::new(&mut pool).run(&plan).unwrap();
+            run_functional(&mut pool, &plan);
             let want = elementwise_sum(&inits);
             for &b in &bufs {
                 crate::util::assert_allclose(&pool.get(b).data, &want, 1e-5, 1e-6);
@@ -499,7 +500,7 @@ mod tests {
         };
         let mut plan = Plan::new();
         ring_all_gather(&mut plan, &ctx);
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         for &b in &bufs {
             for (d, shard) in shards.iter().enumerate() {
                 assert_eq!(&pool.get(b).data[d * 2 * cols..(d + 1) * 2 * cols], &shard[..], "shard {d}");
@@ -520,7 +521,7 @@ mod tests {
         };
         let mut plan = Plan::new();
         ring_reduce_scatter(&mut plan, &ctx);
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         let want = elementwise_sum(&inits);
         for (d, &b) in bufs.iter().enumerate() {
             let got = &pool.get(b).data[d * 2 * cols..(d + 1) * 2 * cols];
@@ -545,7 +546,7 @@ mod tests {
         let mut plan = Plan::new();
         let dst_views: Vec<MatView> = outs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect();
         all_to_all(&mut plan, &ctx, &dst_views);
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         let blk = 2 * cols;
         for d in 0..n {
             for j in 0..n {

@@ -137,7 +137,8 @@ pub fn build(cfg: &GemmKernelCfg, bufs: Option<&AgGemmBufs>) -> Plan {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::exec::TimedExec;
+    use crate::util::prop::run_functional;
     use crate::hw::spec::NodeSpec;
     use crate::pk::template::LcscOpts;
     use crate::util::{assert_allclose, linalg, seeded_vec};
@@ -160,7 +161,7 @@ mod tests {
             pool.get_mut(bufs.b[d]).data = seeded_vec(d as u64 + 7, 24 * 32);
         }
         let plan = build(&cfg, Some(&bufs));
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         for d in 0..n_dev {
             // every device should have gathered the full A...
             assert_allclose(&pool.get(bufs.a[d]).data, &a_global, 1e-6, 1e-7);

@@ -307,31 +307,335 @@ pub fn pk_all_to_all_4d(
     }
 }
 
-/// Cluster-safe entry point for the 4-D all-to-all. [`pk_all_to_all_4d`]
-/// emits NVLink P2P flows between every device pair, which is only valid
-/// within one NVSwitch node — handed a multi-node device set it would
-/// silently rate cross-node tiles at NVLink speed and any Ulysses cluster
-/// sweep built on it would be quietly wrong. A one-node cluster delegates
-/// to the single-node builder unchanged; a multi-node cluster fails fast
-/// with this explanation (the two-level intra-node a2a + per-rail
-/// exchange variant is a ROADMAP follow-on).
+/// Staging buffers for the two-level cluster all-to-all: on each device,
+/// `(num_nodes, B·S_local, P·h_blk, D)` — region `b = k''` holds the tiles
+/// RDMA'd from rail peer `(k'', rank)`, plane `d = bi·S_local + si` one
+/// source (batch, sequence) position, rows `jj·h_blk..` the head block of
+/// local destination rank `jj`.
+pub fn a2a_cluster_stage(
+    pool: &mut crate::mem::MemPool,
+    cluster: &ClusterSpec,
+    cfg: &A2aCfg,
+) -> Vec<crate::mem::BufId> {
+    let n = cluster.total_devices();
+    let k = cluster.num_nodes;
+    let p = cluster.devices_per_node();
+    assert_eq!(cfg.h % n, 0, "heads must divide across devices");
+    let h_blk = cfg.h / n;
+    (0..n)
+        .map(|g| {
+            pool.alloc(
+                DeviceId(g),
+                crate::mem::tile::Shape4 {
+                    b: k,
+                    d: cfg.b_dim * cfg.s_local,
+                    r: p * h_blk,
+                    c: cfg.d_head,
+                },
+            )
+        })
+        .collect()
+}
+
+/// Two-level 4-D all-to-all across a cluster. [`pk_all_to_all_4d`] emits
+/// NVLink P2P flows between every device pair, which is only valid within
+/// one NVSwitch node — handed a multi-node device set it would silently
+/// rate cross-node tiles at NVLink speed (the old fail-fast this replaces).
+/// Here, the exchange is hierarchical on [`crate::pk::rail`]: tiles for
+/// same-node destinations keep the single-node NVLink path, while all
+/// tiles bound for a *remote* node — one `(P·h_blk × D)` slab per source
+/// (batch, sequence) position, contiguous because head blocks are laid
+/// out by global device — coalesce into **one RDMA flow per (source
+/// device, node) pair** along the source's rail, wave-chunked by
+/// `rdma_chunk`. A forwarder worker on the rail peer fans each landed
+/// wave out to its node's devices over NVLink, overlapping the remaining
+/// RDMA waves. A one-node cluster delegates to the single-node builder
+/// unchanged (`stage`/`rdma_chunk` ignored); multi-node functional runs
+/// additionally need [`a2a_cluster_stage`] buffers.
+#[allow(clippy::too_many_arguments)]
 pub fn pk_all_to_all_4d_cluster(
     plan: &mut Plan,
     cluster: &ClusterSpec,
     cfg: &A2aCfg,
     srcs: Option<&[crate::mem::BufId]>,
     dsts: Option<&[crate::mem::BufId]>,
+    stage: Option<&[crate::mem::BufId]>,
+    rdma_chunk: f64,
     n_sms: f64,
 ) {
-    assert!(
-        cluster.num_nodes == 1,
-        "pk_all_to_all_4d assumes a single NVSwitch node: a {}-node cluster would rate \
-         cross-node tiles as NVLink P2P and produce silently-wrong timings; use the \
-         hierarchical collectives, or the two-level all-to-all once it lands (ROADMAP \
-         follow-on 'Multi-node Ulysses')",
-        cluster.num_nodes
-    );
-    pk_all_to_all_4d(plan, &cluster.node, cfg, srcs, dsts, n_sms);
+    use crate::pk::rail::{self, wave_share, RailPlanner, RailSems};
+    if cluster.num_nodes == 1 {
+        return pk_all_to_all_4d(plan, &cluster.node, cfg, srcs, dsts, n_sms);
+    }
+    let n = cluster.total_devices();
+    let k_cnt = cluster.num_nodes;
+    let p_cnt = cluster.devices_per_node();
+    assert_eq!(cfg.h % n, 0, "heads must divide across devices");
+    let h_blk = cfg.h / n;
+    let tile_bytes = (h_blk * cfg.d_head) as f64 * ELEM_BYTES as f64;
+    // per remote node: one (P·h_blk × D) slab per (batch, seq) position
+    let slab_units = (cfg.b_dim * cfg.s_local) as u64;
+    let slab_bytes = p_cnt as f64 * tile_bytes;
+    plan.launch_overhead = cluster.node.gpu.kernel_launch;
+    let railp = RailPlanner::new(cluster, rdma_chunk);
+    let rail_done = RailSems::alloc(plan, cluster).done;
+    let waves = match srcs {
+        Some(_) => 1, // functional: tile-exact, single wave
+        None => railp.waves(slab_units as f64 * slab_bytes, 1, rail::MAX_WAVES),
+    };
+
+    // ---- exchange workers (one per source device)
+    for g in 0..n {
+        let my_node = g / p_cnt;
+        let w = plan.add_worker(DeviceId(g), Role::CommSm, format!("pk_a2a/d{g}"));
+        let drain = plan.add_sem(0);
+        let mut in_flight: u64 = 0;
+        match (srcs, dsts) {
+            (Some(sb), Some(db)) => {
+                // same-node destinations: the single-node per-tile path
+                for j in my_node * p_cnt..(my_node + 1) * p_cnt {
+                    for bi in 0..cfg.b_dim {
+                        for si in 0..cfg.s_local {
+                            let src = MatView {
+                                buf: sb[g],
+                                b: bi,
+                                d: si,
+                                row0: j * h_blk,
+                                col0: 0,
+                                rows: h_blk,
+                                cols: cfg.d_head,
+                            };
+                            let dst = MatView {
+                                buf: db[j],
+                                b: bi,
+                                d: g * cfg.s_local + si,
+                                row0: 0,
+                                col0: 0,
+                                rows: h_blk,
+                                cols: cfg.d_head,
+                            };
+                            if j == g {
+                                plan.push(w, Op::Compute {
+                                    dur: 0.0,
+                                    label: "a2a_local",
+                                    effect: Some(Effect::CopyMat { src, dst, reduce: None }),
+                                });
+                            } else {
+                                in_flight += 1;
+                                plan.push(w, Op::Transfer {
+                                    spec: TransferSpec {
+                                        mech: Mechanism::Tma,
+                                        route: Route::P2p { src: DeviceId(g), dst: DeviceId(j) },
+                                        bytes: tile_bytes,
+                                        msg_bytes: tile_bytes,
+                                        n_sms: n_sms / (n - 1) as f64,
+                                    },
+                                    blocking: false,
+                                    done_sem: Some(drain),
+                                    done_scope: SyncScope::IntraSm,
+                                    label: "pk_a2a_tile",
+                                    effect: Some(Effect::CopyMat { src, dst, reduce: None }),
+                                });
+                            }
+                        }
+                    }
+                }
+                // remote nodes: one contiguous (P·h_blk × D) slab per
+                // (batch, seq) position into the rail peer's stage; each
+                // slab bumps the flow's wave counter
+                let stage_bufs = stage.expect(
+                    "multi-node functional pk_all_to_all_4d_cluster needs a2a_cluster_stage buffers",
+                );
+                for kn in 0..k_cnt {
+                    if kn == my_node {
+                        continue;
+                    }
+                    let r = railp.peer(DeviceId(g), kn).0;
+                    for bi in 0..cfg.b_dim {
+                        for si in 0..cfg.s_local {
+                            let src = MatView {
+                                buf: sb[g],
+                                b: bi,
+                                d: si,
+                                row0: kn * p_cnt * h_blk,
+                                col0: 0,
+                                rows: p_cnt * h_blk,
+                                cols: cfg.d_head,
+                            };
+                            let dst = MatView {
+                                buf: stage_bufs[r],
+                                b: my_node,
+                                d: bi * cfg.s_local + si,
+                                row0: 0,
+                                col0: 0,
+                                rows: p_cnt * h_blk,
+                                cols: cfg.d_head,
+                            };
+                            railp.send(
+                                plan,
+                                w,
+                                DeviceId(g),
+                                kn,
+                                slab_bytes,
+                                n_sms,
+                                Some(rail_done[g][kn]),
+                                "pk_a2a_rail",
+                                Some(Effect::CopyMat { src, dst, reduce: None }),
+                            );
+                        }
+                    }
+                }
+            }
+            _ => {
+                // timing: aggregated NVLink flows to node peers plus
+                // wave-chunked rail flows per remote node
+                for j in my_node * p_cnt..(my_node + 1) * p_cnt {
+                    if j == g {
+                        continue;
+                    }
+                    in_flight += 1;
+                    plan.push(w, Op::Transfer {
+                        spec: TransferSpec {
+                            mech: Mechanism::Tma,
+                            route: Route::P2p { src: DeviceId(g), dst: DeviceId(j) },
+                            bytes: slab_units as f64 * tile_bytes,
+                            msg_bytes: tile_bytes,
+                            n_sms: n_sms / (n - 1) as f64,
+                        },
+                        blocking: false,
+                        done_sem: Some(drain),
+                        done_scope: SyncScope::IntraSm,
+                        label: "pk_a2a_bulk",
+                        effect: None,
+                    });
+                }
+                for wave in 0..waves {
+                    for kn in 0..k_cnt {
+                        if kn == my_node {
+                            continue;
+                        }
+                        let share = wave_share(slab_units, wave, waves);
+                        railp.send(
+                            plan,
+                            w,
+                            DeviceId(g),
+                            kn,
+                            share as f64 * slab_bytes,
+                            n_sms,
+                            Some(rail_done[g][kn]),
+                            "pk_a2a_rail",
+                            None,
+                        );
+                    }
+                    // serialize waves (the moe dispatch pipeline pattern)
+                    for kn in 0..k_cnt {
+                        if kn != my_node {
+                            plan.push(w, Op::Wait { sem: rail_done[g][kn], value: wave as u64 + 1 });
+                        }
+                    }
+                }
+            }
+        }
+        plan.push(w, Op::Wait { sem: drain, value: in_flight });
+    }
+
+    // ---- rail forwarder workers: fan landed slabs out to node peers
+    for g in 0..n {
+        let my_node = g / p_cnt;
+        let w = plan.add_worker(DeviceId(g), Role::CommSm, format!("pk_a2a_fwd/d{g}"));
+        let drain = plan.add_sem(0);
+        let mut in_flight: u64 = 0;
+        for kn in 0..k_cnt {
+            if kn == my_node {
+                continue;
+            }
+            let s = railp.peer(DeviceId(g), kn).0; // rail-peer source on kn
+            match (srcs, dsts, stage) {
+                (Some(_), Some(db), Some(stage_bufs)) => {
+                    plan.push(w, Op::Wait { sem: rail_done[s][my_node], value: slab_units });
+                    for bi in 0..cfg.b_dim {
+                        for si in 0..cfg.s_local {
+                            for jj in 0..p_cnt {
+                                let j = my_node * p_cnt + jj;
+                                let src = MatView {
+                                    buf: stage_bufs[g],
+                                    b: kn,
+                                    d: bi * cfg.s_local + si,
+                                    row0: jj * h_blk,
+                                    col0: 0,
+                                    rows: h_blk,
+                                    cols: cfg.d_head,
+                                };
+                                let dst = MatView {
+                                    buf: db[j],
+                                    b: bi,
+                                    d: s * cfg.s_local + si,
+                                    row0: 0,
+                                    col0: 0,
+                                    rows: h_blk,
+                                    cols: cfg.d_head,
+                                };
+                                if j == g {
+                                    plan.push(w, Op::Compute {
+                                        dur: 0.0,
+                                        label: "a2a_fwd_local",
+                                        effect: Some(Effect::CopyMat { src, dst, reduce: None }),
+                                    });
+                                } else {
+                                    in_flight += 1;
+                                    plan.push(w, Op::Transfer {
+                                        spec: TransferSpec {
+                                            mech: Mechanism::Tma,
+                                            route: Route::P2p { src: DeviceId(g), dst: DeviceId(j) },
+                                            bytes: tile_bytes,
+                                            msg_bytes: tile_bytes,
+                                            n_sms: n_sms / (n - 1) as f64,
+                                        },
+                                        blocking: false,
+                                        done_sem: Some(drain),
+                                        done_scope: SyncScope::IntraSm,
+                                        label: "pk_a2a_fwd_tile",
+                                        effect: Some(Effect::CopyMat { src, dst, reduce: None }),
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    for wave in 0..waves {
+                        plan.push(w, Op::Wait { sem: rail_done[s][my_node], value: wave as u64 + 1 });
+                        let share = wave_share(slab_units, wave, waves);
+                        if share == 0 {
+                            continue;
+                        }
+                        for jj in 0..p_cnt {
+                            let j = my_node * p_cnt + jj;
+                            if j == g {
+                                continue; // own head block already landed
+                            }
+                            in_flight += 1;
+                            plan.push(w, Op::Transfer {
+                                spec: TransferSpec {
+                                    mech: Mechanism::Tma,
+                                    route: Route::P2p { src: DeviceId(g), dst: DeviceId(j) },
+                                    bytes: share as f64 * tile_bytes,
+                                    msg_bytes: tile_bytes,
+                                    n_sms: n_sms / (n - 1) as f64,
+                                },
+                                blocking: false,
+                                done_sem: Some(drain),
+                                done_scope: SyncScope::IntraSm,
+                                label: "pk_a2a_fwd_bulk",
+                                effect: None,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        plan.push(w, Op::Wait { sem: drain, value: in_flight });
+    }
 }
 
 // ====================================================================
@@ -699,7 +1003,8 @@ pub fn hier_reduce_scatter(plan: &mut Plan, ctx: &ClusterCollCtx, axis: Axis) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::exec::TimedExec;
+    use crate::util::prop::run_functional;
     use crate::mem::tile::Shape4;
     use crate::mem::MemPool;
     use crate::util::{assert_allclose, seeded_vec};
@@ -725,7 +1030,7 @@ mod tests {
         let ctx = PkCollCtx::new(&node, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
         let mut plan = Plan::new();
         pk_all_reduce(&mut plan, &ctx);
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         let mut want = vec![0.0f32; rows * cols];
         for v in &inits {
             for (w, x) in want.iter_mut().zip(v) {
@@ -759,7 +1064,7 @@ mod tests {
         let ctx = PkCollCtx::new(&node, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
         let mut plan = Plan::new();
         pk_all_gather(&mut plan, &ctx, Axis::Col);
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         for &b in &bufs {
             assert_allclose(&pool.get(b).data, &global, 1e-6, 1e-7);
         }
@@ -775,7 +1080,7 @@ mod tests {
         let ctx = PkCollCtx::new(&node, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
         let mut plan = Plan::new();
         pk_reduce_scatter(&mut plan, &ctx, Axis::Col);
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         let mut want = vec![0.0f32; rows * cols];
         for v in &inits {
             for (w, x) in want.iter_mut().zip(v) {
@@ -815,7 +1120,7 @@ mod tests {
         }
         let mut plan = Plan::new();
         pk_all_to_all_4d(&mut plan, &node, &cfg, Some(&srcs), Some(&dsts), 8.0);
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         // check: dst[j] at (b, s_global=d*s_local+si, h_in_blk, :) ==
         //        src[d] at (b, si, j*h_blk + h_in_blk, :)
         let h_blk = cfg.h / n;
@@ -870,7 +1175,7 @@ mod tests {
             let ctx = ClusterCollCtx::new(&cluster, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
             let mut plan = Plan::new();
             hier_all_reduce(&mut plan, &ctx);
-            FunctionalExec::new(&mut pool).run(&plan).unwrap();
+            run_functional(&mut pool, &plan);
             // reference: single-node pk_all_reduce over the same inits
             let node = NodeSpec::test_node(n);
             let mut ref_pool = MemPool::new();
@@ -880,7 +1185,7 @@ mod tests {
             let ref_ctx = PkCollCtx::new(&node, ref_bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
             let mut ref_plan = Plan::new();
             pk_all_reduce(&mut ref_plan, &ref_ctx);
-            FunctionalExec::new(&mut ref_pool).run(&ref_plan).unwrap();
+            run_functional(&mut ref_pool, &ref_plan);
             for (b, rb) in bufs.iter().zip(&ref_bufs) {
                 assert_allclose(&pool.get(*b).data, &ref_pool.get(*rb).data, 1e-5, 1e-6);
             }
@@ -902,7 +1207,7 @@ mod tests {
         let ctx = ClusterCollCtx::new(&cluster, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
         let mut plan = Plan::new();
         hier_all_reduce(&mut plan, &ctx);
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         let want = (1..=n).sum::<usize>() as f32; // 21, exactly representable
         for &b in &bufs {
             assert!(pool.get(b).data.iter().all(|v| *v == want), "exact sum everywhere");
@@ -942,7 +1247,7 @@ mod tests {
             let ctx = ClusterCollCtx::new(&cluster, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
             let mut plan = Plan::new();
             hier_all_gather(&mut plan, &ctx, axis);
-            FunctionalExec::new(&mut pool).run(&plan).unwrap();
+            run_functional(&mut pool, &plan);
             for &b in &bufs {
                 assert_eq!(pool.get(b).data, global, "all-gather reconstructs the global tensor ({axis:?})");
             }
@@ -960,7 +1265,7 @@ mod tests {
         let ctx = ClusterCollCtx::new(&cluster, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
         let mut plan = Plan::new();
         hier_reduce_scatter(&mut plan, &ctx, Axis::Row);
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         let mut want = vec![0.0f32; rows * cols];
         for v in &inits {
             for (w, x) in want.iter_mut().zip(v) {
@@ -1108,7 +1413,7 @@ mod tests {
             let ctx = ClusterCollCtx::new(&cluster, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
             let mut plan = Plan::new();
             hier_all_gather_opts(&mut plan, &ctx, Axis::Row, overlap);
-            FunctionalExec::new(&mut pool).run(&plan).unwrap();
+            run_functional(&mut pool, &plan);
             for &b in &bufs {
                 assert_eq!(pool.get(b).data, global, "all-gather reconstructs (overlap={overlap})");
             }
@@ -1122,21 +1427,106 @@ mod tests {
         let cluster = ClusterSpec::test_cluster(1, 4);
         let cfg = A2aCfg { b_dim: 1, s_local: 2, h: 8, d_head: 4 };
         let mut a = Plan::new();
-        pk_all_to_all_4d_cluster(&mut a, &cluster, &cfg, None, None, 8.0);
+        pk_all_to_all_4d_cluster(&mut a, &cluster, &cfg, None, None, None, crate::pk::rail::DEFAULT_RDMA_CHUNK, 8.0);
         let mut b = Plan::new();
         pk_all_to_all_4d(&mut b, &cluster.node, &cfg, None, None, 8.0);
         assert_eq!(a.total_ops(), b.total_ops());
         assert_eq!(a.workers.len(), b.workers.len());
+        assert_eq!(a.sems.len(), b.sems.len());
     }
 
     #[test]
-    #[should_panic(expected = "single NVSwitch node")]
-    fn a2a_cluster_multi_node_fails_fast() {
-        // the silent-wrong-timings bug: before the guard, a multi-node
-        // device set would be rated entirely as NVLink P2P
-        let cluster = ClusterSpec::test_cluster(2, 2);
-        let cfg = A2aCfg { b_dim: 1, s_local: 2, h: 8, d_head: 4 };
+    fn a2a_cluster_two_level_permutes_like_single_node() {
+        // the two-level exchange must implement exactly the single-node
+        // permutation semantics: dst[j] at (b, s_global = d·s_local + si,
+        // h_in_blk, :) == src[d] at (b, si, j·h_blk + h_in_blk, :) — with
+        // cross-node tiles riding the coalesced rail flows + forwarders.
+        for (k, p) in [(2usize, 2usize), (3, 2)] {
+            let n = k * p;
+            let cluster = ClusterSpec::test_cluster(k, p);
+            let cfg = A2aCfg { b_dim: 2, s_local: 3, h: 2 * n, d_head: 4 };
+            let h_blk = cfg.h / n;
+            let mut pool = MemPool::new();
+            let mut srcs = vec![];
+            let mut dsts = vec![];
+            for d in 0..n {
+                srcs.push(pool.alloc_init(
+                    DeviceId(d),
+                    Shape4 { b: cfg.b_dim, d: cfg.s_local, r: cfg.h, c: cfg.d_head },
+                    seeded_vec(2000 + d as u64, cfg.b_dim * cfg.s_local * cfg.h * cfg.d_head),
+                ));
+                dsts.push(pool.alloc(
+                    DeviceId(d),
+                    Shape4 { b: cfg.b_dim, d: cfg.s_local * n, r: h_blk, c: cfg.d_head },
+                ));
+            }
+            let stage = a2a_cluster_stage(&mut pool, &cluster, &cfg);
+            let mut plan = Plan::new();
+            pk_all_to_all_4d_cluster(
+                &mut plan,
+                &cluster,
+                &cfg,
+                Some(&srcs),
+                Some(&dsts),
+                Some(&stage),
+                crate::pk::rail::DEFAULT_RDMA_CHUNK,
+                8.0,
+            );
+            run_functional(&mut pool, &plan);
+            for d in 0..n {
+                for j in 0..n {
+                    for bi in 0..cfg.b_dim {
+                        for si in 0..cfg.s_local {
+                            for hh in 0..h_blk {
+                                let src_buf = pool.get(srcs[d]);
+                                let dst_buf = pool.get(dsts[j]);
+                                for x in 0..cfg.d_head {
+                                    let sv = src_buf.data
+                                        [src_buf.shape.offset(bi, si, j * h_blk + hh, x)];
+                                    let dv = dst_buf.data
+                                        [dst_buf.shape.offset(bi, d * cfg.s_local + si, hh, x)];
+                                    assert_eq!(sv, dv, "k{k} p{p} d{d} j{j} b{bi} s{si} h{hh} x{x}");
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn a2a_cluster_timed_charges_nics_with_rail_coalescing() {
+        // timing mode runs (the old fail-fast is gone), charges each NIC
+        // exactly the (K-1)/K share of the device's exchange bytes in both
+        // directions, and leaves messages at the coalesced rail-chunk size
+        // rather than per-tile.
+        use crate::hw::topology::Port;
+        let (k, p) = (3usize, 2usize);
+        let n = k * p;
+        let cluster = ClusterSpec::test_cluster(k, p);
+        let cfg = A2aCfg { b_dim: 2, s_local: 4, h: 8 * n, d_head: 16 };
         let mut plan = Plan::new();
-        pk_all_to_all_4d_cluster(&mut plan, &cluster, &cfg, None, None, 8.0);
+        pk_all_to_all_4d_cluster(
+            &mut plan,
+            &cluster,
+            &cfg,
+            None,
+            None,
+            None,
+            crate::pk::rail::DEFAULT_RDMA_CHUNK,
+            8.0,
+        );
+        let r = TimedExec::on_cluster(cluster.clone()).run(&plan);
+        assert!(r.total_time.is_finite() && r.total_time > 0.0);
+        let dev_bytes =
+            (cfg.b_dim * cfg.s_local * cfg.h * cfg.d_head) as f64 * ELEM_BYTES as f64;
+        let want = dev_bytes * (k - 1) as f64 / k as f64;
+        for g in 0..n {
+            let e = r.port_bytes.get(&Port::NicEgress(DeviceId(g))).copied().unwrap_or(0.0);
+            let i = r.port_bytes.get(&Port::NicIngress(DeviceId(g))).copied().unwrap_or(0.0);
+            assert!((e - want).abs() < 1.0, "dev {g} egress {e} vs {want}");
+            assert!((i - want).abs() < 1.0, "dev {g} ingress {i} vs {want}");
+        }
     }
 }

@@ -76,7 +76,8 @@ pub fn build(cfg: &GemmKernelCfg, bufs: Option<&GemmBufs>) -> Plan {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::exec::TimedExec;
+    use crate::util::prop::run_functional;
     use crate::hw::spec::NodeSpec;
     use crate::util::{assert_allclose, linalg, seeded_vec};
 
@@ -91,7 +92,7 @@ mod tests {
             pool.get_mut(bufs.b[d]).data = seeded_vec(d as u64 + 9, 48 * 32);
         }
         let plan = build(&cfg, Some(&bufs));
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         for d in 0..2 {
             let want = linalg::matmul(&pool.get(bufs.a[d]).data, &pool.get(bufs.b[d]).data, 32, 32, 48);
             assert_allclose(&pool.get(bufs.c[d]).data, &want, 1e-5, 1e-6);

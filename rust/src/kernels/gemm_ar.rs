@@ -190,7 +190,8 @@ fn strip_last_effects(plan: &mut Plan, w: usize, count: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::exec::TimedExec;
+    use crate::util::prop::run_functional;
     use crate::hw::spec::NodeSpec;
     use crate::util::{assert_allclose, linalg, seeded_vec};
 
@@ -206,7 +207,7 @@ mod tests {
         full
     }
 
-    fn run_functional(schedule: Schedule) {
+    fn run_schedule(schedule: Schedule) {
         let n_dev = 4;
         let node = NodeSpec::test_node(n_dev);
         let mut cfg = GemmKernelCfg::functional(node, 64, 32, 16);
@@ -219,7 +220,7 @@ mod tests {
         }
         let want = reference_ar(&pool, &bufs, &cfg);
         let plan = build(&cfg, schedule, Some(&bufs));
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         for d in 0..n_dev {
             let result = match schedule {
                 Schedule::InterSm => &pool.get(bufs.gemm.c[d]).data,
@@ -231,12 +232,12 @@ mod tests {
 
     #[test]
     fn functional_inter_sm_all_reduce_correct_everywhere() {
-        run_functional(Schedule::InterSm);
+        run_schedule(Schedule::InterSm);
     }
 
     #[test]
     fn functional_intra_sm_all_reduce_correct_everywhere() {
-        run_functional(Schedule::IntraSm);
+        run_schedule(Schedule::IntraSm);
     }
 
     #[test]

@@ -12,23 +12,52 @@
 //! The inter-SM variant (for the Figure 4 ablation) stages tiles in local
 //! HBM, pays the 832 ns inter-SM handshake, and forfeits `num_comm_sms`
 //! SMs of compute — reproducing the ~1.2× gap the paper reports.
+//!
+//! ## Cluster paths
+//!
+//! Across a multi-node [`ClusterSpec`] the scatter half becomes NIC-bound,
+//! and [`build_cluster`] offers two paths ([`ClusterPath`]):
+//!
+//! * **`Scatter`** — the PR 1 locality-routed path: every device
+//!   `store_add_async`es each remote-owned tile row straight to its owner
+//!   over GPUDirect RDMA — `P` per-device flows per (node pair, chunk).
+//! * **`RailReduce`** (the default) — the payload is *reducible* (partial
+//!   sums), so a **node-local pre-reduce** runs first: each device adds
+//!   its remote-owned tile rows over NVLink into the staging area of the
+//!   node's *aggregator* for that chunk (the owner's rail peer), and the
+//!   aggregator ships **one** pre-reduced, [`crate::pk::rail`]-coalesced
+//!   RDMA flow per node pair, wave-chunked by `rdma_chunk`. NIC bytes drop
+//!   exactly ×P versus `Scatter` ([`nic_scatter_bytes`], claims-tested).
 
 use super::gemm::GemmBufs;
 use super::GemmKernelCfg;
 use crate::hw::cluster::ClusterSpec;
 use crate::hw::DeviceId;
+use crate::mem::pgl::ReduceOp;
 use crate::mem::tile::Shape4;
-use crate::mem::{BufId, MemPool};
-use crate::pk::primitives::{store_add_async_routed, TileRef};
+use crate::mem::{BufId, MemPool, ELEM_BYTES};
+use crate::pk::primitives::{store_add_async_routed, store_add_async_scoped, TileRef};
+use crate::pk::rail::{self, wave_share, RailPlanner, RailSems};
 use crate::pk::sync;
 use crate::pk::template::Lcsc;
-use crate::plan::{Effect, MatView, Op, Plan};
+use crate::plan::{Effect, MatView, Op, Plan, SemId, SyncScope};
 
 /// Overlap schedule (the Figure 4 ablation axis).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Schedule {
     IntraSm,
     InterSm,
+}
+
+/// Cross-node transport of the scatter half (module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterPath {
+    /// Locality-routed per-device RDMA store-adds (the PR 1 path; kept as
+    /// the ablation baseline of the `rx1` exhibit).
+    Scatter,
+    /// Node-local pre-reduce + one coalesced rail flow per node pair
+    /// (×P less NIC traffic; the default).
+    RailReduce,
 }
 
 /// Buffers for a functional GEMM+RS run: the GEMM operands plus each
@@ -38,6 +67,10 @@ pub struct GemmRsBufs {
     pub gemm: GemmBufs,
     /// `out[d]`: the reduced chunk owned by device `d` (chunk_rows × n).
     pub out: Vec<BufId>,
+    /// `stage[g]`: (num_nodes, 1, chunk_rows, n) pre-reduce staging for
+    /// the rail path — region `b = kn` accumulates this node's partial of
+    /// the chunk owned by device `(kn, rank(g))`. Empty on one node.
+    pub stage: Vec<BufId>,
 }
 
 impl GemmRsBufs {
@@ -45,9 +78,23 @@ impl GemmRsBufs {
         Self::alloc_n(pool, cfg, cfg.node.num_devices)
     }
 
-    /// Buffers for a cross-node run: `n_dev` total devices.
+    /// Buffers for a cross-node run: `n_dev` total devices plus, on a
+    /// multi-node cluster, the per-device rail staging areas.
     pub fn alloc_cluster(pool: &mut MemPool, cfg: &GemmKernelCfg, cluster: &ClusterSpec) -> Self {
-        Self::alloc_n(pool, cfg, cluster.total_devices())
+        let n_dev = cluster.total_devices();
+        let mut bufs = Self::alloc_n(pool, cfg, n_dev);
+        if cluster.num_nodes > 1 {
+            let chunk_rows = cfg.m / n_dev;
+            bufs.stage = (0..n_dev)
+                .map(|g| {
+                    pool.alloc(
+                        DeviceId(g),
+                        Shape4 { b: cluster.num_nodes, d: 1, r: chunk_rows, c: cfg.n },
+                    )
+                })
+                .collect();
+        }
+        bufs
     }
 
     fn alloc_n(pool: &mut MemPool, cfg: &GemmKernelCfg, n_dev: usize) -> Self {
@@ -56,8 +103,31 @@ impl GemmRsBufs {
         GemmRsBufs {
             gemm: GemmBufs::alloc_n(pool, cfg, n_dev),
             out: (0..n_dev).map(|d| pool.alloc(DeviceId(d), Shape4::mat(chunk_rows, cfg.n))).collect(),
+            stage: vec![],
         }
     }
+}
+
+/// Modeled per-device NIC egress bytes of the cross-node scatter, by path.
+///
+/// `Scatter`: every device ships each of its `(K-1)·P·rows_per_dev`
+/// remote-owned tile rows itself. `RailReduce`: the node-local pre-reduce
+/// collapses the `P` per-device partials of each remote chunk into one,
+/// so each device — as the aggregator of its rail's `K-1` remote chunks —
+/// ships only `(K-1)·rows_per_dev` rows: exactly ×P less. Both paths pay
+/// the RDMA store-add's atomic destination inflation.
+pub fn nic_scatter_bytes(cfg: &GemmKernelCfg, cluster: &ClusterSpec, path: ClusterPath) -> Vec<f64> {
+    let n_dev = cluster.total_devices();
+    let k = cluster.num_nodes;
+    let p = cluster.devices_per_node();
+    let rows_per_dev = cfg.grid_m() / n_dev;
+    let tile_row_bytes = (cfg.tile_m * cfg.n) as f64 * ELEM_BYTES as f64;
+    let infl = 1.0 + cluster.node.gpu.atomic_overhead_frac;
+    let rows = match path {
+        ClusterPath::Scatter => (k - 1) * p * rows_per_dev,
+        ClusterPath::RailReduce => (k - 1) * rows_per_dev,
+    };
+    vec![rows as f64 * tile_row_bytes * infl; n_dev]
 }
 
 /// Build the fused kernel. `m` must divide by `n_dev × tile_m`. Delegates
@@ -67,16 +137,30 @@ pub fn build(cfg: &GemmKernelCfg, schedule: Schedule, bufs: Option<&GemmRsBufs>)
     build_cluster(cfg, &ClusterSpec::single(cfg.node.clone()), schedule, bufs)
 }
 
-/// Cross-node GEMM+RS: the reduction axis is sharded over **all** GPUs of
-/// the cluster, output row-chunk `o` belongs to global device `o`, and
-/// each finished tile-row is scatter-added to its owner — over NVLink when
-/// the owner shares the node, over GPUDirect RDMA otherwise (the
-/// locality-routed `store_add_async`). The tile-order swizzle spreads
-/// concurrent stores across both ingress ports and NICs.
+/// Cross-node GEMM+RS with the default [`ClusterPath::RailReduce`]
+/// transport (see [`build_cluster_opts`] for the ablation knob): the
+/// reduction axis is sharded over **all** GPUs of the cluster and output
+/// row-chunk `o` belongs to global device `o`.
 pub fn build_cluster(
     cfg: &GemmKernelCfg,
     cluster: &ClusterSpec,
     schedule: Schedule,
+    bufs: Option<&GemmRsBufs>,
+) -> Plan {
+    build_cluster_opts(cfg, cluster, schedule, ClusterPath::RailReduce, bufs)
+}
+
+/// Cross-node GEMM+RS with an explicit scatter transport. Same-node
+/// owners always take the NVLink `store_add_async` path; remote owners
+/// ride `path` (module docs). On one node the two paths emit identical
+/// plans — the 1-node delegation guarantee of [`build`] is unaffected.
+/// The tile-order swizzle spreads concurrent stores across both ingress
+/// ports and NICs.
+pub fn build_cluster_opts(
+    cfg: &GemmKernelCfg,
+    cluster: &ClusterSpec,
+    schedule: Schedule,
+    path: ClusterPath,
     bufs: Option<&GemmRsBufs>,
 ) -> Plan {
     // cfg carries a NodeSpec too (tiling, SM partition math reads it);
@@ -84,6 +168,8 @@ pub fn build_cluster(
     assert_eq!(cfg.node.num_devices, cluster.node.num_devices, "cfg.node must match cluster.node");
     assert_eq!(cfg.node.gpu.arch, cluster.node.gpu.arch, "cfg.node must match cluster.node");
     let n_dev = cluster.total_devices();
+    let k_cnt = cluster.num_nodes;
+    let p_cnt = cluster.devices_per_node();
     let grid_m = cfg.grid_m();
     assert_eq!(grid_m % n_dev, 0, "tile rows must divide across devices");
     let rows_per_dev = grid_m / n_dev;
@@ -99,6 +185,12 @@ pub fn build_cluster(
         Schedule::IntraSm => cfg.sms_per_compute_worker(),
         Schedule::InterSm => l.comm_sms_per_worker(),
     };
+    let use_rail = path == ClusterPath::RailReduce && k_cnt > 1;
+    let railp = RailPlanner::new(cluster, cfg.rdma_chunk);
+    // pre-reduce contribution counters per (aggregator device, owner node):
+    // bumped by every node-local partial landing in the aggregator's stage.
+    let prered: Vec<Vec<SemId>> =
+        if use_rail { RailSems::alloc(&mut l.plan, cluster).done } else { vec![] };
 
     for dev in 0..n_dev {
         // Swizzle the tile-row order per device: device d starts its sweep
@@ -139,7 +231,15 @@ pub fn build_cluster(
                         acquired += 1;
                         l.plan.push(*w, Op::Wait { sem: slots, value: acquired });
                         l.plan.push(*w, Op::Compute { dur, label: "gemm_tile_row", effect: effect_gemm });
-                        emit_scatter_add(&mut l, cfg, cluster, *w, dev, owner, row, rows_per_dev, store_sms, Some(slots), bufs);
+                        if use_rail && owner / p_cnt != dev / p_cnt {
+                            // remote owner: NVLink pre-reduce into the node
+                            // aggregator's stage; the slot frees at issue
+                            // (the rail hop throttles downstream instead)
+                            emit_pre_reduce(&mut l, cfg, cluster, *w, dev, owner, row, rows_per_dev, store_sms, prered[(dev / p_cnt) * p_cnt + owner % p_cnt][owner / p_cnt], bufs);
+                            l.plan.push(*w, Op::Signal { sem: slots, value: 1, scope: SyncScope::IntraSm });
+                        } else {
+                            emit_scatter_add(&mut l, cfg, cluster, *w, dev, owner, row, rows_per_dev, store_sms, Some(slots), bufs);
+                        }
                     }
                     Schedule::InterSm => {
                         // compute into local HBM, then hand off to the communicator
@@ -165,13 +265,155 @@ pub fn build_cluster(
                     let row = (dev + 1 + idx / rows_per_dev) % n_dev * rows_per_dev + idx % rows_per_dev;
                     let owner = row / rows_per_dev;
                     l.plan.push(cw, Op::Wait { sem: staged[row], value: 1 });
-                    emit_scatter_add(&mut l, cfg, cluster, cw, dev, owner, row, rows_per_dev, store_sms, None, bufs);
+                    if use_rail && owner / p_cnt != dev / p_cnt {
+                        emit_pre_reduce(&mut l, cfg, cluster, cw, dev, owner, row, rows_per_dev, store_sms, prered[(dev / p_cnt) * p_cnt + owner % p_cnt][owner / p_cnt], bufs);
+                    } else {
+                        emit_scatter_add(&mut l, cfg, cluster, cw, dev, owner, row, rows_per_dev, store_sms, None, bufs);
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- rail aggregator workers (RailReduce, cluster only): once the
+    // node-local partials of a remote chunk have landed in the stage, ship
+    // one pre-reduced, coalesced RDMA store-add per node pair — the ×P
+    // NIC-byte reduction of the hierarchical path.
+    if use_rail {
+        let tile_row_bytes = (cfg.tile_m * cfg.n) as f64 * ELEM_BYTES as f64;
+        for g in 0..n_dev {
+            let my_node = g / p_cnt;
+            let w = l.plan.add_worker(DeviceId(g), crate::plan::Role::CommSm, format!("gemm_rs_rail/d{g}"));
+            for kn in 0..k_cnt {
+                if kn == my_node {
+                    continue;
+                }
+                let owner = kn * p_cnt + g % p_cnt; // same-rank owner on node kn
+                match bufs {
+                    Some(b) => {
+                        // functional: one store-add of the whole pre-reduced
+                        // chunk once all P node-local partials landed
+                        l.plan.push(w, Op::Wait {
+                            sem: prered[g][kn],
+                            value: (p_cnt * rows_per_dev) as u64,
+                        });
+                        let src = MatView {
+                            buf: b.stage[g],
+                            b: kn,
+                            d: 0,
+                            row0: 0,
+                            col0: 0,
+                            rows: rows_per_dev * cfg.tile_m,
+                            cols: cfg.n,
+                        };
+                        let dst = MatView::full2d(b.out[owner], cfg.m / n_dev, cfg.n);
+                        railp.send_add(
+                            &mut l.plan,
+                            w,
+                            DeviceId(g),
+                            kn,
+                            rows_per_dev as f64 * tile_row_bytes,
+                            store_sms,
+                            None,
+                            "gemm_rs_rail_send",
+                            Some(Effect::CopyMat { src, dst, reduce: Some(ReduceOp::Add) }),
+                        );
+                    }
+                    None => {
+                        // timing: wave-chunked by rdma_chunk — wave w ships
+                        // its share of the chunk's tile rows once enough
+                        // node-local partials (P per row) have landed
+                        let waves =
+                            railp.waves(rows_per_dev as f64 * tile_row_bytes, 1, rail::MAX_WAVES);
+                        let mut cum_rows = 0u64;
+                        for wave in 0..waves {
+                            let share = wave_share(rows_per_dev as u64, wave, waves);
+                            cum_rows += share;
+                            if share == 0 {
+                                continue;
+                            }
+                            l.plan.push(w, Op::Wait {
+                                sem: prered[g][kn],
+                                value: p_cnt as u64 * cum_rows,
+                            });
+                            railp.send_add(
+                                &mut l.plan,
+                                w,
+                                DeviceId(g),
+                                kn,
+                                share as f64 * tile_row_bytes,
+                                store_sms,
+                                None,
+                                "gemm_rs_rail_send",
+                                None,
+                            );
+                        }
+                    }
                 }
             }
         }
     }
     let _ = sync::Barrier::alloc; // (barriers used by callers that chain kernels)
     l.finish()
+}
+
+/// Node-local pre-reduce contribution of one remote-owned tile row: add
+/// the partial over NVLink into the stage of the node's aggregator for
+/// that chunk (the owner's rail peer on this node), crediting the
+/// aggregator's contribution counter with an inter-device flag.
+#[allow(clippy::too_many_arguments)]
+fn emit_pre_reduce(
+    l: &mut Lcsc,
+    cfg: &GemmKernelCfg,
+    cluster: &ClusterSpec,
+    w: usize,
+    dev: usize,
+    owner: usize,
+    row: usize,
+    rows_per_dev: usize,
+    store_sms: f64,
+    done: SemId,
+    bufs: Option<&GemmRsBufs>,
+) {
+    let p_cnt = cluster.devices_per_node();
+    let owner_node = owner / p_cnt;
+    let agg = (dev / p_cnt) * p_cnt + owner % p_cnt;
+    let (src, dst) = match bufs {
+        Some(b) => (
+            MatView::full2d(b.gemm.c[dev], cfg.m, cfg.n).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.n),
+            MatView {
+                buf: b.stage[agg],
+                b: owner_node,
+                d: 0,
+                row0: (row - owner * rows_per_dev) * cfg.tile_m,
+                col0: 0,
+                rows: cfg.tile_m,
+                cols: cfg.n,
+            },
+        ),
+        None => {
+            let ph = MatView { buf: BufId(0), b: 0, d: 0, row0: 0, col0: 0, rows: cfg.tile_m, cols: cfg.n };
+            (ph, ph)
+        }
+    };
+    store_add_async_scoped(
+        &mut l.plan,
+        &cluster.node.gpu,
+        w,
+        TileRef::new(src, DeviceId(dev)),
+        TileRef::new(dst, DeviceId(agg)),
+        Some(done),
+        SyncScope::InterDevice,
+    );
+    if bufs.is_none() {
+        // strip placeholder effect; timing only
+        if let Some(Op::Transfer { effect, spec, .. }) = l.plan.workers[w].ops.last_mut() {
+            *effect = None;
+            spec.n_sms = store_sms;
+        }
+    } else if let Some(Op::Transfer { spec, .. }) = l.plan.workers[w].ops.last_mut() {
+        spec.n_sms = store_sms;
+    }
 }
 
 /// Add one computed tile-row into its owner's chunk (NVLink or RDMA by
@@ -226,7 +468,8 @@ fn emit_scatter_add(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::exec::TimedExec;
+    use crate::util::prop::run_functional;
     use crate::hw::spec::NodeSpec;
     use crate::util::{assert_allclose, linalg, seeded_vec};
 
@@ -244,7 +487,7 @@ mod tests {
         (0..n_dev).map(|d| full[d * chunk..(d + 1) * chunk].to_vec()).collect()
     }
 
-    fn run_functional(schedule: Schedule) {
+    fn run_schedule(schedule: Schedule) {
         let n_dev = 4;
         let node = NodeSpec::test_node(n_dev);
         let mut cfg = GemmKernelCfg::functional(node, 64, 32, 24);
@@ -259,7 +502,7 @@ mod tests {
         }
         let want = reference_rs(&pool, &bufs, &cfg);
         let plan = build(&cfg, schedule, Some(&bufs));
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         for d in 0..n_dev {
             assert_allclose(&pool.get(bufs.out[d]).data, &want[d], 1e-5, 1e-6);
         }
@@ -267,12 +510,12 @@ mod tests {
 
     #[test]
     fn functional_intra_sm_matches_reference() {
-        run_functional(Schedule::IntraSm);
+        run_schedule(Schedule::IntraSm);
     }
 
     #[test]
     fn functional_inter_sm_matches_reference() {
-        run_functional(Schedule::InterSm);
+        run_schedule(Schedule::InterSm);
     }
 
     #[test]
@@ -298,29 +541,83 @@ mod tests {
         }
         let chunk = cfg.m / n_dev * cfg.n;
         let plan = build_cluster(&cfg, &cluster, Schedule::IntraSm, Some(&bufs));
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         for d in 0..n_dev {
             assert_allclose(&pool.get(bufs.out[d]).data, &full[d * chunk..(d + 1) * chunk], 1e-5, 1e-6);
         }
     }
 
     #[test]
-    fn timed_cluster_charges_nics_for_remote_owners() {
+    fn timed_cluster_nic_bytes_match_model_for_both_paths() {
+        // the scatter path charges each NIC the PR 1 locality-routed
+        // figure (half the output on a 2-node pod, atomic-inflated); the
+        // rail path exactly 1/P of that — both pinned against the modeled
+        // accounting and against each other.
         use crate::hw::topology::Port;
         let cluster = ClusterSpec::hgx_h100_pod(2);
-        let n_dev = cluster.total_devices();
+        let p = cluster.devices_per_node();
         let cfg = GemmKernelCfg::new(cluster.node.clone(), 32768, 4096, 4096);
-        let plan = build_cluster(&cfg, &cluster, Schedule::IntraSm, None);
-        let r = TimedExec::on_cluster(cluster.clone()).run(&plan);
-        assert!(r.total_time.is_finite() && r.total_time > 0.0);
-        // every device owns m/n_dev rows locally and scatter-adds the other
-        // node's half of its output over its NIC (atomic-inflated bytes)
+        let mut got = vec![];
+        for path in [ClusterPath::Scatter, ClusterPath::RailReduce] {
+            let plan = build_cluster_opts(&cfg, &cluster, Schedule::IntraSm, path, None);
+            let r = TimedExec::on_cluster(cluster.clone()).run(&plan);
+            assert!(r.total_time.is_finite() && r.total_time > 0.0);
+            let want = nic_scatter_bytes(&cfg, &cluster, path);
+            for g in 0..cluster.total_devices() {
+                let e = r.port_bytes.get(&Port::NicEgress(crate::hw::DeviceId(g))).copied().unwrap_or(0.0);
+                assert!((e - want[g]).abs() / want[g] < 1e-6, "{path:?} dev {g}: {e} vs {}", want[g]);
+            }
+            got.push(r.port_bytes[&Port::NicEgress(crate::hw::DeviceId(0))]);
+        }
+        // the scatter path's old expectation still holds...
         let out_bytes = (cfg.m * cfg.n) as f64 * crate::mem::ELEM_BYTES as f64;
-        let remote_frac = 0.5; // half the owners live on the other node
-        let want = out_bytes * remote_frac * (1.0 + cluster.node.gpu.atomic_overhead_frac);
-        let got = r.port_bytes[&Port::NicEgress(crate::hw::DeviceId(0))];
-        assert!((got - want).abs() / want < 1e-6, "{got} vs {want}");
-        let _ = n_dev;
+        let want_scatter = out_bytes * 0.5 * (1.0 + cluster.node.gpu.atomic_overhead_frac);
+        assert!((got[0] - want_scatter).abs() / want_scatter < 1e-6, "{} vs {want_scatter}", got[0]);
+        // ...and the rail path cuts it exactly xP
+        assert!((got[0] / got[1] - p as f64).abs() < 1e-9, "rail must cut NIC bytes xP: {got:?}");
+    }
+
+    #[test]
+    fn timed_cluster_rail_beats_scatter_when_nic_bound() {
+        // with the NIC as the binding resource, shipping 1/P the bytes per
+        // NIC must be faster end-to-end.
+        let cluster = ClusterSpec::hgx_h100_pod(2).with_nic_bw(25e9);
+        let cfg = GemmKernelCfg::new(cluster.node.clone(), 32768, 8192, 1024);
+        let exec = TimedExec::on_cluster(cluster.clone());
+        let t_rail = exec
+            .run(&build_cluster_opts(&cfg, &cluster, Schedule::IntraSm, ClusterPath::RailReduce, None))
+            .total_time;
+        let t_scatter = exec
+            .run(&build_cluster_opts(&cfg, &cluster, Schedule::IntraSm, ClusterPath::Scatter, None))
+            .total_time;
+        assert!(t_rail < t_scatter, "rail reduce must win NIC-bound: {t_rail} vs {t_scatter}");
+    }
+
+    #[test]
+    fn functional_cluster_scatter_path_matches_reference_too() {
+        // the ablation path stays numerically correct
+        let cluster = ClusterSpec::test_cluster(2, 2);
+        let n_dev = cluster.total_devices();
+        let cfg = GemmKernelCfg::functional(cluster.node.clone(), 64, 32, 24);
+        let mut pool = MemPool::new();
+        let bufs = GemmRsBufs::alloc_cluster(&mut pool, &cfg, &cluster);
+        for d in 0..n_dev {
+            pool.get_mut(bufs.gemm.a[d]).data = seeded_vec(d as u64 + 1, 64 * 24);
+            pool.get_mut(bufs.gemm.b[d]).data = seeded_vec(d as u64 + 21, 24 * 32);
+        }
+        let mut full = vec![0.0f32; cfg.m * cfg.n];
+        for d in 0..n_dev {
+            let prod = linalg::matmul(&pool.get(bufs.gemm.a[d]).data, &pool.get(bufs.gemm.b[d]).data, cfg.m, cfg.n, cfg.k);
+            for (f, p) in full.iter_mut().zip(prod) {
+                *f += p;
+            }
+        }
+        let chunk = cfg.m / n_dev * cfg.n;
+        let plan = build_cluster_opts(&cfg, &cluster, Schedule::IntraSm, ClusterPath::Scatter, Some(&bufs));
+        run_functional(&mut pool, &plan);
+        for d in 0..n_dev {
+            assert_allclose(&pool.get(bufs.out[d]).data, &full[d * chunk..(d + 1) * chunk], 1e-5, 1e-6);
+        }
     }
 
     #[test]

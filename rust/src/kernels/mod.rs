@@ -39,18 +39,30 @@
 //!   rail across nodes (the "scale-out sweep" exhibit).
 //! * [`ring_attention::build_cluster`] — one node-major KV ring across all
 //!   GPUs; only the `K` node-boundary hops pay the NIC.
-//! * [`gemm_rs::build_cluster`] — cross-node GEMM+RS with locality-routed
-//!   scatter-adds (NVLink in-node, GPUDirect RDMA across).
+//! * [`gemm_rs::build_cluster`] — **hierarchical** cross-node GEMM+RS:
+//!   node-local pre-reduce of remote-owned partials over NVLink, then one
+//!   [`crate::pk::rail`]-coalesced RDMA flow per node pair (×P less NIC
+//!   traffic); the PR 1 locality-routed per-device scatter survives as
+//!   [`gemm_rs::ClusterPath::Scatter`] for the `rx1` ablation.
 //! * [`moe::build_cluster`] — expert-parallel dispatch across nodes with
 //!   **per-rail aggregation**: tokens for the same remote node coalesce
 //!   into one RDMA flow per (source, node) pair, a rail-peer forwarder
 //!   fans them out over NVLink, and experts still start their grouped
-//!   GEMM as soon as their tokens land. The cluster tuner
-//!   ([`crate::pk::tuner::tune_comm_sms_rdma_chunk`]) co-tunes the SM
-//!   partition with the coalesced RDMA write size.
-//! * [`collectives::pk_all_to_all_4d_cluster`] — guarded entry point: the
-//!   4-D all-to-all is single-node; multi-node clusters fail fast instead
-//!   of producing silently-NVLink-rated timings.
+//!   GEMM as soon as their tokens land. [`moe::build_cluster_layer`] adds
+//!   the **combine hop** (expert outputs pre-reduced per device and railed
+//!   back to the tokens' home nodes), closing the MoE layer loop. The
+//!   cluster tuner ([`crate::pk::tuner::tune_comm_sms_rdma_chunk`])
+//!   co-tunes the SM partition with the coalesced RDMA write size for any
+//!   rail kernel.
+//! * [`collectives::pk_all_to_all_4d_cluster`] — the **two-level** 4-D
+//!   all-to-all: intra-node NVLink tiles plus coalesced rail flows with
+//!   forwarders (it used to fail fast on several nodes; now it runs, and
+//!   [`ulysses::build_cluster`] builds the multi-node sequence-parallel
+//!   attention layer on it).
+//!
+//! All of the cross-node transports above are thin clients of the
+//! [`crate::pk::rail`] subsystem — the paper's small-set-of-primitives
+//! thesis applied at the scale-out layer.
 
 pub mod ag_gemm;
 pub mod collectives;
@@ -76,11 +88,25 @@ pub struct GemmKernelCfg {
     pub tile_m: usize,
     pub tile_n: usize,
     pub opts: LcscOpts,
+    /// Target coalesced RDMA write size for the cross-node rail flows
+    /// (cluster builds only; wave-chunks the per-node-pair reduce flows —
+    /// co-tunable with the SM partition via
+    /// [`crate::pk::tuner::tune_comm_sms_rdma_chunk`]).
+    pub rdma_chunk: f64,
 }
 
 impl GemmKernelCfg {
     pub fn new(node: NodeSpec, m: usize, n: usize, k: usize) -> Self {
-        GemmKernelCfg { node, m, n, k, tile_m: 128, tile_n: 256, opts: LcscOpts::default() }
+        GemmKernelCfg {
+            node,
+            m,
+            n,
+            k,
+            tile_m: 128,
+            tile_n: 256,
+            opts: LcscOpts::default(),
+            rdma_chunk: crate::pk::rail::DEFAULT_RDMA_CHUNK,
+        }
     }
 
     /// Small-shape config for functional tests: tiny tiles, few workers,
@@ -99,6 +125,7 @@ impl GemmKernelCfg {
                 comm_workers_per_device: 1,
                 pipeline_stages: 2,
             },
+            rdma_chunk: crate::pk::rail::DEFAULT_RDMA_CHUNK,
         }
     }
 

@@ -34,12 +34,29 @@
 //! A one-node cluster takes exactly the single-node code path:
 //! [`build`] delegates to [`build_cluster`] over [`ClusterSpec::single`],
 //! so the two can never drift (pinned by tests).
+//!
+//! ## Cluster combine (second hop)
+//!
+//! [`build_cluster_layer`] closes the MoE layer loop: after the expert
+//! GEMMs, each expert device routes its output rows back to the tokens'
+//! home devices with the same per-rail aggregation — a device-local
+//! pre-reduce over the experts it hosts (the payload is reducible, unlike
+//! the dispatch), one coalesced RDMA flow per (expert device, remote home
+//! node), and a rail-peer forwarder scatter-adding rows into the home
+//! tokens over NVLink. `combined[d][lt]` ends as the sum of the token's
+//! top-K expert outputs (unit gate weights).
+//!
+//! The transport layer itself — coalesced rail flows, wave split
+//! arithmetic, wave counters, fan-out credit bookkeeping — lives in
+//! [`crate::pk::rail`]; this builder is a thin client of it.
 
 use crate::hw::cluster::ClusterSpec;
 use crate::hw::spec::NodeSpec;
 use crate::hw::DeviceId;
+use crate::mem::pgl::ReduceOp;
 use crate::mem::tile::Shape4;
 use crate::mem::{BufId, MemPool, ELEM_BYTES};
+use crate::pk::rail::{wave_share, RailPlanner, RailSems, WaveCredits};
 use crate::plan::{Effect, MatView, Op, Plan, Role, Route, SemId, SyncScope, TransferSpec};
 use crate::xfer::Mechanism;
 
@@ -291,10 +308,9 @@ pub const DISPATCH_WAVES: usize = 4;
 /// paper-scale token counts).
 pub const MAX_DISPATCH_WAVES: usize = 16;
 
-/// Default coalesced RDMA write target: 4 MiB sits on the flat part of the
-/// RDMA message-size curve while still giving several overlap waves at
-/// paper-scale token counts.
-pub const DEFAULT_RDMA_CHUNK: f64 = 4.0 * 1024.0 * 1024.0;
+/// Default coalesced RDMA write target (re-exported from
+/// [`crate::pk::rail`], where the wave-chunking machinery lives).
+pub use crate::pk::rail::DEFAULT_RDMA_CHUNK;
 
 /// Build the fused dispatch + grouped-GEMM kernel on one node. Delegates
 /// to [`build_cluster`] over a one-node cluster (same code path — the
@@ -356,6 +372,30 @@ pub fn nic_dispatch_bytes(
         out[d] = count as f64 * cfg.token_bytes();
     }
     out
+}
+
+/// `rows[e]` = expert `e`'s routed tokens in **slot order** (ascending
+/// token id — [`Routing::tokens_for`] order), built in one O(T·K) pass.
+/// This is *the* slot layout: the dispatch writes `expert_in` rows and
+/// the combine hop reads `expert_out` rows through it, so both derive
+/// from this single helper.
+fn expert_token_rows(cfg: &MoeCfg, routing: &Routing) -> Vec<Vec<usize>> {
+    let mut rows: Vec<Vec<usize>> = vec![vec![]; cfg.n_experts];
+    for (t, ex) in routing.experts.iter().enumerate() {
+        for &e in ex {
+            rows[e].push(t);
+        }
+    }
+    rows
+}
+
+/// `slot_map[e][&t]` = token `t`'s row slot in expert `e`'s segmented
+/// input buffer (the inverse view of [`expert_token_rows`]).
+fn expert_slot_map(cfg: &MoeCfg, routing: &Routing) -> Vec<std::collections::HashMap<usize, usize>> {
+    expert_token_rows(cfg, routing)
+        .into_iter()
+        .map(|rows| rows.into_iter().enumerate().map(|(slot, t)| (t, slot)).collect())
+        .collect()
 }
 
 /// Build the fused dispatch + grouped-GEMM kernel across a cluster:
@@ -421,6 +461,9 @@ pub fn build_cluster(
         })
         .collect();
 
+    // the rail transport layer: coalesced per-(source, node) RDMA flows
+    // wave-chunked by rdma_chunk (pk::rail owns the arithmetic).
+    let rail = RailPlanner::new(cluster, cfg.rdma_chunk);
     // wave count: single-node keeps the fixed pipeline depth; the cluster
     // path targets one rdma_chunk-sized write per rail flow per wave.
     let waves = if k_cnt == 1 {
@@ -433,11 +476,7 @@ pub fn build_cluster(
             .max()
             .unwrap_or(0) as f64
             * cfg.token_bytes();
-        ((max_rail_bytes / cfg.rdma_chunk).ceil() as usize).clamp(DISPATCH_WAVES, MAX_DISPATCH_WAVES)
-    };
-    let wave_share = |total: u64, wave: usize| -> u64 {
-        let base = total / waves as u64;
-        if wave == waves - 1 { total - base * (waves as u64 - 1) } else { base }
+        rail.waves(max_rail_bytes, DISPATCH_WAVES, MAX_DISPATCH_WAVES)
     };
     // cumulative credits per expert after each wave (all sources landed)
     let cum_credit: Vec<Vec<u64>> = (0..cfg.n_experts)
@@ -446,15 +485,19 @@ pub fn build_cluster(
             (0..waves)
                 .map(|w| {
                     for d in 0..n {
-                        acc += wave_share(contrib[d][e], w);
+                        acc += wave_share(contrib[d][e], w, waves);
                     }
                     acc
                 })
                 .collect()
         })
         .collect();
-    // expert slot of each (expert, token): position in tokens_for order
-    let slot_of = |e: usize, t: usize| routing.tokens_for(e).iter().position(|&x| x == t).unwrap();
+    // expert slot of each (expert, token): the token's rank in tokens_for
+    // order, precomputed in one O(T·K) pass — the per-call
+    // `tokens_for(e).position(t)` scan this replaces was O(E·T) per lookup
+    // (a quadratic blowup at large token counts) and carried an `unwrap`.
+    let slot_map = if bufs.is_some() { expert_slot_map(cfg, routing) } else { vec![] };
+    let slot_of = |e: usize, t: usize| slot_map[e][&t];
 
     // per-(source device, remote node) wave counters for the rail flows:
     // bumped once per wave (even empty waves, so thresholds stay uniform);
@@ -462,7 +505,7 @@ pub fn build_cluster(
     let rail_done: Vec<Vec<SemId>> = if k_cnt == 1 {
         vec![]
     } else {
-        (0..n).map(|_| (0..k_cnt).map(|_| plan.add_sem(0)).collect()).collect()
+        RailSems::alloc(&mut plan, cluster).done
     };
 
     // ---- dispatch workers (one per source device)
@@ -519,7 +562,7 @@ pub fn build_cluster(
                     if ids.is_empty() {
                         continue;
                     }
-                    let r = kn * p_cnt + (d % p_cnt); // rail peer on node kn
+                    let r = rail.peer(DeviceId(d), kn).0; // rail peer on node kn
                     let bytes = ids.len() as f64 * cfg.token_bytes();
                     let src = MatView::full2d(b.moe.tokens[d], tl, cfg.hidden);
                     let dst = MatView {
@@ -531,22 +574,16 @@ pub fn build_cluster(
                         rows: ids.len(),
                         cols: cfg.hidden,
                     };
-                    plan.push(
+                    rail.send(
+                        &mut plan,
                         w,
-                        Op::Transfer {
-                            spec: TransferSpec {
-                                mech: Mechanism::Tma,
-                                route: Route::Rdma { src: DeviceId(d), dst: DeviceId(r) },
-                                bytes,
-                                msg_bytes: bytes.min(cfg.rdma_chunk),
-                                n_sms: cfg.comm_sms as f64,
-                            },
-                            blocking: false,
-                            done_sem: Some(rail_done[d][kn]),
-                            done_scope: SyncScope::InterNode,
-                            label: "moe_rail_send",
-                            effect: Some(Effect::GatherRows { src, rows: ids.clone(), dst }),
-                        },
+                        DeviceId(d),
+                        kn,
+                        bytes,
+                        cfg.comm_sms as f64,
+                        Some(rail_done[d][kn]),
+                        "moe_rail_send",
+                        Some(Effect::GatherRows { src, rows: ids.clone(), dst }),
                     );
                 }
             }
@@ -558,14 +595,15 @@ pub fn build_cluster(
                 // experts begin wave-w GEMM chunks while later waves are
                 // still in flight — the fine-grained overlap itself.
                 for wave in 0..waves {
-                    let mut pending: Vec<(SemId, Vec<(usize, u64)>)> = vec![];
+                    let mut pending = WaveCredits::new();
                     for dst_dev in 0..n {
                         if dst_dev / p_cnt != my_node {
                             continue; // remote: rides the rail flow below
                         }
                         // this wave's share (last wave takes the remainder)
-                        let share: u64 =
-                            (0..el).map(|le| wave_share(contrib[d][dst_dev * el + le], wave)).sum();
+                        let share: u64 = (0..el)
+                            .map(|le| wave_share(contrib[d][dst_dev * el + le], wave, waves))
+                            .sum();
                         if share == 0 {
                             continue;
                         }
@@ -593,12 +631,12 @@ pub fn build_cluster(
                         let mut credits = vec![];
                         for le in 0..el {
                             let e = dst_dev * el + le;
-                            let c = wave_share(contrib[d][e], wave);
+                            let c = wave_share(contrib[d][e], wave, waves);
                             if c > 0 {
-                                credits.push((e, c));
+                                credits.push((arrived[e], c));
                             }
                         }
-                        pending.push((drain, credits));
+                        pending.defer(drain, credits);
                     }
                     // rail flows: one coalesced RDMA write per remote node
                     // (issued even when this wave's share is zero, so the
@@ -607,34 +645,22 @@ pub fn build_cluster(
                         if kn == my_node {
                             continue;
                         }
-                        let share = wave_share(rail_token_ids[d][kn].len() as u64, wave);
+                        let share = wave_share(rail_token_ids[d][kn].len() as u64, wave, waves);
                         let bytes = share as f64 * cfg.token_bytes();
-                        let r = kn * p_cnt + (d % p_cnt);
-                        plan.push(
+                        rail.send(
+                            &mut plan,
                             w,
-                            Op::Transfer {
-                                spec: TransferSpec {
-                                    mech: Mechanism::Tma,
-                                    route: Route::Rdma { src: DeviceId(d), dst: DeviceId(r) },
-                                    bytes,
-                                    msg_bytes: bytes.min(cfg.rdma_chunk),
-                                    n_sms: cfg.comm_sms as f64,
-                                },
-                                blocking: false,
-                                done_sem: Some(rail_done[d][kn]),
-                                done_scope: SyncScope::InterNode,
-                                label: "moe_rail_send",
-                                effect: None,
-                            },
+                            DeviceId(d),
+                            kn,
+                            bytes,
+                            cfg.comm_sms as f64,
+                            Some(rail_done[d][kn]),
+                            "moe_rail_send",
+                            None,
                         );
                     }
                     // wave barrier: wait for this wave's flows, then credit
-                    for (drain, credits) in pending {
-                        plan.push(w, Op::Wait { sem: drain, value: 1 });
-                        for (e, contrib) in credits {
-                            plan.push(w, Op::Signal { sem: arrived[e], value: contrib, scope: SyncScope::InterDevice });
-                        }
-                    }
+                    pending.flush(&mut plan, w, SyncScope::InterDevice);
                     for kn in 0..k_cnt {
                         if kn != my_node {
                             plan.push(w, Op::Wait { sem: rail_done[d][kn], value: wave as u64 + 1 });
@@ -657,7 +683,7 @@ pub fn build_cluster(
                         if kn == my_node {
                             continue;
                         }
-                        let s = kn * p_cnt + (g % p_cnt); // rail-peer source
+                        let s = rail.peer(DeviceId(g), kn).0; // rail-peer source
                         let ids = &rail_token_ids[s][my_node];
                         if ids.is_empty() {
                             continue;
@@ -711,16 +737,16 @@ pub fn build_cluster(
                 }
                 None => {
                     for wave in 0..waves {
-                        let mut pending: Vec<(SemId, Vec<(usize, u64)>)> = vec![];
+                        let mut pending = WaveCredits::new();
                         for kn in 0..k_cnt {
                             if kn == my_node {
                                 continue;
                             }
-                            let s = kn * p_cnt + (g % p_cnt);
+                            let s = rail.peer(DeviceId(g), kn).0;
                             plan.push(w, Op::Wait { sem: rail_done[s][my_node], value: wave as u64 + 1 });
                             for dst_dev in my_node * p_cnt..(my_node + 1) * p_cnt {
                                 let share: u64 = (0..el)
-                                    .map(|le| wave_share(contrib[s][dst_dev * el + le], wave))
+                                    .map(|le| wave_share(contrib[s][dst_dev * el + le], wave, waves))
                                     .sum();
                                 if share == 0 {
                                     continue;
@@ -747,20 +773,15 @@ pub fn build_cluster(
                                 let mut credits = vec![];
                                 for le in 0..el {
                                     let e = dst_dev * el + le;
-                                    let c = wave_share(contrib[s][e], wave);
+                                    let c = wave_share(contrib[s][e], wave, waves);
                                     if c > 0 {
-                                        credits.push((e, c));
+                                        credits.push((arrived[e], c));
                                     }
                                 }
-                                pending.push((drain, credits));
+                                pending.defer(drain, credits);
                             }
                         }
-                        for (drain, credits) in pending {
-                            plan.push(w, Op::Wait { sem: drain, value: 1 });
-                            for (e, contrib) in credits {
-                                plan.push(w, Op::Signal { sem: arrived[e], value: contrib, scope: SyncScope::InterDevice });
-                            }
-                        }
+                        pending.flush(&mut plan, w, SyncScope::InterDevice);
                     }
                 }
             }
@@ -829,10 +850,406 @@ pub fn build_cluster(
     plan
 }
 
+/// Per-(expert device, home node) distinct tokens of the combine hop, in
+/// token-id order (the slot layout of the `accum`/`stage` regions): token
+/// `t` appears in `ids[d][kn]` iff at least one of its experts lives on
+/// `d` and its home device lives on *remote* node `kn`. Deduplication is
+/// the aggregation win: a device hosting several of a token's experts
+/// pre-reduces their rows locally and ships **one** row per token per
+/// node, not one per expert.
+fn combine_token_ids(cfg: &MoeCfg, cluster: &ClusterSpec, routing: &Routing) -> Vec<Vec<Vec<usize>>> {
+    let n = cluster.total_devices();
+    let p = cluster.devices_per_node();
+    let k = cluster.num_nodes;
+    let tl = cfg.tokens_local_of(n);
+    let mut ids: Vec<Vec<Vec<usize>>> = vec![vec![vec![]; k]; n];
+    // per-device "seen this token" stamps (stamp = token id + 1), so the
+    // dedup scratch is allocated once, not per token
+    let mut seen = vec![0usize; n];
+    for t in 0..cfg.tokens {
+        let home_node = t / tl / p;
+        for &e in &routing.experts[t] {
+            let d = cfg.expert_device_of(e, n);
+            if d / p != home_node && seen[d] != t + 1 {
+                seen[d] = t + 1;
+                ids[d][home_node].push(t);
+            }
+        }
+    }
+    ids
+}
+
+/// Per-device NIC egress bytes of the cluster **combine** hop.
+///
+/// `aggregated == true` models the per-rail pre-reduced path built by
+/// [`build_cluster_layer`]: each expert device ships one `h_expert` row
+/// per *distinct* (token, remote home node) pair, regardless of how many
+/// of the token's experts it hosts. `aggregated == false` models naive
+/// per-expert RDMA sends: one row per (expert, token) pair — up to ×TopK
+/// more when a token's experts cluster on one device (the reduction the
+/// claims tests pin).
+pub fn nic_combine_bytes(
+    cfg: &MoeCfg,
+    cluster: &ClusterSpec,
+    routing: &Routing,
+    aggregated: bool,
+) -> Vec<f64> {
+    let n = cluster.total_devices();
+    let p = cluster.devices_per_node();
+    let tl = cfg.tokens_local_of(n);
+    let row_bytes = cfg.h_expert as f64 * ELEM_BYTES as f64;
+    if aggregated {
+        // derived from the same slot lists the plan builder ships, so the
+        // accounting can never drift from the built flows
+        return combine_token_ids(cfg, cluster, routing)
+            .iter()
+            .map(|per_node| per_node.iter().map(|ids| ids.len()).sum::<usize>() as f64 * row_bytes)
+            .collect();
+    }
+    let mut out = vec![0.0; n];
+    for t in 0..cfg.tokens {
+        let home_node = t / tl / p;
+        for &e in &routing.experts[t] {
+            let d = cfg.expert_device_of(e, n);
+            if d / p != home_node {
+                out[d] += row_bytes;
+            }
+        }
+    }
+    out
+}
+
+/// Functional buffers for the combine hop of [`build_cluster_layer`].
+#[derive(Clone, Debug)]
+pub struct MoeCombineBufs {
+    /// `combined[d]`: (tokens_local × h_expert) — token row `lt` ends as
+    /// the sum of token `d·tl+lt`'s top-K expert output rows.
+    pub combined: Vec<BufId>,
+    /// `accum[d]`: (num_nodes, 1, cap_c, h_expert) sender-side pre-reduce:
+    /// region `b = kn` row `i` accumulates every local expert's output row
+    /// for the i-th distinct token device `d` routes back to node `kn`.
+    pub accum: Vec<BufId>,
+    /// `stage[g]`: (num_nodes, 1, cap_c, h_expert) landing area: region
+    /// `b = k''` holds the rows RDMA'd from rail peer `(k'', rank(g))`.
+    pub stage: Vec<BufId>,
+    /// Max rows any (expert device, remote home node) pair coalesces.
+    pub cap_c: usize,
+}
+
+impl MoeCombineBufs {
+    pub fn alloc(
+        pool: &mut MemPool,
+        cfg: &MoeCfg,
+        cluster: &ClusterSpec,
+        routing: &Routing,
+    ) -> Self {
+        let n = cluster.total_devices();
+        let k = cluster.num_nodes;
+        let tl = cfg.tokens_local_of(n);
+        let ids = combine_token_ids(cfg, cluster, routing);
+        let cap = ids.iter().flatten().map(|v| v.len()).max().unwrap_or(0).max(1);
+        MoeCombineBufs {
+            combined: (0..n).map(|d| pool.alloc(DeviceId(d), Shape4::mat(tl, cfg.h_expert))).collect(),
+            accum: (0..n)
+                .map(|d| pool.alloc(DeviceId(d), Shape4 { b: k, d: 1, r: cap, c: cfg.h_expert }))
+                .collect(),
+            stage: (0..n)
+                .map(|g| pool.alloc(DeviceId(g), Shape4 { b: k, d: 1, r: cap, c: cfg.h_expert }))
+                .collect(),
+            cap_c: cap,
+        }
+    }
+}
+
+/// The full MoE layer across the cluster: the dispatch + grouped GEMM of
+/// [`build_cluster`], then the **combine hop** routing expert outputs back
+/// to the tokens' home devices with the same per-rail aggregation (module
+/// docs). On a one-node cluster the combine degenerates to the NVLink
+/// return flows — no rail machinery is emitted.
+pub fn build_cluster_layer(
+    cfg: &MoeCfg,
+    cluster: &ClusterSpec,
+    routing: &Routing,
+    schedule: MoeSchedule,
+    bufs: Option<(&MoeClusterBufs, &MoeCombineBufs)>,
+) -> Plan {
+    let mut plan = build_cluster(cfg, cluster, routing, schedule, bufs.map(|(b, _)| b));
+    let n = cluster.total_devices();
+    let p_cnt = cluster.devices_per_node();
+    let k_cnt = cluster.num_nodes;
+    let tl = cfg.tokens_local_of(n);
+    let el = cfg.experts_local_of(n);
+    let rail = RailPlanner::new(cluster, cfg.rdma_chunk);
+    let row_bytes = cfg.h_expert as f64 * ELEM_BYTES as f64;
+    let ids = combine_token_ids(cfg, cluster, routing);
+    // intra-node return-row counts per (expert device, home device) — the
+    // coalesced NVLink return flows of the timing mode
+    let mut intra_rows = vec![vec![0u64; n]; n];
+    for t in 0..cfg.tokens {
+        let home = t / tl;
+        for &e in &routing.experts[t] {
+            let d = cfg.expert_device_of(e, n);
+            if d / p_cnt == home / p_cnt {
+                intra_rows[d][home] += 1;
+            }
+        }
+    }
+    // every expert-GEMM worker flags its device's completion; the combine
+    // senders start from the finished expert outputs
+    let gemm_done: Vec<SemId> = (0..n).map(|_| plan.add_sem(0)).collect();
+    for wi in 0..plan.workers.len() {
+        if plan.workers[wi].label.starts_with("moe_gemm/") {
+            let dev = plan.workers[wi].device.0;
+            plan.push(wi, Op::Signal { sem: gemm_done[dev], value: 1, scope: SyncScope::InterDevice });
+        }
+    }
+    let comb_done: Vec<Vec<SemId>> =
+        if k_cnt == 1 { vec![] } else { RailSems::alloc(&mut plan, cluster).done };
+    // the shared slot layout: expert_out rows are read in exactly the
+    // order the dispatch wrote expert_in (same helper, cannot drift)
+    let expert_rows = expert_token_rows(cfg, routing);
+
+    // ---- combine senders (one per expert device)
+    for d in 0..n {
+        let my_node = d / p_cnt;
+        let w = plan.add_worker(DeviceId(d), Role::CommSm, format!("moe_combine/d{d}"));
+        plan.push(w, Op::Wait { sem: gemm_done[d], value: 1 });
+        match bufs {
+            Some((b, cb)) => {
+                for le in 0..el {
+                    let e = d * el + le;
+                    for (slot, &t) in expert_rows[e].iter().enumerate() {
+                        let home = t / tl;
+                        let src = MatView {
+                            buf: b.moe.expert_out[d],
+                            b: le,
+                            d: 0,
+                            row0: slot,
+                            col0: 0,
+                            rows: 1,
+                            cols: cfg.h_expert,
+                        };
+                        if home / p_cnt == my_node {
+                            // same-node home: direct NVLink reduce-add
+                            let dst = MatView::full2d(cb.combined[home], tl, cfg.h_expert)
+                                .sub(t % tl, 0, 1, cfg.h_expert);
+                            plan.push(
+                                w,
+                                Op::Transfer {
+                                    spec: TransferSpec {
+                                        mech: Mechanism::Tma,
+                                        route: Route::P2p { src: DeviceId(d), dst: DeviceId(home) },
+                                        bytes: row_bytes,
+                                        msg_bytes: row_bytes,
+                                        n_sms: cfg.comm_sms as f64,
+                                    },
+                                    blocking: false,
+                                    done_sem: None,
+                                    done_scope: SyncScope::InterDevice,
+                                    label: "moe_combine_send",
+                                    effect: Some(Effect::CopyMat { src, dst, reduce: Some(ReduceOp::Add) }),
+                                },
+                            );
+                        } else {
+                            // remote home: pre-reduce into the coalesced
+                            // per-node accumulator (local HBM add)
+                            let kn = home / p_cnt;
+                            let idx = ids[d][kn]
+                                .binary_search(&t)
+                                .expect("combine token must have a slot in its rail flow");
+                            let dst = MatView {
+                                buf: cb.accum[d],
+                                b: kn,
+                                d: 0,
+                                row0: idx,
+                                col0: 0,
+                                rows: 1,
+                                cols: cfg.h_expert,
+                            };
+                            plan.push(
+                                w,
+                                Op::Compute {
+                                    dur: 0.0,
+                                    label: "moe_combine_accum",
+                                    effect: Some(Effect::CopyMat { src, dst, reduce: Some(ReduceOp::Add) }),
+                                },
+                            );
+                        }
+                    }
+                }
+                // one coalesced pre-reduced RDMA flow per remote home node
+                for kn in 0..k_cnt {
+                    if kn == my_node || ids[d][kn].is_empty() {
+                        continue;
+                    }
+                    let list = &ids[d][kn];
+                    let r = rail.peer(DeviceId(d), kn).0;
+                    let src = MatView {
+                        buf: cb.accum[d],
+                        b: kn,
+                        d: 0,
+                        row0: 0,
+                        col0: 0,
+                        rows: list.len(),
+                        cols: cfg.h_expert,
+                    };
+                    let dst = MatView {
+                        buf: cb.stage[r],
+                        b: my_node,
+                        d: 0,
+                        row0: 0,
+                        col0: 0,
+                        rows: list.len(),
+                        cols: cfg.h_expert,
+                    };
+                    rail.send(
+                        &mut plan,
+                        w,
+                        DeviceId(d),
+                        kn,
+                        list.len() as f64 * row_bytes,
+                        cfg.comm_sms as f64,
+                        Some(comb_done[d][kn]),
+                        "moe_combine_rail",
+                        Some(Effect::CopyMat { src, dst, reduce: None }),
+                    );
+                }
+            }
+            None => {
+                // timing: coalesced NVLink return flows per home device...
+                for home in my_node * p_cnt..(my_node + 1) * p_cnt {
+                    let rows = intra_rows[d][home];
+                    if rows == 0 {
+                        continue;
+                    }
+                    plan.push(
+                        w,
+                        Op::Transfer {
+                            spec: TransferSpec {
+                                mech: Mechanism::Tma,
+                                route: Route::P2p { src: DeviceId(d), dst: DeviceId(home) },
+                                bytes: rows as f64 * row_bytes,
+                                msg_bytes: row_bytes,
+                                n_sms: cfg.comm_sms as f64 / p_cnt as f64,
+                            },
+                            blocking: false,
+                            done_sem: None,
+                            done_scope: SyncScope::InterDevice,
+                            label: "moe_combine_send",
+                            effect: None,
+                        },
+                    );
+                }
+                // ...plus one rail flow per remote node, issued even when
+                // empty so the forwarders' wave counters stay uniform
+                for kn in 0..k_cnt {
+                    if kn == my_node {
+                        continue;
+                    }
+                    rail.send(
+                        &mut plan,
+                        w,
+                        DeviceId(d),
+                        kn,
+                        ids[d][kn].len() as f64 * row_bytes,
+                        cfg.comm_sms as f64,
+                        Some(comb_done[d][kn]),
+                        "moe_combine_rail",
+                        None,
+                    );
+                }
+            }
+        }
+    }
+
+    // ---- combine forwarders (cluster only): scatter landed rows into the
+    // home tokens over NVLink
+    if k_cnt > 1 {
+        for g in 0..n {
+            let my_node = g / p_cnt;
+            let w = plan.add_worker(DeviceId(g), Role::CommSm, format!("moe_combine_fwd/d{g}"));
+            for kn in 0..k_cnt {
+                if kn == my_node {
+                    continue;
+                }
+                let s = rail.peer(DeviceId(g), kn).0;
+                let list = &ids[s][my_node];
+                match bufs {
+                    Some((_, cb)) => {
+                        if list.is_empty() {
+                            continue;
+                        }
+                        plan.push(w, Op::Wait { sem: comb_done[s][my_node], value: 1 });
+                        for (i, &t) in list.iter().enumerate() {
+                            let home = t / tl;
+                            let src = MatView {
+                                buf: cb.stage[g],
+                                b: kn,
+                                d: 0,
+                                row0: i,
+                                col0: 0,
+                                rows: 1,
+                                cols: cfg.h_expert,
+                            };
+                            let dst = MatView::full2d(cb.combined[home], tl, cfg.h_expert)
+                                .sub(t % tl, 0, 1, cfg.h_expert);
+                            plan.push(
+                                w,
+                                Op::Transfer {
+                                    spec: TransferSpec {
+                                        mech: Mechanism::Tma,
+                                        route: Route::P2p { src: DeviceId(g), dst: DeviceId(home) },
+                                        bytes: row_bytes,
+                                        msg_bytes: row_bytes,
+                                        n_sms: cfg.comm_sms as f64,
+                                    },
+                                    blocking: false,
+                                    done_sem: None,
+                                    done_scope: SyncScope::InterDevice,
+                                    label: "moe_combine_fwd",
+                                    effect: Some(Effect::CopyMat { src, dst, reduce: Some(ReduceOp::Add) }),
+                                },
+                            );
+                        }
+                    }
+                    None => {
+                        plan.push(w, Op::Wait { sem: comb_done[s][my_node], value: 1 });
+                        for home in my_node * p_cnt..(my_node + 1) * p_cnt {
+                            let rows = list.iter().filter(|&&t| t / tl == home).count();
+                            if rows == 0 {
+                                continue;
+                            }
+                            plan.push(
+                                w,
+                                Op::Transfer {
+                                    spec: TransferSpec {
+                                        mech: Mechanism::Tma,
+                                        route: Route::P2p { src: DeviceId(g), dst: DeviceId(home) },
+                                        bytes: rows as f64 * row_bytes,
+                                        msg_bytes: row_bytes,
+                                        n_sms: cfg.comm_sms as f64 / p_cnt as f64,
+                                    },
+                                    blocking: false,
+                                    done_sem: None,
+                                    done_scope: SyncScope::InterDevice,
+                                    label: "moe_combine_fwd",
+                                    effect: None,
+                                },
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    plan
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::exec::TimedExec;
+    use crate::util::prop::run_functional;
     use crate::util::{assert_allclose, linalg, seeded_vec};
 
     fn small_cfg(n_dev: usize) -> MoeCfg {
@@ -897,7 +1314,7 @@ mod tests {
             pool.get_mut(bufs.w1[d]).data = seeded_vec(d as u64 + 99, el * cfg.hidden * cfg.h_expert);
         }
         let plan = build(&cfg, &routing, MoeSchedule::Overlapped, Some(&bufs));
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         // reference: for each expert, gather its tokens and multiply
         let el = cfg.experts_local();
         for e in 0..cfg.n_experts {
@@ -944,7 +1361,7 @@ mod tests {
                     seeded_vec(d as u64 + 99, el * cfg.hidden * cfg.h_expert);
             }
             let plan = build_cluster(&cfg, &cluster, &routing, MoeSchedule::Overlapped, Some(&bufs));
-            FunctionalExec::new(&mut pool).run(&plan).unwrap();
+            run_functional(&mut pool, &plan);
             for e in 0..cfg.n_experts {
                 let toks = routing.tokens_for(e);
                 if toks.is_empty() {
@@ -1037,5 +1454,128 @@ mod tests {
             .run(&build_cluster(&cfg, &cluster, &routing, MoeSchedule::Sequential, None))
             .total_time;
         assert!(t_ov < t_seq, "cluster overlap must help: {t_ov} vs {t_seq}");
+    }
+
+    #[test]
+    fn functional_cluster_layer_combine_matches_reference() {
+        // full layer: dispatch + expert GEMM + combine. Every token's
+        // combined row must equal the sum of its top-K expert outputs,
+        // with cross-node rows riding the pre-reduced rail flows.
+        for (k, p) in [(2usize, 2usize), (3, 2)] {
+            let (cfg, cluster) = cluster_cfg(k, p);
+            let n = cluster.total_devices();
+            let routing = Routing::uniform(&cfg, 31);
+            let mut pool = MemPool::new();
+            let bufs = MoeClusterBufs::alloc(&mut pool, &cfg, &cluster, &routing);
+            let comb = MoeCombineBufs::alloc(&mut pool, &cfg, &cluster, &routing);
+            let tl = cfg.tokens_local_of(n);
+            let el = cfg.experts_local_of(n);
+            for d in 0..n {
+                pool.get_mut(bufs.moe.tokens[d]).data = seeded_vec(d as u64 + 1, tl * cfg.hidden);
+                pool.get_mut(bufs.moe.w1[d]).data =
+                    seeded_vec(d as u64 + 99, el * cfg.hidden * cfg.h_expert);
+            }
+            let plan =
+                build_cluster_layer(&cfg, &cluster, &routing, MoeSchedule::Overlapped, Some((&bufs, &comb)));
+            run_functional(&mut pool, &plan);
+            for t in 0..cfg.tokens {
+                let src_dev = t / tl;
+                let lt = t % tl;
+                let x =
+                    pool.get(bufs.moe.tokens[src_dev]).data[lt * cfg.hidden..(lt + 1) * cfg.hidden].to_vec();
+                let mut want = vec![0.0f32; cfg.h_expert];
+                for &e in &routing.experts[t] {
+                    let dev = cfg.expert_device_of(e, n);
+                    let le = e % el;
+                    let wbuf = pool.get(bufs.moe.w1[dev]);
+                    let woff = wbuf.shape.offset(le, 0, 0, 0);
+                    let y = linalg::matmul(
+                        &x,
+                        &wbuf.data[woff..woff + cfg.hidden * cfg.h_expert],
+                        1,
+                        cfg.h_expert,
+                        cfg.hidden,
+                    );
+                    for (wv, yv) in want.iter_mut().zip(y) {
+                        *wv += yv;
+                    }
+                }
+                let cbuf = pool.get(comb.combined[src_dev]);
+                assert_allclose(
+                    &cbuf.data[lt * cfg.h_expert..(lt + 1) * cfg.h_expert],
+                    &want,
+                    1e-4,
+                    1e-5,
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_layer_nic_bytes_are_dispatch_plus_combine() {
+        // the layer's NIC egress is exactly the aggregated dispatch bytes
+        // plus the aggregated (pre-reduced) combine bytes — no hidden
+        // flows, no double-counting.
+        use crate::hw::topology::Port;
+        let (cfg, cluster) = cluster_cfg(2, 3);
+        let routing = Routing::uniform(&cfg, 37);
+        let plan = build_cluster_layer(&cfg, &cluster, &routing, MoeSchedule::Overlapped, None);
+        let r = TimedExec::on_cluster(cluster.clone()).run(&plan);
+        let dispatch = nic_dispatch_bytes(&cfg, &cluster, &routing, true);
+        let combine = nic_combine_bytes(&cfg, &cluster, &routing, true);
+        for g in 0..cluster.total_devices() {
+            let got = r.port_bytes.get(&Port::NicEgress(DeviceId(g))).copied().unwrap_or(0.0);
+            let want = dispatch[g] + combine[g];
+            assert!((got - want).abs() < 1.0, "dev {g}: NIC egress {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn combine_aggregation_dedups_same_device_experts() {
+        // canonical worst case: all top-K experts of a token live on ONE
+        // remote device — naive per-expert sends cross the NIC TopK times
+        // per token, the pre-reduced rail flow exactly once.
+        let (k, p) = (2usize, 2usize);
+        let n = k * p;
+        let (mut cfg, cluster) = cluster_cfg(k, p);
+        cfg.top_k = 2; // == experts per device
+        let tl = cfg.tokens_local_of(n);
+        let el = cfg.experts_local_of(n);
+        assert_eq!(el, cfg.top_k);
+        let experts: Vec<Vec<usize>> = (0..cfg.tokens)
+            .map(|t| {
+                let home_node = t / tl / p;
+                let dst_dev = ((home_node + 1) % k) * p; // rank-0 device of the other node
+                (0..cfg.top_k).map(|i| dst_dev * el + i).collect()
+            })
+            .collect();
+        let routing = Routing { experts };
+        let agg: f64 = nic_combine_bytes(&cfg, &cluster, &routing, true).iter().sum();
+        let naive: f64 = nic_combine_bytes(&cfg, &cluster, &routing, false).iter().sum();
+        assert!(agg > 0.0);
+        assert!(
+            ((naive / agg) - cfg.top_k as f64).abs() < 1e-9,
+            "combine pre-reduce must dedup exactly xTopK: {}",
+            naive / agg
+        );
+    }
+
+    #[test]
+    fn cluster_layer_overlapped_beats_sequential_and_extends_dispatch() {
+        let cluster = ClusterSpec::hgx_h100_pod(2);
+        let cfg = MoeCfg::paper(cluster.node.clone(), 1024 * cluster.total_devices());
+        let routing = Routing::uniform(&cfg, 41);
+        let exec = TimedExec::on_cluster(cluster.clone());
+        let t_ov = exec
+            .run(&build_cluster_layer(&cfg, &cluster, &routing, MoeSchedule::Overlapped, None))
+            .total_time;
+        let t_seq = exec
+            .run(&build_cluster_layer(&cfg, &cluster, &routing, MoeSchedule::Sequential, None))
+            .total_time;
+        assert!(t_ov < t_seq, "layer overlap must help: {t_ov} vs {t_seq}");
+        let t_disp = exec
+            .run(&build_cluster(&cfg, &cluster, &routing, MoeSchedule::Overlapped, None))
+            .total_time;
+        assert!(t_ov > t_disp, "the combine hop takes wall-clock time: {t_ov} vs {t_disp}");
     }
 }

@@ -291,7 +291,8 @@ pub fn build_cluster(cfg: &ClusterRingAttnCfg, bufs: Option<&RingAttnBufs>) -> P
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::exec::TimedExec;
+    use crate::util::prop::run_functional;
     use crate::util::{assert_allclose, linalg, seeded_vec};
 
     #[test]
@@ -339,7 +340,7 @@ mod tests {
             }
         }
         let plan = build(&cfg, Some(&bufs));
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         // each device's output == attention(Q_local, K_full, V_full)
         for dev in 0..n {
             for bi in 0..cfg.b {
@@ -401,7 +402,7 @@ mod tests {
             }
         }
         let plan = build_cluster(&cfg, Some(&bufs));
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         for dev in 0..n {
             for bi in 0..cfg.b {
                 for hi in 0..cfg.h {

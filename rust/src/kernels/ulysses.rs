@@ -8,14 +8,21 @@
 //! PK's tile-granular all-to-all runs directly on the `(B, S, H, D)`
 //! layout. The YunChang baseline is in [`crate::baselines::yunchang`].
 //!
-//! This layer is **single-node**: the all-to-all assumes every device pair
-//! is NVLink-reachable. Cluster callers must go through
-//! [`crate::kernels::collectives::pk_all_to_all_4d_cluster`], which
-//! delegates on one node and fails fast on several (a silently-NVLink-rated
-//! cross-node exchange would corrupt any Ulysses scale-out sweep); the
-//! two-level variant is a ROADMAP follow-on.
+//! [`build`] is the single-node layer. [`build_cluster`] extends it across
+//! a multi-node [`ClusterSpec`] for sequence-parallel serving at cluster
+//! scale: sequence and heads shard over **all** `K·P` GPUs, and every
+//! exchange runs through the **two-level**
+//! [`crate::kernels::collectives::pk_all_to_all_4d_cluster`] — intra-node
+//! NVLink tiles plus one [`crate::pk::rail`]-coalesced RDMA flow per
+//! (device, remote node) pair with rail-peer forwarders. (Until the
+//! two-level all-to-all landed, that entry point *failed fast* on several
+//! nodes, because a flat all-to-all would silently rate cross-node tiles
+//! at NVLink speed and corrupt any scale-out sweep; the fail-fast is gone
+//! and the `rx1` exhibit sweeps Ulysses over 1→4 nodes.) A one-node
+//! cluster delegates to [`build`] bit-identically.
 
-use super::collectives::{pk_all_to_all_4d, A2aCfg};
+use super::collectives::{pk_all_to_all_4d, pk_all_to_all_4d_cluster, A2aCfg};
+use crate::hw::cluster::ClusterSpec;
 use crate::hw::spec::NodeSpec;
 use crate::hw::DeviceId;
 use crate::mem::tile::Shape4;
@@ -41,18 +48,34 @@ impl UlyssesCfg {
     }
 
     pub fn s_local(&self) -> usize {
-        assert_eq!(self.s % self.node.num_devices, 0);
-        self.s / self.node.num_devices
+        self.s_local_of(self.node.num_devices)
     }
 
     pub fn h_local(&self) -> usize {
-        assert_eq!(self.h % self.node.num_devices, 0);
-        self.h / self.node.num_devices
+        self.h_local_of(self.node.num_devices)
+    }
+
+    /// Sequence shard when the layer spreads over `n_dev` devices (the
+    /// cluster path shards over all `K·P` GPUs).
+    pub fn s_local_of(&self, n_dev: usize) -> usize {
+        assert_eq!(self.s % n_dev, 0);
+        self.s / n_dev
+    }
+
+    /// Head shard over `n_dev` devices.
+    pub fn h_local_of(&self, n_dev: usize) -> usize {
+        assert_eq!(self.h % n_dev, 0);
+        self.h / n_dev
     }
 
     /// Attention FLOPs per device: local heads, full sequence.
     pub fn attn_flops(&self) -> f64 {
-        4.0 * (self.b * self.h_local()) as f64 * (self.s as f64).powi(2) * self.d as f64
+        self.attn_flops_of(self.node.num_devices)
+    }
+
+    /// Attention FLOPs per device when heads spread over `n_dev`.
+    pub fn attn_flops_of(&self, n_dev: usize) -> f64 {
+        4.0 * (self.b * self.h_local_of(n_dev)) as f64 * (self.s as f64).powi(2) * self.d as f64
     }
 
     /// Bytes each device exchanges in one all-to-all direction.
@@ -240,6 +263,66 @@ pub fn build(cfg: &UlyssesCfg, bufs: Option<&UlyssesBufs>) -> Plan {
     plan
 }
 
+/// Build the Ulysses layer across a multi-node cluster (timing model):
+/// sequence and heads shard over all `K·P` GPUs and all four exchanges run
+/// through the two-level [`pk_all_to_all_4d_cluster`] — intra-node NVLink
+/// tiles plus per-rail coalesced RDMA flows with forwarders. A one-node
+/// cluster delegates to [`build`] (bit-identical; pinned by tests).
+pub fn build_cluster(cfg: &UlyssesCfg, cluster: &ClusterSpec) -> Plan {
+    build_cluster_opts(cfg, cluster, crate::pk::rail::DEFAULT_RDMA_CHUNK)
+}
+
+/// [`build_cluster`] with an explicit coalesced-RDMA chunk target (the
+/// `rx1` exhibit's "naive uncoalesced" ablation passes one tile's bytes
+/// here, putting every cross-node message on the slow end of the RDMA
+/// curve).
+pub fn build_cluster_opts(cfg: &UlyssesCfg, cluster: &ClusterSpec, rdma_chunk: f64) -> Plan {
+    assert_eq!(cfg.node.num_devices, cluster.node.num_devices, "cfg.node must match cluster.node");
+    assert_eq!(cfg.node.gpu.arch, cluster.node.gpu.arch, "cfg.node must match cluster.node");
+    if cluster.num_nodes == 1 {
+        return build(cfg, None);
+    }
+    let n = cluster.total_devices();
+    let a2a = A2aCfg { b_dim: cfg.b, s_local: cfg.s_local_of(n), h: cfg.h, d_head: cfg.d };
+    let mut plan = Plan::new();
+    plan.launch_overhead = cfg.node.gpu.kernel_launch;
+    // ---- forward exchanges for q, k, v
+    for _ in 0..3 {
+        pk_all_to_all_4d_cluster(&mut plan, cluster, &a2a, None, None, None, rdma_chunk, 16.0);
+    }
+    // readiness barrier: attention waits for all three exchanges — both
+    // the exchange workers and the rail forwarders signal completion.
+    let n_a2a = plan.workers.len();
+    let ready: Vec<_> = (0..n).map(|_| plan.add_sem(0)).collect();
+    for wi in 0..n_a2a {
+        for r in ready.iter().take(n) {
+            plan.push(wi, Op::Signal { sem: *r, value: 1, scope: SyncScope::InterDevice });
+        }
+    }
+    let comp_flops = cfg.node.gpu.tc_flops_for_sms(cfg.node.gpu.num_sms) * cfg.flash_util;
+    let out_ready: Vec<_> = (0..n).map(|_| plan.add_sem(0)).collect();
+    for dev in 0..n {
+        let w = plan.add_worker(DeviceId(dev), Role::ComputeSm, format!("ulysses_attn/d{dev}"));
+        plan.push(w, Op::Wait { sem: ready[dev], value: n_a2a as u64 });
+        plan.push(w, Op::Compute {
+            dur: cfg.attn_flops_of(n) / comp_flops,
+            label: "ulysses_attn",
+            effect: None,
+        });
+        plan.push(w, Op::Signal { sem: out_ready[dev], value: 1, scope: SyncScope::InterSm });
+    }
+    // ---- output exchange, gated on the local attention output
+    let nw0 = plan.workers.len();
+    pk_all_to_all_4d_cluster(&mut plan, cluster, &a2a, None, None, None, rdma_chunk, 16.0);
+    for wi in nw0..plan.workers.len() {
+        let dev = plan.workers[wi].device;
+        let mut ops = vec![Op::Wait { sem: out_ready[dev.0], value: 1 }];
+        ops.append(&mut plan.workers[wi].ops);
+        plan.workers[wi].ops = ops;
+    }
+    plan
+}
+
 /// Inverse exchange: device `j` holds `(B, S, H_local, D)`; send each
 /// `(b, s ∈ shard_d, head-block j)` tile back to device `d`'s
 /// `(B, S_local, H, D)` layout.
@@ -284,7 +367,8 @@ fn build_reverse_a2a(plan: &mut Plan, cfg: &UlyssesCfg, srcs: &[BufId], dsts: &[
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::exec::TimedExec;
+    use crate::util::prop::run_functional;
     use crate::util::{assert_allclose, linalg, seeded_vec};
 
     #[test]
@@ -317,7 +401,7 @@ mod tests {
             }
         }
         let plan = build(&cfg, Some(&bufs));
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         // reference: per (b, h) full attention over the global sequence
         for bi in 0..cfg.b {
             for hi in 0..cfg.h {
@@ -357,5 +441,39 @@ mod tests {
         let node = NodeSpec::hgx_h100();
         let cfg = UlyssesCfg::paper(node, 8192);
         assert_eq!(cfg.a2a_bytes(), 16.0 * 1024.0 * 128.0 * 128.0 * 2.0);
+    }
+
+    #[test]
+    fn cluster_single_node_delegates_bit_identically() {
+        use crate::hw::cluster::ClusterSpec;
+        let node = NodeSpec::hgx_h100();
+        let cfg = UlyssesCfg::paper(node.clone(), 8192);
+        let a = build(&cfg, None);
+        let b = build_cluster(&cfg, &ClusterSpec::single(node.clone()));
+        assert_eq!(a.total_ops(), b.total_ops());
+        assert_eq!(a.workers.len(), b.workers.len());
+        let ta = TimedExec::new(node.clone()).run(&a).total_time;
+        let tb = TimedExec::on_cluster(ClusterSpec::single(node)).run(&b).total_time;
+        assert_eq!(ta.to_bits(), tb.to_bits(), "1-node cluster Ulysses must not drift");
+    }
+
+    #[test]
+    fn cluster_ulysses_runs_and_rail_coalescing_helps() {
+        // multi-node Ulysses no longer panics — and the coalesced rail
+        // flows must beat the per-tile-message (uncoalesced) ablation when
+        // the NIC is the binding resource.
+        use crate::hw::cluster::ClusterSpec;
+        let cluster = ClusterSpec::hgx_h100_pod(2).with_nic_bw(25e9);
+        let n = cluster.total_devices();
+        let cfg = UlyssesCfg::paper(cluster.node.clone(), 16384);
+        let exec = TimedExec::on_cluster(cluster.clone());
+        let t_rail = exec.run(&build_cluster(&cfg, &cluster)).total_time;
+        assert!(t_rail.is_finite() && t_rail > 0.0);
+        let tile_bytes = (cfg.h_local_of(n) * cfg.d) as f64 * ELEM_BYTES as f64;
+        let t_naive = exec.run(&build_cluster_opts(&cfg, &cluster, tile_bytes)).total_time;
+        assert!(
+            t_rail < t_naive,
+            "coalesced rail flows must beat per-tile RDMA messages: {t_rail} vs {t_naive}"
+        );
     }
 }

@@ -26,17 +26,23 @@
 //! [`primitives::store_async_routed`] / [`primitives::store_add_async_routed`]
 //! — that keep the same async tile-store API but pick NVLink P2P or
 //! GPUDirect RDMA by whether the destination shares the source's node
-//! (see [`crate::hw::ClusterSpec`]).
+//! (see [`crate::hw::ClusterSpec`]) — plus the [`rail`] hierarchical
+//! transport subsystem: per-rail coalesced RDMA flows, rail-peer
+//! forwarders with per-destination credits, and an optional node-local
+//! pre-reduce for reducible payloads. `moe`, `gemm_rs`, the two-level
+//! all-to-all, and the MoE combine hop are all thin clients of it.
 
 pub mod primitives;
+pub mod rail;
 pub mod sync;
 pub mod template;
 pub mod tuner;
 
 pub use primitives::{
     all_reduce, multicast_store_async, reduce, store_add_async, store_add_async_routed,
-    store_async, store_async_routed, TileRef,
+    store_add_async_scoped, store_async, store_async_routed, TileRef,
 };
+pub use rail::{rail_waves, wave_share, RailPlanner, RailSems, WaveCredits};
 pub use sync::{barrier, signal, signal_all, wait, Barrier};
 pub use template::{Lcsc, LcscOpts};
 pub use tuner::{

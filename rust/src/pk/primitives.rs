@@ -156,6 +156,26 @@ pub fn store_add_async(
     dst: TileRef,
     done: Option<SemId>,
 ) {
+    store_add_async_scoped(plan, spec, w, src, dst, done, SyncScope::IntraSm)
+}
+
+/// [`store_add_async`] with an explicit completion-flag scope. The default
+/// primitive signals its own SM's mbarrier; when the completion is
+/// consumed by a worker on *another* device — the node-aggregator pattern
+/// of [`crate::pk::rail`]'s pre-reduce stage, where contributors add
+/// partials into the aggregator's staging area and the aggregator's rail
+/// worker waits for them — the flag must instead pay the
+/// [`SyncScope::InterDevice`] NVLink-flag latency. The transfer itself is
+/// identical.
+pub fn store_add_async_scoped(
+    plan: &mut Plan,
+    spec: &GpuSpec,
+    w: usize,
+    src: TileRef,
+    dst: TileRef,
+    done: Option<SemId>,
+    done_scope: SyncScope,
+) {
     let bytes = src.bytes() * (1.0 + spec.atomic_overhead_frac);
     plan.push(
         w,
@@ -169,7 +189,7 @@ pub fn store_add_async(
             },
             blocking: false,
             done_sem: done,
-            done_scope: SyncScope::IntraSm,
+            done_scope,
             label: "store_add_async",
             effect: Some(Effect::CopyMat { src: src.view, dst: dst.view, reduce: Some(ReduceOp::Add) }),
         },
@@ -306,7 +326,8 @@ pub fn all_reduce(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::exec::TimedExec;
+    use crate::util::prop::run_functional;
     use crate::hw::spec::NodeSpec;
     use crate::mem::tile::Shape4;
     use crate::mem::MemPool;
@@ -331,7 +352,7 @@ mod tests {
             Some(done),
         );
         plan.push(w, Op::Wait { sem: done, value: 1 });
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         assert_eq!(pool.get(a).data, pool.get(b).data);
         // timed run completes and moves the right bytes
         let r = TimedExec::new(node).run(&plan);
@@ -356,7 +377,7 @@ mod tests {
             Some(done),
         );
         plan.push(w, Op::Wait { sem: done, value: 1 });
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         assert!(pool.get(b).data.iter().all(|v| *v == 3.0));
         let r = TimedExec::new(node).run(&plan);
         let expect = 512.0 * 1.15; // atomic inflation
@@ -378,7 +399,7 @@ mod tests {
         store_async_routed(&mut plan, &cluster, w, src, TileRef::new(MatView::full2d(local, 16, 16), DeviceId(1)), Some(done));
         store_async_routed(&mut plan, &cluster, w, src, TileRef::new(MatView::full2d(remote, 16, 16), DeviceId(2)), Some(done));
         plan.push(w, Op::Wait { sem: done, value: 2 });
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         assert_eq!(pool.get(a).data, pool.get(local).data);
         assert_eq!(pool.get(a).data, pool.get(remote).data);
         let r = crate::exec::TimedExec::on_cluster(cluster).run(&plan);
@@ -406,7 +427,7 @@ mod tests {
             Some(done),
         );
         plan.push(w, Op::Wait { sem: done, value: 1 });
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         assert!(pool.get(b).data.iter().all(|v| *v == 3.0));
     }
 
@@ -430,7 +451,7 @@ mod tests {
             Some(done),
         );
         plan.push(w, Op::Wait { sem: done, value: 1 });
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         for &b in &dsts {
             assert_eq!(pool.get(b).data, pool.get(src).data);
         }
@@ -458,7 +479,7 @@ mod tests {
             ReduceOp::Add,
             2.0,
         );
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         let want = (1..=n_dev).sum::<usize>() as f32; // 36
         for &b in &bufs {
             assert!(pool.get(b).data.iter().all(|v| *v == want), "device missing reduced value");
@@ -485,7 +506,7 @@ mod tests {
             ReduceOp::Max,
             2.0,
         );
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         assert!(pool.get(out).data.iter().all(|v| *v == 8.0));
     }
 }

@@ -1,0 +1,380 @@
+//! `pk::rail` — the reusable hierarchical-transport subsystem.
+//!
+//! Every cross-node kernel in this codebase moves data the same way: flows
+//! bound for a *remote* node are **coalesced into one GPUDirect RDMA write
+//! per (source device, destination node) pair**, sent along the source's
+//! rail to its rail peer (the same-rank GPU of the destination node), and
+//! a *forwarder* worker on the peer fans the payload out to its final
+//! destinations over NVLink, crediting consumers as pieces land. The
+//! pattern was introduced by the cluster MoE dispatch
+//! ([`crate::kernels::moe::build_cluster`]); this module lifts it into the
+//! framework layer so gemm_rs, the two-level all-to-all / Ulysses, and the
+//! MoE combine hop share one implementation instead of hand-rolling it —
+//! the paper's thesis (a small set of reusable primitives, not
+//! operator-specific tricks) applied to the scale-out layer.
+//!
+//! The pieces:
+//!
+//! * [`RailPlanner`] — per-(source device, remote node) coalesced RDMA
+//!   flows along the source's rail, wave-chunked by an `rdma_chunk` target
+//!   write size ([`RailPlanner::send`] / [`RailPlanner::send_add`],
+//!   [`RailPlanner::waves`]).
+//! * [`RailSems`] — the per-(source device, destination node) wave
+//!   counters every rail protocol synchronizes on: bumped once per wave
+//!   (even empty waves, so thresholds stay uniform), waited on by both the
+//!   source's wave barrier and the rail-peer forwarder.
+//! * [`WaveCredits`] — the wave-barrier bookkeeping of a fan-out stage:
+//!   async transfers drain into per-transfer semaphores, and `flush` waits
+//!   for each and posts its per-destination credits.
+//! * [`wave_share`] / [`rail_waves`] — the exact wave-split arithmetic
+//!   (last wave takes the remainder, so per-wave waits never starve on
+//!   rounding).
+//! * An optional **node-local pre-reduce** stage for reducible payloads
+//!   (gemm_rs partial sums, MoE combine rows): contributors
+//!   `store_add_async` their partials over NVLink into the node
+//!   aggregator's staging area
+//!   ([`crate::pk::primitives::store_add_async_scoped`], crediting the
+//!   aggregator with [`SyncScope::InterDevice`] flags), and the aggregator
+//!   ships one pre-reduced flow per node pair — ×P less NIC traffic than
+//!   per-device sends.
+
+use crate::hw::cluster::ClusterSpec;
+use crate::hw::DeviceId;
+use crate::plan::{Effect, Op, Plan, Route, SemId, SyncScope, TransferSpec};
+use crate::xfer::Mechanism;
+
+/// Default coalesced RDMA write target: 4 MiB sits on the flat part of the
+/// RDMA message-size curve while still giving several overlap waves at
+/// realistic payload sizes.
+pub const DEFAULT_RDMA_CHUNK: f64 = 4.0 * 1024.0 * 1024.0;
+
+/// Upper bound on rail-flow waves (keeps event counts tractable at
+/// paper-scale payloads).
+pub const MAX_WAVES: usize = 16;
+
+/// Wave `wave`'s share of `total` units split over `waves` waves: every
+/// wave takes `total / waves`, the last additionally takes the remainder —
+/// so the shares partition `total` exactly and cumulative-count waiters
+/// never starve on rounding.
+pub fn wave_share(total: u64, wave: usize, waves: usize) -> u64 {
+    debug_assert!(wave < waves);
+    let base = total / waves as u64;
+    if wave == waves - 1 {
+        total - base * (waves as u64 - 1)
+    } else {
+        base
+    }
+}
+
+/// Wave count targeting one `rdma_chunk`-sized write per rail flow per
+/// wave, clamped to `[min_waves, max_waves]`. Smaller chunks mean more
+/// waves — finer compute/comm overlap but less efficient NIC messages;
+/// the cluster tuner co-tunes the chunk with the SM partition
+/// ([`crate::pk::tuner::tune_comm_sms_rdma_chunk`]).
+pub fn rail_waves(max_flow_bytes: f64, rdma_chunk: f64, min_waves: usize, max_waves: usize) -> usize {
+    assert!(rdma_chunk > 0.0, "rdma_chunk must be positive");
+    assert!(min_waves >= 1 && min_waves <= max_waves);
+    ((max_flow_bytes / rdma_chunk).ceil() as usize).clamp(min_waves, max_waves)
+}
+
+/// Per-(source device, destination node) wave counters for the rail flows
+/// of one kernel: `done[src][node]` is bumped once per wave by the source's
+/// coalesced RDMA write landing, and waited on by both the source's own
+/// wave barrier and the rail-peer forwarder.
+pub struct RailSems {
+    pub done: Vec<Vec<SemId>>,
+}
+
+impl RailSems {
+    /// One counter per (global device, node), allocated in device-major
+    /// order.
+    pub fn alloc(plan: &mut Plan, cluster: &ClusterSpec) -> Self {
+        let n = cluster.total_devices();
+        let k = cluster.num_nodes;
+        RailSems {
+            done: (0..n).map(|_| (0..k).map(|_| plan.add_sem(0)).collect()).collect(),
+        }
+    }
+}
+
+/// Planner for per-rail coalesced RDMA flows: one flow per (source device,
+/// remote node) pair, addressed to the source's rail peer, with messages
+/// capped at `rdma_chunk`.
+pub struct RailPlanner<'a> {
+    pub cluster: &'a ClusterSpec,
+    pub rdma_chunk: f64,
+}
+
+impl<'a> RailPlanner<'a> {
+    pub fn new(cluster: &'a ClusterSpec, rdma_chunk: f64) -> Self {
+        assert!(rdma_chunk > 0.0, "rdma_chunk must be positive");
+        RailPlanner { cluster, rdma_chunk }
+    }
+
+    /// The source's rail peer on `dst_node`: the same-rank GPU, reachable
+    /// through the rail's switch plane without crossing rails.
+    pub fn peer(&self, src: DeviceId, dst_node: usize) -> DeviceId {
+        self.cluster.device(dst_node, self.cluster.local_rank(src))
+    }
+
+    /// [`rail_waves`] against this planner's chunk size.
+    pub fn waves(&self, max_flow_bytes: f64, min_waves: usize, max_waves: usize) -> usize {
+        rail_waves(max_flow_bytes, self.rdma_chunk, min_waves, max_waves)
+    }
+
+    /// Emit one coalesced RDMA write along the source's rail: `bytes` to
+    /// the rail peer of `src` on `dst_node`, in `rdma_chunk`-capped
+    /// messages. Asynchronous; `done` (if any) is bumped with
+    /// [`SyncScope::InterNode`] latency — the wave counter both the
+    /// source's barrier and the peer's forwarder consume.
+    #[allow(clippy::too_many_arguments)]
+    pub fn send(
+        &self,
+        plan: &mut Plan,
+        w: usize,
+        src: DeviceId,
+        dst_node: usize,
+        bytes: f64,
+        n_sms: f64,
+        done: Option<SemId>,
+        label: &'static str,
+        effect: Option<Effect>,
+    ) {
+        let dst = self.peer(src, dst_node);
+        plan.push(
+            w,
+            Op::Transfer {
+                spec: TransferSpec {
+                    mech: Mechanism::Tma,
+                    route: Route::Rdma { src, dst },
+                    bytes,
+                    msg_bytes: bytes.min(self.rdma_chunk),
+                    n_sms,
+                },
+                blocking: false,
+                done_sem: done,
+                done_scope: SyncScope::InterNode,
+                label,
+                effect,
+            },
+        );
+    }
+
+    /// [`RailPlanner::send`] with store-add semantics at the destination
+    /// (the rail hop of a pre-reduced payload): the landed bytes pay the
+    /// same atomic destination-side inflation as
+    /// [`crate::pk::primitives::store_add_async`], while message sizing
+    /// stays on the raw payload.
+    #[allow(clippy::too_many_arguments)]
+    pub fn send_add(
+        &self,
+        plan: &mut Plan,
+        w: usize,
+        src: DeviceId,
+        dst_node: usize,
+        raw_bytes: f64,
+        n_sms: f64,
+        done: Option<SemId>,
+        label: &'static str,
+        effect: Option<Effect>,
+    ) {
+        let dst = self.peer(src, dst_node);
+        let bytes = raw_bytes * (1.0 + self.cluster.node.gpu.atomic_overhead_frac);
+        plan.push(
+            w,
+            Op::Transfer {
+                spec: TransferSpec {
+                    mech: Mechanism::Tma,
+                    route: Route::Rdma { src, dst },
+                    bytes,
+                    msg_bytes: raw_bytes.min(self.rdma_chunk),
+                    n_sms,
+                },
+                blocking: false,
+                done_sem: done,
+                done_scope: SyncScope::InterNode,
+                label,
+                effect,
+            },
+        );
+    }
+}
+
+/// Wave-barrier bookkeeping of a fan-out stage: each `defer` records one
+/// asynchronous transfer's drain semaphore plus the credits to post once
+/// it fires; `flush` waits for each drain in defer order and posts its
+/// credits — so consumers (e.g. experts) are credited as soon as *their*
+/// pieces land, never before.
+#[derive(Default)]
+pub struct WaveCredits {
+    pending: Vec<(SemId, Vec<(SemId, u64)>)>,
+}
+
+impl WaveCredits {
+    pub fn new() -> Self {
+        WaveCredits { pending: vec![] }
+    }
+
+    /// Record one drained transfer and the `(semaphore, value)` credits it
+    /// unlocks.
+    pub fn defer(&mut self, drain: SemId, credits: Vec<(SemId, u64)>) {
+        self.pending.push((drain, credits));
+    }
+
+    /// Wait for every deferred drain (in defer order) and post its
+    /// credits at `scope` latency. Leaves the tracker empty for the next
+    /// wave.
+    pub fn flush(&mut self, plan: &mut Plan, w: usize, scope: SyncScope) {
+        for (drain, credits) in self.pending.drain(..) {
+            plan.push(w, Op::Wait { sem: drain, value: 1 });
+            for (sem, value) in credits {
+                plan.push(w, Op::Signal { sem, value, scope });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::TimedExec;
+    use crate::util::prop::run_functional;
+    use crate::hw::topology::Port;
+    use crate::mem::tile::Shape4;
+    use crate::mem::MemPool;
+    use crate::plan::{MatView, Role};
+    use crate::util::seeded_vec;
+
+    #[test]
+    fn wave_share_partitions_exactly() {
+        for total in [0u64, 1, 5, 17, 1000, 12345] {
+            for waves in 1..=MAX_WAVES {
+                let shares: Vec<u64> = (0..waves).map(|w| wave_share(total, w, waves)).collect();
+                assert_eq!(shares.iter().sum::<u64>(), total, "{total} over {waves}");
+            }
+        }
+    }
+
+    #[test]
+    fn rail_waves_clamps_to_bounds() {
+        let chunk = 1024.0;
+        assert_eq!(rail_waves(0.0, chunk, 4, 16), 4, "empty flow takes the floor");
+        assert_eq!(rail_waves(100.0, chunk, 1, 16), 1, "sub-chunk flow is one wave");
+        assert_eq!(rail_waves(8.0 * chunk, chunk, 1, 16), 8);
+        assert_eq!(rail_waves(1e9, chunk, 1, 16), 16, "huge flows hit the ceiling");
+    }
+
+    #[test]
+    fn peer_is_same_rank_on_destination_node() {
+        let cluster = ClusterSpec::test_cluster(3, 4);
+        let rail = RailPlanner::new(&cluster, DEFAULT_RDMA_CHUNK);
+        assert_eq!(rail.peer(DeviceId(1), 2), DeviceId(9));
+        assert_eq!(rail.peer(DeviceId(7), 0), DeviceId(3));
+    }
+
+    #[test]
+    fn send_gathers_into_stage_and_charges_the_nics() {
+        // functional: a GatherRows effect lands selected rows in the rail
+        // peer's stage; timed: exactly the bytes cross both endpoint NICs
+        // and no NVLink port.
+        let cluster = ClusterSpec::test_cluster(2, 2);
+        let rail = RailPlanner::new(&cluster, DEFAULT_RDMA_CHUNK);
+        let mut pool = MemPool::new();
+        let src = pool.alloc_init(DeviceId(0), Shape4::mat(6, 4), seeded_vec(3, 24));
+        let stage = pool.alloc(DeviceId(2), Shape4::mat(2, 4));
+        let rows = vec![4usize, 1];
+        let mut plan = Plan::new();
+        let done = plan.add_sem(0);
+        let w = plan.add_worker(DeviceId(0), Role::CommSm, "rail");
+        rail.send(
+            &mut plan,
+            w,
+            DeviceId(0),
+            1,
+            2.0 * 4.0 * crate::mem::ELEM_BYTES as f64,
+            8.0,
+            Some(done),
+            "rail_send",
+            Some(Effect::GatherRows {
+                src: MatView::full2d(src, 6, 4),
+                rows: rows.clone(),
+                dst: MatView::full2d(stage, 2, 4),
+            }),
+        );
+        plan.push(w, Op::Wait { sem: done, value: 1 });
+        run_functional(&mut pool, &plan);
+        for (i, &r) in rows.iter().enumerate() {
+            let want = &pool.get(src).data[r * 4..(r + 1) * 4];
+            let got = &pool.get(stage).data[i * 4..(i + 1) * 4];
+            assert_eq!(got, want, "row {i}");
+        }
+        let r = TimedExec::on_cluster(cluster).run(&plan);
+        let bytes = 2.0 * 4.0 * crate::mem::ELEM_BYTES as f64;
+        assert!((r.port_bytes[&Port::NicEgress(DeviceId(0))] - bytes).abs() < 1.0);
+        assert!((r.port_bytes[&Port::NicIngress(DeviceId(2))] - bytes).abs() < 1.0);
+        assert!(r.port_bytes.get(&Port::Egress(DeviceId(0))).is_none());
+    }
+
+    #[test]
+    fn send_add_inflates_bytes_and_reduces() {
+        let cluster = ClusterSpec::test_cluster(2, 2);
+        let rail = RailPlanner::new(&cluster, DEFAULT_RDMA_CHUNK);
+        let mut pool = MemPool::new();
+        let src = pool.alloc_init(DeviceId(1), Shape4::mat(4, 4), vec![1.5; 16]);
+        let dst = pool.alloc_init(DeviceId(3), Shape4::mat(4, 4), vec![2.0; 16]);
+        let raw = 16.0 * crate::mem::ELEM_BYTES as f64;
+        let mut plan = Plan::new();
+        let w = plan.add_worker(DeviceId(1), Role::CommSm, "rail");
+        rail.send_add(
+            &mut plan,
+            w,
+            DeviceId(1),
+            1,
+            raw,
+            8.0,
+            None,
+            "rail_send_add",
+            Some(Effect::CopyMat {
+                src: MatView::full2d(src, 4, 4),
+                dst: MatView::full2d(dst, 4, 4),
+                reduce: Some(crate::mem::pgl::ReduceOp::Add),
+            }),
+        );
+        run_functional(&mut pool, &plan);
+        assert!(pool.get(dst).data.iter().all(|v| *v == 3.5));
+        let r = TimedExec::on_cluster(cluster.clone()).run(&plan);
+        let want = raw * (1.0 + cluster.node.gpu.atomic_overhead_frac);
+        let got = r.port_bytes[&Port::NicEgress(DeviceId(1))];
+        assert!((got - want).abs() < 1.0, "{got} vs {want}");
+    }
+
+    #[test]
+    fn wave_credits_post_after_drain() {
+        // consumer credited only once the fan-out transfer drained; flush
+        // leaves the tracker reusable for the next wave.
+        let mut pool = MemPool::new();
+        let mut plan = Plan::new();
+        let drain = plan.add_sem(0);
+        let credit = plan.add_sem(0);
+        let w = plan.add_worker(DeviceId(0), Role::CommSm, "fwd");
+        let consumer = plan.add_worker(DeviceId(1), Role::ComputeSm, "gemm");
+        let mut credits = WaveCredits::new();
+        plan.push(w, Op::Signal { sem: drain, value: 1, scope: SyncScope::InterDevice });
+        credits.defer(drain, vec![(credit, 3)]);
+        credits.flush(&mut plan, w, SyncScope::InterDevice);
+        plan.push(consumer, Op::Wait { sem: credit, value: 3 });
+        run_functional(&mut pool, &plan);
+        // the flush emitted exactly one wait + one signal
+        assert_eq!(plan.workers[w].ops.len(), 3);
+    }
+
+    #[test]
+    fn rail_sems_cover_every_device_node_pair() {
+        let cluster = ClusterSpec::test_cluster(3, 2);
+        let mut plan = Plan::new();
+        let sems = RailSems::alloc(&mut plan, &cluster);
+        assert_eq!(sems.done.len(), 6);
+        assert!(sems.done.iter().all(|row| row.len() == 3));
+        assert_eq!(plan.sems.len(), 18);
+    }
+}

@@ -72,7 +72,8 @@ pub fn barrier(plan: &mut Plan, w: usize, bar: &Barrier, me: DeviceId, generatio
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::exec::{FunctionalExec, TimedExec};
+    use crate::exec::TimedExec;
+    use crate::util::prop::run_functional;
     use crate::hw::spec::NodeSpec;
     use crate::mem::MemPool;
     use crate::plan::Role;
@@ -86,7 +87,7 @@ mod tests {
         signal(&mut plan, w0, &bar, DeviceId(1), 5);
         wait(&mut plan, w1, &bar, DeviceId(1), 5);
         let mut pool = MemPool::new();
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         let r = TimedExec::new(NodeSpec::test_node(2)).run(&plan);
         // one inter-device signal latency
         assert!((r.total_time - NodeSpec::test_node(2).gpu.nvlink_signal).abs() < 1e-12);
@@ -102,7 +103,7 @@ mod tests {
             barrier(&mut plan, w, &bar, DeviceId(d), 1);
         }
         let mut pool = MemPool::new();
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         let r = TimedExec::new(NodeSpec::test_node(n)).run(&plan);
         // all signals issued at t=0, visible after one NVLink latency.
         assert!(r.total_time < 2.0 * NodeSpec::test_node(n).gpu.nvlink_signal);
@@ -119,7 +120,7 @@ mod tests {
             barrier(&mut plan, w, &bar, DeviceId(d), 2);
         }
         let mut pool = MemPool::new();
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
     }
 
     #[test]

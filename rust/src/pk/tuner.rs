@@ -93,6 +93,12 @@ pub fn tune_comm_sms_cluster(
 /// grid and return the joint optimum. The chunk axis only matters when the
 /// NIC is the binding resource — which is exactly when re-tuning the SM
 /// partition alone is insufficient (resource-aware overlap).
+///
+/// The sweep is generic over **any** [`crate::pk::rail`] kernel — the
+/// chunk candidate is handed to the build closure, which threads it into
+/// the kernel's `rdma_chunk` knob (`MoeCfg::rdma_chunk`,
+/// `GemmKernelCfg::rdma_chunk`, the all-to-all's parameter, …); nothing
+/// here is MoE-specific.
 pub fn tune_comm_sms_rdma_chunk(
     cluster: &ClusterSpec,
     sm_candidates: &[u32],
@@ -216,5 +222,29 @@ mod tests {
         let at8: Vec<f64> = r.sweep.iter().filter(|(c, _, _)| *c == 8).map(|(_, _, t)| *t).collect();
         assert_eq!(at8.len(), 2);
         assert!((at8[0] - at8[1]).abs() > 1e-12, "chunk size must matter: {at8:?}");
+    }
+
+    #[test]
+    fn co_tune_generalizes_over_rail_kernels() {
+        // the same co-tuner drives the hierarchical gemm_rs (a different
+        // pk::rail client): the grid is covered and the chunk axis changes
+        // the timing through GemmKernelCfg::rdma_chunk.
+        use crate::kernels::gemm_rs::{self, Schedule};
+        use crate::kernels::GemmKernelCfg;
+        let cluster = ClusterSpec::hgx_h100_pod(2).with_nic_bw(25e9);
+        let base = GemmKernelCfg::new(cluster.node.clone(), 32768, 8192, 1024);
+        let chunks = [64.0 * 1024.0, 4.0 * 1024.0 * 1024.0];
+        let r = tune_comm_sms_rdma_chunk(&cluster, &[0, 16], &chunks, |c, chunk| {
+            let mut cfg = base.clone();
+            cfg.opts.num_comm_sms = c;
+            cfg.rdma_chunk = chunk;
+            let schedule = if c == 0 { Schedule::IntraSm } else { Schedule::InterSm };
+            gemm_rs::build_cluster(&cfg, &cluster, schedule, None)
+        });
+        assert_eq!(r.sweep.len(), 4);
+        assert!(r.sweep.iter().all(|(_, _, t)| t.is_finite() && *t >= r.best_time));
+        assert!(chunks.contains(&r.best_rdma_chunk));
+        let at0: Vec<f64> = r.sweep.iter().filter(|(c, _, _)| *c == 0).map(|(_, _, t)| *t).collect();
+        assert!((at0[0] - at0[1]).abs() > 1e-12, "chunk axis must be live for gemm_rs: {at0:?}");
     }
 }

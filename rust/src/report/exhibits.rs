@@ -50,6 +50,7 @@ pub fn all_exhibits() -> Vec<Exhibit> {
         Exhibit { id: "mu2", caption: "§3.1.4 NVSHMEM peer-access overheads", run: mu2 },
         Exhibit { id: "sx1", caption: "Scale-out sweep: hierarchical collectives, 1→4 nodes, NIC 25–100 GB/s", run: sx1 },
         Exhibit { id: "mx1", caption: "Cluster MoE sweep: expert-parallel dispatch over the NIC, 1→4 nodes, NIC 25–100 GB/s", run: mx1 },
+        Exhibit { id: "rx1", caption: "pk::rail sweep: hierarchical gemm_rs + two-level Ulysses, 1→4 nodes, NIC 25–100 GB/s, rail vs naive vs baseline", run: rx1 },
     ]
 }
 
@@ -594,6 +595,94 @@ fn mx1(fast: bool) -> Table {
     t
 }
 
+// ------------------------------------------------------- pk::rail sweep
+/// The `pk::rail` exhibit: the two kernels the extracted rail subsystem
+/// unlocked — hierarchical GEMM+RS (node-local pre-reduce + one coalesced
+/// flow per node pair) and the two-level Ulysses all-to-all — swept over
+/// node count × NIC bandwidth. Each kernel runs three ways: `rail` (the
+/// hierarchical default), `naive` (gemm_rs: the PR 1 per-device scatter;
+/// Ulysses: the uncoalesced per-tile-message ablation), and `baseline`
+/// (Flux / YunChang cluster extrapolations). `nic_x` is the modeled
+/// NIC-byte reduction of rail vs naive — exactly ×P for gemm_rs; "-" for
+/// the all-to-all, whose payload is not reducible (the rail win there is
+/// message coalescing, not byte elimination).
+fn rx1(fast: bool) -> Table {
+    let mut t = Table::new(
+        "pk::rail sweep: hierarchical gemm_rs + two-level Ulysses (rail vs naive vs baseline)",
+        &["kernel", "nodes", "nic_GBps", "rail_ms", "naive_ms", "baseline_ms", "nic_x"],
+    );
+    let nodes: &[usize] = if fast { &[1, 2] } else { &[1, 2, 3, 4] };
+    let nics: &[f64] = if fast { &[50e9] } else { &[25e9, 50e9, 100e9] };
+    for &k in nodes {
+        // the 1-node row is NVLink-only (NIC-independent): emit it once
+        let nic_points: &[f64] = if k == 1 { &nics[..1] } else { nics };
+        for &nic in nic_points {
+            let cluster = ClusterSpec::hgx_h100_pod(k).with_nic_bw(nic);
+            let n_dev = cluster.total_devices();
+            let exec = TimedExec::on_cluster(cluster.clone());
+            let nic_label =
+                if k == 1 { "nvlink-only".to_string() } else { format!("{:.0}", nic / 1e9) };
+            // --- gemm_rs, cluster-sharded K axis. m = 24576 gives
+            // grid_m = 192 tile rows — divisible by every device count of
+            // the sweep (lcm(8,16,24,32) = 96), like sx1's payload sizing.
+            let cfg = GemmKernelCfg::new(cluster.node.clone(), 24576, 8192, 1024);
+            let t_rail = exec
+                .run(&gemm_rs::build_cluster(&cfg, &cluster, Schedule::IntraSm, None))
+                .total_time;
+            let t_naive = exec
+                .run(&gemm_rs::build_cluster_opts(
+                    &cfg,
+                    &cluster,
+                    Schedule::IntraSm,
+                    gemm_rs::ClusterPath::Scatter,
+                    None,
+                ))
+                .total_time;
+            let t_base = baselines::flux::gemm_rs_cluster(&cfg, &cluster);
+            let rail_b: f64 =
+                gemm_rs::nic_scatter_bytes(&cfg, &cluster, gemm_rs::ClusterPath::RailReduce).iter().sum();
+            let naive_b: f64 =
+                gemm_rs::nic_scatter_bytes(&cfg, &cluster, gemm_rs::ClusterPath::Scatter).iter().sum();
+            t.row(vec![
+                "gemm_rs".into(),
+                k.to_string(),
+                nic_label.clone(),
+                ms(t_rail),
+                ms(t_naive),
+                ms(t_base),
+                if k == 1 { "-".into() } else { format!("{:.2}", naive_b / rail_b) },
+            ]);
+            // --- Ulysses: weak scaling, 2048 sequence positions per GPU;
+            // H = 96 divides every device count of the sweep
+            let ucfg = UlyssesCfg {
+                node: cluster.node.clone(),
+                b: 16,
+                h: 96,
+                s: 2048 * n_dev,
+                d: 128,
+                flash_util: 0.75,
+            };
+            let t_urail = exec.run(&ulysses::build_cluster(&ucfg, &cluster)).total_time;
+            let tile_bytes =
+                (ucfg.h_local_of(n_dev) * ucfg.d) as f64 * crate::mem::ELEM_BYTES as f64;
+            let t_unaive = exec
+                .run(&ulysses::build_cluster_opts(&ucfg, &cluster, tile_bytes))
+                .total_time;
+            let t_ubase = baselines::yunchang::ulysses_cluster(&ucfg, &cluster);
+            t.row(vec![
+                "ulysses".into(),
+                k.to_string(),
+                nic_label,
+                ms(t_urail),
+                ms(t_unaive),
+                ms(t_ubase),
+                "-".into(),
+            ]);
+        }
+    }
+    t
+}
+
 // --------------------------------------------------------------- µ1, µ2
 fn mu1(_fast: bool) -> Table {
     let g = GpuSpec::h100();
@@ -627,11 +716,47 @@ mod tests {
     #[test]
     fn registry_complete_and_runnable_fast() {
         let ex = all_exhibits();
-        assert_eq!(ex.len(), 23, "17 figures/tables + 2 micro + tab1/tab2 + scale-out + cluster MoE");
+        assert_eq!(
+            ex.len(),
+            24,
+            "17 figures/tables + 2 micro + tab1/tab2 + scale-out + cluster MoE + rail"
+        );
         for e in &ex {
             let t = (e.run)(true);
             assert!(!t.rows.is_empty(), "{} produced no rows", e.id);
         }
+    }
+
+    #[test]
+    fn rx1_rail_beats_naive_and_baseline_on_every_multi_node_row() {
+        // fast mode: 1-node + 2-node rows at 50 GB/s for both kernels.
+        let t = rx1(true);
+        assert_eq!(
+            t.columns,
+            vec!["kernel", "nodes", "nic_GBps", "rail_ms", "naive_ms", "baseline_ms", "nic_x"]
+        );
+        let mut saw = (false, false);
+        for r in &t.rows {
+            let rail: f64 = r[3].parse().unwrap();
+            let naive: f64 = r[4].parse().unwrap();
+            let base: f64 = r[5].parse().unwrap();
+            assert!(rail < base, "{} @ {} nodes: rail must beat the baseline: {rail} vs {base}", r[0], r[1]);
+            if r[1] == "1" {
+                // one node: rail and naive are the same plan
+                assert_eq!(r[3], r[4], "{}: 1-node rail == naive", r[0]);
+            } else {
+                assert!(rail < naive, "{} @ {} nodes: rail must beat naive: {rail} vs {naive}", r[0], r[1]);
+                if r[0] == "gemm_rs" {
+                    let x: f64 = r[6].parse().unwrap();
+                    assert_eq!(x, 8.0, "gemm_rs NIC reduction is exactly xP");
+                    saw.0 = true;
+                } else {
+                    assert_eq!(r[6], "-", "a2a bytes are not reducible");
+                    saw.1 = true;
+                }
+            }
+        }
+        assert!(saw.0 && saw.1, "both kernels swept multi-node");
     }
 
     #[test]

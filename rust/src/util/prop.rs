@@ -1,6 +1,20 @@
 //! Miniature property-testing harness (the vendored environment has no
 //! proptest): deterministic splitmix64 case generation with seed reporting
 //! on failure, so any failing case is reproducible from the panic message.
+//! Also home to [`run_functional`], the shared run-a-plan shorthand of the
+//! test suites.
+
+use crate::exec::FunctionalExec;
+use crate::mem::MemPool;
+use crate::plan::Plan;
+
+/// Run a plan to completion on the functional executor, panicking on
+/// deadlock or on an effect error — the shared shorthand that replaces
+/// the `FunctionalExec::new(&mut pool).run(&plan).unwrap()` boilerplate
+/// across the test suites.
+pub fn run_functional(pool: &mut MemPool, plan: &Plan) {
+    FunctionalExec::new(pool).run(plan).unwrap();
+}
 
 /// Deterministic RNG for property cases.
 pub struct Rng {

@@ -261,7 +261,8 @@ fn claim_scaleout_runs_both_executors_end_to_end() {
     // The acceptance bar: a hierarchical collective runs 1 -> 4 nodes
     // through the functional executor (numerics) and the timed executor
     // (NIC accounting) end-to-end.
-    use pk::exec::{FunctionalExec, TimedExec};
+    use pk::exec::TimedExec;
+    use pk::util::prop::run_functional;
     use pk::hw::topology::Port;
     use pk::hw::{ClusterSpec, DeviceId};
     use pk::kernels::collectives::{hier_all_reduce, ClusterCollCtx};
@@ -281,7 +282,7 @@ fn claim_scaleout_runs_both_executors_end_to_end() {
         let ctx = ClusterCollCtx::new(&cluster, bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect());
         let mut plan = Plan::new();
         hier_all_reduce(&mut plan, &ctx);
-        FunctionalExec::new(&mut pool).run(&plan).unwrap();
+        run_functional(&mut pool, &plan);
         let want = (n * (n + 1) / 2) as f32;
         for &b in &bufs {
             assert!(pool.get(b).data.iter().all(|v| *v == want), "{k} nodes: sum everywhere");
@@ -394,6 +395,102 @@ fn claim_moe_one_node_cluster_bit_identical_and_mx1_overlap_wins() {
         assert!(pk < seq, "overlap wins at nodes={} nic={}: {pk} vs {seq}", r[0], r[1]);
         let ratio = comet / pk;
         assert!(ratio > 0.8 && ratio < 1.6, "PK/Comet cluster band at nodes={}: {ratio}", r[0]);
+    }
+}
+
+#[test]
+fn claim_gemm_rs_rail_reduce_cuts_nic_traffic_by_p() {
+    // The rail-extract acceptance bar: on the canonical config the
+    // hierarchical (pre-reduce + per-node-pair rail flow) gemm_rs charges
+    // each NIC exactly 1/P of the PR 1 locality-routed scatter's bytes —
+    // pinned analytically and against the timed executor's ports.
+    use pk::exec::TimedExec;
+    use pk::hw::topology::Port;
+    use pk::hw::{ClusterSpec, DeviceId};
+    use pk::kernels::gemm_rs::{self, ClusterPath, Schedule};
+    use pk::kernels::GemmKernelCfg;
+
+    let cluster = ClusterSpec::hgx_h100_pod(2);
+    let p = cluster.devices_per_node();
+    let cfg = GemmKernelCfg::new(cluster.node.clone(), 32768, 4096, 4096);
+    let rail = gemm_rs::nic_scatter_bytes(&cfg, &cluster, ClusterPath::RailReduce);
+    let scatter = gemm_rs::nic_scatter_bytes(&cfg, &cluster, ClusterPath::Scatter);
+    let (rail_tot, scatter_tot): (f64, f64) =
+        (rail.iter().sum(), scatter.iter().sum());
+    assert!(rail_tot > 0.0);
+    assert!(
+        (scatter_tot / rail_tot - p as f64).abs() < 1e-9,
+        "rail reduce must cut NIC traffic exactly xP: {}",
+        scatter_tot / rail_tot
+    );
+    // the built plans' NIC accounting matches the models
+    for (path, want) in [(ClusterPath::RailReduce, &rail), (ClusterPath::Scatter, &scatter)] {
+        let plan = gemm_rs::build_cluster_opts(&cfg, &cluster, Schedule::IntraSm, path, None);
+        let r = TimedExec::on_cluster(cluster.clone()).run(&plan);
+        for g in 0..cluster.total_devices() {
+            let got = r.port_bytes.get(&Port::NicEgress(DeviceId(g))).copied().unwrap_or(0.0);
+            assert!(
+                (got - want[g]).abs() / want[g] < 1e-6,
+                "{path:?} dev {g}: {got} vs {}",
+                want[g]
+            );
+        }
+    }
+}
+
+#[test]
+fn claim_two_level_a2a_runs_multi_node_and_one_node_delegates() {
+    // The old fail-fast is gone: the two-level all-to-all runs on
+    // multi-node clusters, charges NICs (not NVLink) for the cross-node
+    // share, and the 1-node cluster still delegates to the single-node
+    // builder bit-identically.
+    use pk::exec::TimedExec;
+    use pk::hw::topology::Port;
+    use pk::hw::{ClusterSpec, DeviceId};
+    use pk::kernels::collectives::{pk_all_to_all_4d, pk_all_to_all_4d_cluster, A2aCfg};
+    use pk::plan::Plan;
+
+    let node = pk::hw::spec::NodeSpec::hgx_h100();
+    let cfg = A2aCfg { b_dim: 1, s_local: 1024, h: 128, d_head: 128 };
+    let mut a = Plan::new();
+    pk_all_to_all_4d_cluster(
+        &mut a,
+        &ClusterSpec::single(node.clone()),
+        &cfg,
+        None,
+        None,
+        None,
+        pk::pk::rail::DEFAULT_RDMA_CHUNK,
+        16.0,
+    );
+    let mut b = Plan::new();
+    pk_all_to_all_4d(&mut b, &node, &cfg, None, None, 16.0);
+    assert_eq!(a.total_ops(), b.total_ops());
+    let ta = TimedExec::new(node.clone()).run(&a).total_time;
+    let tb = TimedExec::new(node).run(&b).total_time;
+    assert_eq!(ta.to_bits(), tb.to_bits(), "1-node a2a delegation must not drift");
+
+    let cluster = ClusterSpec::hgx_h100_pod(2);
+    let n = cluster.total_devices();
+    let cfg2 = A2aCfg { b_dim: 1, s_local: 512, h: 128, d_head: 128 };
+    let mut plan = Plan::new();
+    pk_all_to_all_4d_cluster(
+        &mut plan,
+        &cluster,
+        &cfg2,
+        None,
+        None,
+        None,
+        pk::pk::rail::DEFAULT_RDMA_CHUNK,
+        16.0,
+    );
+    let r = TimedExec::on_cluster(cluster.clone()).run(&plan);
+    assert!(r.total_time.is_finite() && r.total_time > 0.0);
+    let dev_bytes = (cfg2.b_dim * cfg2.s_local * cfg2.h * cfg2.d_head) as f64 * 2.0;
+    let want = dev_bytes * (cluster.num_nodes - 1) as f64 / cluster.num_nodes as f64;
+    for g in 0..n {
+        let e = r.port_bytes.get(&Port::NicEgress(DeviceId(g))).copied().unwrap_or(0.0);
+        assert!((e - want).abs() < 1.0, "dev {g}: NIC egress {e} vs {want}");
     }
 }
 

@@ -641,6 +641,88 @@ fn prop_cluster_moe_sequential_geq_overlapped() {
     });
 }
 
+/// Rail-reduced gemm_rs output is bit-identical to the naive per-device
+/// scatter path: with integer-valued inputs (whose partial sums are exact
+/// in f32 under any association), the node-local pre-reduce changes only
+/// the summation tree — never the value.
+#[test]
+fn prop_gemm_rs_rail_reduce_bit_identical_to_scatter() {
+    use pk::kernels::gemm_rs::{build_cluster_opts, ClusterPath, GemmRsBufs, Schedule};
+    use pk::kernels::GemmKernelCfg;
+    run_prop("gemm_rs_rail_vs_scatter", 6, |rng| {
+        let k = rng.usize_in(2, 4);
+        let p = 2;
+        let n = k * p;
+        let cluster = ClusterSpec::test_cluster(k, p);
+        let m = n * 16 * rng.usize_in(1, 3);
+        let cols = 16 * rng.usize_in(1, 3);
+        let kdim = 8 * rng.usize_in(1, 3);
+        let cfg = GemmKernelCfg::functional(cluster.node.clone(), m, cols, kdim);
+        let mut results = vec![];
+        for path in [ClusterPath::RailReduce, ClusterPath::Scatter] {
+            let mut pool = MemPool::new();
+            let bufs = GemmRsBufs::alloc_cluster(&mut pool, &cfg, &cluster);
+            for d in 0..n {
+                // small-integer f32s: every sum is exactly representable
+                pool.get_mut(bufs.gemm.a[d]).data =
+                    (0..m * kdim).map(|i| ((i * 7 + d * 13) % 5) as f32 - 2.0).collect();
+                pool.get_mut(bufs.gemm.b[d]).data =
+                    (0..kdim * cols).map(|i| ((i * 11 + d * 3) % 7) as f32 - 3.0).collect();
+            }
+            let plan = build_cluster_opts(&cfg, &cluster, Schedule::IntraSm, path, Some(&bufs));
+            FunctionalExec::new(&mut pool).run(&plan).map_err(|e| e.to_string())?;
+            let mut out = vec![];
+            for d in 0..n {
+                out.extend_from_slice(&pool.get(bufs.out[d]).data);
+            }
+            results.push(out);
+        }
+        if results[0] != results[1] {
+            return Err("rail-reduced output must be bit-identical to the scatter path".into());
+        }
+        Ok(())
+    });
+}
+
+/// Two-level all-to-all NIC byte conservation under arbitrary shard
+/// shapes: every device's NIC carries exactly the `(K-1)/K` share of its
+/// exchange bytes in *each* direction, whatever the batch/sequence/head
+/// shape and coalescing chunk — the rail flows neither lose nor duplicate
+/// bytes, and the wave split always repartitions the payload exactly.
+#[test]
+fn prop_two_level_a2a_nic_byte_conservation() {
+    use pk::kernels::collectives::{pk_all_to_all_4d_cluster, A2aCfg};
+    run_prop("a2a_nic_bytes", 15, |rng| {
+        let k = rng.usize_in(2, 5);
+        let p = rng.usize_in(1, 5);
+        let n = k * p;
+        let cluster = ClusterSpec::test_cluster(k, p);
+        let cfg = A2aCfg {
+            b_dim: rng.usize_in(1, 4),
+            s_local: rng.usize_in(1, 6),
+            h: n * rng.usize_in(1, 4),
+            d_head: 4 * rng.usize_in(1, 5),
+        };
+        let chunk = *rng.choose(&[2048.0, 65536.0, 4.0 * 1024.0 * 1024.0]);
+        let mut plan = Plan::new();
+        pk_all_to_all_4d_cluster(&mut plan, &cluster, &cfg, None, None, None, chunk, 8.0);
+        let r = TimedExec::on_cluster(cluster.clone()).run(&plan);
+        if !(r.total_time.is_finite() && r.total_time > 0.0) {
+            return Err("non-finite time".into());
+        }
+        let dev_bytes = (cfg.b_dim * cfg.s_local * cfg.h * cfg.d_head * 2) as f64;
+        let want = dev_bytes * (k - 1) as f64 / k as f64;
+        for g in 0..n {
+            let e = r.port_bytes.get(&Port::NicEgress(DeviceId(g))).copied().unwrap_or(0.0);
+            let i = r.port_bytes.get(&Port::NicIngress(DeviceId(g))).copied().unwrap_or(0.0);
+            if (e - want).abs() > 1.0 || (i - want).abs() > 1.0 {
+                return Err(format!("dev {g}: NIC {e}/{i} vs {want} (k={k} p={p})"));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// GEMM+RS functional correctness over random shapes/device counts — both
 /// schedules agree with the dense reference and with each other.
 #[test]
