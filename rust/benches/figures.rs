@@ -1,7 +1,9 @@
 //! `cargo bench --bench figures` — regenerates every table and figure of
 //! the paper (the full experiment harness; DESIGN.md §4 maps exhibits to
 //! modules). Prints each exhibit as markdown with its generation time and
-//! writes CSVs to `bench_results/`.
+//! writes CSVs to `bench_results/`. Exhibits regenerate in parallel
+//! (`--serial` or `PK_THREADS=1` to disable); output order and bytes are
+//! identical either way.
 //!
 //! Pass `--fast` (after `--`) to trim the sweeps.
 
@@ -10,19 +12,24 @@ use std::time::Instant;
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let fast = args.iter().any(|a| a == "--fast");
+    let threads =
+        if args.iter().any(|a| a == "--serial") { 1 } else { pk::util::par::default_threads() };
     let out_dir = "bench_results";
     std::fs::create_dir_all(out_dir).ok();
-    let mut total = 0.0;
+    let wall0 = Instant::now();
     println!("# ParallelKittens — paper exhibit reproduction\n");
-    for e in pk::report::all_exhibits() {
-        let t0 = Instant::now();
-        let table = (e.run)(fast);
-        let dt = t0.elapsed().as_secs_f64();
-        total += dt;
-        println!("{}", table.to_markdown());
-        println!("_generated in {dt:.2}s_\n");
-        std::fs::write(format!("{out_dir}/{}.csv", e.id), table.to_csv()).expect("write csv");
+    let results = pk::report::run_exhibits(fast, None, threads);
+    let mut total = 0.0;
+    for r in &results {
+        total += r.wall;
+        println!("{}", r.table.to_markdown());
+        println!("_generated in {:.2}s_\n", r.wall);
+        std::fs::write(format!("{out_dir}/{}.csv", r.id), r.table.to_csv()).expect("write csv");
     }
+    println!(
+        "_all exhibits in {:.1}s wall on {threads} thread(s) (Σ per-exhibit {total:.1}s)_\n",
+        wall0.elapsed().as_secs_f64()
+    );
     println!("## Design-choice ablations (DESIGN.md calls these out)\n");
     for (id, table) in pk::report::ablations::all_ablations() {
         println!("{}", table.to_markdown());

@@ -1,10 +1,18 @@
 //! `cargo bench --bench hotpath` — microbenchmarks of the library's own
 //! hot paths (the §Perf instrumentation): DES event throughput, the
-//! max-min fair solver, functional tile movement, and plan construction.
+//! max-min fair solver (naive reference vs the engine's incremental
+//! path), functional tile movement, plan construction, and the parallel
+//! sweep driver.
 //!
 //! Hand-rolled harness (measure-N-iterations, report best-of-K) — the
 //! vendored environment has no criterion; methodology matches its
 //! flat-sampling mode.
+//!
+//! Every run rewrites `BENCH_hotpath.json` at the repo root with the
+//! per-section best times plus derived rates (events/s, solver memo hit
+//! rate, parallel sweep speedup), so the perf trajectory is machine
+//! readable. CI runs `-- --smoke` (one tiny iteration per section) so
+//! the bench itself can never rot.
 
 use pk::exec::TimedExec;
 use pk::hw::spec::NodeSpec;
@@ -13,25 +21,47 @@ use pk::kernels::gemm_rs::{self, Schedule};
 use pk::kernels::GemmKernelCfg;
 use pk::mem::tile::Shape4;
 use pk::mem::MemPool;
+use pk::util::json::Json;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
-/// Run `f` for `iters` iterations, `k` times; return the best per-iter
-/// seconds (criterion-style minimum to suppress scheduler noise).
-fn bench<F: FnMut()>(name: &str, iters: usize, k: usize, mut f: F) -> f64 {
-    let mut best = f64::INFINITY;
-    for _ in 0..k {
-        let t0 = Instant::now();
-        for _ in 0..iters {
-            f();
+struct Harness {
+    smoke: bool,
+    sections: BTreeMap<String, Json>,
+}
+
+impl Harness {
+    /// Run `f` for `iters` iterations, `k` times; record + return the best
+    /// per-iter seconds (criterion-style minimum to suppress scheduler
+    /// noise). Smoke mode collapses to a single iteration — correctness
+    /// coverage only.
+    fn bench<F: FnMut()>(&mut self, name: &str, iters: usize, k: usize, mut f: F) -> f64 {
+        let (iters, k) = if self.smoke { (1, 1) } else { (iters, k) };
+        let mut best = f64::INFINITY;
+        for _ in 0..k {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            best = best.min(t0.elapsed().as_secs_f64() / iters as f64);
         }
-        best = best.min(t0.elapsed().as_secs_f64() / iters as f64);
+        println!("{name:<44} {:>12}", pk::util::fmt_time(best));
+        self.sections.insert(name.to_string(), Json::Num(best));
+        best
     }
-    println!("{name:<44} {:>12}", pk::util::fmt_time(best));
-    best
+
+    fn metric(&mut self, name: &str, value: f64, display: &str) {
+        println!("{:<44} {display}", format!("  -> {name}"));
+        self.sections.insert(name.to_string(), Json::Num(value));
+    }
 }
 
 fn main() {
-    println!("{:-^60}", " hotpath microbenchmarks ");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut h = Harness { smoke, sections: BTreeMap::new() };
+    let title =
+        if smoke { " hotpath microbenchmarks (smoke) " } else { " hotpath microbenchmarks " };
+    println!("{title:-^60}");
 
     // ---- DES end-to-end: paper-scale GEMM+RS simulation
     let node = NodeSpec::hgx_h100();
@@ -39,13 +69,29 @@ fn main() {
     let plan = gemm_rs::build(&cfg, Schedule::IntraSm, None);
     let exec = TimedExec::new(node.clone());
     let mut events = 0u64;
-    let t = bench("timed_exec: GEMM+RS @ N=32768 (full sim)", 3, 3, || {
-        events = exec.run(&plan).events;
+    let mut solver = pk::sim::flownet::SolverStats::default();
+    let t = h.bench("timed_exec: GEMM+RS @ N=32768 (full sim)", 3, 3, || {
+        let r = exec.run(&plan);
+        events = r.events;
+        solver = r.solver;
     });
-    println!("{:<44} {:>12.0} events/s", "  -> event throughput", events as f64 / t);
+    let ev_rate = events as f64 / t;
+    h.metric("event_throughput_per_s", ev_rate, &format!("{ev_rate:>12.0} events/s"));
+    let hit_rate =
+        if solver.solves > 0 { solver.memo_hits as f64 / solver.solves as f64 } else { 0.0 };
+    h.metric(
+        "solver_memo_hit_rate",
+        hit_rate,
+        &format!(
+            "{:>11.1}% ({} solves, {} classes)",
+            hit_rate * 100.0,
+            solver.solves,
+            solver.classes
+        ),
+    );
 
     // ---- plan construction
-    bench("plan build: GEMM+RS @ N=32768", 5, 3, || {
+    h.bench("plan build: GEMM+RS @ N=32768", 5, 3, || {
         let _ = gemm_rs::build(&cfg, Schedule::IntraSm, None);
     });
 
@@ -59,12 +105,12 @@ fn main() {
         let mut plan = Plan::new();
         hier_all_reduce(&mut plan, &ClusterCollCtx::new(&cluster, views));
         let exec = TimedExec::on_cluster(cluster);
-        bench("timed_exec: hier AR @ 4 nodes x 8 GPUs", 5, 3, || {
+        h.bench("timed_exec: hier AR @ 4 nodes x 8 GPUs", 5, 3, || {
             let _ = exec.run(&plan);
         });
     }
 
-    // ---- max-min fair solver at high flow counts
+    // ---- max-min fair solver: naive reference at high flow counts
     {
         use pk::hw::topology::Port;
         use pk::sim::flownet::{compute_rates, FlowSpec};
@@ -81,16 +127,70 @@ fn main() {
                 cap: 23e9,
             })
             .collect();
-        bench("compute_rates: 2048 flows / 16 ports", 20, 3, || {
+        h.bench("compute_rates (naive): 2048 flows / 16 ports", 20, 3, || {
             let r = compute_rates(&flows, &caps);
             assert!(r[0] > 0.0);
         });
     }
 
+    // ---- incremental solver: the same flow population through FlowNet
+    // churn (start a generation, drain it, repeat — what the engine does)
+    {
+        use pk::hw::topology::Port;
+        use pk::sim::flownet::FlowNet;
+        h.bench("flownet churn (incremental): 2048 flows", 20, 3, || {
+            let mut net = FlowNet::new();
+            for d in 0..8 {
+                net.set_capacity(Port::Egress(DeviceId(d)), 450e9);
+                net.set_capacity(Port::Ingress(DeviceId(d)), 450e9);
+            }
+            for i in 0..2048usize {
+                net.start(
+                    1e6,
+                    vec![Port::Egress(DeviceId(i % 8)), Port::Ingress(DeviceId((i + 1) % 8))],
+                    23e9,
+                );
+            }
+            while let Some(dt) = net.next_completion() {
+                net.advance(dt);
+            }
+            assert_eq!(net.n_active(), 0);
+        });
+    }
+
+    // ---- parallel sweep driver: the fig5-style partition grid, serial
+    // vs the scoped-thread pool (deterministic output either way)
+    if !smoke {
+        use pk::util::par::par_map_with;
+        let node = NodeSpec::hgx_h100();
+        let cands = [4u32, 8, 12, 16, 24, 32, 48, 64];
+        let plans: Vec<_> = cands
+            .iter()
+            .map(|&c| {
+                let mut cfg = GemmKernelCfg::new(node.clone(), 16384, 2048, 16384);
+                cfg.opts.num_comm_sms = c;
+                pk::kernels::ag_gemm::build(&cfg, None)
+            })
+            .collect();
+        let sweep_exec = TimedExec::new(node.clone());
+        let ts = h.bench("tuner sweep: 8-pt AG+GEMM grid (serial)", 1, 3, || {
+            let _ = par_map_with(1, &plans, |_, p| sweep_exec.run(p).total_time);
+        });
+        let threads = pk::util::par::default_threads();
+        let tp = h.bench("tuner sweep: 8-pt AG+GEMM grid (parallel)", 1, 3, || {
+            let _ = par_map_with(threads, &plans, |_, p| sweep_exec.run(p).total_time);
+        });
+        h.metric(
+            "parallel_sweep_speedup",
+            ts / tp,
+            &format!("{:>11.2}x on {threads} thread(s)", ts / tp),
+        );
+    }
+
     // ---- functional executor: tile movement throughput
     {
-        use pk::util::prop::run_functional;
         use pk::plan::{Effect, MatView, Op, Plan, Role};
+        use pk::util::prop::run_functional;
         let mut pool = MemPool::new();
         let a = pool.alloc(DeviceId(0), Shape4::mat(256, 256));
         let b = pool.alloc(DeviceId(1), Shape4::mat(256, 256));
@@ -111,10 +211,11 @@ fn main() {
             );
         }
         let bytes_per_run = 64.0 * 256.0 * 256.0 * 4.0;
-        let t = bench("functional exec: 64x 256x256 tile copies", 20, 3, || {
+        let t = h.bench("functional exec: 64x 256x256 tile copies", 20, 3, || {
             run_functional(&mut pool, &plan);
         });
-        println!("{:<44} {:>9.2} GB/s", "  -> copy throughput", bytes_per_run / t / 1e9);
+        let gbs = bytes_per_run / t / 1e9;
+        h.metric("copy_throughput_gb_s", gbs, &format!("{gbs:>9.2} GB/s"));
     }
 
     // ---- native GEMM tile math (functional compute reference)
@@ -124,11 +225,37 @@ fn main() {
         let b = pk::util::seeded_vec(2, 128 * 128);
         let mut c = vec![0.0f32; 128 * 128];
         let flops = 2.0 * 128f64.powi(3);
-        let t = bench("linalg: 128^3 matmul_accum", 20, 3, || {
+        let t = h.bench("linalg: 128^3 matmul_accum", 20, 3, || {
             matmul_accum(&mut c, &a, &b, 128, 128, 128);
         });
-        println!("{:<44} {:>9.2} GFLOP/s", "  -> tile math", flops / t / 1e9);
+        let gf = flops / t / 1e9;
+        h.metric("tile_math_gflop_s", gf, &format!("{gf:>9.2} GFLOP/s"));
     }
 
     println!("{:-^60}", "");
+
+    // ---- machine-readable snapshot at the repo root. Full runs rewrite
+    // the checked-in trajectory baseline; --smoke runs (CI, sanity
+    // checks) write next to it so 1-iteration noise never clobbers the
+    // committed numbers.
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str("pk-hotpath-v1".to_string()));
+    top.insert(
+        "note".to_string(),
+        Json::Str(
+            "perf trajectory snapshot; regenerate with `cargo bench --bench hotpath` \
+             (smoke runs write BENCH_hotpath.smoke.json instead)"
+                .to_string(),
+        ),
+    );
+    top.insert("smoke".to_string(), Json::Bool(smoke));
+    top.insert("events".to_string(), Json::Num(events as f64));
+    top.insert("sections".to_string(), Json::Obj(h.sections.clone()));
+    let path = if smoke {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.smoke.json")
+    } else {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json")
+    };
+    std::fs::write(path, Json::Obj(top).to_string() + "\n").expect("write hotpath snapshot");
+    println!("snapshot -> {path}");
 }

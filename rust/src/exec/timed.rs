@@ -11,7 +11,7 @@ use crate::hw::cluster::ClusterSpec;
 use crate::hw::spec::NodeSpec;
 use crate::hw::topology::{Port, Topology};
 use crate::plan::{Op, Plan, Route, SyncScope, TransferSpec};
-use crate::sim::flownet::{FlowId, FlowNet};
+use crate::sim::flownet::{FlowNet, SolverStats};
 use crate::sim::trace::{SpanKind, Trace};
 use crate::sim::EventQueue;
 use crate::xfer::curves;
@@ -30,6 +30,8 @@ pub struct TimedResult {
     pub trace: Trace,
     /// Number of simulation events processed (perf instrumentation).
     pub events: u64,
+    /// Fair-share solver instrumentation (solves vs memo hits).
+    pub solver: SolverStats,
 }
 
 impl TimedResult {
@@ -65,8 +67,10 @@ struct FlowCtx {
     issuer: usize,
     issue_time: f64,
     label: &'static str,
-    started: Option<FlowId>,
 }
+
+/// `active_flows` sentinel: this flow slot has no context attached.
+const NO_CTX: usize = usize::MAX;
 
 /// The timed executor. Runs on one node by default; [`TimedExec::on_cluster`]
 /// extends the same resource model across an RDMA fabric. A one-node
@@ -157,12 +161,21 @@ impl TimedExec {
         let n = plan.workers.len();
         let mut pc = vec![0usize; n];
         let mut wstate = vec![WState::Ready; n];
+        // Running count of retired workers: the termination test is O(1)
+        // instead of an O(n) scan per event.
+        let mut n_done = 0usize;
         let mut sems: Vec<u64> = plan.sems.clone();
         // sem -> waiting (worker, threshold)
         let mut waiters: Vec<Vec<(usize, u64)>> = vec![vec![]; plan.sems.len()];
         let mut queue: EventQueue<Ev> = EventQueue::new();
+        // FlowCtx arena with slot recycling (a GEMM-scale plan issues tens
+        // of thousands of transfers but keeps only the pipeline depth in
+        // flight).
         let mut flow_ctxs: Vec<FlowCtx> = vec![];
-        let mut active_flows: HashMap<FlowId, usize> = HashMap::new();
+        let mut free_ctxs: Vec<usize> = vec![];
+        // flow slot -> ctx index. FlowNet recycles slots, so this stays as
+        // dense as the peak concurrent flow count.
+        let mut active_flows: Vec<usize> = vec![];
         let mut trace = Trace::new(self.trace_enabled);
         let mut now = plan.launch_overhead.max(0.0);
         let mut events: u64 = 0;
@@ -177,6 +190,7 @@ impl TimedExec {
                 loop {
                     if pc[w] >= plan.workers[w].ops.len() {
                         wstate[w] = WState::Done;
+                        n_done += 1;
                         break;
                     }
                     match &plan.workers[w].ops[pc[w]] {
@@ -203,10 +217,15 @@ impl TimedExec {
                                 issuer: w,
                                 issue_time: now,
                                 label,
-                                started: None,
                             };
-                            flow_ctxs.push(ctx);
-                            queue.push(now + lat, Ev::FlowStart { ctx: flow_ctxs.len() - 1 });
+                            let ci = if let Some(i) = free_ctxs.pop() {
+                                flow_ctxs[i] = ctx;
+                                i
+                            } else {
+                                flow_ctxs.push(ctx);
+                                flow_ctxs.len() - 1
+                            };
+                            queue.push(now + lat, Ev::FlowStart { ctx: ci });
                             if *blocking {
                                 wstate[w] = WState::BlockedFlow;
                                 break;
@@ -245,10 +264,7 @@ impl TimedExec {
             // (async stores issued without a completion wait still take
             // wall-clock time — the pipeline drain of §3.1.1's T_launch
             // teardown).
-            if (0..n).all(|w| wstate[w] == WState::Done)
-                && net.n_active() == 0
-                && queue.is_empty()
-            {
+            if n_done == n && net.n_active() == 0 && queue.is_empty() {
                 break;
             }
             // Find the next moment something happens. Work in *deltas*:
@@ -274,7 +290,8 @@ impl TimedExec {
             now += dt;
             events += 1;
             for fid in completed {
-                let ci = active_flows.remove(&fid).expect("unknown flow");
+                let ci = std::mem::replace(&mut active_flows[fid.0], NO_CTX);
+                debug_assert_ne!(ci, NO_CTX, "completed flow without a context");
                 let ctx = &flow_ctxs[ci];
                 trace.record(ctx.issuer, SpanKind::Comm, ctx.label, ctx.issue_time, now);
                 if let Some(s) = ctx.done_sem {
@@ -285,9 +302,14 @@ impl TimedExec {
                     wstate[w] = WState::Ready;
                     ready.push_back(w);
                 }
+                free_ctxs.push(ci);
             }
-            // Process all timer events scheduled at exactly t_next.
-            while queue.peek_time().map(|t| t <= now + 1e-15).unwrap_or(false) {
+            // Process all timer events scheduled at exactly t_next. The
+            // tie epsilon is *relative*: at multi-second simulated times a
+            // fixed 1e-15 is below one ulp, and equal-time events would be
+            // split across loop iterations.
+            let tie_eps = now * 1e-12 + 1e-15;
+            while queue.peek_time().map(|t| t <= now + tie_eps).unwrap_or(false) {
                 let (_, ev) = queue.pop().unwrap();
                 events += 1;
                 match ev {
@@ -298,17 +320,19 @@ impl TimedExec {
                     }
                     Ev::SemBump { sem, value } => {
                         sems[sem] += value;
-                        let mut still = vec![];
-                        for (w, thresh) in waiters[sem].drain(..) {
-                            if sems[sem] >= thresh {
+                        // Wake satisfied waiters in place — no per-bump
+                        // replacement vector.
+                        let cur = sems[sem];
+                        waiters[sem].retain(|&(w, thresh)| {
+                            if cur >= thresh {
                                 pc[w] += 1;
                                 wstate[w] = WState::Ready;
                                 ready.push_back(w);
+                                false
                             } else {
-                                still.push((w, thresh));
+                                true
                             }
-                        }
-                        waiters[sem] = still;
+                        });
                     }
                     Ev::FlowStart { ctx } => {
                         let c = &flow_ctxs[ctx];
@@ -324,11 +348,14 @@ impl TimedExec {
                                 wstate[w] = WState::Ready;
                                 ready.push_back(w);
                             }
+                            free_ctxs.push(ctx);
                         } else {
                             let cap = self.flow_cap(&c.spec);
                             let id = net.start(c.spec.bytes, ports, cap);
-                            active_flows.insert(id, ctx);
-                            flow_ctxs[ctx].started = Some(id);
+                            if id.0 >= active_flows.len() {
+                                active_flows.resize(id.0 + 1, NO_CTX);
+                            }
+                            active_flows[id.0] = ctx;
                         }
                     }
                 }
@@ -338,9 +365,12 @@ impl TimedExec {
         TimedResult {
             total_time: now,
             compute_busy,
-            port_bytes: net.port_bytes.clone(),
+            // the net is drained and about to drop — move the accounting
+            // out instead of deep-cloning it
+            port_bytes: std::mem::take(&mut net.port_bytes),
             trace,
             events,
+            solver: net.solver_stats(),
         }
     }
 }

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! pk figures [--only <id>] [--fast] [--out <dir>]   regenerate paper exhibits
+//!            [--serial | --jobs <n>]                (parallel by default)
 //! pk run <kernel> [--n <size>] [--schedule intra|inter]
 //! pk tune <kernel> --n <size>                       SM-partition auto-tuner
 //! pk validate                                       functional + PJRT checks
@@ -12,7 +13,8 @@ use pk::exec::TimedExec;
 use pk::hw::spec::NodeSpec;
 use pk::kernels::gemm_rs::Schedule;
 use pk::kernels::GemmKernelCfg;
-use pk::report::all_exhibits;
+use pk::report::run_exhibits;
+use pk::util::par::default_threads;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -29,19 +31,30 @@ fn main() {
                 std::fs::create_dir_all(dir).expect("create out dir");
             }
             let only = opt("--only");
-            for e in all_exhibits() {
-                if let Some(id) = &only {
-                    if e.id != id {
-                        continue;
-                    }
-                }
-                eprintln!("running {} ...", e.id);
-                let t = (e.run)(fast);
-                println!("{}", t.to_markdown());
+            let ids: Option<Vec<&str>> = only.as_deref().map(|id| vec![id]);
+            let threads = if flag("--serial") {
+                1
+            } else {
+                opt("--jobs").and_then(|s| s.parse().ok()).unwrap_or_else(default_threads)
+            };
+            let t0 = std::time::Instant::now();
+            let results = run_exhibits(fast, ids.as_deref(), threads);
+            let mut sum = 0.0;
+            for r in &results {
+                println!("{}", r.table.to_markdown());
+                sum += r.wall;
                 if let Some(dir) = &out {
-                    std::fs::write(format!("{dir}/{}.csv", e.id), t.to_csv()).expect("write csv");
+                    std::fs::write(format!("{dir}/{}.csv", r.id), r.table.to_csv())
+                        .expect("write csv");
                 }
             }
+            eprintln!(
+                "figures: {} exhibit(s) in {:.2}s wall on {} thread(s) (Σ per-exhibit {:.2}s)",
+                results.len(),
+                t0.elapsed().as_secs_f64(),
+                threads,
+                sum
+            );
         }
         "run" => {
             let kernel = args.get(1).map(|s| s.as_str()).unwrap_or("gemm_rs");

@@ -23,6 +23,7 @@ use crate::exec::TimedExec;
 use crate::hw::cluster::ClusterSpec;
 use crate::hw::spec::NodeSpec;
 use crate::plan::Plan;
+use crate::util::par::par_map;
 
 /// Result of a partition sweep.
 #[derive(Clone, Debug)]
@@ -45,22 +46,44 @@ pub struct ClusterTuneResult {
     pub sweep: Vec<(u32, f64, f64)>,
 }
 
+/// Build the `n` sweep plans *in index order* (builders are `FnMut` and
+/// may carry order-dependent state) and time each on the scoped-thread
+/// pool, a chunk at a time so only O(threads) GEMM-scale plans are ever
+/// resident. Times come back in build order, so parallel and serial
+/// sweeps are byte-identical (pinned by a determinism test).
+fn time_plans_chunked(
+    exec: &TimedExec,
+    n: usize,
+    mut make: impl FnMut(usize) -> Plan,
+) -> Vec<f64> {
+    let chunk = crate::util::par::default_threads().max(1) * 2;
+    let mut times = Vec::with_capacity(n);
+    let mut i = 0;
+    while i < n {
+        let hi = (i + chunk).min(n);
+        let batch: Vec<Plan> = (i..hi).map(&mut make).collect();
+        times.extend(par_map(&batch, |_, plan| exec.run(plan).total_time));
+        i = hi;
+    }
+    times
+}
+
 /// Sweep `candidates` communicator-SM counts on an explicit executor —
 /// the generic core both entry points share. Pass
 /// [`TimedExec::on_cluster`] for cluster plans; timing them against a
 /// single-node executor silently mis-rates every RDMA flow.
+///
+/// Candidate plans are built serially and timed on a scoped-thread pool
+/// ([`par_map`]; `PK_THREADS=1` forces serial). Results keep candidate
+/// order, so parallel and serial sweeps are byte-identical.
 pub fn tune_comm_sms_with(
     exec: &TimedExec,
     candidates: &[u32],
     mut build: impl FnMut(u32) -> Plan,
 ) -> TuneResult {
     assert!(!candidates.is_empty());
-    let mut sweep = Vec::with_capacity(candidates.len());
-    for &c in candidates {
-        let plan = build(c);
-        let t = exec.run(&plan).total_time;
-        sweep.push((c, t));
-    }
+    let times = time_plans_chunked(exec, candidates.len(), |i| build(candidates[i]));
+    let sweep: Vec<(u32, f64)> = candidates.iter().copied().zip(times).collect();
     let (best_comm_sms, best_time) =
         sweep.iter().copied().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
     TuneResult { best_comm_sms, best_time, sweep }
@@ -107,15 +130,19 @@ pub fn tune_comm_sms_rdma_chunk(
 ) -> ClusterTuneResult {
     assert!(!sm_candidates.is_empty() && !chunk_candidates.is_empty());
     let exec = TimedExec::on_cluster(cluster.clone());
-    let mut sweep = Vec::with_capacity(sm_candidates.len() * chunk_candidates.len());
+    // enumerate the grid up front (cheap pairs), build plans lazily in
+    // grid order and time them chunk-by-chunk on the thread pool; grid
+    // order is preserved so the sweep is byte-identical to a serial run.
+    let mut points = Vec::with_capacity(sm_candidates.len() * chunk_candidates.len());
     for &c in sm_candidates {
         for &chunk in chunk_candidates {
             assert!(chunk > 0.0, "rdma chunk candidates must be positive");
-            let plan = build(c, chunk);
-            let t = exec.run(&plan).total_time;
-            sweep.push((c, chunk, t));
+            points.push((c, chunk));
         }
     }
+    let times = time_plans_chunked(&exec, points.len(), |i| build(points[i].0, points[i].1));
+    let sweep: Vec<(u32, f64, f64)> =
+        points.iter().zip(times).map(|(&(c, chunk), t)| (c, chunk, t)).collect();
     let &(best_comm_sms, best_rdma_chunk, best_time) =
         sweep.iter().min_by(|a, b| a.2.partial_cmp(&b.2).unwrap()).unwrap();
     ClusterTuneResult { best_comm_sms, best_rdma_chunk, best_time, sweep }

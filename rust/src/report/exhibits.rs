@@ -59,6 +59,42 @@ pub fn run_exhibit(id: &str, fast: bool) -> Option<Table> {
     all_exhibits().iter().find(|e| e.id == id).map(|e| (e.run)(fast))
 }
 
+/// One regenerated exhibit plus its generation wall time.
+pub struct ExhibitResult {
+    pub id: &'static str,
+    pub caption: &'static str,
+    pub table: Table,
+    /// Wall-clock seconds this exhibit took to generate.
+    pub wall: f64,
+}
+
+/// Regenerate the selected exhibits (`ids: None` = all, in paper order)
+/// on up to `threads` scoped worker threads, returning tables + per-
+/// exhibit wall times in registry order. Exhibit generators are pure
+/// functions of `(id, fast)`, so the tables are byte-identical whatever
+/// the thread count — pinned by a determinism test; `pk figures` and the
+/// figures bench both drive this.
+pub fn run_exhibits(fast: bool, ids: Option<&[&str]>, threads: usize) -> Vec<ExhibitResult> {
+    let selected: Vec<Exhibit> = all_exhibits()
+        .into_iter()
+        .filter(|e| ids.map(|ids| ids.contains(&e.id)).unwrap_or(true))
+        .collect();
+    crate::util::par::par_map_with(threads, &selected, |_, e| {
+        // progress goes to stderr as exhibits start/finish (interleaved
+        // across workers); the stdout/CSV tables stay deterministic
+        eprintln!("running {} ...", e.id);
+        let t0 = std::time::Instant::now();
+        let table = (e.run)(fast);
+        let wall = t0.elapsed().as_secs_f64();
+        eprintln!("done    {} ({wall:.2}s)", e.id);
+        (table, wall)
+    })
+    .into_iter()
+    .zip(selected)
+    .map(|((table, wall), e)| ExhibitResult { id: e.id, caption: e.caption, table, wall })
+    .collect()
+}
+
 fn time_of(node: &NodeSpec, plan: &Plan) -> f64 {
     TimedExec::new(node.clone()).run(plan).total_time
 }

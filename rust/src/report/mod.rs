@@ -7,5 +7,5 @@ pub mod ablations;
 pub mod exhibits;
 pub mod table;
 
-pub use exhibits::{all_exhibits, run_exhibit, Exhibit};
+pub use exhibits::{all_exhibits, run_exhibit, run_exhibits, Exhibit, ExhibitResult};
 pub use table::Table;

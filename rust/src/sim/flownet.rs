@@ -7,6 +7,32 @@
 //! split its capacity max-min fairly, which is how concurrent peer writes
 //! "serialize at the destination" in the paper's intra-SM all-reduce
 //! analysis (§3.1.3): N incoming flows each get 1/N of the ingress port.
+//!
+//! ## Incremental solving
+//!
+//! The rate solve is the engine's hot path: symmetric kernels keep
+//! thousands of identical flows in flight, and every start/completion
+//! invalidates the allocation. [`FlowNet`] therefore:
+//!
+//! * **interns** each route signature once at [`FlowNet::start`] into a
+//!   class registry (sorted port list + cap bits → class id) instead of
+//!   re-sorting and re-hashing every flow's port list on every solve;
+//! * keeps a **dense port table** (port → small integer, capacity in a
+//!   flat `Vec`) so the solve never touches a `HashMap`;
+//! * maintains a slot-sorted **active list**, so `advance`,
+//!   `next_completion`, and rate assignment stop scanning dead slots;
+//! * **memoizes** the water-fill keyed on the ordered active
+//!   `(class, members)` multiset — repeated phases of a symmetric kernel
+//!   (every wave of a GEMM+RS epilogue looks identical to the solver)
+//!   skip the solve entirely.
+//!
+//! The naive solver is retained as [`compute_rates`]; a property test
+//! pins the incremental path **bit-identical** to it under random flow
+//! churn (`tests/prop_invariants.rs`), which is what licenses the
+//! optimisation: class enumeration follows first-appearance order over
+//! ascending live slots and port enumeration follows first-appearance
+//! order over those classes, so the water-fill performs the same
+//! floating-point operations in the same order as the reference.
 
 use crate::hw::topology::Port;
 use std::collections::HashMap;
@@ -23,8 +49,8 @@ struct Flow {
     /// sub-resolution residue whose completion time rounds to `now`,
     /// livelocking the event loop.
     total: f64,
-    ports: Vec<Port>,
-    cap: f64,
+    /// Interned route-signature class (shared ports + cap).
+    class: u32,
     rate: f64,
     alive: bool,
 }
@@ -39,18 +65,74 @@ impl Flow {
     }
 }
 
+/// One interned route signature: the sorted dense-port route plus the cap,
+/// with a live-member count maintained by `start`/`advance`.
+#[derive(Debug)]
+struct FlowClass {
+    ports: Vec<u32>,
+    cap: f64,
+    active_members: usize,
+}
+
+/// Solver instrumentation: how often the water-fill ran vs was served
+/// from the memo (reported by the hotpath bench and the perf tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SolverStats {
+    /// Rate recomputations requested (dirty solves).
+    pub solves: u64,
+    /// Of those, how many were answered from the memo without water-filling.
+    pub memo_hits: u64,
+    /// Distinct route classes interned over the run.
+    pub classes: u64,
+    /// Distinct ports interned over the run.
+    pub ports: u64,
+}
+
 /// The set of active flows plus port capacities.
 #[derive(Debug, Default)]
 pub struct FlowNet {
     capacity: HashMap<Port, f64>,
     flows: Vec<Flow>,
     free: Vec<usize>,
-    n_active: usize,
+    /// Live slots, kept sorted ascending: class first-appearance order
+    /// during a solve must match the naive reference's slot scan.
+    active: Vec<usize>,
     rates_dirty: bool,
     /// Cumulative bytes completed per port (conservation accounting,
     /// verified by property tests and used by the report layer).
     pub port_bytes: HashMap<Port, f64>,
+
+    // ---- interning tables (live for the whole run)
+    port_id: HashMap<Port, u32>,
+    port_cap: Vec<f64>,
+    class_id: HashMap<(Vec<u32>, u64), u32>,
+    classes: Vec<FlowClass>,
+
+    // ---- solve scratch (epoch-stamped; no per-solve clearing)
+    epoch: u64,
+    class_seen: Vec<u64>,
+    class_local: Vec<u32>,
+    port_seen: Vec<u64>,
+    port_local: Vec<u32>,
+    /// Distinct active classes this solve, first-appearance order.
+    order: Vec<u32>,
+    /// Dense per-solve port capacities, first-appearance order.
+    local_port_cap: Vec<f64>,
+    /// Flattened per-class local port indices + offsets (CSR layout).
+    cp_local: Vec<u32>,
+    cp_off: Vec<usize>,
+    class_rate: Vec<f64>,
+    key_buf: Vec<(u32, u32)>,
+
+    // ---- water-fill memo keyed on the ordered active class multiset
+    solve_cache: HashMap<Vec<(u32, u32)>, Vec<f64>>,
+    stats: SolverStats,
 }
+
+/// Memo entries are bounded; a sweep that somehow produces more distinct
+/// active multisets than this simply starts over (correctness is
+/// unaffected — the cache only ever replays its own water-fill output).
+const SOLVE_CACHE_MAX: usize = 8192;
 
 impl FlowNet {
     pub fn new() -> Self {
@@ -62,6 +144,26 @@ impl FlowNet {
     pub fn set_capacity(&mut self, port: Port, bytes_per_s: f64) {
         assert!(bytes_per_s > 0.0);
         self.capacity.insert(port, bytes_per_s);
+        if let Some(&id) = self.port_id.get(&port) {
+            // capacity changed after the port was interned: refresh the
+            // dense table and drop memoized solves computed against the
+            // old value.
+            self.port_cap[id as usize] = bytes_per_s;
+            self.solve_cache.clear();
+        }
+    }
+
+    fn intern_port(&mut self, p: Port) -> u32 {
+        if let Some(&id) = self.port_id.get(&p) {
+            return id;
+        }
+        let id = self.port_cap.len() as u32;
+        self.port_cap.push(self.capacity.get(&p).copied().unwrap_or(f64::INFINITY));
+        self.port_seen.push(0);
+        self.port_local.push(0);
+        self.port_id.insert(p, id);
+        self.stats.ports += 1;
+        id
     }
 
     /// Start a flow of `bytes` over `ports` with intrinsic rate cap `cap`.
@@ -71,35 +173,61 @@ impl FlowNet {
         for &p in &ports {
             *self.port_bytes.entry(p).or_insert(0.0) += bytes;
         }
-        let flow = Flow { remaining: bytes, total: bytes, ports, cap, rate: 0.0, alive: true };
-        self.n_active += 1;
+        // ---- intern the route signature once (the naive solver re-sorts
+        // and re-hashes every flow on every rate change; see module doc)
+        let mut sorted = ports;
+        sorted.sort_unstable_by(port_order);
+        let mut pids = Vec::with_capacity(sorted.len());
+        for &p in &sorted {
+            pids.push(self.intern_port(p));
+        }
+        let key = (pids, cap.to_bits());
+        let class = if let Some(&c) = self.class_id.get(&key) {
+            c
+        } else {
+            let c = self.classes.len() as u32;
+            self.classes.push(FlowClass { ports: key.0.clone(), cap, active_members: 0 });
+            self.class_seen.push(0);
+            self.class_local.push(0);
+            self.class_id.insert(key, c);
+            self.stats.classes += 1;
+            c
+        };
+        self.classes[class as usize].active_members += 1;
         self.rates_dirty = true;
-        if let Some(idx) = self.free.pop() {
+        let flow = Flow { remaining: bytes, total: bytes, class, rate: 0.0, alive: true };
+        let slot = if let Some(idx) = self.free.pop() {
             self.flows[idx] = flow;
-            FlowId(idx)
+            idx
         } else {
             self.flows.push(flow);
-            FlowId(self.flows.len() - 1)
-        }
+            self.flows.len() - 1
+        };
+        let pos = self.active.partition_point(|&s| s < slot);
+        self.active.insert(pos, slot);
+        FlowId(slot)
     }
 
     pub fn n_active(&self) -> usize {
-        self.n_active
+        self.active.len()
+    }
+
+    /// Solver instrumentation for the run so far.
+    pub fn solver_stats(&self) -> SolverStats {
+        self.stats
     }
 
     /// Advance all flows by `dt` seconds at current rates; returns flows
-    /// that completed (remaining hit zero). Rates must be current
-    /// (`recompute_rates` is called lazily by `next_completion`).
+    /// that completed (remaining hit zero), in ascending slot order. Rates
+    /// must be current (`ensure_rates` is called lazily).
     pub fn advance(&mut self, dt: f64) -> Vec<FlowId> {
-        if self.n_active == 0 {
+        if self.active.is_empty() {
             return vec![];
         }
         self.ensure_rates();
         let mut done = vec![];
-        for (i, f) in self.flows.iter_mut().enumerate() {
-            if !f.alive {
-                continue;
-            }
+        for &s in &self.active {
+            let f = &mut self.flows[s];
             let finishes_now = f.rate > 0.0 && f.remaining <= f.rate * dt * (1.0 + 1e-12);
             if dt > 0.0 {
                 f.remaining -= f.rate * dt;
@@ -109,14 +237,17 @@ impl FlowNet {
             if finishes_now || (f.remaining <= f.eps() && f.rate > 0.0) {
                 f.alive = false;
                 f.remaining = 0.0;
-                done.push(FlowId(i));
+                done.push(FlowId(s));
             }
         }
         if !done.is_empty() {
-            self.n_active -= done.len();
             for &id in &done {
                 self.free.push(id.0);
+                let c = self.flows[id.0].class as usize;
+                self.classes[c].active_members -= 1;
             }
+            let flows = &self.flows;
+            self.active.retain(|&s| flows[s].alive);
             self.rates_dirty = true;
         }
         done
@@ -124,13 +255,14 @@ impl FlowNet {
 
     /// Earliest time-from-now at which some active flow completes.
     pub fn next_completion(&mut self) -> Option<f64> {
-        if self.n_active == 0 {
+        if self.active.is_empty() {
             return None;
         }
         self.ensure_rates();
         let mut best = f64::INFINITY;
-        for f in &self.flows {
-            if f.alive && f.rate > 0.0 {
+        for &s in &self.active {
+            let f = &self.flows[s];
+            if f.rate > 0.0 {
                 // aim half an epsilon *past* the completion threshold so
                 // the subsequent advance() robustly crosses it
                 best = best.min(((f.remaining - 0.5 * f.eps()).max(0.0)) / f.rate);
@@ -140,30 +272,140 @@ impl FlowNet {
     }
 
     fn ensure_rates(&mut self) {
-        if self.rates_dirty {
-            let rates = compute_rates(
-                &self
-                    .flows
-                    .iter()
-                    .map(|f| FlowSpec {
-                        active: f.alive,
-                        ports: f.ports.clone(),
-                        cap: f.cap,
-                    })
-                    .collect::<Vec<_>>(),
-                &self.capacity,
-            );
-            for (f, r) in self.flows.iter_mut().zip(rates) {
-                f.rate = r;
+        if !self.rates_dirty {
+            return;
+        }
+        self.rates_dirty = false;
+        if self.active.is_empty() {
+            return;
+        }
+        self.stats.solves += 1;
+        self.epoch += 1;
+        // ---- distinct active classes, first-appearance order over
+        // ascending live slots (matches the naive reference's flow scan)
+        self.order.clear();
+        for &s in &self.active {
+            let c = self.flows[s].class;
+            if self.class_seen[c as usize] != self.epoch {
+                self.class_seen[c as usize] = self.epoch;
+                self.class_local[c as usize] = self.order.len() as u32;
+                self.order.push(c);
             }
-            self.rates_dirty = false;
+        }
+        // ---- memo lookup on the ordered (class, members) multiset
+        self.key_buf.clear();
+        for &c in &self.order {
+            self.key_buf.push((c, self.classes[c as usize].active_members as u32));
+        }
+        if let Some(cached) = self.solve_cache.get(&self.key_buf) {
+            self.stats.memo_hits += 1;
+            self.class_rate.clear();
+            self.class_rate.extend_from_slice(cached);
+        } else {
+            self.water_fill();
+            if self.solve_cache.len() >= SOLVE_CACHE_MAX {
+                self.solve_cache.clear();
+            }
+            self.solve_cache.insert(self.key_buf.clone(), self.class_rate.clone());
+        }
+        for &s in &self.active {
+            let li = self.class_local[self.flows[s].class as usize] as usize;
+            self.flows[s].rate = self.class_rate[li];
         }
     }
 
-    /// Current rate of a flow (test/inspection hook).
+    /// Max-min water-fill over the active classes in `self.order`,
+    /// writing per-member rates into `self.class_rate`. The loop body is
+    /// a dense-index transliteration of [`compute_rates`]'s — same
+    /// operations in the same order, so results are bit-identical.
+    fn water_fill(&mut self) {
+        // dense local port table in first-appearance order over classes
+        self.local_port_cap.clear();
+        self.cp_local.clear();
+        self.cp_off.clear();
+        for &c in &self.order {
+            self.cp_off.push(self.cp_local.len());
+            for &pid in &self.classes[c as usize].ports {
+                let p = pid as usize;
+                if self.port_seen[p] != self.epoch {
+                    self.port_seen[p] = self.epoch;
+                    self.port_local[p] = self.local_port_cap.len() as u32;
+                    self.local_port_cap.push(self.port_cap[p]);
+                }
+                self.cp_local.push(self.port_local[p]);
+            }
+        }
+        self.cp_off.push(self.cp_local.len());
+        let nc = self.order.len();
+        let np = self.local_port_cap.len();
+        let mut fixed = vec![false; nc];
+        self.class_rate.clear();
+        self.class_rate.resize(nc, 0.0);
+        loop {
+            // headroom and unfixed member count per port
+            let mut headroom = self.local_port_cap.clone();
+            let mut unfixed_on = vec![0usize; np];
+            for oi in 0..nc {
+                let members = self.classes[self.order[oi] as usize].active_members;
+                for &pi in &self.cp_local[self.cp_off[oi]..self.cp_off[oi + 1]] {
+                    if fixed[oi] {
+                        headroom[pi as usize] -= self.class_rate[oi] * members as f64;
+                    } else {
+                        unfixed_on[pi as usize] += members;
+                    }
+                }
+            }
+            // per-class achievable level
+            let mut any_unfixed = false;
+            let mut min_level = f64::INFINITY;
+            let mut level = vec![0.0f64; nc];
+            for oi in 0..nc {
+                if fixed[oi] {
+                    continue;
+                }
+                any_unfixed = true;
+                let mut l = self.classes[self.order[oi] as usize].cap;
+                for &pi in &self.cp_local[self.cp_off[oi]..self.cp_off[oi + 1]] {
+                    l = l.min(headroom[pi as usize].max(0.0) / unfixed_on[pi as usize] as f64);
+                }
+                level[oi] = l;
+                min_level = min_level.min(l);
+            }
+            if !any_unfixed {
+                break;
+            }
+            let mut progressed = false;
+            for oi in 0..nc {
+                if !fixed[oi] && level[oi] <= min_level * (1.0 + 1e-12) {
+                    self.class_rate[oi] = min_level.max(0.0);
+                    fixed[oi] = true;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                for oi in 0..nc {
+                    if !fixed[oi] {
+                        self.class_rate[oi] = min_level.max(0.0);
+                        fixed[oi] = true;
+                    }
+                }
+                break;
+            }
+        }
+    }
+
+    /// Current rate of a flow (test/inspection hook). Only meaningful for
+    /// live flows; a completed flow's slot keeps its last assigned rate.
     pub fn rate(&mut self, id: FlowId) -> f64 {
         self.ensure_rates();
         self.flows[id.0].rate
+    }
+
+    /// Drop all memoized solves (test hook: forces the next `ensure_rates`
+    /// to water-fill from scratch, for memo-vs-recompute equivalence
+    /// pins).
+    pub fn clear_solve_cache(&mut self) {
+        self.solve_cache.clear();
     }
 }
 
@@ -175,7 +417,9 @@ pub struct FlowSpec {
     pub cap: f64,
 }
 
-/// Max-min fair ("water-filling") rate allocation with per-flow caps.
+/// Max-min fair ("water-filling") rate allocation with per-flow caps —
+/// the retained **naive reference** for the incremental solver inside
+/// [`FlowNet`] (property tests pin the two bit-identical under churn).
 ///
 /// Flows with identical `(ports, cap)` signatures are collapsed into a
 /// single *class* before solving: symmetric kernels create thousands of
@@ -429,5 +673,91 @@ mod tests {
         net.start(5.0, vec![egress(0)], 1e9);
         assert_eq!(net.port_bytes[&egress(0)], 15.0);
         assert_eq!(net.port_bytes[&ingress(1)], 10.0);
+    }
+
+    #[test]
+    fn identical_routes_intern_to_one_class() {
+        let mut net = FlowNet::new();
+        net.set_capacity(egress(0), 100.0);
+        for _ in 0..16 {
+            // route given in both orders: canonicalised to one signature
+            net.start(10.0, vec![egress(0), ingress(1)], 50.0);
+            net.start(10.0, vec![ingress(1), egress(0)], 50.0);
+        }
+        let s = net.solver_stats();
+        assert_eq!(s.classes, 1, "{s:?}");
+        assert_eq!(s.ports, 2);
+    }
+
+    #[test]
+    fn memo_hits_on_repeated_phases() {
+        // symmetric churn: every generation of flows presents the same
+        // (class, members) multiset, so only the first solve water-fills.
+        let mut net = FlowNet::new();
+        net.set_capacity(egress(0), 100.0);
+        for _ in 0..8 {
+            let a = net.start(10.0, vec![egress(0)], 1e9);
+            let b = net.start(10.0, vec![egress(0)], 1e9);
+            let dt = net.next_completion().unwrap();
+            let done = net.advance(dt);
+            // slot recycling is LIFO, so generation ids swap after the
+            // first round; completions always come out slot-ascending
+            let mut want = vec![a, b];
+            want.sort_by_key(|id| id.0);
+            assert_eq!(done, want);
+        }
+        let s = net.solver_stats();
+        assert!(s.memo_hits >= s.solves - 2, "memo should serve repeats: {s:?}");
+    }
+
+    #[test]
+    fn memo_and_fresh_solves_agree_bitwise() {
+        // identical churn on two nets; one has its memo cleared before
+        // every query so it always water-fills. Rates must match bitwise.
+        let run = |clear: bool| -> Vec<u64> {
+            let mut net = FlowNet::new();
+            net.set_capacity(egress(0), 173.5);
+            net.set_capacity(ingress(1), 91.25);
+            let mut bits = vec![];
+            for round in 0..6 {
+                let mut ids = vec![];
+                for i in 0..4 {
+                    let ports = if i % 2 == 0 {
+                        vec![egress(0), ingress(1)]
+                    } else {
+                        vec![egress(0)]
+                    };
+                    ids.push(net.start(10.0 + round as f64, ports, 37.0 + (i % 2) as f64));
+                }
+                if clear {
+                    net.clear_solve_cache();
+                }
+                for &id in &ids {
+                    bits.push(net.rate(id).to_bits());
+                }
+                while net.n_active() > 0 {
+                    if clear {
+                        net.clear_solve_cache();
+                    }
+                    let dt = net.next_completion().unwrap();
+                    net.advance(dt);
+                }
+            }
+            bits
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn late_capacity_change_invalidates_memo() {
+        let mut net = FlowNet::new();
+        net.set_capacity(egress(0), 100.0);
+        let a = net.start(1000.0, vec![egress(0)], 1e9);
+        assert_eq!(net.rate(a), 100.0);
+        // halve the port mid-run: next solve must see it, not the memo
+        net.set_capacity(egress(0), 50.0);
+        let b = net.start(1000.0, vec![egress(0)], 1e9);
+        let _ = b;
+        assert_eq!(net.rate(a), 25.0);
     }
 }

@@ -4,8 +4,11 @@
 
 pub mod json;
 pub mod linalg;
+pub mod par;
 pub mod prop;
 pub mod stats;
+
+pub use par::{par_map, par_map_with};
 
 /// Relative-tolerance float comparison used throughout the test suite.
 pub fn approx_eq(a: f64, b: f64, rtol: f64) -> bool {

@@ -1,0 +1,135 @@
+//! Deterministic scoped-thread fan-out for embarrassingly parallel
+//! sweeps (tuner grids, exhibit regeneration, bench drivers).
+//!
+//! `TimedExec::run` is `&self` over immutable state, so sweep points are
+//! independent; the only thing parallelism must not change is the
+//! *output*. [`par_map_with`] therefore writes each result into the slot
+//! of its input index — the returned `Vec` is byte-identical to a serial
+//! `map` regardless of thread scheduling (pinned by the determinism tests
+//! in `tests/integration_paper_claims.rs`).
+//!
+//! No external dependencies: plain `std::thread::scope` workers pulling
+//! indices off an atomic counter. A worker panic propagates out of the
+//! scope, so failures are not silently dropped.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+thread_local! {
+    /// True while this thread is a `par_map_with` worker. Nested fan-outs
+    /// (an exhibit worker calling the tuner, which calls `par_map`)
+    /// degrade to serial instead of oversubscribing ~threads² OS threads
+    /// of GEMM-scale simulations.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Worker-thread count for parallel sweeps: `PK_THREADS` if set (a value
+/// of `1` forces serial execution), else the machine's available
+/// parallelism.
+pub fn default_threads() -> usize {
+    match std::env::var("PK_THREADS") {
+        Ok(s) => s.parse().ok().filter(|&n| n >= 1).unwrap_or(1),
+        Err(_) => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Map `f` over `items` on up to `threads` scoped threads, returning
+/// results in input order. `threads <= 1` degenerates to a plain serial
+/// map (no threads spawned), which parallel runs are byte-identical to.
+pub fn par_map_with<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = if IN_POOL.with(|p| p.get()) { 1 } else { threads.clamp(1, n.max(1)) };
+    if threads == 1 || n <= 1 {
+        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                IN_POOL.with(|p| p.set(true));
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(i, &items[i]);
+                    *slots[i].lock().unwrap() = Some(r);
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("parallel worker filled its slot"))
+        .collect()
+}
+
+/// [`par_map_with`] at [`default_threads`].
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    par_map_with(default_threads(), items, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_input_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let serial = par_map_with(1, &items, |i, &x| (i, x * x));
+        let parallel = par_map_with(8, &items, |i, &x| (i, x * x));
+        assert_eq!(serial, parallel);
+        assert_eq!(parallel[17], (17, 289));
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert_eq!(par_map_with(4, &empty, |_, &x| x).len(), 0);
+        assert_eq!(par_map_with(4, &[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let items = [1u64, 2, 3];
+        assert_eq!(par_map_with(64, &items, |_, &x| x * 10), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn nested_fan_out_degrades_to_serial() {
+        // inner par_map calls made from a worker thread must not spawn a
+        // second level of pools — and must still return correct results
+        let outer: Vec<usize> = (0..8).collect();
+        let got = par_map_with(4, &outer, |_, &x| {
+            let inner: Vec<usize> = (0..16).collect();
+            par_map_with(4, &inner, |_, &y| x * 100 + y).iter().sum::<usize>()
+        });
+        let want: Vec<usize> =
+            outer.iter().map(|&x| (0..16).map(|y| x * 100 + y).sum()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn worker_panic_propagates() {
+        let items: Vec<usize> = (0..8).collect();
+        let _ = par_map_with(4, &items, |_, &x| {
+            if x == 5 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+}

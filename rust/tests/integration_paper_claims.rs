@@ -507,3 +507,82 @@ fn claim_fig5_partition_matters() {
     let big_many_sms = rows.iter().find(|(n, c, _)| *n == 32768.0 && *c == 32.0).unwrap().2;
     assert!(big_many_sms >= big_small_sms, "more comm SMs slow the large problem");
 }
+
+#[test]
+fn claim_parallel_tuner_sweep_byte_identical_to_serial() {
+    // The scoped-thread sweep driver must never change a number: the
+    // tuner result (which runs on `PK_THREADS`/available parallelism)
+    // must match a hand-rolled serial loop over the same candidate plans
+    // bit-for-bit — same times, same order, same winner.
+    use pk::exec::TimedExec;
+    use pk::hw::spec::NodeSpec;
+    use pk::kernels::GemmKernelCfg;
+    use pk::pk::tuner::tune_comm_sms_with;
+
+    let node = NodeSpec::hgx_h100();
+    let exec = TimedExec::new(node.clone());
+    let cands = [4u32, 8, 16, 32];
+    let build = |c: u32| {
+        let mut cfg = GemmKernelCfg::new(node.clone(), 8192, 1024, 8192);
+        cfg.opts.num_comm_sms = c;
+        pk::kernels::ag_gemm::build(&cfg, None)
+    };
+    let r = tune_comm_sms_with(&exec, &cands, build);
+    let serial: Vec<(u32, f64)> =
+        cands.iter().map(|&c| (c, exec.run(&build(c)).total_time)).collect();
+    assert_eq!(r.sweep.len(), serial.len());
+    for ((c1, t1), (c2, t2)) in r.sweep.iter().zip(&serial) {
+        assert_eq!(c1, c2);
+        assert_eq!(t1.to_bits(), t2.to_bits(), "sweep point {c1} drifted under parallelism");
+    }
+    let (want_c, want_t) =
+        serial.iter().copied().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+    assert_eq!(r.best_comm_sms, want_c);
+    assert_eq!(r.best_time.to_bits(), want_t.to_bits());
+}
+
+#[test]
+fn claim_parallel_exhibit_runner_byte_identical_to_serial() {
+    // exhibit-level parallelism in `pk figures`: the rendered tables
+    // (markdown and CSV — what lands on stdout and in --out) must be
+    // byte-identical between 1 thread and many.
+    use pk::report::run_exhibits;
+    let ids = ["tab1", "fig2", "fig4", "fig5"];
+    let serial = run_exhibits(true, Some(&ids), 1);
+    let parallel = run_exhibits(true, Some(&ids), 4);
+    assert_eq!(serial.len(), ids.len());
+    assert_eq!(serial.len(), parallel.len());
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(s.id, p.id, "registry order must be preserved");
+        assert_eq!(s.table.to_csv(), p.table.to_csv(), "{} drifted under parallelism", s.id);
+        assert_eq!(s.table.to_markdown(), p.table.to_markdown());
+    }
+}
+
+#[test]
+fn claim_solver_memoization_fires_on_symmetric_kernels() {
+    // The perf claim behind the incremental engine: a symmetric kernel's
+    // repeated phases present the same active-class multiset, so the
+    // water-fill memo serves most solves, and the timed result is
+    // unchanged run-to-run (determinism of the whole engine).
+    use pk::exec::TimedExec;
+    use pk::hw::spec::NodeSpec;
+    use pk::kernels::gemm_rs::{self, Schedule};
+    use pk::kernels::GemmKernelCfg;
+
+    let node = NodeSpec::hgx_h100();
+    let cfg = GemmKernelCfg::new(node.clone(), 16384, 16384, 2048);
+    let plan = gemm_rs::build(&cfg, Schedule::IntraSm, None);
+    let exec = TimedExec::new(node);
+    let a = exec.run(&plan);
+    let b = exec.run(&plan);
+    assert_eq!(a.total_time.to_bits(), b.total_time.to_bits());
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.solver, b.solver);
+    assert!(a.solver.solves > 0);
+    assert!(
+        a.solver.memo_hits * 4 > a.solver.solves,
+        "symmetric GEMM+RS phases should hit the memo on a meaningful fraction of solves: {:?}",
+        a.solver
+    );
+}

@@ -765,3 +765,89 @@ fn prop_gemm_rs_schedules_agree() {
         Ok(())
     });
 }
+
+/// The engine's incremental fair-share solver (route-class interning,
+/// active list, memoized water-fill) must be **bit-identical** to the
+/// retained naive reference under random flow churn: after every start
+/// and every completion batch, each live flow's rate has the same f64
+/// bits as `compute_rates` run from scratch on a mirror of the flow
+/// population (dead slots inactive), and completions come out in
+/// ascending slot order (the order the scheduler's event sequencing
+/// depends on).
+#[test]
+fn prop_incremental_solver_bit_identical_to_naive() {
+    use pk::sim::flownet::FlowNet;
+    run_prop("incremental_vs_naive", 120, |rng| {
+        let n_dev = rng.usize_in(2, 6);
+        let mut net = FlowNet::new();
+        let mut caps = HashMap::new();
+        for d in 0..n_dev {
+            for p in [Port::Egress(DeviceId(d)), Port::Ingress(DeviceId(d)), Port::Hbm(DeviceId(d))]
+            {
+                let c = 50.0 + 450.0 * rng.f64();
+                net.set_capacity(p, c);
+                caps.insert(p, c);
+            }
+        }
+        // mirror of the net's slot table for the naive reference
+        let mut specs: Vec<FlowSpec> = vec![];
+        let mut live: Vec<pk::sim::flownet::FlowId> = vec![];
+        // small pools so route classes recur and the memo actually serves
+        // repeated multisets (a cache hit must still match the reference)
+        let cap_pool = [40.0, 120.0, 333.25];
+        let check = |net: &mut FlowNet, specs: &[FlowSpec], live: &[pk::sim::flownet::FlowId]| {
+            let want = compute_rates(specs, &caps);
+            for &id in live {
+                let got = net.rate(id);
+                if got.to_bits() != want[id.0].to_bits() {
+                    return Err(format!(
+                        "slot {}: incremental {got:e} != naive {:e}",
+                        id.0, want[id.0]
+                    ));
+                }
+            }
+            Ok(())
+        };
+        for _ in 0..rng.usize_in(10, 50) {
+            if live.is_empty() || rng.f64() < 0.55 {
+                // start a flow over a random (often repeated) route
+                let src = rng.usize_in(0, n_dev);
+                let mut dst = rng.usize_in(0, n_dev);
+                if dst == src {
+                    dst = (dst + 1) % n_dev;
+                }
+                let ports = match rng.usize_in(0, 3) {
+                    0 => vec![Port::Egress(DeviceId(src)), Port::Ingress(DeviceId(dst))],
+                    1 => vec![Port::Ingress(DeviceId(dst)), Port::Egress(DeviceId(src))],
+                    _ => vec![Port::Hbm(DeviceId(src))],
+                };
+                let cap = *rng.choose(&cap_pool);
+                let bytes = 10.0 + 1000.0 * rng.f64();
+                let id = net.start(bytes, ports.clone(), cap);
+                let spec = FlowSpec { active: true, ports, cap };
+                if id.0 == specs.len() {
+                    specs.push(spec);
+                } else {
+                    specs[id.0] = spec;
+                }
+                live.push(id);
+            } else {
+                // advance to (or part-way to) the next completion
+                let dt = net.next_completion().expect("live flows must progress");
+                let frac = *rng.choose(&[1.0, 1.0, 0.5]);
+                let done = net.advance(dt * frac);
+                for w in done.windows(2) {
+                    if w[0].0 >= w[1].0 {
+                        return Err(format!("completions out of slot order: {done:?}"));
+                    }
+                }
+                for d in &done {
+                    specs[d.0].active = false;
+                    live.retain(|id| id != d);
+                }
+            }
+            check(&mut net, &specs, &live)?;
+        }
+        Ok(())
+    });
+}
