@@ -1,0 +1,103 @@
+"""Tests for the CI bench-regression gate (tools/check_bench.py).
+
+The gate must accept a healthy smoke snapshot, accept the schema-only
+committed baseline in --allow-null mode, and *demonstrably fail* on
+injected schema breaks — a gate that can't fail validates nothing.
+
+No third-party imports beyond pytest; runs in any Python 3.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+TOOLS = os.path.join(os.path.dirname(__file__), "..", "..", "tools")
+sys.path.insert(0, os.path.abspath(TOOLS))
+
+from check_bench import REQUIRED_SECTIONS, SCHEMA, check_snapshot  # noqa: E402
+
+REPO = os.path.abspath(os.path.join(TOOLS, ".."))
+
+
+def healthy_snapshot():
+    sections = {}
+    for i, key in enumerate(REQUIRED_SECTIONS):
+        sections[key] = 0.001 * (i + 1)
+    sections["event_throughput_per_s"] = 1.25e6
+    sections["solver_memo_hit_rate"] = 0.85
+    sections["copy_throughput_gb_s"] = 12.5
+    sections["tile_math_gflop_s"] = 7.5
+    return {
+        "schema": SCHEMA,
+        "note": "synthetic",
+        "smoke": True,
+        "events": 123456,
+        "sections": sections,
+    }
+
+
+def test_healthy_snapshot_passes():
+    assert check_snapshot(healthy_snapshot()) == []
+
+
+def test_committed_baseline_shape_is_accepted_allow_null():
+    with open(os.path.join(REPO, "BENCH_hotpath.json")) as fh:
+        doc = json.load(fh)
+    assert check_snapshot(doc, allow_null=True) == []
+
+
+def test_required_sections_match_the_committed_baseline():
+    # the emitter's section names are the contract; the committed baseline
+    # must carry every required key so the gate can't drift from the bench
+    with open(os.path.join(REPO, "BENCH_hotpath.json")) as fh:
+        doc = json.load(fh)
+    for key in REQUIRED_SECTIONS:
+        assert key in doc["sections"], key
+
+
+@pytest.mark.parametrize(
+    "break_fn, expect",
+    [
+        (lambda d: d.update(schema="pk-hotpath-v0"), "schema drift"),
+        (lambda d: d.pop("sections"), "missing 'sections'"),
+        (lambda d: d["sections"].pop("solver_memo_hit_rate"), "missing section"),
+        (lambda d: d["sections"].pop("event_throughput_per_s"), "missing section"),
+        (lambda d: d["sections"].update({"event_throughput_per_s": 0}), "degenerate"),
+        (lambda d: d["sections"].update({"tile_math_gflop_s": "fast"}), "not a number"),
+        (lambda d: d["sections"].update({"solver_memo_hit_rate": 1.5}), "out of [0, 1]"),
+        (lambda d: d["sections"].update({"linalg: 128^3 matmul_accum": float("nan")}), "not finite"),
+        (lambda d: d["sections"].update({"copy_throughput_gb_s": -1.0}), "negative"),
+        (lambda d: d.update(events=0), "degenerate"),
+        (lambda d: d.pop("events"), "missing or degenerate"),
+    ],
+)
+def test_injected_breaks_fail(break_fn, expect):
+    doc = healthy_snapshot()
+    break_fn(doc)
+    problems = check_snapshot(doc)
+    assert problems, "an injected schema break must be caught"
+    assert any(expect in p for p in problems), (expect, problems)
+
+
+def test_null_sections_fail_without_allow_null():
+    doc = healthy_snapshot()
+    doc["sections"]["event_throughput_per_s"] = None
+    assert any("null" in p for p in check_snapshot(doc))
+    assert check_snapshot(doc, allow_null=True) == []
+
+
+def test_cli_exit_codes(tmp_path):
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(healthy_snapshot()))
+    bad_doc = healthy_snapshot()
+    bad_doc["schema"] = "nope"
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(bad_doc))
+    script = os.path.join(REPO, "tools", "check_bench.py")
+    assert subprocess.run([sys.executable, script, str(good)]).returncode == 0
+    assert subprocess.run([sys.executable, script, str(bad)]).returncode == 1
+    # unreadable path
+    assert subprocess.run([sys.executable, script, str(tmp_path / "missing.json")]).returncode == 1

@@ -1,0 +1,315 @@
+"""Executable model of the cluster GEMM+AR handshake.
+
+The container this repo grows in has no Rust toolchain (see CHANGES.md),
+so `rust/src/kernels/gemm_ar.rs::build_cluster` cannot be executed here.
+This test mirrors its three-phase protocol op-for-op in pure Python —
+the same worker programs (contributors, per-device rail aggregators,
+per-reducer broadcast workers, rail-peer forwarders), the same
+semaphores (per-(aggregator, reducer-node) `prered` counters, the
+per-reducer `red_done` arrival counter with its exact wave-aware target,
+per-(reducer, node) `bc_done` broadcast wave counters), and the same
+wave-split arithmetic — and checks the properties the Rust tests assert:
+
+* **pre-reduce → store-add → broadcast-back** is deadlock-free under
+  arbitrary worker interleavings for any (K, P, rows, chunk) combination;
+* **all-reduce semantics**: every device's replica of every chunk ends at
+  the sum of all K*P device partials — the hierarchy changes the
+  summation tree, never the total, and the `red_done` barrier provably
+  covers every contribution (a short-counted barrier would broadcast a
+  partial sum and fail the equality);
+* the rail path crosses the NIC 2*(K-1)*rows rows per device (pre-reduced
+  inbound + broadcast outbound) versus the naive per-device accounting's
+  2*(K-1)*P*rows — exactly the xP reduction `nic_ar_bytes` models.
+
+No third-party imports: runs in any Python 3.
+"""
+
+import random
+
+MAX_WAVES = 16
+
+
+def wave_share(total, wave, waves):
+    base = total // waves
+    return total - base * (waves - 1) if wave == waves - 1 else base
+
+
+def rail_waves(flow_units, chunk_units, min_waves=1, max_waves=MAX_WAVES):
+    waves = -(-flow_units // max(1, chunk_units))  # ceil div
+    return max(min_waves, min(max_waves, waves))
+
+
+def live_waves(rows, chunk):
+    waves = rail_waves(rows, chunk)
+    return sum(1 for w in range(waves) if wave_share(rows, w, waves) > 0)
+
+
+def build_gemm_ar_cluster_ops(k_cnt, p_cnt, rows_per_dev, chunk_rows, partials):
+    """Mirror of gemm_ar::build_cluster's RailReduce protocol.
+
+    `partials[d][o]` is device d's scalar partial of the chunk owned by
+    reducer o (every device contributes to every chunk — gemm_ar computes
+    the full output). Returns (workers, sems, state, nic_rows) where each
+    worker is a list of ops interpreted by `run_interleaved`:
+
+      ('credit', sem_key, n)          -- semaphore bump
+      ('add', state_key, value)       -- local/NVLink accumulate
+      ('wait', sem_key, threshold)    -- barrier
+      ('shipfinal_add', (src, dst))   -- final rail wave: dst += src value
+      ('set', (src, dst))             -- full-value copy (multicast leg)
+      ('noop',)                       -- byte-only early wave
+
+    Semaphore keys: ('pre', agg, kn) pre-reduce contributions,
+    ('red', o) reducer arrivals, ('bc', o, kn) broadcast waves.
+    State keys: ('stage', g, kn), ('red', o), ('bstage', g, kn),
+    ('out', j, o).
+    """
+    n = k_cnt * p_cnt
+    sems = {}
+    state = {}
+    nic_rows = [0] * n
+    for g in range(n):
+        for kn in range(k_cnt):
+            if kn != g // p_cnt:
+                sems[("pre", g, kn)] = 0
+                state[("stage", g, kn)] = 0.0
+                state[("bstage", g, kn)] = 0.0
+    for o in range(n):
+        sems[("red", o)] = 0
+        state[("red", o)] = 0.0
+        for j in range(n):
+            state[("out", j, o)] = None
+        for kn in range(k_cnt):
+            if kn != o // p_cnt:
+                sems[("bc", o, kn)] = 0
+
+    lw = live_waves(rows_per_dev, chunk_rows)
+    red_target = p_cnt * rows_per_dev + (k_cnt - 1) * lw
+
+    workers = []
+    # contributors: every device adds its partial of every chunk — into
+    # the reducer's chunk directly on the reducer's node, into the node
+    # aggregator's stage otherwise (row-level credits, swizzled order)
+    for d in range(n):
+        my_node = d // p_cnt
+        ops = []
+        owners = list(range(n))
+        random.Random(d * 131).shuffle(owners)  # the tile-order swizzle
+        for o in owners:
+            o_node = o // p_cnt
+            if o_node == my_node:
+                ops.append(("add", ("red", o), partials[d][o]))
+                for _ in range(rows_per_dev):
+                    ops.append(("credit", ("red", o), 1))
+            else:
+                agg = my_node * p_cnt + o % p_cnt
+                ops.append(("add", ("stage", agg, o_node), partials[d][o]))
+                for _ in range(rows_per_dev):
+                    ops.append(("credit", ("pre", agg, o_node), 1))
+        workers.append(ops)
+
+    # rail aggregators: wave-chunked wait on the node's contributions,
+    # then one coalesced store-add per node pair; every live wave bumps
+    # the reducer's arrival counter (exactly the Rust red_done wiring)
+    for g in range(n):
+        my_node = g // p_cnt
+        ops = []
+        for kn in range(k_cnt):
+            if kn == my_node:
+                continue
+            owner = kn * p_cnt + g % p_cnt
+            waves = rail_waves(rows_per_dev, chunk_rows)
+            cum = 0
+            for wave in range(waves):
+                share = wave_share(rows_per_dev, wave, waves)
+                cum += share
+                if share == 0:
+                    continue
+                ops.append(("wait", ("pre", g, kn), p_cnt * cum))
+                if cum == rows_per_dev:
+                    ops.append(("shipfinal_add", (("stage", g, kn), ("red", owner))))
+                else:
+                    ops.append(("noop",))
+                ops.append(("credit", ("red", owner), 1))
+                nic_rows[g] += share
+        workers.append(ops)
+
+    # broadcast workers: the reducer waits for its exact arrival target
+    # (same-node rows + every inbound live wave), multicasts to its node,
+    # and ships one wave-chunked rail flow per remote node
+    for o in range(n):
+        my_node = o // p_cnt
+        ops = [("wait", ("red", o), red_target)]
+        for j in range(my_node * p_cnt, (my_node + 1) * p_cnt):
+            ops.append(("set", (("red", o), ("out", j, o))))
+        for kn in range(k_cnt):
+            if kn == my_node:
+                continue
+            peer = kn * p_cnt + o % p_cnt
+            waves = rail_waves(rows_per_dev, chunk_rows)
+            cum = 0
+            for wave in range(waves):
+                share = wave_share(rows_per_dev, wave, waves)
+                cum += share
+                if share == 0:
+                    continue
+                if cum == rows_per_dev:
+                    ops.append(("set", (("red", o), ("bstage", peer, my_node))))
+                else:
+                    ops.append(("noop",))
+                ops.append(("credit", ("bc", o, kn), 1))
+                nic_rows[o] += share
+        workers.append(ops)
+
+    # rail-peer forwarders: per landed wave, multicast to the node's
+    # devices; the final wave carries the chunk value
+    for g in range(n):
+        my_node = g // p_cnt
+        ops = []
+        for kn in range(k_cnt):
+            if kn == my_node:
+                continue
+            owner = kn * p_cnt + g % p_cnt
+            seen = 0
+            waves = rail_waves(rows_per_dev, chunk_rows)
+            cum = 0
+            for wave in range(waves):
+                share = wave_share(rows_per_dev, wave, waves)
+                cum += share
+                if share == 0:
+                    continue
+                seen += 1
+                ops.append(("wait", ("bc", owner, my_node), seen))
+                if cum == rows_per_dev:
+                    for j in range(my_node * p_cnt, (my_node + 1) * p_cnt):
+                        ops.append(("set", (("bstage", g, kn), ("out", j, owner))))
+                else:
+                    ops.append(("noop",))
+        workers.append(ops)
+
+    return workers, sems, state, nic_rows
+
+
+def run_interleaved(workers, sems, state, rng):
+    """Cooperative scheduler with random stepping order; returns True iff
+    every worker retires (deadlock-freedom)."""
+    pc = [0] * len(workers)
+    while True:
+        progressed = False
+        order = list(range(len(workers)))
+        rng.shuffle(order)
+        for w in order:
+            ops = workers[w]
+            while pc[w] < len(ops):
+                op = ops[pc[w]]
+                kind = op[0]
+                if kind == "credit":
+                    sems[op[1]] += op[2]
+                elif kind == "add":
+                    state[op[1]] += op[2]
+                elif kind == "wait":
+                    if sems[op[1]] < op[2]:
+                        break
+                elif kind == "shipfinal_add":
+                    src, dst = op[1]
+                    state[dst] += state[src]
+                elif kind == "set":
+                    src, dst = op[1]
+                    state[dst] = state[src]
+                # 'noop': byte-only early wave
+                pc[w] += 1
+                progressed = True
+        if all(pc[w] == len(workers[w]) for w in range(len(workers))):
+            return True
+        if not progressed:
+            return False
+
+
+def make_case(rng, k, p, rows, chunk):
+    n = k * p
+    partials = [[float(rng.randint(-8, 8)) for _ in range(n)] for _ in range(n)]
+    workers, sems, state, nic = build_gemm_ar_cluster_ops(k, p, rows, chunk, partials)
+    return partials, workers, sems, state, nic
+
+
+def test_handshake_deadlock_free_and_all_reduces_everywhere():
+    rng = random.Random(0xA11)
+    for case in range(40):
+        k = rng.randint(2, 4)
+        p = rng.randint(1, 4)
+        rows = rng.randint(1, 12)
+        chunk = rng.choice([1, 2, 5, 10**9])
+        partials, workers, sems, state, _ = make_case(rng, k, p, rows, chunk)
+        n = k * p
+        for trial in range(3):
+            s = dict(sems)
+            st = dict(state)
+            ok = run_interleaved(workers, s, st, random.Random(case * 89 + trial))
+            assert ok, f"deadlock: case {case} (k={k} p={p} rows={rows} chunk={chunk})"
+            for o in range(n):
+                want = sum(partials[d][o] for d in range(n))
+                for j in range(n):
+                    got = st[("out", j, o)]
+                    assert got == want, f"case {case} out[{j}][{o}]: {got} vs {want}"
+
+
+def test_broadcast_waits_for_every_contribution():
+    # shrink the red_done target by one and the protocol must either
+    # deadlock (waves never balance) or broadcast a partial sum — the
+    # barrier is load-bearing, not decorative
+    rng = random.Random(5)
+    k, p, rows, chunk = 2, 2, 4, 2
+    partials, workers, sems, state, _ = make_case(rng, k, p, rows, chunk)
+    n = k * p
+    # find the broadcast workers (they start with the red_done wait) and
+    # weaken their barrier
+    broken = False
+    for ops in workers:
+        if ops and ops[0][0] == "wait" and ops[0][1][0] == "red":
+            key, thr = ops[0][1], ops[0][2]
+            ops[0] = ("wait", key, thr - 1)
+            broken = True
+    assert broken
+    saw_partial = False
+    for trial in range(40):
+        s = dict(sems)
+        st = dict(state)
+        ok = run_interleaved(workers, s, st, random.Random(trial))
+        if not ok:
+            continue
+        for o in range(n):
+            want = sum(partials[d][o] for d in range(n))
+            if any(st[("out", j, o)] != want for j in range(n)):
+                saw_partial = True
+    assert saw_partial, "a weakened barrier must be observable under some interleaving"
+
+
+def test_rail_nic_rows_are_one_p_th_of_naive():
+    rng = random.Random(17)
+    for _ in range(20):
+        k = rng.randint(2, 4)
+        p = rng.randint(1, 5)
+        rows = rng.randint(1, 10)
+        _, _, _, _, nic = make_case(rng, k, p, rows, 10**9)
+        n = k * p
+        # rail: (K-1)*rows inbound (as aggregator) + (K-1)*rows outbound
+        # (as reducer) per device
+        assert all(nic[g] == 2 * (k - 1) * rows for g in range(n))
+        naive = 2 * (k - 1) * p * rows  # ship every row / unicast per device
+        assert naive == nic[0] * p
+
+
+def test_wave_split_and_live_wave_count():
+    rng = random.Random(3)
+    for _ in range(200):
+        rows = rng.randint(1, 10**4)
+        chunk = rng.randint(1, 10**4)
+        waves = rail_waves(rows, chunk)
+        shares = [wave_share(rows, w, waves) for w in range(waves)]
+        assert sum(shares) == rows
+        assert 1 <= waves <= MAX_WAVES
+        assert live_waves(rows, chunk) == sum(1 for s in shares if s > 0)
+        # the red_done target is reachable exactly: p*rows same-node
+        # credits + (k-1)*live_waves inbound wave credits
+        p, k = rng.randint(1, 8), rng.randint(2, 4)
+        assert p * rows + (k - 1) * live_waves(rows, chunk) > 0

@@ -81,6 +81,64 @@ pub fn ag_gemm(cfg: &GemmKernelCfg) -> f64 {
     t_comm.max(t_gemm) + 2.0 * launch_gap(node)
 }
 
+/// AG+GEMM extrapolated across a cluster (the `gx1` comparison band):
+/// Flux's copy-engine gather predates NIC coalescing, so cross-node
+/// shards ride **per-device** chunked RDMA on the second stream — `P`
+/// separate flows per (source, remote node), each chunk a separate
+/// host-paced submission; intra-node chunks keep the CE path. A one-node
+/// cluster reduces exactly to [`ag_gemm`].
+pub fn ag_gemm_cluster(cfg: &GemmKernelCfg, cluster: &ClusterSpec) -> f64 {
+    if cluster.num_nodes == 1 {
+        return ag_gemm(cfg);
+    }
+    let node = &cfg.node;
+    let n_dev = cluster.total_devices();
+    let shard_rows = cfg.m / n_dev;
+    let shard_bytes = (shard_rows * cfg.k) as f64 * ELEM_BYTES as f64;
+    let chunk_bytes = (cfg.tile_m * cfg.k) as f64 * ELEM_BYTES as f64;
+    let chunks_per_shard = (shard_bytes / chunk_bytes).ceil().max(1.0) as usize;
+    let mut plan = Plan::new();
+    plan.launch_overhead = node.gpu.kernel_launch;
+    for d in 0..n_dev {
+        let host = plan.add_worker(DeviceId(d), Role::Host, format!("flux_ce/d{d}"));
+        for src in 0..n_dev {
+            if src == d {
+                continue;
+            }
+            let remote = !cluster.same_node(DeviceId(src), DeviceId(d));
+            for _ in 0..chunks_per_shard {
+                plan.push(host, Op::Delay { dur: CE_SUBMIT, label: "ce_submit" });
+                plan.push(
+                    host,
+                    Op::Transfer {
+                        spec: TransferSpec {
+                            mech: if remote { Mechanism::Tma } else { Mechanism::CopyEngine },
+                            route: if remote {
+                                // uncoalesced GPUDirect writes, one stream
+                                // per (source device, destination device)
+                                Route::Rdma { src: DeviceId(src), dst: DeviceId(d) }
+                            } else {
+                                Route::CopyEngineP2p { src: DeviceId(src), dst: DeviceId(d) }
+                            },
+                            bytes: chunk_bytes,
+                            msg_bytes: chunk_bytes,
+                            n_sms: 0.0,
+                        },
+                        blocking: false,
+                        done_sem: None,
+                        done_scope: SyncScope::InterDevice,
+                        label: "flux_ce_gather",
+                        effect: None,
+                    },
+                );
+            }
+        }
+    }
+    let t_comm = TimedExec::on_cluster(cluster.clone()).run(&plan).total_time;
+    let t_gemm = time_plan(node, &gemm::build(cfg, None));
+    t_comm.max(t_gemm) + 2.0 * launch_gap(node)
+}
+
 /// GEMM+RS: Flux's fused intra-SM kernel with its tuning margin.
 pub fn gemm_rs(cfg: &GemmKernelCfg) -> f64 {
     let t_pk = TimedExec::new(cfg.node.clone())

@@ -1,10 +1,18 @@
 //! The non-overlapped baseline: cuBLAS GEMM + NCCL collective as separate
 //! kernels (§4.1's "non-overlapped baseline"). Communication is fully
-//! exposed: `T = T_collective + T_gemm + launch gaps`.
+//! exposed: `T = T_collective + T_gemm + launch gaps`. The `_cluster`
+//! variants extrapolate the same structure across a multi-node
+//! [`ClusterSpec`], with the collective leg running the repo's
+//! hierarchical (multimem + rail-ring) implementations — the strongest
+//! non-overlapped opponent: better collectives, still zero overlap.
 
-use super::{launch_gap, time_plan};
+use super::{launch_gap, phantom_replicas, time_plan};
 use crate::comm::nccl;
+use crate::exec::TimedExec;
+use crate::hw::cluster::ClusterSpec;
+use crate::kernels::collectives::{hier_all_gather, hier_all_reduce, Axis, ClusterCollCtx};
 use crate::kernels::{gemm, GemmKernelCfg};
+use crate::plan::Plan;
 
 /// AG + GEMM: NCCL all-gather of the row-sharded input, then the GEMM.
 pub fn ag_gemm(cfg: &GemmKernelCfg) -> f64 {
@@ -27,6 +35,30 @@ pub fn gemm_ar(cfg: &GemmKernelCfg) -> f64 {
     let node = &cfg.node;
     let t_gemm = time_plan(node, &gemm::build(cfg, None));
     t_gemm + launch_gap(node) + nccl::allreduce_time(node, cfg.m, cfg.n)
+}
+
+/// GEMM + AR across a cluster: the local GEMM, then a hierarchical
+/// all-reduce of the `m×n` output — communication fully exposed.
+pub fn gemm_ar_cluster(cfg: &GemmKernelCfg, cluster: &ClusterSpec) -> f64 {
+    let node = &cfg.node;
+    let t_gemm = time_plan(node, &gemm::build(cfg, None));
+    let mut plan = Plan::new();
+    let views = phantom_replicas(cluster.total_devices(), cfg.m, cfg.n);
+    hier_all_reduce(&mut plan, &ClusterCollCtx::new(cluster, views));
+    let t_ar = TimedExec::on_cluster(cluster.clone()).run(&plan).total_time;
+    t_gemm + launch_gap(node) + t_ar
+}
+
+/// AG + GEMM across a cluster: a hierarchical all-gather of the
+/// row-sharded `m×k` input, then the GEMM.
+pub fn ag_gemm_cluster(cfg: &GemmKernelCfg, cluster: &ClusterSpec) -> f64 {
+    let node = &cfg.node;
+    let mut plan = Plan::new();
+    let views = phantom_replicas(cluster.total_devices(), cfg.m, cfg.k);
+    hier_all_gather(&mut plan, &ClusterCollCtx::new(cluster, views), Axis::Row);
+    let t_ag = TimedExec::on_cluster(cluster.clone()).run(&plan).total_time;
+    let t_gemm = time_plan(node, &gemm::build(cfg, None));
+    t_ag + launch_gap(node) + t_gemm
 }
 
 #[cfg(test)]

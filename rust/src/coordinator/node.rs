@@ -16,7 +16,7 @@ use crate::mem::MemPool;
 use crate::plan::{Op, Plan};
 use crate::runtime::{ArtifactRunner, Runtime};
 use crate::util::linalg::OnlineSoftmaxState;
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};

@@ -15,7 +15,7 @@ use crate::mem::MemPool;
 use crate::plan::{Effect, MatView, Op, Plan};
 use crate::runtime::{ArtifactRunner, Runtime};
 use crate::util::linalg::{self, OnlineSoftmaxState};
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 /// Executes plans functionally against a memory pool.
 pub struct FunctionalExec<'a> {

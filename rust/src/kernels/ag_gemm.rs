@@ -1,4 +1,4 @@
-//! Fused all-gather + GEMM (Figures 5 & 7).
+//! Fused all-gather + GEMM (Figures 5 & 7) — single-node and cluster.
 //!
 //! The input `A` is row-sharded across devices; the weights `B` are
 //! column-sharded, so every device needs *all* of `A` to produce its
@@ -11,34 +11,99 @@
 //!
 //! The communicator/compute SM split is the Figure 5 sweep; the
 //! [`crate::pk::tuner`] finds its optimum at runtime.
+//!
+//! ## Cluster schedule
+//!
+//! Across a multi-node [`ClusterSpec`], [`build_cluster`] shards `A` over
+//! **all** `K·P` GPUs and extends the broadcast hierarchically on
+//! [`crate::pk::rail`]:
+//!
+//! * **Intra-node** — the single-node in-fabric multicast, unchanged:
+//!   each shard reaches its node peers with one egress copy per chunk.
+//! * **Cross-node** — each device ships its whole shard as **one
+//!   coalesced rail flow per remote node** (wave-chunked by `rdma_chunk`,
+//!   the analytic knee by default), addressed to its rail peer; the
+//!   peer's *forwarder* multicasts each landed wave to its node's devices
+//!   over NVSwitch and signals the per-tile-row arrival flags, so compute
+//!   SMs keep consuming rows as they land, exactly as on one node.
+//!
+//! Each shard thus crosses each NIC once per remote node instead of once
+//! per remote *device* — NIC bytes drop exactly ×P versus the naive
+//! per-device scatter ([`nic_ag_bytes`], claims-tested;
+//! [`ClusterPath::Scatter`] keeps the naive transport as the `gx1`
+//! ablation). A one-node cluster delegates to [`build`] bit-identically.
 
 use super::GemmKernelCfg;
+use crate::hw::cluster::ClusterSpec;
 use crate::hw::DeviceId;
 use crate::mem::tile::Shape4;
 use crate::mem::{BufId, MemPool, ELEM_BYTES};
+use crate::pk::rail::{self, RailPlanner, RailSems};
 use crate::pk::template::Lcsc;
-use crate::plan::{Effect, MatView, Op, Plan, Route, SyncScope, TransferSpec};
+use crate::plan::{Effect, MatView, Op, Plan, Role, Route, SemId, SyncScope, TransferSpec};
 use crate::xfer::Mechanism;
+
+pub use super::gemm_rs::ClusterPath;
 
 /// Buffers: per-device gathered `A` (m×k, each device starts with only its
 /// shard rows filled), column-shard `B` (k×n_local), output `C`
-/// (m×n_local).
+/// (m×n_local). The cluster path adds the rail landing stages (empty on
+/// one node).
 #[derive(Clone, Debug)]
 pub struct AgGemmBufs {
     pub a: Vec<BufId>,
     pub b: Vec<BufId>,
     pub c: Vec<BufId>,
+    /// `stage[g]`: `(num_nodes, 1, m/n_dev, k)` rail landing area —
+    /// region `b = kn` receives the shard of `g`'s rail peer on node `kn`
+    /// for the forwarder to multicast. Cluster only.
+    pub stage: Vec<BufId>,
 }
 
 impl AgGemmBufs {
     pub fn alloc(pool: &mut MemPool, cfg: &GemmKernelCfg) -> Self {
-        let n_dev = cfg.node.num_devices;
+        Self::alloc_n(pool, cfg, cfg.node.num_devices)
+    }
+
+    /// Buffers for a cross-node run: `K·P` devices plus, on a multi-node
+    /// cluster, the per-device rail landing stages.
+    pub fn alloc_cluster(pool: &mut MemPool, cfg: &GemmKernelCfg, cluster: &ClusterSpec) -> Self {
+        let n_dev = cluster.total_devices();
+        let mut bufs = Self::alloc_n(pool, cfg, n_dev);
+        if cluster.num_nodes > 1 {
+            assert_eq!(cfg.m % n_dev, 0);
+            let shard_rows = cfg.m / n_dev;
+            let shape = Shape4 { b: cluster.num_nodes, d: 1, r: shard_rows, c: cfg.k };
+            bufs.stage = (0..n_dev).map(|g| pool.alloc(DeviceId(g), shape)).collect();
+        }
+        bufs
+    }
+
+    fn alloc_n(pool: &mut MemPool, cfg: &GemmKernelCfg, n_dev: usize) -> Self {
         AgGemmBufs {
             a: (0..n_dev).map(|d| pool.alloc(DeviceId(d), Shape4::mat(cfg.m, cfg.k))).collect(),
             b: (0..n_dev).map(|d| pool.alloc(DeviceId(d), Shape4::mat(cfg.k, cfg.n))).collect(),
             c: (0..n_dev).map(|d| pool.alloc(DeviceId(d), Shape4::mat(cfg.m, cfg.n))).collect(),
+            stage: vec![],
         }
     }
+}
+
+/// Modeled per-device NIC egress bytes of the cross-node all-gather, by
+/// path: the rail transport ships each shard once per remote *node*
+/// (`K-1` flows), the naive per-device scatter once per remote *device*
+/// (`(K-1)·P` flows) — exactly ×P more. Plain copies either way (no
+/// atomic inflation: the gather writes, it does not reduce).
+pub fn nic_ag_bytes(cfg: &GemmKernelCfg, cluster: &ClusterSpec, path: ClusterPath) -> Vec<f64> {
+    let n_dev = cluster.total_devices();
+    let k = cluster.num_nodes;
+    let p = cluster.devices_per_node();
+    let shard_bytes = (cfg.m / n_dev * cfg.k) as f64 * ELEM_BYTES as f64;
+    let flows = match path {
+        ClusterPath::Scatter => (k - 1) * p,
+        ClusterPath::RailReduce => k - 1,
+    };
+    vec![flows as f64 * shard_bytes; n_dev]
 }
 
 /// Build the fused AG+GEMM kernel. `cfg.m` is the **global** row count
@@ -134,6 +199,255 @@ pub fn build(cfg: &GemmKernelCfg, bufs: Option<&AgGemmBufs>) -> Plan {
     l.finish()
 }
 
+/// Cross-node AG+GEMM with the default rail transport (module docs).
+/// `A` row-shards over **all** `K·P` GPUs; a one-node cluster delegates
+/// to [`build`] bit-identically.
+pub fn build_cluster(cfg: &GemmKernelCfg, cluster: &ClusterSpec, bufs: Option<&AgGemmBufs>) -> Plan {
+    build_cluster_opts(cfg, cluster, ClusterPath::RailReduce, bufs)
+}
+
+/// Cross-node AG+GEMM with an explicit transport: `RailReduce` is the
+/// coalesced rail broadcast with forwarder fan-out; `Scatter` ships each
+/// shard row to every remote device individually (×P more NIC traffic —
+/// the `gx1` ablation/baseline transport).
+pub fn build_cluster_opts(
+    cfg: &GemmKernelCfg,
+    cluster: &ClusterSpec,
+    path: ClusterPath,
+    bufs: Option<&AgGemmBufs>,
+) -> Plan {
+    assert_eq!(cfg.node.num_devices, cluster.node.num_devices, "cfg.node must match cluster.node");
+    assert_eq!(cfg.node.gpu.arch, cluster.node.gpu.arch, "cfg.node must match cluster.node");
+    if cluster.num_nodes == 1 {
+        return build(cfg, bufs);
+    }
+    let n_dev = cluster.total_devices();
+    let k_cnt = cluster.num_nodes;
+    let p_cnt = cluster.devices_per_node();
+    let grid_m = cfg.grid_m();
+    assert_eq!(grid_m % n_dev, 0, "tile rows must divide across shards");
+    let rows_per_shard = grid_m / n_dev;
+    let shard_mat_rows = cfg.m / n_dev;
+    let mut opts = cfg.opts;
+    if opts.num_comm_sms == 0 {
+        opts.num_comm_sms = 16;
+    }
+    let mut l = Lcsc::new_cluster(cluster, opts);
+    let dur = l.tile_gemm_time(cfg.tile_m, cfg.n, cfg.k);
+    let comm_sms = l.comm_sms_per_worker();
+    let chunk_bytes = (cfg.tile_m * cfg.k) as f64 * ELEM_BYTES as f64;
+    let shard_bytes = rows_per_shard as f64 * chunk_bytes;
+    let use_rail = path == ClusterPath::RailReduce;
+    let rdma_chunk = crate::pk::tuner::resolve_rdma_chunk(cfg.rdma_chunk, cluster, shard_bytes);
+    let railp = RailPlanner::new(cluster, rdma_chunk);
+    let waves = railp.waves(shard_bytes, 1, rail::MAX_WAVES);
+    let flow_waves = rail::live_waves(rows_per_shard as u64, waves);
+
+    // arrived[dev][tile_row]: tile_row's A rows are resident on `dev`
+    let arrived: Vec<Vec<SemId>> =
+        (0..n_dev).map(|_| (0..grid_m).map(|_| l.plan.add_sem(0)).collect()).collect();
+    // per-(source device, destination node) wave counters of the rail
+    // shard flows, consumed by the rail-peer forwarders
+    let ag_done: Vec<Vec<SemId>> =
+        if use_rail { RailSems::alloc(&mut l.plan, cluster).done } else { vec![] };
+
+    for dev in 0..n_dev {
+        let my_node = dev / p_cnt;
+        // --- intra-node: the single-node in-fabric multicast, node-scoped
+        let comm_ws = l.comm[dev].clone();
+        for (i, &cw) in comm_ws.iter().enumerate() {
+            for c in (0..rows_per_shard).filter(|c| c % comm_ws.len() == i) {
+                let row = dev * rows_per_shard + c;
+                let effect = bufs.map(|b| Effect::MulticastMat {
+                    src: MatView::full2d(b.a[dev], cfg.m, cfg.k).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.k),
+                    dsts: (my_node * p_cnt..(my_node + 1) * p_cnt)
+                        .filter(|&o| o != dev)
+                        .map(|o| MatView::full2d(b.a[o], cfg.m, cfg.k).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.k))
+                        .collect(),
+                    reduce: None,
+                });
+                l.plan.push(
+                    cw,
+                    Op::Transfer {
+                        spec: TransferSpec {
+                            mech: Mechanism::Tma,
+                            route: Route::Multicast { src: DeviceId(dev) },
+                            bytes: chunk_bytes,
+                            msg_bytes: cfg.tile_msg_bytes(),
+                            n_sms: comm_sms,
+                        },
+                        blocking: true,
+                        done_sem: None,
+                        done_scope: SyncScope::IntraSm,
+                        label: "ag_multicast",
+                        effect,
+                    },
+                );
+                for o in my_node * p_cnt..(my_node + 1) * p_cnt {
+                    l.plan.push(cw, Op::Signal { sem: arrived[o][row], value: 1, scope: SyncScope::InterDevice });
+                }
+            }
+        }
+        // --- cross-node: one coalesced rail flow per remote node, or the
+        // naive per-(device, row) RDMA scatter
+        let xw = l.plan.add_worker(DeviceId(dev), Role::CommSm, format!("ag_gemm_rail/d{dev}"));
+        for kn in 0..k_cnt {
+            if kn == my_node {
+                continue;
+            }
+            if use_rail {
+                match bufs {
+                    Some(b) => {
+                        let peer = railp.peer(DeviceId(dev), kn).0;
+                        let src = MatView::full2d(b.a[dev], cfg.m, cfg.k)
+                            .sub(dev * shard_mat_rows, 0, shard_mat_rows, cfg.k);
+                        let dst = MatView { buf: b.stage[peer], b: my_node, d: 0, row0: 0, col0: 0, rows: shard_mat_rows, cols: cfg.k };
+                        railp.send(
+                            &mut l.plan, xw, DeviceId(dev), kn, shard_bytes, comm_sms,
+                            Some(ag_done[dev][kn]), "ag_rail_send",
+                            Some(Effect::CopyMat { src, dst, reduce: None }),
+                        );
+                    }
+                    None => {
+                        for lw in &flow_waves {
+                            railp.send(
+                                &mut l.plan, xw, DeviceId(dev), kn, lw.share as f64 * chunk_bytes,
+                                comm_sms, Some(ag_done[dev][kn]), "ag_rail_send", None,
+                            );
+                        }
+                    }
+                }
+            } else {
+                // naive: one RDMA write per (remote device, tile row)
+                for j in kn * p_cnt..(kn + 1) * p_cnt {
+                    for c in 0..rows_per_shard {
+                        let row = dev * rows_per_shard + c;
+                        let effect = bufs.map(|b| Effect::CopyMat {
+                            src: MatView::full2d(b.a[dev], cfg.m, cfg.k).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.k),
+                            dst: MatView::full2d(b.a[j], cfg.m, cfg.k).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.k),
+                            reduce: None,
+                        });
+                        l.plan.push(xw, Op::Transfer {
+                            spec: TransferSpec {
+                                mech: Mechanism::Tma,
+                                route: Route::Rdma { src: DeviceId(dev), dst: DeviceId(j) },
+                                bytes: chunk_bytes,
+                                msg_bytes: chunk_bytes,
+                                n_sms: comm_sms,
+                            },
+                            blocking: false,
+                            done_sem: Some(arrived[j][row]),
+                            done_scope: SyncScope::InterNode,
+                            label: "ag_scatter_rdma",
+                            effect,
+                        });
+                    }
+                }
+            }
+        }
+        // --- rail-peer forwarder: multicast landed waves to node peers
+        // and flag the arrivals (rail path only)
+        if use_rail {
+            let fw = l.plan.add_worker(DeviceId(dev), Role::CommSm, format!("ag_gemm_fwd/d{dev}"));
+            for kn in 0..k_cnt {
+                if kn == my_node {
+                    continue;
+                }
+                let s = railp.peer(DeviceId(dev), kn).0; // shard source on kn
+                match bufs {
+                    Some(b) => {
+                        l.plan.push(fw, Op::Wait { sem: ag_done[s][my_node], value: 1 });
+                        let effect = Effect::MulticastMat {
+                            src: MatView { buf: b.stage[dev], b: kn, d: 0, row0: 0, col0: 0, rows: shard_mat_rows, cols: cfg.k },
+                            dsts: (my_node * p_cnt..(my_node + 1) * p_cnt)
+                                .map(|j| {
+                                    MatView::full2d(b.a[j], cfg.m, cfg.k)
+                                        .sub(s * shard_mat_rows, 0, shard_mat_rows, cfg.k)
+                                })
+                                .collect(),
+                            reduce: None,
+                        };
+                        l.plan.push(fw, Op::Transfer {
+                            spec: TransferSpec {
+                                mech: Mechanism::Tma,
+                                route: Route::Multicast { src: DeviceId(dev) },
+                                bytes: shard_bytes,
+                                msg_bytes: cfg.tile_msg_bytes(),
+                                n_sms: comm_sms,
+                            },
+                            blocking: true,
+                            done_sem: None,
+                            done_scope: SyncScope::IntraSm,
+                            label: "ag_fwd_multicast",
+                            effect: Some(effect),
+                        });
+                        for c in 0..rows_per_shard {
+                            let row = s * rows_per_shard + c;
+                            for j in my_node * p_cnt..(my_node + 1) * p_cnt {
+                                l.plan.push(fw, Op::Signal { sem: arrived[j][row], value: 1, scope: SyncScope::InterDevice });
+                            }
+                        }
+                    }
+                    None => {
+                        for lw in &flow_waves {
+                            l.plan.push(fw, Op::Wait { sem: ag_done[s][my_node], value: lw.idx + 1 });
+                            l.plan.push(fw, Op::Transfer {
+                                spec: TransferSpec {
+                                    mech: Mechanism::Tma,
+                                    route: Route::Multicast { src: DeviceId(dev) },
+                                    bytes: lw.share as f64 * chunk_bytes,
+                                    msg_bytes: cfg.tile_msg_bytes(),
+                                    n_sms: comm_sms,
+                                },
+                                blocking: true,
+                                done_sem: None,
+                                done_scope: SyncScope::IntraSm,
+                                label: "ag_fwd_multicast",
+                                effect: None,
+                            });
+                            for c in lw.cum - lw.share..lw.cum {
+                                let row = s * rows_per_shard + c as usize;
+                                for j in my_node * p_cnt..(my_node + 1) * p_cnt {
+                                    l.plan.push(fw, Op::Signal { sem: arrived[j][row], value: 1, scope: SyncScope::InterDevice });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // --- compute: own shard first, then remote rows interleaved by
+        // chunk index across shards (the single-node consumption order,
+        // over all K·P shards)
+        let mut order: Vec<usize> = (0..rows_per_shard).map(|c| dev * rows_per_shard + c).collect();
+        for c in 0..rows_per_shard {
+            for s in 1..n_dev {
+                let shard = (dev + s) % n_dev;
+                order.push(shard * rows_per_shard + c);
+            }
+        }
+        let tasks = l.split_tasks(dev, grid_m);
+        for (wi, (w, _)) in tasks.iter().enumerate() {
+            for (t, &row) in order.iter().enumerate() {
+                if t % tasks.len() != wi {
+                    continue;
+                }
+                if row / rows_per_shard != dev {
+                    l.plan.push(*w, Op::Wait { sem: arrived[dev][row], value: 1 });
+                }
+                let effect = bufs.map(|b| Effect::Gemm {
+                    a: MatView::full2d(b.a[dev], cfg.m, cfg.k).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.k),
+                    b: MatView::full2d(b.b[dev], cfg.k, cfg.n),
+                    c: MatView::full2d(b.c[dev], cfg.m, cfg.n).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.n),
+                    accumulate: false,
+                });
+                l.plan.push(*w, Op::Compute { dur, label: "gemm_tile_row", effect });
+            }
+        }
+    }
+    l.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,5 +511,95 @@ mod tests {
         };
         // large problem: 64 comm SMs wastes compute vs 8
         assert!(time_with(32768, 64) > time_with(32768, 8));
+    }
+
+    fn run_cluster_path(path: ClusterPath) {
+        let cluster = ClusterSpec::test_cluster(2, 2);
+        let n_dev = cluster.total_devices();
+        let mut cfg = GemmKernelCfg::functional(cluster.node.clone(), 64, 32, 24);
+        cfg.opts.num_comm_sms = 8;
+        let mut pool = MemPool::new();
+        let bufs = AgGemmBufs::alloc_cluster(&mut pool, &cfg, &cluster);
+        // device d starts with only its shard rows of the global A
+        let a_global = seeded_vec(77, 64 * 24);
+        let shard_rows = 64 / n_dev;
+        for d in 0..n_dev {
+            let start = d * shard_rows * 24;
+            let end = (d + 1) * shard_rows * 24;
+            pool.get_mut(bufs.a[d]).data[start..end].copy_from_slice(&a_global[start..end]);
+            pool.get_mut(bufs.b[d]).data = seeded_vec(d as u64 + 17, 24 * 32);
+        }
+        let plan = build_cluster_opts(&cfg, &cluster, path, Some(&bufs));
+        run_functional(&mut pool, &plan);
+        for d in 0..n_dev {
+            // every device gathered the full A (NVLink peers via multicast,
+            // remote shards via the rail stage + forwarder)...
+            assert_allclose(&pool.get(bufs.a[d]).data, &a_global, 1e-6, 1e-7);
+            // ...and computed full_A @ B_d
+            let want = linalg::matmul(&a_global, &pool.get(bufs.b[d]).data, 64, 32, 24);
+            assert_allclose(&pool.get(bufs.c[d]).data, &want, 1e-5, 1e-6);
+        }
+    }
+
+    #[test]
+    fn functional_cluster_rail_gathers_and_computes() {
+        run_cluster_path(ClusterPath::RailReduce);
+    }
+
+    #[test]
+    fn functional_cluster_scatter_path_matches_too() {
+        run_cluster_path(ClusterPath::Scatter);
+    }
+
+    #[test]
+    fn cluster_single_node_delegates_bit_identically() {
+        let node = NodeSpec::hgx_h100();
+        let cfg = GemmKernelCfg::new(node.clone(), 32768, 4096, 32768);
+        let a = build(&cfg, None);
+        let b = build_cluster(&cfg, &ClusterSpec::single(node.clone()), None);
+        assert_eq!(a.total_ops(), b.total_ops());
+        assert_eq!(a.workers.len(), b.workers.len());
+        let ta = TimedExec::new(node.clone()).run(&a).total_time;
+        let tb = TimedExec::on_cluster(ClusterSpec::single(node)).run(&b).total_time;
+        assert_eq!(ta.to_bits(), tb.to_bits(), "1-node cluster AG+GEMM must not drift");
+    }
+
+    #[test]
+    fn timed_cluster_nic_bytes_match_model_for_both_paths() {
+        use crate::hw::topology::Port;
+        let cluster = ClusterSpec::hgx_h100_pod(2);
+        let p = cluster.devices_per_node();
+        let cfg = GemmKernelCfg::new(cluster.node.clone(), 32768, 4096, 8192);
+        let mut got = vec![];
+        for path in [ClusterPath::Scatter, ClusterPath::RailReduce] {
+            let plan = build_cluster_opts(&cfg, &cluster, path, None);
+            let r = TimedExec::on_cluster(cluster.clone()).run(&plan);
+            assert!(r.total_time.is_finite() && r.total_time > 0.0);
+            let want = nic_ag_bytes(&cfg, &cluster, path);
+            for g in 0..cluster.total_devices() {
+                let e = r
+                    .port_bytes
+                    .get(&Port::NicEgress(crate::hw::DeviceId(g)))
+                    .copied()
+                    .unwrap_or(0.0);
+                assert!((e - want[g]).abs() / want[g] < 1e-6, "{path:?} dev {g}: {e} vs {}", want[g]);
+            }
+            got.push(r.port_bytes[&Port::NicEgress(crate::hw::DeviceId(0))]);
+        }
+        assert!((got[0] / got[1] - p as f64).abs() < 1e-9, "rail must cut NIC bytes xP: {got:?}");
+    }
+
+    #[test]
+    fn timed_cluster_rail_beats_scatter_when_nic_bound() {
+        let cluster = ClusterSpec::hgx_h100_pod(2).with_nic_bw(25e9);
+        let cfg = GemmKernelCfg::new(cluster.node.clone(), 32768, 4096, 8192);
+        let exec = TimedExec::on_cluster(cluster.clone());
+        let t_rail = exec
+            .run(&build_cluster_opts(&cfg, &cluster, ClusterPath::RailReduce, None))
+            .total_time;
+        let t_scatter = exec
+            .run(&build_cluster_opts(&cfg, &cluster, ClusterPath::Scatter, None))
+            .total_time;
+        assert!(t_rail < t_scatter, "rail broadcast must win NIC-bound: {t_rail} vs {t_scatter}");
     }
 }

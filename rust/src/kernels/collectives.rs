@@ -377,6 +377,12 @@ pub fn pk_all_to_all_4d_cluster(
     let slab_units = (cfg.b_dim * cfg.s_local) as u64;
     let slab_bytes = p_cnt as f64 * tile_bytes;
     plan.launch_overhead = cluster.node.gpu.kernel_launch;
+    // RDMA_CHUNK_AUTO resolves to the analytic knee for the full rail flow
+    let rdma_chunk = crate::pk::tuner::resolve_rdma_chunk(
+        rdma_chunk,
+        cluster,
+        slab_units as f64 * slab_bytes,
+    );
     let railp = RailPlanner::new(cluster, rdma_chunk);
     let rail_done = RailSems::alloc(plan, cluster).done;
     let waves = match srcs {

@@ -1,8 +1,9 @@
 //! Fused GEMM + all-reduce — the Appendix D example kernel (Figure 4
-//! right, Figure 9).
+//! right, Figure 9) — single-node and cluster.
 //!
 //! Every device computes the full `m×n` output over its local `k` shard;
-//! the outputs must be **summed and left everywhere**. Two schedules:
+//! the outputs must be **summed and left everywhere**. Two single-node
+//! schedules:
 //!
 //! * **Inter-SM (PK's choice)**: the storer writes each finished tile into
 //!   the *local* replica of the output PGL and signals the tile's barrier
@@ -14,29 +15,79 @@
 //! * **Intra-SM (ablation)**: the storer `store_add_async`es every tile to
 //!   all `N` replicas directly; the `N` concurrent peer writes serialize
 //!   at each destination's ingress port.
+//!
+//! ## Cluster schedule
+//!
+//! Across a multi-node [`ClusterSpec`] the all-reduce becomes NIC-bound,
+//! and [`build_cluster`] runs the same hierarchical three-phase schedule
+//! the in-network kernel suggests, built from [`crate::pk::rail`]:
+//!
+//! 1. **Node-local pre-reduce** — output row-chunk `o` is assigned to
+//!    global device `o` (its *reducer*). Each device adds every finished
+//!    tile row over NVLink into its node's per-chunk accumulator: the
+//!    reducer's chunk directly when the reducer shares the node
+//!    ([`crate::pk::primitives::store_add_async_scoped`]), or the staging
+//!    area of the reducer's **rail peer** otherwise — exactly the
+//!    [`crate::kernels::gemm_rs::ClusterPath::RailReduce`] pattern.
+//! 2. **One coalesced RDMA store-add per node pair** — once its node's
+//!    `P` partials have landed, the rail aggregator ships the pre-reduced
+//!    chunk along its rail to the reducer, wave-chunked by `rdma_chunk`
+//!    (the analytic curve knee by default,
+//!    [`crate::pk::tuner::analytic_rdma_chunk`]).
+//! 3. **Broadcast-back** — the reducer multicasts the finished chunk to
+//!    its node peers in-fabric (multimem), and ships one rail flow per
+//!    remote node whose rail-peer *forwarder* multicasts it on arrival.
+//!
+//! Each chunk therefore crosses each NIC ~2× ((K−1) pre-reduced inbound
+//! + (K−1) broadcast outbound, independent of `P`) instead of the
+//! `P·N`-style crossings of per-device scatter+unicast — NIC bytes drop
+//! exactly ×P versus [`ClusterPath::Scatter`] ([`nic_ar_bytes`],
+//! claims-tested). A one-node cluster delegates to [`build`]
+//! bit-identically, like every kernel in the repo.
 
 use super::gemm::GemmBufs;
 use super::GemmKernelCfg;
+use crate::hw::cluster::ClusterSpec;
 use crate::hw::DeviceId;
 use crate::mem::pgl::ReduceOp;
-use crate::mem::{BufId, MemPool};
-use crate::pk::primitives::{all_reduce, store_add_async, store_async, TileRef};
+use crate::mem::tile::Shape4;
+use crate::mem::{BufId, MemPool, ELEM_BYTES};
+use crate::pk::primitives::{
+    all_reduce, store_add_async, store_add_async_routed, store_add_async_scoped, store_async,
+    TileRef,
+};
+use crate::pk::rail::{self, RailPlanner, RailSems};
 use crate::pk::template::Lcsc;
-use crate::plan::{Effect, MatView, Op, Plan, SyncScope};
+use crate::plan::{Effect, MatView, Op, Plan, Role, Route, SemId, SyncScope, TransferSpec};
+use crate::xfer::Mechanism;
 
-pub use super::gemm_rs::Schedule;
+pub use super::gemm_rs::{ClusterPath, Schedule};
 
 /// Buffers: GEMM operands plus the output PGL (one m×n replica per
 /// device). For the inter-SM path `c` holds local partials that the
 /// in-network all-reduce overwrites in place. The intra-SM path needs a
 /// *separate* accumulation target `out` — atomically adding into the same
 /// buffers the senders read from would double-count contributions (real
-/// kernels use a distinct destination PGL for exactly this reason).
+/// kernels use a distinct destination PGL for exactly this reason). The
+/// cluster path adds the reducer/staging buffers of the hierarchical
+/// schedule (empty on one node).
 #[derive(Clone, Debug)]
 pub struct GemmArBufs {
     pub gemm: GemmBufs,
-    /// Intra-SM accumulation replicas (zero-initialised).
+    /// Intra-SM accumulation replicas (zero-initialised); the cluster
+    /// path's final full-output replica per device.
     pub out: Vec<crate::mem::BufId>,
+    /// `red[o]`: reducer `o`'s globally-summed chunk (`m/n_dev × n`,
+    /// zero-initialised). Cluster only.
+    pub red: Vec<BufId>,
+    /// `stage[g]`: `(num_nodes, 1, chunk_rows, n)` pre-reduce staging —
+    /// region `b = kn` accumulates this node's partial of the chunk owned
+    /// by device `(kn, rank(g))`. Cluster only.
+    pub stage: Vec<BufId>,
+    /// `bstage[g]`: broadcast-back landing area, same shape as `stage` —
+    /// region `b = kn` receives the finished chunk of the reducer
+    /// `(kn, rank(g))` for the forwarder to multicast. Cluster only.
+    pub bstage: Vec<BufId>,
 }
 
 impl GemmArBufs {
@@ -47,6 +98,33 @@ impl GemmArBufs {
             out: (0..n_dev)
                 .map(|d| pool.alloc(DeviceId(d), crate::mem::tile::Shape4::mat(cfg.m, cfg.n)))
                 .collect(),
+            red: vec![],
+            stage: vec![],
+            bstage: vec![],
+        }
+    }
+
+    /// Buffers for a cross-node run: operands and output replicas for all
+    /// `K·P` devices plus, on a multi-node cluster, the reducer chunks and
+    /// the rail staging areas.
+    pub fn alloc_cluster(pool: &mut MemPool, cfg: &GemmKernelCfg, cluster: &ClusterSpec) -> Self {
+        let n_dev = cluster.total_devices();
+        if cluster.num_nodes == 1 {
+            return Self::alloc(pool, cfg);
+        }
+        assert_eq!(cfg.m % n_dev, 0);
+        let chunk_rows = cfg.m / n_dev;
+        let stage_shape = Shape4 { b: cluster.num_nodes, d: 1, r: chunk_rows, c: cfg.n };
+        GemmArBufs {
+            gemm: GemmBufs::alloc_n(pool, cfg, n_dev),
+            out: (0..n_dev)
+                .map(|d| pool.alloc(DeviceId(d), crate::mem::tile::Shape4::mat(cfg.m, cfg.n)))
+                .collect(),
+            red: (0..n_dev)
+                .map(|d| pool.alloc(DeviceId(d), Shape4::mat(chunk_rows, cfg.n)))
+                .collect(),
+            stage: (0..n_dev).map(|g| pool.alloc(DeviceId(g), stage_shape)).collect(),
+            bstage: (0..n_dev).map(|g| pool.alloc(DeviceId(g), stage_shape)).collect(),
         }
     }
 
@@ -57,6 +135,32 @@ impl GemmArBufs {
             .map(|&b| MatView::full2d(b, cfg.m, cfg.n).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.n))
             .collect()
     }
+}
+
+/// Modeled per-device NIC egress bytes of the cluster all-reduce, by path.
+///
+/// `RailReduce`: each device ships, as the rail aggregator of its rail's
+/// `K-1` remote chunks, one pre-reduced store-add per node pair
+/// (atomic-inflated), and, as the reducer of its own chunk, one plain
+/// broadcast flow per remote node — `(K-1)·chunk` bytes each way.
+/// `Scatter` (the naive per-device accounting): every device ships each of
+/// its `(K-1)·P·rows_per_dev` remote-owned tile rows itself, and each
+/// reducer unicasts its chunk to all `(K-1)·P` remote devices — exactly
+/// ×P more NIC traffic on both legs.
+pub fn nic_ar_bytes(cfg: &GemmKernelCfg, cluster: &ClusterSpec, path: ClusterPath) -> Vec<f64> {
+    let n_dev = cluster.total_devices();
+    let k = cluster.num_nodes;
+    let p = cluster.devices_per_node();
+    let rows_per_dev = cfg.grid_m() / n_dev;
+    let tile_row_bytes = (cfg.tile_m * cfg.n) as f64 * ELEM_BYTES as f64;
+    let infl = 1.0 + cluster.node.gpu.atomic_overhead_frac;
+    let rows = match path {
+        ClusterPath::Scatter => (k - 1) * p * rows_per_dev,
+        ClusterPath::RailReduce => (k - 1) * rows_per_dev,
+    };
+    // the store-add leg pays the atomic inflation; the broadcast leg is a
+    // plain write of the same row count
+    vec![rows as f64 * tile_row_bytes * (infl + 1.0); n_dev]
 }
 
 /// Build the fused GEMM+AR kernel.
@@ -178,6 +282,470 @@ fn build_intra(cfg: &GemmKernelCfg, bufs: Option<&GemmArBufs>) -> Plan {
     l.finish()
 }
 
+/// Cross-node GEMM+AR with the default [`ClusterPath::RailReduce`]
+/// transport (module docs): the reduction axis is sharded over **all**
+/// GPUs of the cluster and the summed `m×n` output is left on every
+/// device. A one-node cluster delegates to [`build`] bit-identically.
+pub fn build_cluster(
+    cfg: &GemmKernelCfg,
+    cluster: &ClusterSpec,
+    schedule: Schedule,
+    bufs: Option<&GemmArBufs>,
+) -> Plan {
+    build_cluster_opts(cfg, cluster, schedule, ClusterPath::RailReduce, bufs)
+}
+
+/// Cross-node GEMM+AR with an explicit transport. `RailReduce` is the
+/// hierarchical pre-reduce → coalesced store-add → broadcast-back
+/// schedule; `Scatter` is the naive per-device ablation (every tile row
+/// ships itself, every reducer unicasts its chunk — ×P more NIC traffic,
+/// the `gx1` baseline band). `schedule` picks who issues the pre-reduce
+/// stores: the compute storers (`IntraSm`) or dedicated communicator SMs
+/// fed by a staging handoff (`InterSm`, the single-node AR default).
+pub fn build_cluster_opts(
+    cfg: &GemmKernelCfg,
+    cluster: &ClusterSpec,
+    schedule: Schedule,
+    path: ClusterPath,
+    bufs: Option<&GemmArBufs>,
+) -> Plan {
+    assert_eq!(cfg.node.num_devices, cluster.node.num_devices, "cfg.node must match cluster.node");
+    assert_eq!(cfg.node.gpu.arch, cluster.node.gpu.arch, "cfg.node must match cluster.node");
+    if cluster.num_nodes == 1 {
+        // the hierarchical machinery degenerates entirely on one node;
+        // delegate so the single-node numbers cannot drift
+        return build(cfg, schedule, bufs);
+    }
+    assert!(cluster.node.multimem, "broadcast-back needs multimem (Appendix F)");
+    let n_dev = cluster.total_devices();
+    let k_cnt = cluster.num_nodes;
+    let p_cnt = cluster.devices_per_node();
+    let grid_m = cfg.grid_m();
+    assert_eq!(grid_m % n_dev, 0, "tile rows must divide across devices");
+    let rows_per_dev = grid_m / n_dev;
+    let chunk_rows = cfg.m / n_dev;
+    let tile_row_bytes = (cfg.tile_m * cfg.n) as f64 * ELEM_BYTES as f64;
+    let chunk_bytes = rows_per_dev as f64 * tile_row_bytes;
+    let mut opts = cfg.opts;
+    if schedule == Schedule::IntraSm {
+        opts.num_comm_sms = 0; // all SMs compute
+    } else if opts.num_comm_sms == 0 {
+        opts.num_comm_sms = 16; // default communicator partition
+    }
+    let mut l = Lcsc::new_cluster(cluster, opts);
+    let dur = l.tile_gemm_time(cfg.tile_m, cfg.n, cfg.k);
+    let store_sms = match schedule {
+        Schedule::IntraSm => cfg.sms_per_compute_worker(),
+        Schedule::InterSm => l.comm_sms_per_worker(),
+    };
+    let use_rail = path == ClusterPath::RailReduce;
+    let rdma_chunk = crate::pk::tuner::resolve_rdma_chunk(cfg.rdma_chunk, cluster, chunk_bytes);
+    let railp = RailPlanner::new(cluster, rdma_chunk);
+    // wave structure of the per-node-pair rail flows (timing mode; the
+    // functional mode ships whole chunks in single flows)
+    let waves = railp.waves(chunk_bytes, 1, rail::MAX_WAVES);
+    let flow_waves = rail::live_waves(rows_per_dev as u64, waves);
+    // pre-reduce contribution counters per (aggregator device, reducer
+    // node), bumped by every node-local partial landing in the stage
+    let prered: Vec<Vec<SemId>> =
+        if use_rail { RailSems::alloc(&mut l.plan, cluster).done } else { vec![] };
+    // red_done[o]: arrivals into reducer o's chunk — every same-node
+    // per-row store-add plus (rail) every inbound pre-reduced wave, or
+    // (scatter) one per device per row
+    let red_done: Vec<SemId> = (0..n_dev).map(|_| l.plan.add_sem(0)).collect();
+    let red_target: u64 = if use_rail {
+        let per_flow = if bufs.is_some() { 1 } else { flow_waves.len() as u64 };
+        (p_cnt * rows_per_dev) as u64 + (k_cnt as u64 - 1) * per_flow
+    } else {
+        (n_dev * rows_per_dev) as u64
+    };
+    // broadcast-back wave counters per (reducer device, destination node)
+    let bc_done: Vec<Vec<SemId>> =
+        if use_rail { RailSems::alloc(&mut l.plan, cluster).done } else { vec![] };
+
+    // ---- compute + contribution emission (the tile-order swizzle of
+    // gemm_rs spreads concurrent stores across ingress ports and NICs)
+    for dev in 0..n_dev {
+        let order: Vec<usize> = (0..grid_m)
+            .map(|i| {
+                let chunk = (dev + 1 + i / rows_per_dev) % n_dev;
+                chunk * rows_per_dev + i % rows_per_dev
+            })
+            .collect();
+        let tasks: Vec<(usize, Vec<usize>)> = l
+            .split_tasks(dev, grid_m)
+            .into_iter()
+            .map(|(w, idxs)| (w, idxs.into_iter().map(|i| order[i]).collect()))
+            .collect();
+        // per-tile-row inter-SM handoff barriers (InterSm only)
+        let staged: Vec<_> = match schedule {
+            Schedule::InterSm => (0..grid_m).map(|_| l.plan.add_sem(0)).collect(),
+            Schedule::IntraSm => vec![],
+        };
+        for (w, rows) in &tasks {
+            let slots = l.plan.add_sem(l.opts.pipeline_stages);
+            let mut acquired = 0;
+            for &row in rows {
+                let effect_gemm = bufs.map(|b| Effect::Gemm {
+                    a: MatView::full2d(b.gemm.a[dev], cfg.m, cfg.k).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.k),
+                    b: MatView::full2d(b.gemm.b[dev], cfg.k, cfg.n),
+                    c: MatView::full2d(b.gemm.c[dev], cfg.m, cfg.n).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.n),
+                    accumulate: false,
+                });
+                match schedule {
+                    Schedule::IntraSm => {
+                        acquired += 1;
+                        l.plan.push(*w, Op::Wait { sem: slots, value: acquired });
+                        l.plan.push(*w, Op::Compute { dur, label: "gemm_tile_row", effect: effect_gemm });
+                        emit_ar_contribution(
+                            &mut l, cfg, cluster, *w, dev, row, rows_per_dev, store_sms, path,
+                            &prered, &red_done, bufs,
+                        );
+                        // the slot frees at issue; the reduction counters
+                        // throttle downstream instead
+                        l.plan.push(*w, Op::Signal { sem: slots, value: 1, scope: SyncScope::IntraSm });
+                    }
+                    Schedule::InterSm => {
+                        l.plan.push(*w, Op::Compute { dur, label: "gemm_tile_row", effect: effect_gemm });
+                        l.plan.push(*w, Op::Signal {
+                            sem: staged[row],
+                            value: 1,
+                            scope: SyncScope::InterSm,
+                        });
+                    }
+                }
+            }
+            if schedule == Schedule::IntraSm {
+                // drain the pipeline
+                l.plan.push(*w, Op::Wait { sem: slots, value: acquired + l.opts.pipeline_stages });
+            }
+        }
+        if schedule == Schedule::InterSm {
+            // communicator workers emit the contributions of staged rows
+            let comm_ws = l.comm[dev].clone();
+            for (i, &cw) in comm_ws.iter().enumerate() {
+                for idx in (0..grid_m).filter(|r| r % comm_ws.len() == i) {
+                    let row = (dev + 1 + idx / rows_per_dev) % n_dev * rows_per_dev + idx % rows_per_dev;
+                    l.plan.push(cw, Op::Wait { sem: staged[row], value: 1 });
+                    emit_ar_contribution(
+                        &mut l, cfg, cluster, cw, dev, row, rows_per_dev, store_sms, path,
+                        &prered, &red_done, bufs,
+                    );
+                }
+            }
+        }
+    }
+
+    // ---- rail aggregators (RailReduce only): once the node's P partials
+    // of a remote chunk landed in the stage, ship one pre-reduced,
+    // coalesced RDMA store-add per node pair into the reducer's chunk
+    if use_rail {
+        for g in 0..n_dev {
+            let my_node = g / p_cnt;
+            let w = l.plan.add_worker(DeviceId(g), Role::CommSm, format!("gemm_ar_rail/d{g}"));
+            for kn in 0..k_cnt {
+                if kn == my_node {
+                    continue;
+                }
+                let owner = kn * p_cnt + g % p_cnt; // same-rank reducer on node kn
+                match bufs {
+                    Some(b) => {
+                        l.plan.push(w, Op::Wait {
+                            sem: prered[g][kn],
+                            value: (p_cnt * rows_per_dev) as u64,
+                        });
+                        let src = MatView { buf: b.stage[g], b: kn, d: 0, row0: 0, col0: 0, rows: chunk_rows, cols: cfg.n };
+                        let dst = MatView::full2d(b.red[owner], chunk_rows, cfg.n);
+                        railp.send_add(
+                            &mut l.plan, w, DeviceId(g), kn, chunk_bytes, store_sms,
+                            Some(red_done[owner]), "gemm_ar_rail_send",
+                            Some(Effect::CopyMat { src, dst, reduce: Some(ReduceOp::Add) }),
+                        );
+                    }
+                    None => {
+                        for lw in &flow_waves {
+                            l.plan.push(w, Op::Wait {
+                                sem: prered[g][kn],
+                                value: p_cnt as u64 * lw.cum,
+                            });
+                            railp.send_add(
+                                &mut l.plan, w, DeviceId(g), kn, lw.share as f64 * tile_row_bytes,
+                                store_sms, Some(red_done[owner]), "gemm_ar_rail_send", None,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- broadcast-back: each reducer waits for its fully-summed chunk,
+    // multicasts it to its node peers in-fabric, and (rail) ships one
+    // flow per remote node for the forwarders / (scatter) unicasts it to
+    // every remote device individually
+    for o in 0..n_dev {
+        let my_node = o / p_cnt;
+        let w = l.plan.add_worker(DeviceId(o), Role::CommSm, format!("gemm_ar_bcast/d{o}"));
+        l.plan.push(w, Op::Wait { sem: red_done[o], value: red_target });
+        if use_rail {
+            let effect = bufs.map(|b| Effect::MulticastMat {
+                src: MatView::full2d(b.red[o], chunk_rows, cfg.n),
+                dsts: (my_node * p_cnt..(my_node + 1) * p_cnt)
+                    .map(|j| MatView::full2d(b.out[j], cfg.m, cfg.n).sub(o * chunk_rows, 0, chunk_rows, cfg.n))
+                    .collect(),
+                reduce: None,
+            });
+            l.plan.push(w, Op::Transfer {
+                spec: TransferSpec {
+                    mech: Mechanism::Multimem,
+                    route: Route::Multicast { src: DeviceId(o) },
+                    bytes: chunk_bytes,
+                    msg_bytes: 128.0 * 8.0,
+                    n_sms: store_sms,
+                },
+                blocking: true,
+                done_sem: None,
+                done_scope: SyncScope::IntraSm,
+                label: "gemm_ar_bcast_mc",
+                effect,
+            });
+            for kn in 0..k_cnt {
+                if kn == my_node {
+                    continue;
+                }
+                match bufs {
+                    Some(b) => {
+                        let peer = railp.peer(DeviceId(o), kn).0;
+                        let src = MatView::full2d(b.red[o], chunk_rows, cfg.n);
+                        let dst = MatView { buf: b.bstage[peer], b: my_node, d: 0, row0: 0, col0: 0, rows: chunk_rows, cols: cfg.n };
+                        railp.send(
+                            &mut l.plan, w, DeviceId(o), kn, chunk_bytes, store_sms,
+                            Some(bc_done[o][kn]), "gemm_ar_bcast_rail",
+                            Some(Effect::CopyMat { src, dst, reduce: None }),
+                        );
+                    }
+                    None => {
+                        for lw in &flow_waves {
+                            railp.send(
+                                &mut l.plan, w, DeviceId(o), kn, lw.share as f64 * tile_row_bytes,
+                                store_sms, Some(bc_done[o][kn]), "gemm_ar_bcast_rail", None,
+                            );
+                        }
+                    }
+                }
+            }
+        } else {
+            // naive broadcast: unicast the chunk to every other device,
+            // locality-routed — (K-1)·P NIC copies per reducer
+            for j in 0..n_dev {
+                if j == o {
+                    if let Some(b) = bufs {
+                        let src = MatView::full2d(b.red[o], chunk_rows, cfg.n);
+                        let dst = MatView::full2d(b.out[o], cfg.m, cfg.n).sub(o * chunk_rows, 0, chunk_rows, cfg.n);
+                        l.plan.push(w, Op::Compute {
+                            dur: 0.0,
+                            label: "gemm_ar_bcast_local",
+                            effect: Some(Effect::CopyMat { src, dst, reduce: None }),
+                        });
+                    }
+                    continue;
+                }
+                let (src, dst) = match bufs {
+                    Some(b) => (
+                        MatView::full2d(b.red[o], chunk_rows, cfg.n),
+                        MatView::full2d(b.out[j], cfg.m, cfg.n).sub(o * chunk_rows, 0, chunk_rows, cfg.n),
+                    ),
+                    None => {
+                        let ph = MatView { buf: BufId(0), b: 0, d: 0, row0: 0, col0: 0, rows: chunk_rows, cols: cfg.n };
+                        (ph, ph)
+                    }
+                };
+                let remote = j / p_cnt != my_node;
+                l.plan.push(w, Op::Transfer {
+                    spec: TransferSpec {
+                        mech: Mechanism::Tma,
+                        route: if remote {
+                            Route::Rdma { src: DeviceId(o), dst: DeviceId(j) }
+                        } else {
+                            Route::P2p { src: DeviceId(o), dst: DeviceId(j) }
+                        },
+                        bytes: chunk_bytes,
+                        msg_bytes: chunk_bytes,
+                        n_sms: store_sms,
+                    },
+                    blocking: false,
+                    done_sem: None,
+                    done_scope: if remote { SyncScope::InterNode } else { SyncScope::IntraSm },
+                    label: "gemm_ar_bcast_unicast",
+                    effect: bufs.map(|_| Effect::CopyMat { src, dst, reduce: None }),
+                });
+            }
+        }
+    }
+
+    // ---- rail-peer forwarders (RailReduce only): multicast landed
+    // broadcast waves to the node's devices in-fabric
+    if use_rail {
+        for g in 0..n_dev {
+            let my_node = g / p_cnt;
+            let w = l.plan.add_worker(DeviceId(g), Role::CommSm, format!("gemm_ar_fwd/d{g}"));
+            for kn in 0..k_cnt {
+                if kn == my_node {
+                    continue;
+                }
+                let owner = kn * p_cnt + g % p_cnt; // the reducer this rail forwards for
+                match bufs {
+                    Some(b) => {
+                        l.plan.push(w, Op::Wait { sem: bc_done[owner][my_node], value: 1 });
+                        let effect = Effect::MulticastMat {
+                            src: MatView { buf: b.bstage[g], b: kn, d: 0, row0: 0, col0: 0, rows: chunk_rows, cols: cfg.n },
+                            dsts: (my_node * p_cnt..(my_node + 1) * p_cnt)
+                                .map(|j| MatView::full2d(b.out[j], cfg.m, cfg.n).sub(owner * chunk_rows, 0, chunk_rows, cfg.n))
+                                .collect(),
+                            reduce: None,
+                        };
+                        l.plan.push(w, Op::Transfer {
+                            spec: TransferSpec {
+                                mech: Mechanism::Multimem,
+                                route: Route::Multicast { src: DeviceId(g) },
+                                bytes: chunk_bytes,
+                                msg_bytes: 128.0 * 8.0,
+                                n_sms: store_sms,
+                            },
+                            blocking: true,
+                            done_sem: None,
+                            done_scope: SyncScope::IntraSm,
+                            label: "gemm_ar_fwd_mc",
+                            effect: Some(effect),
+                        });
+                    }
+                    None => {
+                        for lw in &flow_waves {
+                            l.plan.push(w, Op::Wait {
+                                sem: bc_done[owner][my_node],
+                                value: lw.idx + 1,
+                            });
+                            l.plan.push(w, Op::Transfer {
+                                spec: TransferSpec {
+                                    mech: Mechanism::Multimem,
+                                    route: Route::Multicast { src: DeviceId(g) },
+                                    bytes: lw.share as f64 * tile_row_bytes,
+                                    msg_bytes: 128.0 * 8.0,
+                                    n_sms: store_sms,
+                                },
+                                blocking: true,
+                                done_sem: None,
+                                done_scope: SyncScope::IntraSm,
+                                label: "gemm_ar_fwd_mc",
+                                effect: None,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    l.finish()
+}
+
+/// Emit one tile row's contribution to its reducer, by transport: the
+/// rail path pre-reduces over NVLink (into the reducer's chunk when it
+/// shares the node, into the node aggregator's stage otherwise); the
+/// scatter path ships every row itself, locality-routed.
+#[allow(clippy::too_many_arguments)]
+fn emit_ar_contribution(
+    l: &mut Lcsc,
+    cfg: &GemmKernelCfg,
+    cluster: &ClusterSpec,
+    w: usize,
+    dev: usize,
+    row: usize,
+    rows_per_dev: usize,
+    store_sms: f64,
+    path: ClusterPath,
+    prered: &[Vec<SemId>],
+    red_done: &[SemId],
+    bufs: Option<&GemmArBufs>,
+) {
+    let p_cnt = cluster.devices_per_node();
+    let owner = row / rows_per_dev;
+    let owner_node = owner / p_cnt;
+    let my_node = dev / p_cnt;
+    let chunk_rows = cfg.m / cluster.total_devices();
+    let ph = MatView { buf: BufId(0), b: 0, d: 0, row0: 0, col0: 0, rows: cfg.tile_m, cols: cfg.n };
+    let src_view = |b: &GemmArBufs| {
+        MatView::full2d(b.gemm.c[dev], cfg.m, cfg.n).sub(row * cfg.tile_m, 0, cfg.tile_m, cfg.n)
+    };
+    let red_view = |b: &GemmArBufs| {
+        MatView::full2d(b.red[owner], chunk_rows, cfg.n)
+            .sub((row - owner * rows_per_dev) * cfg.tile_m, 0, cfg.tile_m, cfg.n)
+    };
+    if path == ClusterPath::RailReduce && owner_node != my_node {
+        // remote reducer: NVLink pre-reduce into the node aggregator's
+        // stage, crediting its contribution counter
+        let agg = my_node * p_cnt + owner % p_cnt;
+        let (src, dst) = match bufs {
+            Some(b) => (
+                src_view(b),
+                MatView {
+                    buf: b.stage[agg],
+                    b: owner_node,
+                    d: 0,
+                    row0: (row - owner * rows_per_dev) * cfg.tile_m,
+                    col0: 0,
+                    rows: cfg.tile_m,
+                    cols: cfg.n,
+                },
+            ),
+            None => (ph, ph),
+        };
+        store_add_async_scoped(
+            &mut l.plan,
+            &cluster.node.gpu,
+            w,
+            TileRef::new(src, DeviceId(dev)),
+            TileRef::new(dst, DeviceId(agg)),
+            Some(prered[agg][owner_node]),
+            SyncScope::InterDevice,
+        );
+    } else if path == ClusterPath::RailReduce {
+        // same-node reducer: direct NVLink store-add into its chunk
+        let (src, dst) = match bufs {
+            Some(b) => (src_view(b), red_view(b)),
+            None => (ph, ph),
+        };
+        store_add_async_scoped(
+            &mut l.plan,
+            &cluster.node.gpu,
+            w,
+            TileRef::new(src, DeviceId(dev)),
+            TileRef::new(dst, DeviceId(owner)),
+            Some(red_done[owner]),
+            SyncScope::InterDevice,
+        );
+    } else {
+        // scatter: every row rides its own locality-routed store-add
+        let (src, dst) = match bufs {
+            Some(b) => (src_view(b), red_view(b)),
+            None => (ph, ph),
+        };
+        store_add_async_routed(
+            &mut l.plan,
+            cluster,
+            w,
+            TileRef::new(src, DeviceId(dev)),
+            TileRef::new(dst, DeviceId(owner)),
+            Some(red_done[owner]),
+        );
+    }
+    if let Some(Op::Transfer { effect, spec, .. }) = l.plan.workers[w].ops.last_mut() {
+        spec.n_sms = store_sms;
+        if bufs.is_none() {
+            *effect = None; // timing only: strip the placeholder effect
+        }
+    }
+}
+
 fn strip_last_effects(plan: &mut Plan, w: usize, count: usize) {
     let len = plan.workers[w].ops.len();
     for op in plan.workers[w].ops[len - count..].iter_mut() {
@@ -238,6 +806,105 @@ mod tests {
     #[test]
     fn functional_intra_sm_all_reduce_correct_everywhere() {
         run_schedule(Schedule::IntraSm);
+    }
+
+    fn run_cluster_path(schedule: Schedule, path: ClusterPath) {
+        let cluster = ClusterSpec::test_cluster(2, 2);
+        let n_dev = cluster.total_devices();
+        let mut cfg = GemmKernelCfg::functional(cluster.node.clone(), 64, 32, 24);
+        if schedule == Schedule::InterSm {
+            cfg.opts.num_comm_sms = 8;
+        }
+        let mut pool = MemPool::new();
+        let bufs = GemmArBufs::alloc_cluster(&mut pool, &cfg, &cluster);
+        for d in 0..n_dev {
+            pool.get_mut(bufs.gemm.a[d]).data = seeded_vec(d as u64 + 1, 64 * 24);
+            pool.get_mut(bufs.gemm.b[d]).data = seeded_vec(d as u64 + 41, 24 * 32);
+        }
+        // dense reference: the sum over every cluster device's partial
+        let mut want = vec![0.0f32; cfg.m * cfg.n];
+        for d in 0..n_dev {
+            let prod = linalg::matmul(
+                &pool.get(bufs.gemm.a[d]).data,
+                &pool.get(bufs.gemm.b[d]).data,
+                cfg.m,
+                cfg.n,
+                cfg.k,
+            );
+            for (f, p) in want.iter_mut().zip(prod) {
+                *f += p;
+            }
+        }
+        let plan = build_cluster_opts(&cfg, &cluster, schedule, path, Some(&bufs));
+        run_functional(&mut pool, &plan);
+        for d in 0..n_dev {
+            assert_allclose(&pool.get(bufs.out[d]).data, &want, 1e-4, 1e-5);
+        }
+    }
+
+    #[test]
+    fn functional_cluster_rail_matches_reference_both_schedules() {
+        run_cluster_path(Schedule::IntraSm, ClusterPath::RailReduce);
+        run_cluster_path(Schedule::InterSm, ClusterPath::RailReduce);
+    }
+
+    #[test]
+    fn functional_cluster_scatter_path_matches_reference_too() {
+        run_cluster_path(Schedule::IntraSm, ClusterPath::Scatter);
+    }
+
+    #[test]
+    fn cluster_single_node_delegates_bit_identically() {
+        use crate::hw::ClusterSpec;
+        let node = NodeSpec::hgx_h100();
+        let cfg = GemmKernelCfg::new(node.clone(), 32768, 32768, 4096);
+        let a = build(&cfg, Schedule::InterSm, None);
+        let b = build_cluster(&cfg, &ClusterSpec::single(node.clone()), Schedule::InterSm, None);
+        assert_eq!(a.total_ops(), b.total_ops());
+        assert_eq!(a.workers.len(), b.workers.len());
+        let ta = TimedExec::new(node.clone()).run(&a).total_time;
+        let tb = TimedExec::on_cluster(ClusterSpec::single(node)).run(&b).total_time;
+        assert_eq!(ta.to_bits(), tb.to_bits(), "1-node cluster GEMM+AR must not drift");
+    }
+
+    #[test]
+    fn timed_cluster_nic_bytes_match_model_for_both_paths() {
+        use crate::hw::topology::Port;
+        let cluster = ClusterSpec::hgx_h100_pod(2);
+        let p = cluster.devices_per_node();
+        let cfg = GemmKernelCfg::new(cluster.node.clone(), 32768, 8192, 4096);
+        let mut got = vec![];
+        for path in [ClusterPath::Scatter, ClusterPath::RailReduce] {
+            let plan = build_cluster_opts(&cfg, &cluster, Schedule::InterSm, path, None);
+            let r = TimedExec::on_cluster(cluster.clone()).run(&plan);
+            assert!(r.total_time.is_finite() && r.total_time > 0.0);
+            let want = nic_ar_bytes(&cfg, &cluster, path);
+            for g in 0..cluster.total_devices() {
+                let e = r
+                    .port_bytes
+                    .get(&Port::NicEgress(crate::hw::DeviceId(g)))
+                    .copied()
+                    .unwrap_or(0.0);
+                assert!((e - want[g]).abs() / want[g] < 1e-6, "{path:?} dev {g}: {e} vs {}", want[g]);
+            }
+            got.push(r.port_bytes[&Port::NicEgress(crate::hw::DeviceId(0))]);
+        }
+        // the rail path cuts NIC egress exactly xP versus per-device scatter
+        assert!((got[0] / got[1] - p as f64).abs() < 1e-9, "rail must cut NIC bytes xP: {got:?}");
+    }
+
+    #[test]
+    fn timed_cluster_rail_beats_scatter_when_nic_bound() {
+        let cluster = ClusterSpec::hgx_h100_pod(2).with_nic_bw(25e9);
+        let cfg = GemmKernelCfg::new(cluster.node.clone(), 32768, 8192, 1024);
+        let exec = TimedExec::on_cluster(cluster.clone());
+        let t_rail = exec
+            .run(&build_cluster_opts(&cfg, &cluster, Schedule::InterSm, ClusterPath::RailReduce, None))
+            .total_time;
+        let t_scatter = exec
+            .run(&build_cluster_opts(&cfg, &cluster, Schedule::InterSm, ClusterPath::Scatter, None))
+            .total_time;
+        assert!(t_rail < t_scatter, "rail AR must win NIC-bound: {t_rail} vs {t_scatter}");
     }
 
     #[test]

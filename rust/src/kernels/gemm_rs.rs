@@ -186,7 +186,11 @@ pub fn build_cluster_opts(
         Schedule::InterSm => l.comm_sms_per_worker(),
     };
     let use_rail = path == ClusterPath::RailReduce && k_cnt > 1;
-    let railp = RailPlanner::new(cluster, cfg.rdma_chunk);
+    // resolve the chunk knob (RDMA_CHUNK_AUTO -> the analytic curve knee
+    // for this kernel's largest rail flow: one pre-reduced chunk)
+    let max_flow = rows_per_dev as f64 * (cfg.tile_m * cfg.n) as f64 * ELEM_BYTES as f64;
+    let rdma_chunk = crate::pk::tuner::resolve_rdma_chunk(cfg.rdma_chunk, cluster, max_flow);
+    let railp = RailPlanner::new(cluster, rdma_chunk);
     // pre-reduce contribution counters per (aggregator device, owner node):
     // bumped by every node-local partial landing in the aggregator's stage.
     let prered: Vec<Vec<SemId>> =

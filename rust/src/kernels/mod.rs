@@ -44,6 +44,17 @@
 //!   [`crate::pk::rail`]-coalesced RDMA flow per node pair (×P less NIC
 //!   traffic); the PR 1 locality-routed per-device scatter survives as
 //!   [`gemm_rs::ClusterPath::Scatter`] for the `rx1` ablation.
+//! * [`gemm_ar::build_cluster`] — cross-node GEMM+AR: the same node-local
+//!   pre-reduce, one coalesced RDMA **store-add** per node pair into the
+//!   chunk's reducer, then a **broadcast-back** (multimem in-node, one
+//!   rail flow + forwarder multicast per remote node) — each chunk
+//!   crosses each NIC ~2× instead of ×P·N ([`gemm_ar::nic_ar_bytes`]).
+//! * [`ag_gemm::build_cluster`] — cross-node AG+GEMM: each shard ships as
+//!   one coalesced rail flow per remote node; rail-peer forwarders
+//!   multicast landed waves and flag per-tile-row arrivals, so compute
+//!   consumes rows as they land exactly as on one node
+//!   ([`ag_gemm::nic_ag_bytes`]; with these two, **every** kernel in the
+//!   repo now has a cluster story on the same rail substrate).
 //! * [`moe::build_cluster`] — expert-parallel dispatch across nodes with
 //!   **per-rail aggregation**: tokens for the same remote node coalesce
 //!   into one RDMA flow per (source, node) pair, a rail-peer forwarder
@@ -53,7 +64,11 @@
 //!   back to the tokens' home nodes), closing the MoE layer loop. The
 //!   cluster tuner ([`crate::pk::tuner::tune_comm_sms_rdma_chunk`])
 //!   co-tunes the SM partition with the coalesced RDMA write size for any
-//!   rail kernel.
+//!   rail kernel; by default every rail kernel now resolves its chunk
+//!   **analytically** from the cluster's RDMA curve instead
+//!   ([`crate::pk::tuner::analytic_rdma_chunk`], sentinel
+//!   [`crate::pk::rail::RDMA_CHUNK_AUTO`]), keeping the sweep as the
+//!   validation path.
 //! * [`collectives::pk_all_to_all_4d_cluster`] — the **two-level** 4-D
 //!   all-to-all: intra-node NVLink tiles plus coalesced rail flows with
 //!   forwarders (it used to fail fast on several nodes; now it runs, and
@@ -89,9 +104,11 @@ pub struct GemmKernelCfg {
     pub tile_n: usize,
     pub opts: LcscOpts,
     /// Target coalesced RDMA write size for the cross-node rail flows
-    /// (cluster builds only; wave-chunks the per-node-pair reduce flows —
-    /// co-tunable with the SM partition via
-    /// [`crate::pk::tuner::tune_comm_sms_rdma_chunk`]).
+    /// (cluster builds only; wave-chunks the per-node-pair flows).
+    /// Defaults to [`crate::pk::rail::RDMA_CHUNK_AUTO`] — the analytic
+    /// curve knee ([`crate::pk::tuner::analytic_rdma_chunk`]); explicit
+    /// values remain co-tunable with the SM partition via
+    /// [`crate::pk::tuner::tune_comm_sms_rdma_chunk`].
     pub rdma_chunk: f64,
 }
 
@@ -105,7 +122,7 @@ impl GemmKernelCfg {
             tile_m: 128,
             tile_n: 256,
             opts: LcscOpts::default(),
-            rdma_chunk: crate::pk::rail::DEFAULT_RDMA_CHUNK,
+            rdma_chunk: crate::pk::rail::RDMA_CHUNK_AUTO,
         }
     }
 
@@ -125,7 +142,7 @@ impl GemmKernelCfg {
                 comm_workers_per_device: 1,
                 pipeline_stages: 2,
             },
-            rdma_chunk: crate::pk::rail::DEFAULT_RDMA_CHUNK,
+            rdma_chunk: crate::pk::rail::RDMA_CHUNK_AUTO,
         }
     }
 

@@ -79,9 +79,11 @@ pub struct MoeCfg {
     pub comm_sms: u32,
     /// Target RDMA write size for the coalesced cross-node dispatch flows
     /// (cluster path only). Smaller chunks mean more dispatch waves —
-    /// finer compute/comm overlap but less efficient NIC messages; the
-    /// cluster tuner co-tunes this with `comm_sms`
-    /// ([`crate::pk::tuner::tune_comm_sms_rdma_chunk`]).
+    /// finer compute/comm overlap but less efficient NIC messages.
+    /// Defaults to [`crate::pk::rail::RDMA_CHUNK_AUTO`]: the analytic
+    /// curve knee ([`crate::pk::tuner::analytic_rdma_chunk`]); the
+    /// cluster tuner can still sweep explicit values co-tuned with
+    /// `comm_sms` ([`crate::pk::tuner::tune_comm_sms_rdma_chunk`]).
     pub rdma_chunk: f64,
 }
 
@@ -96,7 +98,7 @@ impl MoeCfg {
             n_experts: 256,
             top_k: 8,
             comm_sms: 16,
-            rdma_chunk: DEFAULT_RDMA_CHUNK,
+            rdma_chunk: crate::pk::rail::RDMA_CHUNK_AUTO,
         }
     }
 
@@ -411,7 +413,7 @@ pub fn build_cluster(
 ) -> Plan {
     assert_eq!(cfg.node.num_devices, cluster.node.num_devices, "cfg.node must match cluster.node");
     assert_eq!(cfg.node.gpu.arch, cluster.node.gpu.arch, "cfg.node must match cluster.node");
-    assert!(cfg.rdma_chunk > 0.0, "rdma_chunk must be positive");
+    assert!(cfg.rdma_chunk >= 0.0, "rdma_chunk must be positive (or RDMA_CHUNK_AUTO)");
     let n = cluster.total_devices();
     let k_cnt = cluster.num_nodes;
     let p_cnt = cluster.devices_per_node();
@@ -462,20 +464,22 @@ pub fn build_cluster(
         .collect();
 
     // the rail transport layer: coalesced per-(source, node) RDMA flows
-    // wave-chunked by rdma_chunk (pk::rail owns the arithmetic).
-    let rail = RailPlanner::new(cluster, cfg.rdma_chunk);
+    // wave-chunked by rdma_chunk (pk::rail owns the arithmetic; the AUTO
+    // sentinel resolves to the analytic knee for the largest rail flow).
+    let max_rail_bytes = rail_token_ids
+        .iter()
+        .flatten()
+        .map(|ids| ids.len())
+        .max()
+        .unwrap_or(0) as f64
+        * cfg.token_bytes();
+    let rdma_chunk = crate::pk::tuner::resolve_rdma_chunk(cfg.rdma_chunk, cluster, max_rail_bytes);
+    let rail = RailPlanner::new(cluster, rdma_chunk);
     // wave count: single-node keeps the fixed pipeline depth; the cluster
     // path targets one rdma_chunk-sized write per rail flow per wave.
     let waves = if k_cnt == 1 {
         DISPATCH_WAVES
     } else {
-        let max_rail_bytes = rail_token_ids
-            .iter()
-            .flatten()
-            .map(|ids| ids.len())
-            .max()
-            .unwrap_or(0) as f64
-            * cfg.token_bytes();
         rail.waves(max_rail_bytes, DISPATCH_WAVES, MAX_DISPATCH_WAVES)
     };
     // cumulative credits per expert after each wave (all sources landed)
@@ -979,9 +983,15 @@ pub fn build_cluster_layer(
     let k_cnt = cluster.num_nodes;
     let tl = cfg.tokens_local_of(n);
     let el = cfg.experts_local_of(n);
-    let rail = RailPlanner::new(cluster, cfg.rdma_chunk);
     let row_bytes = cfg.h_expert as f64 * ELEM_BYTES as f64;
     let ids = combine_token_ids(cfg, cluster, routing);
+    // AUTO resolves against the largest coalesced combine flow
+    let max_comb_bytes =
+        ids.iter().flatten().map(|l| l.len()).max().unwrap_or(0) as f64 * row_bytes;
+    let rail = RailPlanner::new(
+        cluster,
+        crate::pk::tuner::resolve_rdma_chunk(cfg.rdma_chunk, cluster, max_comb_bytes),
+    );
     // intra-node return-row counts per (expert device, home device) — the
     // coalesced NVLink return flows of the timing mode
     let mut intra_rows = vec![vec![0u64; n]; n];

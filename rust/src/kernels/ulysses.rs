@@ -269,7 +269,7 @@ pub fn build(cfg: &UlyssesCfg, bufs: Option<&UlyssesBufs>) -> Plan {
 /// tiles plus per-rail coalesced RDMA flows with forwarders. A one-node
 /// cluster delegates to [`build`] (bit-identical; pinned by tests).
 pub fn build_cluster(cfg: &UlyssesCfg, cluster: &ClusterSpec) -> Plan {
-    build_cluster_opts(cfg, cluster, crate::pk::rail::DEFAULT_RDMA_CHUNK)
+    build_cluster_opts(cfg, cluster, crate::pk::rail::RDMA_CHUNK_AUTO)
 }
 
 /// [`build_cluster`] with an explicit coalesced-RDMA chunk target (the

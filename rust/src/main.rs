@@ -3,6 +3,9 @@
 //! ```text
 //! pk figures [--only <id>] [--fast] [--out <dir>]   regenerate paper exhibits
 //!            [--serial | --jobs <n>]                (parallel by default)
+//!            [--smoke]                              CI gate: run EVERY exhibit
+//!                                                   in fast mode and exit
+//!                                                   non-zero on empty output
 //! pk run <kernel> [--n <size>] [--schedule intra|inter]
 //! pk tune <kernel> --n <size>                       SM-partition auto-tuner
 //! pk validate                                       functional + PJRT checks
@@ -25,12 +28,22 @@ fn main() {
     };
     match cmd {
         "figures" => {
-            let fast = flag("--fast");
+            // --smoke is the CI gate: force fast mode over the FULL
+            // registry and verify every exhibit actually produced rows,
+            // so new exhibit builders (gx1, ...) can't compile but rot
+            let smoke = flag("--smoke");
+            let fast = flag("--fast") || smoke;
             let out = opt("--out");
             if let Some(dir) = &out {
                 std::fs::create_dir_all(dir).expect("create out dir");
             }
             let only = opt("--only");
+            if smoke && only.is_some() {
+                // the gate is only meaningful over the full registry;
+                // refuse rather than silently ignoring the filter
+                eprintln!("--smoke runs the full registry; drop --only (use --fast --only <id>)");
+                std::process::exit(2);
+            }
             let ids: Option<Vec<&str>> = only.as_deref().map(|id| vec![id]);
             let threads = if flag("--serial") {
                 1
@@ -55,6 +68,20 @@ fn main() {
                 threads,
                 sum
             );
+            if smoke {
+                let registry = pk::report::exhibits::all_exhibits().len();
+                let empty: Vec<&str> =
+                    results.iter().filter(|r| r.table.rows.is_empty()).map(|r| r.id).collect();
+                if results.len() != registry || !empty.is_empty() {
+                    eprintln!(
+                        "figures --smoke FAILED: ran {}/{} exhibits, empty: {empty:?}",
+                        results.len(),
+                        registry
+                    );
+                    std::process::exit(1);
+                }
+                eprintln!("figures --smoke: all {registry} exhibits ran and produced rows");
+            }
         }
         "run" => {
             let kernel = args.get(1).map(|s| s.as_str()).unwrap_or("gemm_rs");
@@ -196,7 +223,7 @@ fn validate_collectives() {
     }
 }
 
-fn validate_pjrt() -> anyhow::Result<()> {
+fn validate_pjrt() -> pk::util::error::Result<()> {
     use pk::runtime::Runtime;
     let mut rt = Runtime::open(Runtime::default_dir())?;
     let x = pk::util::seeded_vec(1, 64 * 64);

@@ -45,8 +45,17 @@ use crate::xfer::Mechanism;
 
 /// Default coalesced RDMA write target: 4 MiB sits on the flat part of the
 /// RDMA message-size curve while still giving several overlap waves at
-/// realistic payload sizes.
+/// realistic payload sizes. Kept as the fixed-chunk reference; kernel
+/// configs now default to [`RDMA_CHUNK_AUTO`] instead.
 pub const DEFAULT_RDMA_CHUNK: f64 = 4.0 * 1024.0 * 1024.0;
+
+/// Sentinel for the `rdma_chunk` knob of every rail kernel: resolve the
+/// coalesced write size analytically at build time from the cluster's
+/// RDMA curve — the knee located by
+/// [`crate::pk::tuner::analytic_rdma_chunk`], threaded through
+/// [`crate::pk::tuner::resolve_rdma_chunk`]. Explicit positive values
+/// (tuner sweeps, ablations) bypass the analytic policy.
+pub const RDMA_CHUNK_AUTO: f64 = 0.0;
 
 /// Upper bound on rail-flow waves (keeps event counts tractable at
 /// paper-scale payloads).
@@ -75,6 +84,37 @@ pub fn rail_waves(max_flow_bytes: f64, rdma_chunk: f64, min_waves: usize, max_wa
     assert!(rdma_chunk > 0.0, "rdma_chunk must be positive");
     assert!(min_waves >= 1 && min_waves <= max_waves);
     ((max_flow_bytes / rdma_chunk).ceil() as usize).clamp(min_waves, max_waves)
+}
+
+/// One non-empty wave of a rail flow (see [`live_waves`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LiveWave {
+    /// Index among the *live* (non-empty) waves, 0-based — the wave
+    /// counter value a consumer waits for is `idx + 1`.
+    pub idx: u64,
+    /// This wave's share of the flow's units ([`wave_share`]).
+    pub share: u64,
+    /// Cumulative units through this wave — producers gate on
+    /// per-unit contribution counters at `contributors × cum`.
+    pub cum: u64,
+}
+
+/// The non-empty waves of a flow of `total` units split over `waves`
+/// waves, with the cumulative/counter arithmetic every rail protocol
+/// repeats (sender wave loops, forwarder wave waits, wave-count targets).
+/// Centralizing it keeps a producer's send count and its consumers' wait
+/// thresholds from drifting apart at different call sites.
+pub fn live_waves(total: u64, waves: usize) -> Vec<LiveWave> {
+    let mut out = Vec::with_capacity(waves);
+    let mut cum = 0u64;
+    for w in 0..waves {
+        let share = wave_share(total, w, waves);
+        cum += share;
+        if share > 0 {
+            out.push(LiveWave { idx: out.len() as u64, share, cum });
+        }
+    }
+    out
 }
 
 /// Per-(source device, destination node) wave counters for the rail flows
@@ -253,6 +293,27 @@ mod tests {
                 assert_eq!(shares.iter().sum::<u64>(), total, "{total} over {waves}");
             }
         }
+    }
+
+    #[test]
+    fn live_waves_partition_and_index_consistently() {
+        for total in [0u64, 1, 5, 17, 1000] {
+            for waves in 1..=MAX_WAVES {
+                let lws = live_waves(total, waves);
+                assert_eq!(lws.iter().map(|l| l.share).sum::<u64>(), total);
+                assert!(lws.iter().all(|l| l.share > 0));
+                let mut cum = 0;
+                for (i, l) in lws.iter().enumerate() {
+                    cum += l.share;
+                    assert_eq!(l.cum, cum, "cumulative tracks shares");
+                    assert_eq!(l.idx, i as u64, "idx counts live waves only");
+                }
+                if total > 0 {
+                    assert_eq!(lws.last().unwrap().cum, total);
+                }
+            }
+        }
+        assert!(live_waves(0, 4).is_empty(), "empty flows have no live waves");
     }
 
     #[test]

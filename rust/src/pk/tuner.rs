@@ -18,12 +18,74 @@
 //! communicator partition with the coalesced RDMA write size against
 //! [`ClusterSpec::nic_bw`] (more, smaller chunks = finer overlap waves but
 //! less efficient NIC messages).
+//!
+//! ## Analytic RDMA-chunk policy
+//!
+//! The chunk axis of the co-tune has a closed form: the only things a
+//! chunk size trades are the RDMA message-size ramp (bigger writes sit
+//! higher on [`crate::xfer::curves::rdma_rate`]) and overlap granularity
+//! (smaller waves expose less of the flow before downstream work can
+//! start). Modelling one rail flow of `B` bytes in `B/c`-sized waves, the
+//! exposed time is approximately
+//!
+//! ```text
+//! t(c) ≈ B/R·(1 + h/c)  +  (c + h)/R  +  (B/c)·L
+//!        └ ramped flow ┘   └ first-wave ┘  └ per-wave latency ┘
+//! ```
+//!
+//! with `R = nic_bw · nic_peak_frac`, `h = rdma_half_msg`, and `L =
+//! nic_latency`. Setting `dt/dc = 0` gives the rate-curve knee
+//!
+//! ```text
+//! c* = sqrt(B · (h + L·R))
+//! ```
+//!
+//! — [`analytic_rdma_chunk`]. Every rail kernel resolves its `rdma_chunk`
+//! knob through [`resolve_rdma_chunk`], so the sentinel
+//! [`crate::pk::rail::RDMA_CHUNK_AUTO`] (the default in every kernel
+//! config) picks `c*` per kernel from [`ClusterSpec::nic_bw`] without a
+//! sweep; the swept grid stays available as the ablation/validation path
+//! (a property test pins the analytic choice within a fixed tolerance of
+//! the swept optimum across the NIC grid).
 
 use crate::exec::TimedExec;
 use crate::hw::cluster::ClusterSpec;
 use crate::hw::spec::NodeSpec;
 use crate::plan::Plan;
 use crate::util::par::par_map;
+
+/// Clamp floor of the analytic chunk: far below this, verbs posting
+/// overhead dominates any overlap win (the steep left edge of the RDMA
+/// curve).
+pub const ANALYTIC_CHUNK_MIN: f64 = 64.0 * 1024.0;
+/// Clamp ceiling of the analytic chunk: beyond this the message ramp is
+/// flat and [`crate::pk::rail::MAX_WAVES`] bounds the wave count anyway.
+pub const ANALYTIC_CHUNK_MAX: f64 = 16.0 * 1024.0 * 1024.0;
+
+/// The analytic coalesced-RDMA write size for a rail flow of
+/// `max_flow_bytes`: the knee `c* = sqrt(B·(h + L·R))` of the RDMA
+/// rate curve (module docs), clamped to
+/// [`ANALYTIC_CHUNK_MIN`]..[`ANALYTIC_CHUNK_MAX`]. Monotone in both the
+/// flow size and the NIC bandwidth: faster NICs amortize their per-wave
+/// latency over bigger writes.
+pub fn analytic_rdma_chunk(cluster: &ClusterSpec, max_flow_bytes: f64) -> f64 {
+    let rate = cluster.nic_bw * cluster.nic_peak_frac;
+    let overhead = cluster.rdma_half_msg + cluster.nic_latency * rate;
+    (max_flow_bytes.max(0.0) * overhead).sqrt().clamp(ANALYTIC_CHUNK_MIN, ANALYTIC_CHUNK_MAX)
+}
+
+/// Resolve a kernel's `rdma_chunk` knob: the sentinel
+/// [`crate::pk::rail::RDMA_CHUNK_AUTO`] becomes the analytic knee for the
+/// kernel's largest rail flow; any explicit (tuned or swept) value passes
+/// through unchanged. Always returns a positive chunk, so
+/// [`crate::pk::rail::RailPlanner::new`] never sees the sentinel.
+pub fn resolve_rdma_chunk(chunk: f64, cluster: &ClusterSpec, max_flow_bytes: f64) -> f64 {
+    if chunk == crate::pk::rail::RDMA_CHUNK_AUTO {
+        analytic_rdma_chunk(cluster, max_flow_bytes)
+    } else {
+        chunk
+    }
+}
 
 /// Result of a partition sweep.
 #[derive(Clone, Debug)]
@@ -154,6 +216,37 @@ mod tests {
     use crate::hw::DeviceId;
     use crate::kernels::moe::{self, MoeCfg, MoeSchedule, Routing};
     use crate::plan::{Op, Role};
+
+    #[test]
+    fn analytic_chunk_monotone_and_clamped() {
+        let flow = 32.0 * 1024.0 * 1024.0;
+        let mut last = 0.0;
+        for nic in [25e9, 50e9, 100e9] {
+            let cluster = ClusterSpec::hgx_h100_pod(2).with_nic_bw(nic);
+            let c = analytic_rdma_chunk(&cluster, flow);
+            assert!(c >= ANALYTIC_CHUNK_MIN && c <= ANALYTIC_CHUNK_MAX);
+            assert!(c > last, "knee grows with NIC bandwidth: {c} after {last}");
+            last = c;
+        }
+        // tiny/empty flows clamp to the floor instead of degenerating
+        let cluster = ClusterSpec::hgx_h100_pod(2);
+        assert_eq!(analytic_rdma_chunk(&cluster, 0.0), ANALYTIC_CHUNK_MIN);
+        // flow growth moves the knee up too
+        assert!(
+            analytic_rdma_chunk(&cluster, 4.0 * flow) > analytic_rdma_chunk(&cluster, flow),
+            "bigger flows take bigger writes"
+        );
+    }
+
+    #[test]
+    fn resolve_passes_fixed_values_and_expands_auto() {
+        let cluster = ClusterSpec::hgx_h100_pod(2);
+        let fixed = 123456.0;
+        assert_eq!(resolve_rdma_chunk(fixed, &cluster, 1e8), fixed);
+        let auto = resolve_rdma_chunk(crate::pk::rail::RDMA_CHUNK_AUTO, &cluster, 1e8);
+        assert!(auto > 0.0, "AUTO must resolve to a positive chunk");
+        assert_eq!(auto, analytic_rdma_chunk(&cluster, 1e8));
+    }
 
     #[test]
     fn tuner_picks_minimum() {

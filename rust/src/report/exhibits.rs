@@ -51,6 +51,7 @@ pub fn all_exhibits() -> Vec<Exhibit> {
         Exhibit { id: "sx1", caption: "Scale-out sweep: hierarchical collectives, 1→4 nodes, NIC 25–100 GB/s", run: sx1 },
         Exhibit { id: "mx1", caption: "Cluster MoE sweep: expert-parallel dispatch over the NIC, 1→4 nodes, NIC 25–100 GB/s", run: mx1 },
         Exhibit { id: "rx1", caption: "pk::rail sweep: hierarchical gemm_rs + two-level Ulysses, 1→4 nodes, NIC 25–100 GB/s, rail vs naive vs baseline", run: rx1 },
+        Exhibit { id: "gx1", caption: "Cluster GEMM family: gemm_ar + ag_gemm, 1→4 nodes, NIC 25–100 GB/s, rail vs naive vs baseline + analytic-vs-swept chunk", run: gx1 },
     ]
 }
 
@@ -719,6 +720,129 @@ fn rx1(fast: bool) -> Table {
     t
 }
 
+// ------------------------------------------------- Cluster GEMM family
+/// Best swept time over `chunks` for a rail kernel at a fixed grid point,
+/// or `None` on one node (no rail flows — nothing to sweep).
+fn best_chunk_time(k: usize, chunks: &[f64], mut time_at: impl FnMut(f64) -> f64) -> Option<f64> {
+    if k == 1 {
+        return None;
+    }
+    chunks.iter().map(|&c| time_at(c)).min_by(|a, b| a.partial_cmp(b).unwrap())
+}
+
+/// `an_vs_swept` column: analytic-chunk time over the best swept-chunk
+/// time (≈1.0 when the closed form matches the grid optimum).
+fn an_vs_swept(t_analytic: f64, swept: Option<f64>) -> String {
+    match swept {
+        Some(best) => format!("{:.3}", t_analytic / best),
+        None => "-".into(),
+    }
+}
+
+/// The cluster GEMM-family exhibit: the last two kernels to get a rail
+/// story — gemm_ar (node-local pre-reduce → one coalesced RDMA store-add
+/// per node pair → multimem broadcast-back) and ag_gemm (one coalesced
+/// shard flow per node pair + forwarder multicast) — swept over node
+/// count × NIC bandwidth. Each kernel runs three ways: `rail` (the
+/// hierarchical default with the analytic `rdma_chunk`), `naive` (the
+/// per-device scatter/unicast transport — ×P more NIC traffic), and
+/// `baseline` (gemm_ar: hierarchical non-overlap; ag_gemm: the Flux
+/// CE/per-device-RDMA gather extrapolation). `nic_x` is the modeled
+/// NIC-byte reduction of rail vs naive (exactly ×P); `an_vs_swept`
+/// compares the analytic chunk against the best chunk of a swept grid —
+/// the closed form should sit within a few percent of the sweep, which
+/// is what lets the tuner skip the chunk axis entirely.
+fn gx1(fast: bool) -> Table {
+    let mut t = Table::new(
+        "Cluster GEMM family: gemm_ar + ag_gemm (rail vs naive vs baseline, analytic vs swept chunk)",
+        &["kernel", "nodes", "nic_GBps", "rail_ms", "naive_ms", "baseline_ms", "nic_x", "an_vs_swept"],
+    );
+    let nodes: &[usize] = if fast { &[1, 2] } else { &[1, 2, 3, 4] };
+    let nics: &[f64] = if fast { &[50e9] } else { &[25e9, 50e9, 100e9] };
+    let chunks: &[f64] = if fast {
+        &[1048576.0, 4194304.0]
+    } else {
+        &[262144.0, 1048576.0, 4194304.0, 16777216.0]
+    };
+    for &k in nodes {
+        // the 1-node row is NVLink-only (NIC-independent): emit it once
+        let nic_points: &[f64] = if k == 1 { &nics[..1] } else { nics };
+        for &nic in nic_points {
+            let cluster = ClusterSpec::hgx_h100_pod(k).with_nic_bw(nic);
+            let exec = TimedExec::on_cluster(cluster.clone());
+            let nic_label =
+                if k == 1 { "nvlink-only".to_string() } else { format!("{:.0}", nic / 1e9) };
+            // --- gemm_ar: m = 24576 gives 192 tile rows — divisible by
+            // every device count of the sweep (lcm(8,16,24,32) = 96)
+            let cfg = GemmKernelCfg::new(cluster.node.clone(), 24576, 8192, 4096);
+            let t_rail = exec
+                .run(&gemm_ar::build_cluster(&cfg, &cluster, Schedule::InterSm, None))
+                .total_time;
+            let t_naive = exec
+                .run(&gemm_ar::build_cluster_opts(
+                    &cfg,
+                    &cluster,
+                    Schedule::InterSm,
+                    gemm_ar::ClusterPath::Scatter,
+                    None,
+                ))
+                .total_time;
+            let t_base = baselines::nonoverlap::gemm_ar_cluster(&cfg, &cluster);
+            let swept = best_chunk_time(k, chunks, |chunk| {
+                let mut c = cfg.clone();
+                c.rdma_chunk = chunk;
+                exec.run(&gemm_ar::build_cluster(&c, &cluster, Schedule::InterSm, None)).total_time
+            });
+            let rail_b: f64 =
+                gemm_ar::nic_ar_bytes(&cfg, &cluster, gemm_ar::ClusterPath::RailReduce).iter().sum();
+            let naive_b: f64 =
+                gemm_ar::nic_ar_bytes(&cfg, &cluster, gemm_ar::ClusterPath::Scatter).iter().sum();
+            t.row(vec![
+                "gemm_ar".into(),
+                k.to_string(),
+                nic_label.clone(),
+                ms(t_rail),
+                ms(t_naive),
+                ms(t_base),
+                if k == 1 { "-".into() } else { format!("{:.2}", naive_b / rail_b) },
+                an_vs_swept(t_rail, swept),
+            ]);
+            // --- ag_gemm: same m; local n = 2048 columns, full k = 8192
+            let acfg = GemmKernelCfg::new(cluster.node.clone(), 24576, 2048, 8192);
+            let t_arail = exec.run(&ag_gemm::build_cluster(&acfg, &cluster, None)).total_time;
+            let t_anaive = exec
+                .run(&ag_gemm::build_cluster_opts(
+                    &acfg,
+                    &cluster,
+                    ag_gemm::ClusterPath::Scatter,
+                    None,
+                ))
+                .total_time;
+            let t_abase = baselines::flux::ag_gemm_cluster(&acfg, &cluster);
+            let aswept = best_chunk_time(k, chunks, |chunk| {
+                let mut c = acfg.clone();
+                c.rdma_chunk = chunk;
+                exec.run(&ag_gemm::build_cluster(&c, &cluster, None)).total_time
+            });
+            let arail_b: f64 =
+                ag_gemm::nic_ag_bytes(&acfg, &cluster, ag_gemm::ClusterPath::RailReduce).iter().sum();
+            let anaive_b: f64 =
+                ag_gemm::nic_ag_bytes(&acfg, &cluster, ag_gemm::ClusterPath::Scatter).iter().sum();
+            t.row(vec![
+                "ag_gemm".into(),
+                k.to_string(),
+                nic_label,
+                ms(t_arail),
+                ms(t_anaive),
+                ms(t_abase),
+                if k == 1 { "-".into() } else { format!("{:.2}", anaive_b / arail_b) },
+                an_vs_swept(t_arail, aswept),
+            ]);
+        }
+    }
+    t
+}
+
 // --------------------------------------------------------------- µ1, µ2
 fn mu1(_fast: bool) -> Table {
     let g = GpuSpec::h100();
@@ -754,8 +878,8 @@ mod tests {
         let ex = all_exhibits();
         assert_eq!(
             ex.len(),
-            24,
-            "17 figures/tables + 2 micro + tab1/tab2 + scale-out + cluster MoE + rail"
+            25,
+            "17 figures/tables + 2 micro + tab1/tab2 + scale-out + cluster MoE + rail + cluster GEMM"
         );
         for e in &ex {
             let t = (e.run)(true);
@@ -794,6 +918,12 @@ mod tests {
         }
         assert!(saw.0 && saw.1, "both kernels swept multi-node");
     }
+
+    // gx1's acceptance assertions (rail < naive/baseline, nic_x == P,
+    // an_vs_swept <= 1.10) live in the claims suite —
+    // claim_gx1_rail_wins_and_analytic_chunk_tracks_swept — so the
+    // expensive sweep isn't re-simulated by a duplicate in-module test;
+    // registry_complete_and_runnable_fast still smoke-runs it.
 
     #[test]
     fn sx1_shows_the_nic_cliff_and_scaleout_recovery() {

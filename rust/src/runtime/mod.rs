@@ -13,9 +13,9 @@ pub mod registry;
 
 pub use registry::{ArtifactMeta, Manifest};
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 #[cfg(feature = "pjrt")]
-use anyhow::anyhow;
+use crate::util::error::anyhow;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 

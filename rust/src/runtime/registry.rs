@@ -2,7 +2,7 @@
 //! writes `artifacts/manifest.json`) and the Rust runtime.
 
 use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{anyhow, Context, Result};
 use std::path::Path;
 
 /// One AOT-compiled artifact.

@@ -1,0 +1,155 @@
+//! Minimal string-backed error type with the `anyhow` surface this crate
+//! actually uses (`anyhow!`, `bail!`, `Context`, `Result`).
+//!
+//! Replacing the `anyhow` dependency makes the workspace build with
+//! **zero registry dependencies**: the committed `Cargo.lock` is exact
+//! without any network access, CI's cargo cache key
+//! (`hashFiles('**/Cargo.lock')`) is meaningful, and nothing is ever
+//! re-resolved against crates.io. The crate never downcast errors or
+//! walked cause chains — every use site formats a message — so a string
+//! payload loses nothing.
+
+use std::fmt;
+
+/// A message-carrying error. Like `anyhow::Error`, this intentionally
+/// does **not** implement `std::error::Error` — that is what permits the
+/// blanket `From` conversion below without colliding with the identity
+/// `From<Error>`.
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from anything displayable (what `anyhow!` expands
+    /// to).
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// Any concrete `std::error::Error` converts by formatting — this is
+/// what makes `?` work on `Utf8Error`, `ParseFloatError`, `io::Error`,
+/// channel errors, ….
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(e.to_string())
+    }
+}
+
+/// Crate-wide result alias (mirrors `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a failure, mirroring `anyhow::Context` for both
+/// `Result` (context is prepended: `"{ctx}: {err}"`) and `Option`
+/// (context becomes the whole message).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// `anyhow!(...)` — build an [`Error`] from a format string, or from any
+/// single displayable expression (the three arms mirror `anyhow`'s).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// `bail!(fmt, ...)` — return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+// re-export the crate-root macros under this module's path, so call
+// sites can `use crate::util::error::{anyhow, bail}` like they did with
+// the external crate
+pub use crate::{anyhow, bail};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_both(a: &str, b: &str) -> Result<(f64, usize)> {
+        // exercises the blanket From conversions through `?`
+        let x: f64 = a.parse()?;
+        let y: usize = b.parse()?;
+        if y == 0 {
+            bail!("y must be positive, got {y}");
+        }
+        Ok((x, y))
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_both("1.5", "3").unwrap(), (1.5, 3));
+        let e = parse_both("nope", "3").unwrap_err();
+        assert!(e.to_string().contains("invalid float"), "{e}");
+    }
+
+    #[test]
+    fn bail_and_anyhow_format() {
+        let e = parse_both("1.0", "0").unwrap_err();
+        assert_eq!(e.to_string(), "y must be positive, got 0");
+        let e = anyhow!("code {}", 7);
+        assert_eq!(format!("{e:?}"), "code 7");
+    }
+
+    #[test]
+    fn expr_arm_takes_preformatted_messages() {
+        // the `anyhow!(msg)` form used by coordinator::node
+        let msg = String::from("already formatted");
+        let e = anyhow!(msg);
+        assert_eq!(e.to_string(), "already formatted");
+    }
+
+    #[test]
+    fn context_on_results_and_options() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("writing table").unwrap_err();
+        assert!(e.to_string().starts_with("writing table: "));
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing slot {}", 4)).unwrap_err();
+        assert_eq!(e.to_string(), "missing slot 4");
+        assert_eq!(Some(5).context("fine").unwrap(), 5);
+    }
+}

@@ -2,7 +2,7 @@
 //! environment): enough to parse/emit `artifacts/manifest.json` and the
 //! report layer's figure data files.
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 

@@ -2,6 +2,7 @@
 //! and native tile math used by the functional executor's fallback path
 //! (the PJRT runtime is used where an AOT artifact exists).
 
+pub mod error;
 pub mod json;
 pub mod linalg;
 pub mod par;

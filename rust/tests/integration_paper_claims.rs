@@ -586,3 +586,129 @@ fn claim_solver_memoization_fires_on_symmetric_kernels() {
         a.solver
     );
 }
+
+#[test]
+fn claim_cluster_gemm_family_rail_cuts_nic_traffic_by_p() {
+    // The gx1 acceptance bar: gemm_ar and ag_gemm — the last GEMM-family
+    // kernels to get a cluster story — charge each NIC exactly 1/P of
+    // the naive per-device accounting, pinned analytically and against
+    // the timed executor's ports.
+    use pk::exec::TimedExec;
+    use pk::hw::topology::Port;
+    use pk::hw::{ClusterSpec, DeviceId};
+    use pk::kernels::gemm_rs::{ClusterPath, Schedule};
+    use pk::kernels::{ag_gemm, gemm_ar, GemmKernelCfg};
+
+    let cluster = ClusterSpec::hgx_h100_pod(2);
+    let p = cluster.devices_per_node();
+    let exec = TimedExec::on_cluster(cluster.clone());
+
+    let cfg = GemmKernelCfg::new(cluster.node.clone(), 32768, 8192, 4096);
+    let rail = gemm_ar::nic_ar_bytes(&cfg, &cluster, ClusterPath::RailReduce);
+    let naive = gemm_ar::nic_ar_bytes(&cfg, &cluster, ClusterPath::Scatter);
+    let (rail_tot, naive_tot): (f64, f64) = (rail.iter().sum(), naive.iter().sum());
+    assert!(rail_tot > 0.0);
+    assert!(
+        (naive_tot / rail_tot - p as f64).abs() < 1e-9,
+        "gemm_ar rail must cut NIC traffic exactly xP: {}",
+        naive_tot / rail_tot
+    );
+    for (path, want) in [(ClusterPath::RailReduce, &rail), (ClusterPath::Scatter, &naive)] {
+        let plan = gemm_ar::build_cluster_opts(&cfg, &cluster, Schedule::InterSm, path, None);
+        let r = exec.run(&plan);
+        for g in 0..cluster.total_devices() {
+            let got = r.port_bytes.get(&Port::NicEgress(DeviceId(g))).copied().unwrap_or(0.0);
+            assert!(
+                (got - want[g]).abs() / want[g] < 1e-6,
+                "gemm_ar {path:?} dev {g}: {got} vs {}",
+                want[g]
+            );
+        }
+    }
+
+    let acfg = GemmKernelCfg::new(cluster.node.clone(), 32768, 4096, 8192);
+    let arail = ag_gemm::nic_ag_bytes(&acfg, &cluster, ClusterPath::RailReduce);
+    let anaive = ag_gemm::nic_ag_bytes(&acfg, &cluster, ClusterPath::Scatter);
+    let (at_r, at_n): (f64, f64) = (arail.iter().sum(), anaive.iter().sum());
+    assert!(at_r > 0.0);
+    assert!(
+        (at_n / at_r - p as f64).abs() < 1e-9,
+        "ag_gemm rail must cut NIC traffic exactly xP: {}",
+        at_n / at_r
+    );
+    for (path, want) in [(ClusterPath::RailReduce, &arail), (ClusterPath::Scatter, &anaive)] {
+        let plan = ag_gemm::build_cluster_opts(&acfg, &cluster, path, None);
+        let r = exec.run(&plan);
+        for g in 0..cluster.total_devices() {
+            let got = r.port_bytes.get(&Port::NicEgress(DeviceId(g))).copied().unwrap_or(0.0);
+            assert!(
+                (got - want[g]).abs() / want[g] < 1e-6,
+                "ag_gemm {path:?} dev {g}: {got} vs {}",
+                want[g]
+            );
+        }
+    }
+}
+
+#[test]
+fn claim_cluster_gemm_family_one_node_delegates_bit_identically() {
+    // Like every kernel in the repo: the cluster entry points reduce to
+    // the single-node builders on one node, bit for bit.
+    use pk::exec::TimedExec;
+    use pk::hw::ClusterSpec;
+    use pk::kernels::gemm_rs::Schedule;
+    use pk::kernels::{ag_gemm, gemm_ar, GemmKernelCfg};
+
+    let node = pk::hw::spec::NodeSpec::hgx_h100();
+    let single = ClusterSpec::single(node.clone());
+
+    let cfg = GemmKernelCfg::new(node.clone(), 32768, 32768, 4096);
+    let a = gemm_ar::build(&cfg, Schedule::InterSm, None);
+    let b = gemm_ar::build_cluster(&cfg, &single, Schedule::InterSm, None);
+    assert_eq!(a.total_ops(), b.total_ops());
+    let ta = TimedExec::new(node.clone()).run(&a).total_time;
+    let tb = TimedExec::on_cluster(single.clone()).run(&b).total_time;
+    assert_eq!(ta.to_bits(), tb.to_bits(), "1-node gemm_ar delegation must not drift");
+
+    let acfg = GemmKernelCfg::new(node.clone(), 32768, 4096, 32768);
+    let a = ag_gemm::build(&acfg, None);
+    let b = ag_gemm::build_cluster(&acfg, &single, None);
+    assert_eq!(a.total_ops(), b.total_ops());
+    let ta = TimedExec::new(node.clone()).run(&a).total_time;
+    let tb = TimedExec::on_cluster(single).run(&b).total_time;
+    assert_eq!(ta.to_bits(), tb.to_bits(), "1-node ag_gemm delegation must not drift");
+}
+
+#[test]
+fn claim_gx1_rail_wins_and_analytic_chunk_tracks_swept() {
+    // The cluster-GEMM exhibit in fast mode: on every multi-node row the
+    // rail transport beats both the naive per-device transport and the
+    // baseline extrapolation, the modeled NIC reduction is exactly xP,
+    // and the analytic rdma_chunk sits within 10% of the swept optimum.
+    let t = run_exhibit("gx1", true).unwrap();
+    assert_eq!(
+        t.columns,
+        vec!["kernel", "nodes", "nic_GBps", "rail_ms", "naive_ms", "baseline_ms", "nic_x", "an_vs_swept"]
+    );
+    let mut multi_rows = 0;
+    for r in &t.rows {
+        let rail: f64 = r[3].parse().unwrap();
+        let naive: f64 = r[4].parse().unwrap();
+        let base: f64 = r[5].parse().unwrap();
+        assert!(rail > 0.0 && naive > 0.0 && base > 0.0, "degenerate gx1 row: {r:?}");
+        if r[1] == "1" {
+            assert_eq!(r[3], r[4], "{}: 1-node transports coincide", r[0]);
+            assert_eq!(r[6], "-");
+            assert_eq!(r[7], "-");
+            continue;
+        }
+        multi_rows += 1;
+        assert!(rail < naive, "{} nodes={}: rail vs naive {rail} vs {naive}", r[0], r[1]);
+        assert!(rail < base, "{} nodes={}: rail vs baseline {rail} vs {base}", r[0], r[1]);
+        let x: f64 = r[6].parse().unwrap();
+        assert_eq!(x, 8.0, "{}: NIC reduction is exactly xP", r[0]);
+        let ratio: f64 = r[7].parse().unwrap();
+        assert!(ratio <= 1.10, "{}: analytic within 10% of swept, got {ratio}", r[0]);
+    }
+    assert!(multi_rows >= 2, "gx1 fast mode must cover both kernels multi-node");
+}

@@ -851,3 +851,184 @@ fn prop_incremental_solver_bit_identical_to_naive() {
         Ok(())
     });
 }
+
+/// The cluster GEMM+AR's hierarchical transport is numerically invisible:
+/// the rail (pre-reduce → coalesced store-add → broadcast-back) replicas
+/// are bit-identical to the naive per-device scatter path and to the
+/// dense all-reduce reference (integer-valued f32s — every sum is exact
+/// whatever the summation tree), over random (K, P, shape) combinations.
+#[test]
+fn prop_gemm_ar_cluster_paths_bit_identical_and_correct() {
+    use pk::kernels::gemm_ar::{build_cluster_opts, ClusterPath, GemmArBufs, Schedule};
+    use pk::kernels::GemmKernelCfg;
+    use pk::util::linalg;
+    run_prop("gemm_ar_cluster", 6, |rng| {
+        let k = rng.usize_in(2, 3);
+        let p = 2;
+        let n = k * p;
+        let cluster = ClusterSpec::test_cluster(k, p);
+        let m = n * 16 * rng.usize_in(1, 2);
+        let cols = 16 * rng.usize_in(1, 2);
+        let kdim = 8 * rng.usize_in(1, 2);
+        let cfg = GemmKernelCfg::functional(cluster.node.clone(), m, cols, kdim);
+        let mut want: Vec<f32> = vec![];
+        for path in [ClusterPath::RailReduce, ClusterPath::Scatter] {
+            let mut pool = MemPool::new();
+            let bufs = GemmArBufs::alloc_cluster(&mut pool, &cfg, &cluster);
+            for d in 0..n {
+                pool.get_mut(bufs.gemm.a[d]).data =
+                    (0..m * kdim).map(|i| ((i * 7 + d * 13) % 5) as f32 - 2.0).collect();
+                pool.get_mut(bufs.gemm.b[d]).data =
+                    (0..kdim * cols).map(|i| ((i * 11 + d * 3) % 7) as f32 - 3.0).collect();
+            }
+            if want.is_empty() {
+                // dense reference: sum of every device's partial product
+                want = vec![0.0f32; m * cols];
+                for d in 0..n {
+                    let prod = linalg::matmul(
+                        &pool.get(bufs.gemm.a[d]).data,
+                        &pool.get(bufs.gemm.b[d]).data,
+                        m,
+                        cols,
+                        kdim,
+                    );
+                    for (f, pv) in want.iter_mut().zip(prod) {
+                        *f += pv;
+                    }
+                }
+            }
+            let plan = build_cluster_opts(&cfg, &cluster, Schedule::IntraSm, path, Some(&bufs));
+            FunctionalExec::new(&mut pool).run(&plan).map_err(|e| e.to_string())?;
+            for d in 0..n {
+                if pool.get(bufs.out[d]).data != want {
+                    return Err(format!("device {d} replica diverges on {path:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Cluster AG+GEMM gathers exactly: every device ends with the bitwise
+/// global `A` (own shard + NVLink multicast + rail stage + forwarder
+/// fan-out) and the bitwise `full_A @ B_d` output, on both transports,
+/// over random (K, P, shape) combinations.
+#[test]
+fn prop_ag_gemm_cluster_gathers_exactly() {
+    use pk::kernels::ag_gemm::{build_cluster_opts, AgGemmBufs, ClusterPath};
+    use pk::kernels::GemmKernelCfg;
+    use pk::util::linalg;
+    run_prop("ag_gemm_cluster", 6, |rng| {
+        let k = rng.usize_in(2, 3);
+        let p = rng.usize_in(1, 3);
+        let n = k * p;
+        let cluster = ClusterSpec::test_cluster(k, p);
+        let m = n * 16 * rng.usize_in(1, 2);
+        let cols = 16;
+        let kdim = 8 * rng.usize_in(1, 2);
+        let mut cfg = GemmKernelCfg::functional(cluster.node.clone(), m, cols, kdim);
+        cfg.opts.num_comm_sms = 8;
+        for path in [ClusterPath::RailReduce, ClusterPath::Scatter] {
+            let mut pool = MemPool::new();
+            let bufs = AgGemmBufs::alloc_cluster(&mut pool, &cfg, &cluster);
+            let a_global: Vec<f32> = (0..m * kdim).map(|i| ((i * 5) % 9) as f32 - 4.0).collect();
+            let shard = m / n;
+            for d in 0..n {
+                let (s, e) = (d * shard * kdim, (d + 1) * shard * kdim);
+                pool.get_mut(bufs.a[d]).data[s..e].copy_from_slice(&a_global[s..e]);
+                pool.get_mut(bufs.b[d]).data =
+                    (0..kdim * cols).map(|i| ((i * 3 + d) % 7) as f32 - 3.0).collect();
+            }
+            let plan = build_cluster_opts(&cfg, &cluster, path, Some(&bufs));
+            FunctionalExec::new(&mut pool).run(&plan).map_err(|e| e.to_string())?;
+            for d in 0..n {
+                if pool.get(bufs.a[d]).data != a_global {
+                    return Err(format!("{path:?}: device {d} did not gather A exactly"));
+                }
+                let want = linalg::matmul(&a_global, &pool.get(bufs.b[d]).data, m, cols, kdim);
+                if pool.get(bufs.c[d]).data != want {
+                    return Err(format!("{path:?}: device {d} output mismatch"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// NIC byte conservation for the two new cluster kernels: on the rail
+/// path every device's NIC egress equals its ingress and both match the
+/// modeled accounting ([`gemm_ar::nic_ar_bytes`], [`ag_gemm::nic_ag_bytes`])
+/// exactly, across random pod shapes — the wave split neither loses nor
+/// duplicates bytes.
+#[test]
+fn prop_cluster_gemm_family_nic_byte_conservation() {
+    use pk::kernels::gemm_rs::Schedule;
+    use pk::kernels::{ag_gemm, gemm_ar, GemmKernelCfg};
+    run_prop("gemm_family_nic", 5, |rng| {
+        let k = rng.usize_in(2, 4);
+        let p = rng.usize_in(2, 4);
+        let n = k * p;
+        let cluster = ClusterSpec::test_cluster(k, p);
+        let m = 128 * n * rng.usize_in(1, 2);
+        let cfg = GemmKernelCfg::new(cluster.node.clone(), m, 256, 512);
+        let exec = TimedExec::on_cluster(cluster.clone());
+        // gemm_ar rail
+        let plan = gemm_ar::build_cluster(&cfg, &cluster, Schedule::InterSm, None);
+        let r = exec.run(&plan);
+        let want = gemm_ar::nic_ar_bytes(&cfg, &cluster, gemm_ar::ClusterPath::RailReduce);
+        for g in 0..n {
+            let e = r.port_bytes.get(&Port::NicEgress(DeviceId(g))).copied().unwrap_or(0.0);
+            let i = r.port_bytes.get(&Port::NicIngress(DeviceId(g))).copied().unwrap_or(0.0);
+            if (e - want[g]).abs() / want[g] > 1e-6 || (i - want[g]).abs() / want[g] > 1e-6 {
+                return Err(format!("gemm_ar dev {g}: NIC {e}/{i} vs {} (k={k} p={p})", want[g]));
+            }
+        }
+        // ag_gemm rail
+        let plan = ag_gemm::build_cluster(&cfg, &cluster, None);
+        let r = exec.run(&plan);
+        let want = ag_gemm::nic_ag_bytes(&cfg, &cluster, ag_gemm::ClusterPath::RailReduce);
+        for g in 0..n {
+            let e = r.port_bytes.get(&Port::NicEgress(DeviceId(g))).copied().unwrap_or(0.0);
+            let i = r.port_bytes.get(&Port::NicIngress(DeviceId(g))).copied().unwrap_or(0.0);
+            if (e - want[g]).abs() / want[g] > 1e-6 || (i - want[g]).abs() / want[g] > 1e-6 {
+                return Err(format!("ag_gemm dev {g}: NIC {e}/{i} vs {} (k={k} p={p})", want[g]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The analytic `rdma_chunk` policy tracks the swept optimum within a
+/// fixed tolerance across the NIC grid (25–100 GB/s) — the acceptance
+/// bar for making the closed form the default and demoting the chunk
+/// sweep to an ablation/validation path.
+#[test]
+fn prop_analytic_rdma_chunk_within_tolerance_of_swept() {
+    use pk::kernels::gemm_rs::{build_cluster, Schedule};
+    use pk::kernels::GemmKernelCfg;
+    let chunks = [262144.0, 1048576.0, 4194304.0, 16777216.0];
+    for nic in [25e9, 50e9, 100e9] {
+        let cluster = ClusterSpec::hgx_h100_pod(2).with_nic_bw(nic);
+        let exec = TimedExec::on_cluster(cluster.clone());
+        let cfg = GemmKernelCfg::new(cluster.node.clone(), 24576, 8192, 1024);
+        // the default cfg carries RDMA_CHUNK_AUTO -> the analytic knee
+        let t_auto = exec.run(&build_cluster(&cfg, &cluster, Schedule::IntraSm, None)).total_time;
+        let best = chunks
+            .iter()
+            .map(|&c| {
+                let mut cc = cfg.clone();
+                cc.rdma_chunk = c;
+                exec.run(&build_cluster(&cc, &cluster, Schedule::IntraSm, None)).total_time
+            })
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            .unwrap();
+        assert!(
+            t_auto <= best * 1.10,
+            "analytic chunk within 10% of the swept optimum at NIC {} GB/s: {t_auto} vs {best}",
+            nic / 1e9
+        );
+        // and the analytic choice itself moves with the fabric
+        let c = pk::pk::tuner::analytic_rdma_chunk(&cluster, 32.0 * 1024.0 * 1024.0);
+        assert!(c > 0.0 && c.is_finite());
+    }
+}

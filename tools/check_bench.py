@@ -1,0 +1,131 @@
+#!/usr/bin/env python3
+"""Validate a BENCH_hotpath snapshot (schema ``pk-hotpath-v1``).
+
+CI runs the hotpath bench in ``--smoke`` mode and used to just ``cat`` the
+resulting ``BENCH_hotpath.smoke.json`` — which proved the file existed,
+not that the emitter still wrote anything meaningful. This gate parses the
+snapshot and fails on schema drift or degenerate values:
+
+* wrong/missing ``schema`` tag, or a missing ``sections`` object;
+* any required section absent (e.g. the solver memo-hit rate on the
+  symmetric-kernel section, or the event-throughput metric);
+* non-numeric / non-finite / negative section values;
+* degenerate rates (``event_throughput_per_s == 0`` would mean the DES
+  ran no events — a broken bench, not a slow one);
+* a memo hit rate outside ``[0, 1]``.
+
+Usage: ``python3 tools/check_bench.py BENCH_hotpath.smoke.json``
+
+Exit status 0 when clean; 1 with one line per problem otherwise. The
+checked-in ``BENCH_hotpath.json`` trajectory baseline is allowed to be
+schema-only (all-null values, written before the first toolchain-equipped
+run); pass ``--allow-null`` to validate just its shape.
+
+No third-party imports: runs on any Python 3. Covered by
+``python/tests/test_bench_gate.py`` (including injected schema breaks).
+"""
+
+import json
+import math
+import sys
+
+SCHEMA = "pk-hotpath-v1"
+
+# Section keys the emitter must always write (bench names and derived
+# metrics). Keep in sync with rust/benches/hotpath.rs; the bench-gate
+# pytest pins a synthetic snapshot against this list.
+REQUIRED_SECTIONS = [
+    "timed_exec: GEMM+RS @ N=32768 (full sim)",
+    "event_throughput_per_s",
+    "solver_memo_hit_rate",
+    "plan build: GEMM+RS @ N=32768",
+    "timed_exec: hier AR @ 4 nodes x 8 GPUs",
+    "compute_rates (naive): 2048 flows / 16 ports",
+    "flownet churn (incremental): 2048 flows",
+    "functional exec: 64x 256x256 tile copies",
+    "copy_throughput_gb_s",
+    "linalg: 128^3 matmul_accum",
+    "tile_math_gflop_s",
+]
+
+# sections that must be strictly positive when present with a value
+POSITIVE_SECTIONS = {
+    "event_throughput_per_s",
+    "copy_throughput_gb_s",
+    "tile_math_gflop_s",
+}
+
+
+def check_snapshot(doc, allow_null=False):
+    """Return a list of problem strings (empty = snapshot is healthy)."""
+    problems = []
+    if not isinstance(doc, dict):
+        return ["snapshot root is not an object"]
+    if doc.get("schema") != SCHEMA:
+        problems.append(f"schema drift: expected {SCHEMA!r}, got {doc.get('schema')!r}")
+    sections = doc.get("sections")
+    if not isinstance(sections, dict):
+        problems.append("missing 'sections' object")
+        return problems
+    for key in REQUIRED_SECTIONS:
+        if key not in sections:
+            problems.append(f"missing section {key!r}")
+    for key, value in sections.items():
+        if value is None:
+            if not allow_null:
+                problems.append(f"section {key!r} is null (schema-only snapshot?)")
+            continue
+        if isinstance(value, bool) or not isinstance(value, (int, float)):
+            problems.append(f"section {key!r} is not a number: {value!r}")
+            continue
+        if not math.isfinite(value):
+            problems.append(f"section {key!r} is not finite: {value!r}")
+            continue
+        if value < 0:
+            problems.append(f"section {key!r} is negative: {value!r}")
+        if key in POSITIVE_SECTIONS and value == 0:
+            problems.append(f"section {key!r} is degenerate (zero rate)")
+    rate = sections.get("solver_memo_hit_rate")
+    if isinstance(rate, (int, float)) and not isinstance(rate, bool):
+        if not 0.0 <= rate <= 1.0:
+            problems.append(f"solver_memo_hit_rate out of [0, 1]: {rate!r}")
+    if not allow_null:
+        events = doc.get("events")
+        if (
+            isinstance(events, bool)
+            or not isinstance(events, (int, float))
+            or events <= 0
+        ):
+            problems.append(f"'events' is missing or degenerate: {events!r}")
+    return problems
+
+
+def main(argv):
+    allow_null = "--allow-null" in argv
+    paths = [a for a in argv if not a.startswith("--")]
+    if len(paths) != 1:
+        print("usage: check_bench.py [--allow-null] <BENCH_hotpath[.smoke].json>")
+        return 2
+    try:
+        with open(paths[0]) as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError) as exc:
+        print(f"check_bench: cannot read {paths[0]}: {exc}")
+        return 1
+    problems = check_snapshot(doc, allow_null=allow_null)
+    for p in problems:
+        print(f"check_bench: {p}")
+    if problems:
+        return 1
+    sections = doc["sections"]
+    rate = sections.get("event_throughput_per_s")
+    print(
+        f"check_bench: {paths[0]} ok "
+        f"({len(sections)} sections, schema {SCHEMA}"
+        + (f", {rate:.0f} events/s)" if isinstance(rate, (int, float)) else ")")
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
