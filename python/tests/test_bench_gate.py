@@ -62,6 +62,8 @@ def test_required_sections_match_the_committed_baseline():
     "break_fn, expect",
     [
         (lambda d: d.update(schema="pk-hotpath-v0"), "schema drift"),
+        # a stale pre-serve snapshot must be rejected outright
+        (lambda d: d.update(schema="pk-hotpath-v1"), "schema drift"),
         (lambda d: d.pop("sections"), "missing 'sections'"),
         (lambda d: d["sections"].pop("solver_memo_hit_rate"), "missing section"),
         (lambda d: d["sections"].pop("event_throughput_per_s"), "missing section"),
@@ -70,6 +72,14 @@ def test_required_sections_match_the_committed_baseline():
         (lambda d: d["sections"].update({"solver_memo_hit_rate": 1.5}), "out of [0, 1]"),
         (lambda d: d["sections"].update({"linalg: 128^3 matmul_accum": float("nan")}), "not finite"),
         (lambda d: d["sections"].update({"copy_throughput_gb_s": -1.0}), "negative"),
+        # v2: the serving-engine bench section is mandatory and its
+        # throughput must be non-degenerate
+        (
+            lambda d: d["sections"].pop("serve: colocated chat trace @ 0.8x capacity"),
+            "missing section",
+        ),
+        (lambda d: d["sections"].pop("serve_tokens_per_s"), "missing section"),
+        (lambda d: d["sections"].update({"serve_tokens_per_s": 0}), "degenerate"),
         (lambda d: d.update(events=0), "degenerate"),
         (lambda d: d.pop("events"), "missing or degenerate"),
     ],

@@ -1,8 +1,8 @@
 //! `cargo bench --bench hotpath` — microbenchmarks of the library's own
 //! hot paths (the §Perf instrumentation): DES event throughput, the
 //! max-min fair solver (naive reference vs the engine's incremental
-//! path), functional tile movement, plan construction, and the parallel
-//! sweep driver.
+//! path), functional tile movement, plan construction, the parallel
+//! sweep driver, and the trace-driven serving engine.
 //!
 //! Hand-rolled harness (measure-N-iterations, report best-of-K) — the
 //! vendored environment has no criterion; methodology matches its
@@ -187,6 +187,26 @@ fn main() {
         );
     }
 
+    // ---- serving engine: trace-driven continuous batching, end-to-end
+    // (calibration + capacity probe happen once outside the timed loop)
+    {
+        use pk::hw::ClusterSpec;
+        use pk::sim::serve::{self, KernelMode, ServeCfg, StepCostModel};
+        use pk::sim::workload::{self, ArrivalProcess, TraceCfg};
+        let n_req = if smoke { 48 } else { 512 };
+        let cfg = ServeCfg::reference(ClusterSpec::hgx_h100_pod(1), KernelMode::PkOverlap);
+        let cost = StepCostModel::calibrate(&cfg.cluster.node, cfg.mode, &cfg.model);
+        let cap = serve::capacity_probe(&cfg, &cost, 48, 1234);
+        let trace =
+            workload::generate(&TraceCfg::chat(ArrivalProcess::Poisson, 0.8 * cap, n_req, 7));
+        let mut tok_s = 0.0;
+        h.bench("serve: colocated chat trace @ 0.8x capacity", 2, 3, || {
+            let rep = serve::run_with_cost(&cfg, &cost, &trace);
+            tok_s = rep.tokens_per_s;
+        });
+        h.metric("serve_tokens_per_s", tok_s, &format!("{tok_s:>12.0} tok/s"));
+    }
+
     // ---- functional executor: tile movement throughput
     {
         use pk::plan::{Effect, MatView, Op, Plan, Role};
@@ -239,7 +259,7 @@ fn main() {
     // checks) write next to it so 1-iteration noise never clobbers the
     // committed numbers.
     let mut top = BTreeMap::new();
-    top.insert("schema".to_string(), Json::Str("pk-hotpath-v1".to_string()));
+    top.insert("schema".to_string(), Json::Str("pk-hotpath-v2".to_string()));
     top.insert(
         "note".to_string(),
         Json::Str(

@@ -3,62 +3,95 @@
 //! ```text
 //! pk figures [--only <id>] [--fast] [--out <dir>]   regenerate paper exhibits
 //!            [--serial | --jobs <n>]                (parallel by default)
-//!            [--smoke]                              CI gate: run EVERY exhibit
+//!            [--smoke [--expect-registry <n>]]      CI gate: run EVERY exhibit
 //!                                                   in fast mode and exit
 //!                                                   non-zero on empty output
+//!                                                   (or a registry-count drift)
 //! pk run <kernel> [--n <size>] [--schedule intra|inter]
+//! pk serve [--nodes <k>] [--mode pk|base] [--policy fcfs|priority|chunked]
+//!          [--trace poisson|bursty|diurnal] [--requests <n>] [--rate <rps>]
+//!                                                   trace-driven serving sim
 //! pk tune <kernel> --n <size>                       SM-partition auto-tuner
 //! pk validate                                       functional + PJRT checks
 //! pk info                                           hardware model summary
 //! ```
+//!
+//! Every malformed argument or unknown id surfaces as a one-line
+//! `pk: error: ...` message (exit 1), never a panic — pinned by the
+//! `checked_runner_rejects_unknown_ids_cleanly` test on the library side.
 
 use pk::exec::TimedExec;
 use pk::hw::spec::NodeSpec;
+use pk::hw::ClusterSpec;
 use pk::kernels::gemm_rs::Schedule;
 use pk::kernels::GemmKernelCfg;
-use pk::report::run_exhibits;
+use pk::report::run_exhibits_checked;
+use pk::sim::serve::{self, KernelMode, SchedPolicy, ServeCfg, StepCostModel};
+use pk::sim::workload::{self, ArrivalProcess, TraceCfg};
+use pk::util::error::{bail, Context, Result};
 use pk::util::par::default_threads;
 
 fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("pk: error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
     let flag = |name: &str| args.iter().any(|a| a == name);
     let opt = |name: &str| {
         args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.to_string())
     };
+    // strict numeric options: absent -> default, present-but-malformed ->
+    // a clean error (these used to fall back silently via `.ok()`)
+    let opt_usize = |name: &str, default: usize| -> Result<usize> {
+        match opt(name) {
+            Some(s) => s.parse::<usize>().with_context(|| format!("bad {name} value '{s}'")),
+            None => Ok(default),
+        }
+    };
+    let opt_f64 = |name: &str, default: f64| -> Result<f64> {
+        match opt(name) {
+            Some(s) => s.parse::<f64>().with_context(|| format!("bad {name} value '{s}'")),
+            None => Ok(default),
+        }
+    };
     match cmd {
         "figures" => {
             // --smoke is the CI gate: force fast mode over the FULL
             // registry and verify every exhibit actually produced rows,
-            // so new exhibit builders (gx1, ...) can't compile but rot
+            // so new exhibit builders (gx1, vx1, ...) can't compile but rot
             let smoke = flag("--smoke");
             let fast = flag("--fast") || smoke;
             let out = opt("--out");
             if let Some(dir) = &out {
-                std::fs::create_dir_all(dir).expect("create out dir");
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("cannot create out dir '{dir}'"))?;
             }
             let only = opt("--only");
             if smoke && only.is_some() {
                 // the gate is only meaningful over the full registry;
                 // refuse rather than silently ignoring the filter
-                eprintln!("--smoke runs the full registry; drop --only (use --fast --only <id>)");
-                std::process::exit(2);
+                bail!("--smoke runs the full registry; drop --only (use --fast --only <id>)");
             }
             let ids: Option<Vec<&str>> = only.as_deref().map(|id| vec![id]);
             let threads = if flag("--serial") {
                 1
             } else {
-                opt("--jobs").and_then(|s| s.parse().ok()).unwrap_or_else(default_threads)
+                opt_usize("--jobs", 0).map(|j| if j == 0 { default_threads() } else { j })?
             };
             let t0 = std::time::Instant::now();
-            let results = run_exhibits(fast, ids.as_deref(), threads);
+            let results = run_exhibits_checked(fast, ids.as_deref(), threads)?;
             let mut sum = 0.0;
             for r in &results {
                 println!("{}", r.table.to_markdown());
                 sum += r.wall;
                 if let Some(dir) = &out {
                     std::fs::write(format!("{dir}/{}.csv", r.id), r.table.to_csv())
-                        .expect("write csv");
+                        .with_context(|| format!("cannot write {dir}/{}.csv", r.id))?;
                 }
             }
             eprintln!(
@@ -69,27 +102,36 @@ fn main() {
                 sum
             );
             if smoke {
-                let registry = pk::report::exhibits::all_exhibits().len();
+                let registry = pk::report::all_exhibits().len();
+                // CI pins the expected registry size, so dropping an
+                // exhibit from the registry itself also fails the gate
+                if let Some(expect) = opt("--expect-registry") {
+                    let expect: usize = expect
+                        .parse()
+                        .with_context(|| format!("bad --expect-registry value '{expect}'"))?;
+                    if registry != expect {
+                        bail!("figures --smoke: registry has {registry} exhibits, expected {expect}");
+                    }
+                }
                 let empty: Vec<&str> =
                     results.iter().filter(|r| r.table.rows.is_empty()).map(|r| r.id).collect();
                 if results.len() != registry || !empty.is_empty() {
-                    eprintln!(
-                        "figures --smoke FAILED: ran {}/{} exhibits, empty: {empty:?}",
-                        results.len(),
-                        registry
+                    bail!(
+                        "figures --smoke FAILED: ran {}/{registry} exhibits, empty: {empty:?}",
+                        results.len()
                     );
-                    std::process::exit(1);
                 }
                 eprintln!("figures --smoke: all {registry} exhibits ran and produced rows");
             }
         }
         "run" => {
             let kernel = args.get(1).map(|s| s.as_str()).unwrap_or("gemm_rs");
-            let n: usize = opt("--n").and_then(|s| s.parse().ok()).unwrap_or(16384);
+            let n = opt_usize("--n", 16384)?;
             let node = if flag("--b200") { NodeSpec::hgx_b200() } else { NodeSpec::hgx_h100() };
             let schedule = match opt("--schedule").as_deref() {
                 Some("inter") => Schedule::InterSm,
-                _ => Schedule::IntraSm,
+                Some("intra") | None => Schedule::IntraSm,
+                Some(other) => bail!("unknown --schedule '{other}' (intra|inter)"),
             };
             let (time, flops) = match kernel {
                 "gemm" => {
@@ -123,8 +165,7 @@ fn main() {
                     )
                 }
                 other => {
-                    eprintln!("unknown kernel '{other}' (gemm|gemm_rs|gemm_ar|ag_gemm|ring_attention)");
-                    std::process::exit(2);
+                    bail!("unknown kernel '{other}' (gemm|gemm_rs|gemm_ar|ag_gemm|ring_attention)")
                 }
             };
             println!(
@@ -133,8 +174,64 @@ fn main() {
                 pk::util::fmt_tflops(flops / time)
             );
         }
+        "serve" => {
+            let nodes = opt_usize("--nodes", 1)?;
+            if nodes == 0 {
+                bail!("--nodes must be >= 1");
+            }
+            let mode = match opt("--mode").as_deref() {
+                Some("base") => KernelMode::Nonoverlap,
+                Some("pk") | None => KernelMode::PkOverlap,
+                Some(other) => bail!("unknown --mode '{other}' (pk|base)"),
+            };
+            let policy = match opt("--policy").as_deref() {
+                Some("priority") => SchedPolicy::Priority,
+                Some("chunked") => SchedPolicy::ChunkedPrefill { chunk: 512 },
+                Some("fcfs") | None => SchedPolicy::Fcfs,
+                Some(other) => bail!("unknown --policy '{other}' (fcfs|priority|chunked)"),
+            };
+            let n_requests = opt_usize("--requests", 400)?;
+            if n_requests == 0 {
+                bail!("--requests must be >= 1");
+            }
+            let mut cfg = ServeCfg::reference(ClusterSpec::hgx_h100_pod(nodes), mode);
+            cfg.policy = policy;
+            let cost = StepCostModel::calibrate(&cfg.cluster.node, cfg.mode, &cfg.model);
+            let cap = serve::capacity_probe(&cfg, &cost, (n_requests / 2).max(16), 1234);
+            // default offered load: 80% of the probed capacity
+            let rate = opt_f64("--rate", 0.8 * cap)?;
+            if !rate.is_finite() || rate <= 0.0 {
+                bail!("--rate must be positive, got {rate}");
+            }
+            let process = match opt("--trace").as_deref() {
+                Some("bursty") => ArrivalProcess::Bursty { burst: 4.0, on_frac: 0.2, period: 2.0 },
+                Some("diurnal") => ArrivalProcess::Diurnal { depth: 0.6, period: 60.0 },
+                Some("poisson") | None => ArrivalProcess::Poisson,
+                Some(other) => bail!("unknown --trace '{other}' (poisson|bursty|diurnal)"),
+            };
+            let trace = workload::generate(&TraceCfg::chat(process, rate, n_requests, 99));
+            let rep = serve::run_with_cost(&cfg, &cost, &trace);
+            println!(
+                "serve: {nodes} node(s), {:?}/{:?}, {n_requests} requests @ {rate:.1} rps \
+                 (capacity ~{cap:.1} rps)",
+                mode, policy
+            );
+            println!(
+                "  tokens/s {:.0} | goodput {:.1} rps | p50 {} | p99 {} | ttft p50 {} | \
+                 ttft p99 {} | mean step {:.0} tok | kv peak {} tok | slo violations {}",
+                rep.tokens_per_s,
+                rep.goodput_rps,
+                pk::util::fmt_time(rep.latency_p50),
+                pk::util::fmt_time(rep.latency_p99),
+                pk::util::fmt_time(rep.ttft_p50),
+                pk::util::fmt_time(rep.ttft_p99),
+                rep.mean_step_tokens,
+                rep.kv_peak_tokens,
+                rep.slo_violations,
+            );
+        }
         "tune" => {
-            let n: usize = opt("--n").and_then(|s| s.parse().ok()).unwrap_or(16384);
+            let n = opt_usize("--n", 16384)?;
             let node = NodeSpec::hgx_h100();
             let result = pk::pk::tuner::tune_comm_sms(&node, &[4, 8, 12, 16, 24, 32, 48, 64], |c| {
                 let mut cfg = GemmKernelCfg::new(node.clone(), n, n / 8, n);
@@ -180,10 +277,10 @@ fn main() {
             }
         }
         _ => {
-            eprintln!("usage: pk <figures|run|tune|validate|info> [options]");
-            std::process::exit(2);
+            bail!("usage: pk <figures|run|serve|tune|validate|info> [options]");
         }
     }
+    Ok(())
 }
 
 fn validate_gemm_rs() {
@@ -223,7 +320,7 @@ fn validate_collectives() {
     }
 }
 
-fn validate_pjrt() -> pk::util::error::Result<()> {
+fn validate_pjrt() -> Result<()> {
     use pk::runtime::Runtime;
     let mut rt = Runtime::open(Runtime::default_dir())?;
     let x = pk::util::seeded_vec(1, 64 * 64);

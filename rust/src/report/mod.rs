@@ -7,5 +7,7 @@ pub mod ablations;
 pub mod exhibits;
 pub mod table;
 
-pub use exhibits::{all_exhibits, run_exhibit, run_exhibits, Exhibit, ExhibitResult};
+pub use exhibits::{
+    all_exhibits, run_exhibit, run_exhibits, run_exhibits_checked, Exhibit, ExhibitResult,
+};
 pub use table::Table;

@@ -10,10 +10,17 @@
 //! * [`EventQueue`] — timer events,
 //! * [`flownet::FlowNet`] — bandwidth-shared flows with max-min fairness,
 //! * [`trace`] — optional execution traces (the profiling substrate for
-//!   the §Perf pass and for debugging schedules).
+//!   the §Perf pass and for debugging schedules),
+//! * [`workload`] — deterministic open-loop request traces (Poisson,
+//!   bursty, diurnal) for the serving layer,
+//! * [`serve`] — the trace-driven inference serving engine (continuous
+//!   batching, prefill/decode disaggregation, scheduler policies) whose
+//!   per-step cost is calibrated from the timed kernel schedules.
 
 pub mod flownet;
+pub mod serve;
 pub mod trace;
+pub mod workload;
 
 pub use flownet::{FlowId, FlowNet};
 pub use trace::{Span, Trace};

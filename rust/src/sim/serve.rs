@@ -1,0 +1,809 @@
+//! Trace-driven inference serving layer: continuous batching on top of
+//! the timed kernel schedules.
+//!
+//! This is the layer that turns per-kernel overlap claims into end-to-end
+//! serving claims (ROADMAP north star): what does the PK-overlapped
+//! GEMM+RS buy at p99 latency under an open-loop request trace, versus
+//! the same engine stepping on `baselines::nonoverlap` kernels?
+//!
+//! * **Step cost** ([`StepCostModel`]) — the per-layer cost of one engine
+//!   iteration at a given batched token count is *calibrated* by running
+//!   the timed kernel schedules ([`crate::kernels::gemm_rs`] under
+//!   [`Schedule::IntraSm`] for [`KernelMode::PkOverlap`];
+//!   [`crate::baselines::nonoverlap::gemm_rs`] for
+//!   [`KernelMode::Nonoverlap`]) at a few batch-token knots and
+//!   interpolating piecewise-linearly between them. The serving engine
+//!   itself never re-runs the DES per step — calibration happens once.
+//! * **Continuous batching** — each engine step serves one decode token
+//!   per active request plus admitted prefill tokens, under a per-step
+//!   token budget and a KV-capacity admission gate (the gate is what
+//!   creates queueing, and queueing is what makes p99 explode past the
+//!   saturation knee).
+//! * **Prefill/decode disaggregation** — on `K ≥ 2` nodes, `⌊K/2⌋`
+//!   (min 1) nodes run prefill and the rest run decode; finished prefill
+//!   KV rides the RDMA fabric ([`crate::xfer::curves::rdma_rate`], chunk
+//!   sized by [`crate::pk::tuner::analytic_rdma_chunk`]) and serializes
+//!   on the destination node's NIC-ingress FIFO, exactly like every
+//!   other cross-node flow in the repo.
+//! * **Scheduler policies** ([`SchedPolicy`]) — FCFS (strict
+//!   head-of-line), priority (high class may bypass a blocked head), and
+//!   chunked prefill (per-step prefill token cap, bounding decode-token
+//!   latency jitter).
+//!
+//! The protocol (no request lost or duplicated, KV occupancy
+//! conservation, FCFS ordering) is asserted inline on every run and
+//! mirrored by the pure-Python executable model in
+//! `python/tests/test_serve_model.py`, which verifies the same scheduler
+//! logic in the toolchain-less container.
+//!
+//! [`Schedule::IntraSm`]: crate::kernels::gemm_rs::Schedule::IntraSm
+
+use crate::baselines::nonoverlap;
+use crate::exec::TimedExec;
+use crate::hw::cluster::ClusterSpec;
+use crate::hw::spec::NodeSpec;
+use crate::kernels::gemm_rs::{self, Schedule};
+use crate::kernels::GemmKernelCfg;
+use crate::pk::tuner::analytic_rdma_chunk;
+use crate::sim::workload::{generate, ArrivalProcess, Request, TraceCfg};
+use crate::util::stats::{percentile, summarize, Summary};
+use crate::xfer::curves;
+
+/// Which kernel schedules the engine steps on (the ablation axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// PK intra-SM overlapped GEMM+RS per transformer layer.
+    PkOverlap,
+    /// cuBLAS GEMM + NCCL RS as separate kernels (comm fully exposed).
+    Nonoverlap,
+}
+
+/// Scheduler policy of the continuous-batching engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Strict FCFS: a head-of-line request blocked on KV capacity blocks
+    /// everything behind it (the ordering guarantee the protocol tests
+    /// pin).
+    Fcfs,
+    /// High class (priority 1) may bypass a blocked head of line.
+    Priority,
+    /// FCFS, but at most `chunk` prefill tokens join any one step —
+    /// bounds the latency jitter a long prompt injects into co-running
+    /// decodes.
+    ChunkedPrefill { chunk: usize },
+}
+
+/// The served model, reduced to what the cost/capacity model needs.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelCfg {
+    /// Transformer layers; each engine step pays `layers ×` the per-layer
+    /// knot cost.
+    pub layers: usize,
+    /// KV-cache bytes per token across all layers (GQA-style 8 KV heads ×
+    /// 128 head dim × K&V × fp8 in the reference config).
+    pub kv_bytes_per_token: f64,
+}
+
+impl ModelCfg {
+    /// Reference 32-layer, hidden-8192 chat model.
+    pub fn reference() -> Self {
+        ModelCfg { layers: 32, kv_bytes_per_token: 65536.0 }
+    }
+}
+
+/// Full serving-engine configuration.
+#[derive(Clone, Debug)]
+pub struct ServeCfg {
+    pub cluster: ClusterSpec,
+    pub mode: KernelMode,
+    pub policy: SchedPolicy,
+    pub model: ModelCfg,
+    /// Per-step batched token budget (decode tokens + prefill tokens).
+    pub max_batch_tokens: usize,
+    /// KV capacity per (decode) node, in tokens; admission reserves
+    /// `prompt + output` tokens and frees them at completion.
+    pub kv_capacity_tokens: usize,
+    /// SLO: time-to-first-token budget (seconds).
+    pub slo_ttft: f64,
+    /// SLO: per-output-token budget (seconds/token).
+    pub slo_tpot: f64,
+}
+
+impl ServeCfg {
+    /// The reference serving setup used by the `vx1` exhibit.
+    pub fn reference(cluster: ClusterSpec, mode: KernelMode) -> Self {
+        ServeCfg {
+            cluster,
+            mode,
+            policy: SchedPolicy::Fcfs,
+            model: ModelCfg::reference(),
+            max_batch_tokens: 4096,
+            kv_capacity_tokens: 262_144,
+            slo_ttft: 0.2,
+            slo_tpot: 2e-3,
+        }
+    }
+}
+
+/// Per-layer engine-step cost as a function of batched token count,
+/// calibrated from the timed kernel schedules.
+#[derive(Clone, Debug)]
+pub struct StepCostModel {
+    /// `(batch_tokens, seconds per layer)`, ascending in tokens; knot 0
+    /// is the launch-overhead floor (one fused launch for PK, two kernel
+    /// launches for the non-overlapped baseline).
+    pub knots: Vec<(f64, f64)>,
+    pub layers: usize,
+}
+
+/// Batch-token knots the calibration simulates. `m` must divide by
+/// `n_dev × tile_m = 1024` on the 8-GPU reference node (the GEMM+RS
+/// builder's sharding constraint), so these are the smallest usable grid.
+const CALIB_KNOTS: [usize; 3] = [1024, 4096, 16384];
+
+impl StepCostModel {
+    /// Calibrate by running the timed schedules at each knot: the
+    /// per-layer projection is `[m = batch tokens] × 8192 × 8192` through
+    /// the fused (or unfused) GEMM+RS on one node.
+    pub fn calibrate(node: &NodeSpec, mode: KernelMode, model: &ModelCfg) -> Self {
+        let launch = node.gpu.kernel_launch;
+        let floor = match mode {
+            KernelMode::PkOverlap => launch,
+            KernelMode::Nonoverlap => 2.0 * launch,
+        };
+        let mut knots = vec![(0.0, floor)];
+        for m in CALIB_KNOTS {
+            let cfg = GemmKernelCfg::new(node.clone(), m, 8192, 8192);
+            let t = match mode {
+                KernelMode::PkOverlap => TimedExec::new(node.clone())
+                    .run(&gemm_rs::build(&cfg, Schedule::IntraSm, None))
+                    .total_time,
+                KernelMode::Nonoverlap => nonoverlap::gemm_rs(&cfg),
+            };
+            knots.push((m as f64, t));
+        }
+        StepCostModel { knots, layers: model.layers }
+    }
+
+    /// Wall-clock cost of one engine step over `tokens` batched tokens:
+    /// `layers ×` the piecewise-linear interpolation of the knots (linear
+    /// extrapolation past the last knot).
+    pub fn step_time(&self, tokens: usize) -> f64 {
+        let x = tokens as f64;
+        let k = &self.knots;
+        let last = k.len() - 1;
+        let per_layer = if x >= k[last].0 {
+            let (x0, y0) = k[last - 1];
+            let (x1, y1) = k[last];
+            y1 + (x - x1) * (y1 - y0) / (x1 - x0)
+        } else {
+            let i = k.windows(2).position(|w| x < w[1].0).expect("ascending knots");
+            let (x0, y0) = k[i];
+            let (x1, y1) = k[i + 1];
+            y0 + (x - x0) * (y1 - y0) / (x1 - x0)
+        };
+        self.layers as f64 * per_layer
+    }
+}
+
+/// One completed request (the unit every metric is computed from).
+#[derive(Clone, Copy, Debug)]
+pub struct Completion {
+    pub id: usize,
+    pub arrival: f64,
+    pub first_token: f64,
+    pub finish: f64,
+    pub output_tokens: usize,
+    pub priority: u8,
+}
+
+/// Aggregated serving metrics of one trace run.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub n_requests: usize,
+    /// Makespan: time of the last completion.
+    pub duration: f64,
+    pub output_tokens: usize,
+    pub tokens_per_s: f64,
+    /// Completed requests per second that met the SLO
+    /// (`latency ≤ slo_ttft + output × slo_tpot`).
+    pub goodput_rps: f64,
+    pub latency_p50: f64,
+    pub latency_p99: f64,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub mean_step_tokens: f64,
+    pub max_step_tokens: usize,
+    /// Largest prefill-token share of any single step (chunked prefill
+    /// caps this at `chunk`).
+    pub max_prefill_step_tokens: usize,
+    pub kv_peak_tokens: usize,
+    pub slo_violations: usize,
+    /// Latency summary over the violators — legitimately `None` at low
+    /// load (the empty-sample path `util::stats` now supports).
+    pub violator_latency: Option<Summary>,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Job {
+    req: Request,
+    /// When this node may first see the job (arrival, or KV-landing time
+    /// on a disaggregated decode node).
+    ready: f64,
+    prefill_left: usize,
+    generated: usize,
+    first_token: Option<f64>,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Active {
+    job: Job,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct StepStats {
+    steps: u64,
+    token_steps: u64,
+    max_step_tokens: usize,
+    max_prefill_step_tokens: usize,
+    kv_peak: usize,
+}
+
+impl StepStats {
+    fn merge(&mut self, o: &StepStats) {
+        self.steps += o.steps;
+        self.token_steps += o.token_steps;
+        self.max_step_tokens = self.max_step_tokens.max(o.max_step_tokens);
+        self.max_prefill_step_tokens = self.max_prefill_step_tokens.max(o.max_prefill_step_tokens);
+        self.kv_peak = self.kv_peak.max(o.kv_peak);
+    }
+}
+
+/// The continuous-batching engine of one node (colocated, or the decode
+/// half of a disaggregated pair).
+struct Engine<'a> {
+    cost: &'a StepCostModel,
+    policy: SchedPolicy,
+    max_batch_tokens: usize,
+    kv_capacity_tokens: usize,
+}
+
+impl Engine<'_> {
+    fn sort_queue(&self, queue: &mut [Job]) {
+        match self.policy {
+            SchedPolicy::Priority => queue.sort_by(|a, b| {
+                b.req
+                    .priority
+                    .cmp(&a.req.priority)
+                    .then(a.req.arrival.total_cmp(&b.req.arrival))
+                    .then(a.req.id.cmp(&b.req.id))
+            }),
+            _ => queue.sort_by(|a, b| {
+                a.req.arrival.total_cmp(&b.req.arrival).then(a.req.id.cmp(&b.req.id))
+            }),
+        }
+    }
+
+    /// Run the node to completion over `jobs` (sorted by `ready`
+    /// internally). Work-conserving: steps happen only while admitted
+    /// work exists; otherwise time jumps to the next ready job.
+    fn run_node(&self, mut jobs: Vec<Job>) -> (Vec<Completion>, StepStats) {
+        jobs.sort_by(|a, b| a.ready.total_cmp(&b.ready).then(a.req.id.cmp(&b.req.id)));
+        let mut queue: Vec<Job> = vec![];
+        let mut active: Vec<Active> = vec![];
+        let mut comps: Vec<Completion> = Vec::with_capacity(jobs.len());
+        let mut stats = StepStats::default();
+        let mut kv_used = 0usize;
+        let mut ji = 0usize;
+        let mut t = 0.0f64;
+        loop {
+            // pull arrivals
+            let mut pulled = false;
+            while ji < jobs.len() && jobs[ji].ready <= t {
+                queue.push(jobs[ji]);
+                ji += 1;
+                pulled = true;
+            }
+            if pulled {
+                self.sort_queue(&mut queue);
+            }
+            // admission: KV reservation + concurrency cap. FCFS blocks on
+            // the head; Priority may scan past a blocked job.
+            let mut i = 0;
+            while i < queue.len() {
+                let need = queue[i].req.prompt_tokens + queue[i].req.output_tokens;
+                assert!(
+                    need <= self.kv_capacity_tokens,
+                    "request {} needs {need} KV tokens > capacity {}",
+                    queue[i].req.id,
+                    self.kv_capacity_tokens
+                );
+                if active.len() < self.max_batch_tokens && kv_used + need <= self.kv_capacity_tokens
+                {
+                    kv_used += need;
+                    stats.kv_peak = stats.kv_peak.max(kv_used);
+                    active.push(Active { job: queue.remove(i) });
+                } else if self.policy == SchedPolicy::Priority {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            if active.is_empty() {
+                // nothing admitted: the trace is drained, or time must
+                // jump to the next ready job (queue is empty here — an
+                // empty engine always admits, per the capacity assert)
+                debug_assert!(queue.is_empty());
+                if ji >= jobs.len() {
+                    break;
+                }
+                t = t.max(jobs[ji].ready);
+                continue;
+            }
+            // form the step: one decode token per decoding request plus
+            // admitted prefill tokens under the remaining budget
+            let decode_idx: Vec<usize> = active
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| a.job.prefill_left == 0)
+                .map(|(i, _)| i)
+                .collect();
+            let mut budget = self.max_batch_tokens.saturating_sub(decode_idx.len());
+            if let SchedPolicy::ChunkedPrefill { chunk } = self.policy {
+                assert!(chunk > 0, "chunked prefill needs a positive chunk");
+                budget = budget.min(chunk);
+            }
+            let mut prefill_alloc: Vec<(usize, usize)> = vec![];
+            for (ai, a) in active.iter().enumerate() {
+                if a.job.prefill_left > 0 && budget > 0 {
+                    let take = a.job.prefill_left.min(budget);
+                    budget -= take;
+                    prefill_alloc.push((ai, take));
+                }
+            }
+            let prefill_tokens: usize = prefill_alloc.iter().map(|p| p.1).sum();
+            let step_tokens = decode_idx.len() + prefill_tokens;
+            debug_assert!(step_tokens > 0, "active work must produce a step");
+            let dt = self.cost.step_time(step_tokens);
+            t += dt;
+            stats.steps += 1;
+            stats.token_steps += step_tokens as u64;
+            stats.max_step_tokens = stats.max_step_tokens.max(step_tokens);
+            stats.max_prefill_step_tokens = stats.max_prefill_step_tokens.max(prefill_tokens);
+            // apply prefill progress; a finished prefill emits the first
+            // token in the same step (the engine's prefill step produces
+            // logits for token 1)
+            for &(ai, take) in &prefill_alloc {
+                let j = &mut active[ai].job;
+                j.prefill_left -= take;
+                if j.prefill_left == 0 {
+                    j.generated = 1;
+                    j.first_token = Some(t);
+                }
+            }
+            // apply decode progress to the requests that were decoding
+            // when the step formed
+            for &ai in &decode_idx {
+                let j = &mut active[ai].job;
+                j.generated += 1;
+                if j.first_token.is_none() {
+                    j.first_token = Some(t);
+                }
+            }
+            // retire completions, freeing their KV reservation
+            let mut ai = 0;
+            while ai < active.len() {
+                let j = active[ai].job;
+                if j.prefill_left == 0 && j.generated >= j.req.output_tokens {
+                    kv_used -= j.req.prompt_tokens + j.req.output_tokens;
+                    comps.push(Completion {
+                        id: j.req.id,
+                        arrival: j.req.arrival,
+                        first_token: j.first_token.unwrap_or(t),
+                        finish: t,
+                        output_tokens: j.req.output_tokens,
+                        priority: j.req.priority,
+                    });
+                    active.remove(ai);
+                } else {
+                    ai += 1;
+                }
+            }
+        }
+        assert_eq!(kv_used, 0, "KV occupancy must return to zero when drained");
+        (comps, stats)
+    }
+}
+
+/// Total prefill service time of one prompt on a dedicated prefill node
+/// (chunked policies pay per-chunk launches).
+fn prefill_service(cost: &StepCostModel, policy: SchedPolicy, prompt: usize) -> f64 {
+    match policy {
+        SchedPolicy::ChunkedPrefill { chunk } => {
+            let mut left = prompt;
+            let mut total = 0.0;
+            while left > 0 {
+                let take = left.min(chunk);
+                total += cost.step_time(take);
+                left -= take;
+            }
+            total
+        }
+        _ => cost.step_time(prompt),
+    }
+}
+
+/// Disaggregated prefill/decode over `K ≥ 2` nodes: `⌊K/2⌋` (min 1)
+/// prefill nodes feed the remaining decode nodes; KV crosses the RDMA
+/// fabric and serializes on each decode node's NIC-ingress FIFO.
+fn run_disaggregated(
+    cfg: &ServeCfg,
+    cost: &StepCostModel,
+    eng: &Engine,
+    trace: &[Request],
+) -> (Vec<Completion>, StepStats) {
+    let k = cfg.cluster.num_nodes;
+    debug_assert!(k >= 2);
+    let n_prefill = (k / 2).max(1);
+    let n_decode = k - n_prefill;
+    // --- prefill: a single policy-ordered queue over n_prefill servers
+    let mut free = vec![0.0f64; n_prefill];
+    let mut ready: Vec<usize> = vec![];
+    let mut next = 0usize;
+    let mut pf_end = vec![0.0f64; trace.len()];
+    let mut stats = StepStats::default();
+    let mut dispatched = 0usize;
+    while dispatched < trace.len() {
+        let (srv, tfree) = free
+            .iter()
+            .copied()
+            .enumerate()
+            .fold((0usize, f64::INFINITY), |acc, (i, v)| if v < acc.1 { (i, v) } else { acc });
+        let mut t_now = tfree;
+        if ready.is_empty() {
+            t_now = t_now.max(trace[next].arrival);
+        }
+        while next < trace.len() && trace[next].arrival <= t_now {
+            ready.push(next);
+            next += 1;
+        }
+        debug_assert!(!ready.is_empty());
+        let pick = match eng.policy {
+            SchedPolicy::Priority => {
+                let mut best = 0usize;
+                for (pi, &r) in ready.iter().enumerate() {
+                    let (bp, br) = (trace[ready[best]], trace[r]);
+                    if (br.priority, std::cmp::Reverse(br.id)) > (bp.priority, std::cmp::Reverse(bp.id))
+                    {
+                        best = pi;
+                    }
+                }
+                best
+            }
+            _ => 0, // `ready` is pushed in arrival order
+        };
+        let r = ready.remove(pick);
+        let start = t_now.max(trace[r].arrival);
+        let service = prefill_service(cost, eng.policy, trace[r].prompt_tokens);
+        pf_end[r] = start + service;
+        free[srv] = pf_end[r];
+        stats.steps += 1;
+        stats.token_steps += trace[r].prompt_tokens as u64;
+        let chunked = match eng.policy {
+            SchedPolicy::ChunkedPrefill { chunk } => trace[r].prompt_tokens.min(chunk),
+            _ => trace[r].prompt_tokens,
+        };
+        stats.max_prefill_step_tokens = stats.max_prefill_step_tokens.max(chunked);
+        stats.max_step_tokens = stats.max_step_tokens.max(chunked);
+        dispatched += 1;
+    }
+    // --- KV transfer + decode-node assignment (least-loaded, then FIFO
+    // on the destination NIC ingress)
+    let mut order: Vec<usize> = (0..trace.len()).collect();
+    order.sort_by(|&a, &b| pf_end[a].total_cmp(&pf_end[b]).then(a.cmp(&b)));
+    let mut ingress_free = vec![0.0f64; n_decode];
+    let mut assigned_kv = vec![0usize; n_decode];
+    let mut jobs_per_node: Vec<Vec<Job>> = vec![vec![]; n_decode];
+    let mut comps: Vec<Completion> = vec![];
+    for &r in &order {
+        let req = trace[r];
+        if req.output_tokens <= 1 {
+            // the prefill step already produced the only output token
+            comps.push(Completion {
+                id: req.id,
+                arrival: req.arrival,
+                first_token: pf_end[r],
+                finish: pf_end[r],
+                output_tokens: req.output_tokens,
+                priority: req.priority,
+            });
+            continue;
+        }
+        let kv_bytes = req.prompt_tokens as f64 * cfg.model.kv_bytes_per_token;
+        let chunk = analytic_rdma_chunk(&cfg.cluster, kv_bytes);
+        let rate = curves::rdma_rate(&cfg.cluster, chunk);
+        let xfer = cfg.cluster.nic_latency + kv_bytes / rate;
+        let dn = (0..n_decode).min_by_key(|&d| (assigned_kv[d], d)).expect("n_decode >= 1");
+        ingress_free[dn] = ingress_free[dn].max(pf_end[r]) + xfer;
+        assigned_kv[dn] += req.prompt_tokens + req.output_tokens;
+        jobs_per_node[dn].push(Job {
+            req,
+            ready: ingress_free[dn],
+            prefill_left: 0,
+            generated: 1,
+            first_token: Some(pf_end[r]),
+        });
+    }
+    for jobs in jobs_per_node {
+        let (c, s) = eng.run_node(jobs);
+        comps.extend(c);
+        stats.merge(&s);
+    }
+    (comps, stats)
+}
+
+/// Run the serving engine over a trace with a pre-calibrated cost model
+/// (the exhibit calibrates once per mode and reuses it across rows).
+pub fn run_with_cost(cfg: &ServeCfg, cost: &StepCostModel, trace: &[Request]) -> ServeReport {
+    run_detailed(cfg, cost, trace).0
+}
+
+/// Like [`run_with_cost`] but also returns the per-request completions
+/// (id-sorted) — the protocol tests assert ordering properties on them.
+pub fn run_detailed(
+    cfg: &ServeCfg,
+    cost: &StepCostModel,
+    trace: &[Request],
+) -> (ServeReport, Vec<Completion>) {
+    assert!(!trace.is_empty(), "serve needs a non-empty trace");
+    let eng = Engine {
+        cost,
+        policy: cfg.policy,
+        max_batch_tokens: cfg.max_batch_tokens,
+        kv_capacity_tokens: cfg.kv_capacity_tokens,
+    };
+    let (mut comps, stats) = if cfg.cluster.num_nodes == 1 {
+        let jobs: Vec<Job> = trace
+            .iter()
+            .map(|&req| Job {
+                req,
+                ready: req.arrival,
+                prefill_left: req.prompt_tokens,
+                generated: 0,
+                first_token: None,
+            })
+            .collect();
+        eng.run_node(jobs)
+    } else {
+        run_disaggregated(cfg, cost, &eng, trace)
+    };
+    // protocol invariants: every request completes exactly once
+    assert_eq!(comps.len(), trace.len(), "request lost or duplicated");
+    comps.sort_by_key(|c| c.id);
+    for w in comps.windows(2) {
+        assert_ne!(w[0].id, w[1].id, "duplicate completion id {}", w[0].id);
+    }
+    let latencies: Vec<f64> = comps.iter().map(|c| c.finish - c.arrival).collect();
+    let ttfts: Vec<f64> = comps.iter().map(|c| c.first_token - c.arrival).collect();
+    let duration = comps.iter().map(|c| c.finish).fold(0.0, f64::max);
+    let output_tokens: usize = comps.iter().map(|c| c.output_tokens).sum();
+    let slo_ok = |c: &Completion| {
+        c.finish - c.arrival <= cfg.slo_ttft + c.output_tokens as f64 * cfg.slo_tpot
+    };
+    let met = comps.iter().filter(|c| slo_ok(c)).count();
+    let violator_lat: Vec<f64> =
+        comps.iter().filter(|c| !slo_ok(c)).map(|c| c.finish - c.arrival).collect();
+    let report = ServeReport {
+        n_requests: comps.len(),
+        duration,
+        output_tokens,
+        tokens_per_s: output_tokens as f64 / duration,
+        goodput_rps: met as f64 / duration,
+        latency_p50: percentile(&latencies, 50.0).unwrap_or(0.0),
+        latency_p99: percentile(&latencies, 99.0).unwrap_or(0.0),
+        ttft_p50: percentile(&ttfts, 50.0).unwrap_or(0.0),
+        ttft_p99: percentile(&ttfts, 99.0).unwrap_or(0.0),
+        mean_step_tokens: stats.token_steps as f64 / stats.steps.max(1) as f64,
+        max_step_tokens: stats.max_step_tokens,
+        max_prefill_step_tokens: stats.max_prefill_step_tokens,
+        kv_peak_tokens: stats.kv_peak,
+        slo_violations: comps.len() - met,
+        violator_latency: summarize(&violator_lat),
+    };
+    (report, comps)
+}
+
+/// Calibrate and run (one-shot convenience; see [`run_with_cost`]).
+pub fn run(cfg: &ServeCfg, trace: &[Request]) -> ServeReport {
+    let cost = StepCostModel::calibrate(&cfg.cluster.node, cfg.mode, &cfg.model);
+    run_with_cost(cfg, &cost, trace)
+}
+
+/// Deterministic capacity probe: back-to-back offered load (all arrivals
+/// at t = 0) measures the system's saturation throughput in requests/s;
+/// the load grid of the `vx1` exhibit is expressed as fractions of this.
+pub fn capacity_probe(cfg: &ServeCfg, cost: &StepCostModel, n: usize, seed: u64) -> f64 {
+    let mut trace = generate(&TraceCfg::chat(ArrivalProcess::Poisson, 1.0, n, seed));
+    for r in trace.iter_mut() {
+        r.arrival = 0.0;
+    }
+    let rep = run_with_cost(cfg, cost, &trace);
+    n as f64 / rep.duration
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Cheap hand-built cost model for protocol tests (no DES run).
+    fn toy_cost() -> StepCostModel {
+        StepCostModel { knots: vec![(0.0, 1e-5), (1024.0, 1e-4)], layers: 10 }
+    }
+
+    fn toy_cfg(nodes: usize) -> ServeCfg {
+        ServeCfg::reference(ClusterSpec::hgx_h100_pod(nodes), KernelMode::PkOverlap)
+    }
+
+    fn chat_trace(rate: f64, n: usize, seed: u64) -> Vec<Request> {
+        generate(&TraceCfg::chat(ArrivalProcess::Poisson, rate, n, seed))
+    }
+
+    #[test]
+    fn step_time_interpolates_and_extrapolates() {
+        let c = toy_cost();
+        assert!((c.step_time(0) - 10.0 * 1e-5).abs() < 1e-12);
+        assert!((c.step_time(512) - 10.0 * 5.5e-5).abs() < 1e-12);
+        assert!((c.step_time(1024) - 10.0 * 1e-4).abs() < 1e-12);
+        // linear extrapolation continues the last segment's slope
+        assert!((c.step_time(2048) - 10.0 * 1.9e-4).abs() < 1e-10);
+    }
+
+    #[test]
+    fn calibrated_pk_strictly_beats_nonoverlap_per_step() {
+        let node = NodeSpec::hgx_h100();
+        let model = ModelCfg::reference();
+        let pk = StepCostModel::calibrate(&node, KernelMode::PkOverlap, &model);
+        let base = StepCostModel::calibrate(&node, KernelMode::Nonoverlap, &model);
+        for t in [1usize, 64, 512, 1024, 4096, 16384] {
+            assert!(
+                pk.step_time(t) < base.step_time(t),
+                "PK must be cheaper at {t} tokens: {} vs {}",
+                pk.step_time(t),
+                base.step_time(t)
+            );
+        }
+    }
+
+    #[test]
+    fn colocated_serves_every_request_exactly_once() {
+        let cfg = toy_cfg(1);
+        let trace = chat_trace(200.0, 300, 17);
+        let rep = run_with_cost(&cfg, &toy_cost(), &trace);
+        // the run_with_cost asserts already checked no-loss/no-dup;
+        // sanity-check the derived metrics
+        assert_eq!(rep.n_requests, 300);
+        assert!(rep.duration > 0.0 && rep.duration.is_finite());
+        assert!(rep.tokens_per_s > 0.0);
+        assert_eq!(rep.output_tokens, trace.iter().map(|r| r.output_tokens).sum::<usize>());
+        assert!(rep.kv_peak_tokens <= cfg.kv_capacity_tokens);
+        assert!(rep.latency_p99 >= rep.latency_p50);
+    }
+
+    #[test]
+    fn kv_capacity_gates_admission_but_loses_nothing() {
+        let mut cfg = toy_cfg(1);
+        cfg.kv_capacity_tokens = 6000; // roughly two chat requests
+        let trace = chat_trace(500.0, 120, 5);
+        let rep = run_with_cost(&cfg, &toy_cost(), &trace);
+        assert_eq!(rep.n_requests, 120);
+        assert!(rep.kv_peak_tokens <= 6000, "gate respected: {}", rep.kv_peak_tokens);
+    }
+
+    #[test]
+    fn fcfs_first_tokens_follow_arrival_order() {
+        // strict head-of-line FCFS: first tokens are non-decreasing in
+        // arrival order (the ordering guarantee the Python protocol model
+        // mirrors)
+        let mut cfg = toy_cfg(1);
+        cfg.kv_capacity_tokens = 8192; // force queueing so ordering matters
+        let trace = chat_trace(300.0, 200, 23);
+        let (_, comps) = run_detailed(&cfg, &toy_cost(), &trace);
+        let mut by_arrival = comps.clone();
+        by_arrival.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+        for w in by_arrival.windows(2) {
+            assert!(
+                w[1].first_token >= w[0].first_token - 1e-12,
+                "FCFS order broken: req {} (arr {}) got its first token before req {} (arr {})",
+                w[1].id,
+                w[1].arrival,
+                w[0].id,
+                w[0].arrival
+            );
+        }
+    }
+
+    #[test]
+    fn priority_cuts_high_class_latency_under_overload() {
+        let trace = chat_trace(2000.0, 250, 31); // heavy overload for toy cost
+        assert!(trace.iter().any(|r| r.priority == 1), "trace needs a high class");
+        let mut cfg_prio = toy_cfg(1);
+        cfg_prio.policy = SchedPolicy::Priority;
+        cfg_prio.kv_capacity_tokens = 8192; // force queueing so bypass matters
+        let mut cfg_fcfs = toy_cfg(1);
+        cfg_fcfs.kv_capacity_tokens = 8192;
+        let cost = toy_cost();
+        let hi_mean = |comps: &[Completion]| {
+            let lats: Vec<f64> = comps
+                .iter()
+                .filter(|c| c.priority == 1)
+                .map(|c| c.finish - c.arrival)
+                .collect();
+            summarize(&lats).expect("high class present").mean
+        };
+        let (_, comps_p) = run_detailed(&cfg_prio, &cost, &trace);
+        let (_, comps_f) = run_detailed(&cfg_fcfs, &cost, &trace);
+        assert_eq!(comps_p.len(), comps_f.len(), "priority must not drop requests");
+        assert!(
+            hi_mean(&comps_p) < hi_mean(&comps_f),
+            "priority must cut the high class's latency: {} vs {}",
+            hi_mean(&comps_p),
+            hi_mean(&comps_f)
+        );
+    }
+
+    #[test]
+    fn chunked_prefill_caps_per_step_prefill_tokens() {
+        let mut cfg = toy_cfg(1);
+        cfg.policy = SchedPolicy::ChunkedPrefill { chunk: 256 };
+        let trace = chat_trace(400.0, 150, 41);
+        let rep = run_with_cost(&cfg, &toy_cost(), &trace);
+        assert!(
+            rep.max_prefill_step_tokens <= 256,
+            "chunk cap violated: {}",
+            rep.max_prefill_step_tokens
+        );
+        // plain FCFS admits whole prompts: with 512-token mean prompts the
+        // uncapped engine must exceed the chunk at least once
+        let mut cfg2 = toy_cfg(1);
+        cfg2.policy = SchedPolicy::Fcfs;
+        let rep2 = run_with_cost(&cfg2, &toy_cost(), &trace);
+        assert!(rep2.max_prefill_step_tokens > 256, "{}", rep2.max_prefill_step_tokens);
+    }
+
+    #[test]
+    fn disaggregated_two_nodes_completes_with_kv_transfer_in_ttft() {
+        let cfg = toy_cfg(2);
+        let trace = chat_trace(100.0, 120, 9);
+        let rep = run_with_cost(&cfg, &toy_cost(), &trace);
+        assert_eq!(rep.n_requests, 120);
+        // TTFT must at least cover one prefill service (first token is
+        // produced by the prefill node)
+        let min_prefill = toy_cost().step_time(1);
+        assert!(rep.ttft_p50 >= min_prefill, "{} vs {min_prefill}", rep.ttft_p50);
+        assert!(rep.latency_p50 >= rep.ttft_p50);
+    }
+
+    #[test]
+    fn overload_blows_up_the_tail() {
+        let cfg = toy_cfg(1);
+        let cost = toy_cost();
+        let lo = run_with_cost(&cfg, &cost, &chat_trace(50.0, 200, 3));
+        let hi = run_with_cost(&cfg, &cost, &chat_trace(5000.0, 200, 3));
+        assert!(
+            hi.latency_p99 > lo.latency_p99 * 2.0,
+            "saturation must inflate p99: {} vs {}",
+            hi.latency_p99,
+            lo.latency_p99
+        );
+    }
+
+    #[test]
+    fn capacity_probe_is_positive_and_deterministic() {
+        let cfg = toy_cfg(1);
+        let cost = toy_cost();
+        let a = capacity_probe(&cfg, &cost, 64, 7);
+        let b = capacity_probe(&cfg, &cost, 64, 7);
+        assert!(a > 0.0 && a.is_finite());
+        assert_eq!(a, b);
+    }
+}

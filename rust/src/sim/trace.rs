@@ -1,10 +1,13 @@
 //! Execution traces: per-worker timelines of what the simulator did.
 //!
-//! The trace is the profiling substrate for the performance pass (§Perf in
-//! EXPERIMENTS.md): it reports per-category busy time (compute / comm /
-//! sync / idle), which is how we attribute `T_comp`, `T_comm`,
-//! `T_non-overlap`, and `T_sync` from the paper's cost model (§3.1.1) to a
-//! simulated kernel run.
+//! The trace is the profiling substrate for the performance pass (the
+//! "Perf" section of the repo README): it reports per-category busy time
+//! (compute / comm / sync / launch), which is how we attribute `T_comp`,
+//! `T_comm`, `T_sync`, and `T_launch` from the paper's cost model
+//! (§3.1.1) to a simulated kernel run. `Launch` covers the
+//! launch/teardown delays the executor models as [`crate::plan::Op::Delay`]
+//! spans; idle time is the remainder (`makespan − worker_busy`), not a
+//! recorded span kind.
 
 use std::collections::HashMap;
 
@@ -46,7 +49,10 @@ impl Trace {
         }
     }
 
-    /// Total busy time per kind across all workers.
+    /// Total busy time per kind across all workers. All four [`SpanKind`]s
+    /// are accounted — including [`SpanKind::Launch`], which the timed
+    /// executor records for `Op::Delay` spans; kinds with no spans are
+    /// simply absent from the map.
     pub fn busy_by_kind(&self) -> HashMap<SpanKind, f64> {
         let mut m = HashMap::new();
         for s in &self.spans {
@@ -88,5 +94,21 @@ mod tests {
         assert_eq!(by[&SpanKind::Comm], 5.0);
         assert_eq!(t.worker_busy(0), 3.0);
         assert_eq!(t.makespan(), 4.0);
+    }
+
+    #[test]
+    fn launch_spans_are_accounted_like_any_other_kind() {
+        // the module doc used to omit Launch; pin that busy_by_kind
+        // aggregates it exactly like the other kinds and that absent
+        // kinds stay absent instead of defaulting to 0.0
+        let mut t = Trace::new(true);
+        t.record(0, SpanKind::Launch, "kernel_launch", 0.0, 3.5e-6);
+        t.record(1, SpanKind::Launch, "drain", 1.0, 1.5);
+        t.record(0, SpanKind::Sync, "barrier", 3.5e-6, 1e-3);
+        let by = t.busy_by_kind();
+        assert!((by[&SpanKind::Launch] - (3.5e-6 + 0.5)).abs() < 1e-12);
+        assert!(by.contains_key(&SpanKind::Sync));
+        assert!(!by.contains_key(&SpanKind::Compute), "unrecorded kinds absent");
+        assert!((t.worker_busy(0) - 1e-3).abs() < 1e-12);
     }
 }

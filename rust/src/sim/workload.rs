@@ -1,0 +1,296 @@
+//! Request workloads for the serving layer: open-loop arrival traces.
+//!
+//! The serving exhibits need *offered load* that does not react to the
+//! system (open loop — a saturated server keeps receiving requests, which
+//! is what makes p99 explode past the knee), generated deterministically
+//! from a seed so every sweep point and every CI run sees the same trace.
+//!
+//! Three arrival processes cover the scenarios the ROADMAP asks for:
+//!
+//! * [`ArrivalProcess::Poisson`] — the classic memoryless open-loop load.
+//! * [`ArrivalProcess::Bursty`] — an on/off modulated Poisson process
+//!   (Markov-modulated style): `on_frac` of every `period` runs at
+//!   `burst ×` the base rate, the rest at a compensating lower rate, so
+//!   the *mean* offered load matches the Poisson trace while the
+//!   short-term rate swings.
+//! * [`ArrivalProcess::Diurnal`] — a sinusoidally rate-modulated process
+//!   (traffic follows the sun; `depth` is the peak-to-mean swing).
+//!
+//! Non-homogeneous processes are sampled by thinning (Lewis–Shedler):
+//! candidates arrive at the peak rate and are accepted with probability
+//! `rate(t) / peak`, which keeps the generator exact for any bounded
+//! rate function and deterministic under the seeded [`Rng64`].
+
+/// Deterministic splitmix64 RNG — the same generator family as
+/// [`crate::util::seeded_vec`], kept dependency-free.
+#[derive(Clone, Debug)]
+pub struct Rng64 {
+    state: u64,
+}
+
+impl Rng64 {
+    pub fn new(seed: u64) -> Self {
+        Rng64 { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, 1)` (53 mantissa bits).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Exponential with rate `rate` (mean `1/rate`); inter-arrival times.
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        // 1 - u is in (0, 1], so ln never sees 0
+        -(1.0 - self.next_f64()).ln() / rate
+    }
+}
+
+/// One inference request of the open-loop trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    pub id: usize,
+    /// Absolute arrival time (seconds from trace start).
+    pub arrival: f64,
+    /// Prompt length (prefill tokens).
+    pub prompt_tokens: usize,
+    /// Tokens to generate (decode steps; includes the first token).
+    pub output_tokens: usize,
+    /// Scheduling class: higher wins under [`Priority`] scheduling.
+    ///
+    /// [`Priority`]: crate::sim::serve::SchedPolicy::Priority
+    pub priority: u8,
+}
+
+/// Shape of the arrival process (all share the mean `rate` of
+/// [`TraceCfg`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson arrivals.
+    Poisson,
+    /// On/off modulated Poisson: `on_frac` of each `period` at `burst ×`
+    /// the base rate, the rest at a compensating lower (possibly zero)
+    /// rate. Requires `burst ≥ 1` and `burst · on_frac ≤ 1` so the off
+    /// rate stays non-negative.
+    Bursty { burst: f64, on_frac: f64, period: f64 },
+    /// Sinusoidal modulation `rate · (1 + depth · sin(2πt/period))`,
+    /// `0 ≤ depth < 1`.
+    Diurnal { depth: f64, period: f64 },
+}
+
+impl ArrivalProcess {
+    /// Instantaneous rate multiplier at time `t` (mean 1 over a period).
+    fn modulation(&self, t: f64) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson => 1.0,
+            ArrivalProcess::Bursty { burst, on_frac, period } => {
+                let phase = (t / period).fract();
+                if phase < on_frac {
+                    burst
+                } else {
+                    (1.0 - burst * on_frac) / (1.0 - on_frac)
+                }
+            }
+            ArrivalProcess::Diurnal { depth, period } => {
+                1.0 + depth * (2.0 * std::f64::consts::PI * t / period).sin()
+            }
+        }
+    }
+
+    /// Upper bound of the rate multiplier (the thinning envelope).
+    fn peak(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson => 1.0,
+            ArrivalProcess::Bursty { burst, .. } => burst,
+            ArrivalProcess::Diurnal { depth, .. } => 1.0 + depth,
+        }
+    }
+}
+
+/// Trace generator configuration.
+#[derive(Clone, Debug)]
+pub struct TraceCfg {
+    pub process: ArrivalProcess,
+    /// Mean offered load, requests per second.
+    pub rate: f64,
+    /// Number of requests to generate.
+    pub n_requests: usize,
+    pub seed: u64,
+    /// Mean/max prompt length; lengths are exponential-ish, clamped to
+    /// `[1, prompt_max]`.
+    pub prompt_mean: usize,
+    pub prompt_max: usize,
+    /// Mean/max output length, clamped to `[1, output_max]`.
+    pub output_mean: usize,
+    pub output_max: usize,
+    /// Fraction of requests tagged priority 1 (the rest are 0).
+    pub high_priority_frac: f64,
+}
+
+impl TraceCfg {
+    /// The reference chat-serving mix: 512-token prompts, 128-token
+    /// completions, 10% interactive (high-priority) traffic.
+    pub fn chat(process: ArrivalProcess, rate: f64, n_requests: usize, seed: u64) -> Self {
+        TraceCfg {
+            process,
+            rate,
+            n_requests,
+            seed,
+            prompt_mean: 512,
+            prompt_max: 2048,
+            output_mean: 128,
+            output_max: 512,
+            high_priority_frac: 0.1,
+        }
+    }
+}
+
+/// Sample a clamped-exponential token count with the given mean.
+fn sample_tokens(rng: &mut Rng64, mean: usize, max: usize) -> usize {
+    let x = rng.exp(1.0 / mean as f64);
+    (x.round() as usize).clamp(1, max)
+}
+
+/// Generate the open-loop trace: `n_requests` requests with strictly
+/// non-decreasing arrival times. Deterministic in `cfg.seed`.
+pub fn generate(cfg: &TraceCfg) -> Vec<Request> {
+    assert!(cfg.rate > 0.0, "offered load must be positive");
+    assert!(cfg.prompt_mean >= 1 && cfg.output_mean >= 1);
+    if let ArrivalProcess::Bursty { burst, on_frac, period } = cfg.process {
+        assert!(burst >= 1.0 && period > 0.0, "bursty burst/period");
+        assert!(on_frac > 0.0 && on_frac < 1.0, "bursty on_frac in (0,1)");
+        assert!(burst * on_frac <= 1.0, "off-phase rate would be negative");
+    }
+    if let ArrivalProcess::Diurnal { depth, period } = cfg.process {
+        assert!((0.0..1.0).contains(&depth) && period > 0.0, "diurnal depth/period");
+    }
+    let mut rng = Rng64::new(cfg.seed);
+    let peak = cfg.rate * cfg.process.peak();
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    while out.len() < cfg.n_requests {
+        // thinning: candidate at the peak rate, accept at rate(t)/peak
+        t += rng.exp(peak);
+        let accept = cfg.rate * cfg.process.modulation(t) / peak;
+        if rng.next_f64() >= accept {
+            continue;
+        }
+        let id = out.len();
+        out.push(Request {
+            id,
+            arrival: t,
+            prompt_tokens: sample_tokens(&mut rng, cfg.prompt_mean, cfg.prompt_max),
+            output_tokens: sample_tokens(&mut rng, cfg.output_mean, cfg.output_max),
+            priority: if rng.next_f64() < cfg.high_priority_frac { 1 } else { 0 },
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cv_of_interarrivals(reqs: &[Request]) -> f64 {
+        let gaps: Vec<f64> = reqs.windows(2).map(|w| w[1].arrival - w[0].arrival).collect();
+        let s = crate::util::stats::summarize(&gaps).unwrap();
+        s.std / s.mean
+    }
+
+    #[test]
+    fn deterministic_and_monotone() {
+        let cfg = TraceCfg::chat(ArrivalProcess::Poisson, 100.0, 500, 7);
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a, b, "same seed, same trace");
+        assert_eq!(a.len(), 500);
+        for w in a.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival, "arrivals sorted");
+            assert_eq!(w[1].id, w[0].id + 1, "ids dense");
+        }
+        let c = generate(&TraceCfg { seed: 8, ..cfg });
+        assert_ne!(a, c, "different seed, different trace");
+    }
+
+    #[test]
+    fn poisson_hits_the_offered_rate() {
+        let cfg = TraceCfg::chat(ArrivalProcess::Poisson, 200.0, 4000, 11);
+        let reqs = generate(&cfg);
+        let span = reqs.last().unwrap().arrival;
+        let rate = reqs.len() as f64 / span;
+        assert!((rate - 200.0).abs() / 200.0 < 0.1, "empirical rate {rate}");
+        // memoryless arrivals: coefficient of variation ~ 1
+        let cv = cv_of_interarrivals(&reqs);
+        assert!((cv - 1.0).abs() < 0.15, "poisson CV ~ 1, got {cv}");
+    }
+
+    #[test]
+    fn bursty_preserves_mean_but_raises_variance() {
+        let base = TraceCfg::chat(ArrivalProcess::Poisson, 100.0, 4000, 3);
+        let bursty = TraceCfg {
+            process: ArrivalProcess::Bursty { burst: 4.0, on_frac: 0.2, period: 2.0 },
+            ..base.clone()
+        };
+        let a = generate(&base);
+        let b = generate(&bursty);
+        let ra = a.len() as f64 / a.last().unwrap().arrival;
+        let rb = b.len() as f64 / b.last().unwrap().arrival;
+        assert!((ra - rb).abs() / ra < 0.15, "means match: {ra} vs {rb}");
+        assert!(
+            cv_of_interarrivals(&b) > cv_of_interarrivals(&a) * 1.2,
+            "bursty is burstier: {} vs {}",
+            cv_of_interarrivals(&b),
+            cv_of_interarrivals(&a)
+        );
+    }
+
+    #[test]
+    fn diurnal_modulates_the_rate() {
+        let period = 10.0;
+        let cfg = TraceCfg {
+            process: ArrivalProcess::Diurnal { depth: 0.8, period },
+            ..TraceCfg::chat(ArrivalProcess::Poisson, 100.0, 4000, 5)
+        };
+        let reqs = generate(&cfg);
+        // count arrivals in the rising half vs the falling half of each
+        // period: sin > 0 for phase < 0.5, so the first half must carry
+        // clearly more than half the traffic at depth 0.8
+        let (mut hi, mut lo) = (0usize, 0usize);
+        for r in &reqs {
+            if (r.arrival / period).fract() < 0.5 {
+                hi += 1;
+            } else {
+                lo += 1;
+            }
+        }
+        assert!(
+            hi as f64 > lo as f64 * 1.5,
+            "diurnal peak half must dominate: {hi} vs {lo}"
+        );
+    }
+
+    #[test]
+    fn token_lengths_bounded_and_near_mean() {
+        let cfg = TraceCfg::chat(ArrivalProcess::Poisson, 50.0, 3000, 13);
+        let reqs = generate(&cfg);
+        let pm: f64 =
+            reqs.iter().map(|r| r.prompt_tokens as f64).sum::<f64>() / reqs.len() as f64;
+        let om: f64 =
+            reqs.iter().map(|r| r.output_tokens as f64).sum::<f64>() / reqs.len() as f64;
+        assert!(reqs.iter().all(|r| (1..=2048).contains(&r.prompt_tokens)));
+        assert!(reqs.iter().all(|r| (1..=512).contains(&r.output_tokens)));
+        // clamping pulls the mean slightly below the nominal value
+        assert!((pm - 512.0).abs() / 512.0 < 0.15, "prompt mean {pm}");
+        assert!((om - 128.0).abs() / 128.0 < 0.15, "output mean {om}");
+        let hp = reqs.iter().filter(|r| r.priority == 1).count() as f64 / reqs.len() as f64;
+        assert!((hp - 0.1).abs() < 0.05, "priority mix {hp}");
+    }
+}

@@ -1,4 +1,11 @@
-//! Tiny statistics helpers for the benchmark harness and tuner.
+//! Tiny statistics helpers for the benchmark harness, tuner, and the
+//! serving-layer latency reports.
+//!
+//! All of these are robust to the degenerate inputs the serving exhibits
+//! legitimately produce: empty samples (a latency bucket with no
+//! requests at low load) return `None` instead of panicking, and
+//! non-finite values can never win an argmin (a NaN sweep point used to
+//! silently poison a tuner grid).
 
 /// Summary statistics of a sample.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -10,21 +17,28 @@ pub struct Summary {
     pub std: f64,
 }
 
-/// Compute [`Summary`] over a non-empty sample.
-pub fn summarize(xs: &[f64]) -> Summary {
-    assert!(!xs.is_empty(), "empty sample");
+/// Compute [`Summary`] over a sample; `None` on an empty one (e.g. an
+/// SLO-violator latency bucket with no violators).
+pub fn summarize(xs: &[f64]) -> Option<Summary> {
+    if xs.is_empty() {
+        return None;
+    }
     let n = xs.len();
     let mean = xs.iter().sum::<f64>() / n as f64;
     let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
     let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
     let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
-    Summary { n, mean, min, max, std: var.sqrt() }
+    Some(Summary { n, mean, min, max, std: var.sqrt() })
 }
 
 /// Geometric mean of positive values (used for speedup aggregation,
-/// matching how the paper reports speedup ranges).
-pub fn geomean(xs: &[f64]) -> f64 {
-    assert!(!xs.is_empty());
+/// matching how the paper reports speedup ranges); `None` on an empty
+/// sample. Still asserts positivity — a non-positive speedup is a caller
+/// bug, not a legitimate low-load condition.
+pub fn geomean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
     let log_sum: f64 = xs
         .iter()
         .map(|x| {
@@ -32,13 +46,37 @@ pub fn geomean(xs: &[f64]) -> f64 {
             x.ln()
         })
         .sum();
-    (log_sum / xs.len() as f64).exp()
+    Some((log_sum / xs.len() as f64).exp())
 }
 
-/// Argmin over `(key, value)` pairs; returns the key of the smallest value.
+/// Percentile `q` in `[0, 100]` of a sample, with linear interpolation
+/// between closest ranks (`q = 50` is the median; the convention matches
+/// `numpy.percentile`'s default). Non-finite values are ignored; `None`
+/// when nothing finite remains.
+pub fn percentile(xs: &[f64], q: f64) -> Option<f64> {
+    assert!((0.0..=100.0).contains(&q), "percentile q out of [0, 100]: {q}");
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
+        return None;
+    }
+    v.sort_by(f64::total_cmp);
+    let rank = q / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    Some(v[lo] + (v[hi] - v[lo]) * frac)
+}
+
+/// Argmin over `(key, value)` pairs; returns the key of the smallest
+/// **finite** value. Non-finite values are skipped entirely — under the
+/// old `v >= bv` comparison a NaN after index 0 compared false and
+/// *replaced* the best, so one NaN sweep point silently won the grid.
 pub fn argmin_by<K: Copy>(items: impl IntoIterator<Item = (K, f64)>) -> Option<K> {
     let mut best: Option<(K, f64)> = None;
     for (k, v) in items {
+        if !v.is_finite() {
+            continue;
+        }
         match best {
             Some((_, bv)) if v >= bv => {}
             _ => best = Some((k, v)),
@@ -53,7 +91,7 @@ mod tests {
 
     #[test]
     fn summary_of_constant() {
-        let s = summarize(&[2.0, 2.0, 2.0]);
+        let s = summarize(&[2.0, 2.0, 2.0]).unwrap();
         assert_eq!(s.mean, 2.0);
         assert_eq!(s.std, 0.0);
         assert_eq!(s.min, 2.0);
@@ -62,7 +100,7 @@ mod tests {
 
     #[test]
     fn summary_mixed() {
-        let s = summarize(&[1.0, 3.0]);
+        let s = summarize(&[1.0, 3.0]).unwrap();
         assert_eq!(s.mean, 2.0);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
@@ -70,9 +108,39 @@ mod tests {
     }
 
     #[test]
+    fn summary_and_geomean_of_empty_are_none() {
+        assert_eq!(summarize(&[]), None);
+        assert_eq!(geomean(&[]), None);
+    }
+
+    #[test]
     fn geomean_powers() {
-        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
-        assert!((geomean(&[8.0]) - 8.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 4.0]).unwrap() - 2.0).abs() < 1e-12);
+        assert!((geomean(&[8.0]).unwrap() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_pins_known_samples() {
+        // median of an even-length sample interpolates halfway
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 50.0), Some(2.5));
+        // endpoints are exact
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 0.0), Some(1.0));
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 100.0), Some(4.0));
+        // p99 of 1..=100: rank 98.01 -> 99 + 0.01
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 99.0).unwrap() - 99.01).abs() < 1e-9);
+        // order-independent (sorts internally)
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 50.0), Some(2.0));
+        // single element: every percentile is that element
+        assert_eq!(percentile(&[7.0], 99.0), Some(7.0));
+    }
+
+    #[test]
+    fn percentile_of_empty_or_all_nan_is_none() {
+        assert_eq!(percentile(&[], 50.0), None);
+        assert_eq!(percentile(&[f64::NAN, f64::INFINITY], 50.0), None);
+        // NaN mixed in is ignored, not propagated
+        assert_eq!(percentile(&[f64::NAN, 2.0], 50.0), Some(2.0));
     }
 
     #[test]
@@ -80,5 +148,17 @@ mod tests {
         let r = argmin_by([(1usize, 5.0), (2, 3.0), (3, 4.0)]);
         assert_eq!(r, Some(2));
         assert_eq!(argmin_by(Vec::<(usize, f64)>::new()), None);
+    }
+
+    #[test]
+    fn argmin_skips_non_finite_at_every_position() {
+        // regression: a NaN after index 0 used to *win* (v >= bv is false
+        // for NaN, so the match arm replaced the best)
+        let nan = f64::NAN;
+        assert_eq!(argmin_by([(1usize, nan), (2, 3.0), (3, 4.0)]), Some(2), "NaN at head");
+        assert_eq!(argmin_by([(1usize, 3.0), (2, nan), (3, 4.0)]), Some(1), "NaN in middle");
+        assert_eq!(argmin_by([(1usize, 3.0), (2, 2.0), (3, nan)]), Some(2), "NaN at tail");
+        assert_eq!(argmin_by([(1usize, f64::INFINITY), (2, 5.0)]), Some(2), "inf skipped");
+        assert_eq!(argmin_by([(1usize, nan), (2, nan)]), None, "all non-finite");
     }
 }

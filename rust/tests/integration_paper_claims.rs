@@ -712,3 +712,53 @@ fn claim_gx1_rail_wins_and_analytic_chunk_tracks_swept() {
     }
     assert!(multi_rows >= 2, "gx1 fast mode must cover both kernels multi-node");
 }
+
+#[test]
+fn claim_vx1_pk_overlap_wins_p99_at_saturating_load() {
+    // The serving exhibit in fast mode: the same open-loop trace stepped
+    // on PK-overlapped kernels vs the non-overlapped baseline. At the
+    // saturating load point (1.2x the PK engine's probed capacity) the
+    // cheaper overlapped steps must show up end-to-end: better p99
+    // latency and higher delivered tokens/s, on every node count.
+    let t = run_exhibit("vx1", true).unwrap();
+    assert_eq!(
+        t.columns,
+        vec![
+            "nodes",
+            "load_x",
+            "offered_rps",
+            "pk_tok_s",
+            "base_tok_s",
+            "pk_p50_ms",
+            "base_p50_ms",
+            "pk_p99_ms",
+            "base_p99_ms",
+            "pk_goodput_rps",
+            "base_goodput_rps",
+        ]
+    );
+    let mut saturating_rows = 0;
+    for r in &t.rows {
+        let offered: f64 = r[2].parse().unwrap();
+        let pk_tok: f64 = r[3].parse().unwrap();
+        let base_tok: f64 = r[4].parse().unwrap();
+        let pk_p99: f64 = r[7].parse().unwrap();
+        let base_p99: f64 = r[8].parse().unwrap();
+        assert!(offered > 0.0 && pk_tok > 0.0 && base_tok > 0.0, "degenerate vx1 row: {r:?}");
+        assert!(pk_p99 > 0.0 && base_p99 > 0.0, "degenerate p99: {r:?}");
+        if r[1] == "1.2" {
+            saturating_rows += 1;
+            assert!(
+                pk_p99 < base_p99,
+                "nodes={}: PK must beat non-overlap on p99 at saturating load: {pk_p99} vs {base_p99}",
+                r[0]
+            );
+            assert!(
+                pk_tok >= base_tok,
+                "nodes={}: PK must deliver at least the baseline's tokens/s: {pk_tok} vs {base_tok}",
+                r[0]
+            );
+        }
+    }
+    assert!(saturating_rows >= 2, "vx1 fast mode must cover the saturating load on >= 2 node counts");
+}

@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Validate a BENCH_hotpath snapshot (schema ``pk-hotpath-v1``).
+"""Validate a BENCH_hotpath snapshot (schema ``pk-hotpath-v2``).
 
 CI runs the hotpath bench in ``--smoke`` mode and used to just ``cat`` the
 resulting ``BENCH_hotpath.smoke.json`` — which proved the file existed,
@@ -7,8 +7,8 @@ not that the emitter still wrote anything meaningful. This gate parses the
 snapshot and fails on schema drift or degenerate values:
 
 * wrong/missing ``schema`` tag, or a missing ``sections`` object;
-* any required section absent (e.g. the solver memo-hit rate on the
-  symmetric-kernel section, or the event-throughput metric);
+* any required section absent (e.g. the solver memo-hit rate, the
+  event-throughput metric, or the v2 serving-engine section);
 * non-numeric / non-finite / negative section values;
 * degenerate rates (``event_throughput_per_s == 0`` would mean the DES
   ran no events — a broken bench, not a slow one);
@@ -29,7 +29,7 @@ import json
 import math
 import sys
 
-SCHEMA = "pk-hotpath-v1"
+SCHEMA = "pk-hotpath-v2"
 
 # Section keys the emitter must always write (bench names and derived
 # metrics). Keep in sync with rust/benches/hotpath.rs; the bench-gate
@@ -46,6 +46,9 @@ REQUIRED_SECTIONS = [
     "copy_throughput_gb_s",
     "linalg: 128^3 matmul_accum",
     "tile_math_gflop_s",
+    # v2: the trace-driven serving engine (sim::serve) must be benched
+    "serve: colocated chat trace @ 0.8x capacity",
+    "serve_tokens_per_s",
 ]
 
 # sections that must be strictly positive when present with a value
@@ -53,6 +56,7 @@ POSITIVE_SECTIONS = {
     "event_throughput_per_s",
     "copy_throughput_gb_s",
     "tile_math_gflop_s",
+    "serve_tokens_per_s",
 }
 
 
