@@ -1,0 +1,134 @@
+"""Tests for the CI plan-lint gate (tools/check_lint.py).
+
+The gate consumes ``pk lint --json`` sweeps (schema ``pk-lint-v1``). It
+must accept a healthy all-clean sweep and *demonstrably fail* on every
+seeded defect class — an error-severity finding, a zero-op plan, a
+shrunken registry, schema drift — because a gate that can't fail
+validates nothing (same pattern as test_bench_gate.py).
+
+No third-party imports beyond pytest; runs in any Python 3.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+TOOLS = os.path.join(os.path.dirname(__file__), "..", "..", "tools")
+sys.path.insert(0, os.path.abspath(TOOLS))
+
+from check_lint import DEFAULT_MIN_KERNELS, SCHEMA, check_sweep, main  # noqa: E402
+
+CHECK = os.path.join(os.path.abspath(TOOLS), "check_lint.py")
+
+
+def entry(name, **over):
+    e = {
+        "name": name,
+        "workers": 9,
+        "ops": 120,
+        "sems": 14,
+        "sync_edges": 40,
+        "accesses": 60,
+        "pairs_checked": 35,
+        "rdma_bytes": 0.0,
+        "errors": 0,
+        "warnings": 0,
+        "findings": [],
+    }
+    e.update(over)
+    return e
+
+
+def healthy_sweep(n=DEFAULT_MIN_KERNELS):
+    return {"schema": SCHEMA, "kernels": [entry(f"kernel/{i}") for i in range(n)]}
+
+
+def test_healthy_sweep_passes():
+    assert check_sweep(healthy_sweep()) == []
+
+
+def test_error_finding_fails_and_is_echoed():
+    doc = healthy_sweep()
+    doc["kernels"][3] = entry(
+        "gemm_ar/cluster",
+        errors=1,
+        findings=["error[race] worker 2 'comm' op 7: unordered writes"],
+    )
+    problems = check_sweep(doc)
+    assert any("gemm_ar/cluster: 1 error-severity finding" in p for p in problems)
+    assert any("unordered writes" in p for p in problems)
+
+
+def test_warnings_alone_do_not_fail():
+    doc = healthy_sweep()
+    doc["kernels"][0] = entry(
+        "ag_gemm/functional",
+        warnings=2,
+        findings=["warning[dead-sem] worker 0 'x' op 0: signaled but never waited"],
+    )
+    assert check_sweep(doc) == []
+
+
+def test_zero_op_plan_fails():
+    doc = healthy_sweep()
+    doc["kernels"][1] = entry("moe/cluster", ops=0)
+    assert any("zero ops" in p for p in check_sweep(doc))
+
+
+def test_shrunken_registry_fails():
+    doc = healthy_sweep(n=DEFAULT_MIN_KERNELS - 1)
+    assert any("sweep shrank" in p for p in check_sweep(doc))
+    # an explicitly lowered floor accepts the same sweep
+    assert check_sweep(doc, min_kernels=DEFAULT_MIN_KERNELS - 1) == []
+
+
+def test_schema_drift_fails():
+    doc = healthy_sweep()
+    doc["schema"] = "pk-lint-v0"
+    assert any("schema drift" in p for p in check_sweep(doc))
+
+
+def test_missing_kernels_array_fails():
+    assert any("kernels" in p for p in check_sweep({"schema": SCHEMA}))
+    assert any("kernels" in p for p in check_sweep({"schema": SCHEMA, "kernels": []}))
+
+
+def test_malformed_counter_fails():
+    doc = healthy_sweep()
+    doc["kernels"][2] = entry("coll/all_reduce", sync_edges="lots")
+    assert any("sync_edges" in p for p in check_sweep(doc))
+
+
+def test_main_exit_codes(tmp_path):
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(healthy_sweep()))
+    assert main([str(good)]) == 0
+
+    bad = tmp_path / "bad.json"
+    doc = healthy_sweep()
+    doc["kernels"][0] = entry("gemm/functional", errors=2, findings=["error[deadlock] ..."])
+    bad.write_text(json.dumps(doc))
+    assert main([str(bad)]) == 1
+
+    assert main([]) == 2
+    assert main(["--min-kernels", "x", str(good)]) == 2
+    assert main([str(tmp_path / "missing.json")]) == 1
+
+
+def test_cli_subprocess_fails_on_seeded_bad_plan(tmp_path):
+    # end-to-end: the exact invocation CI uses must exit non-zero when a
+    # seeded-bad sweep document is on disk
+    bad = tmp_path / "seeded.json"
+    doc = healthy_sweep()
+    doc["kernels"][5] = entry(
+        "ring_attention/cluster",
+        errors=1,
+        findings=["error[scope] worker 1 'ring' op 3: downgraded signal"],
+    )
+    bad.write_text(json.dumps(doc))
+    proc = subprocess.run(
+        [sys.executable, CHECK, str(bad)], capture_output=True, text=True
+    )
+    assert proc.returncode == 1
+    assert "scope" in proc.stdout

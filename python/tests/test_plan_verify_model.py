@@ -1,0 +1,303 @@
+"""Executable model of the static plan verifier (rust/src/plan/verify.rs).
+
+Mirrors the happens-before construction and race rule 1:1 on small
+hand-built plans, following the repo's protocol-model convention
+(stdlib-only, no toolchain needed):
+
+- a plan is per-worker straight-line op lists over monotone counting
+  semaphores: ``sig(sem, value)``, ``wait(sem, value)`` (non-consuming,
+  passes when ``sems[sem] >= value``), and ``acc(buf, rows, cols, kind)``
+  compute ops carrying memory accesses;
+- happens-before = program order + *necessity* edges: for each wait,
+  over the increments not already after it, per signalling worker the
+  latest increment without which the remaining total cannot reach the
+  waited value must precede the wait (the same suffix-walk fixpoint the
+  Rust analyzer runs);
+- liveness = count accounting (initial + usable increments >= value)
+  plus Kahn cycle detection over the edge set;
+- a race is a pair of conflicting accesses (write/write, read/write, or
+  different-op reduces) on overlapping rectangles of one buffer with no
+  happens-before path either way.
+
+Each test pins a behavior the Rust unit tests also pin, so a divergence
+localizes to whichever side changed.
+"""
+
+import itertools
+
+
+def sig(sem, value=1):
+    return ("sig", sem, value)
+
+
+def wait(sem, value):
+    return ("wait", sem, value)
+
+
+def acc(buf, rows, cols, kind):
+    """kind: 'r' | 'w' | ('red', op-name)."""
+    return ("acc", buf, tuple(rows), tuple(cols), kind)
+
+
+class Analysis:
+    def __init__(self, workers, sems):
+        self.workers = [list(w) for w in workers]
+        self.sems = list(sems)
+        self.nodes = []  # (wi, oi)
+        self.node_of = {}
+        for wi, w in enumerate(self.workers):
+            for oi in range(len(w)):
+                self.node_of[(wi, oi)] = len(self.nodes)
+                self.nodes.append((wi, oi))
+        self.edges = set()  # (src node, dst node), program + necessity
+        for wi, w in enumerate(self.workers):
+            for oi in range(len(w) - 1):
+                self.edges.add((self.node_of[(wi, oi)], self.node_of[(wi, oi + 1)]))
+        self.findings = []
+        self._fixpoint()
+
+    def op(self, n):
+        wi, oi = self.nodes[n]
+        return self.workers[wi][oi]
+
+    def _reach(self):
+        """reach[a] = set of nodes a can reach (self-inclusive)."""
+        n = len(self.nodes)
+        succ = [[] for _ in range(n)]
+        for a, b in self.edges:
+            succ[a].append(b)
+        reach = [None] * n
+        # reverse-topo accumulation, mirroring the Rust bitset union
+        order, indeg = [], [0] * n
+        for a, b in self.edges:
+            indeg[b] += 1
+        frontier = [i for i in range(n) if indeg[i] == 0]
+        while frontier:
+            i = frontier.pop()
+            order.append(i)
+            for j in succ[i]:
+                indeg[j] -= 1
+                if indeg[j] == 0:
+                    frontier.append(j)
+        if len(order) < n:
+            return None, [i for i in range(n) if reach[i] is None and indeg[i] > 0]
+        for i in reversed(order):
+            r = {i}
+            for j in succ[i]:
+                r |= reach[j]
+            reach[i] = r
+        return reach, []
+
+    def _fixpoint(self):
+        while True:
+            reach, stuck = self._reach()
+            if reach is None:
+                self.findings.append(("deadlock", "cycle", tuple(sorted(stuck))))
+                self.reach = None
+                return
+            added = False
+            for wn, node in enumerate(self.nodes):
+                op = self.op(wn)
+                if op[0] != "wait":
+                    continue
+                _, sem, value = op
+                need = max(0, value - self.sems[sem])
+                if need == 0:
+                    continue
+                # an increment the wait itself happens-before can never
+                # help satisfy it (mirrors `!reaches(wait, inc)` in Rust)
+                usable = [
+                    n
+                    for n in range(len(self.nodes))
+                    if self.op(n)[0] == "sig"
+                    and self.op(n)[1] == sem
+                    and n not in reach[wn]
+                ]
+                total = sum(self.op(n)[2] for n in usable)
+                if total < need:
+                    self.findings.append(("deadlock", "unsat", wn))
+                    continue
+                by_worker = {}
+                for n in usable:
+                    by_worker.setdefault(self.nodes[n][0], []).append(n)
+                for stream in by_worker.values():
+                    stream.sort(key=lambda n: self.nodes[n][1])
+                    suffix = 0
+                    latest = None
+                    for n in reversed(stream):
+                        suffix += self.op(n)[2]
+                        if total - suffix < need:
+                            latest = n
+                            break
+                    if latest is not None and wn not in reach[latest]:
+                        if (latest, wn) not in self.edges:
+                            self.edges.add((latest, wn))
+                            added = True
+            if not added:
+                self.reach = reach
+                return
+
+    def hb(self, a, b):
+        return self.reach is not None and b in self.reach[a]
+
+    def races(self):
+        if self.reach is None:
+            return []
+        accs = [n for n in range(len(self.nodes)) if self.op(n)[0] == "acc"]
+        out = []
+        for a, b in itertools.combinations(accs, 2):
+            oa, ob = self.op(a), self.op(b)
+            if oa[1] != ob[1]:
+                continue
+            if not (_overlap(oa[2], ob[2]) and _overlap(oa[3], ob[3])):
+                continue
+            if not _conflict(oa[4], ob[4]):
+                continue
+            if not (self.hb(a, b) or self.hb(b, a)):
+                out.append((a, b))
+        return out
+
+    def errors(self):
+        return [f for f in self.findings if f[0] == "deadlock"] + [
+            ("race",) + r for r in self.races()
+        ]
+
+
+def _overlap(x, y):
+    return max(x[0], y[0]) < min(x[1], y[1])
+
+
+def _conflict(a, b):
+    if a == "r" and b == "r":
+        return False
+    if isinstance(a, tuple) and isinstance(b, tuple):
+        return a[1] != b[1]  # different-op reduces conflict
+    return True
+
+
+# ---------------------------------------------------------------- tests
+
+
+def test_handshake_orders_the_accesses():
+    # worker 0 writes then signals; worker 1 waits then reads
+    plan = [
+        [acc(0, (0, 4), (0, 4), "w"), sig(0)],
+        [wait(0, 1), acc(0, (0, 4), (0, 4), "r")],
+    ]
+    a = Analysis(plan, sems=[0])
+    assert a.errors() == []
+    assert a.hb(a.node_of[(0, 0)], a.node_of[(1, 1)])
+
+
+def test_missing_wait_is_a_race():
+    plan = [
+        [acc(0, (0, 4), (0, 4), "w"), sig(0)],
+        [acc(0, (0, 4), (0, 4), "r")],
+    ]
+    a = Analysis(plan, sems=[0])
+    assert [f[0] for f in a.errors()] == ["race"]
+
+
+def test_disjoint_rectangles_do_not_race():
+    plan = [
+        [acc(0, (0, 4), (0, 4), "w")],
+        [acc(0, (4, 8), (0, 4), "w")],  # rows disjoint
+        [acc(0, (0, 4), (4, 8), "w")],  # cols disjoint from worker 0
+    ]
+    a = Analysis(plan, sems=[])
+    # workers 1 and 2 overlap in neither dimension pair with 0; 1 vs 2
+    # overlap in neither rows nor cols either
+    assert a.errors() == []
+
+
+def test_hb_is_transitive_through_a_chain():
+    plan = [
+        [acc(0, (0, 4), (0, 4), "w"), sig(0)],
+        [wait(0, 1), sig(1)],
+        [wait(1, 1), acc(0, (0, 4), (0, 4), "w")],
+    ]
+    a = Analysis(plan, sems=[0, 0])
+    assert a.errors() == []
+    assert a.hb(a.node_of[(0, 0)], a.node_of[(2, 1)])
+
+
+def test_unsatisfiable_wait_is_flagged():
+    plan = [[sig(0, 1)], [wait(0, 3)]]
+    a = Analysis(plan, sems=[0])
+    assert ("deadlock", "unsat", a.node_of[(1, 0)]) in a.findings
+
+
+def test_initial_value_counts():
+    plan = [[wait(0, 2)], [sig(0, 1)]]
+    a = Analysis(plan, sems=[1])  # init 1 + one signal = 2
+    assert a.errors() == []
+
+
+def test_cross_worker_wait_cycle_is_a_deadlock():
+    plan = [
+        [wait(0, 1), sig(1)],
+        [wait(1, 1), sig(0)],
+    ]
+    a = Analysis(plan, sems=[0, 0])
+    assert any(f[:2] == ("deadlock", "cycle") for f in a.findings)
+
+
+def test_commuting_reduces_are_clean_mixed_ops_race():
+    clean = [
+        [acc(0, (0, 4), (0, 4), ("red", "add"))],
+        [acc(0, (0, 4), (0, 4), ("red", "add"))],
+    ]
+    assert Analysis(clean, sems=[]).errors() == []
+    mixed = [
+        [acc(0, (0, 4), (0, 4), ("red", "add"))],
+        [acc(0, (0, 4), (0, 4), ("red", "max"))],
+    ]
+    assert [f[0] for f in Analysis(mixed, sems=[]).errors()] == ["race"]
+
+
+def test_latest_necessary_increment_not_the_first():
+    # one signalling worker emits sig;write;sig — a wait for 2 orders the
+    # *second* signal (the latest one without which the count falls
+    # short), so the write before it is ordered too, but a wait for 1
+    # must NOT order the write (any single signal satisfies it)
+    plan = [
+        [sig(0), acc(0, (0, 4), (0, 4), "w"), sig(0)],
+        [wait(0, 2), acc(0, (0, 4), (0, 4), "r")],
+    ]
+    a = Analysis(plan, sems=[0])
+    assert a.errors() == []
+    assert a.hb(a.node_of[(0, 2)], a.node_of[(1, 0)])
+
+    racy = [
+        [sig(0), acc(0, (0, 4), (0, 4), "w"), sig(0)],
+        [wait(0, 1), acc(0, (0, 4), (0, 4), "r")],
+    ]
+    b = Analysis(racy, sems=[0])
+    assert [f[0] for f in b.errors()] == ["race"]
+
+
+def test_barrier_generations_stay_clean():
+    # 3 workers, 2 all-to-all barrier generations on one sem: write phase
+    # 1, barrier to 3, write phase 2 (disjoint), barrier to 6, read all
+    n = 3
+    plan = []
+    for w in range(n):
+        plan.append(
+            [
+                acc(0, (w * 4, w * 4 + 4), (0, 4), "w"),
+                sig(0),
+                wait(0, n),
+                acc(0, (w * 4, w * 4 + 4), (4, 8), "w"),
+                sig(0),
+                wait(0, 2 * n),
+                acc(0, (0, 4 * n), (0, 8), "r"),
+            ]
+        )
+    a = Analysis(plan, sems=[0])
+    assert a.errors() == []
+
+
+def test_zero_value_wait_is_trivially_satisfied():
+    plan = [[wait(0, 0), acc(0, (0, 2), (0, 2), "r")]]
+    a = Analysis(plan, sems=[0])
+    assert a.errors() == []

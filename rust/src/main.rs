@@ -12,6 +12,10 @@
 //!          [--trace poisson|bursty|diurnal] [--requests <n>] [--rate <rps>]
 //!                                                   trace-driven serving sim
 //! pk tune <kernel> --n <size>                       SM-partition auto-tuner
+//! pk lint [--only <substr>] [--json <path>]         static plan verifier over
+//!                                                   the whole kernel zoo; exit
+//!                                                   non-zero on any error-
+//!                                                   severity finding
 //! pk validate                                       functional + PJRT checks
 //! pk info                                           hardware model summary
 //! ```
@@ -247,6 +251,38 @@ fn real_main() -> Result<()> {
                 println!("  comm_sms={c:>3}  {}", pk::util::fmt_time(t));
             }
         }
+        "lint" => {
+            // the CI plan-verification gate: sweep the kernel zoo through
+            // the static analyzer and fail on any error-severity finding
+            let only = opt("--only");
+            let t0 = std::time::Instant::now();
+            let results = pk::report::lint::run_lint(only.as_deref());
+            if results.is_empty() {
+                bail!("lint: no zoo entry matches --only '{}'", only.unwrap_or_default());
+            }
+            println!("{}", pk::report::lint::lint_table(&results).to_markdown());
+            if let Some(path) = opt("--json") {
+                std::fs::write(&path, pk::report::lint::lint_json(&results).to_string())
+                    .with_context(|| format!("cannot write {path}"))?;
+            }
+            let mut errors = 0;
+            let mut warnings = 0;
+            for r in &results {
+                errors += r.report.num_errors();
+                warnings += r.report.num_warnings();
+                for f in &r.report.findings {
+                    eprintln!("  {}: {f}", r.name);
+                }
+            }
+            eprintln!(
+                "lint: {} plan(s) verified in {:.2}s, {errors} error(s), {warnings} warning(s)",
+                results.len(),
+                t0.elapsed().as_secs_f64()
+            );
+            if errors > 0 {
+                bail!("lint FAILED: {errors} error-severity finding(s)");
+            }
+        }
         "validate" => {
             print!("functional gemm+rs ... ");
             validate_gemm_rs();
@@ -277,7 +313,7 @@ fn real_main() -> Result<()> {
             }
         }
         _ => {
-            bail!("usage: pk <figures|run|serve|tune|validate|info> [options]");
+            bail!("usage: pk <figures|run|serve|tune|lint|validate|info> [options]");
         }
     }
     Ok(())

@@ -17,6 +17,21 @@
 //! keeping per-message granularity for the bandwidth curves) to keep event
 //! counts tractable at paper-scale problem sizes; functional plans are
 //! always tile-exact.
+//!
+//! A third consumer is the static analyzer in [`verify`]: it constructs
+//! the happens-before graph of a plan (program order + synchronization
+//! edges from semaphore accounting) and certifies deadlock-freedom,
+//! race-freedom over effect regions, and a battery of lints (view bounds,
+//! effect shapes, signal scopes, RDMA routing/byte conservation). Every
+//! functional test verifies its plan via
+//! [`crate::util::prop::run_functional`] before executing it, and the
+//! `pk lint` subcommand sweeps the whole kernel zoo. The analysis is
+//! *conservative*: it treats mixed-operator reduces as conflicting even
+//! where values happen to commute, and it cannot model value-dependent
+//! waits — a clean report is a proof under those approximations, a
+//! finding is always worth reading but warnings may be intentional.
+
+pub mod verify;
 
 use crate::hw::DeviceId;
 use crate::mem::buffer::BufId;
@@ -95,6 +110,20 @@ impl MatView {
     pub fn sub(&self, row0: usize, col0: usize, rows: usize, cols: usize) -> Self {
         debug_assert!(row0 + rows <= self.rows && col0 + cols <= self.cols);
         MatView { row0: self.row0 + row0, col0: self.col0 + col0, rows, cols, ..*self }
+    }
+
+    /// Checked [`MatView::sub`]: `None` if the sub-rectangle escapes this
+    /// view. Builders keep the unchecked fast path; the verifier (and any
+    /// code handling untrusted plans) uses this so release builds cannot
+    /// silently alias out-of-range views.
+    pub fn try_sub(&self, row0: usize, col0: usize, rows: usize, cols: usize) -> Option<Self> {
+        let row_ok = row0.checked_add(rows).is_some_and(|end| end <= self.rows);
+        let col_ok = col0.checked_add(cols).is_some_and(|end| end <= self.cols);
+        if row_ok && col_ok {
+            Some(MatView { row0: self.row0 + row0, col0: self.col0 + col0, rows, cols, ..*self })
+        } else {
+            None
+        }
     }
 }
 
@@ -267,6 +296,16 @@ mod tests {
     fn matview_sub_bounds_checked() {
         let v = MatView::full2d(BufId(0), 16, 16);
         let _ = v.sub(8, 8, 16, 16);
+    }
+
+    #[test]
+    fn matview_try_sub() {
+        let v = MatView::full2d(BufId(0), 16, 16);
+        let s = v.try_sub(8, 4, 8, 12).expect("in bounds");
+        assert_eq!(s, v.sub(8, 4, 8, 12));
+        assert!(v.try_sub(8, 8, 16, 16).is_none());
+        assert!(v.try_sub(0, 9, 16, 8).is_none());
+        assert!(v.try_sub(usize::MAX, 0, 2, 2).is_none(), "offset overflow is caught");
     }
 
     #[test]

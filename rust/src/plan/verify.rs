@@ -1,0 +1,1547 @@
+//! Static verification of [`Plan`]s: happens-before construction, liveness
+//! checking, a data-race detector over effect regions, and a registry of
+//! lint rules (view bounds, effect shapes, signal scopes, RDMA routing).
+//!
+//! The eight-primitive template (§3.2.2) makes every kernel a set of
+//! straight-line worker programs synchronized only by monotone counting
+//! semaphores, which is exactly the shape a static analysis can certify:
+//!
+//! 1. **Happens-before graph.** Program order within each worker, plus one
+//!    synchronization edge per *necessary* increment: an increment `e` of
+//!    sem `s` must precede `Wait { s, v }` in every satisfying execution
+//!    iff the other usable increments of `s` cannot reach `v` without it
+//!    (an increment is *usable* when the wait does not itself precede it).
+//!    Edges are added to a fixpoint — each edge shrinks downstream usable
+//!    sets, which can make further increments necessary.
+//! 2. **Liveness.** A wait whose usable increments (plus the initial
+//!    value) cannot reach its target can never be passed; a cycle in the
+//!    combined program-order/synchronization graph is a cross-worker
+//!    deadlock. Both report exact worker/op indices.
+//! 3. **Races.** Every pair of effect accesses (read / write / reduce,
+//!    classified per [`Effect`] operand) on overlapping regions of the
+//!    same buffer must be ordered by the happens-before relation — except
+//!    two reads, and two reduces with the same (commuting) operator.
+//!    Attention states are tracked as their own resources.
+//! 4. **Lints.** Views outside their buffer's [`crate::mem::Shape4`]
+//!    (release builds skip the executor's `debug_assert`s), shape-
+//!    mismatched effects, scope downgrades (a wait satisfied only by
+//!    signals whose [`SyncScope`] cannot reach the waiter), semaphores
+//!    signalled but never waited on (warning), RDMA routes that stay
+//!    inside a node or NVLink routes that cross one, and RDMA transfers
+//!    whose claimed NIC bytes undercount their semantic payload.
+//!
+//! **Soundness caveats** (the analysis is conservative, not complete): it
+//! assumes every reduce pair with *different* operators conflicts even
+//! where the values happen to commute, it does not model value-dependent
+//! waits (a `Wait` target is a constant in this IR, so none exist today),
+//! and timed-only plans carry no effects, so only liveness/scope/route
+//! rules apply to them. A clean report therefore certifies deadlock- and
+//! race-freedom for functional plans under the executor semantics of
+//! [`crate::exec::functional`]; it does not certify timing.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::mem::pgl::ReduceOp;
+use crate::mem::{MemPool, ELEM_BYTES};
+
+use super::{Effect, MatView, Op, Plan, Route, SyncScope, TransferSpec};
+
+/// How bad a finding is: errors gate CI and panic `run_functional`;
+/// warnings are advisory (e.g. a broadcast arrival nobody waits on).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+/// Which rule produced a finding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    /// Unsatisfiable wait or cross-worker wait cycle.
+    Deadlock,
+    /// Unordered conflicting accesses to overlapping regions.
+    Race,
+    /// View or row index outside its buffer (or undeclared sem/buffer).
+    Bounds,
+    /// Effect operand shapes inconsistent with the executor's contract.
+    Shape,
+    /// Wait satisfied only by signals of insufficient scope.
+    Scope,
+    /// RDMA route inside a node / NVLink route across nodes / wrong src.
+    RdmaRoute,
+    /// RDMA transfer bytes undercount the semantic payload.
+    RdmaBytes,
+    /// Semaphore signalled but never waited on.
+    DeadSem,
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Rule::Deadlock => "deadlock",
+            Rule::Race => "race",
+            Rule::Bounds => "bounds",
+            Rule::Shape => "shape",
+            Rule::Scope => "scope",
+            Rule::RdmaRoute => "rdma-route",
+            Rule::RdmaBytes => "rdma-bytes",
+            Rule::DeadSem => "dead-sem",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One verifier finding, anchored at a specific worker/op.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: Rule,
+    pub severity: Severity,
+    pub worker: usize,
+    /// The anchoring worker's label (for readable reports).
+    pub label: String,
+    pub op: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        };
+        write!(
+            f,
+            "{sev}[{}] worker {} '{}' op {}: {}",
+            self.rule, self.worker, self.label, self.op, self.msg
+        )
+    }
+}
+
+/// What the verifier examined (reported by `pk lint`).
+#[derive(Clone, Debug, Default)]
+pub struct VerifyStats {
+    pub workers: usize,
+    pub ops: usize,
+    pub sems: usize,
+    /// Synchronization (necessity) edges in the happens-before graph.
+    pub sync_edges: usize,
+    /// Effect accesses extracted for the race detector.
+    pub accesses: usize,
+    /// Conflicting overlapping pairs whose ordering was checked.
+    pub pairs_checked: usize,
+    /// Total bytes routed over RDMA (NIC egress == ingress by construction
+    /// once every transfer's bytes cover its payload — the conservation
+    /// rule is enforced per transfer).
+    pub rdma_bytes: f64,
+}
+
+/// The verifier's output: findings plus coverage stats.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    pub findings: Vec<Finding>,
+    pub stats: VerifyStats,
+}
+
+impl VerifyReport {
+    pub fn num_errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    pub fn num_warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning).count()
+    }
+
+    /// No error-severity findings (warnings are allowed).
+    pub fn is_clean(&self) -> bool {
+        self.num_errors() == 0
+    }
+
+    /// Render every finding, one per line (errors first).
+    pub fn render(&self) -> String {
+        let mut lines: Vec<String> = self
+            .findings
+            .iter()
+            .filter(|f| f.severity == Severity::Error)
+            .map(|f| f.to_string())
+            .collect();
+        lines.extend(
+            self.findings.iter().filter(|f| f.severity == Severity::Warning).map(|f| f.to_string()),
+        );
+        lines.join("\n")
+    }
+
+    /// Panic with a readable report if any error-severity finding exists.
+    pub fn assert_clean(&self, what: &str) {
+        if !self.is_clean() {
+            panic!("plan verification failed for {what}:\n{}", self.render());
+        }
+    }
+}
+
+/// Verification context: a [`MemPool`] enables bounds and multimem-
+/// locality checks (functional plans), and `devices_per_node` enables the
+/// topology-dependent rules (full scope ranking, RDMA routing).
+#[derive(Default)]
+pub struct VerifyCtx<'a> {
+    pub pool: Option<&'a MemPool>,
+    pub devices_per_node: Option<usize>,
+}
+
+impl<'a> VerifyCtx<'a> {
+    /// The context `run_functional` uses: buffers known, topology not.
+    pub fn functional(pool: &'a MemPool) -> Self {
+        VerifyCtx { pool: Some(pool), devices_per_node: None }
+    }
+
+    /// Enable topology-dependent rules.
+    pub fn with_nodes(mut self, devices_per_node: usize) -> Self {
+        self.devices_per_node = Some(devices_per_node);
+        self
+    }
+}
+
+/// Verify `plan` under `ctx`, returning every finding plus coverage stats.
+pub fn verify(plan: &Plan, ctx: &VerifyCtx) -> VerifyReport {
+    let mut a = Analysis::new(plan, ctx);
+    a.collect_sync();
+    a.static_lints();
+    if let Some(reach) = a.hb_fixpoint() {
+        a.wait_accounting(&reach);
+        a.races(&reach);
+    }
+    a.stats.sync_edges = a.sync.iter().map(|s| s.len()).sum();
+    VerifyReport { findings: a.findings, stats: a.stats }
+}
+
+/// Don't flood the report when a single missing wait unorders many pairs.
+const MAX_RACE_FINDINGS: usize = 100;
+
+fn scope_rank(s: SyncScope) -> usize {
+    match s {
+        SyncScope::IntraSm => 0,
+        SyncScope::InterSm => 1,
+        SyncScope::InterDevice => 2,
+        SyncScope::InterNode => 3,
+    }
+}
+
+fn scope_name(rank: usize) -> &'static str {
+    ["IntraSm", "InterSm", "InterDevice", "InterNode"][rank.min(3)]
+}
+
+fn op_label(op: &Op) -> &'static str {
+    match op {
+        Op::Compute { label, .. } | Op::Transfer { label, .. } | Op::Delay { label, .. } => *label,
+        Op::Wait { .. } => "wait",
+        Op::Signal { .. } => "signal",
+    }
+}
+
+/// One semaphore increment (a `Signal` or a transfer's `done_sem` bump).
+#[derive(Clone, Copy)]
+struct Inc {
+    node: usize,
+    worker: usize,
+    value: u64,
+    scope: SyncScope,
+}
+
+#[derive(Clone, Copy)]
+struct Wt {
+    node: usize,
+    worker: usize,
+    sem: usize,
+    value: u64,
+}
+
+/// Row coordinates of an access region (absolute buffer rows).
+#[derive(Clone, Debug)]
+enum RowSet {
+    Range(usize, usize),
+    List(Vec<usize>),
+}
+
+#[derive(Clone, Debug)]
+struct Region {
+    buf: usize,
+    b: usize,
+    d: usize,
+    rows: RowSet,
+    c0: usize,
+    c1: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum AccessKind {
+    Read,
+    Write,
+    Reduce(ReduceOp),
+}
+
+impl fmt::Display for AccessKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AccessKind::Read => f.write_str("read"),
+            AccessKind::Write => f.write_str("write"),
+            AccessKind::Reduce(op) => write!(f, "reduce({op:?})"),
+        }
+    }
+}
+
+struct Access {
+    node: usize,
+    kind: AccessKind,
+    region: Region,
+}
+
+struct StateAccess {
+    node: usize,
+    write: bool,
+    state: usize,
+}
+
+fn region_of(v: &MatView) -> Region {
+    Region {
+        buf: v.buf.0,
+        b: v.b,
+        d: v.d,
+        rows: RowSet::Range(v.row0, v.row0 + v.rows),
+        c0: v.col0,
+        c1: v.col0 + v.cols,
+    }
+}
+
+fn rows_overlap(a: &RowSet, b: &RowSet) -> bool {
+    match (a, b) {
+        (RowSet::Range(a0, a1), RowSet::Range(b0, b1)) => a0.max(b0) < a1.min(b1),
+        (RowSet::Range(a0, a1), RowSet::List(l)) | (RowSet::List(l), RowSet::Range(a0, a1)) => {
+            l.iter().any(|r| a0 <= r && r < a1)
+        }
+        (RowSet::List(x), RowSet::List(y)) => x.iter().any(|r| y.contains(r)),
+    }
+}
+
+fn regions_overlap(a: &Region, b: &Region) -> bool {
+    a.buf == b.buf
+        && a.b == b.b
+        && a.d == b.d
+        && a.c0.max(b.c0) < a.c1.min(b.c1)
+        && rows_overlap(&a.rows, &b.rows)
+}
+
+fn kinds_conflict(a: AccessKind, b: AccessKind) -> bool {
+    match (a, b) {
+        (AccessKind::Read, AccessKind::Read) => false,
+        (AccessKind::Reduce(x), AccessKind::Reduce(y)) => x != y,
+        _ => true,
+    }
+}
+
+/// The write-side element count an RDMA transfer's bytes must cover.
+fn payload_elems(e: &Effect) -> Option<u128> {
+    match e {
+        Effect::CopyMat { dst, .. } => Some(dst.rows as u128 * dst.cols as u128),
+        Effect::GatherRows { rows, dst, .. } => Some(rows.len() as u128 * dst.cols as u128),
+        Effect::ScatterRows { rows, src, .. } => Some(rows.len() as u128 * src.cols as u128),
+        _ => None,
+    }
+}
+
+/// Every view an effect touches (for bounds and locality lints).
+fn effect_views(e: &Effect) -> Vec<MatView> {
+    match e {
+        Effect::CopyMat { src, dst, .. } => vec![*src, *dst],
+        Effect::MulticastMat { src, dsts, .. } => {
+            let mut v = vec![*src];
+            v.extend(dsts.iter().copied());
+            v
+        }
+        Effect::LdReduceMat { srcs, dst, .. } => {
+            let mut v: Vec<MatView> = srcs.to_vec();
+            v.push(*dst);
+            v
+        }
+        Effect::Gemm { a, b, c, .. } => vec![*a, *b, *c],
+        Effect::Gelu { x } => vec![*x],
+        Effect::AttnBlock { q, k, v, .. } => vec![*q, *k, *v],
+        Effect::AttnFinalize { out, .. } => vec![*out],
+        Effect::GatherRows { src, dst, .. } | Effect::ScatterRows { src, dst, .. } => {
+            vec![*src, *dst]
+        }
+        Effect::RunArtifact { inputs, outputs, .. } => {
+            let mut v: Vec<MatView> = inputs.to_vec();
+            v.extend(outputs.iter().copied());
+            v
+        }
+    }
+}
+
+/// Dense reachability over the happens-before graph, self-inclusive.
+struct Reach {
+    words: usize,
+    bits: Vec<u64>,
+}
+
+impl Reach {
+    fn reaches(&self, a: usize, b: usize) -> bool {
+        (self.bits[a * self.words + b / 64] >> (b % 64)) & 1 != 0
+    }
+}
+
+struct Analysis<'a> {
+    plan: &'a Plan,
+    ctx: &'a VerifyCtx<'a>,
+    worker_of: Vec<usize>,
+    op_of: Vec<usize>,
+    n: usize,
+    /// Program-order successor (next op of the same worker).
+    prog_next: Vec<Option<usize>>,
+    /// Necessity (synchronization) edges: `sync[from]` lists `to` nodes.
+    sync: Vec<Vec<usize>>,
+    /// Increments per semaphore, in worker-major program order.
+    incs: Vec<Vec<Inc>>,
+    waits: Vec<Wt>,
+    findings: Vec<Finding>,
+    stats: VerifyStats,
+}
+
+impl<'a> Analysis<'a> {
+    fn new(plan: &'a Plan, ctx: &'a VerifyCtx<'a>) -> Self {
+        let mut worker_of = Vec::new();
+        let mut op_of = Vec::new();
+        let mut n = 0;
+        for (wi, w) in plan.workers.iter().enumerate() {
+            for oi in 0..w.ops.len() {
+                worker_of.push(wi);
+                op_of.push(oi);
+            }
+            n += w.ops.len();
+        }
+        let prog_next = (0..n)
+            .map(|i| if i + 1 < n && worker_of[i + 1] == worker_of[i] { Some(i + 1) } else { None })
+            .collect();
+        let stats = VerifyStats {
+            workers: plan.workers.len(),
+            ops: n,
+            sems: plan.sems.len(),
+            ..Default::default()
+        };
+        Analysis {
+            plan,
+            ctx,
+            worker_of,
+            op_of,
+            n,
+            prog_next,
+            sync: vec![Vec::new(); n],
+            incs: vec![Vec::new(); plan.sems.len()],
+            waits: Vec::new(),
+            findings: Vec::new(),
+            stats,
+        }
+    }
+
+    fn finding(&mut self, rule: Rule, severity: Severity, node: usize, msg: String) {
+        let worker = self.worker_of[node];
+        self.findings.push(Finding {
+            rule,
+            severity,
+            worker,
+            label: self.plan.workers[worker].label.clone(),
+            op: self.op_of[node],
+            msg,
+        });
+    }
+
+    fn coord(&self, node: usize) -> String {
+        let (w, o) = (self.worker_of[node], self.op_of[node]);
+        let op = &self.plan.workers[w].ops[o];
+        format!("worker {} '{}' op {} ({})", w, self.plan.workers[w].label, o, op_label(op))
+    }
+
+    /// Collect semaphore increments and waits; flag undeclared sems.
+    fn collect_sync(&mut self) {
+        enum Evt {
+            Inc { kind: &'static str, sem: usize, value: u64, scope: SyncScope },
+            Wait { sem: usize, value: u64 },
+        }
+        let n_sems = self.plan.sems.len();
+        for node in 0..self.n {
+            let (wi, oi) = (self.worker_of[node], self.op_of[node]);
+            let evt = match &self.plan.workers[wi].ops[oi] {
+                Op::Signal { sem, value, scope } => {
+                    Some(Evt::Inc { kind: "signal", sem: sem.0, value: *value, scope: *scope })
+                }
+                Op::Transfer { done_sem: Some(s), done_scope, .. } => {
+                    Some(Evt::Inc { kind: "done_sem", sem: s.0, value: 1, scope: *done_scope })
+                }
+                Op::Wait { sem, value } => Some(Evt::Wait { sem: sem.0, value: *value }),
+                _ => None,
+            };
+            match evt {
+                Some(Evt::Inc { kind, sem, value, scope }) => {
+                    if sem >= n_sems {
+                        let msg = format!("{kind} references undeclared sem {sem}");
+                        self.finding(Rule::Bounds, Severity::Error, node, msg);
+                    } else {
+                        self.incs[sem].push(Inc { node, worker: wi, value, scope });
+                    }
+                }
+                Some(Evt::Wait { sem, value }) => {
+                    if sem >= n_sems {
+                        let msg = format!("wait references undeclared sem {sem}");
+                        self.finding(Rule::Bounds, Severity::Error, node, msg);
+                    } else {
+                        self.waits.push(Wt { node, worker: wi, sem, value });
+                    }
+                }
+                None => {}
+            }
+        }
+    }
+
+    /// Kahn topo sort + reverse-order bitset union. `Err` carries a sample
+    /// of the nodes stuck on a cycle.
+    fn compute_reach(&self) -> Result<Reach, Vec<usize>> {
+        let n = self.n;
+        let words = n.div_ceil(64).max(1);
+        let mut indeg = vec![0usize; n];
+        for i in 0..n {
+            if let Some(j) = self.prog_next[i] {
+                indeg[j] += 1;
+            }
+            for &j in &self.sync[i] {
+                indeg[j] += 1;
+            }
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut topo = Vec::with_capacity(n);
+        while let Some(i) = queue.pop() {
+            topo.push(i);
+            if let Some(j) = self.prog_next[i] {
+                indeg[j] -= 1;
+                if indeg[j] == 0 {
+                    queue.push(j);
+                }
+            }
+            for &j in &self.sync[i] {
+                indeg[j] -= 1;
+                if indeg[j] == 0 {
+                    queue.push(j);
+                }
+            }
+        }
+        if topo.len() < n {
+            return Err((0..n).filter(|&i| indeg[i] > 0).take(6).collect());
+        }
+        let mut bits = vec![0u64; n * words];
+        for &i in topo.iter().rev() {
+            bits[i * words + i / 64] |= 1u64 << (i % 64);
+            if let Some(j) = self.prog_next[i] {
+                for k in 0..words {
+                    let v = bits[j * words + k];
+                    bits[i * words + k] |= v;
+                }
+            }
+            for &j in &self.sync[i] {
+                for k in 0..words {
+                    let v = bits[j * words + k];
+                    bits[i * words + k] |= v;
+                }
+            }
+        }
+        Ok(Reach { words, bits })
+    }
+
+    /// Increments of `w.sem` that can still fire before the wait passes
+    /// (the wait does not happen-before them). Grouped per worker in
+    /// program order by construction.
+    fn usable_incs(&self, reach: &Reach, w: &Wt) -> Vec<usize> {
+        (0..self.incs[w.sem].len())
+            .filter(|&i| !reach.reaches(w.node, self.incs[w.sem][i].node))
+            .collect()
+    }
+
+    /// Add necessity edges to a fixpoint. Returns the final reachability,
+    /// or `None` after recording a wait-cycle deadlock finding.
+    fn hb_fixpoint(&mut self) -> Option<Reach> {
+        loop {
+            let reach = match self.compute_reach() {
+                Ok(r) => r,
+                Err(cyc) => {
+                    let desc: Vec<String> = cyc.iter().map(|&c| self.coord(c)).collect();
+                    let anchor = cyc[0];
+                    let msg = format!("cross-worker wait cycle among: {}", desc.join("; "));
+                    self.finding(Rule::Deadlock, Severity::Error, anchor, msg);
+                    return None;
+                }
+            };
+            let mut added = false;
+            for wi in 0..self.waits.len() {
+                let w = self.waits[wi];
+                let need = w.value.saturating_sub(self.plan.sems[w.sem]) as u128;
+                if need == 0 {
+                    continue;
+                }
+                let usable = self.usable_incs(&reach, &w);
+                let total: u128 = usable.iter().map(|&i| self.incs[w.sem][i].value as u128).sum();
+                if total < need {
+                    continue; // unsatisfiable — reported by wait_accounting
+                }
+                // Per worker stream, the *latest* increment the wait cannot
+                // do without (dropping it and its program-order successors
+                // leaves < need) must precede the wait in every execution;
+                // earlier stream elements are then ordered transitively.
+                let mut i = 0;
+                while i < usable.len() {
+                    let wk = self.incs[w.sem][usable[i]].worker;
+                    let mut j = i;
+                    while j < usable.len() && self.incs[w.sem][usable[j]].worker == wk {
+                        j += 1;
+                    }
+                    let mut suffix: u128 = 0;
+                    for t in (i..j).rev() {
+                        let inc = self.incs[w.sem][usable[t]];
+                        suffix += inc.value as u128;
+                        if total - suffix < need {
+                            if !reach.reaches(inc.node, w.node) {
+                                self.sync[inc.node].push(w.node);
+                                added = true;
+                            }
+                            break;
+                        }
+                    }
+                    i = j;
+                }
+            }
+            if !added {
+                return Some(reach);
+            }
+        }
+    }
+
+    /// The minimum signal scope for an increment to reach a waiter.
+    fn required_rank(&self, inc_worker: usize, wait_worker: usize) -> usize {
+        if inc_worker == wait_worker {
+            return 0;
+        }
+        let a = self.plan.workers[inc_worker].device.0;
+        let b = self.plan.workers[wait_worker].device.0;
+        if a == b {
+            return 1;
+        }
+        match self.ctx.devices_per_node {
+            Some(p) if p > 0 && a / p != b / p => 3,
+            _ => 2,
+        }
+    }
+
+    /// Liveness (unsatisfiable waits) + scope-downgrade lint.
+    fn wait_accounting(&mut self, reach: &Reach) {
+        for wi in 0..self.waits.len() {
+            let w = self.waits[wi];
+            let init = self.plan.sems[w.sem];
+            let need = w.value.saturating_sub(init) as u128;
+            if need == 0 {
+                continue;
+            }
+            let usable = self.usable_incs(reach, &w);
+            let total: u128 = usable.iter().map(|&i| self.incs[w.sem][i].value as u128).sum();
+            if total < need {
+                let msg = format!(
+                    "wait(sem {}, >= {}) can never pass: initial {} plus at most {} \
+                     from increments not ordered after it",
+                    w.sem, w.value, init, total
+                );
+                self.finding(Rule::Deadlock, Severity::Error, w.node, msg);
+                continue;
+            }
+            let mut scoped: u128 = 0;
+            let mut example: Option<Inc> = None;
+            for &ii in &usable {
+                let inc = self.incs[w.sem][ii];
+                let req = self.required_rank(inc.worker, w.worker);
+                if scope_rank(inc.scope) >= req {
+                    scoped += inc.value as u128;
+                } else if example.is_none() {
+                    example = Some(inc);
+                }
+            }
+            if scoped < need {
+                let inc = example.expect("insufficient scope implies an offending increment");
+                let req = self.required_rank(inc.worker, w.worker);
+                let msg = format!(
+                    "wait(sem {}, >= {}) is only satisfied by downgraded signals: {} \
+                     signals {:?} but {} is required to reach this waiter",
+                    w.sem,
+                    w.value,
+                    self.coord(inc.node),
+                    inc.scope,
+                    scope_name(req)
+                );
+                self.finding(Rule::Scope, Severity::Error, w.node, msg);
+            }
+        }
+    }
+
+    /// Pairwise race check over effect accesses, bucketed per resource.
+    fn races(&mut self, reach: &Reach) {
+        let mut mem: Vec<Access> = Vec::new();
+        let mut states: Vec<StateAccess> = Vec::new();
+        for node in 0..self.n {
+            let (wi, oi) = (self.worker_of[node], self.op_of[node]);
+            let effect = match &self.plan.workers[wi].ops[oi] {
+                Op::Compute { effect, .. } | Op::Transfer { effect, .. } => effect.as_ref(),
+                _ => None,
+            };
+            if let Some(e) = effect {
+                collect_accesses(e, node, &mut mem, &mut states);
+            }
+        }
+        self.stats.accesses = mem.len() + states.len();
+        let mut by_buf: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, a) in mem.iter().enumerate() {
+            by_buf.entry(a.region.buf).or_default().push(i);
+        }
+        let mut races = 0usize;
+        for idxs in by_buf.values() {
+            for (pos, &i) in idxs.iter().enumerate() {
+                for &j in &idxs[pos + 1..] {
+                    let (a, b) = (&mem[i], &mem[j]);
+                    if !kinds_conflict(a.kind, b.kind) || !regions_overlap(&a.region, &b.region) {
+                        continue;
+                    }
+                    self.stats.pairs_checked += 1;
+                    if reach.reaches(a.node, b.node) || reach.reaches(b.node, a.node) {
+                        continue;
+                    }
+                    if races < MAX_RACE_FINDINGS {
+                        let msg = format!(
+                            "unordered conflicting accesses to buf {} (b={}, d={}): \
+                             {} here vs {} at {}",
+                            a.region.buf,
+                            a.region.b,
+                            a.region.d,
+                            a.kind,
+                            b.kind,
+                            self.coord(b.node)
+                        );
+                        self.finding(Rule::Race, Severity::Error, a.node, msg);
+                    }
+                    races += 1;
+                }
+            }
+        }
+        let mut by_state: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, a) in states.iter().enumerate() {
+            by_state.entry(a.state).or_default().push(i);
+        }
+        for idxs in by_state.values() {
+            for (pos, &i) in idxs.iter().enumerate() {
+                for &j in &idxs[pos + 1..] {
+                    let (a, b) = (&states[i], &states[j]);
+                    if !a.write && !b.write {
+                        continue;
+                    }
+                    self.stats.pairs_checked += 1;
+                    if reach.reaches(a.node, b.node) || reach.reaches(b.node, a.node) {
+                        continue;
+                    }
+                    if races < MAX_RACE_FINDINGS {
+                        let msg = format!(
+                            "unordered conflicting accesses to attention state {}: here vs {}",
+                            a.state,
+                            self.coord(b.node)
+                        );
+                        self.finding(Rule::Race, Severity::Error, a.node, msg);
+                    }
+                    races += 1;
+                }
+            }
+        }
+    }
+
+    /// Per-op rules that need no happens-before: bounds, shapes, routes,
+    /// RDMA byte conservation, dead semaphores.
+    fn static_lints(&mut self) {
+        for node in 0..self.n {
+            let (wi, oi) = (self.worker_of[node], self.op_of[node]);
+            enum Kind {
+                Effect(Effect),
+                Xfer(TransferSpec, Option<Effect>),
+            }
+            let kind = match &self.plan.workers[wi].ops[oi] {
+                Op::Compute { effect: Some(e), .. } => Some(Kind::Effect(e.clone())),
+                Op::Transfer { spec, effect, .. } => Some(Kind::Xfer(spec.clone(), effect.clone())),
+                _ => None,
+            };
+            match kind {
+                Some(Kind::Effect(e)) => self.effect_lints(node, &e),
+                Some(Kind::Xfer(spec, effect)) => {
+                    if let Some(e) = &effect {
+                        self.effect_lints(node, e);
+                    }
+                    self.route_lints(node, wi, &spec, effect.as_ref());
+                }
+                None => {}
+            }
+        }
+        self.dead_sems();
+    }
+
+    fn view_lints(&mut self, node: usize, v: &MatView) {
+        let Some(pool) = self.ctx.pool else { return };
+        if v.buf.0 >= pool.len() {
+            let msg =
+                format!("view references buffer {} but the pool holds {}", v.buf.0, pool.len());
+            self.finding(Rule::Bounds, Severity::Error, node, msg);
+            return;
+        }
+        let shape = pool.get(v.buf).shape;
+        if v.b >= shape.b || v.d >= shape.d {
+            let msg = format!(
+                "view plane (b={}, d={}) outside buffer {} shape ({}, {}, {}, {})",
+                v.b, v.d, v.buf.0, shape.b, shape.d, shape.r, shape.c
+            );
+            self.finding(Rule::Bounds, Severity::Error, node, msg);
+        }
+        let parent =
+            MatView { buf: v.buf, b: v.b, d: v.d, row0: 0, col0: 0, rows: shape.r, cols: shape.c };
+        if parent.try_sub(v.row0, v.col0, v.rows, v.cols).is_none() {
+            let msg = format!(
+                "view rows {}..{} cols {}..{} outside buffer {} plane {}x{}",
+                v.row0,
+                v.row0 + v.rows,
+                v.col0,
+                v.col0 + v.cols,
+                v.buf.0,
+                shape.r,
+                shape.c
+            );
+            self.finding(Rule::Bounds, Severity::Error, node, msg);
+        }
+    }
+
+    fn shape_finding(&mut self, node: usize, msg: String) {
+        self.finding(Rule::Shape, Severity::Error, node, msg);
+    }
+
+    fn effect_lints(&mut self, node: usize, e: &Effect) {
+        for v in effect_views(e) {
+            self.view_lints(node, &v);
+        }
+        match e {
+            Effect::CopyMat { src, dst, .. } => {
+                if src.rows != dst.rows || src.cols != dst.cols {
+                    self.shape_finding(
+                        node,
+                        format!(
+                            "CopyMat shape mismatch: src {}x{} vs dst {}x{}",
+                            src.rows, src.cols, dst.rows, dst.cols
+                        ),
+                    );
+                }
+            }
+            Effect::MulticastMat { src, dsts, .. } => {
+                for dv in dsts {
+                    if src.rows != dv.rows || src.cols != dv.cols {
+                        self.shape_finding(
+                            node,
+                            format!(
+                                "MulticastMat shape mismatch: src {}x{} vs dst {}x{}",
+                                src.rows, src.cols, dv.rows, dv.cols
+                            ),
+                        );
+                        break;
+                    }
+                }
+            }
+            Effect::LdReduceMat { srcs, dst, .. } => {
+                for sv in srcs {
+                    if sv.rows != dst.rows || sv.cols != dst.cols {
+                        self.shape_finding(
+                            node,
+                            format!(
+                                "LdReduceMat shape mismatch: src {}x{} vs dst {}x{}",
+                                sv.rows, sv.cols, dst.rows, dst.cols
+                            ),
+                        );
+                        break;
+                    }
+                }
+            }
+            Effect::Gemm { a, b, c, .. } => {
+                if a.cols != b.rows || c.rows != a.rows || c.cols != b.cols {
+                    self.shape_finding(
+                        node,
+                        format!(
+                            "Gemm shape mismatch: a {}x{}, b {}x{}, c {}x{}",
+                            a.rows, a.cols, b.rows, b.cols, c.rows, c.cols
+                        ),
+                    );
+                }
+            }
+            Effect::AttnBlock { q, k, v, .. } => {
+                if q.cols != k.cols || k.rows != v.rows {
+                    self.shape_finding(
+                        node,
+                        format!(
+                            "AttnBlock shape mismatch: q {}x{}, k {}x{}, v {}x{}",
+                            q.rows, q.cols, k.rows, k.cols, v.rows, v.cols
+                        ),
+                    );
+                }
+            }
+            Effect::GatherRows { src, rows, dst } => {
+                if rows.len() != dst.rows || src.cols != dst.cols {
+                    self.shape_finding(
+                        node,
+                        format!(
+                            "GatherRows shape mismatch: {} rows into dst {}x{} (src cols {})",
+                            rows.len(),
+                            dst.rows,
+                            dst.cols,
+                            src.cols
+                        ),
+                    );
+                }
+                if let Some(r) = rows.iter().find(|&&r| r >= src.rows) {
+                    let msg =
+                        format!("GatherRows index {} outside src view of {} rows", r, src.rows);
+                    self.finding(Rule::Bounds, Severity::Error, node, msg);
+                }
+            }
+            Effect::ScatterRows { src, dst, rows, .. } => {
+                if rows.len() != src.rows || src.cols != dst.cols {
+                    self.shape_finding(
+                        node,
+                        format!(
+                            "ScatterRows shape mismatch: {} rows from src {}x{} (dst cols {})",
+                            rows.len(),
+                            src.rows,
+                            src.cols,
+                            dst.cols
+                        ),
+                    );
+                }
+                if let Some(r) = rows.iter().find(|&&r| r >= dst.rows) {
+                    let msg =
+                        format!("ScatterRows index {} outside dst view of {} rows", r, dst.rows);
+                    self.finding(Rule::Bounds, Severity::Error, node, msg);
+                }
+            }
+            Effect::Gelu { .. } | Effect::AttnFinalize { .. } | Effect::RunArtifact { .. } => {}
+        }
+    }
+
+    fn route_lints(
+        &mut self,
+        node: usize,
+        wi: usize,
+        spec: &TransferSpec,
+        effect: Option<&Effect>,
+    ) {
+        if let Route::Rdma { .. } = spec.route {
+            self.stats.rdma_bytes += spec.bytes;
+        }
+        let Some(p) = self.ctx.devices_per_node else { return };
+        if p == 0 {
+            return;
+        }
+        match spec.route {
+            Route::Rdma { src, dst } => {
+                if src.0 / p == dst.0 / p {
+                    let msg = format!(
+                        "RDMA route d{}->d{} stays inside node {} (should be NVLink)",
+                        src.0,
+                        dst.0,
+                        src.0 / p
+                    );
+                    self.finding(Rule::RdmaRoute, Severity::Error, node, msg);
+                }
+                let wd = self.plan.workers[wi].device;
+                if wd != src {
+                    let msg = format!(
+                        "RDMA issued from worker on d{} but the route src is d{}",
+                        wd.0, src.0
+                    );
+                    self.finding(Rule::RdmaRoute, Severity::Error, node, msg);
+                }
+                if let Some(elems) = effect.and_then(payload_elems) {
+                    let payload = elems as f64 * ELEM_BYTES as f64;
+                    if spec.bytes + 0.5 < payload {
+                        let msg = format!(
+                            "RDMA transfer claims {:.0} bytes but its payload is {:.0} \
+                             (NIC accounting would undercount)",
+                            spec.bytes, payload
+                        );
+                        self.finding(Rule::RdmaBytes, Severity::Error, node, msg);
+                    }
+                }
+            }
+            Route::P2p { src, dst } | Route::CopyEngineP2p { src, dst } => {
+                if src.0 / p != dst.0 / p {
+                    let msg = format!(
+                        "NVLink route d{}->d{} crosses nodes {}->{} (should be RDMA)",
+                        src.0,
+                        dst.0,
+                        src.0 / p,
+                        dst.0 / p
+                    );
+                    self.finding(Rule::RdmaRoute, Severity::Error, node, msg);
+                }
+            }
+            Route::Multicast { src } | Route::LdReduce { reader: src } => {
+                if let (Some(pool), Some(e)) = (self.ctx.pool, effect) {
+                    let home = src.0 / p;
+                    for v in effect_views(e) {
+                        if v.buf.0 < pool.len() && pool.get(v.buf).dev.0 / p != home {
+                            let msg = format!(
+                                "multimem effect touches buffer {} on d{} outside node {}",
+                                v.buf.0,
+                                pool.get(v.buf).dev.0,
+                                home
+                            );
+                            self.finding(Rule::RdmaRoute, Severity::Error, node, msg);
+                            break;
+                        }
+                    }
+                }
+            }
+            Route::LocalHbm { .. } => {}
+        }
+    }
+
+    fn dead_sems(&mut self) {
+        let mut waited = vec![false; self.plan.sems.len()];
+        for w in &self.waits {
+            waited[w.sem] = true;
+        }
+        for s in 0..self.plan.sems.len() {
+            if !waited[s] && !self.incs[s].is_empty() {
+                let anchor = self.incs[s][0].node;
+                let msg = format!("sem {s} is signalled but never waited on");
+                self.finding(Rule::DeadSem, Severity::Warning, anchor, msg);
+            }
+        }
+    }
+}
+
+fn collect_accesses(e: &Effect, node: usize, mem: &mut Vec<Access>, states: &mut Vec<StateAccess>) {
+    let push = |mem: &mut Vec<Access>, kind: AccessKind, region: Region| {
+        mem.push(Access { node, kind, region });
+    };
+    let wr_kind = |reduce: &Option<ReduceOp>| match reduce {
+        Some(op) => AccessKind::Reduce(*op),
+        None => AccessKind::Write,
+    };
+    match e {
+        Effect::CopyMat { src, dst, reduce } => {
+            push(mem, AccessKind::Read, region_of(src));
+            push(mem, wr_kind(reduce), region_of(dst));
+        }
+        Effect::MulticastMat { src, dsts, reduce } => {
+            push(mem, AccessKind::Read, region_of(src));
+            for dv in dsts {
+                push(mem, wr_kind(reduce), region_of(dv));
+            }
+        }
+        Effect::LdReduceMat { srcs, dst, .. } => {
+            for sv in srcs {
+                push(mem, AccessKind::Read, region_of(sv));
+            }
+            push(mem, AccessKind::Write, region_of(dst));
+        }
+        Effect::Gemm { a, b, c, accumulate } => {
+            push(mem, AccessKind::Read, region_of(a));
+            push(mem, AccessKind::Read, region_of(b));
+            let kind =
+                if *accumulate { AccessKind::Reduce(ReduceOp::Add) } else { AccessKind::Write };
+            push(mem, kind, region_of(c));
+        }
+        Effect::Gelu { x } => push(mem, AccessKind::Write, region_of(x)),
+        Effect::AttnBlock { q, k, v, state } => {
+            push(mem, AccessKind::Read, region_of(q));
+            push(mem, AccessKind::Read, region_of(k));
+            push(mem, AccessKind::Read, region_of(v));
+            states.push(StateAccess { node, write: true, state: state.0 });
+        }
+        Effect::AttnFinalize { state, out } => {
+            states.push(StateAccess { node, write: false, state: state.0 });
+            push(mem, AccessKind::Write, region_of(out));
+        }
+        Effect::GatherRows { src, rows, dst } => {
+            let read = Region {
+                buf: src.buf.0,
+                b: src.b,
+                d: src.d,
+                rows: RowSet::List(rows.iter().map(|r| src.row0 + r).collect()),
+                c0: src.col0,
+                c1: src.col0 + src.cols,
+            };
+            push(mem, AccessKind::Read, read);
+            push(mem, AccessKind::Write, region_of(dst));
+        }
+        Effect::ScatterRows { src, dst, rows, reduce } => {
+            push(mem, AccessKind::Read, region_of(src));
+            let write = Region {
+                buf: dst.buf.0,
+                b: dst.b,
+                d: dst.d,
+                rows: RowSet::List(rows.iter().map(|r| dst.row0 + r).collect()),
+                c0: dst.col0,
+                c1: dst.col0 + dst.cols,
+            };
+            push(mem, wr_kind(reduce), write);
+        }
+        Effect::RunArtifact { inputs, outputs, .. } => {
+            for v in inputs {
+                push(mem, AccessKind::Read, region_of(v));
+            }
+            for v in outputs {
+                push(mem, AccessKind::Write, region_of(v));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::DeviceId;
+    use crate::mem::buffer::BufId;
+    use crate::mem::tile::Shape4;
+    use crate::plan::{Role, SemId};
+    use crate::xfer::Mechanism;
+
+    fn compute_copy(src: MatView, dst: MatView, reduce: Option<ReduceOp>) -> Op {
+        Op::Compute { dur: 0.0, label: "copy", effect: Some(Effect::CopyMat { src, dst, reduce }) }
+    }
+
+    fn rdma_transfer(src: usize, dst: usize, bytes: f64, effect: Option<Effect>) -> Op {
+        Op::Transfer {
+            spec: TransferSpec {
+                mech: Mechanism::Tma,
+                route: Route::Rdma { src: DeviceId(src), dst: DeviceId(dst) },
+                bytes,
+                msg_bytes: bytes,
+                n_sms: 1.0,
+            },
+            blocking: false,
+            done_sem: None,
+            done_scope: SyncScope::InterNode,
+            label: "rdma",
+            effect,
+        }
+    }
+
+    fn rules(r: &VerifyReport) -> Vec<Rule> {
+        r.findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn clean_handshake_gets_a_sync_edge() {
+        let mut p = Plan::new();
+        let s = p.add_sem(0);
+        let w0 = p.add_worker(DeviceId(0), Role::ComputeSm, "sig");
+        let w1 = p.add_worker(DeviceId(1), Role::ComputeSm, "wait");
+        p.push(w0, Op::Signal { sem: s, value: 1, scope: SyncScope::InterDevice });
+        p.push(w1, Op::Wait { sem: s, value: 1 });
+        let r = verify(&p, &VerifyCtx::default());
+        assert!(r.is_clean(), "{}", r.render());
+        assert_eq!(r.stats.sync_edges, 1);
+        assert_eq!(r.num_warnings(), 0);
+    }
+
+    #[test]
+    fn unsatisfiable_wait_is_flagged() {
+        let mut p = Plan::new();
+        let s = p.add_sem(0);
+        let w0 = p.add_worker(DeviceId(0), Role::ComputeSm, "sig");
+        let w1 = p.add_worker(DeviceId(1), Role::ComputeSm, "wait");
+        p.push(w0, Op::Signal { sem: s, value: 1, scope: SyncScope::InterDevice });
+        p.push(w1, Op::Wait { sem: s, value: 2 });
+        let r = verify(&p, &VerifyCtx::default());
+        assert_eq!(r.num_errors(), 1);
+        assert_eq!(rules(&r), vec![Rule::Deadlock]);
+        assert!(r.findings[0].msg.contains("never pass"), "{}", r.findings[0]);
+        assert_eq!((r.findings[0].worker, r.findings[0].op), (1, 0));
+    }
+
+    #[test]
+    fn cross_worker_wait_cycle_is_flagged() {
+        let mut p = Plan::new();
+        let s0 = p.add_sem(0);
+        let s1 = p.add_sem(0);
+        let w0 = p.add_worker(DeviceId(0), Role::ComputeSm, "a");
+        let w1 = p.add_worker(DeviceId(1), Role::ComputeSm, "b");
+        p.push(w0, Op::Wait { sem: s1, value: 1 });
+        p.push(w0, Op::Signal { sem: s0, value: 1, scope: SyncScope::InterDevice });
+        p.push(w1, Op::Wait { sem: s0, value: 1 });
+        p.push(w1, Op::Signal { sem: s1, value: 1, scope: SyncScope::InterDevice });
+        let r = verify(&p, &VerifyCtx::default());
+        assert!(rules(&r).contains(&Rule::Deadlock), "{}", r.render());
+        assert!(r.findings.iter().any(|f| f.msg.contains("cycle")), "{}", r.render());
+    }
+
+    #[test]
+    fn value_zero_wait_is_trivially_satisfied() {
+        // The MoE Sequential schedule waits `>= 0` on experts with no
+        // routed tokens; that must neither deadlock nor warn.
+        let mut p = Plan::new();
+        let s = p.add_sem(0);
+        let w = p.add_worker(DeviceId(0), Role::ComputeSm, "gemm");
+        p.push(w, Op::Wait { sem: s, value: 0 });
+        let r = verify(&p, &VerifyCtx::default());
+        assert!(r.is_clean() && r.num_warnings() == 0, "{}", r.render());
+    }
+
+    #[test]
+    fn initial_value_counts_toward_waits() {
+        let mut p = Plan::new();
+        let s = p.add_sem(2);
+        let w = p.add_worker(DeviceId(0), Role::ComputeSm, "pipe");
+        p.push(w, Op::Wait { sem: s, value: 2 });
+        let r = verify(&p, &VerifyCtx::default());
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn unordered_conflicting_writes_race() {
+        let mut p = Plan::new();
+        let src = MatView::full2d(BufId(0), 16, 16);
+        let dst = MatView::full2d(BufId(1), 16, 16);
+        let w0 = p.add_worker(DeviceId(0), Role::ComputeSm, "a");
+        let w1 = p.add_worker(DeviceId(1), Role::ComputeSm, "b");
+        p.push(w0, compute_copy(src, dst, None));
+        p.push(w1, compute_copy(src, dst, None));
+        let r = verify(&p, &VerifyCtx::default());
+        assert_eq!(rules(&r), vec![Rule::Race], "{}", r.render());
+        assert_eq!(r.stats.pairs_checked, 1);
+    }
+
+    #[test]
+    fn sync_orders_the_same_writes_clean() {
+        let mut p = Plan::new();
+        let s = p.add_sem(0);
+        let src = MatView::full2d(BufId(0), 16, 16);
+        let dst = MatView::full2d(BufId(1), 16, 16);
+        let w0 = p.add_worker(DeviceId(0), Role::ComputeSm, "a");
+        let w1 = p.add_worker(DeviceId(1), Role::ComputeSm, "b");
+        p.push(w0, compute_copy(src, dst, None));
+        p.push(w0, Op::Signal { sem: s, value: 1, scope: SyncScope::InterDevice });
+        p.push(w1, Op::Wait { sem: s, value: 1 });
+        p.push(w1, compute_copy(src, dst, None));
+        let r = verify(&p, &VerifyCtx::default());
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn hb_is_transitive_through_chains() {
+        // w0 writes X, signals s0; w1 waits s0, signals s1 (never touching
+        // X); w2 waits s1, writes X. Ordering is only transitive.
+        let mut p = Plan::new();
+        let s0 = p.add_sem(0);
+        let s1 = p.add_sem(0);
+        let src = MatView::full2d(BufId(0), 8, 8);
+        let x = MatView::full2d(BufId(1), 8, 8);
+        let w0 = p.add_worker(DeviceId(0), Role::ComputeSm, "w0");
+        let w1 = p.add_worker(DeviceId(1), Role::ComputeSm, "w1");
+        let w2 = p.add_worker(DeviceId(2), Role::ComputeSm, "w2");
+        p.push(w0, compute_copy(src, x, None));
+        p.push(w0, Op::Signal { sem: s0, value: 1, scope: SyncScope::InterDevice });
+        p.push(w1, Op::Wait { sem: s0, value: 1 });
+        p.push(w1, Op::Signal { sem: s1, value: 1, scope: SyncScope::InterDevice });
+        p.push(w2, Op::Wait { sem: s1, value: 1 });
+        p.push(w2, compute_copy(src, x, None));
+        let r = verify(&p, &VerifyCtx::default());
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn disjoint_regions_do_not_race() {
+        let mut p = Plan::new();
+        let src = MatView::full2d(BufId(0), 16, 16);
+        let dst = MatView::full2d(BufId(1), 16, 16);
+        let w0 = p.add_worker(DeviceId(0), Role::ComputeSm, "a");
+        let w1 = p.add_worker(DeviceId(1), Role::ComputeSm, "b");
+        p.push(w0, compute_copy(src.sub(0, 0, 8, 16), dst.sub(0, 0, 8, 16), None));
+        p.push(w1, compute_copy(src.sub(8, 0, 8, 16), dst.sub(8, 0, 8, 16), None));
+        let r = verify(&p, &VerifyCtx::default());
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn commuting_reduces_are_clean_mixed_ops_race() {
+        for (op1, op2, clean) in [
+            (ReduceOp::Add, ReduceOp::Add, true),
+            (ReduceOp::Add, ReduceOp::Max, false),
+        ] {
+            let mut p = Plan::new();
+            let src = MatView::full2d(BufId(0), 16, 16);
+            let dst = MatView::full2d(BufId(1), 16, 16);
+            let w0 = p.add_worker(DeviceId(0), Role::ComputeSm, "a");
+            let w1 = p.add_worker(DeviceId(1), Role::ComputeSm, "b");
+            p.push(w0, compute_copy(src, dst, Some(op1)));
+            p.push(w1, compute_copy(src, dst, Some(op2)));
+            let r = verify(&p, &VerifyCtx::default());
+            assert_eq!(r.is_clean(), clean, "{op1:?}/{op2:?}: {}", r.render());
+        }
+    }
+
+    #[test]
+    fn blocking_transfer_done_sem_counts_as_increment() {
+        // The functional executor bumps done_sem for blocking transfers
+        // too; liveness must credit them.
+        let mut p = Plan::new();
+        let s = p.add_sem(0);
+        let w0 = p.add_worker(DeviceId(0), Role::ComputeSm, "xfer");
+        let w1 = p.add_worker(DeviceId(1), Role::ComputeSm, "wait");
+        p.push(
+            w0,
+            Op::Transfer {
+                spec: TransferSpec {
+                    mech: Mechanism::Tma,
+                    route: Route::P2p { src: DeviceId(0), dst: DeviceId(1) },
+                    bytes: 64.0,
+                    msg_bytes: 64.0,
+                    n_sms: 1.0,
+                },
+                blocking: true,
+                done_sem: Some(s),
+                done_scope: SyncScope::InterDevice,
+                label: "x",
+                effect: None,
+            },
+        );
+        p.push(w1, Op::Wait { sem: s, value: 1 });
+        let r = verify(&p, &VerifyCtx::default());
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn attention_state_accesses_need_ordering() {
+        let mut p = Plan::new();
+        let st = p.add_state();
+        let q = MatView::full2d(BufId(0), 8, 4);
+        let k = MatView::full2d(BufId(1), 8, 4);
+        let v = MatView::full2d(BufId(2), 8, 4);
+        let w0 = p.add_worker(DeviceId(0), Role::ComputeSm, "a");
+        let w1 = p.add_worker(DeviceId(1), Role::ComputeSm, "b");
+        for w in [w0, w1] {
+            p.push(
+                w,
+                Op::Compute {
+                    dur: 0.0,
+                    label: "attn",
+                    effect: Some(Effect::AttnBlock { q, k, v, state: st }),
+                },
+            );
+        }
+        let r = verify(&p, &VerifyCtx::default());
+        assert_eq!(rules(&r), vec![Rule::Race], "{}", r.render());
+    }
+
+    #[test]
+    fn out_of_bounds_view_is_flagged_via_pool() {
+        let mut pool = MemPool::new();
+        let b = pool.alloc(DeviceId(0), Shape4::mat(16, 16));
+        let mut p = Plan::new();
+        let w = p.add_worker(DeviceId(0), Role::ComputeSm, "a");
+        p.push(
+            w,
+            Op::Compute {
+                dur: 0.0,
+                label: "gelu",
+                effect: Some(Effect::Gelu { x: MatView::full2d(b, 16, 32) }),
+            },
+        );
+        let r = verify(&p, &VerifyCtx::functional(&pool));
+        assert_eq!(rules(&r), vec![Rule::Bounds], "{}", r.render());
+    }
+
+    #[test]
+    fn bad_plane_index_is_flagged() {
+        let mut pool = MemPool::new();
+        let b = pool.alloc(DeviceId(0), Shape4 { b: 2, d: 1, r: 8, c: 8 });
+        let mut p = Plan::new();
+        let w = p.add_worker(DeviceId(0), Role::ComputeSm, "a");
+        let bad = MatView { buf: b, b: 2, d: 0, row0: 0, col0: 0, rows: 8, cols: 8 };
+        p.push(w, Op::Compute { dur: 0.0, label: "gelu", effect: Some(Effect::Gelu { x: bad }) });
+        let r = verify(&p, &VerifyCtx::functional(&pool));
+        assert_eq!(rules(&r), vec![Rule::Bounds], "{}", r.render());
+    }
+
+    #[test]
+    fn gemm_shape_mismatch_is_flagged() {
+        let mut p = Plan::new();
+        let w = p.add_worker(DeviceId(0), Role::ComputeSm, "a");
+        p.push(
+            w,
+            Op::Compute {
+                dur: 0.0,
+                label: "gemm",
+                effect: Some(Effect::Gemm {
+                    a: MatView::full2d(BufId(0), 16, 8),
+                    b: MatView::full2d(BufId(1), 16, 16), // a.cols != b.rows
+                    c: MatView::full2d(BufId(2), 16, 16),
+                    accumulate: false,
+                }),
+            },
+        );
+        let r = verify(&p, &VerifyCtx::default());
+        assert_eq!(rules(&r), vec![Rule::Shape], "{}", r.render());
+    }
+
+    #[test]
+    fn gather_row_index_out_of_view_is_flagged() {
+        let mut p = Plan::new();
+        let w = p.add_worker(DeviceId(0), Role::ComputeSm, "a");
+        p.push(
+            w,
+            Op::Compute {
+                dur: 0.0,
+                label: "gather",
+                effect: Some(Effect::GatherRows {
+                    src: MatView::full2d(BufId(0), 16, 4),
+                    rows: vec![3, 20],
+                    dst: MatView::full2d(BufId(1), 2, 4),
+                }),
+            },
+        );
+        let r = verify(&p, &VerifyCtx::default());
+        assert_eq!(rules(&r), vec![Rule::Bounds], "{}", r.render());
+    }
+
+    #[test]
+    fn scope_downgrade_is_flagged() {
+        let mut p = Plan::new();
+        let s = p.add_sem(0);
+        let w0 = p.add_worker(DeviceId(0), Role::ComputeSm, "sig");
+        let w1 = p.add_worker(DeviceId(1), Role::ComputeSm, "wait");
+        p.push(w0, Op::Signal { sem: s, value: 1, scope: SyncScope::IntraSm });
+        p.push(w1, Op::Wait { sem: s, value: 1 });
+        let r = verify(&p, &VerifyCtx::default());
+        assert_eq!(rules(&r), vec![Rule::Scope], "{}", r.render());
+        // cross-node with topology known: InterDevice is still too weak
+        let mut p2 = Plan::new();
+        let s2 = p2.add_sem(0);
+        let a = p2.add_worker(DeviceId(0), Role::ComputeSm, "sig");
+        let b = p2.add_worker(DeviceId(1), Role::ComputeSm, "wait");
+        p2.push(a, Op::Signal { sem: s2, value: 1, scope: SyncScope::InterDevice });
+        p2.push(b, Op::Wait { sem: s2, value: 1 });
+        let r2 = verify(&p2, &VerifyCtx::default().with_nodes(1));
+        assert_eq!(rules(&r2), vec![Rule::Scope], "{}", r2.render());
+        assert!(r2.findings[0].msg.contains("InterNode"), "{}", r2.findings[0]);
+    }
+
+    #[test]
+    fn same_worker_intrasm_signal_is_fine() {
+        let mut p = Plan::new();
+        let s = p.add_sem(0);
+        let w = p.add_worker(DeviceId(0), Role::ComputeSm, "pipe");
+        p.push(w, Op::Signal { sem: s, value: 1, scope: SyncScope::IntraSm });
+        p.push(w, Op::Wait { sem: s, value: 1 });
+        let r = verify(&p, &VerifyCtx::default());
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn dead_sem_is_a_warning_not_an_error() {
+        let mut p = Plan::new();
+        let s = p.add_sem(0);
+        let w = p.add_worker(DeviceId(0), Role::ComputeSm, "sig");
+        p.push(w, Op::Signal { sem: s, value: 1, scope: SyncScope::InterDevice });
+        let r = verify(&p, &VerifyCtx::default());
+        assert!(r.is_clean());
+        assert_eq!(r.num_warnings(), 1);
+        assert_eq!(rules(&r), vec![Rule::DeadSem]);
+    }
+
+    #[test]
+    fn rdma_routing_rules_fire() {
+        // p = 2: d0/d1 share node 0, d2/d3 are node 1.
+        let ctx = VerifyCtx::default().with_nodes(2);
+        let mut p = Plan::new();
+        let w = p.add_worker(DeviceId(0), Role::CommSm, "send");
+        p.push(w, rdma_transfer(0, 1, 64.0, None)); // same node
+        let r = verify(&p, &ctx);
+        assert_eq!(rules(&r), vec![Rule::RdmaRoute], "{}", r.render());
+
+        let mut p2 = Plan::new();
+        let w2 = p2.add_worker(DeviceId(0), Role::CommSm, "send");
+        p2.push(
+            w2,
+            Op::Transfer {
+                spec: TransferSpec {
+                    mech: Mechanism::Tma,
+                    route: Route::P2p { src: DeviceId(0), dst: DeviceId(2) },
+                    bytes: 64.0,
+                    msg_bytes: 64.0,
+                    n_sms: 1.0,
+                },
+                blocking: true,
+                done_sem: None,
+                done_scope: SyncScope::IntraSm,
+                label: "p2p",
+                effect: None,
+            },
+        );
+        let r2 = verify(&p2, &ctx);
+        assert_eq!(rules(&r2), vec![Rule::RdmaRoute], "{}", r2.render());
+
+        // issued from the wrong device
+        let mut p3 = Plan::new();
+        let w3 = p3.add_worker(DeviceId(1), Role::CommSm, "send");
+        p3.push(w3, rdma_transfer(0, 2, 64.0, None));
+        let r3 = verify(&p3, &ctx);
+        assert_eq!(rules(&r3), vec![Rule::RdmaRoute], "{}", r3.render());
+    }
+
+    #[test]
+    fn rdma_byte_undercount_is_flagged() {
+        let ctx = VerifyCtx::default().with_nodes(1);
+        let mut p = Plan::new();
+        let w = p.add_worker(DeviceId(0), Role::CommSm, "send");
+        let eff = Effect::CopyMat {
+            src: MatView::full2d(BufId(0), 16, 16),
+            dst: MatView::full2d(BufId(1), 16, 16),
+            reduce: None,
+        };
+        // payload is 16*16*ELEM_BYTES = 512 bytes; claim only 10
+        p.push(w, rdma_transfer(0, 1, 10.0, Some(eff)));
+        let r = verify(&p, &ctx);
+        assert_eq!(rules(&r), vec![Rule::RdmaBytes], "{}", r.render());
+        assert!(r.stats.rdma_bytes > 0.0);
+    }
+
+    #[test]
+    fn undeclared_sem_is_flagged_not_panicking() {
+        let mut p = Plan::new();
+        let w = p.add_worker(DeviceId(0), Role::ComputeSm, "a");
+        p.push(w, Op::Wait { sem: SemId(7), value: 1 });
+        let r = verify(&p, &VerifyCtx::default());
+        assert_eq!(rules(&r), vec![Rule::Bounds], "{}", r.render());
+    }
+
+    #[test]
+    fn barrier_generations_stay_clean() {
+        // Reused barrier: every worker signals everyone twice, waiting at
+        // n then 2n — the generation pattern of pk::sync::barrier.
+        let n = 3;
+        let mut p = Plan::new();
+        let sems: Vec<_> = (0..n).map(|_| p.add_sem(0)).collect();
+        for d in 0..n {
+            let w = p.add_worker(DeviceId(d), Role::ComputeSm, format!("w{d}"));
+            for generation in 1..=2u64 {
+                for s in &sems {
+                    p.push(w, Op::Signal { sem: *s, value: 1, scope: SyncScope::InterDevice });
+                }
+                p.push(w, Op::Wait { sem: sems[d], value: generation * n as u64 });
+            }
+        }
+        let r = verify(&p, &VerifyCtx::default());
+        assert!(r.is_clean(), "{}", r.render());
+    }
+}

@@ -1,0 +1,627 @@
+//! The `pk lint` sweep: run the static plan verifier
+//! ([`crate::plan::verify`]) over every kernel in the zoo — each
+//! `build`/`build_cluster` variant on representative 1-node and
+//! multi-node `ClusterSpec`s, in both functional (buffers allocated,
+//! bounds checked) and timed (effect-free) modes — and report a
+//! per-kernel table of what was checked plus a machine-readable JSON
+//! document for the CI gate (`tools/check_lint.py`, schema
+//! `pk-lint-v1`).
+//!
+//! Configurations mirror the kernels' own functional tests: small shapes
+//! that exercise every code path (rail flows, forwarders, multimem,
+//! credit loops) while keeping each plan a few hundred ops, so the whole
+//! sweep verifies in well under a second.
+
+use crate::hw::{ClusterSpec, DeviceId, NodeSpec};
+use crate::kernels::ag_gemm::AgGemmBufs;
+use crate::kernels::collectives::{
+    a2a_cluster_stage, hier_all_gather, hier_all_reduce, hier_reduce_scatter, pk_all_gather,
+    pk_all_reduce, pk_all_to_all_4d, pk_all_to_all_4d_cluster, pk_reduce_scatter, A2aCfg, Axis,
+    ClusterCollCtx, PkCollCtx,
+};
+use crate::kernels::gemm::GemmBufs;
+use crate::kernels::gemm_ar::GemmArBufs;
+use crate::kernels::gemm_rs::{GemmRsBufs, Schedule};
+use crate::kernels::moe::{MoeBufs, MoeCfg, MoeClusterBufs, MoeCombineBufs, MoeSchedule, Routing};
+use crate::kernels::ring_attention::{ClusterRingAttnCfg, RingAttnBufs, RingAttnCfg};
+use crate::kernels::ulysses::{UlyssesBufs, UlyssesCfg};
+use crate::kernels::{ag_gemm, gemm, gemm_ar, gemm_rs, moe, ring_attention, ulysses, GemmKernelCfg};
+use crate::mem::{MemPool, Shape4};
+use crate::pk::rail::DEFAULT_RDMA_CHUNK;
+use crate::pk::template::LcscOpts;
+use crate::plan::verify::{verify, VerifyCtx, VerifyReport};
+use crate::plan::{MatView, Plan};
+use crate::report::Table;
+use crate::util::json::{obj, Json};
+
+/// One verified zoo entry.
+pub struct LintResult {
+    pub name: &'static str,
+    pub report: VerifyReport,
+}
+
+fn check(plan: &Plan, pool: Option<&MemPool>, devices_per_node: usize) -> VerifyReport {
+    let ctx = VerifyCtx { pool, devices_per_node: Some(devices_per_node) };
+    verify(plan, &ctx)
+}
+
+fn full_views(bufs: &[crate::mem::BufId], rows: usize, cols: usize) -> Vec<MatView> {
+    bufs.iter().map(|&b| MatView::full2d(b, rows, cols)).collect()
+}
+
+type Builder = Box<dyn FnOnce() -> VerifyReport>;
+
+fn gemm_cfg_fn(n_dev: usize, m: usize, n: usize, k: usize) -> GemmKernelCfg {
+    GemmKernelCfg::functional(NodeSpec::test_node(n_dev), m, n, k)
+}
+
+fn ring_cfg() -> RingAttnCfg {
+    RingAttnCfg {
+        node: NodeSpec::test_node(4),
+        b: 2,
+        h: 2,
+        s: 32,
+        d: 8,
+        opts: LcscOpts {
+            num_comm_sms: 4,
+            workers_per_device: 2,
+            comm_workers_per_device: 1,
+            pipeline_stages: 2,
+        },
+        flash_util: 0.75,
+    }
+}
+
+fn ring_cluster_cfg() -> ClusterRingAttnCfg {
+    ClusterRingAttnCfg {
+        cluster: ClusterSpec::test_cluster(2, 2),
+        b: 2,
+        h: 2,
+        s: 32,
+        d: 8,
+        opts: LcscOpts {
+            num_comm_sms: 4,
+            workers_per_device: 2,
+            comm_workers_per_device: 1,
+            pipeline_stages: 2,
+        },
+        flash_util: 0.75,
+    }
+}
+
+fn ulysses_cfg() -> UlyssesCfg {
+    UlyssesCfg { node: NodeSpec::test_node(2), b: 2, h: 4, s: 8, d: 4, flash_util: 0.75 }
+}
+
+fn moe_cfg(n_dev: usize) -> MoeCfg {
+    MoeCfg {
+        node: NodeSpec::test_node(n_dev),
+        tokens: n_dev * 6,
+        hidden: 8,
+        h_expert: 4,
+        n_experts: n_dev * 2,
+        top_k: 2,
+        comm_sms: 8,
+        rdma_chunk: DEFAULT_RDMA_CHUNK,
+    }
+}
+
+/// Cluster MoE config: `p` devices per node, `k` nodes.
+fn moe_cluster_cfg(k: usize, p: usize) -> (MoeCfg, ClusterSpec) {
+    let cluster = ClusterSpec::test_cluster(k, p);
+    let n = k * p;
+    let cfg = MoeCfg {
+        node: NodeSpec::test_node(p),
+        tokens: n * 6,
+        hidden: 8,
+        h_expert: 4,
+        n_experts: n * 2,
+        top_k: 2,
+        comm_sms: 8,
+        rdma_chunk: DEFAULT_RDMA_CHUNK,
+    };
+    (cfg, cluster)
+}
+
+/// The full registry: every kernel's build/build_cluster variants, both
+/// functional (pool + bounds checks) and timed (effect-free) where the
+/// builder supports it.
+#[allow(clippy::too_many_lines, clippy::vec_init_then_push)]
+fn registry() -> Vec<(&'static str, Builder)> {
+    let mut v: Vec<(&'static str, Builder)> = Vec::new();
+
+    v.push((
+        "gemm/functional",
+        Box::new(|| {
+            let cfg = gemm_cfg_fn(2, 32, 32, 48);
+            let mut pool = MemPool::new();
+            let bufs = GemmBufs::alloc(&mut pool, &cfg);
+            let plan = gemm::build(&cfg, Some(&bufs));
+            check(&plan, Some(&pool), 2)
+        }),
+    ));
+    v.push((
+        "gemm/timed",
+        Box::new(|| {
+            let cfg = gemm_cfg_fn(2, 32, 32, 48);
+            let plan = gemm::build(&cfg, None);
+            check(&plan, None, 2)
+        }),
+    ));
+
+    for (name, schedule) in
+        [("gemm_rs/intra-sm", Schedule::IntraSm), ("gemm_rs/inter-sm", Schedule::InterSm)]
+    {
+        v.push((
+            name,
+            Box::new(move || {
+                let mut cfg = gemm_cfg_fn(4, 64, 32, 24);
+                if schedule == Schedule::InterSm {
+                    cfg.opts.num_comm_sms = 8;
+                }
+                let mut pool = MemPool::new();
+                let bufs = GemmRsBufs::alloc(&mut pool, &cfg);
+                let plan = gemm_rs::build(&cfg, schedule, Some(&bufs));
+                check(&plan, Some(&pool), 4)
+            }),
+        ));
+    }
+    v.push((
+        "gemm_rs/cluster",
+        Box::new(|| {
+            let cluster = ClusterSpec::test_cluster(2, 2);
+            let cfg = GemmKernelCfg::functional(cluster.node.clone(), 64, 32, 24);
+            let mut pool = MemPool::new();
+            let bufs = GemmRsBufs::alloc_cluster(&mut pool, &cfg, &cluster);
+            let plan = gemm_rs::build_cluster(&cfg, &cluster, Schedule::IntraSm, Some(&bufs));
+            check(&plan, Some(&pool), cluster.devices_per_node())
+        }),
+    ));
+    v.push((
+        "gemm_rs/cluster-timed",
+        Box::new(|| {
+            let cluster = ClusterSpec::test_cluster(2, 2);
+            let cfg = GemmKernelCfg::functional(cluster.node.clone(), 64, 32, 24);
+            let plan = gemm_rs::build_cluster(&cfg, &cluster, Schedule::IntraSm, None);
+            check(&plan, None, cluster.devices_per_node())
+        }),
+    ));
+
+    for (name, schedule) in
+        [("gemm_ar/intra-sm", Schedule::IntraSm), ("gemm_ar/inter-sm", Schedule::InterSm)]
+    {
+        v.push((
+            name,
+            Box::new(move || {
+                let mut cfg = gemm_cfg_fn(4, 64, 32, 16);
+                cfg.opts.num_comm_sms = if schedule == Schedule::InterSm { 8 } else { 0 };
+                let mut pool = MemPool::new();
+                let bufs = GemmArBufs::alloc(&mut pool, &cfg);
+                let plan = gemm_ar::build(&cfg, schedule, Some(&bufs));
+                check(&plan, Some(&pool), 4)
+            }),
+        ));
+    }
+    for (name, schedule) in [
+        ("gemm_ar/cluster-intra-sm", Schedule::IntraSm),
+        ("gemm_ar/cluster-inter-sm", Schedule::InterSm),
+    ] {
+        v.push((
+            name,
+            Box::new(move || {
+                let cluster = ClusterSpec::test_cluster(2, 2);
+                let mut cfg = GemmKernelCfg::functional(cluster.node.clone(), 64, 32, 24);
+                if schedule == Schedule::InterSm {
+                    cfg.opts.num_comm_sms = 8;
+                }
+                let mut pool = MemPool::new();
+                let bufs = GemmArBufs::alloc_cluster(&mut pool, &cfg, &cluster);
+                let plan = gemm_ar::build_cluster(&cfg, &cluster, schedule, Some(&bufs));
+                check(&plan, Some(&pool), cluster.devices_per_node())
+            }),
+        ));
+    }
+    v.push((
+        "gemm_ar/cluster-timed",
+        Box::new(|| {
+            let cluster = ClusterSpec::test_cluster(2, 2);
+            let cfg = GemmKernelCfg::functional(cluster.node.clone(), 64, 32, 24);
+            let plan = gemm_ar::build_cluster(&cfg, &cluster, Schedule::IntraSm, None);
+            check(&plan, None, cluster.devices_per_node())
+        }),
+    ));
+
+    v.push((
+        "ag_gemm/functional",
+        Box::new(|| {
+            let mut cfg = gemm_cfg_fn(4, 64, 32, 24);
+            cfg.opts.num_comm_sms = 8;
+            let mut pool = MemPool::new();
+            let bufs = AgGemmBufs::alloc(&mut pool, &cfg);
+            let plan = ag_gemm::build(&cfg, Some(&bufs));
+            check(&plan, Some(&pool), 4)
+        }),
+    ));
+    v.push((
+        "ag_gemm/cluster",
+        Box::new(|| {
+            let cluster = ClusterSpec::test_cluster(2, 2);
+            let mut cfg = GemmKernelCfg::functional(cluster.node.clone(), 64, 32, 24);
+            cfg.opts.num_comm_sms = 8;
+            let mut pool = MemPool::new();
+            let bufs = AgGemmBufs::alloc_cluster(&mut pool, &cfg, &cluster);
+            let plan = ag_gemm::build_cluster(&cfg, &cluster, Some(&bufs));
+            check(&plan, Some(&pool), cluster.devices_per_node())
+        }),
+    ));
+    v.push((
+        "ag_gemm/cluster-timed",
+        Box::new(|| {
+            let cluster = ClusterSpec::test_cluster(2, 2);
+            let mut cfg = GemmKernelCfg::functional(cluster.node.clone(), 64, 32, 24);
+            cfg.opts.num_comm_sms = 8;
+            let plan = ag_gemm::build_cluster(&cfg, &cluster, None);
+            check(&plan, None, cluster.devices_per_node())
+        }),
+    ));
+
+    v.push((
+        "ring_attention/functional",
+        Box::new(|| {
+            let cfg = ring_cfg();
+            let mut pool = MemPool::new();
+            let bufs = RingAttnBufs::alloc(&mut pool, &cfg);
+            let plan = ring_attention::build(&cfg, Some(&bufs));
+            check(&plan, Some(&pool), 4)
+        }),
+    ));
+    v.push((
+        "ring_attention/cluster",
+        Box::new(|| {
+            let cfg = ring_cluster_cfg();
+            let mut pool = MemPool::new();
+            let bufs = RingAttnBufs::alloc_cluster(&mut pool, &cfg);
+            let plan = ring_attention::build_cluster(&cfg, Some(&bufs));
+            check(&plan, Some(&pool), cfg.cluster.devices_per_node())
+        }),
+    ));
+    v.push((
+        "ring_attention/cluster-timed",
+        Box::new(|| {
+            let cfg = ring_cluster_cfg();
+            let plan = ring_attention::build_cluster(&cfg, None);
+            check(&plan, None, cfg.cluster.devices_per_node())
+        }),
+    ));
+
+    v.push((
+        "ulysses/functional",
+        Box::new(|| {
+            let cfg = ulysses_cfg();
+            let mut pool = MemPool::new();
+            let bufs = UlyssesBufs::alloc(&mut pool, &cfg);
+            let plan = ulysses::build(&cfg, Some(&bufs));
+            check(&plan, Some(&pool), 2)
+        }),
+    ));
+    v.push((
+        "ulysses/cluster-timed",
+        Box::new(|| {
+            let cluster = ClusterSpec::test_cluster(2, 2);
+            let cfg = ulysses_cfg();
+            let plan = ulysses::build_cluster(&cfg, &cluster);
+            check(&plan, None, cluster.devices_per_node())
+        }),
+    ));
+
+    v.push((
+        "moe/overlapped",
+        Box::new(|| {
+            let cfg = moe_cfg(4);
+            let routing = Routing::uniform(&cfg, 7);
+            let mut pool = MemPool::new();
+            let bufs = MoeBufs::alloc(&mut pool, &cfg, &routing);
+            let plan = moe::build(&cfg, &routing, MoeSchedule::Overlapped, Some(&bufs));
+            check(&plan, Some(&pool), 4)
+        }),
+    ));
+    // the Sequential schedule has no functional-test coverage with
+    // buffers, so verify its sync structure in timed (effect-free) mode
+    v.push((
+        "moe/sequential-timed",
+        Box::new(|| {
+            let cfg = moe_cfg(4);
+            let routing = Routing::uniform(&cfg, 7);
+            let plan = moe::build(&cfg, &routing, MoeSchedule::Sequential, None);
+            check(&plan, None, 4)
+        }),
+    ));
+    v.push((
+        "moe/cluster",
+        Box::new(|| {
+            let (cfg, cluster) = moe_cluster_cfg(2, 2);
+            let routing = Routing::uniform(&cfg, 17);
+            let mut pool = MemPool::new();
+            let bufs = MoeClusterBufs::alloc(&mut pool, &cfg, &cluster, &routing);
+            let plan =
+                moe::build_cluster(&cfg, &cluster, &routing, MoeSchedule::Overlapped, Some(&bufs));
+            check(&plan, Some(&pool), cluster.devices_per_node())
+        }),
+    ));
+    v.push((
+        "moe/cluster-layer",
+        Box::new(|| {
+            let (cfg, cluster) = moe_cluster_cfg(2, 2);
+            let routing = Routing::uniform(&cfg, 31);
+            let mut pool = MemPool::new();
+            let bufs = MoeClusterBufs::alloc(&mut pool, &cfg, &cluster, &routing);
+            let comb = MoeCombineBufs::alloc(&mut pool, &cfg, &cluster, &routing);
+            let plan = moe::build_cluster_layer(
+                &cfg,
+                &cluster,
+                &routing,
+                MoeSchedule::Overlapped,
+                Some((&bufs, &comb)),
+            );
+            check(&plan, Some(&pool), cluster.devices_per_node())
+        }),
+    ));
+    v.push((
+        "moe/cluster-timed",
+        Box::new(|| {
+            let (cfg, cluster) = moe_cluster_cfg(2, 2);
+            let routing = Routing::uniform(&cfg, 17);
+            let plan = moe::build_cluster(&cfg, &cluster, &routing, MoeSchedule::Overlapped, None);
+            check(&plan, None, cluster.devices_per_node())
+        }),
+    ));
+
+    v.push((
+        "coll/all_reduce",
+        Box::new(|| {
+            let n = 8;
+            let (rows, cols) = (n * 2, 4);
+            let node = NodeSpec::test_node(n);
+            let mut pool = MemPool::new();
+            let bufs: Vec<_> =
+                (0..n).map(|d| pool.alloc(DeviceId(d), Shape4::mat(rows, cols))).collect();
+            let ctx = PkCollCtx::new(&node, full_views(&bufs, rows, cols));
+            let mut plan = Plan::new();
+            pk_all_reduce(&mut plan, &ctx);
+            check(&plan, Some(&pool), n)
+        }),
+    ));
+    v.push((
+        "coll/all_gather",
+        Box::new(|| {
+            let n = 4;
+            let (rows, cols) = (4, n * 3);
+            let node = NodeSpec::test_node(n);
+            let mut pool = MemPool::new();
+            let bufs: Vec<_> =
+                (0..n).map(|d| pool.alloc(DeviceId(d), Shape4::mat(rows, cols))).collect();
+            let ctx = PkCollCtx::new(&node, full_views(&bufs, rows, cols));
+            let mut plan = Plan::new();
+            pk_all_gather(&mut plan, &ctx, Axis::Col);
+            check(&plan, Some(&pool), n)
+        }),
+    ));
+    v.push((
+        "coll/reduce_scatter",
+        Box::new(|| {
+            let n = 4;
+            let (rows, cols) = (4, n * 2);
+            let node = NodeSpec::test_node(n);
+            let mut pool = MemPool::new();
+            let bufs: Vec<_> =
+                (0..n).map(|d| pool.alloc(DeviceId(d), Shape4::mat(rows, cols))).collect();
+            let ctx = PkCollCtx::new(&node, full_views(&bufs, rows, cols));
+            let mut plan = Plan::new();
+            pk_reduce_scatter(&mut plan, &ctx, Axis::Col);
+            check(&plan, Some(&pool), n)
+        }),
+    ));
+    v.push((
+        "coll/all_to_all",
+        Box::new(|| {
+            let n = 4;
+            let cfg = A2aCfg { b_dim: 2, s_local: 3, h: 8, d_head: 4 };
+            let node = NodeSpec::test_node(n);
+            let mut pool = MemPool::new();
+            let mut srcs = vec![];
+            let mut dsts = vec![];
+            for d in 0..n {
+                srcs.push(pool.alloc(
+                    DeviceId(d),
+                    Shape4 { b: cfg.b_dim, d: cfg.s_local, r: cfg.h, c: cfg.d_head },
+                ));
+                dsts.push(pool.alloc(
+                    DeviceId(d),
+                    Shape4 { b: cfg.b_dim, d: cfg.s_local * n, r: cfg.h / n, c: cfg.d_head },
+                ));
+            }
+            let mut plan = Plan::new();
+            pk_all_to_all_4d(&mut plan, &node, &cfg, Some(&srcs), Some(&dsts), 8.0);
+            check(&plan, Some(&pool), n)
+        }),
+    ));
+    v.push((
+        "coll/hier_all_reduce",
+        Box::new(|| {
+            let (k, p) = (2usize, 2usize);
+            let n = k * p;
+            let (rows, cols) = (n * 2, 6);
+            let cluster = ClusterSpec::test_cluster(k, p);
+            let mut pool = MemPool::new();
+            let bufs: Vec<_> =
+                (0..n).map(|d| pool.alloc(DeviceId(d), Shape4::mat(rows, cols))).collect();
+            let ctx = ClusterCollCtx::new(&cluster, full_views(&bufs, rows, cols));
+            let mut plan = Plan::new();
+            hier_all_reduce(&mut plan, &ctx);
+            check(&plan, Some(&pool), p)
+        }),
+    ));
+    v.push((
+        "coll/hier_all_gather",
+        Box::new(|| {
+            let (k, p) = (2usize, 2usize);
+            let n = k * p;
+            let (rows, cols) = (n * 2, n * 3);
+            let cluster = ClusterSpec::test_cluster(k, p);
+            let mut pool = MemPool::new();
+            let bufs: Vec<_> =
+                (0..n).map(|d| pool.alloc(DeviceId(d), Shape4::mat(rows, cols))).collect();
+            let ctx = ClusterCollCtx::new(&cluster, full_views(&bufs, rows, cols));
+            let mut plan = Plan::new();
+            hier_all_gather(&mut plan, &ctx, Axis::Row);
+            check(&plan, Some(&pool), p)
+        }),
+    ));
+    v.push((
+        "coll/hier_reduce_scatter",
+        Box::new(|| {
+            let (k, p) = (2usize, 3usize);
+            let n = k * p;
+            let (rows, cols) = (n * 2, 5);
+            let cluster = ClusterSpec::test_cluster(k, p);
+            let mut pool = MemPool::new();
+            let bufs: Vec<_> =
+                (0..n).map(|d| pool.alloc(DeviceId(d), Shape4::mat(rows, cols))).collect();
+            let ctx = ClusterCollCtx::new(&cluster, full_views(&bufs, rows, cols));
+            let mut plan = Plan::new();
+            hier_reduce_scatter(&mut plan, &ctx, Axis::Row);
+            check(&plan, Some(&pool), p)
+        }),
+    ));
+    v.push((
+        "coll/all_to_all-cluster",
+        Box::new(|| {
+            let (k, p) = (2usize, 2usize);
+            let n = k * p;
+            let cluster = ClusterSpec::test_cluster(k, p);
+            let cfg = A2aCfg { b_dim: 2, s_local: 3, h: 2 * n, d_head: 4 };
+            let mut pool = MemPool::new();
+            let mut srcs = vec![];
+            let mut dsts = vec![];
+            for d in 0..n {
+                srcs.push(pool.alloc(
+                    DeviceId(d),
+                    Shape4 { b: cfg.b_dim, d: cfg.s_local, r: cfg.h, c: cfg.d_head },
+                ));
+                dsts.push(pool.alloc(
+                    DeviceId(d),
+                    Shape4 { b: cfg.b_dim, d: cfg.s_local * n, r: cfg.h / n, c: cfg.d_head },
+                ));
+            }
+            let stage = a2a_cluster_stage(&mut pool, &cluster, &cfg);
+            let mut plan = Plan::new();
+            pk_all_to_all_4d_cluster(
+                &mut plan,
+                &cluster,
+                &cfg,
+                Some(&srcs),
+                Some(&dsts),
+                Some(&stage),
+                DEFAULT_RDMA_CHUNK,
+                8.0,
+            );
+            check(&plan, Some(&pool), p)
+        }),
+    ));
+
+    v
+}
+
+/// Run the sweep. `only` filters entry names by substring.
+pub fn run_lint(only: Option<&str>) -> Vec<LintResult> {
+    registry()
+        .into_iter()
+        .filter(|(name, _)| only.is_none_or(|pat| name.contains(pat)))
+        .map(|(name, build)| LintResult { name, report: build() })
+        .collect()
+}
+
+/// Per-kernel coverage/finding table for the CLI.
+pub fn lint_table(results: &[LintResult]) -> Table {
+    let mut t = Table::new(
+        "plan lint — static verification of the kernel zoo",
+        &["kernel", "workers", "ops", "sems", "edges", "accesses", "pairs", "errors", "warnings"],
+    );
+    for r in results {
+        let s = &r.report.stats;
+        t.row(vec![
+            r.name.to_string(),
+            s.workers.to_string(),
+            s.ops.to_string(),
+            s.sems.to_string(),
+            s.sync_edges.to_string(),
+            s.accesses.to_string(),
+            s.pairs_checked.to_string(),
+            r.report.num_errors().to_string(),
+            r.report.num_warnings().to_string(),
+        ]);
+    }
+    t
+}
+
+/// Machine-readable sweep document (consumed by `tools/check_lint.py`).
+pub fn lint_json(results: &[LintResult]) -> Json {
+    let kernels: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let s = &r.report.stats;
+            obj(vec![
+                ("name", Json::Str(r.name.to_string())),
+                ("workers", Json::Num(s.workers as f64)),
+                ("ops", Json::Num(s.ops as f64)),
+                ("sems", Json::Num(s.sems as f64)),
+                ("sync_edges", Json::Num(s.sync_edges as f64)),
+                ("accesses", Json::Num(s.accesses as f64)),
+                ("pairs_checked", Json::Num(s.pairs_checked as f64)),
+                ("rdma_bytes", Json::Num(s.rdma_bytes)),
+                ("errors", Json::Num(r.report.num_errors() as f64)),
+                ("warnings", Json::Num(r.report.num_warnings() as f64)),
+                (
+                    "findings",
+                    Json::Arr(
+                        r.report.findings.iter().map(|f| Json::Str(f.to_string())).collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    obj(vec![("schema", Json::Str("pk-lint-v1".to_string())), ("kernels", Json::Arr(kernels))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_sweep_is_error_free() {
+        let results = run_lint(None);
+        assert!(results.len() >= 25, "zoo registry shrank: {}", results.len());
+        for r in &results {
+            assert_eq!(
+                r.report.num_errors(),
+                0,
+                "{} has verifier errors:\n{}",
+                r.name,
+                r.report.render()
+            );
+            assert!(r.report.stats.ops > 0, "{} built an empty plan", r.name);
+        }
+    }
+
+    #[test]
+    fn sweep_filter_and_json_shape() {
+        let results = run_lint(Some("gemm_rs"));
+        assert!(!results.is_empty() && results.iter().all(|r| r.name.contains("gemm_rs")));
+        let doc = lint_json(&results);
+        assert_eq!(doc.get("schema").and_then(|s| s.as_str()), Some("pk-lint-v1"));
+        let kernels = doc.get("kernels").and_then(|k| k.as_arr()).expect("kernels array");
+        assert_eq!(kernels.len(), results.len());
+        let table = lint_table(&results).to_markdown();
+        assert!(table.contains("gemm_rs/cluster"));
+    }
+}

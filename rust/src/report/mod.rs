@@ -5,6 +5,7 @@
 
 pub mod ablations;
 pub mod exhibits;
+pub mod lint;
 pub mod table;
 
 pub use exhibits::{

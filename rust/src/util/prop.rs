@@ -6,13 +6,20 @@
 
 use crate::exec::FunctionalExec;
 use crate::mem::MemPool;
+use crate::plan::verify::{verify, VerifyCtx};
 use crate::plan::Plan;
 
 /// Run a plan to completion on the functional executor, panicking on
 /// deadlock or on an effect error — the shared shorthand that replaces
 /// the `FunctionalExec::new(&mut pool).run(&plan).unwrap()` boilerplate
 /// across the test suites.
+///
+/// Before executing, the plan is statically verified
+/// ([`crate::plan::verify`]) against the pool: any deadlock, data race,
+/// out-of-bounds view, or shape-mismatched effect panics here with the
+/// finding list, so every functional test doubles as a verifier fixture.
 pub fn run_functional(pool: &mut MemPool, plan: &Plan) {
+    verify(plan, &VerifyCtx::functional(pool)).assert_clean("functional plan");
     FunctionalExec::new(pool).run(plan).unwrap();
 }
 

@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Validate a ``pk lint --json`` sweep document (schema ``pk-lint-v1``).
+
+CI runs ``pk lint --json LINT_zoo.json`` — the static plan verifier over
+every kernel in the zoo — and the CLI already exits non-zero on any
+error-severity finding. This gate re-checks the *document*, so a CLI
+regression that stops sweeping (or sweeps nothing) cannot pass silently:
+
+* wrong/missing ``schema`` tag, or a missing/empty ``kernels`` array;
+* any kernel entry with ``errors > 0`` (each finding line is echoed);
+* degenerate entries: a plan with zero ops, zero workers, or negative
+  counters means the builder under that name produced nothing;
+* a sweep that shrank below the expected minimum number of zoo entries
+  (``--min-kernels``, default 25 — keep in sync with the registry test
+  in ``rust/src/report/lint.rs``).
+
+Usage: ``python3 tools/check_lint.py [--min-kernels N] LINT_zoo.json``
+
+Exit status 0 when clean; 1 with one line per problem otherwise; 2 on
+usage errors. No third-party imports: runs on any Python 3. Covered by
+``python/tests/test_lint_gate.py`` (including injected breaks).
+"""
+
+import json
+import sys
+
+SCHEMA = "pk-lint-v1"
+DEFAULT_MIN_KERNELS = 25
+
+COUNTER_KEYS = ["workers", "ops", "sems", "sync_edges", "accesses", "pairs_checked"]
+
+
+def check_sweep(doc, min_kernels=DEFAULT_MIN_KERNELS):
+    """Return a list of problem strings (empty = sweep is healthy)."""
+    problems = []
+    if not isinstance(doc, dict):
+        return ["sweep root is not an object"]
+    if doc.get("schema") != SCHEMA:
+        problems.append(f"schema drift: expected {SCHEMA!r}, got {doc.get('schema')!r}")
+    kernels = doc.get("kernels")
+    if not isinstance(kernels, list) or not kernels:
+        problems.append("missing or empty 'kernels' array")
+        return problems
+    if len(kernels) < min_kernels:
+        problems.append(
+            f"sweep shrank: {len(kernels)} kernel(s), expected >= {min_kernels}"
+        )
+    for entry in kernels:
+        if not isinstance(entry, dict) or not isinstance(entry.get("name"), str):
+            problems.append(f"malformed kernel entry: {entry!r}")
+            continue
+        name = entry["name"]
+        for key in COUNTER_KEYS + ["errors", "warnings"]:
+            value = entry.get(key)
+            if isinstance(value, bool) or not isinstance(value, (int, float)):
+                problems.append(f"{name}: counter {key!r} is not a number: {value!r}")
+            elif value < 0:
+                problems.append(f"{name}: counter {key!r} is negative: {value!r}")
+        ops = entry.get("ops")
+        if isinstance(ops, (int, float)) and ops == 0:
+            problems.append(f"{name}: plan has zero ops (builder produced nothing)")
+        workers = entry.get("workers")
+        if isinstance(workers, (int, float)) and workers == 0:
+            problems.append(f"{name}: plan has zero workers")
+        errors = entry.get("errors")
+        if isinstance(errors, (int, float)) and errors > 0:
+            problems.append(f"{name}: {int(errors)} error-severity finding(s)")
+            for finding in entry.get("findings", []):
+                problems.append(f"{name}:   {finding}")
+    return problems
+
+
+def main(argv):
+    min_kernels = DEFAULT_MIN_KERNELS
+    paths = []
+    it = iter(argv)
+    for arg in it:
+        if arg == "--min-kernels":
+            try:
+                min_kernels = int(next(it, ""))
+            except ValueError:
+                print("check_lint: bad --min-kernels value")
+                return 2
+        elif arg.startswith("--"):
+            print(f"check_lint: unknown flag {arg!r}")
+            return 2
+        else:
+            paths.append(arg)
+    if len(paths) != 1:
+        print("usage: check_lint.py [--min-kernels N] <LINT_zoo.json>")
+        return 2
+    try:
+        with open(paths[0]) as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError) as exc:
+        print(f"check_lint: cannot read {paths[0]}: {exc}")
+        return 1
+    problems = check_sweep(doc, min_kernels=min_kernels)
+    for p in problems:
+        print(f"check_lint: {p}")
+    if problems:
+        return 1
+    kernels = doc["kernels"]
+    edges = sum(k.get("sync_edges", 0) for k in kernels)
+    pairs = sum(k.get("pairs_checked", 0) for k in kernels)
+    warnings = sum(k.get("warnings", 0) for k in kernels)
+    print(
+        f"check_lint: {paths[0]} ok ({len(kernels)} kernel plans, "
+        f"{int(edges)} sync edges, {int(pairs)} access pairs, 0 errors, "
+        f"{int(warnings)} warnings)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
