@@ -62,8 +62,9 @@ def test_required_sections_match_the_committed_baseline():
     "break_fn, expect",
     [
         (lambda d: d.update(schema="pk-hotpath-v0"), "schema drift"),
-        # a stale pre-serve snapshot must be rejected outright
+        # stale pre-serve / pre-engine snapshots must be rejected outright
         (lambda d: d.update(schema="pk-hotpath-v1"), "schema drift"),
+        (lambda d: d.update(schema="pk-hotpath-v2"), "schema drift"),
         (lambda d: d.pop("sections"), "missing 'sections'"),
         (lambda d: d["sections"].pop("solver_memo_hit_rate"), "missing section"),
         (lambda d: d["sections"].pop("event_throughput_per_s"), "missing section"),
@@ -80,6 +81,20 @@ def test_required_sections_match_the_committed_baseline():
         ),
         (lambda d: d["sections"].pop("serve_tokens_per_s"), "missing section"),
         (lambda d: d["sections"].update({"serve_tokens_per_s": 0}), "degenerate"),
+        # v3: scan-vs-heap and serial-vs-partitioned head-to-heads are
+        # mandatory and their rates must be non-degenerate
+        (
+            lambda d: d["sections"].pop("flownet steady drain (heap): staggered flows"),
+            "missing section",
+        ),
+        (lambda d: d["sections"].pop("engine_events_per_s_heap"), "missing section"),
+        (lambda d: d["sections"].update({"engine_events_per_s_scan": 0}), "degenerate"),
+        (
+            lambda d: d["sections"].pop("timed_exec: hier AR @ 4 nodes (partitioned net)"),
+            "missing section",
+        ),
+        (lambda d: d["sections"].update({"cluster_events_per_s_partitioned": 0}), "degenerate"),
+        (lambda d: d["sections"].update({"partitioned_net_speedup": 0}), "degenerate"),
         (lambda d: d.update(events=0), "degenerate"),
         (lambda d: d.pop("events"), "missing or degenerate"),
     ],

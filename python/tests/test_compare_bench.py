@@ -1,0 +1,156 @@
+"""Tests for the CI bench-comparison gate (tools/compare_bench.py).
+
+The gate must fail on a >15% events/s drop when both snapshots carry
+measured values, be a strict no-op against the schema-only (all-null)
+committed baseline, and reject malformed inputs with a distinct exit
+code — mirroring the contract pinned for check_bench in
+test_bench_gate.py.
+
+No third-party imports beyond pytest; runs in any Python 3.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+TOOLS = os.path.join(os.path.dirname(__file__), "..", "..", "tools")
+sys.path.insert(0, os.path.abspath(TOOLS))
+
+from compare_bench import DEFAULT_THRESHOLD, compare  # noqa: E402
+
+REPO = os.path.abspath(os.path.join(TOOLS, ".."))
+SCRIPT = os.path.join(REPO, "tools", "compare_bench.py")
+
+
+def snapshot(sections):
+    return {"schema": "pk-hotpath-v3", "smoke": True, "events": 10, "sections": sections}
+
+
+def write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+BASE = {
+    "engine_events_per_s_heap": 1_000_000.0,
+    "engine_events_per_s_scan": 200_000.0,
+    "serve_tokens_per_s": 50_000.0,
+    "timed_exec: hier AR @ 4 nodes (serial net)": 0.25,  # time, not a rate
+}
+
+
+def test_within_threshold_passes():
+    cur = {k: v * 0.90 for k, v in BASE.items()}
+    regs, compared, _ = compare(BASE, cur)
+    assert regs == []
+    assert compared == 3  # the three *_per_s keys; the time section is skipped
+
+
+def test_regression_beyond_threshold_fails():
+    cur = dict(BASE)
+    cur["engine_events_per_s_heap"] = BASE["engine_events_per_s_heap"] * 0.5
+    regs, _, _ = compare(BASE, cur)
+    assert len(regs) == 1
+    assert "engine_events_per_s_heap" in regs[0]
+    assert "50.0% below" in regs[0]
+
+
+def test_threshold_is_configurable():
+    cur = dict(BASE)
+    cur["serve_tokens_per_s"] = BASE["serve_tokens_per_s"] * 0.90
+    assert compare(BASE, cur, threshold=DEFAULT_THRESHOLD)[0] == []
+    regs, _, _ = compare(BASE, cur, threshold=0.05)
+    assert len(regs) == 1
+
+
+def test_time_sections_are_never_compared():
+    # a slower bench *time* is not a rate regression (smoke noise, bigger
+    # workloads); only *_per_s keys gate
+    cur = dict(BASE)
+    cur["timed_exec: hier AR @ 4 nodes (serial net)"] = 100.0
+    assert compare(BASE, cur)[0] == []
+
+
+def test_improvements_pass():
+    cur = {k: v * 10.0 for k, v in BASE.items()}
+    assert compare(BASE, cur)[0] == []
+
+
+def test_null_baseline_is_a_noop():
+    base = {k: None for k in BASE}
+    regs, compared, skipped = compare(base, BASE)
+    assert regs == []
+    assert compared == 0
+    assert skipped == 3
+
+
+def test_null_current_is_skipped_not_crashed():
+    cur = {k: None for k in BASE}
+    regs, compared, _ = compare(BASE, cur)
+    assert regs == []
+    assert compared == 0
+
+
+def test_non_numeric_values_are_skipped():
+    cur = dict(BASE)
+    cur["engine_events_per_s_scan"] = "fast"
+    base = dict(BASE)
+    base["serve_tokens_per_s"] = float("nan")
+    regs, compared, skipped = compare(base, cur)
+    assert regs == []
+    assert compared == 1  # only engine_events_per_s_heap comparable
+    assert skipped == 2
+
+
+def test_disjoint_sections_compare_nothing():
+    regs, compared, _ = compare({"a_per_s": 1.0}, {"b_per_s": 1.0})
+    assert regs == [] and compared == 0
+
+
+def test_committed_baseline_vs_itself_is_a_noop():
+    # the exact CI invocation shape: schema-only baseline on the left
+    baseline = os.path.join(REPO, "BENCH_hotpath.json")
+    r = subprocess.run(
+        [sys.executable, SCRIPT, baseline, baseline], capture_output=True, text=True
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "nothing to gate" in r.stdout
+
+
+def test_cli_exit_codes(tmp_path):
+    good_base = write(tmp_path, "base.json", snapshot(BASE))
+    good_cur = write(
+        tmp_path, "cur.json", snapshot({k: v * 0.95 for k, v in BASE.items()})
+    )
+    regressed = write(
+        tmp_path, "reg.json", snapshot({k: v * 0.5 for k, v in BASE.items()})
+    )
+    run = lambda *args: subprocess.run(
+        [sys.executable, SCRIPT, *args], capture_output=True, text=True
+    )
+    assert run(good_base, good_cur).returncode == 0
+    r = run(good_base, regressed)
+    assert r.returncode == 1
+    assert "REGRESSION" in r.stdout
+    # malformed inputs: distinct exit code 2
+    assert run(good_base).returncode == 2  # missing operand
+    assert run(good_base, str(tmp_path / "missing.json")).returncode == 2
+    bad_json = tmp_path / "bad.json"
+    bad_json.write_text("{not json")
+    assert run(good_base, str(bad_json)).returncode == 2
+    no_sections = write(tmp_path, "nosec.json", {"schema": "pk-hotpath-v3"})
+    assert run(good_base, no_sections).returncode == 2
+    assert run("--threshold", "-1", good_base, good_cur).returncode == 2
+    assert run("--threshold", "zoom", good_base, good_cur).returncode == 2
+    assert run("--bogus", good_base, good_cur).returncode == 2
+
+
+@pytest.mark.parametrize("frac,fails", [(0.86, False), (0.849, True)])
+def test_threshold_boundary(frac, fails):
+    cur = {"engine_events_per_s_heap": BASE["engine_events_per_s_heap"] * frac}
+    regs, _, _ = compare(BASE, cur)
+    assert bool(regs) == fails

@@ -19,8 +19,17 @@ Mirrored semantics (kept in lock-step with ``rust/src/sim/flownet.rs``):
   indices in first-appearance order over those classes; the water-fill
   body performs the identical float ops; solves are memoized on the
   ordered ``(class, members)`` multiset.
+* heap engine: completion candidates live in a min-heap keyed by
+  ``(conservative completion time, slot, seq)``; entries are invalidated
+  *lazily* — a rate change bumps the flow's seq and pushes a fresh entry,
+  stale entries are discarded when popped. Between rate changes,
+  ``advance`` defers the per-flow ``remaining -= rate * dt`` update into
+  a per-epoch dt log that is replayed per flow on demand, so the replayed
+  subtraction sequence is the *same float ops in the same order* as the
+  eager scan — which is what makes the heap path bit-identical.
 """
 
+import heapq
 import random
 import struct
 
@@ -397,3 +406,339 @@ def test_late_capacity_change_invalidates_memo():
     net.set_capacity(("egress", 0), 50.0)
     net.start(1000.0, [("egress", 0)], 1e9)
     assert net.rate(a) == 25.0
+
+
+# ------------------------------------------------------------ heap engine
+# Mirror of the epoch-keyed completion heap in `rust/src/sim/flownet.rs`
+# (`Engine::Heap`). Keys are *conservative* (never later than the true
+# completion, thanks to the eps subtraction and HEAP_SAFETY shrink), so a
+# candidate is always popped before it can complete; the popped candidate
+# is then evaluated with the exact eager-scan float expressions on its
+# replayed `remaining`, which is what keeps outputs bit-identical.
+
+HEAP_SAFETY = 1.0 - 1e-9  # early-key shrink; dwarfs replay ulp drift
+HEAP_MARGIN_REL = 1e-9  # pop-threshold slack, same scale
+
+
+class HeapNet(IncrementalNet):
+    """`IncrementalNet` with the heap event path (Engine::Heap mirror).
+
+    The sorted ``active`` list is gone: live slots are enumerated by a
+    dense scan over the arena (ascending slot order is preserved, which
+    the solver's class first-appearance order depends on).
+    """
+
+    def __init__(self):
+        super().__init__()
+        self.n_live = 0
+        self.heap = []  # (key, slot, seq) min-heap
+        self.seq = []  # per-slot entry generation; mismatched pops are stale
+        self.synced = []  # per-slot count of dt_log entries already applied
+        self.dt_log = []  # dts applied since rates were last assigned
+        self.vtime = 0.0  # accumulated elapsed; keys/pruning only, never output
+        # instrumentation for the lazy-invalidation tests
+        self.pushes = 0
+        self.pops_stale = 0
+        self.pops_candidate = 0
+
+    def start(self, nbytes, ports, cap):
+        srt = sorted(ports)
+        pids = tuple(self._intern_port(p) for p in srt)
+        key = (pids, cap)
+        c = self.class_id.get(key)
+        if c is None:
+            c = len(self.classes)
+            self.class_id[key] = c
+            self.classes.append([list(pids), cap, 0])
+        self.classes[c][2] += 1
+        self.rates_dirty = True
+        flow = [nbytes, nbytes, c, 0.0, True]
+        if self.free:
+            slot = self.free.pop()
+            self.flows[slot] = flow
+        else:
+            slot = len(self.flows)
+            self.flows.append(flow)
+            self.seq.append(0)
+            self.synced.append(0)
+        self.synced[slot] = len(self.dt_log)
+        self.n_live += 1
+        return slot
+
+    def _push_entry(self, slot):
+        f = self.flows[slot]
+        rel = max(f[0] - self._eps(f[1]), 0.0) / f[3] * HEAP_SAFETY
+        self.seq[slot] += 1
+        heapq.heappush(self.heap, (self.vtime + rel, slot, self.seq[slot]))
+        self.pushes += 1
+
+    def _replay(self, slot, upto):
+        """Apply dt_log[synced:upto] to the flow's remaining — the same
+        subtraction sequence the eager scan performed, deferred."""
+        f = self.flows[slot]
+        rate = f[3]
+        for i in range(self.synced[slot], upto):
+            f[0] -= rate * self.dt_log[i]
+        self.synced[slot] = upto
+
+    def _materialize_all(self):
+        for s in range(len(self.flows)):
+            if self.flows[s][4]:
+                self._replay(s, len(self.dt_log))
+                self.synced[s] = 0
+        self.dt_log.clear()
+
+    def ensure_rates(self):
+        if not self.rates_dirty:
+            return
+        # catch every flow up under the *old* rates before they change
+        self._materialize_all()
+        self.rates_dirty = False
+        if self.n_live == 0:
+            return
+        self.solves += 1
+        order = []
+        class_local = {}
+        for s in range(len(self.flows)):
+            if not self.flows[s][4]:
+                continue
+            c = self.flows[s][2]
+            if c not in class_local:
+                class_local[c] = len(order)
+                order.append(c)
+        key = tuple((c, self.classes[c][2]) for c in order)
+        cached = self.solve_cache.get(key)
+        if cached is not None:
+            self.memo_hits += 1
+            class_rate = cached
+        else:
+            class_rate = self._water_fill(order)
+            self.solve_cache[key] = class_rate
+        for s in range(len(self.flows)):
+            if not self.flows[s][4]:
+                continue
+            r = class_rate[class_local[self.flows[s][2]]]
+            if f64_bits(r) != f64_bits(self.flows[s][3]):
+                # rate changed: the old heap entry's key is no longer
+                # conservative — bump seq (lazy invalidation) and re-key
+                self.flows[s][3] = r
+                if r > 0.0:
+                    self._push_entry(s)
+                else:
+                    self.seq[s] += 1
+            # unchanged rate: the old entry's key stays conservative, no
+            # re-push needed — this is what makes memo-hit phases cheap
+
+    def advance(self, dt):
+        if self.n_live == 0:
+            return []
+        self.ensure_rates()
+        if dt > 0.0:
+            self.dt_log.append(dt)
+        self.vtime += dt
+        margin = (abs(self.vtime) + dt) * HEAP_MARGIN_REL + 1e-18
+        done = []
+        survivors = []
+        while self.heap:
+            k, slot, seq = self.heap[0]
+            if self.seq[slot] != seq or not self.flows[slot][4]:
+                heapq.heappop(self.heap)
+                self.pops_stale += 1
+                continue
+            if k > self.vtime + margin:
+                break
+            heapq.heappop(self.heap)
+            self.pops_candidate += 1
+            f = self.flows[slot]
+            rate = f[3]
+            # replay prior steps, then mirror the scan's per-advance body:
+            # finishes_now on the pre-subtraction remaining, subtract, eps
+            self._replay(slot, len(self.dt_log) - (1 if dt > 0.0 else 0))
+            finishes_now = rate > 0.0 and f[0] <= rate * dt * (1.0 + 1e-12)
+            if dt > 0.0:
+                f[0] -= rate * dt
+            self.synced[slot] = len(self.dt_log)
+            if finishes_now or (f[0] <= self._eps(f[1]) and rate > 0.0):
+                f[4] = False
+                f[0] = 0.0
+                done.append(slot)
+                self.seq[slot] += 1
+            else:
+                survivors.append(slot)
+        # early pops re-key *after* the loop — re-pushing inside it could
+        # re-examine the same entry forever when its key sits inside the
+        # pop margin
+        for s in survivors:
+            self._push_entry(s)
+        if done:
+            done.sort()
+            for s in done:
+                self.free.append(s)
+                self.classes[self.flows[s][2]][2] -= 1
+            self.n_live -= len(done)
+            self.rates_dirty = True
+        return done
+
+    def next_completion(self):
+        if self.n_live == 0:
+            return None
+        self.ensure_rates()
+        best = INF
+        cands = []
+        while self.heap:
+            k, slot, seq = self.heap[0]
+            if self.seq[slot] != seq or not self.flows[slot][4]:
+                heapq.heappop(self.heap)
+                self.pops_stale += 1
+                continue
+            if best != INF and k > self.vtime + best + (
+                (abs(self.vtime) + best) * HEAP_MARGIN_REL + 1e-18
+            ):
+                break
+            heapq.heappop(self.heap)
+            self.pops_candidate += 1
+            f = self.flows[slot]
+            self._replay(slot, len(self.dt_log))
+            best = min(best, max(f[0] - 0.5 * self._eps(f[1]), 0.0) / f[3])
+            cands.append(slot)
+        for s in cands:
+            self._push_entry(s)
+        return best if best != INF else None
+
+
+def dual_churn(seed, steps, n_dev=4):
+    """Drive a scan net and a heap net through the identical random
+    start / (partial) advance / rate-change schedule, asserting every
+    observable — next_completion, completion lists, per-flow rates —
+    bit-identical at every step. Returns the heap net (for stats)."""
+    rng = random.Random(seed)
+    scan = IncrementalNet()
+    heap = HeapNet()
+    for d in range(n_dev):
+        for kind in ("egress", "ingress", "hbm"):
+            c = 50.0 + 450.0 * rng.random()
+            scan.set_capacity((kind, d), c)
+            heap.set_capacity((kind, d), c)
+    live = []
+    cap_pool = [40.0, 120.0, 333.25]
+    for _ in range(steps):
+        r = rng.random()
+        if not live or r < 0.45:
+            src = rng.randrange(n_dev)
+            dst = (src + 1 + rng.randrange(n_dev - 1)) % n_dev
+            kind = rng.randrange(3)
+            if kind == 0:
+                ports = [("egress", src), ("ingress", dst)]
+            elif kind == 1:
+                ports = [("ingress", dst), ("egress", src)]
+            else:
+                ports = [("hbm", src)]
+            cap = rng.choice(cap_pool)
+            nbytes = 10.0 + 1000.0 * rng.random()
+            sa = scan.start(nbytes, list(ports), cap)
+            sb = heap.start(nbytes, list(ports), cap)
+            assert sa == sb, "slot allocation must mirror (LIFO free list)"
+            live.append(sa)
+        elif r < 0.55:
+            # rate-change churn beyond start/complete: resize a port the
+            # live population crosses (memo dropped, next solve re-keys)
+            d = rng.randrange(n_dev)
+            kind = rng.choice(("egress", "ingress", "hbm"))
+            c = 50.0 + 450.0 * rng.random()
+            scan.set_capacity((kind, d), c)
+            heap.set_capacity((kind, d), c)
+            # a capacity edit alone doesn't dirty rates (matches Rust);
+            # poke both nets identically so the new value takes effect
+            scan.rates_dirty = True
+            heap.rates_dirty = True
+        else:
+            want_dt = scan.next_completion()
+            got_dt = heap.next_completion()
+            assert want_dt is not None
+            assert f64_bits(got_dt) == f64_bits(want_dt), (
+                f"seed {seed}: next_completion {got_dt!r} != {want_dt!r}"
+            )
+            # partial advances (frac < 1) exercise the deferred dt log;
+            # frac > 1 exercises the finishes_now overshoot path
+            frac = rng.choice([1.0, 1.0, 1.0, 0.5, 0.25, 1.25])
+            dw = scan.advance(want_dt * frac)
+            dg = heap.advance(want_dt * frac)
+            assert dw == dg, f"seed {seed}: done {dg} != {dw}"
+            for s in dw:
+                live.remove(s)
+        for s in live:
+            assert f64_bits(heap.rate(s)) == f64_bits(scan.rate(s)), (
+                f"seed {seed}: slot {s} rate mismatch"
+            )
+        assert heap.n_live == len(live)
+    assert heap.solves == scan.solves, "dirty-solve schedule must mirror"
+    return heap
+
+
+def test_heap_engine_matches_scan_bitwise_under_churn():
+    for seed in range(30):
+        dual_churn(seed, steps=70)
+
+
+def test_heap_deferred_replay_is_bitwise_after_partial_advances():
+    # a run of timer-style partial advances inside one epoch: the heap net
+    # defers the subtractions, the scan net applies them eagerly; forcing
+    # a solve materializes the log and the remainings must agree bitwise.
+    scan = IncrementalNet()
+    heap = HeapNet()
+    for net in (scan, heap):
+        net.set_capacity(("egress", 0), 173.5)
+        net.set_capacity(("ingress", 1), 91.25)
+    ids = []
+    for i in range(6):
+        b = 100.0 + 37.0 * i
+        ids.append(scan.start(b, [("egress", 0), ("ingress", 1)], 333.25))
+        heap.start(b, [("egress", 0), ("ingress", 1)], 333.25)
+    for k in range(5):
+        dt = scan.next_completion()
+        assert f64_bits(heap.next_completion()) == f64_bits(dt)
+        frac = 0.125 * (k + 1)
+        assert scan.advance(dt * frac) == heap.advance(dt * frac)
+    assert heap.dt_log, "partial advances should be deferred, not applied"
+    # rate-change → materialize: every remaining must match the scan's
+    scan.start(5.0, [("egress", 0)], 40.0)
+    heap.start(5.0, [("egress", 0)], 40.0)
+    scan.ensure_rates()
+    heap.ensure_rates()
+    assert not heap.dt_log, "solve must clear the epoch dt log"
+    for s in ids:
+        assert f64_bits(heap.flows[s][0]) == f64_bits(scan.flows[s][0]), s
+
+
+def test_heap_lazy_invalidation_repushes_stale_entries():
+    heap = dual_churn(3, steps=80)
+    # rate changes bump seqs without touching the heap, so stale entries
+    # must have been encountered (and discarded) during pops...
+    assert heap.pops_stale > 0, "churn must exercise lazy invalidation"
+    # ...and the heap never leaks: at most one live entry per flow plus
+    # the not-yet-popped stale residue, bounded by total pushes
+    assert len(heap.heap) <= heap.pushes
+    live_entries = sum(
+        1 for (_k, s, q) in heap.heap if heap.seq[s] == q and heap.flows[s][4]
+    )
+    assert live_entries <= heap.n_live
+
+
+def test_heap_completion_with_rate_zero_guard():
+    # flows whose assigned rate is 0 must never complete or contribute a
+    # completion time (mirrors the scan's `rate > 0` guards); rate-0
+    # flows are simply absent from the heap until a re-key gives them
+    # bandwidth.
+    heap = HeapNet()
+    heap.set_capacity(("egress", 0), 100.0)
+    a = heap.start(50.0, [("egress", 0)], 1e9)
+    b = heap.start(100.0, [("egress", 0)], 1e9)
+    assert abs(heap.rate(a) - 50.0) < 1e-9
+    dt = heap.next_completion()
+    assert abs(dt - 1.0) < 1e-4
+    assert heap.advance(dt) == [a]
+    dt2 = heap.next_completion()
+    assert abs(dt2 - 0.5) < 1e-4
+    assert heap.advance(dt2) == [b]
+    assert heap.n_live == 0
+    assert heap.next_completion() is None

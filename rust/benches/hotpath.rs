@@ -158,6 +158,107 @@ fn main() {
         });
     }
 
+    // ---- event engine head-to-head: scan vs epoch-keyed heap on a
+    // timer-dominated steady phase (staggered cap-bound flows, several
+    // partial advances per completion window — the profile deep pipelined
+    // sims produce). Cap-bound rates never change bits across
+    // completions, so the heap path pays O(log A) per partial step where
+    // the scan pays O(A).
+    {
+        use pk::hw::topology::Port;
+        use pk::sim::flownet::{Engine, FlowNet};
+        let n_flows = if smoke { 256 } else { 4096 };
+        let churn = |engine: Engine| -> u64 {
+            let mut net = FlowNet::with_engine(engine);
+            for d in 0..8 {
+                net.set_capacity(Port::Egress(DeviceId(d)), 450e9);
+                net.set_capacity(Port::Ingress(DeviceId(d)), 450e9);
+            }
+            for i in 0..n_flows {
+                // staggered sizes -> staggered completions (no tie storms)
+                net.start(
+                    1e6 * (1.0 + i as f64 / n_flows as f64),
+                    vec![Port::Egress(DeviceId(i % 8)), Port::Ingress(DeviceId((i + 1) % 8))],
+                    0.5e9,
+                );
+            }
+            let mut events = 0u64;
+            while let Some(dt) = net.next_completion() {
+                events += 1;
+                // timer-style partial steps inside the completion window…
+                for _ in 0..3 {
+                    net.advance(dt * 0.25);
+                    events += 1;
+                }
+                // …then cross it
+                let rem = net.next_completion().unwrap_or(0.0);
+                net.advance(rem);
+                events += 1;
+            }
+            assert_eq!(net.n_active(), 0);
+            events
+        };
+        let mut ev = 0u64;
+        let ts = h.bench("flownet steady drain (scan): staggered flows", 2, 3, || {
+            ev = churn(Engine::Scan);
+        });
+        h.metric(
+            "engine_events_per_s_scan",
+            ev as f64 / ts,
+            &format!("{:>12.0} events/s", ev as f64 / ts),
+        );
+        let th = h.bench("flownet steady drain (heap): staggered flows", 2, 3, || {
+            ev = churn(Engine::Heap);
+        });
+        h.metric(
+            "engine_events_per_s_heap",
+            ev as f64 / th,
+            &format!("{:>12.0} events/s", ev as f64 / th),
+        );
+        h.metric("engine_heap_speedup", ts / th, &format!("{:>11.2}x", ts / th));
+    }
+
+    // ---- serial vs partitioned cluster DES: the same hier-AR plan on
+    // the monolithic net and on the per-node-partitioned net (NIC
+    // boundary partition; outputs are bit-identical — asserted here, so
+    // every CI smoke run re-checks the equivalence on a real kernel)
+    {
+        use pk::hw::ClusterSpec;
+        use pk::kernels::collectives::{hier_all_reduce, ClusterCollCtx};
+        use pk::plan::Plan;
+        let cluster = ClusterSpec::hgx_h100_pod(4);
+        let views = pk::baselines::phantom_replicas(cluster.total_devices(), 4096, 8192);
+        let mut plan = Plan::new();
+        hier_all_reduce(&mut plan, &ClusterCollCtx::new(&cluster, views));
+        let serial_exec = TimedExec::on_cluster(cluster.clone());
+        let part_exec = TimedExec::on_cluster(cluster).with_partitioned_net();
+        let rs = serial_exec.run(&plan);
+        let rp = part_exec.run(&plan);
+        assert_eq!(
+            rs.total_time.to_bits(),
+            rp.total_time.to_bits(),
+            "partitioned net must be bit-identical to serial"
+        );
+        assert_eq!(rs.events, rp.events);
+        let tser = h.bench("timed_exec: hier AR @ 4 nodes (serial net)", 5, 3, || {
+            let _ = serial_exec.run(&plan);
+        });
+        h.metric(
+            "cluster_events_per_s_serial",
+            rs.events as f64 / tser,
+            &format!("{:>12.0} events/s", rs.events as f64 / tser),
+        );
+        let tpar = h.bench("timed_exec: hier AR @ 4 nodes (partitioned net)", 5, 3, || {
+            let _ = part_exec.run(&plan);
+        });
+        h.metric(
+            "cluster_events_per_s_partitioned",
+            rp.events as f64 / tpar,
+            &format!("{:>12.0} events/s", rp.events as f64 / tpar),
+        );
+        h.metric("partitioned_net_speedup", tser / tpar, &format!("{:>11.2}x", tser / tpar));
+    }
+
     // ---- parallel sweep driver: the fig5-style partition grid, serial
     // vs the scoped-thread pool (deterministic output either way)
     if !smoke {
@@ -259,7 +360,7 @@ fn main() {
     // checks) write next to it so 1-iteration noise never clobbers the
     // committed numbers.
     let mut top = BTreeMap::new();
-    top.insert("schema".to_string(), Json::Str("pk-hotpath-v2".to_string()));
+    top.insert("schema".to_string(), Json::Str("pk-hotpath-v3".to_string()));
     top.insert(
         "note".to_string(),
         Json::Str(

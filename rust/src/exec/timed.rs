@@ -11,7 +11,8 @@ use crate::hw::cluster::ClusterSpec;
 use crate::hw::spec::NodeSpec;
 use crate::hw::topology::{Port, Topology};
 use crate::plan::{Op, Plan, Route, SyncScope, TransferSpec};
-use crate::sim::flownet::{FlowNet, SolverStats};
+use crate::sim::flownet::{FlowId, FlowNet, SolverStats};
+use crate::sim::partition::{partitioned_from_env, PartitionedFlowNet};
 use crate::sim::trace::{SpanKind, Trace};
 use crate::sim::EventQueue;
 use crate::xfer::curves;
@@ -72,26 +73,100 @@ struct FlowCtx {
 /// `active_flows` sentinel: this flow slot has no context attached.
 const NO_CTX: usize = usize::MAX;
 
+/// The executor's flow network: monolithic by default, or split into
+/// port-disjoint per-node partitions (parallel advance, bit-identical
+/// output — see [`crate::sim::partition`]). An enum rather than a trait
+/// object so the monolithic hot path stays devirtualized.
+enum NetBox {
+    Mono(FlowNet),
+    Part(PartitionedFlowNet),
+}
+
+impl NetBox {
+    fn start(&mut self, bytes: f64, ports: Vec<Port>, cap: f64) -> FlowId {
+        match self {
+            NetBox::Mono(n) => n.start(bytes, ports, cap),
+            NetBox::Part(n) => n.start(bytes, ports, cap),
+        }
+    }
+
+    fn advance(&mut self, dt: f64) -> &[FlowId] {
+        match self {
+            NetBox::Mono(n) => n.advance(dt),
+            NetBox::Part(n) => n.advance(dt),
+        }
+    }
+
+    fn next_completion(&mut self) -> Option<f64> {
+        match self {
+            NetBox::Mono(n) => n.next_completion(),
+            NetBox::Part(n) => n.next_completion(),
+        }
+    }
+
+    fn n_active(&self) -> usize {
+        match self {
+            NetBox::Mono(n) => n.n_active(),
+            NetBox::Part(n) => n.n_active(),
+        }
+    }
+
+    fn set_capacity(&mut self, port: Port, bytes_per_s: f64) {
+        match self {
+            NetBox::Mono(n) => n.set_capacity(port, bytes_per_s),
+            NetBox::Part(n) => n.set_capacity(port, bytes_per_s),
+        }
+    }
+
+    fn take_port_bytes(&mut self) -> HashMap<Port, f64> {
+        match self {
+            NetBox::Mono(n) => std::mem::take(&mut n.port_bytes),
+            NetBox::Part(n) => n.take_port_bytes(),
+        }
+    }
+
+    fn solver_stats(&self) -> SolverStats {
+        match self {
+            NetBox::Mono(n) => n.solver_stats(),
+            NetBox::Part(n) => n.solver_stats(),
+        }
+    }
+}
+
 /// The timed executor. Runs on one node by default; [`TimedExec::on_cluster`]
 /// extends the same resource model across an RDMA fabric. A one-node
 /// cluster is bit-identical to the plain node path (regression-guarded).
 pub struct TimedExec {
     pub cluster: ClusterSpec,
     pub trace_enabled: bool,
+    /// Run on the partitioned parallel net (also enabled fleet-wide via
+    /// `PK_NET_PARTITION=1`). Output is bit-identical to the monolithic
+    /// net either way (claims-tested).
+    pub partitioned_net: bool,
 }
 
 impl TimedExec {
     pub fn new(node: NodeSpec) -> Self {
-        TimedExec { cluster: ClusterSpec::single(node), trace_enabled: false }
+        TimedExec {
+            cluster: ClusterSpec::single(node),
+            trace_enabled: false,
+            partitioned_net: false,
+        }
     }
 
     /// Timed execution over a multi-node cluster (NIC ports + RDMA curve).
     pub fn on_cluster(cluster: ClusterSpec) -> Self {
-        TimedExec { cluster, trace_enabled: false }
+        TimedExec { cluster, trace_enabled: false, partitioned_net: false }
     }
 
     pub fn with_trace(mut self) -> Self {
         self.trace_enabled = true;
+        self
+    }
+
+    /// Opt this executor into the partitioned parallel net.
+    pub fn with_partitioned_net(mut self) -> Self {
+        self.partitioned_net = true;
         self
     }
 
@@ -144,7 +219,11 @@ impl TimedExec {
     pub fn run(&self, plan: &Plan) -> TimedResult {
         let g = &self.cluster.node.gpu;
         let topo = self.cluster.topology();
-        let mut net = FlowNet::new();
+        let mut net = if self.partitioned_net || partitioned_from_env() {
+            NetBox::Part(PartitionedFlowNet::new(topo.num_nodes(), topo.devices_per_node))
+        } else {
+            NetBox::Mono(FlowNet::new())
+        };
         for d in topo.devices() {
             net.set_capacity(Port::Egress(d), g.nvlink_bw);
             net.set_capacity(Port::Ingress(d), g.nvlink_bw);
@@ -367,7 +446,7 @@ impl TimedExec {
             compute_busy,
             // the net is drained and about to drop — move the accounting
             // out instead of deep-cloning it
-            port_bytes: std::mem::take(&mut net.port_bytes),
+            port_bytes: net.take_port_bytes(),
             trace,
             events,
             solver: net.solver_stats(),

@@ -54,7 +54,7 @@ pub fn all_exhibits() -> Vec<Exhibit> {
         Exhibit { id: "mx1", caption: "Cluster MoE sweep: expert-parallel dispatch over the NIC, 1→4 nodes, NIC 25–100 GB/s", run: mx1 },
         Exhibit { id: "rx1", caption: "pk::rail sweep: hierarchical gemm_rs + two-level Ulysses, 1→4 nodes, NIC 25–100 GB/s, rail vs naive vs baseline", run: rx1 },
         Exhibit { id: "gx1", caption: "Cluster GEMM family: gemm_ar + ag_gemm, 1→4 nodes, NIC 25–100 GB/s, rail vs naive vs baseline + analytic-vs-swept chunk", run: gx1 },
-        Exhibit { id: "vx1", caption: "Serving layer: tokens/s, goodput, p50/p99 latency vs offered load, PK-overlapped vs non-overlapped step kernels, 1→4 nodes (disaggregated prefill/decode past 1 node)", run: vx1 },
+        Exhibit { id: "vx1", caption: "Serving layer: tokens/s, goodput, p50/p99 latency vs offered load under Poisson/bursty/diurnal arrivals, PK-overlapped vs non-overlapped step kernels, 1→4 nodes (disaggregated prefill/decode past 1 node)", run: vx1 },
     ]
 }
 
@@ -882,6 +882,7 @@ fn vx1(fast: bool) -> Table {
         "Serving: PK-overlapped vs non-overlapped engine steps under open-loop load",
         &[
             "nodes",
+            "proc",
             "load_x",
             "offered_rps",
             "pk_tok_s",
@@ -896,6 +897,14 @@ fn vx1(fast: bool) -> Table {
     );
     let nodes: &[usize] = if fast { &[1, 2] } else { &[1, 2, 4] };
     let loads: &[f64] = if fast { &[0.8, 1.2] } else { &[0.4, 0.8, 1.2] };
+    // arrival-process axis: smooth Poisson plus the modulated generators
+    // (4x on/off bursts, sinusoidal diurnal swing). Fast mode keeps
+    // bursty — the tail-latency stressor the claims tests pin.
+    let procs: &[&str] = if fast {
+        &["poisson", "bursty"]
+    } else {
+        &["poisson", "bursty", "diurnal"]
+    };
     let n_req = if fast { 160 } else { 400 };
     let node = NodeSpec::hgx_h100();
     let model = ModelCfg::reference();
@@ -909,25 +918,38 @@ fn vx1(fast: bool) -> Table {
         // PK engine's capacity — the baseline saturates harder, which is
         // exactly the claim the p99 columns carry
         let cap = serve::capacity_probe(&pk_cfg, &pk_cost, n_req / 2, 1234);
-        for &lx in loads {
-            let rate = cap * lx;
-            let trace =
-                workload::generate(&TraceCfg::chat(ArrivalProcess::Poisson, rate, n_req, 99));
-            let rp = serve::run_with_cost(&pk_cfg, &pk_cost, &trace);
-            let rb = serve::run_with_cost(&base_cfg, &base_cost, &trace);
-            t.row(vec![
-                k.to_string(),
-                format!("{lx:.1}"),
-                format!("{rate:.1}"),
-                format!("{:.0}", rp.tokens_per_s),
-                format!("{:.0}", rb.tokens_per_s),
-                ms(rp.latency_p50),
-                ms(rb.latency_p50),
-                ms(rp.latency_p99),
-                ms(rb.latency_p99),
-                format!("{:.1}", rp.goodput_rps),
-                format!("{:.1}", rb.goodput_rps),
-            ]);
+        for &proc in procs {
+            for &lx in loads {
+                let rate = cap * lx;
+                // modulation periods scale with the trace: ~8 bursts /
+                // ~2 diurnal swings over the offered window, whatever
+                // the node count's absolute capacity
+                let window = n_req as f64 / rate;
+                let process = match proc {
+                    "poisson" => ArrivalProcess::Poisson,
+                    "bursty" => {
+                        ArrivalProcess::Bursty { burst: 4.0, on_frac: 0.2, period: window / 8.0 }
+                    }
+                    _ => ArrivalProcess::Diurnal { depth: 0.8, period: window / 2.0 },
+                };
+                let trace = workload::generate(&TraceCfg::chat(process, rate, n_req, 99));
+                let rp = serve::run_with_cost(&pk_cfg, &pk_cost, &trace);
+                let rb = serve::run_with_cost(&base_cfg, &base_cost, &trace);
+                t.row(vec![
+                    k.to_string(),
+                    proc.to_string(),
+                    format!("{lx:.1}"),
+                    format!("{rate:.1}"),
+                    format!("{:.0}", rp.tokens_per_s),
+                    format!("{:.0}", rb.tokens_per_s),
+                    ms(rp.latency_p50),
+                    ms(rb.latency_p50),
+                    ms(rp.latency_p99),
+                    ms(rb.latency_p99),
+                    format!("{:.1}", rp.goodput_rps),
+                    format!("{:.1}", rb.goodput_rps),
+                ]);
+            }
         }
     }
     t

@@ -19,12 +19,46 @@
 //!   re-sorting and re-hashing every flow's port list on every solve;
 //! * keeps a **dense port table** (port → small integer, capacity in a
 //!   flat `Vec`) so the solve never touches a `HashMap`;
-//! * maintains a slot-sorted **active list**, so `advance`,
-//!   `next_completion`, and rate assignment stop scanning dead slots;
+//! * stores flows as a **struct-of-arrays arena** (`remaining`/`rate`/
+//!   `class`/`alive` in parallel dense `Vec`s with a LIFO free list), so
+//!   the solve, `advance`, and `next_completion` touch cache-linear
+//!   memory and `start` is O(1) — no sorted active-list insert;
 //! * **memoizes** the water-fill keyed on the ordered active
 //!   `(class, members)` multiset — repeated phases of a symmetric kernel
 //!   (every wave of a GEMM+RS epilogue looks identical to the solver)
 //!   skip the solve entirely.
+//!
+//! ## Event engines: scan vs epoch-keyed heap
+//!
+//! Two event paths answer "who completes next":
+//!
+//! * [`Engine::Scan`] (default) — the reference: `advance` and
+//!   `next_completion` walk every live slot, O(A) per event.
+//! * [`Engine::Heap`] — completion candidates live in a min-heap keyed
+//!   by `(conservative completion time, slot, seq)`. Entries are
+//!   invalidated **lazily**: a rate change bumps the flow's `seq` and
+//!   pushes a fresh entry; stale entries are discarded when popped.
+//!   Between rate changes, `advance` defers the per-flow
+//!   `remaining -= rate * dt` update into a per-epoch dt log replayed
+//!   per flow on demand, so steady (timer-dominated) phases pay
+//!   O(log A) per event instead of O(A). Keys are *conservative* (the
+//!   eps subtraction plus the [`HEAP_SAFETY`] shrink put them strictly
+//!   before the true completion), so a candidate is always popped before
+//!   it can complete — and every popped candidate is then evaluated with
+//!   the exact eager-scan float expressions on its replayed `remaining`.
+//!   That replay performs the *same subtractions in the same order* as
+//!   the scan, which is what keeps the heap path **bit-identical** to it
+//!   (pinned under random churn by `tests/prop_invariants.rs` and the
+//!   pure-Python mirror in `python/tests/test_des_engine_model.py`).
+//!   Fully symmetric populations (thousands of flows tied at the same
+//!   completion time) degrade gracefully to ~scan cost × log A — the
+//!   heap wins on staggered/heterogeneous traffic, which is what serving
+//!   traces and multi-kernel models produce at 100k-flow scale.
+//!
+//! The default stays `Scan` until measured numbers from a
+//! toolchain-equipped run land in `BENCH_hotpath.json`; set
+//! `PK_FLOWNET=heap` (or construct via [`FlowNet::with_engine`]) to run
+//! everything on the heap path.
 //!
 //! The naive solver is retained as [`compute_rates`]; a property test
 //! pins the incremental path **bit-identical** to it under random flow
@@ -34,36 +68,56 @@
 //! order over those classes, so the water-fill performs the same
 //! floating-point operations in the same order as the reference.
 
+use super::OrdF64;
 use crate::hw::topology::Port;
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
 /// Handle to an active flow.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct FlowId(pub usize);
 
-#[derive(Clone, Debug)]
-struct Flow {
-    remaining: f64,
-    /// Original size; completion uses a *relative* epsilon because
-    /// `now + dt` rounds in f64 — a flow can otherwise be left with a
-    /// sub-resolution residue whose completion time rounds to `now`,
-    /// livelocking the event loop.
-    total: f64,
-    /// Interned route-signature class (shared ports + cap).
-    class: u32,
-    rate: f64,
-    alive: bool,
+/// Which event path answers `advance`/`next_completion` (see module doc).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Engine {
+    /// Reference full-scan path, O(A) per event.
+    #[default]
+    Scan,
+    /// Epoch-keyed completion heap with lazy invalidation, O(log A) per
+    /// event in steady phases; bit-identical to `Scan`.
+    Heap,
 }
 
-impl Flow {
-    #[inline]
-    fn eps(&self) -> f64 {
-        // 1e-6 relative residue: ~microsecond-relative timing slack on a
-        // full-size flow, far below the model's fidelity, comfortably
-        // above f64 rounding from (now + dt) round-trips.
-        self.total * 1e-6 + 1e-12
+impl Engine {
+    /// Engine selected by the `PK_FLOWNET` env var (`heap` opts in to the
+    /// heap path); `Scan` otherwise. Read once and cached.
+    pub fn from_env() -> Self {
+        static MODE: std::sync::OnceLock<Engine> = std::sync::OnceLock::new();
+        *MODE.get_or_init(|| match std::env::var("PK_FLOWNET").as_deref() {
+            Ok("heap") => Engine::Heap,
+            _ => Engine::Scan,
+        })
     }
 }
+
+/// Completion uses a *relative* epsilon because `now + dt` rounds in f64 —
+/// a flow can otherwise be left with a sub-resolution residue whose
+/// completion time rounds to `now`, livelocking the event loop. 1e-6
+/// relative residue: ~microsecond-relative timing slack on a full-size
+/// flow, far below the model's fidelity, comfortably above f64 rounding
+/// from `(now + dt)` round-trips.
+#[inline]
+fn flow_eps(total: f64) -> f64 {
+    total * 1e-6 + 1e-12
+}
+
+/// Heap keys are shrunk by this factor so they land strictly *before* the
+/// true completion: replay drift is ulp-scale, the 1e-9 slack is ~10^7
+/// ulps, and an early pop only costs a re-examination (the exact
+/// completion test runs on the replayed remaining either way).
+const HEAP_SAFETY: f64 = 1.0 - 1e-9;
+/// Pop-threshold slack, same scale as [`HEAP_SAFETY`].
+const HEAP_MARGIN_REL: f64 = 1e-9;
 
 /// One interned route signature: the sorted dense-port route plus the cap,
 /// with a live-member count maintained by `start`/`advance`.
@@ -91,12 +145,19 @@ pub struct SolverStats {
 /// The set of active flows plus port capacities.
 #[derive(Debug, Default)]
 pub struct FlowNet {
+    engine: Engine,
     capacity: HashMap<Port, f64>,
-    flows: Vec<Flow>,
+    // ---- SoA flow arena: parallel dense arrays indexed by slot, slots
+    // recycled LIFO through `free`. Live slots are enumerated by a dense
+    // scan (ascending slot order — the class first-appearance order the
+    // solver's bit-identity to the naive reference depends on).
+    f_remaining: Vec<f64>,
+    f_total: Vec<f64>,
+    f_rate: Vec<f64>,
+    f_class: Vec<u32>,
+    f_alive: Vec<bool>,
     free: Vec<usize>,
-    /// Live slots, kept sorted ascending: class first-appearance order
-    /// during a solve must match the naive reference's slot scan.
-    active: Vec<usize>,
+    n_live: usize,
     rates_dirty: bool,
     /// Cumulative bytes completed per port (conservation accounting,
     /// verified by property tests and used by the report layer).
@@ -127,6 +188,23 @@ pub struct FlowNet {
     // ---- water-fill memo keyed on the ordered active class multiset
     solve_cache: HashMap<Vec<(u32, u32)>, Vec<f64>>,
     stats: SolverStats,
+
+    // ---- Engine::Heap state (untouched in Scan mode)
+    /// Min-heap of `(conservative completion key, slot, seq)`.
+    heap: BinaryHeap<Reverse<(OrdF64, u32, u64)>>,
+    /// Per-slot entry generation; a popped entry with a mismatched seq is
+    /// stale (lazy invalidation).
+    f_seq: Vec<u64>,
+    /// Per-slot count of `dt_log` entries already applied to remaining.
+    f_synced: Vec<usize>,
+    /// dts applied since rates were last assigned (cleared on solve).
+    dt_log: Vec<f64>,
+    /// Accumulated elapsed time; keys/pruning only, never in outputs.
+    vtime: f64,
+    /// Reused completion scratch (`advance` returns a borrow of it).
+    done_buf: Vec<FlowId>,
+    /// Reused candidate scratch for heap pops.
+    cand_buf: Vec<u32>,
 }
 
 /// Memo entries are bounded; a sweep that somehow produces more distinct
@@ -135,8 +213,19 @@ pub struct FlowNet {
 const SOLVE_CACHE_MAX: usize = 8192;
 
 impl FlowNet {
+    /// A net on the engine selected by `PK_FLOWNET` (default: scan).
     pub fn new() -> Self {
-        Self::default()
+        Self::with_engine(Engine::from_env())
+    }
+
+    /// A net pinned to a specific event engine (test/bench hook).
+    pub fn with_engine(engine: Engine) -> Self {
+        FlowNet { engine, ..Default::default() }
+    }
+
+    /// The event engine this net runs on.
+    pub fn engine(&self) -> Engine {
+        self.engine
     }
 
     /// Declare a port's capacity in bytes/s. Ports default to infinite
@@ -195,21 +284,33 @@ impl FlowNet {
         };
         self.classes[class as usize].active_members += 1;
         self.rates_dirty = true;
-        let flow = Flow { remaining: bytes, total: bytes, class, rate: 0.0, alive: true };
+        // rate starts at 0.0 even on a recycled slot: the heap engine
+        // re-keys on rate-bit *change*, so a stale rate here could
+        // swallow the re-key that gives the flow its completion entry.
         let slot = if let Some(idx) = self.free.pop() {
-            self.flows[idx] = flow;
+            self.f_remaining[idx] = bytes;
+            self.f_total[idx] = bytes;
+            self.f_rate[idx] = 0.0;
+            self.f_class[idx] = class;
+            self.f_alive[idx] = true;
             idx
         } else {
-            self.flows.push(flow);
-            self.flows.len() - 1
+            self.f_remaining.push(bytes);
+            self.f_total.push(bytes);
+            self.f_rate.push(0.0);
+            self.f_class.push(class);
+            self.f_alive.push(true);
+            self.f_seq.push(0);
+            self.f_synced.push(0);
+            self.f_remaining.len() - 1
         };
-        let pos = self.active.partition_point(|&s| s < slot);
-        self.active.insert(pos, slot);
+        self.f_synced[slot] = self.dt_log.len();
+        self.n_live += 1;
         FlowId(slot)
     }
 
     pub fn n_active(&self) -> usize {
-        self.active.len()
+        self.n_live
     }
 
     /// Solver instrumentation for the run so far.
@@ -219,64 +320,195 @@ impl FlowNet {
 
     /// Advance all flows by `dt` seconds at current rates; returns flows
     /// that completed (remaining hit zero), in ascending slot order. Rates
-    /// must be current (`ensure_rates` is called lazily).
-    pub fn advance(&mut self, dt: f64) -> Vec<FlowId> {
-        if self.active.is_empty() {
-            return vec![];
+    /// must be current (`ensure_rates` is called lazily). The returned
+    /// slice borrows a reused scratch buffer — no per-event allocation.
+    pub fn advance(&mut self, dt: f64) -> &[FlowId] {
+        self.done_buf.clear();
+        if self.n_live == 0 {
+            return &self.done_buf;
         }
         self.ensure_rates();
-        let mut done = vec![];
-        for &s in &self.active {
-            let f = &mut self.flows[s];
-            let finishes_now = f.rate > 0.0 && f.remaining <= f.rate * dt * (1.0 + 1e-12);
+        match self.engine {
+            Engine::Scan => self.advance_scan(dt),
+            Engine::Heap => self.advance_heap(dt),
+        }
+        if !self.done_buf.is_empty() {
+            for i in 0..self.done_buf.len() {
+                let s = self.done_buf[i].0;
+                self.free.push(s);
+                self.classes[self.f_class[s] as usize].active_members -= 1;
+            }
+            self.n_live -= self.done_buf.len();
+            self.rates_dirty = true;
+        }
+        &self.done_buf
+    }
+
+    fn advance_scan(&mut self, dt: f64) {
+        for s in 0..self.f_alive.len() {
+            if !self.f_alive[s] {
+                continue;
+            }
+            let rate = self.f_rate[s];
+            let finishes_now = rate > 0.0 && self.f_remaining[s] <= rate * dt * (1.0 + 1e-12);
             if dt > 0.0 {
-                f.remaining -= f.rate * dt;
+                self.f_remaining[s] -= rate * dt;
             }
             // complete when the finish time fell inside the window or the
             // residue is within the relative epsilon (fp-rounding guards)
-            if finishes_now || (f.remaining <= f.eps() && f.rate > 0.0) {
-                f.alive = false;
-                f.remaining = 0.0;
-                done.push(FlowId(s));
+            if finishes_now || (self.f_remaining[s] <= flow_eps(self.f_total[s]) && rate > 0.0) {
+                self.f_alive[s] = false;
+                self.f_remaining[s] = 0.0;
+                self.done_buf.push(FlowId(s));
             }
         }
-        if !done.is_empty() {
-            for &id in &done {
-                self.free.push(id.0);
-                let c = self.flows[id.0].class as usize;
-                self.classes[c].active_members -= 1;
-            }
-            let flows = &self.flows;
-            self.active.retain(|&s| flows[s].alive);
-            self.rates_dirty = true;
+    }
+
+    fn advance_heap(&mut self, dt: f64) {
+        if dt > 0.0 {
+            self.dt_log.push(dt);
         }
-        done
+        self.vtime += dt;
+        let margin = (self.vtime.abs() + dt) * HEAP_MARGIN_REL + 1e-18;
+        self.cand_buf.clear();
+        while let Some(&Reverse((OrdF64(k), slot, seq))) = self.heap.peek() {
+            let s = slot as usize;
+            if self.f_seq[s] != seq || !self.f_alive[s] {
+                self.heap.pop();
+                continue;
+            }
+            if k > self.vtime + margin {
+                break;
+            }
+            self.heap.pop();
+            // replay prior steps, then mirror the scan's per-advance body:
+            // finishes_now on the pre-subtraction remaining, subtract, eps
+            let rate = self.f_rate[s];
+            self.replay(s, self.dt_log.len() - usize::from(dt > 0.0));
+            let finishes_now = rate > 0.0 && self.f_remaining[s] <= rate * dt * (1.0 + 1e-12);
+            if dt > 0.0 {
+                self.f_remaining[s] -= rate * dt;
+            }
+            self.f_synced[s] = self.dt_log.len();
+            if finishes_now || (self.f_remaining[s] <= flow_eps(self.f_total[s]) && rate > 0.0) {
+                self.f_alive[s] = false;
+                self.f_remaining[s] = 0.0;
+                self.f_seq[s] += 1;
+                self.done_buf.push(FlowId(s));
+            } else {
+                self.cand_buf.push(slot);
+            }
+        }
+        // early pops re-key *after* the loop — re-pushing inside it could
+        // re-examine the same entry forever when its key sits inside the
+        // pop margin
+        for i in 0..self.cand_buf.len() {
+            self.push_entry(self.cand_buf[i] as usize);
+        }
+        // heap pops come out in key order; the contract (and the scan
+        // path, and the free-list LIFO discipline) is ascending slot order
+        self.done_buf.sort_unstable_by_key(|id| id.0);
     }
 
     /// Earliest time-from-now at which some active flow completes.
     pub fn next_completion(&mut self) -> Option<f64> {
-        if self.active.is_empty() {
+        if self.n_live == 0 {
             return None;
         }
         self.ensure_rates();
+        match self.engine {
+            Engine::Scan => self.next_completion_scan(),
+            Engine::Heap => self.next_completion_heap(),
+        }
+    }
+
+    fn next_completion_scan(&mut self) -> Option<f64> {
         let mut best = f64::INFINITY;
-        for &s in &self.active {
-            let f = &self.flows[s];
-            if f.rate > 0.0 {
+        for s in 0..self.f_alive.len() {
+            if !self.f_alive[s] {
+                continue;
+            }
+            let rate = self.f_rate[s];
+            if rate > 0.0 {
                 // aim half an epsilon *past* the completion threshold so
                 // the subsequent advance() robustly crosses it
-                best = best.min(((f.remaining - 0.5 * f.eps()).max(0.0)) / f.rate);
+                best = best
+                    .min((self.f_remaining[s] - 0.5 * flow_eps(self.f_total[s])).max(0.0) / rate);
             }
         }
-        (best.is_finite()).then_some(best)
+        best.is_finite().then_some(best)
+    }
+
+    fn next_completion_heap(&mut self) -> Option<f64> {
+        let mut best = f64::INFINITY;
+        self.cand_buf.clear();
+        while let Some(&Reverse((OrdF64(k), slot, seq))) = self.heap.peek() {
+            let s = slot as usize;
+            if self.f_seq[s] != seq || !self.f_alive[s] {
+                self.heap.pop();
+                continue;
+            }
+            // a remaining entry's true value sits at or above its
+            // conservative key, so nothing past this bound can beat best
+            if best.is_finite()
+                && k > self.vtime + best + ((self.vtime.abs() + best) * HEAP_MARGIN_REL + 1e-18)
+            {
+                break;
+            }
+            self.heap.pop();
+            self.replay(s, self.dt_log.len());
+            best = best
+                .min((self.f_remaining[s] - 0.5 * flow_eps(self.f_total[s])).max(0.0)
+                    / self.f_rate[s]);
+            self.cand_buf.push(slot);
+        }
+        for i in 0..self.cand_buf.len() {
+            self.push_entry(self.cand_buf[i] as usize);
+        }
+        best.is_finite().then_some(best)
+    }
+
+    /// Push a fresh heap entry for live slot `s` (rate must be > 0),
+    /// invalidating any previous entry via the seq bump.
+    fn push_entry(&mut self, s: usize) {
+        let rel =
+            (self.f_remaining[s] - flow_eps(self.f_total[s])).max(0.0) / self.f_rate[s]
+                * HEAP_SAFETY;
+        self.f_seq[s] += 1;
+        self.heap.push(Reverse((OrdF64(self.vtime + rel), s as u32, self.f_seq[s])));
+    }
+
+    /// Apply `dt_log[f_synced[s]..upto]` to the flow's remaining — the
+    /// same subtraction sequence the eager scan performed, deferred.
+    fn replay(&mut self, s: usize, upto: usize) {
+        let rate = self.f_rate[s];
+        for i in self.f_synced[s]..upto {
+            self.f_remaining[s] -= rate * self.dt_log[i];
+        }
+        self.f_synced[s] = upto;
+    }
+
+    /// Catch every live flow up under the *current* rates and clear the
+    /// epoch's dt log (heap engine; called before rates change).
+    fn materialize_all(&mut self) {
+        for s in 0..self.f_alive.len() {
+            if self.f_alive[s] {
+                self.replay(s, self.dt_log.len());
+                self.f_synced[s] = 0;
+            }
+        }
+        self.dt_log.clear();
     }
 
     fn ensure_rates(&mut self) {
         if !self.rates_dirty {
             return;
         }
+        if self.engine == Engine::Heap {
+            self.materialize_all();
+        }
         self.rates_dirty = false;
-        if self.active.is_empty() {
+        if self.n_live == 0 {
             return;
         }
         self.stats.solves += 1;
@@ -284,8 +516,11 @@ impl FlowNet {
         // ---- distinct active classes, first-appearance order over
         // ascending live slots (matches the naive reference's flow scan)
         self.order.clear();
-        for &s in &self.active {
-            let c = self.flows[s].class;
+        for s in 0..self.f_alive.len() {
+            if !self.f_alive[s] {
+                continue;
+            }
+            let c = self.f_class[s];
             if self.class_seen[c as usize] != self.epoch {
                 self.class_seen[c as usize] = self.epoch;
                 self.class_local[c as usize] = self.order.len() as u32;
@@ -308,9 +543,30 @@ impl FlowNet {
             }
             self.solve_cache.insert(self.key_buf.clone(), self.class_rate.clone());
         }
-        for &s in &self.active {
-            let li = self.class_local[self.flows[s].class as usize] as usize;
-            self.flows[s].rate = self.class_rate[li];
+        for s in 0..self.f_alive.len() {
+            if !self.f_alive[s] {
+                continue;
+            }
+            let li = self.class_local[self.f_class[s] as usize] as usize;
+            let r = self.class_rate[li];
+            match self.engine {
+                Engine::Scan => self.f_rate[s] = r,
+                Engine::Heap => {
+                    // rate changed: the old entry's key is no longer
+                    // conservative — bump seq (lazy invalidation), re-key.
+                    // Unchanged rates keep their entry: the old key stays
+                    // conservative, which is what makes memo-hit phases
+                    // cheap.
+                    if r.to_bits() != self.f_rate[s].to_bits() {
+                        self.f_rate[s] = r;
+                        if r > 0.0 {
+                            self.push_entry(s);
+                        } else {
+                            self.f_seq[s] += 1;
+                        }
+                    }
+                }
+            }
         }
     }
 
@@ -398,7 +654,7 @@ impl FlowNet {
     /// live flows; a completed flow's slot keeps its last assigned rate.
     pub fn rate(&mut self, id: FlowId) -> f64 {
         self.ensure_rates();
-        self.flows[id.0].rate
+        self.f_rate[id.0]
     }
 
     /// Drop all memoized solves (test hook: forces the next `ensure_rates`
@@ -634,9 +890,8 @@ mod tests {
         assert!((r[0] - 70.0).abs() < 1e-9);
     }
 
-    #[test]
-    fn flownet_advance_and_complete() {
-        let mut net = FlowNet::new();
+    fn advance_and_complete_on(engine: Engine) {
+        let mut net = FlowNet::with_engine(engine);
         net.set_capacity(egress(0), 100.0);
         let a = net.start(50.0, vec![egress(0)], 1e9);
         let b = net.start(100.0, vec![egress(0)], 1e9);
@@ -655,14 +910,26 @@ mod tests {
     }
 
     #[test]
+    fn flownet_advance_and_complete() {
+        advance_and_complete_on(Engine::Scan);
+    }
+
+    #[test]
+    fn flownet_advance_and_complete_heap() {
+        advance_and_complete_on(Engine::Heap);
+    }
+
+    #[test]
     fn flownet_reuses_slots() {
-        let mut net = FlowNet::new();
-        net.set_capacity(egress(0), 10.0);
-        let a = net.start(10.0, vec![egress(0)], 1e9);
-        let dt = net.next_completion().unwrap();
-        net.advance(dt);
-        let b = net.start(10.0, vec![egress(0)], 1e9);
-        assert_eq!(a.0, b.0, "slot reused");
+        for engine in [Engine::Scan, Engine::Heap] {
+            let mut net = FlowNet::with_engine(engine);
+            net.set_capacity(egress(0), 10.0);
+            let a = net.start(10.0, vec![egress(0)], 1e9);
+            let dt = net.next_completion().unwrap();
+            net.advance(dt);
+            let b = net.start(10.0, vec![egress(0)], 1e9);
+            assert_eq!(a.0, b.0, "slot reused ({engine:?})");
+        }
     }
 
     #[test]
@@ -699,11 +966,11 @@ mod tests {
             let a = net.start(10.0, vec![egress(0)], 1e9);
             let b = net.start(10.0, vec![egress(0)], 1e9);
             let dt = net.next_completion().unwrap();
-            let done = net.advance(dt);
             // slot recycling is LIFO, so generation ids swap after the
             // first round; completions always come out slot-ascending
             let mut want = vec![a, b];
             want.sort_by_key(|id| id.0);
+            let done = net.advance(dt);
             assert_eq!(done, want);
         }
         let s = net.solver_stats();
@@ -759,5 +1026,68 @@ mod tests {
         let b = net.start(1000.0, vec![egress(0)], 1e9);
         let _ = b;
         assert_eq!(net.rate(a), 25.0);
+    }
+
+    #[test]
+    fn heap_engine_bit_identical_on_partial_advances() {
+        // timer-style partial advances inside one epoch: the heap net
+        // defers the subtractions into its dt log, the scan net applies
+        // them eagerly — every observable must still agree bitwise.
+        let mut scan = FlowNet::with_engine(Engine::Scan);
+        let mut heap = FlowNet::with_engine(Engine::Heap);
+        for net in [&mut scan, &mut heap] {
+            net.set_capacity(egress(0), 173.5);
+            net.set_capacity(ingress(1), 91.25);
+        }
+        let mut ids = vec![];
+        for i in 0..6 {
+            let b = 100.0 + 37.0 * i as f64;
+            ids.push(scan.start(b, vec![egress(0), ingress(1)], 333.25));
+            heap.start(b, vec![egress(0), ingress(1)], 333.25);
+        }
+        for k in 0..5 {
+            let dt = scan.next_completion().unwrap();
+            assert_eq!(heap.next_completion().unwrap().to_bits(), dt.to_bits());
+            let frac = 0.125 * (k + 1) as f64;
+            let want = scan.advance(dt * frac).to_vec();
+            let got = heap.advance(dt * frac).to_vec();
+            assert_eq!(got, want);
+            for &id in &ids {
+                assert_eq!(heap.rate(id).to_bits(), scan.rate(id).to_bits());
+            }
+        }
+        // drain both: completion batches must mirror to the end
+        loop {
+            let (a, b) = (scan.next_completion(), heap.next_completion());
+            match (a, b) {
+                (None, None) => break,
+                (Some(x), Some(y)) => assert_eq!(x.to_bits(), y.to_bits()),
+                other => panic!("engines diverged: {other:?}"),
+            }
+            let dt = a.unwrap();
+            let want = scan.advance(dt).to_vec();
+            let got = heap.advance(dt).to_vec();
+            assert_eq!(got, want);
+        }
+        assert_eq!(scan.n_active(), 0);
+        assert_eq!(heap.n_active(), 0);
+    }
+
+    #[test]
+    fn heap_engine_survives_capacity_rekey() {
+        // mid-run capacity change: old heap entries are stale (lazy
+        // invalidation), the re-key must still produce correct timings
+        let mut net = FlowNet::with_engine(Engine::Heap);
+        net.set_capacity(egress(0), 100.0);
+        let a = net.start(1000.0, vec![egress(0)], 1e9);
+        assert_eq!(net.rate(a), 100.0);
+        let _ = net.next_completion().unwrap(); // seed a heap entry
+        net.set_capacity(egress(0), 50.0);
+        let b = net.start(1000.0, vec![egress(0)], 1e9);
+        assert_eq!(net.rate(a), 25.0);
+        let dt = net.next_completion().unwrap();
+        assert!((dt - 40.0).abs() < 1e-2, "{dt}");
+        let done = net.advance(dt);
+        assert_eq!(done, vec![a, b]);
     }
 }

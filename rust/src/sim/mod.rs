@@ -8,7 +8,10 @@
 //! This module provides the reusable pieces:
 //! * [`OrdF64`] — totally ordered simulation time,
 //! * [`EventQueue`] — timer events,
-//! * [`flownet::FlowNet`] — bandwidth-shared flows with max-min fairness,
+//! * [`flownet::FlowNet`] — bandwidth-shared flows with max-min fairness
+//!   (scan or epoch-keyed-heap event engine),
+//! * [`partition::PartitionedFlowNet`] — the same net split into
+//!   port-disjoint per-node partitions executed in parallel,
 //! * [`trace`] — optional execution traces (the profiling substrate for
 //!   the §Perf pass and for debugging schedules),
 //! * [`workload`] — deterministic open-loop request traces (Poisson,
@@ -18,11 +21,13 @@
 //!   per-step cost is calibrated from the timed kernel schedules.
 
 pub mod flownet;
+pub mod partition;
 pub mod serve;
 pub mod trace;
 pub mod workload;
 
-pub use flownet::{FlowId, FlowNet};
+pub use flownet::{Engine, FlowId, FlowNet};
+pub use partition::PartitionedFlowNet;
 pub use trace::{Span, Trace};
 
 /// Simulation time in seconds with a total order (panics on NaN, which the

@@ -1,0 +1,355 @@
+//! Partitioned parallel [`FlowNet`]: per-node-group nets coupled only
+//! through the NIC boundary.
+//!
+//! Every route the executor produces touches ports of exactly one node —
+//! `p2p_ports`/`multicast_ports`/`ld_reduce_ports` assert same-node, HBM
+//! and copy-engine ports are device-local — **except** RDMA, whose route
+//! is `[NicEgress(src), NicIngress(dst)]` and *only* NIC ports
+//! (`hw::topology::rdma_ports`). Port sets therefore split cleanly into
+//! `num_nodes` in-node partitions plus one NIC *boundary* partition, and
+//! max-min fair water-filling decomposes exactly: a class's rate depends
+//! only on headroom of ports it crosses, and no class crosses two
+//! partitions. Each partition is an ordinary [`FlowNet`] (scan or heap
+//! engine), so the whole incremental-solver + memo + heap machinery
+//! applies per partition.
+//!
+//! ## Determinism
+//!
+//! `advance` fans the partitions out over [`crate::util::par::par_map_mut`]
+//! when enough flows are live to amortize the scoped threads, then merges
+//! completions by **ascending global slot** — the same order the
+//! monolithic net emits — and recycles global slots through the same LIFO
+//! free-list discipline. `next_completion` is the min over partitions,
+//! which is order-independent for f64 (no NaNs in the model). Parallel
+//! output is byte-identical to serial, and partitioned output is
+//! bit-identical to the monolithic net (claims-tested on a multi-node
+//! kernel in `tests/integration_paper_claims.rs`): the water-fill rounds
+//! interleave differently, but with port-disjoint partitions every class
+//! level is computed from the same inputs by the same expressions, so the
+//! fill fixes the same rates — the only theoretical divergence channel is
+//! a *cross-partition* level near-tie inside the solver's 1e-12 relative
+//! tie tolerance with non-equal bits, which real port/curve constants sit
+//! nowhere near (exact symmetric ties are bit-equal and decompose
+//! cleanly).
+//!
+//! Solver stats are reported summed across partitions; a decomposed run
+//! legitimately performs a different number of (smaller) solves than the
+//! monolithic net, so equivalence tests compare timings/events/bytes, not
+//! stats.
+
+use super::flownet::{Engine, FlowId, FlowNet, SolverStats};
+use crate::hw::topology::Port;
+use std::collections::HashMap;
+
+/// Below this many live flows, partition fan-out runs serially: a scoped
+/// thread spawn per event costs more than the per-partition scans it
+/// saves. Crossed only by cluster-scale populations.
+const PAR_FANOUT_MIN_FLOWS: usize = 4096;
+
+/// True when `PK_NET_PARTITION=1` asks [`crate::exec::timed::TimedExec`]
+/// to run every simulation on the partitioned net. Read once and cached.
+pub fn partitioned_from_env() -> bool {
+    static ON: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ON.get_or_init(|| matches!(std::env::var("PK_NET_PARTITION").as_deref(), Ok("1")))
+}
+
+/// A [`FlowNet`] split into per-node partitions + a NIC boundary
+/// partition, with the monolithic net's exact external contract
+/// (global `FlowId`s, ascending-slot completion batches, LIFO slot
+/// recycling).
+#[derive(Debug)]
+pub struct PartitionedFlowNet {
+    devices_per_node: usize,
+    /// `nets[0..num_nodes]` are the in-node partitions; `nets[num_nodes]`
+    /// is the NIC boundary partition (cross-node RDMA flows).
+    nets: Vec<FlowNet>,
+    /// Global slot → (partition, local slot).
+    map: Vec<(u32, u32)>,
+    /// Per-partition local slot → global slot.
+    rev: Vec<Vec<usize>>,
+    free: Vec<usize>,
+    n_live: usize,
+    /// Merged completion scratch (`advance` returns a borrow of it).
+    done_buf: Vec<FlowId>,
+    par_threshold: usize,
+}
+
+impl PartitionedFlowNet {
+    /// Partitioned net for `num_nodes` × `devices_per_node` devices, on
+    /// the engine selected by `PK_FLOWNET`.
+    pub fn new(num_nodes: usize, devices_per_node: usize) -> Self {
+        Self::with_engine(num_nodes, devices_per_node, Engine::from_env())
+    }
+
+    /// Partitioned net pinned to a specific per-partition event engine.
+    pub fn with_engine(num_nodes: usize, devices_per_node: usize, engine: Engine) -> Self {
+        assert!(num_nodes >= 1 && devices_per_node >= 1);
+        let n_parts = num_nodes + 1; // + NIC boundary
+        PartitionedFlowNet {
+            devices_per_node,
+            nets: (0..n_parts).map(|_| FlowNet::with_engine(engine)).collect(),
+            map: vec![],
+            rev: vec![vec![]; n_parts],
+            free: vec![],
+            n_live: 0,
+            done_buf: vec![],
+            par_threshold: PAR_FANOUT_MIN_FLOWS,
+        }
+    }
+
+    /// Override the parallel fan-out threshold (bench/test hook; `0`
+    /// forces the scoped-thread path on every event).
+    pub fn with_par_threshold(mut self, threshold: usize) -> Self {
+        self.par_threshold = threshold;
+        self
+    }
+
+    /// Which partition a port belongs to: NIC ports → boundary, anything
+    /// else → its device's node.
+    fn partition_of(&self, p: Port) -> usize {
+        match p {
+            Port::NicEgress(_) | Port::NicIngress(_) => self.nets.len() - 1,
+            Port::Egress(d)
+            | Port::Ingress(d)
+            | Port::Pcie(d)
+            | Port::SwitchReduce(d)
+            | Port::Hbm(d)
+            | Port::CopyEngine(d) => {
+                let node = d.0 / self.devices_per_node;
+                assert!(node + 1 < self.nets.len(), "device {d:?} outside the cluster");
+                node
+            }
+        }
+    }
+
+    pub fn set_capacity(&mut self, port: Port, bytes_per_s: f64) {
+        let pi = self.partition_of(port);
+        self.nets[pi].set_capacity(port, bytes_per_s);
+    }
+
+    /// Start a flow; the route must lie in a single partition (every
+    /// executor route does — see module doc).
+    pub fn start(&mut self, bytes: f64, ports: Vec<Port>, cap: f64) -> FlowId {
+        let pi = self.partition_of(ports[0]);
+        debug_assert!(
+            ports.iter().all(|&p| self.partition_of(p) == pi),
+            "route crosses partitions: {ports:?}"
+        );
+        let local = self.nets[pi].start(bytes, ports, cap);
+        // global slot allocation mirrors the monolithic net: LIFO reuse,
+        // append otherwise
+        let g = if let Some(g) = self.free.pop() {
+            self.map[g] = (pi as u32, local.0 as u32);
+            g
+        } else {
+            self.map.push((pi as u32, local.0 as u32));
+            self.map.len() - 1
+        };
+        if self.rev[pi].len() <= local.0 {
+            self.rev[pi].resize(local.0 + 1, usize::MAX);
+        }
+        self.rev[pi][local.0] = g;
+        self.n_live += 1;
+        FlowId(g)
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.n_live
+    }
+
+    /// Advance every partition by `dt`; completions merged in ascending
+    /// global slot order (byte-identical serial vs parallel — each
+    /// partition's batch is deterministic and the merge ignores thread
+    /// scheduling).
+    pub fn advance(&mut self, dt: f64) -> &[FlowId] {
+        self.done_buf.clear();
+        if self.n_live == 0 {
+            return &self.done_buf;
+        }
+        let locals: Vec<Vec<FlowId>> = if self.n_live >= self.par_threshold {
+            crate::util::par::par_map_mut(
+                crate::util::par::default_threads(),
+                &mut self.nets,
+                |_, net| net.advance(dt).to_vec(),
+            )
+        } else {
+            self.nets.iter_mut().map(|net| net.advance(dt).to_vec()).collect()
+        };
+        for (pi, local) in locals.iter().enumerate() {
+            for &lid in local {
+                self.done_buf.push(FlowId(self.rev[pi][lid.0]));
+            }
+        }
+        self.done_buf.sort_unstable_by_key(|id| id.0);
+        for i in 0..self.done_buf.len() {
+            self.free.push(self.done_buf[i].0);
+        }
+        self.n_live -= self.done_buf.len();
+        &self.done_buf
+    }
+
+    /// Earliest completion across partitions (min is order-independent).
+    pub fn next_completion(&mut self) -> Option<f64> {
+        if self.n_live == 0 {
+            return None;
+        }
+        let locals: Vec<Option<f64>> = if self.n_live >= self.par_threshold {
+            crate::util::par::par_map_mut(
+                crate::util::par::default_threads(),
+                &mut self.nets,
+                |_, net| net.next_completion(),
+            )
+        } else {
+            self.nets.iter_mut().map(|net| net.next_completion()).collect()
+        };
+        let mut best = f64::INFINITY;
+        for t in locals.into_iter().flatten() {
+            best = best.min(t);
+        }
+        best.is_finite().then_some(best)
+    }
+
+    /// Current rate of a flow (test/inspection hook).
+    pub fn rate(&mut self, id: FlowId) -> f64 {
+        let (pi, local) = self.map[id.0];
+        self.nets[pi as usize].rate(FlowId(local as usize))
+    }
+
+    /// Drain cumulative per-port byte accounting (partitions are
+    /// port-disjoint, so the union has no collisions).
+    pub fn take_port_bytes(&mut self) -> HashMap<Port, f64> {
+        let mut out = HashMap::new();
+        for net in &mut self.nets {
+            out.extend(std::mem::take(&mut net.port_bytes));
+        }
+        out
+    }
+
+    /// Solver instrumentation summed across partitions (see module doc:
+    /// not comparable to a monolithic run's stats).
+    pub fn solver_stats(&self) -> SolverStats {
+        let mut s = SolverStats::default();
+        for net in &self.nets {
+            let p = net.solver_stats();
+            s.solves += p.solves;
+            s.memo_hits += p.memo_hits;
+            s.classes += p.classes;
+            s.ports += p.ports;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::DeviceId;
+
+    // 2 nodes × 2 devices: devices 0,1 on node 0; 2,3 on node 1
+    fn mono_and_part(engine: Engine) -> (FlowNet, PartitionedFlowNet) {
+        let mut mono = FlowNet::with_engine(engine);
+        let mut part = PartitionedFlowNet::with_engine(2, 2, engine);
+        for d in 0..4 {
+            for p in [
+                Port::Egress(DeviceId(d)),
+                Port::Ingress(DeviceId(d)),
+                Port::Hbm(DeviceId(d)),
+                Port::NicEgress(DeviceId(d)),
+                Port::NicIngress(DeviceId(d)),
+            ] {
+                let c = match p {
+                    Port::NicEgress(_) | Port::NicIngress(_) => 50.0,
+                    Port::Hbm(_) => 3350.0,
+                    _ => 450.0,
+                };
+                mono.set_capacity(p, c);
+                part.set_capacity(p, c);
+            }
+        }
+        (mono, part)
+    }
+
+    /// In-node p2p on both nodes + cross-node RDMA, driven to drain:
+    /// every observable (ids, completion batches, timings, rates) must
+    /// match the monolithic net bitwise.
+    fn drain_matches_mono(engine: Engine, threshold: usize) {
+        let (mut mono, mut part) = mono_and_part(engine);
+        part = part.with_par_threshold(threshold);
+        let routes: [Vec<Port>; 5] = [
+            vec![Port::Egress(DeviceId(0)), Port::Ingress(DeviceId(1))],
+            vec![Port::Egress(DeviceId(2)), Port::Ingress(DeviceId(3))],
+            vec![Port::NicEgress(DeviceId(1)), Port::NicIngress(DeviceId(2))],
+            vec![Port::Hbm(DeviceId(0))],
+            vec![Port::NicEgress(DeviceId(3)), Port::NicIngress(DeviceId(0))],
+        ];
+        let mut ids = vec![];
+        for (i, route) in routes.iter().enumerate() {
+            let bytes = 100.0 + 37.5 * i as f64;
+            let a = mono.start(bytes, route.clone(), 1e9);
+            let b = part.start(bytes, route.clone(), 1e9);
+            assert_eq!(a, b, "global slot allocation must match");
+            ids.push(a);
+        }
+        let mut restarts = 0;
+        loop {
+            let (tm, tp) = (mono.next_completion(), part.next_completion());
+            match (tm, tp) {
+                (None, None) => break,
+                (Some(x), Some(y)) => assert_eq!(x.to_bits(), y.to_bits()),
+                other => panic!("nets diverged: {other:?}"),
+            }
+            for &id in &ids {
+                assert_eq!(mono.rate(id).to_bits(), part.rate(id).to_bits());
+            }
+            let dt = tm.unwrap() * 0.75; // partial steps exercise replay/merge
+            let want = mono.advance(dt).to_vec();
+            let got = part.advance(dt).to_vec();
+            assert_eq!(got, want);
+            // restart a few completed routes to exercise slot recycling
+            for d in &want {
+                if d.0 < routes.len() && restarts < 8 {
+                    restarts += 1;
+                    let r = routes[d.0].clone();
+                    let a = mono.start(64.0, r.clone(), 1e9);
+                    let b = part.start(64.0, r, 1e9);
+                    assert_eq!(a, b, "recycled slot must match");
+                }
+            }
+        }
+        assert_eq!(mono.n_active(), 0);
+        assert_eq!(part.n_active(), 0);
+        let pb = part.take_port_bytes();
+        for (p, v) in std::mem::take(&mut mono.port_bytes) {
+            assert_eq!(pb[&p].to_bits(), v.to_bits(), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn partitioned_bit_identical_to_mono_scan() {
+        drain_matches_mono(Engine::Scan, usize::MAX);
+    }
+
+    #[test]
+    fn partitioned_bit_identical_to_mono_heap() {
+        drain_matches_mono(Engine::Heap, usize::MAX);
+    }
+
+    #[test]
+    fn parallel_fanout_byte_identical_to_serial() {
+        // threshold 0 forces the scoped-thread path on every event; the
+        // merge discipline must hide the thread scheduling entirely
+        drain_matches_mono(Engine::Scan, 0);
+        drain_matches_mono(Engine::Heap, 0);
+    }
+
+    #[test]
+    fn nic_flows_land_in_boundary_partition() {
+        let (_, mut part) = mono_and_part(Engine::Scan);
+        part.start(10.0, vec![Port::NicEgress(DeviceId(0)), Port::NicIngress(DeviceId(2))], 1e9);
+        part.start(10.0, vec![Port::Egress(DeviceId(0)), Port::Ingress(DeviceId(1))], 1e9);
+        let s = part.nets[2].solver_stats(); // boundary partition
+        assert_eq!(s.ports, 2, "RDMA flow interns only NIC ports: {s:?}");
+        assert_eq!(part.nets[0].solver_stats().ports, 2);
+        assert_eq!(part.nets[1].solver_stats().ports, 0);
+    }
+}

@@ -81,6 +81,52 @@ where
     par_map_with(default_threads(), items, f)
 }
 
+/// Like [`par_map_with`] but over *mutable* items — the fan-out for
+/// stateful shards (the partitioned `FlowNet` advances every partition
+/// in place on each event). Items are split into contiguous chunks, one
+/// scoped thread per chunk, and results are joined in input order, so
+/// the output (and every mutation) is byte-identical to a serial
+/// `iter_mut().map()` regardless of scheduling. Nested calls from inside
+/// any pool worker degrade to serial (same [`IN_POOL`] guard), and a
+/// worker panic is re-raised with its original payload.
+pub fn par_map_mut<T, R, F>(threads: usize, items: &mut [T], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = if IN_POOL.with(|p| p.get()) { 1 } else { threads.clamp(1, n.max(1)) };
+    if threads == 1 || n <= 1 {
+        return items.iter_mut().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(ci, ch)| {
+                s.spawn(move || {
+                    IN_POOL.with(|p| p.set(true));
+                    ch.iter_mut()
+                        .enumerate()
+                        .map(|(j, it)| f(ci * chunk + j, it))
+                        .collect::<Vec<R>>()
+                })
+            })
+            .collect();
+        let mut out = Vec::with_capacity(n);
+        for h in handles {
+            match h.join() {
+                Ok(v) => out.extend(v),
+                Err(e) => std::panic::resume_unwind(e),
+            }
+        }
+        out
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +165,46 @@ mod tests {
         let want: Vec<usize> =
             outer.iter().map(|&x| (0..16).map(|y| x * 100 + y).sum()).collect();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_map_mut_mutates_in_place_and_orders_results() {
+        let mut serial: Vec<u64> = (0..37).collect();
+        let mut parallel = serial.clone();
+        let rs = par_map_mut(1, &mut serial, |i, x| {
+            *x += 1;
+            *x * i as u64
+        });
+        let rp = par_map_mut(8, &mut parallel, |i, x| {
+            *x += 1;
+            *x * i as u64
+        });
+        assert_eq!(serial, parallel);
+        assert_eq!(rs, rp);
+        assert_eq!(parallel[5], 6);
+    }
+
+    #[test]
+    fn par_map_mut_nested_degrades_to_serial() {
+        let mut outer: Vec<u64> = (0..6).collect();
+        let got = par_map_mut(3, &mut outer, |_, x| {
+            let mut inner: Vec<u64> = (0..4).collect();
+            par_map_mut(4, &mut inner, |_, y| *y + *x).iter().sum::<u64>()
+        });
+        let want: Vec<u64> = (0..6u64).map(|x| (0..4u64).map(|y| y + x).sum()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "mut boom")]
+    fn par_map_mut_panic_propagates() {
+        let mut items: Vec<usize> = (0..8).collect();
+        let _ = par_map_mut(4, &mut items, |_, x| {
+            if *x == 3 {
+                panic!("mut boom");
+            }
+            *x
+        });
     }
 
     #[test]

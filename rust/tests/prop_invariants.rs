@@ -835,7 +835,7 @@ fn prop_incremental_solver_bit_identical_to_naive() {
                 // advance to (or part-way to) the next completion
                 let dt = net.next_completion().expect("live flows must progress");
                 let frac = *rng.choose(&[1.0, 1.0, 0.5]);
-                let done = net.advance(dt * frac);
+                let done = net.advance(dt * frac).to_vec();
                 for w in done.windows(2) {
                     if w[0].0 >= w[1].0 {
                         return Err(format!("completions out of slot order: {done:?}"));
@@ -847,6 +847,109 @@ fn prop_incremental_solver_bit_identical_to_naive() {
                 }
             }
             check(&mut net, &specs, &live)?;
+        }
+        Ok(())
+    });
+}
+
+/// The epoch-keyed completion-heap engine must be **bit-identical** to
+/// the retained scan reference under random churn: same next-completion
+/// bits, same completion batches (same slots, same order), same per-flow
+/// rate bits, and the same number of dirty solves — across starts,
+/// partial/overshooting advances, and live capacity reconfiguration
+/// (which invalidates heap entries via the lazy seq bump). Mirrors the
+/// pure-Python protocol model in `python/tests/test_des_engine_model.py`.
+#[test]
+fn prop_heap_engine_bit_identical_to_scan() {
+    use pk::sim::flownet::{Engine, FlowNet};
+    run_prop("heap_vs_scan", 100, |rng| {
+        let n_dev = rng.usize_in(2, 6);
+        let mut scan = FlowNet::with_engine(Engine::Scan);
+        let mut heap = FlowNet::with_engine(Engine::Heap);
+        let mut ports_used = vec![];
+        for d in 0..n_dev {
+            for p in [Port::Egress(DeviceId(d)), Port::Ingress(DeviceId(d)), Port::Hbm(DeviceId(d))]
+            {
+                let c = 50.0 + 450.0 * rng.f64();
+                scan.set_capacity(p, c);
+                heap.set_capacity(p, c);
+                ports_used.push(p);
+            }
+        }
+        let cap_pool = [40.0, 120.0, 333.25];
+        let mut live: Vec<pk::sim::flownet::FlowId> = vec![];
+        for _ in 0..rng.usize_in(20, 70) {
+            let roll = rng.f64();
+            if live.is_empty() || roll < 0.45 {
+                let src = rng.usize_in(0, n_dev);
+                let mut dst = rng.usize_in(0, n_dev);
+                if dst == src {
+                    dst = (dst + 1) % n_dev;
+                }
+                let ports = match rng.usize_in(0, 3) {
+                    0 => vec![Port::Egress(DeviceId(src)), Port::Ingress(DeviceId(dst))],
+                    1 => vec![Port::Ingress(DeviceId(dst)), Port::Egress(DeviceId(src))],
+                    _ => vec![Port::Hbm(DeviceId(src))],
+                };
+                let cap = *rng.choose(&cap_pool);
+                let bytes = 10.0 + 1000.0 * rng.f64();
+                let a = scan.start(bytes, ports.clone(), cap);
+                let b = heap.start(bytes, ports, cap);
+                if a != b {
+                    return Err(format!("slot allocation diverged: {a:?} vs {b:?}"));
+                }
+                live.push(a);
+            } else if roll < 0.55 {
+                // live reconfiguration: old heap entries go stale and the
+                // next solve must re-key exactly the flows whose rate
+                // bits change
+                let p = *rng.choose(&ports_used);
+                let c = 50.0 + 450.0 * rng.f64();
+                scan.set_capacity(p, c);
+                heap.set_capacity(p, c);
+            } else {
+                let a = scan.next_completion().expect("live flows must progress");
+                let b = heap.next_completion().expect("live flows must progress");
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("next_completion diverged: {a:e} vs {b:e}"));
+                }
+                let frac = *rng.choose(&[1.0, 1.0, 1.0, 0.5, 0.25, 1.25]);
+                let done_s = scan.advance(a * frac).to_vec();
+                let done_h = heap.advance(a * frac).to_vec();
+                if done_s != done_h {
+                    return Err(format!("completions diverged: {done_s:?} vs {done_h:?}"));
+                }
+                for d in &done_s {
+                    live.retain(|id| id != d);
+                }
+            }
+            for &id in &live {
+                let (rs, rh) = (scan.rate(id), heap.rate(id));
+                if rs.to_bits() != rh.to_bits() {
+                    return Err(format!("rate diverged on slot {}: {rs:e} vs {rh:e}", id.0));
+                }
+            }
+        }
+        // drain both to empty: the batches must mirror to the end
+        while scan.n_active() > 0 {
+            let a = scan.next_completion().expect("scan must drain");
+            let b = heap.next_completion().expect("heap must drain");
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("drain next_completion diverged: {a:e} vs {b:e}"));
+            }
+            let done_s = scan.advance(a).to_vec();
+            let done_h = heap.advance(a).to_vec();
+            if done_s != done_h {
+                return Err(format!("drain completions diverged: {done_s:?} vs {done_h:?}"));
+            }
+        }
+        if heap.n_active() != 0 {
+            return Err(format!("heap retains {} flows after drain", heap.n_active()));
+        }
+        // lockstep drivers must have triggered the same dirty solves
+        let (ss, hs) = (scan.solver_stats(), heap.solver_stats());
+        if ss.solves != hs.solves || ss.memo_hits != hs.memo_hits {
+            return Err(format!("solver stats diverged: {ss:?} vs {hs:?}"));
         }
         Ok(())
     });

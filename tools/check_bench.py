@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Validate a BENCH_hotpath snapshot (schema ``pk-hotpath-v2``).
+"""Validate a BENCH_hotpath snapshot (schema ``pk-hotpath-v3``).
 
 CI runs the hotpath bench in ``--smoke`` mode and used to just ``cat`` the
 resulting ``BENCH_hotpath.smoke.json`` — which proved the file existed,
@@ -8,7 +8,8 @@ snapshot and fails on schema drift or degenerate values:
 
 * wrong/missing ``schema`` tag, or a missing ``sections`` object;
 * any required section absent (e.g. the solver memo-hit rate, the
-  event-throughput metric, or the v2 serving-engine section);
+  event-throughput metric, the v2 serving-engine section, or the v3
+  scan-vs-heap and serial-vs-partitioned head-to-head sections);
 * non-numeric / non-finite / negative section values;
 * degenerate rates (``event_throughput_per_s == 0`` would mean the DES
   ran no events — a broken bench, not a slow one);
@@ -29,7 +30,7 @@ import json
 import math
 import sys
 
-SCHEMA = "pk-hotpath-v2"
+SCHEMA = "pk-hotpath-v3"
 
 # Section keys the emitter must always write (bench names and derived
 # metrics). Keep in sync with rust/benches/hotpath.rs; the bench-gate
@@ -49,6 +50,18 @@ REQUIRED_SECTIONS = [
     # v2: the trace-driven serving engine (sim::serve) must be benched
     "serve: colocated chat trace @ 0.8x capacity",
     "serve_tokens_per_s",
+    # v3: event-engine head-to-head (scan vs epoch-keyed heap) and
+    # serial-vs-partitioned cluster DES must both be benched
+    "flownet steady drain (scan): staggered flows",
+    "flownet steady drain (heap): staggered flows",
+    "engine_events_per_s_scan",
+    "engine_events_per_s_heap",
+    "engine_heap_speedup",
+    "timed_exec: hier AR @ 4 nodes (serial net)",
+    "timed_exec: hier AR @ 4 nodes (partitioned net)",
+    "cluster_events_per_s_serial",
+    "cluster_events_per_s_partitioned",
+    "partitioned_net_speedup",
 ]
 
 # sections that must be strictly positive when present with a value
@@ -57,6 +70,12 @@ POSITIVE_SECTIONS = {
     "copy_throughput_gb_s",
     "tile_math_gflop_s",
     "serve_tokens_per_s",
+    "engine_events_per_s_scan",
+    "engine_events_per_s_heap",
+    "engine_heap_speedup",
+    "cluster_events_per_s_serial",
+    "cluster_events_per_s_partitioned",
+    "partitioned_net_speedup",
 }
 
 

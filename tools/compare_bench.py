@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_hotpath snapshots and fail on throughput regressions.
+
+``check_bench.py`` validates one snapshot's *shape*; this tool compares
+two snapshots' *values*: every throughput section (key containing
+``_per_s`` — DES events/s, engine head-to-head events/s, serve tokens/s)
+present in both files is diffed, and a drop of more than the threshold
+(default 15%) fails the run.
+
+A comparison only happens when **both** sides carry a measured number.
+The committed ``BENCH_hotpath.json`` baseline is schema-only (all-null)
+until the first toolchain-equipped full run lands real values, so this
+gate is a deliberate no-op today — but it is wired into CI now, so the
+moment measured numbers are committed, events/s is tracked
+release-to-release with zero further plumbing.
+
+Usage::
+
+    python3 tools/compare_bench.py BASELINE.json CURRENT.json [--threshold 0.15]
+
+Exit status: 0 when no comparable section regressed (including the
+all-null no-op), 1 on a regression, 2 on malformed input (unreadable
+file, invalid JSON, missing ``sections`` object, bad threshold).
+
+No third-party imports: runs on any Python 3. Covered by
+``python/tests/test_compare_bench.py``.
+"""
+
+import json
+import math
+import sys
+
+# Substring selecting the throughput sections to compare. Time-valued
+# sections (bench seconds) are skipped: smoke runs are 1-iteration noise
+# and times also legitimately grow when a bench's workload is extended,
+# while the *_per_s metrics are normalized per event/token.
+RATE_KEY = "_per_s"
+
+DEFAULT_THRESHOLD = 0.15
+
+
+def load_sections(path):
+    """Return the snapshot's sections dict, or raise ValueError."""
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError) as exc:
+        raise ValueError(f"cannot read {path}: {exc}") from exc
+    if not isinstance(doc, dict) or not isinstance(doc.get("sections"), dict):
+        raise ValueError(f"{path}: snapshot has no 'sections' object")
+    return doc["sections"]
+
+
+def numeric(value):
+    return (
+        not isinstance(value, bool)
+        and isinstance(value, (int, float))
+        and math.isfinite(value)
+    )
+
+
+def compare(base_sections, cur_sections, threshold=DEFAULT_THRESHOLD):
+    """Return (regressions, compared, skipped) for the rate sections.
+
+    ``regressions`` is a list of problem strings; ``compared`` counts the
+    sections with measured values on both sides; ``skipped`` counts rate
+    sections present in both but not comparable (null/non-numeric on
+    either side — e.g. the schema-only baseline).
+    """
+    regressions = []
+    compared = 0
+    skipped = 0
+    for key in sorted(set(base_sections) & set(cur_sections)):
+        if RATE_KEY not in key:
+            continue
+        base, cur = base_sections[key], cur_sections[key]
+        if not numeric(base) or not numeric(cur) or base <= 0:
+            skipped += 1
+            continue
+        compared += 1
+        drop = (base - cur) / base
+        if drop > threshold:
+            regressions.append(
+                f"{key}: {cur:.4g} is {drop * 100.0:.1f}% below baseline "
+                f"{base:.4g} (threshold {threshold * 100.0:.0f}%)"
+            )
+    return regressions, compared, skipped
+
+
+def main(argv):
+    threshold = DEFAULT_THRESHOLD
+    paths = []
+    it = iter(argv)
+    for a in it:
+        if a == "--threshold":
+            try:
+                threshold = float(next(it, "nan"))
+            except ValueError:
+                threshold = float("nan")
+            if not math.isfinite(threshold) or threshold <= 0:
+                print("compare_bench: --threshold needs a positive number")
+                return 2
+        elif a.startswith("--"):
+            print(f"compare_bench: unknown flag {a!r}")
+            return 2
+        else:
+            paths.append(a)
+    if len(paths) != 2:
+        print("usage: compare_bench.py [--threshold 0.15] <baseline.json> <current.json>")
+        return 2
+    try:
+        base = load_sections(paths[0])
+        cur = load_sections(paths[1])
+    except ValueError as exc:
+        print(f"compare_bench: {exc}")
+        return 2
+    regressions, compared, skipped = compare(base, cur, threshold)
+    for r in regressions:
+        print(f"compare_bench: REGRESSION {r}")
+    if regressions:
+        return 1
+    if compared == 0:
+        print(
+            f"compare_bench: no comparable rate sections "
+            f"({skipped} skipped — schema-only baseline?); nothing to gate"
+        )
+    else:
+        print(
+            f"compare_bench: ok — {compared} rate section(s) within "
+            f"{threshold * 100.0:.0f}% of baseline ({skipped} skipped)"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
