@@ -62,9 +62,11 @@ def test_required_sections_match_the_committed_baseline():
     "break_fn, expect",
     [
         (lambda d: d.update(schema="pk-hotpath-v0"), "schema drift"),
-        # stale pre-serve / pre-engine snapshots must be rejected outright
+        # stale pre-serve / pre-engine / pre-fault snapshots must be
+        # rejected outright
         (lambda d: d.update(schema="pk-hotpath-v1"), "schema drift"),
         (lambda d: d.update(schema="pk-hotpath-v2"), "schema drift"),
+        (lambda d: d.update(schema="pk-hotpath-v3"), "schema drift"),
         (lambda d: d.pop("sections"), "missing 'sections'"),
         (lambda d: d["sections"].pop("solver_memo_hit_rate"), "missing section"),
         (lambda d: d["sections"].pop("event_throughput_per_s"), "missing section"),
@@ -95,6 +97,14 @@ def test_required_sections_match_the_committed_baseline():
         ),
         (lambda d: d["sections"].update({"cluster_events_per_s_partitioned": 0}), "degenerate"),
         (lambda d: d["sections"].update({"partitioned_net_speedup": 0}), "degenerate"),
+        # v4: the fault-injection / degraded-rail bench is mandatory and
+        # its slowdown ratio must be non-degenerate
+        (
+            lambda d: d["sections"].pop("timed_exec: GEMM+RS rail reroute @ 1 failed NIC"),
+            "missing section",
+        ),
+        (lambda d: d["sections"].pop("fault_slowdown"), "missing section"),
+        (lambda d: d["sections"].update({"fault_slowdown": 0}), "degenerate"),
         (lambda d: d.update(events=0), "degenerate"),
         (lambda d: d.pop("events"), "missing or degenerate"),
     ],

@@ -218,3 +218,199 @@ def test_rail_ships_exactly_one_p_th_of_the_scatter_rows():
         assert all(nic[g] == (k - 1) * rows for g in range(n))
         scatter = (k - 1) * p * rows  # every device ships every remote row
         assert scatter == nic[0] * p
+
+
+# --------------------------------------------------------------------------
+# Degraded-rail reroute mirror (rail.rs RailHealth / RerouteState / emit).
+#
+# A failed NIC takes a device's rail out of service in both directions;
+# the device itself stays healthy. The planner reroutes NVLink-first:
+# a failed *source* rail hands the payload to a healthy same-node donor
+# (round-robin over the donor pool, one shared cursor — planner-call
+# order), the donor's rail carries the RDMA; a failed *destination* rail
+# lands the RDMA on a healthy device of the destination node, whose
+# forwarder delivers over NVLink to the original peer. Forwarder waits
+# are cumulative in planner order, so the protocol cannot deadlock.
+
+FWD_TX = 0
+FWD_RX = 1
+
+
+def build_reroute_ops(k, p, failed, flows):
+    """Mirror of pk::rail's health-masked emit() for a list of rail flows.
+
+    `flows` is [(src, dst_node, value, nbytes)] in planner-call order —
+    the order matters, exactly as in Rust: both the donor round-robin
+    cursor and the cumulative forwarder thresholds are planner-order
+    state. Returns (workers, sems, out, nic_eg, nic_in); NIC bytes are
+    structural (accounted at build time), values flow at run time.
+    """
+    n = k * p
+    rr = [0]  # shared round-robin cursor (list: closure-mutable)
+    fwd = {}
+    caller = {}
+    workers = []
+    sems = {}
+    out = {dev: 0.0 for dev in range(n)}
+    nic_eg = [0.0] * n
+    nic_in = [0.0] * n
+
+    def donor(node):
+        ranks = [r for r in range(p) if node * p + r not in failed]
+        assert ranks, f"every NIC on node {node} failed: cannot reroute"
+        r = ranks[rr[0] % len(ranks)]
+        rr[0] += 1
+        return node * p + r
+
+    def forwarder(side, dev):
+        key = (side, dev)
+        if key not in fwd:
+            workers.append([])
+            sems[key] = 0
+            fwd[key] = {"w": len(workers) - 1, "sem": key, "cnt": 0}
+        return fwd[key]
+
+    def caller_w(src):
+        if src not in caller:
+            workers.append([])
+            caller[src] = len(workers) - 1
+        return caller[src]
+
+    for src, dst_node, value, nbytes in flows:
+        w = caller_w(src)
+        final_dst = dst_node * p + src % p  # the rail peer (never changes)
+        tx = src if src not in failed else donor(src // p)
+        rx = final_dst if final_dst not in failed else donor(dst_node)
+        # (1) failed source: NVLink handoff to the tx donor, whose
+        # forwarder waits on the cumulative handoff counter
+        if tx == src:
+            rdma_w = w
+        else:
+            f = forwarder(FWD_TX, tx)
+            workers[w].append(("sig", f["sem"], 1))
+            f["cnt"] += 1
+            rdma_w = f["w"]
+            workers[rdma_w].append(("wait", f["sem"], f["cnt"]))
+        # (2) the rail hop proper, on the donor's NIC
+        nic_eg[tx] += nbytes
+        nic_in[rx] += nbytes
+        if rx == final_dst:
+            workers[rdma_w].append(("deliver", final_dst, value))
+            continue
+        # (3) failed destination: the rx donor's forwarder delivers the
+        # landed payload over NVLink to the original peer
+        g = forwarder(FWD_RX, rx)
+        workers[rdma_w].append(("sig", g["sem"], 1))
+        g["cnt"] += 1
+        workers[g["w"]].append(("wait", g["sem"], g["cnt"]))
+        workers[g["w"]].append(("deliver", final_dst, value))
+    return workers, sems, out, nic_eg, nic_in
+
+
+def run_reroute(workers, sems, out, rng):
+    """Random-order cooperative scheduler; True iff every worker retires."""
+    pc = [0] * len(workers)
+    while True:
+        progressed = False
+        order = list(range(len(workers)))
+        rng.shuffle(order)
+        for w in order:
+            ops = workers[w]
+            while pc[w] < len(ops):
+                kind, key, val = ops[pc[w]]
+                if kind == "sig":
+                    sems[key] += val
+                elif kind == "wait":
+                    if sems[key] < val:
+                        break
+                elif kind == "deliver":
+                    out[key] += val
+                pc[w] += 1
+                progressed = True
+        if all(pc[w] == len(workers[w]) for w in range(len(workers))):
+            return True
+        if not progressed:
+            return False
+
+
+def all_to_all_rail_flows(k, p, rng):
+    """Every (device, remote node) rail flow once, planner order shuffled,
+    unit bytes, random integer values."""
+    flows = []
+    for src in range(k * p):
+        for kn in range(k):
+            if kn != src // p:
+                flows.append((src, kn, float(rng.randint(-8, 8)), 1.0))
+    rng.shuffle(flows)
+    return flows
+
+
+def pick_failed(rng, k, p, count):
+    """`count` failed NICs on distinct nodes (never darkening a node)."""
+    nodes = rng.sample(range(k), count)
+    return {node * p + rng.randrange(p) for node in nodes}
+
+
+def test_reroute_deadlock_free_and_conserves_values_with_failed_rails():
+    rng = random.Random(0xFA11)
+    for case in range(40):
+        k = rng.randint(2, 3)
+        p = rng.randint(2, 4)
+        failed = pick_failed(rng, k, p, rng.randint(1, 2))
+        flows = all_to_all_rail_flows(k, p, rng)
+        workers, sems, out, nic_eg, nic_in = build_reroute_ops(k, p, failed, flows)
+        for trial in range(3):
+            s = dict(sems)
+            o = dict(out)
+            ok = run_reroute(workers, s, o, random.Random(case * 131 + trial))
+            assert ok, f"deadlock: case {case} (k={k} p={p} failed={failed})"
+            # every value lands on the ORIGINAL rail peer, failed NIC or
+            # not — the reroute moves only the transport
+            for dev in range(k * p):
+                want = sum(v for (src, kn, v, _) in flows if kn * p + src % p == dev)
+                assert o[dev] == want, f"case {case} dev {dev}: {o[dev]} vs {want}"
+        # a failed NIC carries exactly zero bytes in either direction
+        for f in failed:
+            assert nic_eg[f] == 0.0 and nic_in[f] == 0.0, f"case {case}: dead NIC {f} used"
+
+
+def test_reroute_nic_byte_accounting_is_exact_times_p_minus_1():
+    rng = random.Random(0xD01C)
+    for case in range(30):
+        k = rng.randint(2, 3)
+        p = rng.randint(2, 5)
+        failed_dev = rng.randrange(k * p)
+        failed = {failed_dev}
+        flows = all_to_all_rail_flows(k, p, rng)
+        _, _, _, nic_eg, nic_in = build_reroute_ops(k, p, failed, flows)
+        n = k * p
+        # conservation: every flow crosses a NIC exactly once
+        assert sum(nic_eg) == len(flows) == sum(nic_in)
+        assert nic_eg[failed_dev] == 0.0 and nic_in[failed_dev] == 0.0
+        # the failed rail's (k-1) egress flows and (k-1) ingress flows
+        # spread over its node's P-1 healthy donors: each donor carries
+        # its own (k-1) flows plus a balanced share of the rerouted ones
+        # (round-robin: shares differ by at most one flow) — the x(P-1)
+        # redistribution, never a doubled single rail
+        node = failed_dev // p
+        donors = [node * p + r for r in range(p) if node * p + r != failed_dev]
+        for direction, nic in (("egress", nic_eg), ("ingress", nic_in)):
+            extras = [nic[d] - (k - 1) for d in donors]
+            assert sum(extras) == k - 1, f"case {case} {direction}: rerouted bytes lost"
+            assert all(x >= 0 for x in extras)
+        # the donor cursor is shared across the TX and RX sides (one
+        # planner-order round-robin, exactly as in Rust), so balance holds
+        # for each donor's COMBINED extra load: the 2(k-1) rerouted flows
+        # spread within one flow of each other over the P-1 donors
+        combined = [nic_eg[d] + nic_in[d] - 2 * (k - 1) for d in donors]
+        assert sum(combined) == 2 * (k - 1), f"case {case}: rerouted bytes lost"
+        assert max(combined) - min(combined) <= 1.0, (
+            f"case {case}: round-robin must balance within one flow: {combined}"
+        )
+        assert max(combined) <= -(-2 * (k - 1) // (p - 1)), (
+            f"case {case}: a donor carries more than its 1/(P-1) share"
+        )
+        # devices off the failed node are untouched
+        for d in range(n):
+            if d // p != node:
+                assert nic_eg[d] == k - 1 and nic_in[d] == k - 1

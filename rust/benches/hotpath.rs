@@ -259,6 +259,42 @@ fn main() {
         h.metric("partitioned_net_speedup", tser / tpar, &format!("{:>11.2}x", tser / tpar));
     }
 
+    // ---- fault-injection path (v4): health-masked rail reroute under a
+    // permanent hard NIC failure. Benches the fault hook + capacity-churn
+    // overhead in TimedExec and records the *simulated* slowdown of the
+    // rerouted plan vs the healthy rail plan — the number fx1 bounds at
+    // P/(P-1) + tolerance. A degraded plan that still touched the dead
+    // NIC would deadlock here, so the smoke run also re-proves avoidance.
+    {
+        use pk::hw::ClusterSpec;
+        use pk::kernels::gemm_rs::ClusterPath;
+        use pk::pk::rail::RailHealth;
+        use pk::sim::fault::{FaultSpec, LinkFault};
+        let cluster = ClusterSpec::hgx_h100_pod(2);
+        let fcfg = GemmKernelCfg::new(cluster.node.clone(), 8192, 4096, 1024);
+        let healthy_plan = gemm_rs::build_cluster(&fcfg, &cluster, Schedule::IntraSm, None);
+        let health = RailHealth::all_healthy(&cluster).fail_nic(1);
+        let degraded_plan = gemm_rs::build_cluster_health(
+            &fcfg,
+            &cluster,
+            Schedule::IntraSm,
+            ClusterPath::RailReduce,
+            &health,
+            None,
+        );
+        let spec = FaultSpec::seeded(7)
+            .with_nic_fault(LinkFault { device: 1, at: 0.0, frac: 0.0, restore_at: None });
+        let healthy_exec = TimedExec::on_cluster(cluster.clone());
+        let faulted_exec = TimedExec::on_cluster(cluster).with_faults(spec);
+        let t_healthy = healthy_exec.run(&healthy_plan).total_time;
+        let mut t_degraded = 0.0;
+        h.bench("timed_exec: GEMM+RS rail reroute @ 1 failed NIC", 5, 3, || {
+            t_degraded = faulted_exec.run(&degraded_plan).total_time;
+        });
+        let slow = t_degraded / t_healthy;
+        h.metric("fault_slowdown", slow, &format!("{slow:>11.2}x vs healthy rail"));
+    }
+
     // ---- parallel sweep driver: the fig5-style partition grid, serial
     // vs the scoped-thread pool (deterministic output either way)
     if !smoke {
@@ -360,7 +396,7 @@ fn main() {
     // checks) write next to it so 1-iteration noise never clobbers the
     // committed numbers.
     let mut top = BTreeMap::new();
-    top.insert("schema".to_string(), Json::Str("pk-hotpath-v3".to_string()));
+    top.insert("schema".to_string(), Json::Str("pk-hotpath-v4".to_string()));
     top.insert(
         "note".to_string(),
         Json::Str(

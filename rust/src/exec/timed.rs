@@ -11,7 +11,8 @@ use crate::hw::cluster::ClusterSpec;
 use crate::hw::spec::NodeSpec;
 use crate::hw::topology::{Port, Topology};
 use crate::plan::{Op, Plan, Route, SyncScope, TransferSpec};
-use crate::sim::flownet::{FlowId, FlowNet, SolverStats};
+use crate::sim::fault::FaultSpec;
+use crate::sim::flownet::{Engine, FlowId, FlowNet, SolverStats};
 use crate::sim::partition::{partitioned_from_env, PartitionedFlowNet};
 use crate::sim::trace::{SpanKind, Trace};
 use crate::sim::EventQueue;
@@ -143,6 +144,15 @@ pub struct TimedExec {
     /// `PK_NET_PARTITION=1`). Output is bit-identical to the monolithic
     /// net either way (claims-tested).
     pub partitioned_net: bool,
+    /// Injected fault scenario ([`crate::sim::fault`]): compiled once per
+    /// run against the declared baseline capacities and applied as timed
+    /// `set_capacity` events, so both flow engines and both nets see the
+    /// identical schedule.
+    pub faults: Option<FaultSpec>,
+    /// Pin the flow-event engine for this executor (`None` = the
+    /// `PK_FLOWNET` env selection). Lets determinism pins race
+    /// Scan/Heap × mono/partitioned in one process.
+    pub engine: Option<Engine>,
 }
 
 impl TimedExec {
@@ -151,12 +161,20 @@ impl TimedExec {
             cluster: ClusterSpec::single(node),
             trace_enabled: false,
             partitioned_net: false,
+            faults: None,
+            engine: None,
         }
     }
 
     /// Timed execution over a multi-node cluster (NIC ports + RDMA curve).
     pub fn on_cluster(cluster: ClusterSpec) -> Self {
-        TimedExec { cluster, trace_enabled: false, partitioned_net: false }
+        TimedExec {
+            cluster,
+            trace_enabled: false,
+            partitioned_net: false,
+            faults: None,
+            engine: None,
+        }
     }
 
     pub fn with_trace(mut self) -> Self {
@@ -167,6 +185,19 @@ impl TimedExec {
     /// Opt this executor into the partitioned parallel net.
     pub fn with_partitioned_net(mut self) -> Self {
         self.partitioned_net = true;
+        self
+    }
+
+    /// Inject a fault scenario into every run of this executor. An empty
+    /// spec is dropped (keeps the no-fault hot path branch-free).
+    pub fn with_faults(mut self, spec: FaultSpec) -> Self {
+        self.faults = (!spec.is_empty()).then_some(spec);
+        self
+    }
+
+    /// Pin the flow-event engine (overrides the `PK_FLOWNET` selection).
+    pub fn with_flow_engine(mut self, engine: Engine) -> Self {
+        self.engine = Some(engine);
         self
     }
 
@@ -219,23 +250,42 @@ impl TimedExec {
     pub fn run(&self, plan: &Plan) -> TimedResult {
         let g = &self.cluster.node.gpu;
         let topo = self.cluster.topology();
+        let engine = self.engine.unwrap_or_else(Engine::from_env);
         let mut net = if self.partitioned_net || partitioned_from_env() {
-            NetBox::Part(PartitionedFlowNet::new(topo.num_nodes(), topo.devices_per_node))
+            NetBox::Part(PartitionedFlowNet::with_engine(
+                topo.num_nodes(),
+                topo.devices_per_node,
+                engine,
+            ))
         } else {
-            NetBox::Mono(FlowNet::new())
+            NetBox::Mono(FlowNet::with_engine(engine))
         };
+        let mut baseline: Vec<(Port, f64)> = vec![];
         for d in topo.devices() {
-            net.set_capacity(Port::Egress(d), g.nvlink_bw);
-            net.set_capacity(Port::Ingress(d), g.nvlink_bw);
-            net.set_capacity(Port::Pcie(d), g.pcie_bw);
-            net.set_capacity(Port::Hbm(d), g.hbm_bw);
-            net.set_capacity(Port::CopyEngine(d), g.nvlink_bw * g.ce_peak_frac);
-            net.set_capacity(Port::SwitchReduce(d), g.nvlink_bw);
+            baseline.push((Port::Egress(d), g.nvlink_bw));
+            baseline.push((Port::Ingress(d), g.nvlink_bw));
+            baseline.push((Port::Pcie(d), g.pcie_bw));
+            baseline.push((Port::Hbm(d), g.hbm_bw));
+            baseline.push((Port::CopyEngine(d), g.nvlink_bw * g.ce_peak_frac));
+            baseline.push((Port::SwitchReduce(d), g.nvlink_bw));
             if topo.num_nodes() > 1 {
-                net.set_capacity(Port::NicEgress(d), self.cluster.nic_bw);
-                net.set_capacity(Port::NicIngress(d), self.cluster.nic_bw);
+                baseline.push((Port::NicEgress(d), self.cluster.nic_bw));
+                baseline.push((Port::NicIngress(d), self.cluster.nic_bw));
             }
         }
+        for &(p, c) in &baseline {
+            net.set_capacity(p, c);
+        }
+        // Fault hook: compile the scenario once against the declared
+        // baseline — a pure function of (spec, baseline), so Scan/Heap and
+        // mono/partitioned nets all replay the identical schedule.
+        let mut fault_plan =
+            self.faults.as_ref().map(|s| s.compile(&baseline, self.cluster.total_devices()));
+        // Per-worker compute-duration multiplier (straggler devices).
+        let wslow: Vec<f64> = match &fault_plan {
+            Some(f) => plan.workers.iter().map(|w| f.slowdown(w.device.0)).collect(),
+            None => vec![],
+        };
 
         let n = plan.workers.len();
         let mut pc = vec![0usize; n];
@@ -274,6 +324,8 @@ impl TimedExec {
                     }
                     match &plan.workers[w].ops[pc[w]] {
                         Op::Compute { dur, label, .. } => {
+                            // straggler devices run compute slower
+                            let dur = if wslow.is_empty() { *dur } else { *dur * wslow[w] };
                             compute_busy += dur;
                             trace.record(w, SpanKind::Compute, label, now, now + dur);
                             wstate[w] = WState::Running;
@@ -351,17 +403,37 @@ impl TimedExec {
             // loses sub-ulp residues and can livelock the loop.
             let dt_timer = queue.peek_time().map(|t| (t - now).max(0.0));
             let dt_flow = net.next_completion();
+            // Pending fault events are timed too. When neither a worker
+            // timer nor a flow completion is due, only a pending
+            // *link-state* change over a stalled net can make progress (a
+            // restore un-stalls rate-0 flows); jitter resamples alone
+            // cannot create work, so they don't mask a true deadlock.
+            let dt_fault = fault_plan.as_ref().and_then(|f| {
+                let t = if dt_timer.is_none() && dt_flow.is_none() {
+                    (net.n_active() > 0).then(|| f.next_link_time()).flatten()
+                } else {
+                    f.next_time()
+                };
+                t.map(|t| (t - now).max(0.0))
+            });
             let dt = match (dt_timer, dt_flow) {
                 (Some(a), Some(b)) => a.min(b),
                 (Some(a), None) => a,
                 (None, Some(b)) => b,
-                (None, None) => {
-                    let stuck: Vec<&str> = (0..n)
-                        .filter(|&w| wstate[w] != WState::Done)
-                        .map(|w| plan.workers[w].label.as_str())
-                        .collect();
-                    panic!("timed deadlock at t={now}: stuck workers {stuck:?}");
-                }
+                (None, None) => match dt_fault {
+                    Some(f) => f,
+                    None => {
+                        let stuck: Vec<&str> = (0..n)
+                            .filter(|&w| wstate[w] != WState::Done)
+                            .map(|w| plan.workers[w].label.as_str())
+                            .collect();
+                        panic!("timed deadlock at t={now}: stuck workers {stuck:?}");
+                    }
+                },
+            };
+            let dt = match dt_fault {
+                Some(f) => dt.min(f),
+                None => dt,
             };
             // Advance flows by exactly dt (flows whose completion falls in
             // the window complete even if fp leaves a residue).
@@ -388,6 +460,16 @@ impl TimedExec {
             // fixed 1e-15 is below one ulp, and equal-time events would be
             // split across loop iterations.
             let tie_eps = now * 1e-12 + 1e-15;
+            // Fire fault events due now (timed capacity changes), before
+            // the timer drain so flows started at this instant already see
+            // the degraded capacities. The same tie epsilon keeps
+            // equal-time fault and timer events in one loop iteration.
+            if let Some(f) = fault_plan.as_mut() {
+                f.apply_due(now + tie_eps, &mut |port, cap| {
+                    net.set_capacity(port, cap);
+                    events += 1;
+                });
+            }
             while queue.peek_time().map(|t| t <= now + tie_eps).unwrap_or(false) {
                 let (_, ev) = queue.pop().unwrap();
                 events += 1;
@@ -710,6 +792,153 @@ mod tests {
         plan.push(w, Op::Compute { dur: 1e-4, label: "mma", effect: None });
         let a = TimedExec::new(node.clone()).run(&plan);
         let b = TimedExec::on_cluster(ClusterSpec::single(node)).run(&plan);
+        assert_eq!(a.total_time.to_bits(), b.total_time.to_bits());
+        assert_eq!(a.events, b.events);
+    }
+
+    fn rdma_xfer(src: usize, dst: usize, bytes: f64) -> Op {
+        Op::Transfer {
+            spec: TransferSpec {
+                mech: Mechanism::Tma,
+                route: Route::Rdma { src: DeviceId(src), dst: DeviceId(dst) },
+                bytes,
+                msg_bytes: 1e6,
+                n_sms: 1.0,
+            },
+            blocking: true,
+            done_sem: None,
+            done_scope: SyncScope::InterNode,
+            label: "rdma",
+            effect: None,
+        }
+    }
+
+    /// A small 2-node plan with concurrent RDMA flows + overlapped compute
+    /// — enough churn to exercise jitter resamples and a NIC degrade.
+    fn faulted_plan() -> Plan {
+        let mut plan = Plan::new();
+        for src in 0..3usize {
+            let w = plan.add_worker(DeviceId(src), Role::CommSm, format!("w{src}"));
+            plan.push(w, rdma_xfer(src, 8 + src, 40e6));
+            plan.push(w, Op::Compute { dur: 2e-4, label: "mma", effect: None });
+            plan.push(w, rdma_xfer(src, 8 + (src + 1) % 3, 20e6));
+        }
+        plan
+    }
+
+    #[test]
+    fn fault_schedule_identical_across_engines_and_nets() {
+        // the tentpole determinism pin: the compiled fault schedule is a
+        // pure function of (spec, baseline), so Scan/Heap × mono/
+        // partitioned all replay it bit-identically.
+        use crate::sim::fault::LinkFault;
+        let cluster = ClusterSpec::hgx_h100_pod(2);
+        let plan = faulted_plan();
+        let spec = FaultSpec::seeded(42).with_jitter(0.4).with_nic_fault(LinkFault {
+            device: 8,
+            at: 3e-4,
+            frac: 0.25,
+            restore_at: Some(9e-4),
+        });
+        let mut results = vec![];
+        for engine in [Engine::Scan, Engine::Heap] {
+            for part in [false, true] {
+                let mut exec = TimedExec::on_cluster(cluster.clone())
+                    .with_flow_engine(engine)
+                    .with_faults(spec.clone());
+                exec.partitioned_net = part;
+                let r = exec.run(&plan);
+                assert!(r.total_time.is_finite() && r.total_time > 0.0);
+                results.push((engine, part, r.total_time.to_bits(), r.port_bytes));
+            }
+        }
+        for w in results.windows(2) {
+            assert_eq!(
+                w[0].2, w[1].2,
+                "total_time diverged between {:?}/part={} and {:?}/part={}",
+                w[0].0, w[0].1, w[1].0, w[1].1
+            );
+            for (p, b) in &w[0].3 {
+                assert_eq!(b.to_bits(), w[1].3[p].to_bits(), "port_bytes diverged at {p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn jitter_and_degrade_only_slow_things_down() {
+        use crate::sim::fault::LinkFault;
+        let cluster = ClusterSpec::hgx_h100_pod(2);
+        let plan = faulted_plan();
+        let healthy = TimedExec::on_cluster(cluster.clone()).run(&plan).total_time;
+        let jittered = TimedExec::on_cluster(cluster.clone())
+            .with_faults(FaultSpec::seeded(7).with_jitter(0.5))
+            .run(&plan)
+            .total_time;
+        assert!(jittered >= healthy * (1.0 - 1e-9), "{jittered} vs {healthy}");
+        let degraded = TimedExec::on_cluster(cluster.clone())
+            .with_faults(FaultSpec::seeded(7).with_nic_fault(LinkFault {
+                device: 8,
+                at: 0.0,
+                frac: 0.25,
+                restore_at: None,
+            }))
+            .run(&plan)
+            .total_time;
+        assert!(degraded > healthy, "{degraded} vs {healthy}");
+    }
+
+    #[test]
+    fn hard_nic_failure_stalls_until_restore() {
+        // capacity → 0 mid-flight: the flow stalls (next_completion None);
+        // the pending restore keeps the event loop alive (no deadlock
+        // panic) and the run completes after the link returns.
+        use crate::sim::fault::LinkFault;
+        let cluster = ClusterSpec::hgx_h100_pod(2);
+        let mut plan = Plan::new();
+        let w = plan.add_worker(DeviceId(0), Role::CommSm, "t");
+        plan.push(w, rdma_xfer(0, 8, 1e9)); // ~22 ms healthy
+        let healthy = TimedExec::on_cluster(cluster.clone()).run(&plan).total_time;
+        let restore_at = 0.05;
+        let r = TimedExec::on_cluster(cluster.clone())
+            .with_faults(FaultSpec::seeded(0).with_nic_fault(LinkFault {
+                device: 8,
+                at: 1e-3,
+                frac: 0.0,
+                restore_at: Some(restore_at),
+            }))
+            .run(&plan);
+        // stalled from 1 ms to 50 ms, then finishes the remaining bytes
+        assert!(r.total_time > restore_at, "must stall past the restore: {}", r.total_time);
+        assert!(
+            r.total_time < restore_at + healthy,
+            "some bytes moved before the failure: {}",
+            r.total_time
+        );
+    }
+
+    #[test]
+    fn straggler_stretches_compute_durations() {
+        let mut plan = Plan::new();
+        for d in 0..2 {
+            let w = plan.add_worker(DeviceId(d), Role::ComputeSm, format!("c{d}"));
+            plan.push(w, Op::Compute { dur: 1e-3, label: "mma", effect: None });
+        }
+        let r = TimedExec::new(node())
+            .with_faults(FaultSpec::seeded(0).with_straggler(1, 0.5))
+            .run(&plan);
+        // device 1 computes at half rate → 2 ms critical path
+        assert!((r.total_time - 2e-3).abs() < 1e-12, "{}", r.total_time);
+        assert!((r.compute_busy - 3e-3).abs() < 1e-12, "1 ms + 2 ms busy");
+    }
+
+    #[test]
+    fn empty_fault_spec_is_bit_identical_to_no_faults() {
+        let cluster = ClusterSpec::hgx_h100_pod(2);
+        let plan = faulted_plan();
+        let a = TimedExec::on_cluster(cluster.clone()).run(&plan);
+        let b = TimedExec::on_cluster(cluster.clone())
+            .with_faults(FaultSpec::seeded(123))
+            .run(&plan);
         assert_eq!(a.total_time.to_bits(), b.total_time.to_bits());
         assert_eq!(a.events, b.events);
     }

@@ -56,7 +56,7 @@ use crate::pk::primitives::{
     all_reduce, store_add_async, store_add_async_routed, store_add_async_scoped, store_async,
     TileRef,
 };
-use crate::pk::rail::{self, RailPlanner, RailSems};
+use crate::pk::rail::{self, RailHealth, RailPlanner, RailSems};
 use crate::pk::template::Lcsc;
 use crate::plan::{Effect, MatView, Op, Plan, Role, Route, SemId, SyncScope, TransferSpec};
 use crate::xfer::Mechanism;
@@ -309,6 +309,28 @@ pub fn build_cluster_opts(
     path: ClusterPath,
     bufs: Option<&GemmArBufs>,
 ) -> Plan {
+    build_cluster_health(cfg, cluster, schedule, path, &RailHealth::all_healthy(cluster), bufs)
+}
+
+/// [`build_cluster_opts`] under a NIC health mask: rail flows touching a
+/// failed rail endpoint reroute through healthy donors over NVLink first
+/// ([`crate::pk::rail::RailHealth`]). The reroute moves only the
+/// transport — pre-reduce targets, reducer chunks, and the broadcast-back
+/// stage layout are unchanged, so the summed output is bit-identical to
+/// the healthy schedule. Degraded masks require `RailReduce`: the
+/// `Scatter` ablation's per-device RDMA unicasts have no reroute story.
+pub fn build_cluster_health(
+    cfg: &GemmKernelCfg,
+    cluster: &ClusterSpec,
+    schedule: Schedule,
+    path: ClusterPath,
+    health: &RailHealth,
+    bufs: Option<&GemmArBufs>,
+) -> Plan {
+    assert!(
+        !health.any_failed() || path == ClusterPath::RailReduce,
+        "degraded NICs are only survivable on the RailReduce path"
+    );
     assert_eq!(cfg.node.num_devices, cluster.node.num_devices, "cfg.node must match cluster.node");
     assert_eq!(cfg.node.gpu.arch, cluster.node.gpu.arch, "cfg.node must match cluster.node");
     if cluster.num_nodes == 1 {
@@ -340,7 +362,7 @@ pub fn build_cluster_opts(
     };
     let use_rail = path == ClusterPath::RailReduce;
     let rdma_chunk = crate::pk::tuner::resolve_rdma_chunk(cfg.rdma_chunk, cluster, chunk_bytes);
-    let railp = RailPlanner::new(cluster, rdma_chunk);
+    let railp = RailPlanner::new(cluster, rdma_chunk).with_health(health.clone());
     // wave structure of the per-node-pair rail flows (timing mode; the
     // functional mode ships whole chunks in single flows)
     let waves = railp.waves(chunk_bytes, 1, rail::MAX_WAVES);

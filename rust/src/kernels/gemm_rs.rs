@@ -37,7 +37,7 @@ use crate::mem::pgl::ReduceOp;
 use crate::mem::tile::Shape4;
 use crate::mem::{BufId, MemPool, ELEM_BYTES};
 use crate::pk::primitives::{store_add_async_routed, store_add_async_scoped, TileRef};
-use crate::pk::rail::{self, wave_share, RailPlanner, RailSems};
+use crate::pk::rail::{self, wave_share, RailHealth, RailPlanner, RailSems};
 use crate::pk::sync;
 use crate::pk::template::Lcsc;
 use crate::plan::{Effect, MatView, Op, Plan, SemId, SyncScope};
@@ -163,6 +163,28 @@ pub fn build_cluster_opts(
     path: ClusterPath,
     bufs: Option<&GemmRsBufs>,
 ) -> Plan {
+    build_cluster_health(cfg, cluster, schedule, path, &RailHealth::all_healthy(cluster), bufs)
+}
+
+/// [`build_cluster_opts`] under a NIC health mask: rail flows whose source
+/// or destination rail endpoint is failed reroute through healthy donors
+/// over NVLink first ([`crate::pk::rail::RailHealth`]). Only the transport
+/// moves — the reduced output is bit-identical to the healthy schedule.
+/// Degraded masks require the `RailReduce` path: the per-device `Scatter`
+/// baseline has no reroute story (its RDMA store-adds would ride dead
+/// NICs), which is exactly the robustness gap the `fx1` exhibit shows.
+pub fn build_cluster_health(
+    cfg: &GemmKernelCfg,
+    cluster: &ClusterSpec,
+    schedule: Schedule,
+    path: ClusterPath,
+    health: &RailHealth,
+    bufs: Option<&GemmRsBufs>,
+) -> Plan {
+    assert!(
+        !health.any_failed() || path == ClusterPath::RailReduce,
+        "degraded NICs are only survivable on the RailReduce path"
+    );
     // cfg carries a NodeSpec too (tiling, SM partition math reads it);
     // it must describe the same node hardware the cluster is built from.
     assert_eq!(cfg.node.num_devices, cluster.node.num_devices, "cfg.node must match cluster.node");
@@ -190,7 +212,7 @@ pub fn build_cluster_opts(
     // for this kernel's largest rail flow: one pre-reduced chunk)
     let max_flow = rows_per_dev as f64 * (cfg.tile_m * cfg.n) as f64 * ELEM_BYTES as f64;
     let rdma_chunk = crate::pk::tuner::resolve_rdma_chunk(cfg.rdma_chunk, cluster, max_flow);
-    let railp = RailPlanner::new(cluster, rdma_chunk);
+    let railp = RailPlanner::new(cluster, rdma_chunk).with_health(health.clone());
     // pre-reduce contribution counters per (aggregator device, owner node):
     // bumped by every node-local partial landing in the aggregator's stage.
     let prered: Vec<Vec<SemId>> =

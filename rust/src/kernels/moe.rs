@@ -56,7 +56,7 @@ use crate::hw::DeviceId;
 use crate::mem::pgl::ReduceOp;
 use crate::mem::tile::Shape4;
 use crate::mem::{BufId, MemPool, ELEM_BYTES};
-use crate::pk::rail::{wave_share, RailPlanner, RailSems, WaveCredits};
+use crate::pk::rail::{wave_share, RailHealth, RailPlanner, RailSems, WaveCredits};
 use crate::plan::{Effect, MatView, Op, Plan, Role, Route, SemId, SyncScope, TransferSpec};
 use crate::xfer::Mechanism;
 
@@ -411,6 +411,22 @@ pub fn build_cluster(
     schedule: MoeSchedule,
     bufs: Option<&MoeClusterBufs>,
 ) -> Plan {
+    let health = RailHealth::all_healthy(cluster);
+    build_cluster_health(cfg, cluster, routing, schedule, &health, bufs)
+}
+
+/// [`build_cluster`] under a NIC health mask: the coalesced per-(source,
+/// node) dispatch flows whose rail endpoint is failed reroute through
+/// healthy donors over NVLink first ([`RailHealth`]). Stage slot layout
+/// and expert arrival counters are unchanged — only the transport moves.
+pub fn build_cluster_health(
+    cfg: &MoeCfg,
+    cluster: &ClusterSpec,
+    routing: &Routing,
+    schedule: MoeSchedule,
+    health: &RailHealth,
+    bufs: Option<&MoeClusterBufs>,
+) -> Plan {
     assert_eq!(cfg.node.num_devices, cluster.node.num_devices, "cfg.node must match cluster.node");
     assert_eq!(cfg.node.gpu.arch, cluster.node.gpu.arch, "cfg.node must match cluster.node");
     assert!(cfg.rdma_chunk >= 0.0, "rdma_chunk must be positive (or RDMA_CHUNK_AUTO)");
@@ -474,7 +490,7 @@ pub fn build_cluster(
         .unwrap_or(0) as f64
         * cfg.token_bytes();
     let rdma_chunk = crate::pk::tuner::resolve_rdma_chunk(cfg.rdma_chunk, cluster, max_rail_bytes);
-    let rail = RailPlanner::new(cluster, rdma_chunk);
+    let rail = RailPlanner::new(cluster, rdma_chunk).with_health(health.clone());
     // wave count: single-node keeps the fixed pipeline depth; the cluster
     // path targets one rdma_chunk-sized write per rail flow per wave.
     let waves = if k_cnt == 1 {
@@ -977,7 +993,23 @@ pub fn build_cluster_layer(
     schedule: MoeSchedule,
     bufs: Option<(&MoeClusterBufs, &MoeCombineBufs)>,
 ) -> Plan {
-    let mut plan = build_cluster(cfg, cluster, routing, schedule, bufs.map(|(b, _)| b));
+    let health = RailHealth::all_healthy(cluster);
+    build_cluster_layer_health(cfg, cluster, routing, schedule, &health, bufs)
+}
+
+/// [`build_cluster_layer`] under a NIC health mask: both the dispatch and
+/// the combine hop reroute their rail flows around failed NICs
+/// ([`RailHealth`]); token/expert placement is unchanged.
+pub fn build_cluster_layer_health(
+    cfg: &MoeCfg,
+    cluster: &ClusterSpec,
+    routing: &Routing,
+    schedule: MoeSchedule,
+    health: &RailHealth,
+    bufs: Option<(&MoeClusterBufs, &MoeCombineBufs)>,
+) -> Plan {
+    let dispatch_bufs = bufs.map(|(b, _)| b);
+    let mut plan = build_cluster_health(cfg, cluster, routing, schedule, health, dispatch_bufs);
     let n = cluster.total_devices();
     let p_cnt = cluster.devices_per_node();
     let k_cnt = cluster.num_nodes;
@@ -991,7 +1023,8 @@ pub fn build_cluster_layer(
     let rail = RailPlanner::new(
         cluster,
         crate::pk::tuner::resolve_rdma_chunk(cfg.rdma_chunk, cluster, max_comb_bytes),
-    );
+    )
+    .with_health(health.clone());
     // intra-node return-row counts per (expert device, home device) — the
     // coalesced NVLink return flows of the timing mode
     let mut intra_rows = vec![vec![0u64; n]; n];

@@ -7,10 +7,17 @@
 //!                                                   in fast mode and exit
 //!                                                   non-zero on empty output
 //!                                                   (or a registry-count drift)
+//!            [--fault <spec>] [--fault-seed <n>]    fx1 overrides: reseed the
+//!                                                   robustness sweeps and/or
+//!                                                   add a custom fault axis
 //! pk run <kernel> [--n <size>] [--schedule intra|inter]
 //! pk serve [--nodes <k>] [--mode pk|base] [--policy fcfs|priority|chunked]
 //!          [--trace poisson|bursty|diurnal] [--requests <n>] [--rate <rps>]
-//!                                                   trace-driven serving sim
+//!          [--fault <spec>] [--fault-seed <n>]      trace-driven serving sim;
+//!                                                   <spec> is comma-separated
+//!                                                   jitter=s[@e] | nic=d@t[:f[:r]]
+//!                                                   | straggler=d:s clauses
+//!                                                   (devices index nodes here)
 //! pk tune <kernel> --n <size>                       SM-partition auto-tuner
 //! pk lint [--only <substr>] [--json <path>]         static plan verifier over
 //!                                                   the whole kernel zoo; exit
@@ -63,6 +70,23 @@ fn real_main() -> Result<()> {
             None => Ok(default),
         }
     };
+    // `--fault <spec>` / `--fault-seed <n>` for figures and serve. The
+    // seed alone is meaningful for figures (fx1 reseeds its generated
+    // scenarios); a seed without a scenario elsewhere is a likely typo.
+    let fault_seed = |default: u64| -> Result<u64> {
+        match opt("--fault-seed") {
+            Some(s) => s.parse::<u64>().with_context(|| format!("bad --fault-seed value '{s}'")),
+            None => Ok(default),
+        }
+    };
+    let fault_spec = |seed: u64| -> Result<Option<pk::sim::fault::FaultSpec>> {
+        match opt("--fault") {
+            Some(s) => pk::sim::fault::FaultSpec::parse(&s, seed)
+                .map(Some)
+                .with_context(|| format!("bad --fault scenario '{s}'")),
+            None => Ok(None),
+        }
+    };
     match cmd {
         "figures" => {
             // --smoke is the CI gate: force fast mode over the FULL
@@ -80,6 +104,15 @@ fn real_main() -> Result<()> {
                 // the gate is only meaningful over the full registry;
                 // refuse rather than silently ignoring the filter
                 bail!("--smoke runs the full registry; drop --only (use --fast --only <id>)");
+            }
+            // robustness-exhibit overrides: reseed fx1's generated fault
+            // scenarios and/or append a user scenario as a custom axis
+            let fseed = fault_seed(7)?;
+            if opt("--fault-seed").is_some() {
+                pk::report::set_fault_seed(fseed);
+            }
+            if let Some(spec) = fault_spec(fseed)? {
+                pk::report::set_fault_scenario(spec);
             }
             let ids: Option<Vec<&str>> = only.as_deref().map(|id| vec![id]);
             let threads = if flag("--serial") {
@@ -198,10 +231,18 @@ fn real_main() -> Result<()> {
             if n_requests == 0 {
                 bail!("--requests must be >= 1");
             }
+            let fseed = fault_seed(7)?;
+            let fault = fault_spec(fseed)?;
+            if fault.is_none() && opt("--fault-seed").is_some() {
+                bail!("--fault-seed without --fault does nothing here; pass --fault <spec>");
+            }
             let mut cfg = ServeCfg::reference(ClusterSpec::hgx_h100_pod(nodes), mode);
             cfg.policy = policy;
             let cost = StepCostModel::calibrate(&cfg.cluster.node, cfg.mode, &cfg.model);
+            // probe capacity on the healthy fleet so the default offered
+            // load stays comparable across fault scenarios
             let cap = serve::capacity_probe(&cfg, &cost, (n_requests / 2).max(16), 1234);
+            cfg.fault = fault;
             // default offered load: 80% of the probed capacity
             let rate = opt_f64("--rate", 0.8 * cap)?;
             if !rate.is_finite() || rate <= 0.0 {
@@ -217,8 +258,10 @@ fn real_main() -> Result<()> {
             let rep = serve::run_with_cost(&cfg, &cost, &trace);
             println!(
                 "serve: {nodes} node(s), {:?}/{:?}, {n_requests} requests @ {rate:.1} rps \
-                 (capacity ~{cap:.1} rps)",
-                mode, policy
+                 (capacity ~{cap:.1} rps){}",
+                mode,
+                policy,
+                if cfg.fault.is_some() { " [faults injected]" } else { "" }
             );
             println!(
                 "  tokens/s {:.0} | goodput {:.1} rps | p50 {} | p99 {} | ttft p50 {} | \

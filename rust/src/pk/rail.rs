@@ -29,6 +29,15 @@
 //! * [`wave_share`] / [`rail_waves`] — the exact wave-split arithmetic
 //!   (last wave takes the remainder, so per-wave waits never starve on
 //!   rounding).
+//! * [`RailHealth`] — a per-device NIC health mask for degraded fabrics:
+//!   when a flow's source or destination rail endpoint is marked failed,
+//!   the planner reroutes it **over NVLink first** to a healthy same-node
+//!   donor, ships it on the donor's rail, and (if the receiving endpoint
+//!   was the failed one) fans it back over NVLink on the destination node.
+//!   Reroutes round-robin across the `P-1` healthy rails so a NIC-bound
+//!   schedule degrades by `P/(P-1)`, not `×2`; the rerouted plan stays
+//!   [`crate::plan::verify`]-clean and bit-identical in functional output
+//!   to the healthy schedule (only the transport moved, never the data).
 //! * An optional **node-local pre-reduce** stage for reducible payloads
 //!   (gemm_rs partial sums, MoE combine rows): contributors
 //!   `store_add_async` their partials over NVLink into the node
@@ -40,8 +49,10 @@
 
 use crate::hw::cluster::ClusterSpec;
 use crate::hw::DeviceId;
-use crate::plan::{Effect, Op, Plan, Route, SemId, SyncScope, TransferSpec};
+use crate::plan::{Effect, Op, Plan, Role, Route, SemId, SyncScope, TransferSpec};
 use crate::xfer::Mechanism;
+use std::cell::RefCell;
+use std::collections::HashMap;
 
 /// Default coalesced RDMA write target: 4 MiB sits on the flat part of the
 /// RDMA message-size curve while still giving several overlap waves at
@@ -137,18 +148,110 @@ impl RailSems {
     }
 }
 
+/// Per-device NIC health mask. A failed NIC takes the device's rail out
+/// of service in **both** directions (its GPUDirect engine serves egress
+/// and ingress alike); the device itself — SMs, HBM, NVLink ports — stays
+/// healthy, which is exactly what makes NVLink-first rerouting possible.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RailHealth {
+    nic_ok: Vec<bool>,
+}
+
+impl RailHealth {
+    /// Every NIC up — the mask [`RailPlanner::new`] starts from.
+    pub fn all_healthy(cluster: &ClusterSpec) -> Self {
+        RailHealth { nic_ok: vec![true; cluster.total_devices()] }
+    }
+
+    /// Mark device `dev`'s NIC failed (builder-style).
+    pub fn fail_nic(mut self, dev: usize) -> Self {
+        assert!(dev < self.nic_ok.len(), "no device {dev} in this cluster");
+        self.nic_ok[dev] = false;
+        self
+    }
+
+    pub fn is_healthy(&self, d: DeviceId) -> bool {
+        self.nic_ok[d.0]
+    }
+
+    pub fn any_failed(&self) -> bool {
+        self.nic_ok.iter().any(|ok| !ok)
+    }
+
+    /// Global indices of the failed-NIC devices.
+    pub fn failed(&self) -> Vec<usize> {
+        (0..self.nic_ok.len()).filter(|&d| !self.nic_ok[d]).collect()
+    }
+
+    /// Local ranks with a healthy NIC on `node` — the reroute donor pool.
+    fn healthy_ranks(&self, cluster: &ClusterSpec, node: usize) -> Vec<usize> {
+        (0..cluster.devices_per_node())
+            .filter(|&r| self.nic_ok[cluster.device(node, r).0])
+            .collect()
+    }
+}
+
+/// A lazily created reroute worker on a donor device: waits on a
+/// cumulative handoff counter and forwards each landed piece (RDMA on the
+/// source side, NVLink delivery on the destination side). Ops are pushed
+/// in planner-call order, so per-forwarder waits are monotone — the
+/// reroute protocol cannot deadlock.
+struct Forwarder {
+    w: usize,
+    sem: SemId,
+    cnt: u64,
+}
+
+/// Side tags for the forwarder map (one device can forward for both).
+const FWD_TX: u8 = 0;
+const FWD_RX: u8 = 1;
+
+#[derive(Default)]
+struct RerouteState {
+    /// Round-robin cursor over donor ranks — spreads a failed rail's
+    /// flows across all healthy rails instead of doubling one NIC.
+    rr: usize,
+    fwd: HashMap<(u8, usize), Forwarder>,
+}
+
 /// Planner for per-rail coalesced RDMA flows: one flow per (source device,
 /// remote node) pair, addressed to the source's rail peer, with messages
-/// capped at `rdma_chunk`.
+/// capped at `rdma_chunk`. With a [`RailHealth`] mask attached
+/// ([`RailPlanner::with_health`]), flows whose rail endpoint NICs are
+/// failed are transparently rerouted; a planner instance accumulates
+/// forwarder workers in the plan it is used with, so use one planner per
+/// plan.
 pub struct RailPlanner<'a> {
     pub cluster: &'a ClusterSpec,
     pub rdma_chunk: f64,
+    health: RailHealth,
+    reroute: RefCell<RerouteState>,
 }
 
 impl<'a> RailPlanner<'a> {
     pub fn new(cluster: &'a ClusterSpec, rdma_chunk: f64) -> Self {
         assert!(rdma_chunk > 0.0, "rdma_chunk must be positive");
-        RailPlanner { cluster, rdma_chunk }
+        RailPlanner {
+            cluster,
+            rdma_chunk,
+            health: RailHealth::all_healthy(cluster),
+            reroute: RefCell::new(RerouteState::default()),
+        }
+    }
+
+    /// Attach a NIC health mask; flows touching failed rails reroute.
+    pub fn with_health(mut self, health: RailHealth) -> Self {
+        assert_eq!(
+            health.nic_ok.len(),
+            self.cluster.total_devices(),
+            "health mask sized for a different cluster"
+        );
+        self.health = health;
+        self
+    }
+
+    pub fn health(&self) -> &RailHealth {
+        &self.health
     }
 
     /// The source's rail peer on `dst_node`: the same-rank GPU, reachable
@@ -180,24 +283,7 @@ impl<'a> RailPlanner<'a> {
         label: &'static str,
         effect: Option<Effect>,
     ) {
-        let dst = self.peer(src, dst_node);
-        plan.push(
-            w,
-            Op::Transfer {
-                spec: TransferSpec {
-                    mech: Mechanism::Tma,
-                    route: Route::Rdma { src, dst },
-                    bytes,
-                    msg_bytes: bytes.min(self.rdma_chunk),
-                    n_sms,
-                },
-                blocking: false,
-                done_sem: done,
-                done_scope: SyncScope::InterNode,
-                label,
-                effect,
-            },
-        );
+        self.emit(plan, w, src, dst_node, bytes, bytes, n_sms, done, label, effect);
     }
 
     /// [`RailPlanner::send`] with store-add semantics at the destination
@@ -218,26 +304,114 @@ impl<'a> RailPlanner<'a> {
         label: &'static str,
         effect: Option<Effect>,
     ) {
-        let dst = self.peer(src, dst_node);
-        let bytes = raw_bytes * (1.0 + self.cluster.node.gpu.atomic_overhead_frac);
-        plan.push(
-            w,
+        let wire = raw_bytes * (1.0 + self.cluster.node.gpu.atomic_overhead_frac);
+        self.emit(plan, w, src, dst_node, raw_bytes, wire, n_sms, done, label, effect);
+    }
+
+    /// Shared emission path of [`RailPlanner::send`] / [`RailPlanner::send_add`]:
+    /// `raw_bytes` sizes messages, `wire_bytes` is what actually crosses
+    /// each link (atomic-inflated for store-add payloads). Healthy rails
+    /// emit the single coalesced RDMA write unchanged; a failed endpoint
+    /// triggers the NVLink-first reroute (see [`RailHealth`]).
+    #[allow(clippy::too_many_arguments)]
+    fn emit(
+        &self,
+        plan: &mut Plan,
+        w: usize,
+        src: DeviceId,
+        dst_node: usize,
+        raw_bytes: f64,
+        wire_bytes: f64,
+        n_sms: f64,
+        done: Option<SemId>,
+        label: &'static str,
+        effect: Option<Effect>,
+    ) {
+        let final_dst = self.peer(src, dst_node);
+        let msg = raw_bytes.min(self.rdma_chunk);
+        let xfer = |route, bytes, done_sem, scope, label, effect| {
             Op::Transfer {
-                spec: TransferSpec {
-                    mech: Mechanism::Tma,
-                    route: Route::Rdma { src, dst },
-                    bytes,
-                    msg_bytes: raw_bytes.min(self.rdma_chunk),
-                    n_sms,
-                },
+                spec: TransferSpec { mech: Mechanism::Tma, route, bytes, msg_bytes: msg, n_sms },
                 blocking: false,
-                done_sem: done,
-                done_scope: SyncScope::InterNode,
+                done_sem,
+                done_scope: scope,
                 label,
                 effect,
-            },
-        );
+            }
+        };
+        if self.health.is_healthy(src) && self.health.is_healthy(final_dst) {
+            let rail = Route::Rdma { src, dst: final_dst };
+            plan.push(w, xfer(rail, wire_bytes, done, SyncScope::InterNode, label, effect));
+            return;
+        }
+        // Degraded rail: pick healthy donor endpoints. A failed source NIC
+        // hands the payload to a healthy same-node donor over NVLink; a
+        // failed destination NIC lands the RDMA on a healthy device of the
+        // destination node, which delivers over NVLink. Donors rotate
+        // round-robin so the extra load spreads over all healthy rails.
+        let mut st = self.reroute.borrow_mut();
+        let mut donor = |node: usize| -> DeviceId {
+            let ranks = self.health.healthy_ranks(self.cluster, node);
+            assert!(!ranks.is_empty(), "every NIC on node {node} failed: rail flow cannot be rerouted");
+            let r = ranks[st.rr % ranks.len()];
+            st.rr += 1;
+            self.cluster.device(node, r)
+        };
+        let tx = if self.health.is_healthy(src) { src } else { donor(self.cluster.node_of(src)) };
+        let rx = if self.health.is_healthy(final_dst) { final_dst } else { donor(dst_node) };
+        // (1) NVLink handoff to the sending donor, counted on the donor's
+        // cumulative forwarder semaphore.
+        let rdma_w = if tx == src {
+            w
+        } else {
+            let f = forwarder(plan, &mut st, FWD_TX, tx, "rail_fwd");
+            let hop = Route::P2p { src, dst: tx };
+            plan.push(
+                w,
+                xfer(hop, raw_bytes, Some(f.sem), SyncScope::InterDevice, "rail_reroute_hop", None),
+            );
+            f.cnt += 1;
+            let (fw, sem, cnt) = (f.w, f.sem, f.cnt);
+            plan.push(fw, Op::Wait { sem, value: cnt });
+            fw
+        };
+        // (2) the rail hop proper, on the donor's NIC. If the receiving
+        // endpoint is the final destination this is also the delivery:
+        // it carries the payload effect and bumps `done` exactly as the
+        // healthy path would.
+        let rail = Route::Rdma { src: tx, dst: rx };
+        if rx == final_dst {
+            plan.push(rdma_w, xfer(rail, wire_bytes, done, SyncScope::InterNode, label, effect));
+            return;
+        }
+        let g = forwarder(plan, &mut st, FWD_RX, rx, "rail_deliver");
+        let landed = g.sem;
+        plan.push(rdma_w, xfer(rail, wire_bytes, Some(landed), SyncScope::InterNode, label, None));
+        // (3) NVLink delivery on the destination node: the receiving donor
+        // forwards into the failed device's memory. The store-add
+        // inflation (if any) is paid here too — the destination-side
+        // atomic cost moved from the NIC to the NVLink port.
+        g.cnt += 1;
+        let (gw, cnt) = (g.w, g.cnt);
+        plan.push(gw, Op::Wait { sem: landed, value: cnt });
+        let deliver = Route::P2p { src: rx, dst: final_dst };
+        plan.push(gw, xfer(deliver, wire_bytes, done, SyncScope::InterNode, label, effect));
     }
+}
+
+/// Fetch (or lazily create) the reroute forwarder for `dev` on `side`.
+fn forwarder<'s>(
+    plan: &mut Plan,
+    st: &'s mut RerouteState,
+    side: u8,
+    dev: DeviceId,
+    tag: &str,
+) -> &'s mut Forwarder {
+    st.fwd.entry((side, dev.0)).or_insert_with(|| {
+        let w = plan.add_worker(dev, Role::CommSm, format!("{tag}/d{}", dev.0));
+        let sem = plan.add_sem(0);
+        Forwarder { w, sem, cnt: 0 }
+    })
 }
 
 /// Wave-barrier bookkeeping of a fan-out stage: each `defer` records one
@@ -407,6 +581,142 @@ mod tests {
         let want = raw * (1.0 + cluster.node.gpu.atomic_overhead_frac);
         let got = r.port_bytes[&Port::NicEgress(DeviceId(1))];
         assert!((got - want).abs() < 1.0, "{got} vs {want}");
+    }
+
+    /// One rerouted GatherRows send, shared by the degraded-rail tests:
+    /// builds the same flow as `send_gathers_into_stage_and_charges_the_nics`
+    /// but under `health`, checks the functional output is bit-identical to
+    /// the healthy schedule, verifies the plan node-aware, and returns the
+    /// timed port-byte map for transport assertions.
+    fn rerouted_gather(health: RailHealth) -> std::collections::HashMap<Port, f64> {
+        let cluster = ClusterSpec::test_cluster(2, 2);
+        let rail = RailPlanner::new(&cluster, DEFAULT_RDMA_CHUNK).with_health(health);
+        let mut pool = MemPool::new();
+        let src = pool.alloc_init(DeviceId(0), Shape4::mat(6, 4), seeded_vec(3, 24));
+        let stage = pool.alloc(DeviceId(2), Shape4::mat(2, 4));
+        let rows = vec![4usize, 1];
+        let mut plan = Plan::new();
+        let done = plan.add_sem(0);
+        let w = plan.add_worker(DeviceId(0), Role::CommSm, "rail");
+        rail.send(
+            &mut plan,
+            w,
+            DeviceId(0),
+            1,
+            2.0 * 4.0 * crate::mem::ELEM_BYTES as f64,
+            8.0,
+            Some(done),
+            "rail_send",
+            Some(Effect::GatherRows {
+                src: MatView::full2d(src, 6, 4),
+                rows: rows.clone(),
+                dst: MatView::full2d(stage, 2, 4),
+            }),
+        );
+        plan.push(w, Op::Wait { sem: done, value: 1 });
+        run_functional(&mut pool, &plan);
+        for (i, &r) in rows.iter().enumerate() {
+            let want = &pool.get(src).data[r * 4..(r + 1) * 4];
+            let got = &pool.get(stage).data[i * 4..(i + 1) * 4];
+            assert_eq!(got, want, "rerouted output must be bit-identical, row {i}");
+        }
+        let ctx = crate::plan::verify::VerifyCtx { pool: Some(&pool), devices_per_node: Some(2) };
+        crate::plan::verify::verify(&plan, &ctx).assert_clean("rerouted rail plan");
+        TimedExec::on_cluster(cluster).run(&plan).port_bytes
+    }
+
+    #[test]
+    fn reroute_failed_source_rides_donor_nic() {
+        // d0's NIC is down: the flow hops d0 -> d1 over NVLink and ships on
+        // d1's rail straight to the original destination d2.
+        let cluster = ClusterSpec::test_cluster(2, 2);
+        let pb = rerouted_gather(RailHealth::all_healthy(&cluster).fail_nic(0));
+        let bytes = 2.0 * 4.0 * crate::mem::ELEM_BYTES as f64;
+        assert!(pb.get(&Port::NicEgress(DeviceId(0))).is_none(), "failed NIC must carry nothing");
+        assert!((pb[&Port::NicEgress(DeviceId(1))] - bytes).abs() < 1.0, "donor NIC carries the flow");
+        assert!((pb[&Port::Egress(DeviceId(0))] - bytes).abs() < 1.0, "NVLink handoff src->donor");
+        assert!((pb[&Port::NicIngress(DeviceId(2))] - bytes).abs() < 1.0, "destination unchanged");
+    }
+
+    #[test]
+    fn reroute_failed_destination_delivers_over_nvlink() {
+        // d2's NIC is down: the RDMA lands on d3 and d3 forwards over
+        // NVLink into d2's memory.
+        let cluster = ClusterSpec::test_cluster(2, 2);
+        let pb = rerouted_gather(RailHealth::all_healthy(&cluster).fail_nic(2));
+        let bytes = 2.0 * 4.0 * crate::mem::ELEM_BYTES as f64;
+        assert!((pb[&Port::NicEgress(DeviceId(0))] - bytes).abs() < 1.0, "source rail unchanged");
+        assert!(pb.get(&Port::NicIngress(DeviceId(2))).is_none(), "failed NIC must carry nothing");
+        assert!((pb[&Port::NicIngress(DeviceId(3))] - bytes).abs() < 1.0, "receiving donor");
+        assert!((pb[&Port::Egress(DeviceId(3))] - bytes).abs() < 1.0, "NVLink delivery donor->dst");
+    }
+
+    #[test]
+    fn reroute_both_endpoints_failed_takes_three_hops() {
+        let cluster = ClusterSpec::test_cluster(2, 2);
+        let health = RailHealth::all_healthy(&cluster).fail_nic(0).fail_nic(2);
+        let pb = rerouted_gather(health);
+        let bytes = 2.0 * 4.0 * crate::mem::ELEM_BYTES as f64;
+        assert!((pb[&Port::Egress(DeviceId(0))] - bytes).abs() < 1.0, "handoff d0->d1");
+        assert!((pb[&Port::NicEgress(DeviceId(1))] - bytes).abs() < 1.0, "donor rail d1->d3");
+        assert!((pb[&Port::NicIngress(DeviceId(3))] - bytes).abs() < 1.0);
+        assert!((pb[&Port::Egress(DeviceId(3))] - bytes).abs() < 1.0, "delivery d3->d2");
+        assert!(pb.get(&Port::NicEgress(DeviceId(0))).is_none());
+        assert!(pb.get(&Port::NicIngress(DeviceId(2))).is_none());
+    }
+
+    #[test]
+    fn reroute_round_robins_across_healthy_rails() {
+        // P=4, one failed rail: successive sends from the failed device
+        // rotate over the three healthy donors — no single NIC doubles.
+        let cluster = ClusterSpec::test_cluster(2, 4);
+        let rail = RailPlanner::new(&cluster, DEFAULT_RDMA_CHUNK)
+            .with_health(RailHealth::all_healthy(&cluster).fail_nic(0));
+        let mut plan = Plan::new();
+        let w = plan.add_worker(DeviceId(0), Role::CommSm, "rail");
+        let bytes = 4096.0;
+        for _ in 0..3 {
+            rail.send(&mut plan, w, DeviceId(0), 1, bytes, 8.0, None, "rail_send", None);
+        }
+        let r = TimedExec::on_cluster(cluster).run(&plan);
+        for donor in 1..4 {
+            let got = r.port_bytes[&Port::NicEgress(DeviceId(donor))];
+            assert!((got - bytes).abs() < 1.0, "donor d{donor} carries exactly one flow, got {got}");
+        }
+        assert!(r.port_bytes.get(&Port::NicEgress(DeviceId(0))).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot be rerouted")]
+    fn reroute_panics_when_a_whole_node_is_dark() {
+        let cluster = ClusterSpec::test_cluster(2, 2);
+        let rail = RailPlanner::new(&cluster, DEFAULT_RDMA_CHUNK)
+            .with_health(RailHealth::all_healthy(&cluster).fail_nic(0).fail_nic(1));
+        let mut plan = Plan::new();
+        let w = plan.add_worker(DeviceId(0), Role::CommSm, "rail");
+        rail.send(&mut plan, w, DeviceId(0), 1, 1024.0, 8.0, None, "rail_send", None);
+    }
+
+    #[test]
+    fn healthy_mask_emits_the_exact_healthy_plan() {
+        // with an all-healthy mask attached the planner must not add
+        // forwarder workers or change a single op.
+        let cluster = ClusterSpec::test_cluster(2, 2);
+        let mk = |health: Option<RailHealth>| {
+            let mut rail = RailPlanner::new(&cluster, DEFAULT_RDMA_CHUNK);
+            if let Some(h) = health {
+                rail = rail.with_health(h);
+            }
+            let mut plan = Plan::new();
+            let w = plan.add_worker(DeviceId(0), Role::CommSm, "rail");
+            rail.send(&mut plan, w, DeviceId(0), 1, 4096.0, 8.0, None, "rail_send", None);
+            rail.send_add(&mut plan, w, DeviceId(0), 1, 4096.0, 8.0, None, "rail_send_add", None);
+            plan
+        };
+        let a = mk(None);
+        let b = mk(Some(RailHealth::all_healthy(&cluster)));
+        assert_eq!(a.workers.len(), b.workers.len());
+        assert_eq!(format!("{:?}", a.workers[0].ops), format!("{:?}", b.workers[0].ops));
     }
 
     #[test]

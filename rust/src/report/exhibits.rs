@@ -14,7 +14,9 @@ use crate::kernels::moe::{MoeCfg, MoeSchedule, Routing};
 use crate::kernels::ring_attention::RingAttnCfg;
 use crate::kernels::ulysses::UlyssesCfg;
 use crate::kernels::{ag_gemm, gemm, gemm_ar, gemm_rs, moe, ring_attention, ulysses, GemmKernelCfg};
+use crate::pk::rail::RailHealth;
 use crate::plan::Plan;
+use crate::sim::fault::{FaultSpec, LinkFault};
 use crate::sim::serve::{self, KernelMode, ModelCfg, ServeCfg, StepCostModel};
 use crate::sim::workload::{self, ArrivalProcess, TraceCfg};
 use crate::xfer::{curves, Functionality, Mechanism};
@@ -24,6 +26,31 @@ pub struct Exhibit {
     pub id: &'static str,
     pub caption: &'static str,
     pub run: fn(fast: bool) -> Table,
+}
+
+// CLI overrides for the fx1 robustness exhibit (`pk figures
+// --fault-seed` / `--fault`). Exhibit generators are plain `fn(bool)`
+// pointers, so the flags travel through process-wide cells: set once
+// before the first exhibit runs, first write wins, never re-read races
+// (`run_exhibits` only reads them from inside fx1).
+static FX1_FAULT_SEED: std::sync::OnceLock<u64> = std::sync::OnceLock::new();
+static FX1_FAULT_SCENARIO: std::sync::OnceLock<FaultSpec> = std::sync::OnceLock::new();
+
+/// Override the splitmix64 seed fx1 feeds every generated [`FaultSpec`]
+/// (default 7). Call before running exhibits; later calls are no-ops.
+pub fn set_fault_seed(seed: u64) {
+    let _ = FX1_FAULT_SEED.set(seed);
+}
+
+/// Supply a user fault scenario; fx1 appends a `custom` axis running
+/// every kernel under it (rail plans health-masked against the
+/// scenario's permanently dead NICs). Call before running exhibits.
+pub fn set_fault_scenario(spec: FaultSpec) {
+    let _ = FX1_FAULT_SCENARIO.set(spec);
+}
+
+fn fault_seed() -> u64 {
+    *FX1_FAULT_SEED.get().unwrap_or(&7)
 }
 
 /// The full registry, in paper order.
@@ -55,6 +82,7 @@ pub fn all_exhibits() -> Vec<Exhibit> {
         Exhibit { id: "rx1", caption: "pk::rail sweep: hierarchical gemm_rs + two-level Ulysses, 1→4 nodes, NIC 25–100 GB/s, rail vs naive vs baseline", run: rx1 },
         Exhibit { id: "gx1", caption: "Cluster GEMM family: gemm_ar + ag_gemm, 1→4 nodes, NIC 25–100 GB/s, rail vs naive vs baseline + analytic-vs-swept chunk", run: gx1 },
         Exhibit { id: "vx1", caption: "Serving layer: tokens/s, goodput, p50/p99 latency vs offered load under Poisson/bursty/diurnal arrivals, PK-overlapped vs non-overlapped step kernels, 1→4 nodes (disaggregated prefill/decode past 1 node)", run: vx1 },
+        Exhibit { id: "fx1", caption: "Robustness: slowdown under bandwidth jitter and NIC failure — health-masked rail reroute vs no-reroute ablations on gemm_rs/gemm_ar/MoE, plus serving goodput/p99 under a mid-trace decode-NIC outage", run: fx1 },
     ]
 }
 
@@ -955,6 +983,250 @@ fn vx1(fast: bool) -> Table {
     t
 }
 
+// ------------------------------------------------- fx1 (robustness)
+/// The robustness exhibit: the fault-injection layer ([`crate::sim::fault`])
+/// and the degraded-rail reroute ([`RailHealth`]) quantified on the 2-node
+/// pod. Three axes share one schema (`slow_x` = degraded / healthy for
+/// times; healthy / degraded for goodput):
+///
+/// * `jitter` — seeded lognormal per-port bandwidth jitter at strength σ,
+///   identical fault schedules for the rail schedule and its no-reroute
+///   ablation (gemm_rs/gemm_ar: the `Scatter` transport; MoE: the
+///   `Sequential` non-overlap schedule).
+/// * `nic_fail` — `f` hard NIC failures injected at t = 0. The rail
+///   column re-plans with the matching [`RailHealth`] mask, so its flows
+///   never touch the dead links (slowdown ≤ P/(P−1) + tolerance,
+///   claims-tested); the ablation has no reroute story and stalls until
+///   the link heals at 4× its healthy makespan.
+/// * `serve` — a mid-trace outage on the decode node's NIC (middle third
+///   of the healthy makespan): goodput and p99 for the PK-overlapped
+///   engine, with the non-overlapped engine under the same outage in the
+///   naive columns. No request is lost or duplicated (claims-tested).
+fn fx1(fast: bool) -> Table {
+    let seed = fault_seed();
+    let mut t = Table::new(
+        format!(
+            "Robustness: jitter, NIC failure, mid-trace serving outage \
+             (2-node pod, NIC 50 GB/s, fault seed {seed})"
+        ),
+        &["axis", "case", "fault", "healthy", "degraded", "slow_x", "naive_deg", "naive_x"],
+    );
+    let cluster = ClusterSpec::hgx_h100_pod(2).with_nic_bw(50e9);
+    let p = cluster.devices_per_node();
+    let timed = |plan: &Plan, spec: Option<FaultSpec>| {
+        let mut ex = TimedExec::on_cluster(cluster.clone());
+        if let Some(s) = spec {
+            ex = ex.with_faults(s);
+        }
+        ex.run(plan).total_time
+    };
+    // the three rail kernels at their rx1/gx1/mx1 grid points
+    let gcfg = GemmKernelCfg::new(cluster.node.clone(), 24576, 8192, 1024);
+    let mcfg = MoeCfg::paper(cluster.node.clone(), 2048 * cluster.total_devices());
+    let routing = Routing::uniform(&mcfg, 11);
+    let kernels: Vec<(&str, Plan, Plan)> = vec![
+        (
+            "gemm_rs",
+            gemm_rs::build_cluster(&gcfg, &cluster, Schedule::IntraSm, None),
+            gemm_rs::build_cluster_opts(
+                &gcfg,
+                &cluster,
+                Schedule::IntraSm,
+                gemm_rs::ClusterPath::Scatter,
+                None,
+            ),
+        ),
+        (
+            "gemm_ar",
+            gemm_ar::build_cluster(&gcfg, &cluster, Schedule::IntraSm, None),
+            gemm_ar::build_cluster_opts(
+                &gcfg,
+                &cluster,
+                Schedule::IntraSm,
+                gemm_ar::ClusterPath::Scatter,
+                None,
+            ),
+        ),
+        (
+            "moe",
+            moe::build_cluster_layer(&mcfg, &cluster, &routing, MoeSchedule::Overlapped, None),
+            moe::build_cluster_layer(&mcfg, &cluster, &routing, MoeSchedule::Sequential, None),
+        ),
+    ];
+    let health_plan = |name: &str, health: &RailHealth| match name {
+        "gemm_rs" => gemm_rs::build_cluster_health(
+            &gcfg,
+            &cluster,
+            Schedule::IntraSm,
+            gemm_rs::ClusterPath::RailReduce,
+            health,
+            None,
+        ),
+        "gemm_ar" => gemm_ar::build_cluster_health(
+            &gcfg,
+            &cluster,
+            Schedule::IntraSm,
+            gemm_ar::ClusterPath::RailReduce,
+            health,
+            None,
+        ),
+        _ => moe::build_cluster_layer_health(
+            &mcfg,
+            &cluster,
+            &routing,
+            MoeSchedule::Overlapped,
+            health,
+            None,
+        ),
+    };
+    let sigmas: &[f64] = if fast { &[0.3] } else { &[0.1, 0.3, 0.6] };
+    let fails: &[usize] = if fast { &[1] } else { &[1, 2] };
+    for &(name, ref rail_plan, ref naive_plan) in &kernels {
+        let t0r = timed(rail_plan, None);
+        let t0n = timed(naive_plan, None);
+        // --- axis (a): bandwidth jitter, identical schedules both columns
+        for &s in sigmas {
+            let spec = FaultSpec::seeded(seed).with_jitter(s);
+            let tr = timed(rail_plan, Some(spec.clone()));
+            let tn = timed(naive_plan, Some(spec));
+            t.row(vec![
+                "jitter".into(),
+                name.to_string(),
+                format!("sigma={s:.1}"),
+                ms(t0r),
+                ms(tr),
+                format!("{:.2}", tr / t0r),
+                ms(tn),
+                format!("{:.2}", tn / t0n),
+            ]);
+        }
+        // --- axis (b): hard NIC failures at t = 0; the rail plan reroutes
+        // around them (the injected fault proves it: a rerouted plan that
+        // still touched the dead NIC would stall to the heal time), the
+        // ablation stalls until the link heals
+        for &f in fails {
+            // one failed NIC per node, never a whole node: device 1 on
+            // node 0, then device p+2 on node 1
+            let devs: Vec<usize> = (0..f).map(|i| i * p + 1 + i).collect();
+            let mut health = RailHealth::all_healthy(&cluster);
+            for &d in &devs {
+                health = health.fail_nic(d);
+            }
+            let heal = 4.0 * t0n;
+            let mut spec = FaultSpec::seeded(seed);
+            for &d in &devs {
+                spec = spec.with_nic_fault(LinkFault {
+                    device: d,
+                    at: 0.0,
+                    frac: 0.0,
+                    restore_at: Some(heal),
+                });
+            }
+            let tr = timed(&health_plan(name, &health), Some(spec.clone()));
+            let tn = timed(naive_plan, Some(spec));
+            t.row(vec![
+                "nic_fail".into(),
+                name.to_string(),
+                format!("f={f}"),
+                ms(t0r),
+                ms(tr),
+                format!("{:.2}", tr / t0r),
+                ms(tn),
+                format!("{:.2}", tn / t0n),
+            ]);
+        }
+    }
+    // --- optional axis: a user scenario from `pk figures --fault`. Rail
+    // plans are health-masked against the scenario's permanently dead
+    // NICs; the no-reroute ablation would deadlock on one, so its
+    // columns go blank in that case.
+    if let Some(user) = FX1_FAULT_SCENARIO.get() {
+        let mut health = RailHealth::all_healthy(&cluster);
+        let mut permanent = false;
+        for lf in &user.nic_faults {
+            if lf.frac <= 1e-9 && lf.restore_at.is_none() && lf.device < cluster.total_devices() {
+                health = health.fail_nic(lf.device);
+                permanent = true;
+            }
+        }
+        for &(name, ref rail_plan, ref naive_plan) in &kernels {
+            let t0r = timed(rail_plan, None);
+            let t0n = timed(naive_plan, None);
+            let tr = if health.any_failed() {
+                timed(&health_plan(name, &health), Some(user.clone()))
+            } else {
+                timed(rail_plan, Some(user.clone()))
+            };
+            let (ncol, nslow) = if permanent {
+                ("-".into(), "-".into())
+            } else {
+                let tn = timed(naive_plan, Some(user.clone()));
+                (ms(tn), format!("{:.2}", tn / t0n))
+            };
+            t.row(vec![
+                "custom".into(),
+                name.to_string(),
+                "cli scenario".into(),
+                ms(t0r),
+                ms(tr),
+                format!("{:.2}", tr / t0r),
+                ncol,
+                nslow,
+            ]);
+        }
+    }
+    // --- axis (c): serving under a mid-trace decode-NIC outage (vx1 grid
+    // point: 2 nodes, Poisson arrivals, 0.8× probed capacity)
+    let node = NodeSpec::hgx_h100();
+    let model = ModelCfg::reference();
+    let pk_cost = StepCostModel::calibrate(&node, KernelMode::PkOverlap, &model);
+    let base_cost = StepCostModel::calibrate(&node, KernelMode::Nonoverlap, &model);
+    let n_req = if fast { 120 } else { 300 };
+    let pk_cfg = ServeCfg::reference(cluster.clone(), KernelMode::PkOverlap);
+    let base_cfg = ServeCfg::reference(cluster.clone(), KernelMode::Nonoverlap);
+    let cap = serve::capacity_probe(&pk_cfg, &pk_cost, n_req / 2, 1234);
+    let trace = workload::generate(&TraceCfg::chat(ArrivalProcess::Poisson, 0.8 * cap, n_req, 99));
+    let rp0 = serve::run_with_cost(&pk_cfg, &pk_cost, &trace);
+    let rb0 = serve::run_with_cost(&base_cfg, &base_cost, &trace);
+    // the outage covers the middle third of each engine's healthy run;
+    // node 1 is the decode node of the 2-node disaggregated pair
+    let outage = |dur: f64| {
+        FaultSpec::seeded(seed).with_nic_fault(LinkFault {
+            device: 1,
+            at: dur / 3.0,
+            frac: 0.0,
+            restore_at: Some(2.0 * dur / 3.0),
+        })
+    };
+    let mut pk_f = pk_cfg.clone();
+    pk_f.fault = Some(outage(rp0.duration));
+    let mut base_f = base_cfg.clone();
+    base_f.fault = Some(outage(rb0.duration));
+    let rp1 = serve::run_with_cost(&pk_f, &pk_cost, &trace);
+    let rb1 = serve::run_with_cost(&base_f, &base_cost, &trace);
+    t.row(vec![
+        "serve".into(),
+        "goodput_rps".into(),
+        "nic outage".into(),
+        format!("{:.1}", rp0.goodput_rps),
+        format!("{:.1}", rp1.goodput_rps),
+        format!("{:.2}", rp0.goodput_rps / rp1.goodput_rps.max(1e-9)),
+        format!("{:.1}", rb1.goodput_rps),
+        format!("{:.2}", rb0.goodput_rps / rb1.goodput_rps.max(1e-9)),
+    ]);
+    t.row(vec![
+        "serve".into(),
+        "p99_ms".into(),
+        "nic outage".into(),
+        ms(rp0.latency_p99),
+        ms(rp1.latency_p99),
+        format!("{:.2}", rp1.latency_p99 / rp0.latency_p99),
+        ms(rb1.latency_p99),
+        format!("{:.2}", rb1.latency_p99 / rb0.latency_p99),
+    ]);
+    t
+}
+
 // --------------------------------------------------------------- µ1, µ2
 fn mu1(_fast: bool) -> Table {
     let g = GpuSpec::h100();
@@ -990,8 +1262,8 @@ mod tests {
         let ex = all_exhibits();
         assert_eq!(
             ex.len(),
-            26,
-            "17 figures/tables + 2 micro + tab1/tab2 + scale-out + cluster MoE + rail + cluster GEMM + serving"
+            27,
+            "17 figures/tables + 2 micro + tab1/tab2 + scale-out + cluster MoE + rail + cluster GEMM + serving + robustness"
         );
         for e in &ex {
             let t = (e.run)(true);

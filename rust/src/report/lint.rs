@@ -21,13 +21,13 @@ use crate::kernels::collectives::{
 };
 use crate::kernels::gemm::GemmBufs;
 use crate::kernels::gemm_ar::GemmArBufs;
-use crate::kernels::gemm_rs::{GemmRsBufs, Schedule};
+use crate::kernels::gemm_rs::{ClusterPath, GemmRsBufs, Schedule};
 use crate::kernels::moe::{MoeBufs, MoeCfg, MoeClusterBufs, MoeCombineBufs, MoeSchedule, Routing};
 use crate::kernels::ring_attention::{ClusterRingAttnCfg, RingAttnBufs, RingAttnCfg};
 use crate::kernels::ulysses::{UlyssesBufs, UlyssesCfg};
 use crate::kernels::{ag_gemm, gemm, gemm_ar, gemm_rs, moe, ring_attention, ulysses, GemmKernelCfg};
 use crate::mem::{MemPool, Shape4};
-use crate::pk::rail::DEFAULT_RDMA_CHUNK;
+use crate::pk::rail::{RailHealth, DEFAULT_RDMA_CHUNK};
 use crate::pk::template::LcscOpts;
 use crate::plan::verify::{verify, VerifyCtx, VerifyReport};
 use crate::plan::{MatView, Plan};
@@ -186,6 +186,46 @@ fn registry() -> Vec<(&'static str, Builder)> {
             check(&plan, None, cluster.devices_per_node())
         }),
     ));
+    v.push((
+        "gemm_rs/cluster-degraded",
+        Box::new(|| {
+            let cluster = ClusterSpec::test_cluster(2, 2);
+            let cfg = GemmKernelCfg::functional(cluster.node.clone(), 64, 32, 24);
+            let health = RailHealth::all_healthy(&cluster).fail_nic(1);
+            let mut pool = MemPool::new();
+            let bufs = GemmRsBufs::alloc_cluster(&mut pool, &cfg, &cluster);
+            let plan = gemm_rs::build_cluster_health(
+                &cfg,
+                &cluster,
+                Schedule::IntraSm,
+                ClusterPath::RailReduce,
+                &health,
+                Some(&bufs),
+            );
+            check(&plan, Some(&pool), cluster.devices_per_node())
+        }),
+    ));
+    v.push((
+        // One NIC down on each node: exercises TX-donor and RX-donor
+        // reroute simultaneously in both directions.
+        "gemm_rs/cluster-degraded-both-nodes",
+        Box::new(|| {
+            let cluster = ClusterSpec::test_cluster(2, 2);
+            let cfg = GemmKernelCfg::functional(cluster.node.clone(), 64, 32, 24);
+            let health = RailHealth::all_healthy(&cluster).fail_nic(1).fail_nic(2);
+            let mut pool = MemPool::new();
+            let bufs = GemmRsBufs::alloc_cluster(&mut pool, &cfg, &cluster);
+            let plan = gemm_rs::build_cluster_health(
+                &cfg,
+                &cluster,
+                Schedule::IntraSm,
+                ClusterPath::RailReduce,
+                &health,
+                Some(&bufs),
+            );
+            check(&plan, Some(&pool), cluster.devices_per_node())
+        }),
+    ));
 
     for (name, schedule) in
         [("gemm_ar/intra-sm", Schedule::IntraSm), ("gemm_ar/inter-sm", Schedule::InterSm)]
@@ -228,6 +268,25 @@ fn registry() -> Vec<(&'static str, Builder)> {
             let cfg = GemmKernelCfg::functional(cluster.node.clone(), 64, 32, 24);
             let plan = gemm_ar::build_cluster(&cfg, &cluster, Schedule::IntraSm, None);
             check(&plan, None, cluster.devices_per_node())
+        }),
+    ));
+    v.push((
+        "gemm_ar/cluster-degraded",
+        Box::new(|| {
+            let cluster = ClusterSpec::test_cluster(2, 2);
+            let cfg = GemmKernelCfg::functional(cluster.node.clone(), 64, 32, 24);
+            let health = RailHealth::all_healthy(&cluster).fail_nic(1);
+            let mut pool = MemPool::new();
+            let bufs = GemmArBufs::alloc_cluster(&mut pool, &cfg, &cluster);
+            let plan = gemm_ar::build_cluster_health(
+                &cfg,
+                &cluster,
+                Schedule::IntraSm,
+                ClusterPath::RailReduce,
+                &health,
+                Some(&bufs),
+            );
+            check(&plan, Some(&pool), cluster.devices_per_node())
         }),
     ));
 
@@ -361,6 +420,26 @@ fn registry() -> Vec<(&'static str, Builder)> {
                 &cluster,
                 &routing,
                 MoeSchedule::Overlapped,
+                Some((&bufs, &comb)),
+            );
+            check(&plan, Some(&pool), cluster.devices_per_node())
+        }),
+    ));
+    v.push((
+        "moe/cluster-layer-degraded",
+        Box::new(|| {
+            let (cfg, cluster) = moe_cluster_cfg(2, 2);
+            let routing = Routing::uniform(&cfg, 31);
+            let health = RailHealth::all_healthy(&cluster).fail_nic(1);
+            let mut pool = MemPool::new();
+            let bufs = MoeClusterBufs::alloc(&mut pool, &cfg, &cluster, &routing);
+            let comb = MoeCombineBufs::alloc(&mut pool, &cfg, &cluster, &routing);
+            let plan = moe::build_cluster_layer_health(
+                &cfg,
+                &cluster,
+                &routing,
+                MoeSchedule::Overlapped,
+                &health,
                 Some((&bufs, &comb)),
             );
             check(&plan, Some(&pool), cluster.devices_per_node())
@@ -600,7 +679,7 @@ mod tests {
     #[test]
     fn zoo_sweep_is_error_free() {
         let results = run_lint(None);
-        assert!(results.len() >= 25, "zoo registry shrank: {}", results.len());
+        assert!(results.len() >= 29, "zoo registry shrank: {}", results.len());
         for r in &results {
             assert_eq!(
                 r.report.num_errors(),

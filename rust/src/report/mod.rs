@@ -9,6 +9,7 @@ pub mod lint;
 pub mod table;
 
 pub use exhibits::{
-    all_exhibits, run_exhibit, run_exhibits, run_exhibits_checked, Exhibit, ExhibitResult,
+    all_exhibits, run_exhibit, run_exhibits, run_exhibits_checked, set_fault_scenario,
+    set_fault_seed, Exhibit, ExhibitResult,
 };
 pub use table::Table;

@@ -1,0 +1,540 @@
+//! Seeded, deterministic fault injection for the timed executor.
+//!
+//! Production fabrics are not the uniform, healthy clusters the rest of
+//! the simulator assumes: links jitter under congestion, individual GPUs
+//! straggle, and NICs fail mid-run. [`FaultSpec`] describes a fault
+//! scenario; [`FaultSpec::compile`] turns it into a [`FaultPlan`] — a
+//! deterministic, seeded schedule of timed capacity changes that
+//! [`crate::exec::TimedExec`] applies through `FlowNet::set_capacity`
+//! mid-run. Because the plan is compiled once against the executor's
+//! declared baseline capacities and driven purely by simulated time, both
+//! flow engines (`Engine::Scan` / `Engine::Heap`) and both nets
+//! (monolithic / partitioned) observe the *identical* fault schedule, so
+//! results stay bit-identical across all four combinations (test-pinned).
+//!
+//! Three fault classes (composable):
+//!
+//! * **Bandwidth jitter** — every link-class port (`Egress`/`Ingress`/
+//!   `NicEgress`/`NicIngress`) resamples a lognormal rate factor
+//!   `min(1, exp(σ·z))` once per `jitter_epoch` seconds from its own
+//!   splitmix64 stream ([`crate::sim::workload::Rng64`], seeded from
+//!   `(seed, port)`). The factor is clamped at 1: hardware never beats its
+//!   nominal rate, and slowdown grows monotonically with σ.
+//! * **Stragglers** — a compute-*rate* scale `s ∈ (0, 1]` per device. The
+//!   model has no SM port (compute is timer-driven), so the executor
+//!   applies the equivalent: `Op::Compute` durations on that device are
+//!   multiplied by `1/s`.
+//! * **NIC/link failures** — at time `at`, the device's `NicEgress` +
+//!   `NicIngress` capacities drop to `frac` of baseline (0.0 = hard
+//!   failure: crossing flows stall at rate 0), optionally restored at
+//!   `restore_at`. Failure state *composes* with jitter multiplicatively,
+//!   so a jitter resample can never resurrect a failed link.
+
+use crate::hw::topology::Port;
+use crate::hw::DeviceId;
+use crate::sim::workload::Rng64;
+use crate::util::error::{bail, Context, Result};
+
+/// One timed NIC/link failure.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkFault {
+    /// Global device id whose NIC fails.
+    pub device: usize,
+    /// Simulated time of the failure (seconds).
+    pub at: f64,
+    /// Remaining capacity fraction after the failure (0.0 = hard fail).
+    pub frac: f64,
+    /// Optional restore time (capacity returns to baseline).
+    pub restore_at: Option<f64>,
+}
+
+/// A declarative fault scenario (see module docs).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    /// Seed for every sampled stream (jitter). Same seed → same schedule.
+    pub seed: u64,
+    /// Lognormal jitter σ on link-class ports; 0 disables jitter.
+    pub jitter_sigma: f64,
+    /// Jitter resample period in simulated seconds.
+    pub jitter_epoch: f64,
+    /// `(global device, compute-rate scale in (0, 1])` stragglers.
+    pub stragglers: Vec<(usize, f64)>,
+    /// Timed NIC failures.
+    pub nic_faults: Vec<LinkFault>,
+}
+
+/// Default jitter resample period: 100 µs — a few resamples per wave on
+/// millisecond-scale kernels.
+pub const DEFAULT_JITTER_EPOCH: f64 = 1e-4;
+
+impl FaultSpec {
+    /// An empty (no-op) scenario with a seed for later knobs.
+    pub fn seeded(seed: u64) -> Self {
+        FaultSpec { seed, jitter_epoch: DEFAULT_JITTER_EPOCH, ..Default::default() }
+    }
+
+    /// Enable lognormal bandwidth jitter with strength `sigma`.
+    pub fn with_jitter(mut self, sigma: f64) -> Self {
+        assert!(sigma >= 0.0 && sigma.is_finite(), "jitter sigma must be finite and >= 0");
+        self.jitter_sigma = sigma;
+        if self.jitter_epoch <= 0.0 {
+            self.jitter_epoch = DEFAULT_JITTER_EPOCH;
+        }
+        self
+    }
+
+    /// Add a timed NIC failure.
+    pub fn with_nic_fault(mut self, fault: LinkFault) -> Self {
+        assert!(fault.at >= 0.0 && fault.frac >= 0.0 && fault.frac <= 1.0);
+        if let Some(r) = fault.restore_at {
+            assert!(r > fault.at, "restore must follow the failure");
+        }
+        self.nic_faults.push(fault);
+        self
+    }
+
+    /// Add a straggler device with compute-rate scale `s ∈ (0, 1]`.
+    pub fn with_straggler(mut self, device: usize, scale: f64) -> Self {
+        assert!(scale > 0.0 && scale <= 1.0, "straggler scale must be in (0, 1]");
+        self.stragglers.push((device, scale));
+        self
+    }
+
+    /// True when the scenario injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.jitter_sigma == 0.0 && self.stragglers.is_empty() && self.nic_faults.is_empty()
+    }
+
+    /// Parse the CLI grammar: comma-separated clauses
+    /// `jitter=<sigma>[@<epoch>]`, `nic=<dev>@<t>[:<frac>[:<restore_t>]]`,
+    /// `straggler=<dev>:<scale>`. Example:
+    /// `jitter=0.3@0.0002,nic=3@0.0005:0.1,straggler=0:0.7`.
+    pub fn parse(s: &str, seed: u64) -> Result<FaultSpec> {
+        let mut spec = FaultSpec::seeded(seed);
+        for clause in s.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (key, val) = clause
+                .split_once('=')
+                .with_context(|| format!("bad fault clause '{clause}': expected key=value"))?;
+            match key {
+                "jitter" => {
+                    let (sigma, epoch) = match val.split_once('@') {
+                        Some((s, e)) => (
+                            s.parse::<f64>().with_context(|| format!("bad jitter sigma '{s}'"))?,
+                            e.parse::<f64>().with_context(|| format!("bad jitter epoch '{e}'"))?,
+                        ),
+                        None => (
+                            val.parse::<f64>()
+                                .with_context(|| format!("bad jitter sigma '{val}'"))?,
+                            DEFAULT_JITTER_EPOCH,
+                        ),
+                    };
+                    if !(sigma >= 0.0) || !sigma.is_finite() {
+                        bail!("jitter sigma must be finite and >= 0, got {sigma}");
+                    }
+                    if !(epoch > 0.0) || !epoch.is_finite() {
+                        bail!("jitter epoch must be finite and > 0, got {epoch}");
+                    }
+                    spec.jitter_sigma = sigma;
+                    spec.jitter_epoch = epoch;
+                }
+                "nic" => {
+                    let (dev, rest) = val
+                        .split_once('@')
+                        .with_context(|| format!("bad nic clause '{val}': expected dev@t"))?;
+                    let device =
+                        dev.parse::<usize>().with_context(|| format!("bad nic device '{dev}'"))?;
+                    let mut parts = rest.split(':');
+                    let at_s = parts.next().unwrap_or_default();
+                    let at = at_s
+                        .parse::<f64>()
+                        .with_context(|| format!("bad nic fault time '{at_s}'"))?;
+                    let frac = match parts.next() {
+                        Some(f) => {
+                            f.parse::<f64>().with_context(|| format!("bad nic frac '{f}'"))?
+                        }
+                        None => 0.0,
+                    };
+                    let restore_at = match parts.next() {
+                        Some(r) => Some(
+                            r.parse::<f64>()
+                                .with_context(|| format!("bad nic restore time '{r}'"))?,
+                        ),
+                        None => None,
+                    };
+                    if parts.next().is_some() {
+                        bail!("bad nic clause '{val}': too many ':' fields");
+                    }
+                    if !(at >= 0.0) || !(0.0..=1.0).contains(&frac) {
+                        bail!("nic fault needs t >= 0 and frac in [0, 1], got t={at} frac={frac}");
+                    }
+                    if let Some(r) = restore_at {
+                        if r <= at {
+                            bail!("nic restore time {r} must follow the failure at {at}");
+                        }
+                    }
+                    spec.nic_faults.push(LinkFault { device, at, frac, restore_at });
+                }
+                "straggler" => {
+                    let (dev, sc) = val.split_once(':').with_context(|| {
+                        format!("bad straggler clause '{val}': expected dev:scale")
+                    })?;
+                    let device = dev
+                        .parse::<usize>()
+                        .with_context(|| format!("bad straggler device '{dev}'"))?;
+                    let scale =
+                        sc.parse::<f64>().with_context(|| format!("bad straggler scale '{sc}'"))?;
+                    if !(scale > 0.0 && scale <= 1.0) {
+                        bail!("straggler scale must be in (0, 1], got {scale}");
+                    }
+                    spec.stragglers.push((device, scale));
+                }
+                other => bail!("unknown fault clause key '{other}' (jitter|nic|straggler)"),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Compile against the executor's declared baseline `(port, capacity)`
+    /// list into the timed event schedule. `num_devices` sizes the
+    /// straggler slowdown table. Ports a NIC fault names that were never
+    /// declared (e.g. on a single-node run) are skipped.
+    pub fn compile(&self, ports: &[(Port, f64)], num_devices: usize) -> FaultPlan {
+        let mut jitter = vec![];
+        if self.jitter_sigma > 0.0 {
+            assert!(self.jitter_epoch > 0.0, "jitter needs a positive epoch");
+            for &(port, base) in ports {
+                if !is_link_port(port) {
+                    continue;
+                }
+                jitter.push(JitterStream {
+                    port,
+                    base,
+                    factor: 1.0,
+                    rng: Rng64::new(self.seed ^ port_stream_key(port)),
+                    next_t: 0.0,
+                });
+            }
+        }
+        let base_of = |p: Port| ports.iter().find(|&&(q, _)| q == p).map(|&(_, c)| c);
+        let mut link_events: Vec<(f64, Port, f64)> = vec![];
+        for f in &self.nic_faults {
+            for port in
+                [Port::NicEgress(DeviceId(f.device)), Port::NicIngress(DeviceId(f.device))]
+            {
+                if base_of(port).is_none() {
+                    continue;
+                }
+                link_events.push((f.at, port, f.frac));
+                if let Some(r) = f.restore_at {
+                    link_events.push((r, port, 1.0));
+                }
+            }
+        }
+        // stable order: by (time, port) so simultaneous events apply in a
+        // deterministic sequence whatever order the spec listed them in
+        link_events.sort_by(|a, b| {
+            a.0.total_cmp(&b.0).then_with(|| port_stream_key(a.1).cmp(&port_stream_key(b.1)))
+        });
+        let mut slowdown = vec![1.0; num_devices];
+        for &(d, s) in &self.stragglers {
+            if d < num_devices {
+                // compute-rate scale s → durations stretch by 1/s
+                slowdown[d] = slowdown[d].max(1.0 / s);
+            }
+        }
+        let link_scale = ports.iter().map(|&(p, c)| (p, (1.0, c))).collect();
+        FaultPlan {
+            sigma: self.jitter_sigma,
+            epoch: self.jitter_epoch,
+            jitter,
+            link_events,
+            li: 0,
+            link_scale,
+            slowdown,
+        }
+    }
+}
+
+/// Ports that bandwidth jitter applies to: the link-class resources.
+fn is_link_port(p: Port) -> bool {
+    matches!(
+        p,
+        Port::Egress(_) | Port::Ingress(_) | Port::NicEgress(_) | Port::NicIngress(_)
+    )
+}
+
+/// A stable 64-bit key per port, independent of declaration order — the
+/// per-port jitter stream seed and the simultaneous-event tiebreak.
+fn port_stream_key(p: Port) -> u64 {
+    let (tag, dev) = match p {
+        Port::Egress(d) => (1u64, d.0),
+        Port::Ingress(d) => (2, d.0),
+        Port::Pcie(d) => (3, d.0),
+        Port::SwitchReduce(d) => (4, d.0),
+        Port::Hbm(d) => (5, d.0),
+        Port::CopyEngine(d) => (6, d.0),
+        Port::NicEgress(d) => (7, d.0),
+        Port::NicIngress(d) => (8, d.0),
+    };
+    // splitmix-style scramble of (tag, dev) so per-port streams decorrelate
+    let mut z = tag.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(dev as u64);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z ^ (z >> 27)
+}
+
+/// A standard normal via Box–Muller on the splitmix64 stream.
+fn gauss(rng: &mut Rng64) -> f64 {
+    let u1 = 1.0 - rng.next_f64(); // (0, 1]: ln stays finite
+    let u2 = rng.next_f64();
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+struct JitterStream {
+    port: Port,
+    base: f64,
+    factor: f64,
+    rng: Rng64,
+    next_t: f64,
+}
+
+/// The compiled, stateful fault schedule [`crate::exec::TimedExec`]
+/// drives: `next_time` feeds the event loop's dt computation, `apply_due`
+/// fires every event with `t <= now` through the provided `set_capacity`
+/// sink. Effective capacity is `base × jitter_factor × link_scale`, so
+/// failures and jitter compose without resurrecting each other.
+pub struct FaultPlan {
+    sigma: f64,
+    epoch: f64,
+    jitter: Vec<JitterStream>,
+    /// `(t, port, link scale)` sorted ascending; `li` = next unapplied.
+    link_events: Vec<(f64, Port, f64)>,
+    li: usize,
+    /// port → (current link scale, baseline capacity).
+    link_scale: std::collections::HashMap<Port, (f64, f64)>,
+    /// Per-device `Op::Compute` duration multiplier (≥ 1.0).
+    slowdown: Vec<f64>,
+}
+
+impl FaultPlan {
+    /// Earliest pending fault event of any kind.
+    pub fn next_time(&self) -> Option<f64> {
+        let j = self.jitter.iter().map(|s| s.next_t).fold(f64::INFINITY, f64::min);
+        let l = self.link_events.get(self.li).map_or(f64::INFINITY, |e| e.0);
+        let t = j.min(l);
+        t.is_finite().then_some(t)
+    }
+
+    /// Earliest pending *link-state* event — the only kind that can
+    /// unstall a net whose live flows are all at rate 0.
+    pub fn next_link_time(&self) -> Option<f64> {
+        self.link_events.get(self.li).map(|e| e.0)
+    }
+
+    /// Compute-duration multiplier for global device `dev`.
+    pub fn slowdown(&self, dev: usize) -> f64 {
+        self.slowdown.get(dev).copied().unwrap_or(1.0)
+    }
+
+    /// Fire every event with `t <= now`, pushing the resulting effective
+    /// capacities through `apply`. Jitter streams resample once per epoch
+    /// boundary passed (one draw per epoch — the stream's consumption
+    /// depends only on simulated time, never on the caller's cadence).
+    pub fn apply_due(&mut self, now: f64, apply: &mut dyn FnMut(Port, f64)) {
+        for s in &mut self.jitter {
+            if s.next_t > now {
+                continue;
+            }
+            while s.next_t <= now {
+                let z = gauss(&mut s.rng);
+                s.factor = (self.sigma * z).exp().min(1.0);
+                s.next_t += self.epoch;
+            }
+            let link = self.link_scale.get(&s.port).map_or(1.0, |&(l, _)| l);
+            apply(s.port, s.base * s.factor * link);
+        }
+        while self.li < self.link_events.len() && self.link_events[self.li].0 <= now {
+            let (_, port, scale) = self.link_events[self.li];
+            self.li += 1;
+            let entry = match self.link_scale.get_mut(&port) {
+                Some(e) => e,
+                None => continue,
+            };
+            entry.0 = scale;
+            let base = entry.1;
+            let jf = self
+                .jitter
+                .iter()
+                .find(|s| s.port == port)
+                .map_or(1.0, |s| s.factor);
+            apply(port, base * jf * scale);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ports() -> Vec<(Port, f64)> {
+        vec![
+            (Port::Egress(DeviceId(0)), 400e9),
+            (Port::Ingress(DeviceId(0)), 400e9),
+            (Port::Hbm(DeviceId(0)), 3000e9),
+            (Port::NicEgress(DeviceId(0)), 50e9),
+            (Port::NicIngress(DeviceId(0)), 50e9),
+        ]
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let spec = FaultSpec::seeded(7).with_jitter(0.4);
+        let drive = || {
+            let mut plan = spec.compile(&ports(), 1);
+            let mut log: Vec<(Port, u64)> = vec![];
+            for k in 1..=20 {
+                plan.apply_due(k as f64 * 3e-5, &mut |p, c| log.push((p, c.to_bits())));
+            }
+            log
+        };
+        assert_eq!(drive(), drive());
+        // a different seed produces a different schedule
+        let mut other = FaultSpec::seeded(8).with_jitter(0.4).compile(&ports(), 1);
+        let mut log2 = vec![];
+        for k in 1..=20 {
+            other.apply_due(k as f64 * 3e-5, &mut |p, c| log2.push((p, c.to_bits())));
+        }
+        assert_ne!(drive(), log2);
+    }
+
+    #[test]
+    fn jitter_consumption_is_cadence_independent() {
+        // applying in many small steps or one big step must land on the
+        // same factors: one draw per epoch boundary, keyed to sim time.
+        let spec = FaultSpec::seeded(3).with_jitter(0.5);
+        let mut fine = spec.compile(&ports(), 1);
+        let mut coarse = spec.compile(&ports(), 1);
+        let mut last_fine: std::collections::HashMap<Port, u64> = Default::default();
+        for k in 1..=100 {
+            fine.apply_due(k as f64 * 1e-5, &mut |p, c| {
+                last_fine.insert(p, c.to_bits());
+            });
+        }
+        let mut last_coarse: std::collections::HashMap<Port, u64> = Default::default();
+        coarse.apply_due(100.0 * 1e-5, &mut |p, c| {
+            last_coarse.insert(p, c.to_bits());
+        });
+        assert_eq!(last_fine, last_coarse);
+    }
+
+    #[test]
+    fn jitter_never_exceeds_baseline_and_skips_non_link_ports() {
+        let spec = FaultSpec::seeded(11).with_jitter(1.0);
+        let mut plan = spec.compile(&ports(), 1);
+        let mut seen = vec![];
+        plan.apply_due(1.0, &mut |p, c| seen.push((p, c)));
+        assert!(!seen.is_empty());
+        for (p, c) in seen {
+            assert!(c.is_finite() && c >= 0.0);
+            match p {
+                Port::Egress(_) | Port::Ingress(_) => assert!(c <= 400e9),
+                Port::NicEgress(_) | Port::NicIngress(_) => assert!(c <= 50e9),
+                other => panic!("jitter must not touch {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn nic_fault_fires_and_restores_and_composes_with_jitter() {
+        let spec = FaultSpec::seeded(5).with_jitter(0.3).with_nic_fault(LinkFault {
+            device: 0,
+            at: 2e-4,
+            frac: 0.0,
+            restore_at: Some(6e-4),
+        });
+        let mut plan = spec.compile(&ports(), 1);
+        let mut caps: std::collections::HashMap<Port, f64> = Default::default();
+        plan.apply_due(3e-4, &mut |p, c| {
+            caps.insert(p, c);
+        });
+        assert_eq!(caps[&Port::NicEgress(DeviceId(0))], 0.0, "hard-failed NIC");
+        assert_eq!(caps[&Port::NicIngress(DeviceId(0))], 0.0);
+        // jitter resamples while failed must not resurrect the link
+        plan.apply_due(5e-4, &mut |p, c| {
+            caps.insert(p, c);
+        });
+        assert_eq!(caps[&Port::NicEgress(DeviceId(0))], 0.0, "jitter resurrection");
+        // restore returns to base × current jitter factor (≤ base, > 0)
+        plan.apply_due(7e-4, &mut |p, c| {
+            caps.insert(p, c);
+        });
+        let c = caps[&Port::NicEgress(DeviceId(0))];
+        assert!(c > 0.0 && c <= 50e9, "restored: {c}");
+    }
+
+    #[test]
+    fn next_time_orders_link_and_jitter_events() {
+        let spec = FaultSpec::seeded(1).with_nic_fault(LinkFault {
+            device: 0,
+            at: 5e-4,
+            frac: 0.5,
+            restore_at: None,
+        });
+        let plan = spec.compile(&ports(), 1);
+        assert_eq!(plan.next_time(), Some(5e-4));
+        assert_eq!(plan.next_link_time(), Some(5e-4));
+        let jitter = FaultSpec::seeded(1).with_jitter(0.2).compile(&ports(), 1);
+        assert_eq!(jitter.next_time(), Some(0.0), "jitter starts at t=0");
+        assert_eq!(jitter.next_link_time(), None);
+        // an empty spec has no events at all
+        let empty = FaultSpec::seeded(1).compile(&ports(), 1);
+        assert_eq!(empty.next_time(), None);
+    }
+
+    #[test]
+    fn straggler_slowdown_table() {
+        let spec = FaultSpec::seeded(0).with_straggler(2, 0.5);
+        let plan = spec.compile(&ports(), 4);
+        assert_eq!(plan.slowdown(2), 2.0);
+        assert_eq!(plan.slowdown(0), 1.0);
+        assert_eq!(plan.slowdown(99), 1.0, "out of range defaults to 1");
+    }
+
+    #[test]
+    fn parse_full_grammar() {
+        let s = FaultSpec::parse("jitter=0.3@0.0002,nic=3@0.0005:0.1:0.001,straggler=0:0.7", 42)
+            .unwrap();
+        assert_eq!(s.seed, 42);
+        assert_eq!(s.jitter_sigma, 0.3);
+        assert_eq!(s.jitter_epoch, 2e-4);
+        assert_eq!(
+            s.nic_faults,
+            vec![LinkFault { device: 3, at: 5e-4, frac: 0.1, restore_at: Some(1e-3) }]
+        );
+        assert_eq!(s.stragglers, vec![(0, 0.7)]);
+        // defaults: bare jitter keeps the default epoch, bare nic is hard
+        let s = FaultSpec::parse("jitter=0.5,nic=1@0.002", 0).unwrap();
+        assert_eq!(s.jitter_epoch, DEFAULT_JITTER_EPOCH);
+        assert_eq!(s.nic_faults[0].frac, 0.0);
+        assert_eq!(s.nic_faults[0].restore_at, None);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "jitter",            // no value
+            "jitter=abc",        // not a float
+            "jitter=-0.5",       // negative sigma
+            "jitter=0.3@0",      // zero epoch
+            "nic=0",             // no time
+            "nic=x@0.1",         // bad device
+            "nic=0@0.1:2.0",     // frac > 1
+            "nic=0@0.5:0.1:0.2", // restore before failure
+            "nic=0@1:0:2:3",     // too many fields
+            "straggler=0",       // no scale
+            "straggler=0:0",     // scale out of range
+            "warp=1",            // unknown key
+        ] {
+            assert!(FaultSpec::parse(bad, 0).is_err(), "should reject '{bad}'");
+        }
+    }
+}

@@ -229,16 +229,23 @@ impl FlowNet {
     }
 
     /// Declare a port's capacity in bytes/s. Ports default to infinite
-    /// capacity if never declared (useful for tests).
+    /// capacity if never declared (useful for tests). Zero is a legal
+    /// capacity — a failed link: flows crossing it stall at rate 0 (the
+    /// water-fill assigns them level 0 and terminates normally) and
+    /// [`FlowNet::next_completion`] reports `None` while every live flow
+    /// is stalled. Restoring a positive capacity resumes them.
     pub fn set_capacity(&mut self, port: Port, bytes_per_s: f64) {
-        assert!(bytes_per_s > 0.0);
+        assert!(bytes_per_s >= 0.0 && !bytes_per_s.is_nan(), "capacity must be >= 0, got {bytes_per_s}");
         self.capacity.insert(port, bytes_per_s);
         if let Some(&id) = self.port_id.get(&port) {
             // capacity changed after the port was interned: refresh the
-            // dense table and drop memoized solves computed against the
-            // old value.
+            // dense table, drop memoized solves computed against the old
+            // value, and force a re-solve even if no flow churn follows
+            // (fault injection changes capacities mid-flight with no
+            // accompanying start/completion).
             self.port_cap[id as usize] = bytes_per_s;
             self.solve_cache.clear();
+            self.rates_dirty = true;
         }
     }
 
@@ -1071,6 +1078,76 @@ mod tests {
         }
         assert_eq!(scan.n_active(), 0);
         assert_eq!(heap.n_active(), 0);
+    }
+
+    fn zero_capacity_stalls_cleanly_on(engine: Engine) {
+        // a failed link: capacity -> 0 must not produce NaN/Inf rates or a
+        // non-terminating water-fill; stalled flows report no completion
+        // and resume when the capacity is restored.
+        let mut net = FlowNet::with_engine(engine);
+        net.set_capacity(egress(0), 100.0);
+        let a = net.start(100.0, vec![egress(0)], 1e9);
+        assert_eq!(net.rate(a), 100.0);
+        net.set_capacity(egress(0), 0.0);
+        let r = net.rate(a);
+        assert_eq!(r, 0.0, "stalled flow rate must be exactly 0 ({engine:?}): {r}");
+        assert!(net.next_completion().is_none(), "all-stalled net has no next completion");
+        // advancing time while stalled moves no bytes and completes nothing
+        assert!(net.advance(5.0).is_empty());
+        assert_eq!(net.n_active(), 1);
+        // a second flow on a healthy port still progresses around the stall
+        net.set_capacity(ingress(1), 50.0);
+        let b = net.start(50.0, vec![ingress(1)], 1e9);
+        assert_eq!(net.rate(b), 50.0);
+        assert_eq!(net.rate(a), 0.0);
+        let dt = net.next_completion().expect("healthy flow must progress");
+        assert!((dt - 1.0).abs() < 1e-4, "{dt}");
+        assert_eq!(net.advance(dt), vec![b]);
+        // restore: the stalled flow picks the full port back up and drains
+        net.set_capacity(egress(0), 100.0);
+        assert_eq!(net.rate(a), 100.0);
+        let dt = net.next_completion().expect("restored flow must progress");
+        assert!((dt - 1.0).abs() < 1e-4, "full 100 bytes remain: {dt}");
+        assert_eq!(net.advance(dt), vec![a]);
+        assert_eq!(net.n_active(), 0);
+    }
+
+    #[test]
+    fn zero_capacity_stalls_cleanly_scan() {
+        zero_capacity_stalls_cleanly_on(Engine::Scan);
+    }
+
+    #[test]
+    fn zero_capacity_stalls_cleanly_heap() {
+        zero_capacity_stalls_cleanly_on(Engine::Heap);
+    }
+
+    #[test]
+    fn zero_capacity_shared_port_starves_only_the_crossing_class() {
+        // two classes share egress(0); one also crosses a failed ingress.
+        // The water-fill must give the failed class exactly 0 and hand the
+        // full shared-port capacity to the healthy class — no NaN, no
+        // livelock, identical on both solvers.
+        let mut caps = HashMap::new();
+        caps.insert(egress(0), 100.0);
+        caps.insert(ingress(1), 0.0);
+        let flows = vec![
+            FlowSpec { active: true, ports: vec![egress(0)], cap: 1e9 },
+            FlowSpec { active: true, ports: vec![egress(0), ingress(1)], cap: 1e9 },
+        ];
+        let r = compute_rates(&flows, &caps);
+        assert_eq!(r[1], 0.0);
+        assert!((r[0] - 100.0).abs() < 1e-9, "{r:?}");
+        for engine in [Engine::Scan, Engine::Heap] {
+            let mut net = FlowNet::with_engine(engine);
+            net.set_capacity(egress(0), 100.0);
+            net.set_capacity(ingress(1), 0.0);
+            let h = net.start(100.0, vec![egress(0)], 1e9);
+            let s = net.start(100.0, vec![egress(0), ingress(1)], 1e9);
+            assert_eq!(net.rate(s), 0.0, "{engine:?}");
+            assert_eq!(net.rate(h), 100.0, "{engine:?}");
+            assert!(net.rate(h).is_finite() && !net.rate(s).is_nan());
+        }
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //!   batching, prefill/decode disaggregation, scheduler policies) whose
 //!   per-step cost is calibrated from the timed kernel schedules.
 
+pub mod fault;
 pub mod flownet;
 pub mod partition;
 pub mod serve;

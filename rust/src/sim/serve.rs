@@ -45,6 +45,7 @@ use crate::hw::spec::NodeSpec;
 use crate::kernels::gemm_rs::{self, Schedule};
 use crate::kernels::GemmKernelCfg;
 use crate::pk::tuner::analytic_rdma_chunk;
+use crate::sim::fault::{FaultSpec, LinkFault};
 use crate::sim::workload::{generate, ArrivalProcess, Request, TraceCfg};
 use crate::util::stats::{percentile, summarize, Summary};
 use crate::xfer::curves;
@@ -107,6 +108,16 @@ pub struct ServeCfg {
     pub slo_ttft: f64,
     /// SLO: per-output-token budget (seconds/token).
     pub slo_tpot: f64,
+    /// Optional injected fault scenario ([`crate::sim::fault`]). In the
+    /// serving layer `nic=` clauses index **nodes** (prefill nodes first,
+    /// then decode nodes): an active window throttles (or, at `frac = 0`,
+    /// stalls until restore) the KV transfers into that decode node's
+    /// NIC-ingress FIFO, and a hard failure with no restore takes the
+    /// node out of dispatch rotation entirely — the fleet-level analogue
+    /// of the rail reroute. `straggler=` clauses scale a node's step
+    /// rate. `jitter=` applies to the kernel-level DES only and is
+    /// ignored here.
+    pub fault: Option<FaultSpec>,
 }
 
 impl ServeCfg {
@@ -121,6 +132,7 @@ impl ServeCfg {
             kv_capacity_tokens: 262_144,
             slo_ttft: 0.2,
             slo_tpot: 2e-3,
+            fault: None,
         }
     }
 }
@@ -433,6 +445,75 @@ fn prefill_service(cost: &StepCostModel, policy: SchedPolicy, prompt: usize) -> 
     }
 }
 
+/// Compute-rate scale of node `node_id` under the fault scenario
+/// (straggler clauses compose multiplicatively).
+fn node_rate(fault: &Option<FaultSpec>, node_id: usize) -> f64 {
+    fault.as_ref().map_or(1.0, |f| {
+        f.stragglers.iter().filter(|(d, _)| *d == node_id).map(|(_, s)| *s).product()
+    })
+}
+
+/// The cost model slowed to compute-rate `rate` (times scale by 1/rate).
+fn scaled_cost(cost: &StepCostModel, rate: f64) -> StepCostModel {
+    if rate >= 1.0 {
+        return cost.clone();
+    }
+    StepCostModel {
+        knots: cost.knots.iter().map(|&(x, y)| (x, y / rate)).collect(),
+        layers: cost.layers,
+    }
+}
+
+/// True when `node_id`'s NIC is hard-failed and never restored — the
+/// dispatcher takes the node out of rotation entirely rather than park
+/// requests on a link that will never move them.
+fn nic_dead_forever(fault: &Option<FaultSpec>, node_id: usize) -> bool {
+    fault.as_ref().map_or(false, |f| {
+        f.nic_faults
+            .iter()
+            .any(|lf| lf.device == node_id && lf.frac <= 1e-9 && lf.restore_at.is_none())
+    })
+}
+
+/// Finish time of a KV transfer of `bytes` starting at `start` into a
+/// NIC whose rate is scaled by the active fault windows: the transfer
+/// runs at `rate × ∏ frac` of the windows covering each instant, and an
+/// outage (`frac = 0`) stalls it until the window's restore. Each loop
+/// step either finishes the transfer or advances `t` to a strictly later
+/// window boundary, so it terminates.
+fn faulted_xfer_end(start: f64, bytes: f64, rate: f64, latency: f64, faults: &[&LinkFault]) -> f64 {
+    let mut t = start + latency;
+    let mut left = bytes;
+    loop {
+        let scale: f64 = faults
+            .iter()
+            .filter(|f| f.at <= t && f.restore_at.map_or(true, |r| t < r))
+            .map(|f| f.frac)
+            .product();
+        let next = faults
+            .iter()
+            .flat_map(|f| [Some(f.at), f.restore_at])
+            .flatten()
+            .filter(|&b| b > t)
+            .fold(f64::INFINITY, f64::min);
+        let eff = rate * scale;
+        if eff <= 1e-30 {
+            assert!(
+                next.is_finite(),
+                "KV transfer stalled on a never-restored NIC (the dispatcher should have \
+                 routed around it)"
+            );
+            t = next;
+            continue;
+        }
+        if left <= eff * (next - t) {
+            return t + left / eff;
+        }
+        left -= eff * (next - t);
+        t = next;
+    }
+}
+
 /// Disaggregated prefill/decode over `K ≥ 2` nodes: `⌊K/2⌋` (min 1)
 /// prefill nodes feed the remaining decode nodes; KV crosses the RDMA
 /// fabric and serializes on each decode node's NIC-ingress FIFO.
@@ -446,6 +527,10 @@ fn run_disaggregated(
     debug_assert!(k >= 2);
     let n_prefill = (k / 2).max(1);
     let n_decode = k - n_prefill;
+    // per-node cost models under straggler scaling (node ids: prefill
+    // nodes first, then decode nodes)
+    let pf_cost: Vec<StepCostModel> =
+        (0..n_prefill).map(|s| scaled_cost(cost, node_rate(&cfg.fault, s))).collect();
     // --- prefill: a single policy-ordered queue over n_prefill servers
     let mut free = vec![0.0f64; n_prefill];
     let mut ready: Vec<usize> = vec![];
@@ -484,7 +569,7 @@ fn run_disaggregated(
         };
         let r = ready.remove(pick);
         let start = t_now.max(trace[r].arrival);
-        let service = prefill_service(cost, eng.policy, trace[r].prompt_tokens);
+        let service = prefill_service(&pf_cost[srv], eng.policy, trace[r].prompt_tokens);
         pf_end[r] = start + service;
         free[srv] = pf_end[r];
         stats.steps += 1;
@@ -522,9 +607,19 @@ fn run_disaggregated(
         let kv_bytes = req.prompt_tokens as f64 * cfg.model.kv_bytes_per_token;
         let chunk = analytic_rdma_chunk(&cfg.cluster, kv_bytes);
         let rate = curves::rdma_rate(&cfg.cluster, chunk);
-        let xfer = cfg.cluster.nic_latency + kv_bytes / rate;
-        let dn = (0..n_decode).min_by_key(|&d| (assigned_kv[d], d)).expect("n_decode >= 1");
-        ingress_free[dn] = ingress_free[dn].max(pf_end[r]) + xfer;
+        let dn = (0..n_decode)
+            .filter(|&d| !nic_dead_forever(&cfg.fault, n_prefill + d))
+            .min_by_key(|&d| (assigned_kv[d], d))
+            .expect("every decode node's NIC is permanently failed — no dispatch target left");
+        let start = ingress_free[dn].max(pf_end[r]);
+        let nf: Vec<&LinkFault> = cfg.fault.as_ref().map_or_else(Vec::new, |f| {
+            f.nic_faults.iter().filter(|lf| lf.device == n_prefill + dn).collect()
+        });
+        ingress_free[dn] = if nf.is_empty() {
+            start + cfg.cluster.nic_latency + kv_bytes / rate
+        } else {
+            faulted_xfer_end(start, kv_bytes, rate, cfg.cluster.nic_latency, &nf)
+        };
         assigned_kv[dn] += req.prompt_tokens + req.output_tokens;
         jobs_per_node[dn].push(Job {
             req,
@@ -534,8 +629,15 @@ fn run_disaggregated(
             first_token: Some(pf_end[r]),
         });
     }
-    for jobs in jobs_per_node {
-        let (c, s) = eng.run_node(jobs);
+    for (dn, jobs) in jobs_per_node.into_iter().enumerate() {
+        let ncost = scaled_cost(eng.cost, node_rate(&cfg.fault, n_prefill + dn));
+        let neng = Engine {
+            cost: &ncost,
+            policy: eng.policy,
+            max_batch_tokens: eng.max_batch_tokens,
+            kv_capacity_tokens: eng.kv_capacity_tokens,
+        };
+        let (c, s) = neng.run_node(jobs);
         comps.extend(c);
         stats.merge(&s);
     }
@@ -556,8 +658,13 @@ pub fn run_detailed(
     trace: &[Request],
 ) -> (ServeReport, Vec<Completion>) {
     assert!(!trace.is_empty(), "serve needs a non-empty trace");
+    // colocated: node 0 is the whole system, so a straggler clause on it
+    // scales every step (disaggregation scales per node inside
+    // `run_disaggregated` instead)
+    let cost0 =
+        scaled_cost(cost, if cfg.cluster.num_nodes == 1 { node_rate(&cfg.fault, 0) } else { 1.0 });
     let eng = Engine {
-        cost,
+        cost: &cost0,
         policy: cfg.policy,
         max_batch_tokens: cfg.max_batch_tokens,
         kv_capacity_tokens: cfg.kv_capacity_tokens,
@@ -805,5 +912,94 @@ mod tests {
         let b = capacity_probe(&cfg, &cost, 64, 7);
         assert!(a > 0.0 && a.is_finite());
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mid_trace_nic_outage_delays_but_loses_nothing() {
+        let cost = toy_cost();
+        let trace = chat_trace(100.0, 120, 9);
+        let healthy = run_with_cost(&toy_cfg(2), &cost, &trace);
+        // outage on the decode node (node 1) from 20% of the healthy
+        // makespan until well past it: every KV transfer starting inside
+        // the window stalls to the restore, so the makespan must cross it
+        let mut cfg = toy_cfg(2);
+        cfg.fault = Some(FaultSpec::seeded(1).with_nic_fault(LinkFault {
+            device: 1,
+            at: 0.2 * healthy.duration,
+            frac: 0.0,
+            restore_at: Some(2.0 * healthy.duration),
+        }));
+        let faulted = run_with_cost(&cfg, &cost, &trace);
+        // run_with_cost already asserted no request was lost or duplicated
+        assert_eq!(faulted.n_requests, 120);
+        assert!(
+            faulted.duration >= 2.0 * healthy.duration * (1.0 - 1e-9),
+            "stalled transfers must push the makespan past the restore: {} vs healthy {}",
+            faulted.duration,
+            healthy.duration
+        );
+        assert!(faulted.latency_p99 >= healthy.latency_p99);
+    }
+
+    #[test]
+    fn brownout_window_throttles_but_preserves_order_and_requests() {
+        let cost = toy_cost();
+        let trace = chat_trace(100.0, 100, 13);
+        let healthy = run_with_cost(&toy_cfg(2), &cost, &trace);
+        let mut cfg = toy_cfg(2);
+        // 10%-capacity brownout covering the middle of the trace
+        cfg.fault = Some(FaultSpec::seeded(1).with_nic_fault(LinkFault {
+            device: 1,
+            at: 0.1 * healthy.duration,
+            frac: 0.1,
+            restore_at: Some(0.8 * healthy.duration),
+        }));
+        let faulted = run_with_cost(&cfg, &cost, &trace);
+        assert_eq!(faulted.n_requests, 100);
+        assert!(faulted.duration >= healthy.duration * (1.0 - 1e-9));
+        assert!(faulted.duration.is_finite());
+    }
+
+    #[test]
+    fn dead_decode_node_is_routed_around() {
+        let cost = toy_cost();
+        let trace = chat_trace(100.0, 80, 21);
+        // 4 nodes: 2 prefill + 2 decode (nodes 2 and 3); node 3's NIC is
+        // permanently down, so every request must land on node 2
+        let mut cfg = toy_cfg(4);
+        cfg.fault = Some(FaultSpec::seeded(1).with_nic_fault(LinkFault {
+            device: 3,
+            at: 0.0,
+            frac: 0.0,
+            restore_at: None,
+        }));
+        let degraded = run_with_cost(&cfg, &cost, &trace);
+        assert_eq!(degraded.n_requests, 80);
+        assert!(degraded.duration.is_finite());
+        let healthy = run_with_cost(&toy_cfg(4), &cost, &trace);
+        assert!(
+            degraded.duration >= healthy.duration * (1.0 - 1e-9),
+            "half the decode fleet cannot be faster: {} vs {}",
+            degraded.duration,
+            healthy.duration
+        );
+    }
+
+    #[test]
+    fn straggler_node_scales_every_step() {
+        let cost = toy_cost();
+        let trace = chat_trace(50.0, 60, 33);
+        let healthy = run_with_cost(&toy_cfg(1), &cost, &trace);
+        let mut cfg = toy_cfg(1);
+        cfg.fault = Some(FaultSpec::seeded(1).with_straggler(0, 0.5));
+        let slow = run_with_cost(&cfg, &cost, &trace);
+        assert_eq!(slow.n_requests, 60);
+        assert!(
+            slow.tokens_per_s < healthy.tokens_per_s,
+            "a half-rate node must lose throughput: {} vs {}",
+            slow.tokens_per_s,
+            healthy.tokens_per_s
+        );
+        assert!(slow.latency_p99 > healthy.latency_p99);
     }
 }

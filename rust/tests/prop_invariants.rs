@@ -684,6 +684,98 @@ fn prop_gemm_rs_rail_reduce_bit_identical_to_scatter() {
     });
 }
 
+/// Graceful degradation: a gemm_rs plan built under a NIC health mask
+/// (1–2 failed NICs, rail flows rerouted through healthy donors over
+/// NVLink first) produces bit-identical reduced output to the healthy
+/// schedule — only the transport moves, never the data — the rerouted
+/// plan is `plan::verify`-clean, and the failed NICs carry zero bytes in
+/// the timed run.
+#[test]
+fn prop_gemm_rs_degraded_rail_bit_identical_and_verify_clean() {
+    use pk::kernels::gemm_rs::{build_cluster_health, ClusterPath, GemmRsBufs, Schedule};
+    use pk::kernels::GemmKernelCfg;
+    use pk::pk::rail::RailHealth;
+    use pk::plan::verify::{verify, VerifyCtx};
+    run_prop("gemm_rs_degraded_rail", 6, |rng| {
+        let k = rng.usize_in(2, 3);
+        let p = rng.usize_in(2, 3);
+        let n = k * p;
+        let cluster = ClusterSpec::test_cluster(k, p);
+        let m = n * 16 * rng.usize_in(1, 2);
+        let cols = 16 * rng.usize_in(1, 2);
+        let kdim = 8 * rng.usize_in(1, 2);
+        let cfg = GemmKernelCfg::functional(cluster.node.clone(), m, cols, kdim);
+        // fail 1-2 NICs on distinct devices (never a whole node: p >= 2
+        // and the second failure lands on a different node)
+        let f1 = rng.usize_in(0, n - 1);
+        let mut health = RailHealth::all_healthy(&cluster).fail_nic(f1);
+        if rng.f64() < 0.5 {
+            let other_node = (f1 / p + 1) % k;
+            health = health.fail_nic(other_node * p + rng.usize_in(0, p - 1));
+        }
+        let failed = health.failed();
+        let mut results = vec![];
+        for mask in [RailHealth::all_healthy(&cluster), health] {
+            let mut pool = MemPool::new();
+            let bufs = GemmRsBufs::alloc_cluster(&mut pool, &cfg, &cluster);
+            for d in 0..n {
+                // small-integer f32s: every sum is exactly representable,
+                // so the value cannot depend on the summation tree
+                pool.get_mut(bufs.gemm.a[d]).data =
+                    (0..m * kdim).map(|i| ((i * 7 + d * 13) % 5) as f32 - 2.0).collect();
+                pool.get_mut(bufs.gemm.b[d]).data =
+                    (0..kdim * cols).map(|i| ((i * 11 + d * 3) % 7) as f32 - 3.0).collect();
+            }
+            let plan = build_cluster_health(
+                &cfg,
+                &cluster,
+                Schedule::IntraSm,
+                ClusterPath::RailReduce,
+                &mask,
+                Some(&bufs),
+            );
+            let ctx = VerifyCtx { pool: Some(&pool), devices_per_node: Some(p) };
+            let report = verify(&plan, &ctx);
+            if !report.is_clean() {
+                return Err(format!(
+                    "health-masked plan (failed {failed:?}) must verify clean:\n{}",
+                    report.render()
+                ));
+            }
+            FunctionalExec::new(&mut pool).run(&plan).map_err(|e| e.to_string())?;
+            let mut out = vec![];
+            for d in 0..n {
+                out.extend_from_slice(&pool.get(bufs.out[d]).data);
+            }
+            results.push(out);
+        }
+        if results[0] != results[1] {
+            return Err(format!(
+                "degraded-rail output (failed {failed:?}) must be bit-identical to healthy"
+            ));
+        }
+        // timed: the failed NICs carry nothing; their flows moved to donors
+        let timed = build_cluster_health(
+            &cfg,
+            &cluster,
+            Schedule::IntraSm,
+            ClusterPath::RailReduce,
+            &RailHealth::all_healthy(&cluster).fail_nic(failed[0]),
+            None,
+        );
+        let r = TimedExec::on_cluster(cluster.clone()).run(&timed);
+        if !(r.total_time.is_finite() && r.total_time > 0.0) {
+            return Err("degraded timed run must finish".into());
+        }
+        let e = r.port_bytes.get(&Port::NicEgress(DeviceId(failed[0]))).copied().unwrap_or(0.0);
+        let i = r.port_bytes.get(&Port::NicIngress(DeviceId(failed[0]))).copied().unwrap_or(0.0);
+        if e != 0.0 || i != 0.0 {
+            return Err(format!("failed NIC {} must carry zero bytes, got {e}/{i}", failed[0]));
+        }
+        Ok(())
+    });
+}
+
 /// Two-level all-to-all NIC byte conservation under arbitrary shard
 /// shapes: every device's NIC carries exactly the `(K-1)/K` share of its
 /// exchange bytes in *each* direction, whatever the batch/sequence/head
@@ -852,13 +944,33 @@ fn prop_incremental_solver_bit_identical_to_naive() {
     });
 }
 
+/// Lockstep rate-bit comparison for `prop_heap_engine_bit_identical_to_scan`.
+fn continue_checks(
+    scan: &mut pk::sim::flownet::FlowNet,
+    heap: &mut pk::sim::flownet::FlowNet,
+    live: &[pk::sim::flownet::FlowId],
+) -> Result<(), String> {
+    for &id in live {
+        let (rs, rh) = (scan.rate(id), heap.rate(id));
+        if rs.to_bits() != rh.to_bits() {
+            return Err(format!("rate diverged on slot {}: {rs:e} vs {rh:e}", id.0));
+        }
+    }
+    Ok(())
+}
+
 /// The epoch-keyed completion-heap engine must be **bit-identical** to
 /// the retained scan reference under random churn: same next-completion
 /// bits, same completion batches (same slots, same order), same per-flow
 /// rate bits, and the same number of dirty solves — across starts,
 /// partial/overshooting advances, and live capacity reconfiguration
-/// (which invalidates heap entries via the lazy seq bump). Mirrors the
-/// pure-Python protocol model in `python/tests/test_des_engine_model.py`.
+/// (which invalidates heap entries via the lazy seq bump). The
+/// reconfiguration mix includes **failure-shaped schedules**: capacity
+/// drops to a degraded fraction, hard drops to exactly 0.0 (flows stall;
+/// both engines must report `next_completion = None`), and later
+/// restores — the churn pattern fault injection (`sim::fault`) leans on.
+/// Mirrors the pure-Python protocol model in
+/// `python/tests/test_des_engine_model.py`.
 #[test]
 fn prop_heap_engine_bit_identical_to_scan() {
     use pk::sim::flownet::{Engine, FlowNet};
@@ -878,6 +990,7 @@ fn prop_heap_engine_bit_identical_to_scan() {
         }
         let cap_pool = [40.0, 120.0, 333.25];
         let mut live: Vec<pk::sim::flownet::FlowId> = vec![];
+        let mut failed: Vec<Port> = vec![];
         for _ in 0..rng.usize_in(20, 70) {
             let roll = rng.f64();
             if live.is_empty() || roll < 0.45 {
@@ -899,38 +1012,77 @@ fn prop_heap_engine_bit_identical_to_scan() {
                     return Err(format!("slot allocation diverged: {a:?} vs {b:?}"));
                 }
                 live.push(a);
-            } else if roll < 0.55 {
+            } else if roll < 0.58 {
                 // live reconfiguration: old heap entries go stale and the
                 // next solve must re-key exactly the flows whose rate
-                // bits change
+                // bits change. The mix includes failure shapes: degrade
+                // to a small fraction, fail hard to 0.0, restore a
+                // previously failed port.
                 let p = *rng.choose(&ports_used);
-                let c = 50.0 + 450.0 * rng.f64();
+                let c = match rng.usize_in(0, 4) {
+                    0 => 50.0 + 450.0 * rng.f64(),  // plain reconfig
+                    1 => 5.0 + 20.0 * rng.f64(),    // degraded link
+                    2 => 0.0,                       // hard failure
+                    _ => {
+                        // restore a failed port (or reconfig if none)
+                        if let Some(q) = failed.pop() {
+                            let c = 50.0 + 450.0 * rng.f64();
+                            scan.set_capacity(q, c);
+                            heap.set_capacity(q, c);
+                            continue_checks(&mut scan, &mut heap, &live)?;
+                            continue;
+                        }
+                        50.0 + 450.0 * rng.f64()
+                    }
+                };
+                if c == 0.0 {
+                    failed.push(p);
+                }
                 scan.set_capacity(p, c);
                 heap.set_capacity(p, c);
             } else {
-                let a = scan.next_completion().expect("live flows must progress");
-                let b = heap.next_completion().expect("live flows must progress");
-                if a.to_bits() != b.to_bits() {
-                    return Err(format!("next_completion diverged: {a:e} vs {b:e}"));
-                }
-                let frac = *rng.choose(&[1.0, 1.0, 1.0, 0.5, 0.25, 1.25]);
-                let done_s = scan.advance(a * frac).to_vec();
-                let done_h = heap.advance(a * frac).to_vec();
-                if done_s != done_h {
-                    return Err(format!("completions diverged: {done_s:?} vs {done_h:?}"));
-                }
-                for d in &done_s {
-                    live.retain(|id| id != d);
+                match (scan.next_completion(), heap.next_completion()) {
+                    (None, None) => {
+                        // every live flow stalled on a failed port: both
+                        // engines must agree, and time passing must move
+                        // no bytes — then restore a port to resume.
+                        let done_s = scan.advance(1.0).to_vec();
+                        let done_h = heap.advance(1.0).to_vec();
+                        if !done_s.is_empty() || !done_h.is_empty() {
+                            return Err(format!(
+                                "stalled nets completed flows: {done_s:?} vs {done_h:?}"
+                            ));
+                        }
+                        let q = failed.pop().expect("all-stalled requires a failed port");
+                        let c = 50.0 + 450.0 * rng.f64();
+                        scan.set_capacity(q, c);
+                        heap.set_capacity(q, c);
+                    }
+                    (Some(a), Some(b)) => {
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!("next_completion diverged: {a:e} vs {b:e}"));
+                        }
+                        let frac = *rng.choose(&[1.0, 1.0, 1.0, 0.5, 0.25, 1.25]);
+                        let done_s = scan.advance(a * frac).to_vec();
+                        let done_h = heap.advance(a * frac).to_vec();
+                        if done_s != done_h {
+                            return Err(format!("completions diverged: {done_s:?} vs {done_h:?}"));
+                        }
+                        for d in &done_s {
+                            live.retain(|id| id != d);
+                        }
+                    }
+                    other => return Err(format!("stall detection diverged: {other:?}")),
                 }
             }
-            for &id in &live {
-                let (rs, rh) = (scan.rate(id), heap.rate(id));
-                if rs.to_bits() != rh.to_bits() {
-                    return Err(format!("rate diverged on slot {}: {rs:e} vs {rh:e}", id.0));
-                }
-            }
+            continue_checks(&mut scan, &mut heap, &live)?;
         }
-        // drain both to empty: the batches must mirror to the end
+        // restore every failed port so the drain can finish, then drain
+        // both to empty: the batches must mirror to the end
+        for q in failed.drain(..) {
+            scan.set_capacity(q, 200.0);
+            heap.set_capacity(q, 200.0);
+        }
         while scan.n_active() > 0 {
             let a = scan.next_completion().expect("scan must drain");
             let b = heap.next_completion().expect("heap must drain");

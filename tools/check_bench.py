@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Validate a BENCH_hotpath snapshot (schema ``pk-hotpath-v3``).
+"""Validate a BENCH_hotpath snapshot (schema ``pk-hotpath-v4``).
 
 CI runs the hotpath bench in ``--smoke`` mode and used to just ``cat`` the
 resulting ``BENCH_hotpath.smoke.json`` — which proved the file existed,
@@ -8,8 +8,9 @@ snapshot and fails on schema drift or degenerate values:
 
 * wrong/missing ``schema`` tag, or a missing ``sections`` object;
 * any required section absent (e.g. the solver memo-hit rate, the
-  event-throughput metric, the v2 serving-engine section, or the v3
-  scan-vs-heap and serial-vs-partitioned head-to-head sections);
+  event-throughput metric, the v2 serving-engine section, the v3
+  scan-vs-heap and serial-vs-partitioned head-to-head sections, or the
+  v4 fault-injection/degraded-rail section);
 * non-numeric / non-finite / negative section values;
 * degenerate rates (``event_throughput_per_s == 0`` would mean the DES
   ran no events — a broken bench, not a slow one);
@@ -30,7 +31,7 @@ import json
 import math
 import sys
 
-SCHEMA = "pk-hotpath-v3"
+SCHEMA = "pk-hotpath-v4"
 
 # Section keys the emitter must always write (bench names and derived
 # metrics). Keep in sync with rust/benches/hotpath.rs; the bench-gate
@@ -62,6 +63,11 @@ REQUIRED_SECTIONS = [
     "cluster_events_per_s_serial",
     "cluster_events_per_s_partitioned",
     "partitioned_net_speedup",
+    # v4: the fault-injection path (health-masked rail reroute under a
+    # hard NIC failure) must be benched, and its simulated slowdown vs
+    # the healthy rail plan recorded
+    "timed_exec: GEMM+RS rail reroute @ 1 failed NIC",
+    "fault_slowdown",
 ]
 
 # sections that must be strictly positive when present with a value
@@ -76,6 +82,7 @@ POSITIVE_SECTIONS = {
     "cluster_events_per_s_serial",
     "cluster_events_per_s_partitioned",
     "partitioned_net_speedup",
+    "fault_slowdown",
 }
 
 
