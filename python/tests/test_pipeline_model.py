@@ -1,0 +1,247 @@
+"""Executable model of the Rust model-layer pipeline schedules.
+
+The container this repo grows in has no Rust toolchain (see CHANGES.md),
+so `rust/src/model/pipeline.rs` cannot be executed here. This test
+mirrors the schedule generators op-for-op in pure Python — the same cell
+dependencies (F(vs) <- F(vs-1); B(vs) <- F(vs) + B(vs+1)), the same 1F1B
+warmup arithmetic (w = min(S-1-s, M)), the same round-robin merge and
+greedy interleaved chooser — and checks the properties the Rust tests
+assert plus the ones that need a sweep:
+
+* every schedule's global emission order is simultaneously topological
+  over the data dependencies and consistent with each stage's own order,
+  for all (S, M, chunks) in a sweep — the invariant that makes the
+  per-stage chains plus cross-stage edges acyclic in the emitted Plan;
+* 1F1B warmup/steady/drain shape at every stage;
+* cross-stage credit accounting: each edge carries exactly width*sp
+  delivery credits and the consumer's gate waits for exactly that count,
+  so dropping any single credit leaves an unsatisfiable wait (the
+  protocol form of the Rust verify mutation test);
+* unit-cost makespan: the pipelined schedules are strictly faster than
+  the fully-barriered sequential baseline whenever S >= 2 and M >= 2,
+  and interleaving (2 chunks) does not regress plain 1F1B.
+
+No third-party imports: runs in any Python 3.
+"""
+
+import itertools
+
+
+def cell_f(vs, mb):
+    return (vs, mb, True)
+
+
+def cell_b(vs, mb):
+    return (vs, mb, False)
+
+
+def deps(cell, v_cnt):
+    vs, mb, fwd = cell
+    if fwd:
+        return [cell_f(vs - 1, mb)] if vs > 0 else []
+    d = [cell_f(vs, mb)]
+    if vs + 1 < v_cnt:
+        d.append(cell_b(vs + 1, mb))
+    return d
+
+
+def consumer(cell, v_cnt):
+    vs, mb, fwd = cell
+    if fwd:
+        return cell_f(vs + 1, mb) if vs + 1 < v_cnt else None
+    return cell_b(vs - 1, mb) if vs > 0 else None
+
+
+def one_f_one_b(s, s_cnt, mb_cnt):
+    w = min(s_cnt - 1 - s, mb_cnt)
+    order = [cell_f(s, mb) for mb in range(w)]
+    for mb in range(w, mb_cnt):
+        order.append(cell_f(s, mb))
+        order.append(cell_b(s, mb - w))
+    order.extend(cell_b(s, mb) for mb in range(mb_cnt - w, mb_cnt))
+    return order
+
+
+def merge_stage_orders(per_stage, v_cnt):
+    total = sum(len(o) for o in per_stage)
+    nxt = [0] * len(per_stage)
+    emitted = set()
+    order = []
+    while len(order) < total:
+        progress = False
+        for s, stage_order in enumerate(per_stage):
+            if nxt[s] < len(stage_order):
+                cell = stage_order[nxt[s]]
+                if all(d in emitted for d in deps(cell, v_cnt)):
+                    emitted.add(cell)
+                    order.append(cell)
+                    nxt[s] += 1
+                    progress = True
+        assert progress, "pipeline schedule deadlocked while merging"
+    return order
+
+
+def greedy_interleaved(s_cnt, v_cnt, mb_cnt):
+    total = 2 * v_cnt * mb_cnt
+    emitted = set()
+    order = []
+    while len(order) < total:
+        progress = False
+        for s in range(s_cnt):
+            ready = [
+                c
+                for mb in range(mb_cnt)
+                for vs in range(s, v_cnt, s_cnt)
+                for c in (cell_f(vs, mb), cell_b(vs, mb))
+                if c not in emitted and all(d in emitted for d in deps(c, v_cnt))
+            ]
+            if ready:
+                best = min(
+                    ready,
+                    key=lambda c: (c[2], c[1], c[0] if c[2] else v_cnt - c[0]),
+                )
+                # mirror Rust's key: fwd as usize sorts backward (False=0)
+                # first; Python False < True does the same
+                emitted.add(best)
+                order.append(best)
+                progress = True
+        assert progress, "interleaved schedule deadlocked"
+    return order
+
+
+def sequential_order(v_cnt, mb_cnt):
+    order = []
+    for mb in range(mb_cnt):
+        order.extend(cell_f(vs, mb) for vs in range(v_cnt))
+        order.extend(cell_b(vs, mb) for vs in reversed(range(v_cnt)))
+    return order
+
+
+def global_order(sched, s_cnt, v_cnt, mb_cnt):
+    if sched == "seq":
+        return sequential_order(v_cnt, mb_cnt)
+    if sched == "1f1b":
+        assert v_cnt == s_cnt
+        return merge_stage_orders(
+            [one_f_one_b(s, s_cnt, mb_cnt) for s in range(s_cnt)], v_cnt
+        )
+    assert sched == "interleaved"
+    return greedy_interleaved(s_cnt, v_cnt, mb_cnt)
+
+
+SWEEP = [
+    (s, m, chunks)
+    for s in (1, 2, 3, 4)
+    for m in (1, 2, 4, 6)
+    for chunks in (1, 2)
+]
+
+
+def test_orders_topological_complete_and_stage_consistent():
+    for s_cnt, mb_cnt, chunks in SWEEP:
+        for sched in ("seq", "1f1b", "interleaved"):
+            if sched == "1f1b" and chunks != 1:
+                continue
+            v_cnt = s_cnt * chunks
+            order = global_order(sched, s_cnt, v_cnt, mb_cnt)
+            assert len(order) == 2 * v_cnt * mb_cnt, (sched, s_cnt, mb_cnt)
+            seen = set()
+            per_stage_seen = [[] for _ in range(s_cnt)]
+            for cell in order:
+                for d in deps(cell, v_cnt):
+                    assert d in seen, f"{sched}: {cell} before its dep {d}"
+                assert cell not in seen, f"{sched}: duplicate {cell}"
+                seen.add(cell)
+                per_stage_seen[cell[0] % s_cnt].append(cell)
+            # stage-consistency: for 1F1B the global order restricted to a
+            # stage must equal that stage's own fixed order
+            if sched == "1f1b":
+                for s in range(s_cnt):
+                    assert per_stage_seen[s] == one_f_one_b(s, s_cnt, mb_cnt)
+
+
+def test_one_f_one_b_warmup_steady_drain_shape():
+    for s_cnt, mb_cnt in itertools.product((2, 3, 4, 6), (1, 2, 4, 8)):
+        for s in range(s_cnt):
+            w = min(s_cnt - 1 - s, mb_cnt)
+            o = one_f_one_b(s, s_cnt, mb_cnt)
+            assert len(o) == 2 * mb_cnt
+            assert all(c[2] for c in o[:w]), "warmup is all forwards"
+            # steady: strict F/B alternation
+            steady = o[w : len(o) - w]
+            for i, c in enumerate(steady):
+                assert c[2] == (i % 2 == 0), "steady phase alternates F/B"
+            assert all(not c[2] for c in o[len(o) - w :]), "drain is all backwards"
+            # every microbatch's F precedes its B on the same stage
+            pos = {c: i for i, c in enumerate(o)}
+            for mb in range(mb_cnt):
+                assert pos[cell_f(s, mb)] < pos[cell_b(s, mb)]
+
+
+def emit_edges(order, s_cnt, v_cnt, width, sp):
+    """Mirror build_model's edge emission: a cross-physical-stage consumer
+    gets one edge sem expecting width*sp credits; the producer emits
+    exactly width*sp delivery transfers after its fence."""
+    edges = {}  # consumer cell -> credits expected
+    credits = {}  # consumer cell -> credits delivered
+    for cell in order:
+        if cell in edges:
+            # consumer gate: must wait for exactly the delivered count
+            assert edges[cell] == credits[cell], (cell, edges[cell], credits[cell])
+            del edges[cell]
+        cons = consumer(cell, v_cnt)
+        if cons is not None and cons[0] % s_cnt != cell[0] % s_cnt:
+            edges[cons] = width * sp
+            credits[cons] = width * sp  # one transfer per (device, sp shard)
+    assert not edges, f"dangling pipeline edges: {edges}"
+    return credits
+
+
+def test_cross_stage_credit_accounting():
+    for s_cnt, mb_cnt, chunks in SWEEP:
+        v_cnt = s_cnt * chunks
+        for sched in ("seq", "1f1b", "interleaved"):
+            if sched == "1f1b" and chunks != 1:
+                continue
+            for width, sp in ((1, 1), (2, 1), (2, 2), (4, 3)):
+                order = global_order(sched, s_cnt, v_cnt, mb_cnt)
+                credits = emit_edges(order, s_cnt, v_cnt, width, sp)
+                # every cross-stage hop carries width*sp credits; dropping
+                # any one leaves the gate short (the verify mutation)
+                for cell, got in credits.items():
+                    assert got == width * sp
+                    assert got - 1 < width * sp, f"{cell}: a dropped credit must starve"
+
+
+def makespan(order, s_cnt, v_cnt, barrier):
+    """Unit-cost list-schedule makespan: each stage runs its cells in the
+    given order; a cell starts after its deps and its stage predecessor
+    (or, with `barrier`, after every previously emitted cell)."""
+    finish = {}
+    stage_last = [0.0] * s_cnt
+    global_last = 0.0
+    for cell in order:
+        s = cell[0] % s_cnt
+        ready = max((finish[d] for d in deps(cell, v_cnt)), default=0.0)
+        prev = global_last if barrier else stage_last[s]
+        t = max(ready, prev) + 1.0
+        finish[cell] = t
+        stage_last[s] = t
+        global_last = max(global_last, t)
+    return global_last
+
+
+def test_pipelined_schedules_beat_sequential_baseline():
+    for s_cnt, mb_cnt in itertools.product((2, 3, 4), (2, 4, 8)):
+        seq = makespan(sequential_order(s_cnt, mb_cnt), s_cnt, s_cnt, barrier=True)
+        assert seq == 2 * s_cnt * mb_cnt, "barriered baseline is the serial sum"
+        ofob = makespan(global_order("1f1b", s_cnt, s_cnt, mb_cnt), s_cnt, s_cnt, barrier=False)
+        assert ofob < seq, f"S={s_cnt} M={mb_cnt}: 1F1B {ofob} !< sequential {seq}"
+        # classic 1F1B bound: (M + S - 1) rounds of F+B
+        assert ofob <= 2 * (mb_cnt + s_cnt - 1)
+        v_cnt = 2 * s_cnt
+        intl = makespan(
+            global_order("interleaved", s_cnt, v_cnt, mb_cnt), s_cnt, v_cnt, barrier=False
+        )
+        seq2 = makespan(sequential_order(v_cnt, mb_cnt), s_cnt, v_cnt, barrier=True)
+        assert intl < seq2, f"S={s_cnt} M={mb_cnt}: interleaved {intl} !< sequential {seq2}"

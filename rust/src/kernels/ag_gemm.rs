@@ -33,12 +33,12 @@
 //! [`ClusterPath::Scatter`] keeps the naive transport as the `gx1`
 //! ablation). A one-node cluster delegates to [`build`] bit-identically.
 
-use super::GemmKernelCfg;
+use super::{BuildCtx, GemmKernelCfg, KernelBuild};
 use crate::hw::cluster::ClusterSpec;
 use crate::hw::DeviceId;
 use crate::mem::tile::Shape4;
 use crate::mem::{BufId, MemPool, ELEM_BYTES};
-use crate::pk::rail::{self, RailPlanner, RailSems};
+use crate::pk::rail::{self, RailHealth, RailPlanner, RailSems};
 use crate::pk::template::Lcsc;
 use crate::plan::{Effect, MatView, Op, Plan, Role, Route, SemId, SyncScope, TransferSpec};
 use crate::xfer::Mechanism;
@@ -216,6 +216,51 @@ pub fn build_cluster_opts(
     path: ClusterPath,
     bufs: Option<&AgGemmBufs>,
 ) -> Plan {
+    AgGemm { cfg: cfg.clone(), path }.build(&BuildCtx::new(cluster, &RailHealth::all_healthy(cluster)), bufs)
+}
+
+/// [`build_cluster_opts`] under a NIC health mask: rail broadcast flows
+/// touching a failed rail endpoint reroute through healthy donors over
+/// NVLink first ([`crate::pk::rail::RailHealth`]). Shard layout, staging
+/// targets, and forwarder fan-out are unchanged, so the gathered operand
+/// is bit-identical to the healthy schedule.
+pub fn build_cluster_health(
+    cfg: &GemmKernelCfg,
+    cluster: &ClusterSpec,
+    path: ClusterPath,
+    health: &RailHealth,
+    bufs: Option<&AgGemmBufs>,
+) -> Plan {
+    AgGemm { cfg: cfg.clone(), path }.build(&BuildCtx::new(cluster, health), bufs)
+}
+
+/// [`KernelBuild`] spec for the fused AG+GEMM kernel. The legacy
+/// `build_cluster*` free functions are one-line wrappers over this entry.
+#[derive(Clone, Debug)]
+pub struct AgGemm {
+    pub cfg: GemmKernelCfg,
+    pub path: ClusterPath,
+}
+
+impl KernelBuild for AgGemm {
+    type Bufs<'b> = &'b AgGemmBufs;
+
+    fn build(&self, ctx: &BuildCtx, bufs: Option<&AgGemmBufs>) -> Plan {
+        cluster_impl(&self.cfg, ctx, self.path, bufs)
+    }
+}
+
+fn cluster_impl(
+    cfg: &GemmKernelCfg,
+    ctx: &BuildCtx,
+    path: ClusterPath,
+    bufs: Option<&AgGemmBufs>,
+) -> Plan {
+    let cluster = ctx.cluster;
+    assert!(
+        !ctx.health.any_failed() || path == ClusterPath::RailReduce,
+        "degraded NICs are only survivable on the RailReduce path"
+    );
     assert_eq!(cfg.node.num_devices, cluster.node.num_devices, "cfg.node must match cluster.node");
     assert_eq!(cfg.node.gpu.arch, cluster.node.gpu.arch, "cfg.node must match cluster.node");
     if cluster.num_nodes == 1 {
@@ -238,8 +283,8 @@ pub fn build_cluster_opts(
     let chunk_bytes = (cfg.tile_m * cfg.k) as f64 * ELEM_BYTES as f64;
     let shard_bytes = rows_per_shard as f64 * chunk_bytes;
     let use_rail = path == ClusterPath::RailReduce;
-    let rdma_chunk = crate::pk::tuner::resolve_rdma_chunk(cfg.rdma_chunk, cluster, shard_bytes);
-    let railp = RailPlanner::new(cluster, rdma_chunk);
+    let rdma_chunk = ctx.resolve_chunk(cfg.rdma_chunk, shard_bytes);
+    let railp = RailPlanner::new(cluster, rdma_chunk).with_health(ctx.health.clone());
     let waves = railp.waves(shard_bytes, 1, rail::MAX_WAVES);
     let flow_waves = rail::live_waves(rows_per_shard as u64, waves);
 

@@ -4,7 +4,7 @@
 //! loop), assigned round-robin to each device's compute workers — the same
 //! task decomposition as the Appendix D listing's `interpret_task`.
 
-use super::GemmKernelCfg;
+use super::{BuildCtx, GemmKernelCfg, KernelBuild};
 use crate::hw::DeviceId;
 use crate::mem::{BufId, MemPool};
 use crate::pk::template::Lcsc;
@@ -64,13 +64,41 @@ pub fn emit_local_gemm(
 }
 
 /// Standalone local GEMM kernel (the paper's "GEMM" column in Table 3 and
-/// the non-overlapped baselines' compute phase).
+/// the non-overlapped baselines' compute phase). One-line wrapper over the
+/// [`KernelBuild`] entry ([`Gemm`]); prefer the ctx path in new code.
 pub fn build(cfg: &GemmKernelCfg, bufs: Option<&GemmBufs>) -> Plan {
     let mut l = Lcsc::new(cfg.node.clone(), cfg.opts);
     for dev in 0..cfg.node.num_devices {
         emit_local_gemm(&mut l, cfg, dev, bufs);
     }
     l.finish()
+}
+
+/// [`KernelBuild`] spec for the local GEMM: purely node-local compute, so
+/// the ctx's health mask and chunk knob are irrelevant — but building
+/// against a multi-node ctx emits every device's local GEMM (the model
+/// layer's wgrad passes run this across a whole pipeline stage).
+#[derive(Clone, Debug)]
+pub struct Gemm {
+    pub cfg: GemmKernelCfg,
+}
+
+impl KernelBuild for Gemm {
+    type Bufs<'b> = &'b GemmBufs;
+
+    fn build(&self, ctx: &BuildCtx, bufs: Option<&GemmBufs>) -> Plan {
+        let cfg = &self.cfg;
+        assert_eq!(
+            cfg.node.num_devices, ctx.cluster.node.num_devices,
+            "cfg.node must match cluster.node"
+        );
+        assert_eq!(cfg.node.gpu.arch, ctx.cluster.node.gpu.arch, "cfg.node must match cluster.node");
+        let mut l = Lcsc::new_cluster(ctx.cluster, cfg.opts);
+        for dev in 0..ctx.cluster.total_devices() {
+            emit_local_gemm(&mut l, cfg, dev, bufs);
+        }
+        l.finish()
+    }
 }
 
 #[cfg(test)]

@@ -46,7 +46,7 @@
 //! bit-identically, like every kernel in the repo.
 
 use super::gemm::GemmBufs;
-use super::GemmKernelCfg;
+use super::{BuildCtx, GemmKernelCfg, KernelBuild};
 use crate::hw::cluster::ClusterSpec;
 use crate::hw::DeviceId;
 use crate::mem::pgl::ReduceOp;
@@ -327,6 +327,34 @@ pub fn build_cluster_health(
     health: &RailHealth,
     bufs: Option<&GemmArBufs>,
 ) -> Plan {
+    GemmAr { cfg: cfg.clone(), schedule, path }.build(&BuildCtx::new(cluster, health), bufs)
+}
+
+/// [`KernelBuild`] spec for the fused GEMM+AR kernel. The legacy
+/// `build_cluster*` free functions are one-line wrappers over this entry.
+#[derive(Clone, Debug)]
+pub struct GemmAr {
+    pub cfg: GemmKernelCfg,
+    pub schedule: Schedule,
+    pub path: ClusterPath,
+}
+
+impl KernelBuild for GemmAr {
+    type Bufs<'b> = &'b GemmArBufs;
+
+    fn build(&self, ctx: &BuildCtx, bufs: Option<&GemmArBufs>) -> Plan {
+        cluster_impl(&self.cfg, ctx, self.schedule, self.path, bufs)
+    }
+}
+
+fn cluster_impl(
+    cfg: &GemmKernelCfg,
+    ctx: &BuildCtx,
+    schedule: Schedule,
+    path: ClusterPath,
+    bufs: Option<&GemmArBufs>,
+) -> Plan {
+    let (cluster, health) = (ctx.cluster, ctx.health);
     assert!(
         !health.any_failed() || path == ClusterPath::RailReduce,
         "degraded NICs are only survivable on the RailReduce path"
@@ -361,7 +389,7 @@ pub fn build_cluster_health(
         Schedule::InterSm => l.comm_sms_per_worker(),
     };
     let use_rail = path == ClusterPath::RailReduce;
-    let rdma_chunk = crate::pk::tuner::resolve_rdma_chunk(cfg.rdma_chunk, cluster, chunk_bytes);
+    let rdma_chunk = ctx.resolve_chunk(cfg.rdma_chunk, chunk_bytes);
     let railp = RailPlanner::new(cluster, rdma_chunk).with_health(health.clone());
     // wave structure of the per-node-pair rail flows (timing mode; the
     // functional mode ships whole chunks in single flows)

@@ -30,7 +30,7 @@
 //!   exactly ×P versus `Scatter` ([`nic_scatter_bytes`], claims-tested).
 
 use super::gemm::GemmBufs;
-use super::GemmKernelCfg;
+use super::{BuildCtx, GemmKernelCfg, KernelBuild};
 use crate::hw::cluster::ClusterSpec;
 use crate::hw::DeviceId;
 use crate::mem::pgl::ReduceOp;
@@ -181,6 +181,36 @@ pub fn build_cluster_health(
     health: &RailHealth,
     bufs: Option<&GemmRsBufs>,
 ) -> Plan {
+    GemmRs { cfg: cfg.clone(), schedule, path }.build(&BuildCtx::new(cluster, health), bufs)
+}
+
+/// [`KernelBuild`] spec for the fused GEMM + reduce-scatter: the cfg plus
+/// its overlap schedule and cluster transport path. This is the single
+/// real entry point; every `build*` free function above is a one-line
+/// wrapper over it.
+#[derive(Clone, Debug)]
+pub struct GemmRs {
+    pub cfg: GemmKernelCfg,
+    pub schedule: Schedule,
+    pub path: ClusterPath,
+}
+
+impl KernelBuild for GemmRs {
+    type Bufs<'b> = &'b GemmRsBufs;
+
+    fn build(&self, ctx: &BuildCtx, bufs: Option<&GemmRsBufs>) -> Plan {
+        cluster_impl(&self.cfg, ctx, self.schedule, self.path, bufs)
+    }
+}
+
+fn cluster_impl(
+    cfg: &GemmKernelCfg,
+    ctx: &BuildCtx,
+    schedule: Schedule,
+    path: ClusterPath,
+    bufs: Option<&GemmRsBufs>,
+) -> Plan {
+    let (cluster, health) = (ctx.cluster, ctx.health);
     assert!(
         !health.any_failed() || path == ClusterPath::RailReduce,
         "degraded NICs are only survivable on the RailReduce path"
@@ -211,7 +241,7 @@ pub fn build_cluster_health(
     // resolve the chunk knob (RDMA_CHUNK_AUTO -> the analytic curve knee
     // for this kernel's largest rail flow: one pre-reduced chunk)
     let max_flow = rows_per_dev as f64 * (cfg.tile_m * cfg.n) as f64 * ELEM_BYTES as f64;
-    let rdma_chunk = crate::pk::tuner::resolve_rdma_chunk(cfg.rdma_chunk, cluster, max_flow);
+    let rdma_chunk = ctx.resolve_chunk(cfg.rdma_chunk, max_flow);
     let railp = RailPlanner::new(cluster, rdma_chunk).with_health(health.clone());
     // pre-reduce contribution counters per (aggregator device, owner node):
     // bumped by every node-local partial landing in the aggregator's stage.

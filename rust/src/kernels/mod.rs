@@ -89,7 +89,81 @@ pub mod ring_attention;
 pub mod ulysses;
 
 use crate::hw::spec::NodeSpec;
+use crate::hw::ClusterSpec;
+use crate::pk::rail::{RailHealth, RDMA_CHUNK_AUTO};
 use crate::pk::template::LcscOpts;
+use crate::plan::Plan;
+
+/// The shared build context of the unified kernel-builder API: everything
+/// a kernel needs to know about the world it is being planned for, in one
+/// place. The old 4-way entry-point fan per kernel
+/// (`build` / `build_cluster` / `build_cluster_opts` /
+/// `build_cluster_health`) collapses into [`KernelBuild::build`] against a
+/// `BuildCtx`; single-node delegation, opts, and health-masking are ctx
+/// defaults, not separate functions. The old names survive as one-line
+/// wrappers (claims-pinned bit-identical to the ctx path).
+#[derive(Clone, Copy, Debug)]
+pub struct BuildCtx<'a> {
+    /// The cluster to plan for ([`ClusterSpec::single`] for one node).
+    pub cluster: &'a ClusterSpec,
+    /// Per-device NIC health mask; rail flows reroute around failures.
+    pub health: &'a RailHealth,
+    /// Context-level override for the coalesced RDMA write size.
+    /// [`RDMA_CHUNK_AUTO`] defers to the kernel cfg's own knob (which
+    /// itself defaults to the analytic curve knee).
+    pub rdma_chunk: f64,
+}
+
+impl<'a> BuildCtx<'a> {
+    /// Context for `cluster` under `health`, with the chunk knob deferred
+    /// to each kernel cfg ([`RDMA_CHUNK_AUTO`]).
+    pub fn new(cluster: &'a ClusterSpec, health: &'a RailHealth) -> Self {
+        BuildCtx { cluster, health, rdma_chunk: RDMA_CHUNK_AUTO }
+    }
+
+    /// Override the coalesced RDMA write size for every kernel built
+    /// against this context (wins over the per-cfg knob).
+    pub fn with_rdma_chunk(mut self, rdma_chunk: f64) -> Self {
+        self.rdma_chunk = rdma_chunk;
+        self
+    }
+
+    /// The effective (possibly still [`RDMA_CHUNK_AUTO`]) chunk for a
+    /// kernel whose cfg carries `cfg_chunk`: the ctx override wins, the
+    /// cfg knob is the fallback.
+    pub fn effective_chunk(&self, cfg_chunk: f64) -> f64 {
+        if self.rdma_chunk != RDMA_CHUNK_AUTO {
+            self.rdma_chunk
+        } else {
+            cfg_chunk
+        }
+    }
+
+    /// The **single place** the [`RDMA_CHUNK_AUTO`] sentinel resolves:
+    /// ctx override → cfg knob → analytic knee for `max_flow_bytes`
+    /// ([`crate::pk::tuner::analytic_rdma_chunk`]). Every rail kernel
+    /// resolves its chunk through here.
+    pub fn resolve_chunk(&self, cfg_chunk: f64, max_flow_bytes: f64) -> f64 {
+        crate::pk::tuner::resolve_rdma_chunk(
+            self.effective_chunk(cfg_chunk),
+            self.cluster,
+            max_flow_bytes,
+        )
+    }
+}
+
+/// The unified builder trait: one entry point per kernel, uniform enough
+/// for the [`crate::model`] layer to compose kernels without matching on
+/// per-kernel signatures. A kernel is a *spec* (cfg plus its schedule /
+/// path / routing choices) that plans itself against a [`BuildCtx`];
+/// `bufs` carries the functional buffers (`None` = timing-only).
+pub trait KernelBuild {
+    /// The functional-buffer bundle this kernel consumes.
+    type Bufs<'b>: Copy;
+
+    /// Emit the plan for this spec under `ctx`.
+    fn build(&self, ctx: &BuildCtx, bufs: Option<Self::Bufs<'_>>) -> Plan;
+}
 
 /// Shared configuration for the GEMM-family kernels. `m × n × k` is the
 /// **local, per-device** GEMM (the paper's figures give local shapes).
@@ -144,6 +218,17 @@ impl GemmKernelCfg {
             },
             rdma_chunk: crate::pk::rail::RDMA_CHUNK_AUTO,
         }
+    }
+
+    /// Builder-style chunk override (shared across the normalized cfg
+    /// structs: `GemmKernelCfg` / `MoeCfg` / `UlyssesCfg` /
+    /// `ClusterRingAttnCfg` all take shape fields first and end with the
+    /// `rdma_chunk` knob, set through this method). Resolution of the
+    /// [`crate::pk::rail::RDMA_CHUNK_AUTO`] sentinel happens in exactly
+    /// one place: [`BuildCtx::resolve_chunk`].
+    pub fn with_rdma_chunk(mut self, rdma_chunk: f64) -> Self {
+        self.rdma_chunk = rdma_chunk;
+        self
     }
 
     pub fn grid_m(&self) -> usize {

@@ -50,6 +50,7 @@
 //! arithmetic, wave counters, fan-out credit bookkeeping — lives in
 //! [`crate::pk::rail`]; this builder is a thin client of it.
 
+use super::{BuildCtx, KernelBuild};
 use crate::hw::cluster::ClusterSpec;
 use crate::hw::spec::NodeSpec;
 use crate::hw::DeviceId;
@@ -59,6 +60,14 @@ use crate::mem::{BufId, MemPool, ELEM_BYTES};
 use crate::pk::rail::{wave_share, RailHealth, RailPlanner, RailSems, WaveCredits};
 use crate::plan::{Effect, MatView, Op, Plan, Role, Route, SemId, SyncScope, TransferSpec};
 use crate::xfer::Mechanism;
+
+/// Label of the combine hop's direct / rail-forwarded delivery transfers —
+/// the ops that land expert-output rows on a token's **home device**. The
+/// model layer greps these to attach wave-level credits gating the next
+/// MoE layer's dispatch ([`build_cluster_layer_gated`]).
+pub const LABEL_COMBINE_SEND: &str = "moe_combine_send";
+/// See [`LABEL_COMBINE_SEND`]: the rail-peer forwarder's scatter leg.
+pub const LABEL_COMBINE_FWD: &str = "moe_combine_fwd";
 
 /// MoE configuration. Tokens are the global count (Figure 12 x-axis),
 /// initially partitioned evenly across devices.
@@ -100,6 +109,14 @@ impl MoeCfg {
             comm_sms: 16,
             rdma_chunk: crate::pk::rail::RDMA_CHUNK_AUTO,
         }
+    }
+
+    /// Builder-style override of the RDMA chunk knob (the shared cfg idiom:
+    /// shape fields first, transport knob last; the `AUTO` sentinel resolves
+    /// in exactly one place, [`BuildCtx::resolve_chunk`]).
+    pub fn with_rdma_chunk(mut self, rdma_chunk: f64) -> Self {
+        self.rdma_chunk = rdma_chunk;
+        self
     }
 
     pub fn tokens_local(&self) -> usize {
@@ -427,6 +444,56 @@ pub fn build_cluster_health(
     health: &RailHealth,
     bufs: Option<&MoeClusterBufs>,
 ) -> Plan {
+    MoeDispatch { cfg: cfg.clone(), routing, schedule }.build(&BuildCtx::new(cluster, health), bufs)
+}
+
+/// [`build_cluster_health`] with an entry **gate**: per-source-device
+/// semaphores (returned in the plan's own id space) that throttle dispatch
+/// issue. `gate_expected[d]` is the total number of grants device `d`'s
+/// gate will ever receive; timing-mode wave `w` waits for the monotone
+/// proportional threshold `ceil((w+1)·expected/waves)` before sending, and
+/// the functional mode waits for the full count up front. Callers (the
+/// model layer) signal the gates from upstream transfers — e.g. the
+/// previous MoE layer's combine deliveries — replacing a full per-device
+/// barrier with wave-level credits.
+pub fn build_cluster_gated(
+    cfg: &MoeCfg,
+    cluster: &ClusterSpec,
+    routing: &Routing,
+    schedule: MoeSchedule,
+    health: &RailHealth,
+    gate_expected: &[u64],
+    bufs: Option<&MoeClusterBufs>,
+) -> (Plan, Vec<SemId>) {
+    dispatch_impl(cfg, &BuildCtx::new(cluster, health), routing, schedule, Some(gate_expected), bufs)
+}
+
+/// [`KernelBuild`] spec for the dispatch + grouped-GEMM kernel. The legacy
+/// `build_cluster*` free functions are one-line wrappers over this entry.
+#[derive(Clone, Debug)]
+pub struct MoeDispatch<'r> {
+    pub cfg: MoeCfg,
+    pub routing: &'r Routing,
+    pub schedule: MoeSchedule,
+}
+
+impl<'r> KernelBuild for MoeDispatch<'r> {
+    type Bufs<'b> = &'b MoeClusterBufs;
+
+    fn build(&self, ctx: &BuildCtx, bufs: Option<&MoeClusterBufs>) -> Plan {
+        dispatch_impl(&self.cfg, ctx, self.routing, self.schedule, None, bufs).0
+    }
+}
+
+fn dispatch_impl(
+    cfg: &MoeCfg,
+    ctx: &BuildCtx,
+    routing: &Routing,
+    schedule: MoeSchedule,
+    gate_expected: Option<&[u64]>,
+    bufs: Option<&MoeClusterBufs>,
+) -> (Plan, Vec<SemId>) {
+    let (cluster, health) = (ctx.cluster, ctx.health);
     assert_eq!(cfg.node.num_devices, cluster.node.num_devices, "cfg.node must match cluster.node");
     assert_eq!(cfg.node.gpu.arch, cluster.node.gpu.arch, "cfg.node must match cluster.node");
     assert!(cfg.rdma_chunk >= 0.0, "rdma_chunk must be positive (or RDMA_CHUNK_AUTO)");
@@ -437,6 +504,15 @@ pub fn build_cluster_health(
     let el = cfg.experts_local_of(n);
     let mut plan = Plan::new();
     plan.launch_overhead = cfg.node.gpu.kernel_launch;
+
+    // per-source-device entry gates (only when the caller asked for them)
+    let gate: Vec<SemId> = match gate_expected {
+        Some(exp) => {
+            assert_eq!(exp.len(), n, "gate_expected must cover every device");
+            (0..n).map(|_| plan.add_sem(0)).collect()
+        }
+        None => vec![],
+    };
 
     // per-expert arrival counters
     let arrived: Vec<SemId> = (0..cfg.n_experts).map(|_| plan.add_sem(0)).collect();
@@ -489,7 +565,7 @@ pub fn build_cluster_health(
         .max()
         .unwrap_or(0) as f64
         * cfg.token_bytes();
-    let rdma_chunk = crate::pk::tuner::resolve_rdma_chunk(cfg.rdma_chunk, cluster, max_rail_bytes);
+    let rdma_chunk = ctx.resolve_chunk(cfg.rdma_chunk, max_rail_bytes);
     let rail = RailPlanner::new(cluster, rdma_chunk).with_health(health.clone());
     // wave count: single-node keeps the fixed pipeline depth; the cluster
     // path targets one rdma_chunk-sized write per rail flow per wave.
@@ -534,6 +610,13 @@ pub fn build_cluster_health(
         let w = plan.add_worker(DeviceId(d), Role::CommSm, format!("moe_dispatch/d{d}"));
         match bufs {
             Some(b) => {
+                // functional mode moves real rows: every upstream grant
+                // must have landed before any token leaves this device
+                if let Some(exp) = gate_expected {
+                    if exp[d] > 0 {
+                        plan.push(w, Op::Wait { sem: gate[d], value: exp[d] });
+                    }
+                }
                 // per-token-copy sends to same-node experts (functional,
                 // small shapes) — exactly the single-node path
                 for lt in 0..tl {
@@ -615,6 +698,15 @@ pub fn build_cluster_health(
                 // experts begin wave-w GEMM chunks while later waves are
                 // still in flight — the fine-grained overlap itself.
                 for wave in 0..waves {
+                    // entry gate: wave w sends only once its proportional
+                    // share of upstream grants has landed (monotone in w,
+                    // reaching exp[d] on the last wave — never starves)
+                    if let Some(exp) = gate_expected {
+                        let need = (exp[d] * (wave as u64 + 1)).div_ceil(waves as u64);
+                        if need > 0 {
+                            plan.push(w, Op::Wait { sem: gate[d], value: need });
+                        }
+                    }
                     let mut pending = WaveCredits::new();
                     for dst_dev in 0..n {
                         if dst_dev / p_cnt != my_node {
@@ -867,7 +959,7 @@ pub fn build_cluster_health(
             }
         }
     }
-    plan
+    (plan, gate)
 }
 
 /// Per-(expert device, home node) distinct tokens of the combine hop, in
@@ -1008,8 +1100,56 @@ pub fn build_cluster_layer_health(
     health: &RailHealth,
     bufs: Option<(&MoeClusterBufs, &MoeCombineBufs)>,
 ) -> Plan {
+    MoeLayer { cfg: cfg.clone(), routing, schedule }.build(&BuildCtx::new(cluster, health), bufs)
+}
+
+/// [`build_cluster_layer_health`] with an entry gate on the dispatch hop
+/// (see [`build_cluster_gated`]): returns the layer plan plus the
+/// per-source-device gate semaphores. The model layer wires the previous
+/// layer's combine deliveries into these gates so consecutive MoE layers
+/// overlap at wave granularity instead of a per-device barrier.
+pub fn build_cluster_layer_gated(
+    cfg: &MoeCfg,
+    cluster: &ClusterSpec,
+    routing: &Routing,
+    schedule: MoeSchedule,
+    health: &RailHealth,
+    gate_expected: &[u64],
+    bufs: Option<(&MoeClusterBufs, &MoeCombineBufs)>,
+) -> (Plan, Vec<SemId>) {
+    layer_impl(cfg, &BuildCtx::new(cluster, health), routing, schedule, Some(gate_expected), bufs)
+}
+
+/// [`KernelBuild`] spec for the full MoE layer (dispatch + grouped GEMM +
+/// combine). The legacy `build_cluster_layer*` free functions are one-line
+/// wrappers over this entry.
+#[derive(Clone, Debug)]
+pub struct MoeLayer<'r> {
+    pub cfg: MoeCfg,
+    pub routing: &'r Routing,
+    pub schedule: MoeSchedule,
+}
+
+impl<'r> KernelBuild for MoeLayer<'r> {
+    type Bufs<'b> = (&'b MoeClusterBufs, &'b MoeCombineBufs);
+
+    fn build(&self, ctx: &BuildCtx, bufs: Option<(&MoeClusterBufs, &MoeCombineBufs)>) -> Plan {
+        layer_impl(&self.cfg, ctx, self.routing, self.schedule, None, bufs).0
+    }
+}
+
+fn layer_impl(
+    cfg: &MoeCfg,
+    ctx: &BuildCtx,
+    routing: &Routing,
+    schedule: MoeSchedule,
+    gate_expected: Option<&[u64]>,
+    bufs: Option<(&MoeClusterBufs, &MoeCombineBufs)>,
+) -> (Plan, Vec<SemId>) {
+    let cluster = ctx.cluster;
+    let health = ctx.health;
     let dispatch_bufs = bufs.map(|(b, _)| b);
-    let mut plan = build_cluster_health(cfg, cluster, routing, schedule, health, dispatch_bufs);
+    let (mut plan, gate) = dispatch_impl(cfg, ctx, routing, schedule, gate_expected, dispatch_bufs);
     let n = cluster.total_devices();
     let p_cnt = cluster.devices_per_node();
     let k_cnt = cluster.num_nodes;
@@ -1020,11 +1160,8 @@ pub fn build_cluster_layer_health(
     // AUTO resolves against the largest coalesced combine flow
     let max_comb_bytes =
         ids.iter().flatten().map(|l| l.len()).max().unwrap_or(0) as f64 * row_bytes;
-    let rail = RailPlanner::new(
-        cluster,
-        crate::pk::tuner::resolve_rdma_chunk(cfg.rdma_chunk, cluster, max_comb_bytes),
-    )
-    .with_health(health.clone());
+    let rail = RailPlanner::new(cluster, ctx.resolve_chunk(cfg.rdma_chunk, max_comb_bytes))
+        .with_health(health.clone());
     // intra-node return-row counts per (expert device, home device) — the
     // coalesced NVLink return flows of the timing mode
     let mut intra_rows = vec![vec![0u64; n]; n];
@@ -1089,7 +1226,7 @@ pub fn build_cluster_layer_health(
                                     blocking: false,
                                     done_sem: None,
                                     done_scope: SyncScope::InterDevice,
-                                    label: "moe_combine_send",
+                                    label: LABEL_COMBINE_SEND,
                                     effect: Some(Effect::CopyMat { src, dst, reduce: Some(ReduceOp::Add) }),
                                 },
                             );
@@ -1178,7 +1315,7 @@ pub fn build_cluster_layer_health(
                             blocking: false,
                             done_sem: None,
                             done_scope: SyncScope::InterDevice,
-                            label: "moe_combine_send",
+                            label: LABEL_COMBINE_SEND,
                             effect: None,
                         },
                     );
@@ -1249,7 +1386,7 @@ pub fn build_cluster_layer_health(
                                     blocking: false,
                                     done_sem: None,
                                     done_scope: SyncScope::InterDevice,
-                                    label: "moe_combine_fwd",
+                                    label: LABEL_COMBINE_FWD,
                                     effect: Some(Effect::CopyMat { src, dst, reduce: Some(ReduceOp::Add) }),
                                 },
                             );
@@ -1275,7 +1412,7 @@ pub fn build_cluster_layer_health(
                                     blocking: false,
                                     done_sem: None,
                                     done_scope: SyncScope::InterDevice,
-                                    label: "moe_combine_fwd",
+                                    label: LABEL_COMBINE_FWD,
                                     effect: None,
                                 },
                             );
@@ -1285,7 +1422,7 @@ pub fn build_cluster_layer_health(
             }
         }
     }
-    plan
+    (plan, gate)
 }
 
 #[cfg(test)]

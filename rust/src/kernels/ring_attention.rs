@@ -18,6 +18,8 @@ use crate::hw::spec::NodeSpec;
 use crate::hw::DeviceId;
 use crate::mem::tile::Shape4;
 use crate::mem::{BufId, MemPool, ELEM_BYTES};
+use crate::kernels::{BuildCtx, KernelBuild};
+use crate::pk::rail::RailHealth;
 use crate::pk::template::{Lcsc, LcscOpts};
 use crate::plan::{Effect, MatView, Op, Plan, Route, SyncScope, TransferSpec};
 use crate::xfer::Mechanism;
@@ -116,12 +118,32 @@ pub struct ClusterRingAttnCfg {
     pub d: usize,
     pub opts: LcscOpts,
     pub flash_util: f64,
+    /// Target coalesced RDMA write size for the node-boundary KV hops
+    /// (normalized cfg knob; [`crate::pk::rail::RDMA_CHUNK_AUTO`] resolves
+    /// through [`BuildCtx::resolve_chunk`] against the KV shard size).
+    pub rdma_chunk: f64,
 }
 
 impl ClusterRingAttnCfg {
     /// Paper configuration (B=16, H=16, D=128) over a cluster.
     pub fn paper(cluster: ClusterSpec, s: usize) -> Self {
-        ClusterRingAttnCfg { cluster, b: 16, h: 16, s, d: 128, opts: LcscOpts::default(), flash_util: 0.75 }
+        ClusterRingAttnCfg {
+            cluster,
+            b: 16,
+            h: 16,
+            s,
+            d: 128,
+            opts: LcscOpts::default(),
+            flash_util: 0.75,
+            rdma_chunk: crate::pk::rail::RDMA_CHUNK_AUTO,
+        }
+    }
+
+    /// Builder-style chunk override (the shared normalized-cfg method; see
+    /// [`crate::kernels::GemmKernelCfg::with_rdma_chunk`]).
+    pub fn with_rdma_chunk(mut self, rdma_chunk: f64) -> Self {
+        self.rdma_chunk = rdma_chunk;
+        self
     }
 
     pub fn s_local(&self) -> usize {
@@ -154,6 +176,7 @@ pub fn build(cfg: &RingAttnCfg, bufs: Option<&RingAttnBufs>) -> Plan {
         d: cfg.d,
         opts: cfg.opts,
         flash_util: cfg.flash_util,
+        rdma_chunk: crate::pk::rail::RDMA_CHUNK_AUTO,
     };
     build_cluster(&ccfg, bufs)
 }
@@ -161,6 +184,44 @@ pub fn build(cfg: &RingAttnCfg, bufs: Option<&RingAttnBufs>) -> Plan {
 /// Build the fused ring-attention kernel over a cluster: one node-major KV
 /// ring across all GPUs; node-boundary hops ride the NIC.
 pub fn build_cluster(cfg: &ClusterRingAttnCfg, bufs: Option<&RingAttnBufs>) -> Plan {
+    let health = RailHealth::all_healthy(&cfg.cluster);
+    RingAttn { cfg: cfg.clone() }.build(&BuildCtx::new(&cfg.cluster, &health), bufs)
+}
+
+/// [`KernelBuild`] spec for the cluster ring-attention kernel. The legacy
+/// [`build_cluster`] free function is a one-line wrapper over this entry.
+/// The ring carries its own cluster in the cfg (the node-major ring order
+/// *is* the schedule); the ctx cluster must agree in shape, and the KV
+/// ring has no degraded-rail reroute, so the ctx health mask must be
+/// all-healthy.
+#[derive(Clone, Debug)]
+pub struct RingAttn {
+    pub cfg: ClusterRingAttnCfg,
+}
+
+impl KernelBuild for RingAttn {
+    type Bufs<'b> = &'b RingAttnBufs;
+
+    fn build(&self, ctx: &BuildCtx, bufs: Option<&RingAttnBufs>) -> Plan {
+        assert!(
+            !ctx.health.any_failed(),
+            "the KV ring has no degraded-rail reroute; pass a healthy mask"
+        );
+        assert_eq!(
+            self.cfg.cluster.node.num_devices, ctx.cluster.node.num_devices,
+            "cfg.cluster must match ctx.cluster"
+        );
+        assert_eq!(
+            self.cfg.cluster.num_nodes, ctx.cluster.num_nodes,
+            "cfg.cluster must match ctx.cluster"
+        );
+        let mut cfg = self.cfg.clone();
+        cfg.rdma_chunk = ctx.resolve_chunk(cfg.rdma_chunk, cfg.kv_shard_bytes());
+        cluster_impl(&cfg, bufs)
+    }
+}
+
+fn cluster_impl(cfg: &ClusterRingAttnCfg, bufs: Option<&RingAttnBufs>) -> Plan {
     let n = cfg.cluster.total_devices();
     let sl = cfg.s_local();
     let mut opts = cfg.opts;
@@ -237,7 +298,13 @@ pub fn build_cluster(cfg: &ClusterRingAttnCfg, bufs: Option<&RingAttnBufs>) -> P
                             Route::P2p { src: DeviceId(dev), dst: DeviceId(next) }
                         },
                         bytes: cfg.kv_shard_bytes(),
-                        msg_bytes: (sl * cfg.d) as f64 * ELEM_BYTES as f64,
+                        // NIC hops coalesce rows up to the chunk target;
+                        // NVLink hops move at TMA row granularity
+                        msg_bytes: if cross {
+                            cfg.rdma_chunk.min(cfg.kv_shard_bytes())
+                        } else {
+                            (sl * cfg.d) as f64 * ELEM_BYTES as f64
+                        },
                         n_sms: comm_sms,
                     },
                     blocking: true,
@@ -371,6 +438,7 @@ mod tests {
             d: 8,
             opts: LcscOpts { num_comm_sms: 4, workers_per_device: 2, comm_workers_per_device: 1, pipeline_stages: 2 },
             flash_util: 0.75,
+            rdma_chunk: crate::pk::rail::RDMA_CHUNK_AUTO,
         };
         let sl = cfg.s_local();
         let mut pool = MemPool::new();

@@ -22,6 +22,7 @@
 //! cluster delegates to [`build`] bit-identically.
 
 use super::collectives::{pk_all_to_all_4d, pk_all_to_all_4d_cluster, A2aCfg};
+use super::{BuildCtx, KernelBuild};
 use crate::hw::cluster::ClusterSpec;
 use crate::hw::spec::NodeSpec;
 use crate::hw::DeviceId;
@@ -39,12 +40,31 @@ pub struct UlyssesCfg {
     pub s: usize,
     pub d: usize,
     pub flash_util: f64,
+    /// Target coalesced-RDMA write size for the cluster exchanges
+    /// (shared cfg idiom: shape fields first, transport knob last).
+    /// [`crate::pk::rail::RDMA_CHUNK_AUTO`] resolves in
+    /// [`BuildCtx::resolve_chunk`] / downstream of the all-to-all.
+    pub rdma_chunk: f64,
 }
 
 impl UlyssesCfg {
     /// Paper configuration: B=16, H=128, D=128.
     pub fn paper(node: NodeSpec, s: usize) -> Self {
-        UlyssesCfg { node, b: 16, h: 128, s, d: 128, flash_util: 0.75 }
+        UlyssesCfg {
+            node,
+            b: 16,
+            h: 128,
+            s,
+            d: 128,
+            flash_util: 0.75,
+            rdma_chunk: crate::pk::rail::RDMA_CHUNK_AUTO,
+        }
+    }
+
+    /// Builder-style override of the RDMA chunk knob.
+    pub fn with_rdma_chunk(mut self, rdma_chunk: f64) -> Self {
+        self.rdma_chunk = rdma_chunk;
+        self
     }
 
     pub fn s_local(&self) -> usize {
@@ -269,7 +289,7 @@ pub fn build(cfg: &UlyssesCfg, bufs: Option<&UlyssesBufs>) -> Plan {
 /// tiles plus per-rail coalesced RDMA flows with forwarders. A one-node
 /// cluster delegates to [`build`] (bit-identical; pinned by tests).
 pub fn build_cluster(cfg: &UlyssesCfg, cluster: &ClusterSpec) -> Plan {
-    build_cluster_opts(cfg, cluster, crate::pk::rail::RDMA_CHUNK_AUTO)
+    build_cluster_opts(cfg, cluster, cfg.rdma_chunk)
 }
 
 /// [`build_cluster`] with an explicit coalesced-RDMA chunk target (the
@@ -277,6 +297,39 @@ pub fn build_cluster(cfg: &UlyssesCfg, cluster: &ClusterSpec) -> Plan {
 /// here, putting every cross-node message on the slow end of the RDMA
 /// curve).
 pub fn build_cluster_opts(cfg: &UlyssesCfg, cluster: &ClusterSpec, rdma_chunk: f64) -> Plan {
+    let cfg = cfg.clone().with_rdma_chunk(rdma_chunk);
+    let health = crate::pk::rail::RailHealth::all_healthy(cluster);
+    Ulysses { cfg }.build(&BuildCtx::new(cluster, &health), None)
+}
+
+/// [`KernelBuild`] spec for the Ulysses layer. The legacy `build_cluster*`
+/// free functions are one-line wrappers over this entry. The two-level
+/// all-to-all has no degraded-rail reroute, so the ctx health mask must be
+/// all-healthy.
+#[derive(Clone, Debug)]
+pub struct Ulysses {
+    pub cfg: UlyssesCfg,
+}
+
+impl KernelBuild for Ulysses {
+    type Bufs<'b> = &'b UlyssesBufs;
+
+    fn build(&self, ctx: &BuildCtx, bufs: Option<&UlyssesBufs>) -> Plan {
+        assert!(
+            !ctx.health.any_failed(),
+            "the Ulysses all-to-all has no degraded-rail reroute; pass a healthy mask"
+        );
+        if ctx.cluster.num_nodes == 1 {
+            return build(&self.cfg, bufs);
+        }
+        assert!(bufs.is_none(), "the cluster Ulysses path is timing-only");
+        cluster_impl(&self.cfg, ctx)
+    }
+}
+
+fn cluster_impl(cfg: &UlyssesCfg, ctx: &BuildCtx) -> Plan {
+    let cluster = ctx.cluster;
+    let rdma_chunk = ctx.effective_chunk(cfg.rdma_chunk);
     assert_eq!(cfg.node.num_devices, cluster.node.num_devices, "cfg.node must match cluster.node");
     assert_eq!(cfg.node.gpu.arch, cluster.node.gpu.arch, "cfg.node must match cluster.node");
     if cluster.num_nodes == 1 {
@@ -375,7 +428,7 @@ mod tests {
     fn functional_ulysses_matches_single_device_attention() {
         let n = 2;
         let node = NodeSpec::test_node(n);
-        let cfg = UlyssesCfg { node, b: 2, h: 4, s: 8, d: 4, flash_util: 0.75 };
+        let cfg = UlyssesCfg { node, b: 2, h: 4, s: 8, d: 4, flash_util: 0.75, rdma_chunk: crate::pk::rail::RDMA_CHUNK_AUTO };
         let mut pool = MemPool::new();
         let bufs = UlyssesBufs::alloc(&mut pool, &cfg);
         // global tensors (B, S, H, D) — fill the sequence-sharded inputs

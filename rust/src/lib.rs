@@ -43,6 +43,7 @@ pub mod exec;
 pub mod hw;
 pub mod kernels;
 pub mod mem;
+pub mod model;
 pub mod pk;
 pub mod plan;
 pub mod report;

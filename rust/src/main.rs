@@ -18,6 +18,12 @@
 //!                                                   jitter=s[@e] | nic=d@t[:f[:r]]
 //!                                                   | straggler=d:s clauses
 //!                                                   (devices index nodes here)
+//! pk model [--nodes <k>] [--moe] [--tp <n> | --ep <n>] [--pp <n>] [--sp <n>]
+//!          [--microbatches <m>] [--schedule seq|1f1b|interleaved]
+//!                                                   whole-model training-step
+//!                                                   plan (model layer): build,
+//!                                                   verify, simulate each
+//!                                                   pipeline schedule
 //! pk tune <kernel> --n <size>                       SM-partition auto-tuner
 //! pk lint [--only <substr>] [--json <path>]         static plan verifier over
 //!                                                   the whole kernel zoo; exit
@@ -277,6 +283,89 @@ fn real_main() -> Result<()> {
                 rep.slo_violations,
             );
         }
+        "model" => {
+            use pk::model::{pipeline, ModelCfg, ParallelSpec};
+            let nodes = opt_usize("--nodes", 1)?;
+            if nodes == 0 {
+                bail!("--nodes must be >= 1");
+            }
+            let cluster = ClusterSpec::hgx_h100_pod(nodes);
+            let n = cluster.total_devices();
+            let moe = flag("--moe");
+            let pp = opt_usize("--pp", 2)?;
+            if pp == 0 {
+                bail!("--pp must be >= 1");
+            }
+            let (wname, width) = if moe {
+                ("ep", opt_usize("--ep", n / pp)?)
+            } else {
+                ("tp", opt_usize("--tp", n / pp)?)
+            };
+            if width == 0 || width * pp != n {
+                bail!("--{wname} {width} x --pp {pp} must cover the cluster's {n} devices");
+            }
+            let sp = opt_usize("--sp", 1)?;
+            if sp == 0 {
+                bail!("--sp must be >= 1");
+            }
+            let mut m = if moe { ModelCfg::moe_example() } else { ModelCfg::dense_example() };
+            m.microbatches = opt_usize("--microbatches", m.microbatches)?;
+            if m.microbatches == 0 {
+                bail!("--microbatches must be >= 1");
+            }
+            // friendly errors for the kernel divisibility constraints the
+            // builders would otherwise assert on
+            if !moe && m.seq % (128 * width) != 0 {
+                bail!("dense tp={width}: seq {} must be divisible by 128*tp", m.seq);
+            }
+            if moe {
+                let e = m.moe.expect("moe_example sets moe").n_experts;
+                if e % width != 0 || m.seq % width != 0 {
+                    bail!("moe ep={width}: experts {e} and seq {} must divide by ep", m.seq);
+                }
+            }
+            if m.n_layers % pp != 0 {
+                bail!("n_layers {} must divide evenly over --pp {pp} stages", m.n_layers);
+            }
+            let base =
+                if moe { ParallelSpec::moe(width, pp) } else { ParallelSpec::dense(width, pp) };
+            let spec = base.with_sp(sp);
+            let scheds: Vec<(&str, pipeline::PipeSchedule)> = match opt("--schedule").as_deref() {
+                Some("seq") => vec![("sequential", pipeline::PipeSchedule::Sequential)],
+                Some("1f1b") => vec![("1f1b", pipeline::PipeSchedule::OneFOneB)],
+                Some("interleaved") => vec![("interleaved", pipeline::PipeSchedule::Interleaved)],
+                None => vec![
+                    ("sequential", pipeline::PipeSchedule::Sequential),
+                    ("1f1b", pipeline::PipeSchedule::OneFOneB),
+                    ("interleaved", pipeline::PipeSchedule::Interleaved),
+                ],
+                Some(other) => bail!("unknown --schedule '{other}' (seq|1f1b|interleaved)"),
+            };
+            let health = pk::pk::rail::RailHealth::all_healthy(&cluster);
+            println!(
+                "model: {} {wname}{width} x pp{pp} (sp{sp}), {} layers, {} microbatches, {nodes} node(s)",
+                if moe { "moe" } else { "dense" },
+                m.n_layers,
+                m.microbatches
+            );
+            for (name, sched) in scheds {
+                let plan = pipeline::build_model(&m, &spec, &cluster, &health, sched);
+                let ctx = pk::plan::verify::VerifyCtx {
+                    pool: None,
+                    devices_per_node: Some(cluster.devices_per_node()),
+                };
+                let report = pk::plan::verify::verify(&plan, &ctx);
+                if !report.is_clean() {
+                    bail!("model plan ({name}) failed verification:\n{}", report.render());
+                }
+                let t = TimedExec::on_cluster(cluster.clone()).run(&plan).total_time;
+                println!(
+                    "  {name:<12} step {} ({} workers, verify clean)",
+                    pk::util::fmt_time(t),
+                    plan.workers.len()
+                );
+            }
+        }
         "tune" => {
             let n = opt_usize("--n", 16384)?;
             let node = NodeSpec::hgx_h100();
@@ -356,7 +445,7 @@ fn real_main() -> Result<()> {
             }
         }
         _ => {
-            bail!("usage: pk <figures|run|serve|tune|lint|validate|info> [options]");
+            bail!("usage: pk <figures|run|serve|model|tune|lint|validate|info> [options]");
         }
     }
     Ok(())

@@ -1,0 +1,206 @@
+//! Plan composition: append independently-built kernel plans into one
+//! fused [`Plan`], remapping semaphore / attention-state ids into the
+//! fused id space and shifting device ids into a pipeline stage's global
+//! window. Buffer ids never remap — functional compositions allocate from
+//! one shared [`crate::mem::MemPool`], so `BufId`s are global already.
+//!
+//! The composer is deliberately dumb about scheduling: it appends worker
+//! programs verbatim and exposes two explicit coupling primitives —
+//! [`Composer::fence`] (a barrier sem the appended range signals and a
+//! later range waits on) and [`Composer::attach_done`] (retarget a
+//! delivered transfer's `done_sem` to credit a downstream gate). The
+//! pipeline and block layers build every schedule out of those two.
+
+use crate::plan::{Op, Plan, Route, SemId, StateId, SyncScope};
+
+/// Id bases of one appended sub-plan, for wiring cross-plan edges.
+#[derive(Clone, Copy, Debug)]
+pub struct Appended {
+    /// First fused sem id of the sub-plan (`sub sem s` → `sem_base + s`).
+    pub sem_base: usize,
+    /// First fused attention-state id of the sub-plan.
+    pub state_base: usize,
+    /// First fused worker index of the sub-plan.
+    pub worker_base: usize,
+    /// One past the last fused worker index.
+    pub worker_end: usize,
+}
+
+impl Appended {
+    /// Translate a sub-plan-local sem id into the fused id space.
+    pub fn sem(&self, s: SemId) -> SemId {
+        SemId(s.0 + self.sem_base)
+    }
+
+    /// Fused worker indices of the appended sub-plan.
+    pub fn workers(&self) -> std::ops::Range<usize> {
+        self.worker_base..self.worker_end
+    }
+}
+
+/// Accumulates kernel plans into one fused model plan.
+#[derive(Debug, Default)]
+pub struct Composer {
+    pub plan: Plan,
+}
+
+impl Composer {
+    pub fn new() -> Self {
+        Composer { plan: Plan::new() }
+    }
+
+    /// Append `sub` with its device ids shifted by `dev_offset` (the
+    /// stage's first global device). Sems keep their initial values;
+    /// worker programs are appended verbatim apart from id remaps. The
+    /// fused launch overhead is the max over sub-plans (one fused launch).
+    pub fn append(&mut self, sub: Plan, dev_offset: usize) -> Appended {
+        let sem_base = self.plan.sems.len();
+        let state_base = self.plan.num_states;
+        let worker_base = self.plan.workers.len();
+        self.plan.sems.extend(sub.sems.iter().copied());
+        self.plan.num_states += sub.num_states;
+        self.plan.launch_overhead = self.plan.launch_overhead.max(sub.launch_overhead);
+        for mut w in sub.workers {
+            w.device.0 += dev_offset;
+            for op in &mut w.ops {
+                remap_op(op, sem_base, state_base, dev_offset);
+            }
+            self.plan.workers.push(w);
+        }
+        Appended { sem_base, state_base, worker_base, worker_end: self.plan.workers.len() }
+    }
+
+    /// Barrier after an appended range: every worker in `range` signals a
+    /// fresh sem once at its end; returns `(sem, target)` for later ranges
+    /// to wait on (`Wait { sem, value: target }`). `scope` should span the
+    /// widest boundary any signaller crosses to a waiter.
+    pub fn fence(&mut self, range: &Appended, scope: SyncScope) -> (SemId, u64) {
+        let sem = self.plan.add_sem(0);
+        for wi in range.workers() {
+            self.plan.push(wi, Op::Signal { sem, value: 1, scope });
+        }
+        (sem, (range.worker_end - range.worker_base) as u64)
+    }
+
+    /// Prepend `Wait { sem, value }` to every worker of `range` — the
+    /// receiving half of [`Composer::fence`].
+    pub fn gate(&mut self, range: &Appended, sem: SemId, value: u64) {
+        for wi in range.workers() {
+            let mut ops = vec![Op::Wait { sem, value }];
+            ops.append(&mut self.plan.workers[wi].ops);
+            self.plan.workers[wi].ops = ops;
+        }
+    }
+
+    /// Non-mutating twin of [`Composer::attach_done`]: count how many
+    /// delivered transfers in `range` (label in `labels`, `done_sem` still
+    /// `None`, point-to-point route) land on each destination device.
+    /// Used to size gate grant totals *before* the gated consumer plan —
+    /// and therefore its gate sems — exists.
+    pub fn count_deliveries(&self, range: &Appended, labels: &[&str]) -> Vec<(usize, u64)> {
+        let mut counts: std::collections::BTreeMap<usize, u64> = Default::default();
+        for wi in range.workers() {
+            for op in &self.plan.workers[wi].ops {
+                if let Op::Transfer { spec, done_sem, label, .. } = op {
+                    if done_sem.is_some() || !labels.contains(label) {
+                        continue;
+                    }
+                    let dst = match spec.route {
+                        Route::P2p { dst, .. }
+                        | Route::CopyEngineP2p { dst, .. }
+                        | Route::Rdma { dst, .. } => dst.0,
+                        _ => continue,
+                    };
+                    *counts.entry(dst).or_insert(0) += 1;
+                }
+            }
+        }
+        counts.into_iter().collect()
+    }
+
+    /// Retarget the `done_sem` of delivered transfers in `range`: every
+    /// `Transfer` whose label is in `labels` and whose `done_sem` is
+    /// `None` gets `done_sem = pick(dst_device)` (global id), crediting a
+    /// downstream gate at completion. Returns how many transfers now
+    /// credit each device the picker matched (the caller's
+    /// `gate_expected`). Transfers that already carry a `done_sem` are
+    /// left alone — they are internal protocol counters.
+    pub fn attach_done(
+        &mut self,
+        range: &Appended,
+        labels: &[&str],
+        mut pick: impl FnMut(usize) -> Option<SemId>,
+    ) -> Vec<(usize, u64)> {
+        let mut counts: std::collections::BTreeMap<usize, u64> = Default::default();
+        for wi in range.workers() {
+            for op in &mut self.plan.workers[wi].ops {
+                if let Op::Transfer { spec, done_sem, done_scope, label, .. } = op {
+                    if done_sem.is_some() || !labels.contains(label) {
+                        continue;
+                    }
+                    let dst = match spec.route {
+                        Route::P2p { dst, .. }
+                        | Route::CopyEngineP2p { dst, .. }
+                        | Route::Rdma { dst, .. } => dst.0,
+                        _ => continue,
+                    };
+                    if let Some(sem) = pick(dst) {
+                        *done_sem = Some(sem);
+                        *done_scope = SyncScope::InterDevice;
+                        *counts.entry(dst).or_insert(0) += 1;
+                    }
+                }
+            }
+        }
+        counts.into_iter().collect()
+    }
+}
+
+/// Remap one op's sem / state / device ids into the fused id space.
+fn remap_op(op: &mut Op, sem_base: usize, state_base: usize, dev_offset: usize) {
+    match op {
+        Op::Wait { sem, .. } | Op::Signal { sem, .. } => sem.0 += sem_base,
+        Op::Transfer { spec, done_sem, effect, .. } => {
+            if let Some(s) = done_sem {
+                s.0 += sem_base;
+            }
+            remap_route(&mut spec.route, dev_offset);
+            if let Some(e) = effect {
+                remap_effect_state(e, state_base);
+            }
+        }
+        Op::Compute { effect, .. } => {
+            if let Some(e) = effect {
+                remap_effect_state(e, state_base);
+            }
+        }
+        Op::Delay { .. } => {}
+    }
+}
+
+fn remap_route(route: &mut Route, dev_offset: usize) {
+    if dev_offset == 0 {
+        return;
+    }
+    match route {
+        Route::P2p { src, dst } | Route::CopyEngineP2p { src, dst } | Route::Rdma { src, dst } => {
+            src.0 += dev_offset;
+            dst.0 += dev_offset;
+        }
+        Route::Multicast { src } => src.0 += dev_offset,
+        Route::LdReduce { reader } => reader.0 += dev_offset,
+        Route::LocalHbm { dev } => dev.0 += dev_offset,
+    }
+}
+
+/// Attention states are the only effect payload carrying plan-scoped ids
+/// (buffers are pool-global; views are coordinates).
+fn remap_effect_state(effect: &mut crate::plan::Effect, state_base: usize) {
+    use crate::plan::Effect;
+    match effect {
+        Effect::AttnBlock { state, .. } | Effect::AttnFinalize { state, .. } => {
+            *state = StateId(state.0 + state_base)
+        }
+        _ => {}
+    }
+}

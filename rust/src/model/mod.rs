@@ -1,0 +1,205 @@
+//! Model layer: transformer blocks and pipeline-parallel model plans
+//! composed from the kernel library through the unified
+//! [`crate::kernels::KernelBuild`] / [`crate::kernels::BuildCtx`] entry.
+//!
+//! The kernel zoo below this module emits one fused plan per *operator*
+//! (AG+GEMM, GEMM+RS, MoE dispatch/combine, …). This layer assembles those
+//! plans into whole transformer layers and multi-layer models under a
+//! declarative [`ParallelSpec`] resolved against a [`ClusterSpec`]:
+//!
+//! - [`block`] chains kernels into dense (attention + MLP around
+//!   AG+GEMM / GEMM+RS) and MoE (dispatch → grouped GEMM → combine)
+//!   layers, including wave-level credit overlap between consecutive MoE
+//!   layers (the combine hop of layer *l* overlaps the dispatch of layer
+//!   *l+1* instead of meeting a per-device barrier).
+//! - [`pipeline`] chains pipeline stages with 1F1B / interleaved
+//!   schedules (plus the non-overlapped sequential baseline) into a
+//!   single fused [`crate::plan::Plan`] with cross-layer overlap.
+//! - [`compose`] is the underlying plan surgery: id remapping, fences,
+//!   and credit attachment.
+//!
+//! Every plan this module emits is `plan::verify`-clean (asserted by the
+//! `px1` exhibit runner and the lint zoo).
+
+pub mod block;
+pub mod compose;
+pub mod pipeline;
+
+use crate::hw::cluster::ClusterSpec;
+use crate::hw::spec::NodeSpec;
+use crate::kernels::BuildCtx;
+use crate::pk::rail::RailHealth;
+
+/// Declarative parallelism layout, resolved against a [`ClusterSpec`] by
+/// [`ParallelSpec::resolve`]. Exactly one of `tp` / `ep` carries each
+/// pipeline stage's width: dense models shard tensor-parallel (`tp`), MoE
+/// models shard expert-parallel (`ep`). `sp` additionally splits the
+/// pipeline-boundary activation transfers into that many sequence shards
+/// (chunked, so boundary bytes pipeline instead of moving as one flow).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelSpec {
+    pub tp: usize,
+    pub ep: usize,
+    pub pp: usize,
+    pub sp: usize,
+}
+
+impl Default for ParallelSpec {
+    fn default() -> Self {
+        ParallelSpec { tp: 1, ep: 1, pp: 1, sp: 1 }
+    }
+}
+
+impl ParallelSpec {
+    /// Dense layout: `tp`-way tensor parallel × `pp` pipeline stages.
+    pub fn dense(tp: usize, pp: usize) -> Self {
+        ParallelSpec { tp, ep: 1, pp, sp: 1 }
+    }
+
+    /// MoE layout: `ep`-way expert parallel × `pp` pipeline stages.
+    pub fn moe(ep: usize, pp: usize) -> Self {
+        ParallelSpec { tp: 1, ep, pp, sp: 1 }
+    }
+
+    /// Builder-style sequence-parallel degree for boundary transfers.
+    pub fn with_sp(mut self, sp: usize) -> Self {
+        assert!(sp >= 1);
+        self.sp = sp;
+        self
+    }
+
+    /// Per-stage device count this spec asks for.
+    pub fn stage_width(&self) -> usize {
+        self.tp.max(self.ep)
+    }
+
+    /// Resolve the spec against a cluster + health mask into per-stage
+    /// build contexts. Stages occupy consecutive device windows; a stage
+    /// is either a whole number of nodes or a sub-slice of one node
+    /// (windows never straddle a node boundary mid-stage).
+    pub fn resolve(&self, cluster: &ClusterSpec, health: &RailHealth) -> Layout {
+        let n = cluster.total_devices();
+        let p = cluster.devices_per_node();
+        let width = self.stage_width();
+        assert!(self.tp == 1 || self.ep == 1, "a stage is tp- or ep-sharded, not both");
+        assert!(self.pp >= 1 && width >= 1);
+        assert_eq!(
+            width * self.pp,
+            n,
+            "ParallelSpec ({}x{} over {} stages) must cover the cluster's {} devices",
+            self.tp,
+            self.ep,
+            self.pp,
+            n
+        );
+        let stages = (0..self.pp)
+            .map(|s| {
+                let dev0 = s * width;
+                let cluster = if width % p == 0 {
+                    // whole nodes: keep the node shape, shrink the node count
+                    ClusterSpec { num_nodes: width / p, ..cluster.clone() }
+                } else {
+                    assert_eq!(
+                        p % width,
+                        0,
+                        "stage width {width} must divide or be a multiple of the node size {p}"
+                    );
+                    let node = NodeSpec { num_devices: width, ..cluster.node.clone() };
+                    ClusterSpec { node, num_nodes: 1, ..cluster.clone() }
+                };
+                StageCtx { cluster, dev0, health: health.restrict(dev0, width) }
+            })
+            .collect();
+        Layout { stages, width, sp: self.sp }
+    }
+}
+
+/// Resolved pipeline layout: one [`StageCtx`] per stage.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub stages: Vec<StageCtx>,
+    pub width: usize,
+    pub sp: usize,
+}
+
+/// One pipeline stage's slice of the cluster: a stage-local cluster spec
+/// (devices renumbered `0..width`), the stage's first global device, and
+/// the restricted NIC health mask.
+#[derive(Clone, Debug)]
+pub struct StageCtx {
+    pub cluster: ClusterSpec,
+    pub dev0: usize,
+    pub health: RailHealth,
+}
+
+impl StageCtx {
+    /// The unified kernel-builder context for this stage.
+    pub fn build_ctx(&self) -> BuildCtx<'_> {
+        BuildCtx::new(&self.cluster, &self.health)
+    }
+
+    /// Widest sync boundary inside the stage.
+    pub fn scope(&self) -> crate::plan::SyncScope {
+        if self.cluster.num_nodes > 1 {
+            crate::plan::SyncScope::InterNode
+        } else {
+            crate::plan::SyncScope::InterDevice
+        }
+    }
+}
+
+/// Expert-parallel layer parameters (the MoE analogue of `ffn`).
+#[derive(Clone, Copy, Debug)]
+pub struct MoeParams {
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub h_expert: usize,
+}
+
+/// Whole-model shape: `n_layers` identical transformer layers, each
+/// microbatch carrying `seq` tokens. `moe: Some(..)` swaps the dense MLP
+/// for an expert layer (dispatch → grouped GEMM → combine); `n_heads: 0`
+/// drops the attention sublayer (MLP-only blocks, used by the identity
+/// tests).
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub hidden: usize,
+    pub ffn: usize,
+    pub seq: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub microbatches: usize,
+    pub moe: Option<MoeParams>,
+    /// Attention sustains a lower fraction of peak than GEMM.
+    pub flash_util: f64,
+}
+
+impl ModelCfg {
+    /// A dense reference model sized so every kernel divisibility
+    /// constraint holds at stage widths up to 16 (`seq % (128·W) == 0`).
+    pub fn dense_example() -> Self {
+        ModelCfg {
+            hidden: 2048,
+            ffn: 4096,
+            seq: 2048,
+            n_heads: 16,
+            n_layers: 4,
+            microbatches: 4,
+            moe: None,
+            flash_util: 0.75,
+        }
+    }
+
+    /// An MoE reference model (32 experts, top-2) on the same trunk.
+    pub fn moe_example() -> Self {
+        ModelCfg {
+            moe: Some(MoeParams { n_experts: 32, top_k: 2, h_expert: 1024 }),
+            ..Self::dense_example()
+        }
+    }
+
+    /// Bytes of one microbatch's boundary activation (`seq × hidden`).
+    pub fn act_bytes(&self) -> f64 {
+        (self.seq * self.hidden) as f64 * crate::mem::ELEM_BYTES as f64
+    }
+}

@@ -1,0 +1,356 @@
+//! Pipeline-parallel model assembly: chain per-stage transformer cells
+//! (one [`block::fwd_cell`] / [`block::bwd_cell`] per microbatch per
+//! virtual stage) into a single fused [`Plan`].
+//!
+//! Three schedules:
+//! - [`PipeSchedule::Sequential`] — the non-overlapped baseline: a global
+//!   total order with a full barrier between consecutive cells (and MoE
+//!   layer barriers inside each cell). No two stages ever overlap.
+//! - [`PipeSchedule::OneFOneB`] — classic 1F1B: stage `s` runs
+//!   `min(S-1-s, M)` warmup forwards, then alternates one-forward /
+//!   one-backward, then drains. Stages only couple through activation /
+//!   gradient edges, so different microbatches overlap across stages.
+//! - [`PipeSchedule::Interleaved`] — each physical stage owns `c > 1`
+//!   non-contiguous virtual stages (layer chunks), shrinking the
+//!   pipeline bubble by `c`; cell order is chosen greedily
+//!   (backward-first once steady).
+//!
+//! Cross-stage edges are explicit `pipe_act` / `pipe_grad` transfer
+//! workers: after the producer cell's fence, each stage device sends its
+//! activation shard (further split `sp` ways) to its peer in the consumer
+//! stage — RDMA when the stages sit on different nodes — and the edge
+//! semaphore gates the consumer cell. Dropping one of those credits is a
+//! deadlock, which `plan::verify` catches (see the mutation tests).
+
+use std::collections::HashMap;
+
+use super::block;
+use super::compose::Composer;
+use super::{ModelCfg, ParallelSpec};
+use crate::hw::cluster::ClusterSpec;
+use crate::hw::DeviceId;
+use crate::pk::rail::RailHealth;
+use crate::plan::{Op, Plan, Role, Route, SemId, SyncScope, TransferSpec};
+use crate::xfer::Mechanism;
+
+/// How pipeline cells are ordered on each stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipeSchedule {
+    /// Global total order with full barriers — the no-overlap baseline.
+    Sequential,
+    /// One-forward-one-backward with warmup/drain.
+    OneFOneB,
+    /// 1F1B over interleaved virtual stages (2 layer chunks per stage
+    /// when `n_layers` allows it, else identical to [`Self::OneFOneB`]).
+    Interleaved,
+}
+
+/// One pipeline cell: virtual stage `vs`'s layers for microbatch `mb`,
+/// forward or backward.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct Cell {
+    vs: usize,
+    mb: usize,
+    fwd: bool,
+}
+
+impl Cell {
+    fn f(vs: usize, mb: usize) -> Cell {
+        Cell { vs, mb, fwd: true }
+    }
+
+    fn b(vs: usize, mb: usize) -> Cell {
+        Cell { vs, mb, fwd: false }
+    }
+
+    /// Data dependencies: F(vs) ← F(vs-1); B(vs) ← F(vs) + B(vs+1).
+    fn deps(&self, v: usize) -> Vec<Cell> {
+        if self.fwd {
+            if self.vs > 0 { vec![Cell::f(self.vs - 1, self.mb)] } else { vec![] }
+        } else {
+            let mut d = vec![Cell::f(self.vs, self.mb)];
+            if self.vs + 1 < v {
+                d.push(Cell::b(self.vs + 1, self.mb));
+            }
+            d
+        }
+    }
+
+    /// The cross-stage consumer of this cell's output, if any.
+    fn consumer(&self, v: usize) -> Option<Cell> {
+        if self.fwd {
+            (self.vs + 1 < v).then(|| Cell::f(self.vs + 1, self.mb))
+        } else {
+            (self.vs > 0).then(|| Cell::b(self.vs - 1, self.mb))
+        }
+    }
+}
+
+/// Build the whole-model training-step plan: `M` microbatches through
+/// `pp` pipeline stages of `tp`/`ep`-sharded transformer layers, as one
+/// fused verify-clean [`Plan`].
+pub fn build_model(
+    m: &ModelCfg,
+    spec: &ParallelSpec,
+    cluster: &ClusterSpec,
+    health: &RailHealth,
+    sched: PipeSchedule,
+) -> Plan {
+    let layout = spec.resolve(cluster, health);
+    let s_cnt = spec.pp;
+    let mb_cnt = m.microbatches.max(1);
+    // Interleaving needs 2 chunks per stage and a forward+backward's worth
+    // of layers per chunk; fall back to plain 1F1B granularity otherwise.
+    let chunks = if sched == PipeSchedule::Interleaved && s_cnt > 1 && m.n_layers % (2 * s_cnt) == 0
+    {
+        2
+    } else {
+        1
+    };
+    let v_cnt = s_cnt * chunks;
+    assert_eq!(
+        m.n_layers % v_cnt,
+        0,
+        "n_layers ({}) must split evenly over {} virtual stages",
+        m.n_layers,
+        v_cnt
+    );
+    let layers_per_v = m.n_layers / v_cnt;
+    // The sequential baseline is fully non-overlapped: MoE layers meet at
+    // barriers inside each cell too. The pipelined schedules use the
+    // wave-level credit overlap.
+    let overlap = sched != PipeSchedule::Sequential;
+    let scope = if cluster.num_nodes > 1 { SyncScope::InterNode } else { SyncScope::InterDevice };
+    let p = cluster.devices_per_node();
+    let width = layout.width;
+
+    // One cell template per physical stage and direction; cells clone it.
+    let fwd_tpl: Vec<Plan> =
+        layout.stages.iter().map(|st| block::fwd_cell(st, m, layers_per_v, overlap)).collect();
+    let bwd_tpl: Vec<Plan> =
+        layout.stages.iter().map(|st| block::bwd_cell(st, m, layers_per_v, overlap)).collect();
+
+    let order = global_order(sched, s_cnt, v_cnt, mb_cnt);
+
+    let mut c = Composer::new();
+    // incoming cross-stage edge per consumer cell: (sem, credits)
+    let mut edges: HashMap<Cell, (SemId, u64)> = HashMap::new();
+    let mut stage_fence: Vec<Option<(SemId, u64)>> = vec![None; s_cnt];
+    let mut global_fence: Option<(SemId, u64)> = None;
+
+    for cell in order {
+        let phys = cell.vs % s_cnt;
+        let tpl = if cell.fwd { &fwd_tpl[phys] } else { &bwd_tpl[phys] };
+        let r = c.append(tpl.clone(), layout.stages[phys].dev0);
+        // chain: the baseline chains globally (no overlap anywhere), the
+        // pipelined schedules only chain each stage's own hardware
+        let chain = if sched == PipeSchedule::Sequential {
+            global_fence
+        } else {
+            stage_fence[phys]
+        };
+        if let Some((sem, v)) = chain {
+            c.gate(&r, sem, v);
+        }
+        if let Some((sem, v)) = edges.remove(&cell) {
+            c.gate(&r, sem, v);
+        }
+        let fence = c.fence(&r, scope);
+        stage_fence[phys] = Some(fence);
+        global_fence = Some(fence);
+
+        // boundary transfer to the consumer stage, if it is a different
+        // physical stage (same-stage consumers ride the stage chain)
+        if let Some(cons) = cell.consumer(v_cnt) {
+            let phys2 = cons.vs % s_cnt;
+            if phys2 != phys {
+                let edge = c.plan.add_sem(0);
+                let bytes = m.act_bytes() / (width * layout.sp) as f64;
+                for d in 0..width {
+                    // backward edges flow tail→head; match shard d to
+                    // shard d so each device's NIC carries 1/width
+                    let sd = DeviceId(layout.stages[phys].dev0 + d);
+                    let dd = DeviceId(layout.stages[phys2].dev0 + d);
+                    let cross = sd.0 / p != dd.0 / p;
+                    let dir = if cell.fwd { "f" } else { "b" };
+                    let wk = c.plan.add_worker(
+                        sd,
+                        Role::CommSm,
+                        format!("pipe/{dir}{}m{}/d{d}", cell.vs, cell.mb),
+                    );
+                    c.plan.push(wk, Op::Wait { sem: fence.0, value: fence.1 });
+                    for _ in 0..layout.sp {
+                        c.plan.push(
+                            wk,
+                            Op::Transfer {
+                                spec: TransferSpec {
+                                    mech: Mechanism::Tma,
+                                    route: if cross {
+                                        Route::Rdma { src: sd, dst: dd }
+                                    } else {
+                                        Route::P2p { src: sd, dst: dd }
+                                    },
+                                    bytes,
+                                    msg_bytes: bytes,
+                                    n_sms: 8.0,
+                                },
+                                blocking: false,
+                                done_sem: Some(edge),
+                                done_scope: if cross {
+                                    SyncScope::InterNode
+                                } else {
+                                    SyncScope::InterDevice
+                                },
+                                label: if cell.fwd { "pipe_act" } else { "pipe_grad" },
+                                effect: None,
+                            },
+                        );
+                    }
+                }
+                edges.insert(cons, (edge, (width * layout.sp) as u64));
+            }
+        }
+    }
+    assert!(edges.is_empty(), "dangling pipeline edges: {edges:?}");
+    c.plan
+}
+
+/// A global emission order that is simultaneously (a) topological over the
+/// data dependencies and (b) consistent with each stage's execution order
+/// — so the per-stage chains plus the cross-stage edges can never form a
+/// cycle.
+fn global_order(sched: PipeSchedule, s_cnt: usize, v_cnt: usize, mb_cnt: usize) -> Vec<Cell> {
+    match sched {
+        PipeSchedule::Sequential => {
+            // all forwards of a microbatch head-to-tail, then all backwards
+            let mut order = vec![];
+            for mb in 0..mb_cnt {
+                order.extend((0..v_cnt).map(|vs| Cell::f(vs, mb)));
+                order.extend((0..v_cnt).rev().map(|vs| Cell::b(vs, mb)));
+            }
+            order
+        }
+        PipeSchedule::OneFOneB => {
+            assert_eq!(v_cnt, s_cnt);
+            let per_stage: Vec<Vec<Cell>> =
+                (0..s_cnt).map(|s| one_f_one_b(s, s_cnt, mb_cnt)).collect();
+            merge_stage_orders(per_stage, v_cnt)
+        }
+        PipeSchedule::Interleaved => greedy_interleaved(s_cnt, v_cnt, mb_cnt),
+    }
+}
+
+/// Stage `s`'s classic 1F1B order: `w = min(S-1-s, M)` warmup forwards,
+/// steady 1F1B, backward drain.
+fn one_f_one_b(s: usize, s_cnt: usize, mb_cnt: usize) -> Vec<Cell> {
+    let w = (s_cnt - 1 - s).min(mb_cnt);
+    let mut order: Vec<Cell> = (0..w).map(|mb| Cell::f(s, mb)).collect();
+    for mb in w..mb_cnt {
+        order.push(Cell::f(s, mb));
+        order.push(Cell::b(s, mb - w));
+    }
+    order.extend((mb_cnt - w..mb_cnt).map(|mb| Cell::b(s, mb)));
+    order
+}
+
+/// Round-robin merge of fixed per-stage orders into one global
+/// topological order. Panics if the per-stage orders deadlock against the
+/// data dependencies (a malformed schedule).
+fn merge_stage_orders(per_stage: Vec<Vec<Cell>>, v_cnt: usize) -> Vec<Cell> {
+    let total: usize = per_stage.iter().map(Vec::len).sum();
+    let mut next = vec![0usize; per_stage.len()];
+    let mut emitted: std::collections::HashSet<Cell> = Default::default();
+    let mut order = Vec::with_capacity(total);
+    while order.len() < total {
+        let mut progress = false;
+        for (s, stage_order) in per_stage.iter().enumerate() {
+            if next[s] < stage_order.len() {
+                let cell = stage_order[next[s]];
+                if cell.deps(v_cnt).iter().all(|d| emitted.contains(d)) {
+                    emitted.insert(cell);
+                    order.push(cell);
+                    next[s] += 1;
+                    progress = true;
+                }
+            }
+        }
+        assert!(progress, "pipeline schedule deadlocked while merging stage orders");
+    }
+    order
+}
+
+/// Greedy interleaved schedule: each pass every stage emits its best
+/// ready cell — backward-first once one is ready (drains activations),
+/// earliest microbatch first, forward chunks in ascending virtual-stage
+/// order and backward chunks descending.
+fn greedy_interleaved(s_cnt: usize, v_cnt: usize, mb_cnt: usize) -> Vec<Cell> {
+    let total = 2 * v_cnt * mb_cnt;
+    let mut emitted: std::collections::HashSet<Cell> = Default::default();
+    let mut order = Vec::with_capacity(total);
+    while order.len() < total {
+        let mut progress = false;
+        for s in 0..s_cnt {
+            let best = (0..mb_cnt)
+                .flat_map(|mb| {
+                    (0..v_cnt).filter(|vs| vs % s_cnt == s).flat_map(move |vs| {
+                        [Cell::f(vs, mb), Cell::b(vs, mb)]
+                    })
+                })
+                .filter(|cell| {
+                    !emitted.contains(cell) && cell.deps(v_cnt).iter().all(|d| emitted.contains(d))
+                })
+                .min_by_key(|cell| {
+                    let chunk = if cell.fwd { cell.vs } else { v_cnt - cell.vs };
+                    (cell.fwd as usize, cell.mb, chunk)
+                });
+            if let Some(cell) = best {
+                emitted.insert(cell);
+                order.push(cell);
+                progress = true;
+            }
+        }
+        assert!(progress, "interleaved schedule deadlocked");
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_f_one_b_shape() {
+        // S=4, M=4, stage 0: 3 warmup forwards, 1F1B, 3-drain
+        let o = one_f_one_b(0, 4, 4);
+        assert_eq!(o.len(), 8);
+        assert!(o[0..3].iter().all(|c| c.fwd));
+        assert_eq!(o[3], Cell::f(0, 3));
+        assert_eq!(o[4], Cell::b(0, 0));
+        assert!(o[5..].iter().all(|c| !c.fwd));
+        // last stage alternates from the start
+        let o = one_f_one_b(3, 4, 4);
+        assert_eq!(o[0], Cell::f(3, 0));
+        assert_eq!(o[1], Cell::b(3, 0));
+    }
+
+    #[test]
+    fn orders_are_topological_and_complete() {
+        for (sched, chunks) in [
+            (PipeSchedule::Sequential, 1),
+            (PipeSchedule::OneFOneB, 1),
+            (PipeSchedule::Interleaved, 2),
+        ] {
+            let (s_cnt, mb_cnt) = (4, 4);
+            let v_cnt = s_cnt * chunks;
+            let order = global_order(sched, s_cnt, v_cnt, mb_cnt);
+            assert_eq!(order.len(), 2 * v_cnt * mb_cnt, "{sched:?}");
+            let mut seen = std::collections::HashSet::new();
+            for cell in &order {
+                for d in cell.deps(v_cnt) {
+                    assert!(seen.contains(&d), "{sched:?}: {cell:?} before its dep {d:?}");
+                }
+                assert!(seen.insert(*cell), "{sched:?}: duplicate {cell:?}");
+            }
+        }
+    }
+}

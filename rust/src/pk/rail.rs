@@ -183,6 +183,14 @@ impl RailHealth {
         (0..self.nic_ok.len()).filter(|&d| !self.nic_ok[d]).collect()
     }
 
+    /// Restrict the mask to the contiguous device window
+    /// `[dev0, dev0 + n_dev)` — the view a pipeline stage occupying that
+    /// slice of the cluster sees, in the stage's own device numbering.
+    pub fn restrict(&self, dev0: usize, n_dev: usize) -> RailHealth {
+        assert!(dev0 + n_dev <= self.nic_ok.len(), "window exceeds cluster");
+        RailHealth { nic_ok: self.nic_ok[dev0..dev0 + n_dev].to_vec() }
+    }
+
     /// Local ranks with a healthy NIC on `node` — the reroute donor pool.
     fn healthy_ranks(&self, cluster: &ClusterSpec, node: usize) -> Vec<usize> {
         (0..cluster.devices_per_node())

@@ -14,6 +14,7 @@ use crate::kernels::moe::{MoeCfg, MoeSchedule, Routing};
 use crate::kernels::ring_attention::RingAttnCfg;
 use crate::kernels::ulysses::UlyssesCfg;
 use crate::kernels::{ag_gemm, gemm, gemm_ar, gemm_rs, moe, ring_attention, ulysses, GemmKernelCfg};
+use crate::model::{pipeline, ParallelSpec};
 use crate::pk::rail::RailHealth;
 use crate::plan::Plan;
 use crate::sim::fault::{FaultSpec, LinkFault};
@@ -83,6 +84,7 @@ pub fn all_exhibits() -> Vec<Exhibit> {
         Exhibit { id: "gx1", caption: "Cluster GEMM family: gemm_ar + ag_gemm, 1→4 nodes, NIC 25–100 GB/s, rail vs naive vs baseline + analytic-vs-swept chunk", run: gx1 },
         Exhibit { id: "vx1", caption: "Serving layer: tokens/s, goodput, p50/p99 latency vs offered load under Poisson/bursty/diurnal arrivals, PK-overlapped vs non-overlapped step kernels, 1→4 nodes (disaggregated prefill/decode past 1 node)", run: vx1 },
         Exhibit { id: "fx1", caption: "Robustness: slowdown under bandwidth jitter and NIC failure — health-masked rail reroute vs no-reroute ablations on gemm_rs/gemm_ar/MoE, plus serving goodput/p99 under a mid-trace decode-NIC outage", run: fx1 },
+        Exhibit { id: "px1", caption: "Model layer: whole-model training-step time vs parallelism layout (tp/ep x pp), 1->4 nodes, NIC 25-100 GB/s — non-overlapped sequential baseline vs 1F1B vs interleaved pipeline", run: px1 },
     ]
 }
 
@@ -753,6 +755,7 @@ fn rx1(fast: bool) -> Table {
                 s: 2048 * n_dev,
                 d: 128,
                 flash_util: 0.75,
+                rdma_chunk: crate::pk::rail::RDMA_CHUNK_AUTO,
             };
             let t_urail = exec.run(&ulysses::build_cluster(&ucfg, &cluster)).total_time;
             let tile_bytes =
@@ -1253,6 +1256,76 @@ fn mu2(_fast: bool) -> Table {
     t
 }
 
+// --------------------------------------------------------------- px1
+/// Build + simulate one whole-model step plan, asserting it verify-clean
+/// first — every plan the model layer emits must pass `plan::verify`.
+fn px1_step_time(
+    m: &crate::model::ModelCfg,
+    spec: &ParallelSpec,
+    cluster: &ClusterSpec,
+    sched: pipeline::PipeSchedule,
+) -> f64 {
+    let health = RailHealth::all_healthy(cluster);
+    let plan = pipeline::build_model(m, spec, cluster, &health, sched);
+    let ctx = crate::plan::verify::VerifyCtx {
+        pool: None,
+        devices_per_node: Some(cluster.devices_per_node()),
+    };
+    let report = crate::plan::verify::verify(&plan, &ctx);
+    assert!(
+        report.is_clean(),
+        "model plan ({spec:?}, {sched:?}) must be verify-clean: {report:?}"
+    );
+    TimedExec::on_cluster(cluster.clone()).run(&plan).total_time
+}
+
+fn px1(fast: bool) -> Table {
+    let mut t = Table::new(
+        "Model layer: training-step time vs parallel layout — non-overlapped sequential baseline vs 1F1B vs interleaved pipeline",
+        &["model", "layout", "nodes", "nic_GBps", "seq_ms", "1f1b_ms", "intl_ms", "speedup"],
+    );
+    let nodes: &[usize] = if fast { &[1, 2] } else { &[1, 2, 4] };
+    let nics: &[f64] = if fast { &[50e9] } else { &[25e9, 50e9, 100e9] };
+    for &k in nodes {
+        // the 1-node row is NVLink-only (NIC-independent): emit it once
+        let nic_points: &[f64] = if k == 1 { &nics[..1] } else { nics };
+        for &nic in nic_points {
+            let cluster = ClusterSpec::hgx_h100_pod(k).with_nic_bw(nic);
+            let nic_label =
+                if k == 1 { "nvlink-only".to_string() } else { format!("{:.0}", nic / 1e9) };
+            let n = cluster.total_devices();
+            // widest stage with 2 pipeline stages, plus a deeper 4-stage
+            // variant in full mode (narrower stages, more boundary hops)
+            let mut layouts =
+                vec![("dense", ParallelSpec::dense(n / 2, 2), crate::model::ModelCfg::dense_example())];
+            if !fast {
+                layouts.push((
+                    "dense",
+                    ParallelSpec::dense(n / 4, 4),
+                    crate::model::ModelCfg::dense_example(),
+                ));
+            }
+            layouts.push(("moe", ParallelSpec::moe(n / 2, 2), crate::model::ModelCfg::moe_example()));
+            for (name, spec, m) in layouts {
+                let seq = px1_step_time(&m, &spec, &cluster, pipeline::PipeSchedule::Sequential);
+                let ofob = px1_step_time(&m, &spec, &cluster, pipeline::PipeSchedule::OneFOneB);
+                let intl = px1_step_time(&m, &spec, &cluster, pipeline::PipeSchedule::Interleaved);
+                t.row(vec![
+                    name.into(),
+                    format!("{}{}xpp{}", if name == "moe" { "ep" } else { "tp" }, spec.stage_width(), spec.pp),
+                    k.to_string(),
+                    nic_label.clone(),
+                    ms(seq),
+                    ms(ofob),
+                    ms(intl),
+                    format!("{:.2}", seq / ofob),
+                ]);
+            }
+        }
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1262,8 +1335,8 @@ mod tests {
         let ex = all_exhibits();
         assert_eq!(
             ex.len(),
-            27,
-            "17 figures/tables + 2 micro + tab1/tab2 + scale-out + cluster MoE + rail + cluster GEMM + serving + robustness"
+            28,
+            "17 figures/tables + 2 micro + tab1/tab2 + scale-out + cluster MoE + rail + cluster GEMM + serving + robustness + model layer"
         );
         for e in &ex {
             let t = (e.run)(true);
@@ -1366,6 +1439,42 @@ mod tests {
                 assert!(red > 1.5, "aggregation must cut NIC bytes at {}x{}: {red}", r[0], r[1]);
             }
         }
+    }
+
+    #[test]
+    fn px1_overlapped_pipeline_beats_sequential_at_every_point() {
+        // acceptance: the 1F1B schedule (with the MoE wave-credit overlap
+        // inside its cells) is strictly faster than the non-overlapped
+        // sequential-pipeline baseline at every swept point, dense and
+        // MoE alike; px1_step_time also asserts every plan verify-clean.
+        let t = px1(true);
+        assert!(t.rows.len() >= 4, "1-node + 2-node rows, dense + moe");
+        let mut saw = (false, false);
+        for r in &t.rows {
+            let seq: f64 = r[4].parse().unwrap();
+            let ofob: f64 = r[5].parse().unwrap();
+            let intl: f64 = r[6].parse().unwrap();
+            assert!(
+                ofob < seq,
+                "{} {} @ {} nodes: 1F1B must beat sequential: {ofob} vs {seq}",
+                r[0],
+                r[1],
+                r[2]
+            );
+            assert!(
+                intl < seq,
+                "{} {} @ {} nodes: interleaved must beat sequential: {intl} vs {seq}",
+                r[0],
+                r[1],
+                r[2]
+            );
+            match r[0].as_str() {
+                "dense" => saw.0 = true,
+                "moe" => saw.1 = true,
+                other => panic!("unexpected model kind {other}"),
+            }
+        }
+        assert!(saw.0 && saw.1, "both model kinds swept");
     }
 
     #[test]

@@ -86,11 +86,20 @@ fn ring_cluster_cfg() -> ClusterRingAttnCfg {
             pipeline_stages: 2,
         },
         flash_util: 0.75,
+        rdma_chunk: crate::pk::rail::RDMA_CHUNK_AUTO,
     }
 }
 
 fn ulysses_cfg() -> UlyssesCfg {
-    UlyssesCfg { node: NodeSpec::test_node(2), b: 2, h: 4, s: 8, d: 4, flash_util: 0.75 }
+    UlyssesCfg {
+        node: NodeSpec::test_node(2),
+        b: 2,
+        h: 4,
+        s: 8,
+        d: 4,
+        flash_util: 0.75,
+        rdma_chunk: crate::pk::rail::RDMA_CHUNK_AUTO,
+    }
 }
 
 fn moe_cfg(n_dev: usize) -> MoeCfg {
@@ -608,7 +617,91 @@ fn registry() -> Vec<(&'static str, Builder)> {
         }),
     ));
 
+    // ---- model layer: whole-model plans through the kernel-builder API.
+    // Timed-only (the composition layer never carries buffers); shapes are
+    // the smallest that satisfy every kernel divisibility constraint at
+    // tile_m = 128 and stage width 2.
+    v.push((
+        "model/dense-1node",
+        Box::new(|| {
+            let cluster = ClusterSpec::test_cluster(1, 2);
+            let health = RailHealth::all_healthy(&cluster);
+            let plan = crate::model::pipeline::build_model(
+                &model_cfg_small(false),
+                &crate::model::ParallelSpec::dense(2, 1),
+                &cluster,
+                &health,
+                crate::model::pipeline::PipeSchedule::OneFOneB,
+            );
+            check(&plan, None, cluster.devices_per_node())
+        }),
+    ));
+    v.push((
+        "model/dense-cluster",
+        Box::new(|| {
+            let cluster = ClusterSpec::test_cluster(2, 2);
+            let health = RailHealth::all_healthy(&cluster);
+            let plan = crate::model::pipeline::build_model(
+                &model_cfg_small(false),
+                &crate::model::ParallelSpec::dense(2, 2),
+                &cluster,
+                &health,
+                crate::model::pipeline::PipeSchedule::OneFOneB,
+            );
+            check(&plan, None, cluster.devices_per_node())
+        }),
+    ));
+    v.push((
+        "model/moe-cluster",
+        Box::new(|| {
+            let cluster = ClusterSpec::test_cluster(2, 2);
+            let health = RailHealth::all_healthy(&cluster);
+            let plan = crate::model::pipeline::build_model(
+                &model_cfg_small(true),
+                &crate::model::ParallelSpec::moe(2, 2),
+                &cluster,
+                &health,
+                crate::model::pipeline::PipeSchedule::OneFOneB,
+            );
+            check(&plan, None, cluster.devices_per_node())
+        }),
+    ));
+    v.push((
+        // one multi-node expert-parallel stage (ep spans both nodes) with
+        // a failed NIC: the MoE dispatch/combine rail reroute and the
+        // wave-level credit chaining between the stage's two layers both
+        // run under the degraded mask
+        "model/moe-multinode-stage-degraded",
+        Box::new(|| {
+            let cluster = ClusterSpec::test_cluster(2, 2);
+            let health = RailHealth::all_healthy(&cluster).fail_nic(1);
+            let plan = crate::model::pipeline::build_model(
+                &model_cfg_small(true),
+                &crate::model::ParallelSpec::moe(4, 1),
+                &cluster,
+                &health,
+                crate::model::pipeline::PipeSchedule::OneFOneB,
+            );
+            check(&plan, None, cluster.devices_per_node())
+        }),
+    ));
+
     v
+}
+
+/// Smallest model shape that satisfies every kernel constraint at stage
+/// width 2 (`seq % 256`, `ffn/2 % 128`, `hidden % 128`).
+fn model_cfg_small(moe: bool) -> crate::model::ModelCfg {
+    crate::model::ModelCfg {
+        hidden: 128,
+        ffn: 256,
+        seq: 256,
+        n_heads: 2,
+        n_layers: 2,
+        microbatches: 2,
+        moe: moe.then_some(crate::model::MoeParams { n_experts: 4, top_k: 2, h_expert: 32 }),
+        flash_util: 0.75,
+    }
 }
 
 /// Run the sweep. `only` filters entry names by substring.
@@ -679,7 +772,7 @@ mod tests {
     #[test]
     fn zoo_sweep_is_error_free() {
         let results = run_lint(None);
-        assert!(results.len() >= 29, "zoo registry shrank: {}", results.len());
+        assert!(results.len() >= 33, "zoo registry shrank: {}", results.len());
         for r in &results {
             assert_eq!(
                 r.report.num_errors(),

@@ -933,3 +933,203 @@ fn claim_fx1_serve_loses_nothing_under_mid_trace_nic_outage() {
     );
     assert!(faulted.latency_p99 >= healthy.latency_p99);
 }
+
+#[test]
+fn claim_deprecated_builder_wrappers_bit_identical_to_buildctx() {
+    // The api_redesign guarantee: every legacy `build_cluster*` free
+    // function is a one-line wrapper over its kernel's `KernelBuild` spec
+    // built against a `BuildCtx`, emitting the *same plan, bit for bit*
+    // (Debug forms compare f64 fields at full round-trip precision).
+    // Extends the 1-node delegation pins to the whole deprecated surface:
+    // default path, explicit opts, and health-masked variants.
+    use pk::hw::ClusterSpec;
+    use pk::kernels::gemm_rs::{ClusterPath, Schedule};
+    use pk::kernels::moe::{MoeCfg, MoeDispatch, MoeLayer, MoeSchedule, Routing};
+    use pk::kernels::ring_attention::{ClusterRingAttnCfg, RingAttn};
+    use pk::kernels::ulysses::{Ulysses, UlyssesCfg};
+    use pk::kernels::{ag_gemm, gemm_ar, gemm_rs, moe, ring_attention, ulysses};
+    use pk::kernels::{BuildCtx, GemmKernelCfg, KernelBuild};
+    use pk::pk::rail::{RailHealth, DEFAULT_RDMA_CHUNK};
+    use pk::pk::template::LcscOpts;
+
+    let cluster = ClusterSpec::test_cluster(2, 2);
+    let healthy = RailHealth::all_healthy(&cluster);
+    let degraded = RailHealth::all_healthy(&cluster).fail_nic(1);
+    let ctx = BuildCtx::new(&cluster, &healthy);
+    let ctx_deg = BuildCtx::new(&cluster, &degraded);
+    let pin = |name: &str, a: &pk::plan::Plan, b: &pk::plan::Plan| {
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "{name} wrapper drifted from the BuildCtx path");
+    };
+
+    let cfg = GemmKernelCfg::functional(cluster.node.clone(), 64, 32, 24);
+
+    // ---- gemm_rs: default, explicit path, health-masked
+    let spec = gemm_rs::GemmRs {
+        cfg: cfg.clone(),
+        schedule: Schedule::IntraSm,
+        path: ClusterPath::RailReduce,
+    };
+    pin(
+        "gemm_rs::build_cluster",
+        &gemm_rs::build_cluster(&cfg, &cluster, Schedule::IntraSm, None),
+        &spec.build(&ctx, None),
+    );
+    pin(
+        "gemm_rs::build_cluster_opts(Scatter)",
+        &gemm_rs::build_cluster_opts(&cfg, &cluster, Schedule::IntraSm, ClusterPath::Scatter, None),
+        &gemm_rs::GemmRs { cfg: cfg.clone(), schedule: Schedule::IntraSm, path: ClusterPath::Scatter }
+            .build(&ctx, None),
+    );
+    pin(
+        "gemm_rs::build_cluster_health",
+        &gemm_rs::build_cluster_health(
+            &cfg,
+            &cluster,
+            Schedule::IntraSm,
+            ClusterPath::RailReduce,
+            &degraded,
+            None,
+        ),
+        &spec.build(&ctx_deg, None),
+    );
+
+    // ---- gemm_ar: default, health-masked
+    let spec = gemm_ar::GemmAr {
+        cfg: cfg.clone(),
+        schedule: Schedule::IntraSm,
+        path: ClusterPath::RailReduce,
+    };
+    pin(
+        "gemm_ar::build_cluster",
+        &gemm_ar::build_cluster(&cfg, &cluster, Schedule::IntraSm, None),
+        &spec.build(&ctx, None),
+    );
+    pin(
+        "gemm_ar::build_cluster_opts",
+        &gemm_ar::build_cluster_opts(
+            &cfg,
+            &cluster,
+            Schedule::IntraSm,
+            ClusterPath::RailReduce,
+            None,
+        ),
+        &spec.build(&ctx, None),
+    );
+    pin(
+        "gemm_ar::build_cluster_health",
+        &gemm_ar::build_cluster_health(
+            &cfg,
+            &cluster,
+            Schedule::IntraSm,
+            ClusterPath::RailReduce,
+            &degraded,
+            None,
+        ),
+        &spec.build(&ctx_deg, None),
+    );
+
+    // ---- ag_gemm: default, explicit path, health-masked
+    let mut acfg = cfg.clone();
+    acfg.opts.num_comm_sms = 8;
+    let spec = ag_gemm::AgGemm { cfg: acfg.clone(), path: ClusterPath::RailReduce };
+    pin(
+        "ag_gemm::build_cluster",
+        &ag_gemm::build_cluster(&acfg, &cluster, None),
+        &spec.build(&ctx, None),
+    );
+    pin(
+        "ag_gemm::build_cluster_opts(Scatter)",
+        &ag_gemm::build_cluster_opts(&acfg, &cluster, ClusterPath::Scatter, None),
+        &ag_gemm::AgGemm { cfg: acfg.clone(), path: ClusterPath::Scatter }.build(&ctx, None),
+    );
+    pin(
+        "ag_gemm::build_cluster_health",
+        &ag_gemm::build_cluster_health(&acfg, &cluster, ClusterPath::RailReduce, &degraded, None),
+        &spec.build(&ctx_deg, None),
+    );
+
+    // ---- moe: dispatch + full layer, healthy and masked
+    let mcfg = MoeCfg {
+        node: cluster.node.clone(),
+        tokens: 24,
+        hidden: 8,
+        h_expert: 4,
+        n_experts: 8,
+        top_k: 2,
+        comm_sms: 8,
+        rdma_chunk: DEFAULT_RDMA_CHUNK,
+    };
+    let routing = Routing::uniform(&mcfg, 7);
+    let spec = MoeDispatch { cfg: mcfg.clone(), routing: &routing, schedule: MoeSchedule::Overlapped };
+    pin(
+        "moe::build_cluster",
+        &moe::build_cluster(&mcfg, &cluster, &routing, MoeSchedule::Overlapped, None),
+        &spec.build(&ctx, None),
+    );
+    pin(
+        "moe::build_cluster_health",
+        &moe::build_cluster_health(&mcfg, &cluster, &routing, MoeSchedule::Overlapped, &degraded, None),
+        &spec.build(&ctx_deg, None),
+    );
+    let spec = MoeLayer { cfg: mcfg.clone(), routing: &routing, schedule: MoeSchedule::Overlapped };
+    pin(
+        "moe::build_cluster_layer",
+        &moe::build_cluster_layer(&mcfg, &cluster, &routing, MoeSchedule::Overlapped, None),
+        &spec.build(&ctx, None),
+    );
+    pin(
+        "moe::build_cluster_layer_health",
+        &moe::build_cluster_layer_health(
+            &mcfg,
+            &cluster,
+            &routing,
+            MoeSchedule::Overlapped,
+            &degraded,
+            None,
+        ),
+        &spec.build(&ctx_deg, None),
+    );
+
+    // ---- ulysses: cfg-knob chunk and ctx-override chunk
+    let ucfg = UlyssesCfg {
+        node: cluster.node.clone(),
+        b: 2,
+        h: 4,
+        s: 8,
+        d: 4,
+        flash_util: 0.75,
+        rdma_chunk: pk::pk::rail::RDMA_CHUNK_AUTO,
+    };
+    pin(
+        "ulysses::build_cluster",
+        &ulysses::build_cluster(&ucfg, &cluster),
+        &Ulysses { cfg: ucfg.clone() }.build(&ctx, None),
+    );
+    pin(
+        "ulysses::build_cluster_opts(chunk)",
+        &ulysses::build_cluster_opts(&ucfg, &cluster, 4096.0),
+        &Ulysses { cfg: ucfg.clone() }.build(&ctx.with_rdma_chunk(4096.0), None),
+    );
+
+    // ---- ring attention: cluster wrapper vs spec
+    let rcfg = ClusterRingAttnCfg {
+        cluster: cluster.clone(),
+        b: 2,
+        h: 2,
+        s: 32,
+        d: 8,
+        opts: LcscOpts {
+            num_comm_sms: 4,
+            workers_per_device: 2,
+            comm_workers_per_device: 1,
+            pipeline_stages: 2,
+        },
+        flash_util: 0.75,
+        rdma_chunk: pk::pk::rail::RDMA_CHUNK_AUTO,
+    };
+    pin(
+        "ring_attention::build_cluster",
+        &ring_attention::build_cluster(&rcfg, None),
+        &RingAttn { cfg: rcfg.clone() }.build(&ctx, None),
+    );
+}

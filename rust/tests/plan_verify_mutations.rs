@@ -140,3 +140,56 @@ fn scope_downgrade_trips_the_scope_lint() {
         report.render()
     );
 }
+
+/// Drop one inter-stage activation credit from a 1F1B model plan (the
+/// buggy-composer failure where a pipeline boundary transfer forgets its
+/// completion signal): the consumer stage's gated wait counts `width·sp`
+/// deliveries per edge and must now be reported unsatisfiable.
+#[test]
+fn dropped_pipeline_credit_trips_the_deadlock_check() {
+    use pk::model::{pipeline, ModelCfg, ParallelSpec};
+    use pk::pk::rail::RailHealth;
+
+    let cluster = ClusterSpec::test_cluster(2, 2);
+    let health = RailHealth::all_healthy(&cluster);
+    let m = ModelCfg {
+        hidden: 128,
+        ffn: 256,
+        seq: 256,
+        n_heads: 2,
+        n_layers: 2,
+        microbatches: 2,
+        moe: None,
+        flash_util: 0.75,
+    };
+    let spec = ParallelSpec::dense(2, 2);
+    let mut plan =
+        pipeline::build_model(&m, &spec, &cluster, &health, pipeline::PipeSchedule::OneFOneB);
+    let ctx = VerifyCtx { pool: None, devices_per_node: Some(cluster.devices_per_node()) };
+    assert_eq!(
+        verify(&plan, &ctx).num_errors(),
+        0,
+        "1F1B fixture must start clean:\n{}",
+        verify(&plan, &ctx).render()
+    );
+
+    let mut dropped = false;
+    'outer: for w in &mut plan.workers {
+        for op in &mut w.ops {
+            if let Op::Transfer { done_sem, label, .. } = op {
+                if *label == "pipe_act" && done_sem.is_some() {
+                    *done_sem = None;
+                    dropped = true;
+                    break 'outer;
+                }
+            }
+        }
+    }
+    assert!(dropped, "1F1B plan must carry pipe_act boundary credits");
+    let report = verify(&plan, &ctx);
+    assert!(
+        has_error(&report, Rule::Deadlock),
+        "dropping an inter-stage credit must be an unsatisfiable gated wait:\n{}",
+        report.render()
+    );
+}

@@ -11,7 +11,7 @@ regression that stops sweeping (or sweeps nothing) cannot pass silently:
 * degenerate entries: a plan with zero ops, zero workers, or negative
   counters means the builder under that name produced nothing;
 * a sweep that shrank below the expected minimum number of zoo entries
-  (``--min-kernels``, default 29 — keep in sync with the registry test
+  (``--min-kernels``, default 33 — keep in sync with the registry test
   in ``rust/src/report/lint.rs``).
 
 Usage: ``python3 tools/check_lint.py [--min-kernels N] LINT_zoo.json``
@@ -25,7 +25,7 @@ import json
 import sys
 
 SCHEMA = "pk-lint-v1"
-DEFAULT_MIN_KERNELS = 29
+DEFAULT_MIN_KERNELS = 33
 
 COUNTER_KEYS = ["workers", "ops", "sems", "sync_edges", "accesses", "pairs_checked"]
 
